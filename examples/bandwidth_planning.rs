@@ -1,0 +1,60 @@
+//! Bandwidth planning with the Table 6 simulator: given a model size
+//! and step time, print the cross-datacenter bandwidth needed to hit
+//! each compute-utilization target for Data-Parallel vs DiLoCo at
+//! various sync cadences — the calculation an infra team would run
+//! before committing to multi-datacenter training.
+//!
+//!     cargo run --release --example bandwidth_planning [params_b] [step_s]
+
+use diloco::netsim::utilization::{
+    LlmArchetype, SimAlgo, SimModel, CADENCES, CU_TARGETS,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let params_b: f64 = args
+        .first()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(70.0); // default: a 70B model
+    let step_s: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(5.0);
+
+    let arch = LlmArchetype {
+        name: "custom",
+        params: params_b * 1e9,
+        step_time_s: step_s,
+    };
+    let sim = SimModel::default();
+
+    println!(
+        "== bandwidth (Gbit/s) to reach compute utilization — {params_b}B params, {step_s}s/step =="
+    );
+    print!("{:<18}", "method");
+    for cu in CU_TARGETS {
+        print!("{:>10}", format!("CU={:.0}%", cu * 100.0));
+    }
+    println!();
+    let mut methods = vec![("Data-Parallel".to_string(), SimAlgo::DataParallel)];
+    for h in CADENCES {
+        methods.push((format!("DiLoCo, H={h}"), SimAlgo::DiLoCo { sync_every: h }));
+    }
+    for (label, algo) in methods {
+        print!("{label:<18}");
+        for cu in CU_TARGETS {
+            match sim.required_bandwidth_gbps(&arch, algo, cu) {
+                Some(w) => print!("{w:>10}"),
+                None => print!("{:>10}", "1000+"),
+            }
+        }
+        println!();
+    }
+    let dp = sim
+        .required_bandwidth_gbps(&arch, SimAlgo::DataParallel, 0.5)
+        .unwrap_or(f64::NAN);
+    let h300 = sim
+        .required_bandwidth_gbps(&arch, SimAlgo::DiLoCo { sync_every: 300 }, 0.5)
+        .unwrap_or(f64::NAN);
+    println!(
+        "\nDiLoCo H=300 needs {:.0}x less cross-DC bandwidth than Data-Parallel at CU=50%.",
+        dp / h300
+    );
+}

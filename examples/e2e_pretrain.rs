@@ -1,0 +1,106 @@
+//! End-to-end validation driver (DESIGN.md section 9, deliverable b):
+//! pretrains a mini-ladder transformer from scratch at full Chinchilla
+//! budget with BOTH Data-Parallel and DiLoCo(M=2, H=30), logging the
+//! loss curves, final held-out loss, zero-shot accuracy, and the
+//! idealized wall-clock each setup would take across the paper's three
+//! network archetypes. This is the run recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example e2e_pretrain [model] [budget_tokens]
+
+use diloco::config::RepoConfig;
+use diloco::coordinator::{run, Algo, RunConfig};
+use diloco::netsim::walltime::{walltime, WalltimeAlgo, WalltimeInput};
+use diloco::netsim::ARCHETYPES;
+use diloco::runtime::{ModelRuntime, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    diloco::util::init_logging();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().cloned().unwrap_or_else(|| "m1".to_string());
+    let budget: Option<usize> = args.get(1).map(|s| s.parse()).transpose()?;
+
+    let repo = RepoConfig::load_default()?;
+    let rt = Runtime::cpu()?;
+    let mr = ModelRuntime::load(rt, &repo.model_dir(&model))?;
+    println!(
+        "== e2e pretrain: {} ({} params, {} token budget) ==\n",
+        model,
+        mr.manifest.model.param_count,
+        budget.unwrap_or(mr.manifest.model.token_budget)
+    );
+
+    let mut results = Vec::new();
+    for (algo, eta) in [
+        (Algo::DataParallel, 0.0),
+        (Algo::DiLoCo { replicas: 2 }, 1.0),
+    ] {
+        let cfg = RunConfig {
+            model: model.clone(),
+            algo,
+            sync_every: 30,
+            global_batch_seqs: 16,
+            inner_lr: 6e-3,
+            outer_lr: eta,
+            token_budget: budget,
+            eval_tokens: 16 * 1024,
+            eval_every: Some(200),
+            log_every: 100,
+            downstream: true,
+            ..Default::default()
+        };
+        let m = run(&mr, &repo.optimizer, &cfg)?;
+        println!("\n-- {} --", m.algo);
+        println!("loss curve (step, train loss): {:?}", m.loss_curve);
+        println!("eval curve (step, eval loss):  {:?}", m.eval_curve);
+        println!("final eval loss: {:.4}", m.final_eval_loss);
+        for (task, acc) in &m.downstream {
+            println!("zero-shot {task}: {acc:.3}");
+        }
+        println!("measured wall: {:.1}s ({} steps)", m.wall_secs, m.steps);
+        results.push(m);
+    }
+
+    println!("\n== idealized wall-clock (Appendix A model, paper-scale analog) ==");
+    println!("{:<10} {:<12} {:>14} {:>14}", "network", "algo", "comm", "total");
+    for net in ARCHETYPES {
+        for m in &results {
+            let algo = if m.algo == "dp" {
+                WalltimeAlgo::DataParallel
+            } else {
+                WalltimeAlgo::DiLoCo {
+                    replicas: m.replicas,
+                    sync_every: m.sync_every,
+                }
+            };
+            let w = walltime(&WalltimeInput {
+                algo,
+                params: m.param_count as f64,
+                tokens: m.tokens as f64,
+                batch_tokens: m.global_batch_tokens as f64,
+                cross_dc: net,
+            });
+            println!(
+                "{:<10} {:<12} {:>12.3}s {:>12.3}s",
+                net.name,
+                m.algo,
+                w.comm_s,
+                w.total_s()
+            );
+        }
+    }
+
+    let dp = &results[0];
+    let dl = &results[1];
+    println!("\n== summary ==");
+    println!(
+        "DP   : eval {:.4}  |  DiLoCo M=2: eval {:.4}  (diff {:+.2}%)",
+        dp.final_eval_loss,
+        dl.final_eval_loss,
+        (dl.final_eval_loss - dp.final_eval_loss) / dp.final_eval_loss * 100.0
+    );
+    anyhow::ensure!(
+        dp.final_eval_loss < 5.9 && dl.final_eval_loss < 5.9,
+        "training did not make progress"
+    );
+    Ok(())
+}

@@ -1,0 +1,29 @@
+use diloco::config::RepoConfig;
+use diloco::coordinator::{run, Algo, RunConfig};
+use diloco::runtime::{ModelRuntime, Runtime};
+fn main() -> anyhow::Result<()> {
+    let repo = RepoConfig::load_default()?;
+    let rt = Runtime::cpu()?;
+    for model in ["m0", "m2"] {
+        let mr = ModelRuntime::load(rt.clone(), &repo.model_dir(model))?;
+        for force in [false, true] {
+            // warm run compiles all artifacts; second run is steady state
+            let mut cfg = RunConfig {
+                model: model.into(), algo: Algo::DataParallel, global_batch_seqs: 8,
+                token_budget: Some(16_384), eval_tokens: 1024, log_every: 100_000,
+                inner_lr: 1e-2, force_accumulate: force, ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            run(&mr, &repo.optimizer, &cfg)?;
+            let cold = t0.elapsed().as_secs_f64();
+            cfg.token_budget = Some(65_536);
+            cfg.seed = 2;
+            let t1 = std::time::Instant::now();
+            let m = run(&mr, &repo.optimizer, &cfg)?;
+            let dt = t1.elapsed().as_secs_f64();
+            println!("{model} accum={force}: cold32={cold:.2}s, steady {:.1} ms/step ({:.0} tok/s)",
+                dt*1e3/m.steps as f64, m.tokens as f64/dt);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,23 @@
+use diloco::config::RepoConfig;
+use diloco::coordinator::{run, Algo, RunConfig};
+use diloco::runtime::{ModelRuntime, Runtime};
+fn main() -> anyhow::Result<()> {
+    let repo = RepoConfig::load_default()?;
+    let rt = Runtime::cpu()?;
+    for model in ["m0", "m2"] {
+        let mr = ModelRuntime::load(rt.clone(), &repo.model_dir(model))?;
+        for force in [false, true] {
+            let cfg = RunConfig {
+                model: model.into(), algo: Algo::DataParallel, global_batch_seqs: 8,
+                token_budget: Some(65_536), eval_tokens: 1024, log_every: 100_000,
+                inner_lr: 1e-2, force_accumulate: force, ..Default::default()
+            };
+            let t0 = std::time::Instant::now();
+            let m = run(&mr, &repo.optimizer, &cfg)?;
+            let dt = t0.elapsed().as_secs_f64();
+            println!("{model} force_accumulate={force}: {:.2}s for {} steps = {:.1} ms/step (tok/s {:.0}), loss {:.3}",
+                dt, m.steps, dt*1e3/m.steps as f64, m.tokens as f64/dt, m.final_eval_loss);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: load the AOT artifacts, train the smallest model with
+//! DiLoCo (M=2, H=10) for a tiny budget, print the loss trajectory.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use diloco::config::RepoConfig;
+use diloco::coordinator::{run, Algo, RunConfig};
+use diloco::runtime::{ModelRuntime, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    diloco::util::init_logging();
+    let repo = RepoConfig::load_default()?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mr = ModelRuntime::load(rt, &repo.model_dir("m0"))?;
+    println!(
+        "model m0: {} params, Chinchilla budget {} tokens",
+        mr.manifest.model.param_count, mr.manifest.model.token_budget
+    );
+
+    let cfg = RunConfig {
+        model: "m0".into(),
+        algo: Algo::DiLoCo { replicas: 2 },
+        sync_every: 10,
+        global_batch_seqs: 16,
+        inner_lr: 8.5e-3,
+        outer_lr: 0.8,
+        token_budget: Some(120_000),
+        eval_tokens: 8192,
+        eval_every: Some(30),
+        log_every: 30,
+        downstream: true,
+        ..Default::default()
+    };
+    let m = run(&mr, &repo.optimizer, &cfg)?;
+
+    println!("\n== quickstart result ==");
+    println!("algo            : {} (H={})", m.algo, m.sync_every);
+    println!("steps           : {} ({} tokens)", m.steps, m.tokens);
+    println!("outer syncs     : {}", m.outer_syncs);
+    println!("final eval loss : {:.4}", m.final_eval_loss);
+    println!("eval curve      : {:?}", m.eval_curve);
+    for (task, acc) in &m.downstream {
+        println!("zero-shot {task:<12}: {acc:.3}");
+    }
+    println!("wall time       : {:.1}s", m.wall_secs);
+    Ok(())
+}

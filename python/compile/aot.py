@@ -1,0 +1,219 @@
+"""AOT pipeline: lower L2 entry points to HLO *text* artifacts.
+
+Python runs ONCE, here. For every model in the mini ladder this emits
+`artifacts/<model>/{init,grad_step_mb*,apply_update,train_step,grad_acc,
+eval_step,seq_nll}.hlo.txt` plus a `manifest.json` that pins the flat
+parameter order, every artifact's input/output signature, and a content
+hash for incremental rebuilds. The Rust runtime consumes only these
+files; Python is never on the request path.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Tuple[int, ...], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(entries: Sequence[Tuple[str, Tuple[int, ...], str]]) -> List[dict]:
+    return [{"name": n, "shape": list(s), "dtype": d} for n, s, d in entries]
+
+
+def _param_sig(cfg, prefix="") -> List[Tuple[str, Tuple[int, ...], str]]:
+    return [(prefix + n, s, "f32") for n, s in configs.param_specs(cfg)]
+
+
+def artifact_defs(cfg: configs.ModelConfig, micro_batches: Sequence[int],
+                  eval_batch: int) -> Dict[str, dict]:
+    """Name -> {fn, arg specs, input/output signature} for one model."""
+    p_specs = [_spec(s) for _, s in configs.param_specs(cfg)]
+    n = len(p_specs)
+    s64 = cfg.seq_len
+    f32 = lambda: _spec((), jnp.float32)
+    defs: Dict[str, dict] = {}
+
+    defs["init"] = dict(
+        fn=lambda seed: model.init_params(cfg, seed),
+        args=[_spec((), jnp.uint32)],
+        inputs=_sig([("seed", (), "u32")]),
+        outputs=_sig(_param_sig(cfg)),
+    )
+
+    for mb in micro_batches:
+        defs[f"grad_step_mb{mb}"] = dict(
+            fn=lambda *a, _mb=mb: model.grad_step(cfg, a[:n], a[n]),
+            args=p_specs + [_spec((mb, s64), jnp.int32)],
+            inputs=_sig(_param_sig(cfg) + [("tokens", (mb, s64), "i32")]),
+            outputs=_sig(_param_sig(cfg, "grad.") +
+                         [("loss", (), "f32"), ("sum_nll", (), "f32")]),
+        )
+
+    defs["apply_update"] = dict(
+        fn=lambda *a: model.apply_update(
+            cfg, a[:n], a[n:2 * n], a[2 * n:3 * n], a[3 * n:4 * n],
+            a[4 * n], a[4 * n + 1], a[4 * n + 2]),
+        args=p_specs * 4 + [f32(), f32(), f32()],
+        inputs=_sig(_param_sig(cfg) + _param_sig(cfg, "m.") +
+                    _param_sig(cfg, "v.") + _param_sig(cfg, "grad.") +
+                    [("step", (), "f32"), ("lr", (), "f32"), ("wd", (), "f32")]),
+        outputs=_sig(_param_sig(cfg) + _param_sig(cfg, "m.") +
+                     _param_sig(cfg, "v.") + [("gnorm", (), "f32")]),
+    )
+
+    mb0 = micro_batches[-1]
+    defs["train_step"] = dict(
+        fn=lambda *a: model.train_step(
+            cfg, a[:n], a[n:2 * n], a[2 * n:3 * n], a[3 * n],
+            a[3 * n + 1], a[3 * n + 2], a[3 * n + 3]),
+        args=p_specs * 3 + [_spec((mb0, s64), jnp.int32), f32(), f32(), f32()],
+        inputs=_sig(_param_sig(cfg) + _param_sig(cfg, "m.") +
+                    _param_sig(cfg, "v.") +
+                    [("tokens", (mb0, s64), "i32"), ("step", (), "f32"),
+                     ("lr", (), "f32"), ("wd", (), "f32")]),
+        outputs=_sig(_param_sig(cfg) + _param_sig(cfg, "m.") +
+                     _param_sig(cfg, "v.") +
+                     [("loss", (), "f32"), ("gnorm", (), "f32")]),
+    )
+
+    defs["grad_acc"] = dict(
+        fn=lambda *a: model.grad_acc(cfg, a[:n], a[n:2 * n], a[2 * n], a[2 * n + 1]),
+        args=p_specs * 2 + [f32(), f32()],
+        inputs=_sig(_param_sig(cfg, "a.") + _param_sig(cfg, "b.") +
+                    [("wa", (), "f32"), ("wb", (), "f32")]),
+        outputs=_sig(_param_sig(cfg, "grad.")),
+    )
+
+    defs["eval_step"] = dict(
+        fn=lambda *a: model.eval_step(cfg, a[:n], a[n]),
+        args=p_specs + [_spec((eval_batch, s64), jnp.int32)],
+        inputs=_sig(_param_sig(cfg) + [("tokens", (eval_batch, s64), "i32")]),
+        outputs=_sig([("sum_nll", (), "f32"), ("count", (), "f32")]),
+    )
+
+    defs["seq_nll"] = dict(
+        fn=lambda *a: model.seq_nll(cfg, a[:n], a[n], a[n + 1]),
+        args=p_specs + [_spec((1, s64), jnp.int32), _spec((1, s64), jnp.float32)],
+        inputs=_sig(_param_sig(cfg) +
+                    [("tokens", (1, s64), "i32"), ("mask", (1, s64), "f32")]),
+        outputs=_sig([("sum_nll", (), "f32")]),
+    )
+    return defs
+
+
+def _source_hash() -> str:
+    """Hash of all compile-path sources + config — incremental rebuild key."""
+    h = hashlib.sha256()
+    here = os.path.dirname(os.path.abspath(__file__))
+    files = [configs.CONFIG_PATH]
+    for root, _, names in os.walk(here):
+        for name in sorted(names):
+            if name.endswith(".py"):
+                files.append(os.path.join(root, name))
+    for path in sorted(files):
+        with open(path, "rb") as f:
+            h.update(path.encode())
+            h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def build_model(cfg: configs.ModelConfig, out_dir: str, raw: dict,
+                src_hash: str, force: bool = False) -> bool:
+    """Lower all artifacts for one model. Returns True if work was done."""
+    model_dir = os.path.join(out_dir, cfg.name)
+    manifest_path = os.path.join(model_dir, "manifest.json")
+    if not force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                if json.load(f).get("source_hash") == src_hash:
+                    print(f"[aot] {cfg.name}: up to date")
+                    return False
+        except (json.JSONDecodeError, OSError):
+            pass
+    os.makedirs(model_dir, exist_ok=True)
+    defs = artifact_defs(cfg, raw["micro_batches"], raw["eval_batch"])
+    manifest = {
+        "model": {
+            "name": cfg.name, "layers": cfg.layers, "d_model": cfg.d_model,
+            "heads": cfg.heads, "head_dim": cfg.head_dim, "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab, "seq_len": cfg.seq_len,
+            "param_count": configs.param_count(cfg),
+            "token_budget": configs.token_budget(cfg),
+        },
+        "params": _sig(_param_sig(cfg)),
+        "micro_batches": list(raw["micro_batches"]),
+        "eval_batch": raw["eval_batch"],
+        "optimizer": raw["optimizer"],
+        "artifacts": {},
+        "source_hash": src_hash,
+    }
+    for name, d in defs.items():
+        t0 = time.time()
+        lowered = jax.jit(d["fn"]).lower(*d["args"])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(model_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname, "inputs": d["inputs"], "outputs": d["outputs"],
+        }
+        print(f"[aot] {cfg.name}/{name}: {len(text)} chars "
+              f"({time.time() - t0:.1f}s)")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.normpath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")))
+    ap.add_argument("--models", default="",
+                    help="comma-separated subset (default: whole mini ladder)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    raw = configs.load_raw()
+    ladder = configs.mini_ladder()
+    if args.models:
+        want = set(args.models.split(","))
+        ladder = [m for m in ladder if m.name in want]
+        missing = want - {m.name for m in ladder}
+        if missing:
+            sys.exit(f"unknown models: {sorted(missing)}")
+    src_hash = _source_hash()
+    t0 = time.time()
+    did = 0
+    for cfg in ladder:
+        did += build_model(cfg, args.out, raw, src_hash, force=args.force)
+    print(f"[aot] done: {did}/{len(ladder)} models rebuilt "
+          f"in {time.time() - t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Shared model-ladder configuration (python side).
+
+`configs/models.json` is the single source of truth for the model ladder;
+this module turns it into typed configs and the *canonical parameter
+flatten order* that both the JAX lowering (aot.py) and the Rust runtime
+(via each artifact's manifest.json) agree on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List, Tuple
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+CONFIG_PATH = os.path.normpath(os.path.join(_HERE, "..", "..", "configs", "models.json"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one rung of the ladder (decoder-only transformer)."""
+
+    name: str
+    layers: int
+    d_model: int
+    heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+    z_loss: float
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.heads * self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    beta1: float
+    beta2: float
+    eps: float
+    grad_clip: float
+
+
+def load_raw(path: str = CONFIG_PATH) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def mini_ladder(path: str = CONFIG_PATH) -> List[ModelConfig]:
+    raw = load_raw(path)
+    out = []
+    for m in raw["mini_ladder"]:
+        out.append(
+            ModelConfig(
+                name=m["name"],
+                layers=m["layers"],
+                d_model=m["d_model"],
+                heads=m["heads"],
+                head_dim=raw["head_dim"],
+                d_ff=m["d_model"] * raw["mlp_ratio"],
+                vocab=raw["tokenizer"]["vocab_size"],
+                seq_len=raw["seq_len"],
+                z_loss=raw["z_loss"],
+            )
+        )
+    return out
+
+
+def model_by_name(name: str, path: str = CONFIG_PATH) -> ModelConfig:
+    for m in mini_ladder(path):
+        if m.name == name:
+            return m
+    raise KeyError(f"unknown model {name!r}")
+
+
+def optimizer_config(path: str = CONFIG_PATH) -> OptimizerConfig:
+    inner = load_raw(path)["optimizer"]["inner"]
+    return OptimizerConfig(
+        beta1=inner["beta1"], beta2=inner["beta2"], eps=inner["eps"],
+        grad_clip=inner["grad_clip"],
+    )
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical, ordered list of (name, shape) parameter leaves.
+
+    This order *is* the wire format between python and rust: every
+    artifact's flattened parameter inputs/outputs follow it exactly.
+    """
+    d, f, dh = cfg.d_model, cfg.d_ff, cfg.head_dim
+    specs: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab, d))]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1", (d,)),
+            (p + "wq", (d, cfg.heads * dh)),
+            (p + "wk", (d, cfg.heads * dh)),
+            (p + "wv", (d, cfg.heads * dh)),
+            (p + "wo", (cfg.heads * dh, d)),
+            (p + "q_norm", (dh,)),
+            (p + "k_norm", (dh,)),
+            (p + "ln2", (d,)),
+            (p + "w1", (d, f)),
+            (p + "w2", (f, d)),
+        ]
+    specs.append(("final_ln", (d,)))
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total trainable parameters (embedding included; tied output head)."""
+    import math
+
+    return sum(math.prod(s) for _, s in param_specs(cfg))
+
+
+def token_budget(cfg: ModelConfig, multiplier: float | None = None,
+                 path: str = CONFIG_PATH) -> int:
+    """Chinchilla-style budget D = 20 * N (paper section 3.1)."""
+    if multiplier is None:
+        multiplier = load_raw(path)["token_multiplier"]
+    return int(param_count(cfg) * multiplier)

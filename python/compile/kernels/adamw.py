@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused AdamW update over a flat parameter buffer.
+
+The L2 `apply_update` concatenates every parameter leaf into a single
+flat f32 vector (the "fused buffer" layout real fused optimizers use),
+and this kernel sweeps it in `block` chunks: p/m/v/g tiles stream
+through VMEM, the five scalars (lr, wd, bias corrections, clip scale)
+ride along as a broadcast block. interpret=True on this CPU image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adamw_kernel(s_ref, p_ref, m_ref, v_ref, g_ref,
+                  po_ref, mo_ref, vo_ref, *, beta1: float, beta2: float,
+                  eps: float):
+    lr, wd, bc1, bc2, gscale = (s_ref[i] for i in range(5))
+    g = g_ref[...] * gscale
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    update = (m * bc1) / (jnp.sqrt(v * bc2) + eps)
+    po_ref[...] = p_ref[...] - lr * (update + wd * p_ref[...])
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+def fused_adamw(p: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray,
+                g: jnp.ndarray, scalars: jnp.ndarray, *,
+                beta1: float = 0.9, beta2: float = 0.99, eps: float = 1e-8,
+                block: int = 4096, interpret: bool = True):
+    """Fused AdamW over flat [n] buffers.
+
+    Args:
+      p, m, v, g: flat f32 [n] (n need not be a multiple of `block`;
+        the tail is padded internally and stripped on return).
+      scalars: f32 [5] = (lr, wd, bias_corr1, bias_corr2, grad_scale).
+    Returns:
+      (p', m', v') flat f32 [n].
+    """
+    n = p.shape[0]
+    block = min(block, max(n, 1))
+    padded = (n + block - 1) // block * block
+    pad = padded - n
+    if pad:
+        # v is padded with ones so sqrt stays well-conditioned in the tail.
+        p, m, g = (jnp.pad(a, (0, pad)) for a in (p, m, g))
+        v = jnp.pad(v, (0, pad), constant_values=1.0)
+    kernel = functools.partial(_adamw_kernel, beta1=beta1, beta2=beta2, eps=eps)
+    grid = (padded // block,)
+    shape = jax.ShapeDtypeStruct((padded,), jnp.float32)
+    tile = pl.BlockSpec((block,), lambda i: (i,))
+    p2, m2, v2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((5,), lambda i: (0,)), tile, tile, tile, tile],
+        out_specs=(tile, tile, tile),
+        out_shape=(shape, shape, shape),
+        interpret=interpret,
+    )(scalars, p, m, v, g)
+    if pad:
+        p2, m2, v2 = p2[:n], m2[:n], v2[:n]
+    return p2, m2, v2

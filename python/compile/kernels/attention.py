@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: blockwise causal flash attention.
+
+The paper's compute hot-spot is the transformer forward/backward; its
+dominant non-matmul cost is attention. This kernel implements the
+flash-attention schedule in Pallas: the grid tiles (batch*heads, query
+blocks); each grid cell holds a `block_q` slab of queries in VMEM and
+streams KV in `block_k` chunks with an online-softmax accumulator.
+
+TPU adaptation notes (DESIGN.md section 8): the BlockSpec below is the
+HBM<->VMEM schedule a real TPU run would use (q slab resident, KV
+streamed, fp32 accumulators, q@k^T contraction MXU-shaped). On this
+CPU-only image the kernel MUST run with interpret=True — real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+                 seq_len: int, scale: float):
+    """One grid cell: queries [block_q, dh] vs all causal KV blocks."""
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale  # [bq, dh]
+    bq, dh = q.shape
+
+    row_ids = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k), slice(None)))
+        s = jax.lax.dot_general(
+            q, k_blk.astype(jnp.float32),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+        )  # [bq, bk]
+        col_ids = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+        s = jnp.where(row_ids >= col_ids, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc_new = acc_prev * alpha[:, None] + p @ v_blk.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    # Causality: KV blocks strictly after this query slab contribute nothing.
+    n_blocks = (qi + 1) * block_q // block_k
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _causal_attention_fwd_only(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                               *, block_q: int = 16, block_k: int = 16,
+                               interpret: bool = True) -> jnp.ndarray:
+    """Causal flash attention over [batch_heads, seq, head_dim] tensors.
+
+    block_q must divide seq and be a multiple of block_k (the causal
+    frontier is computed in whole KV blocks).
+    """
+    bh, s, dh = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k or block_q % block_k:
+        raise ValueError(
+            f"seq={s} must be divisible by block_q={block_q} and block_k={block_k}, "
+            f"and block_q must be a multiple of block_k")
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, seq_len=s,
+        scale=1.0 / (dh ** 0.5))
+    grid = (bh, s // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper. pallas_call has no JVP rule, so the training
+# path uses a custom VJP: the Pallas kernel computes the forward; the
+# backward is the (mathematically identical) reference attention's VJP.
+# This is the standard pattern for flash-style kernels whose backward
+# kernel is authored separately — here the reference VJP doubles as that
+# backward until a dedicated Pallas bwd kernel lands.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def causal_attention(q, k, v, block_q: int = 16, block_k: int = 16,
+                     interpret: bool = True):
+    """Differentiable causal flash attention ([batch_heads, seq, head_dim])."""
+    return _causal_attention_fwd_only(
+        q, k, v, block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def _fwd(q, k, v, block_q, block_k, interpret):
+    out = _causal_attention_fwd_only(
+        q, k, v, block_q=block_q, block_k=block_k, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(block_q, block_k, interpret, res, g):
+    from . import ref as kernels_ref  # local import to avoid cycle
+
+    q, k, v = res
+    _, vjp = jax.vjp(kernels_ref.causal_attention_ref, q, k, v)
+    return vjp(g)
+
+
+causal_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis sweeps in python/tests/test_kernel.py), and double as the
+`use_pallas=False` execution path of the L2 model.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Naive causal softmax attention.
+
+    Args:
+      q, k, v: [batch_heads, seq, head_dim]
+    Returns:
+      [batch_heads, seq, head_dim]
+    """
+    _, s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    logits = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, :, :], logits, jnp.asarray(-1e30, q.dtype))
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", probs, v)
+
+
+def adamw_ref(p, m, v, g, *, step, lr, wd, grad_scale,
+              beta1=0.9, beta2=0.99, eps=1e-8):
+    """Reference AdamW with decoupled weight decay and gradient scaling.
+
+    `step` is 1-based. `grad_scale` is the global-norm clip multiplier
+    (min(1, clip/||g||)), applied to the gradient before the moment
+    updates — identical semantics to clipping the batch gradient
+    (paper section 3: inner gradients clipped to global l2 norm 1).
+    Returns (p', m', v').
+    """
+    g = g * grad_scale
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 / (1.0 - beta1 ** step)
+    bc2 = 1.0 / (1.0 - beta2 ** step)
+    update = (m_new * bc1) / (jnp.sqrt(v_new * bc2) + eps)
+    p_new = p - lr * (update + wd * p)
+    return p_new, m_new, v_new

@@ -1,0 +1,286 @@
+"""L2: decoder-only transformer (paper section 3) + AdamW inner optimizer.
+
+Chinchilla-style architecture with the paper's stability choices:
+QK-LayerNorm (Wortsman et al. 2023), z-loss regularization (Chowdhery et
+al. 2023), tied input/output embeddings, RoPE positions, pre-LN blocks.
+Attention runs through the L1 Pallas kernel (kernels/attention.py); the
+AdamW parameter update runs through the L1 fused kernel
+(kernels/adamw.py). Everything here exists only at build time — aot.py
+lowers these functions to HLO text once, and the Rust coordinator
+executes the artifacts.
+
+All public entry points take/return *flat tuples* of arrays in the
+canonical `configs.param_specs` order — that order is the wire format
+shared with Rust via each artifact's manifest.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import adamw as adamw_kernel
+from .kernels import attention as attention_kernel
+from .kernels import ref as kernels_ref
+
+Params = Dict[str, jnp.ndarray]
+
+ADAM_BETA1 = 0.9
+ADAM_BETA2 = 0.99
+ADAM_EPS = 1e-8
+GRAD_CLIP = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Parameter plumbing: flat tuple <-> dict in canonical spec order.
+# ---------------------------------------------------------------------------
+
+def unflatten(cfg: configs.ModelConfig, flat: Sequence[jnp.ndarray]) -> Params:
+    specs = configs.param_specs(cfg)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    out = {}
+    for (name, shape), arr in zip(specs, flat):
+        assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+        out[name] = arr
+    return out
+
+
+def flatten(cfg: configs.ModelConfig, params: Params) -> Tuple[jnp.ndarray, ...]:
+    return tuple(params[name] for name, _ in configs.param_specs(cfg))
+
+
+def init_params(cfg: configs.ModelConfig, seed: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """Deterministic init from a u32 seed; lowered as the `init` artifact.
+
+    Truncated-normal fan-in scaling for projection matrices, N(0,1) for
+    the (tied) embedding table, ones for all norm scales.
+    """
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    specs = configs.param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    out: List[jnp.ndarray] = []
+    for k, (name, shape) in zip(keys, specs):
+        base = name.rsplit(".", 1)[-1]
+        if base in ("ln1", "ln2", "final_ln", "q_norm", "k_norm"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif base == "embed":
+            # 1/sqrt(d) rows; the input path rescales by sqrt(d) so both
+            # the input activations and the tied-head logits start at O(1)
+            # (init CE ~ ln(vocab), the NanoDO recipe).
+            std = shape[1] ** -0.5
+            out.append(std * jax.random.normal(k, shape, jnp.float32))
+        else:
+            # Clipped (not truncated) normal: jax's truncated_normal
+            # lowers through `erf`, an opcode the image's XLA 0.5.1 HLO
+            # parser rejects; clipping at 3 sigma is an equivalent
+            # stability guard for init purposes.
+            fan_in = shape[0]
+            std = fan_in ** -0.5
+            sample = jnp.clip(jax.random.normal(k, shape, jnp.float32), -3.0, 3.0)
+            out.append(std * sample)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    x = x - x.mean(axis=-1, keepdims=True)
+    rms = jnp.sqrt((x * x).mean(axis=-1, keepdims=True) + 1e-6)
+    return (x / rms) * scale
+
+
+def _rope(x: jnp.ndarray) -> jnp.ndarray:
+    """Rotary position embedding over [batch, seq, heads, head_dim]."""
+    _, s, _, dh = x.shape
+    half = dh // 2
+    freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(cfg: configs.ModelConfig, params: Params, tokens: jnp.ndarray,
+            *, use_pallas: bool = True) -> jnp.ndarray:
+    """Logits [batch, seq, vocab] for int32 tokens [batch, seq]."""
+    b, s = tokens.shape
+    h, dh = cfg.heads, cfg.head_dim
+    x = params["embed"][tokens] * (cfg.d_model ** 0.5)  # [b, s, d]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        y = _layer_norm(x, params[p + "ln1"])
+        q = (y @ params[p + "wq"]).reshape(b, s, h, dh)
+        k = (y @ params[p + "wk"]).reshape(b, s, h, dh)
+        v = (y @ params[p + "wv"]).reshape(b, s, h, dh)
+        # QK-LayerNorm (over head_dim) then RoPE, per the paper's recipe.
+        q = _rope(_layer_norm(q, params[p + "q_norm"]))
+        k = _rope(_layer_norm(k, params[p + "k_norm"]))
+        # Fold batch*heads for the kernel: [b*h, s, dh].
+        qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        if use_pallas:
+            of = attention_kernel.causal_attention(qf, kf, vf)
+        else:
+            of = kernels_ref.causal_attention_ref(qf, kf, vf)
+        o = of.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+        x = x + o @ params[p + "wo"]
+        y = _layer_norm(x, params[p + "ln2"])
+        x = x + jax.nn.gelu(y @ params[p + "w1"]) @ params[p + "w2"]
+    x = _layer_norm(x, params["final_ln"])
+    return x @ params["embed"].T  # tied output head
+
+
+def loss_from_logits(cfg: configs.ModelConfig, logits: jnp.ndarray,
+                     tokens: jnp.ndarray):
+    """Mean next-token CE + z-loss; also returns (sum_nll, num_targets)."""
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1, :].astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    target_logit = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1).squeeze(-1)
+    nll = lse - target_logit
+    sum_nll = nll.sum()
+    n = nll.size
+    ce = sum_nll / n
+    z_loss = cfg.z_loss * (lse * lse).mean()
+    return ce + z_loss, (sum_nll, jnp.asarray(n, jnp.float32))
+
+
+def loss_fn(cfg: configs.ModelConfig, params: Params, tokens: jnp.ndarray,
+            *, use_pallas: bool = True):
+    logits = forward(cfg, params, tokens, use_pallas=use_pallas)
+    return loss_from_logits(cfg, logits, tokens)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (flat signatures).
+# ---------------------------------------------------------------------------
+
+def grad_step(cfg: configs.ModelConfig, flat_params: Sequence[jnp.ndarray],
+              tokens: jnp.ndarray, *, use_pallas: bool = True):
+    """Micro-batch fwd+bwd: returns (grads..., mean_loss, sum_nll)."""
+    params = unflatten(cfg, flat_params)
+
+    def f(p):
+        return loss_fn(cfg, p, tokens, use_pallas=use_pallas)
+
+    (loss, (sum_nll, _)), grads = jax.value_and_grad(f, has_aux=True)(params)
+    return tuple(flatten(cfg, grads)) + (loss, sum_nll)
+
+
+def _global_norm(flat: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in flat))
+
+
+def _leaf_sizes(cfg: configs.ModelConfig) -> List[int]:
+    out = []
+    for _, shape in configs.param_specs(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        out.append(n)
+    return out
+
+
+def apply_update(cfg: configs.ModelConfig,
+                 flat_params: Sequence[jnp.ndarray],
+                 flat_m: Sequence[jnp.ndarray],
+                 flat_v: Sequence[jnp.ndarray],
+                 flat_grads: Sequence[jnp.ndarray],
+                 step: jnp.ndarray, lr: jnp.ndarray, wd: jnp.ndarray,
+                 *, use_pallas: bool = True):
+    """Clip-to-GRAD_CLIP + fused AdamW. Returns (params'..., m'..., v'..., gnorm).
+
+    `step` is the 1-based f32 step counter (for bias correction); `lr`
+    and `wd` are per-step scalars computed by the Rust schedule — keeping
+    them as runtime inputs means one artifact serves every schedule,
+    batch size, and weight-decay policy (the paper's lambda = 1/T depends
+    on the run's total step count T).
+    """
+    gnorm = _global_norm(flat_grads)
+    gscale = jnp.minimum(1.0, GRAD_CLIP / jnp.maximum(gnorm, 1e-12))
+    bc1 = 1.0 / (1.0 - ADAM_BETA1 ** step)
+    bc2 = 1.0 / (1.0 - ADAM_BETA2 ** step)
+    sizes = _leaf_sizes(cfg)
+    p_flat = jnp.concatenate([a.reshape(-1) for a in flat_params])
+    m_flat = jnp.concatenate([a.reshape(-1) for a in flat_m])
+    v_flat = jnp.concatenate([a.reshape(-1) for a in flat_v])
+    g_flat = jnp.concatenate([a.reshape(-1) for a in flat_grads])
+    scalars = jnp.stack([lr, wd, bc1, bc2, gscale]).astype(jnp.float32)
+    if use_pallas:
+        p2, m2, v2 = adamw_kernel.fused_adamw(
+            p_flat, m_flat, v_flat, g_flat, scalars,
+            beta1=ADAM_BETA1, beta2=ADAM_BETA2, eps=ADAM_EPS)
+    else:
+        p2, m2, v2 = kernels_ref.adamw_ref(
+            p_flat, m_flat, v_flat, g_flat * scalars[4], step=step, lr=lr,
+            wd=wd, grad_scale=1.0, beta1=ADAM_BETA1, beta2=ADAM_BETA2,
+            eps=ADAM_EPS)
+    out_p, out_m, out_v = [], [], []
+    off = 0
+    for (_, shape), n in zip(configs.param_specs(cfg), sizes):
+        out_p.append(p2[off:off + n].reshape(shape))
+        out_m.append(m2[off:off + n].reshape(shape))
+        out_v.append(v2[off:off + n].reshape(shape))
+        off += n
+    return tuple(out_p) + tuple(out_m) + tuple(out_v) + (gnorm,)
+
+
+def train_step(cfg: configs.ModelConfig,
+               flat_params: Sequence[jnp.ndarray],
+               flat_m: Sequence[jnp.ndarray],
+               flat_v: Sequence[jnp.ndarray],
+               tokens: jnp.ndarray,
+               step: jnp.ndarray, lr: jnp.ndarray, wd: jnp.ndarray,
+               *, use_pallas: bool = True):
+    """Fused grad+apply fast path (one PJRT dispatch per inner step).
+
+    Returns (params'..., m'..., v'..., loss, gnorm).
+    """
+    n = len(flat_params)
+    out = grad_step(cfg, flat_params, tokens, use_pallas=use_pallas)
+    grads, loss = out[:n], out[n]
+    upd = apply_update(cfg, flat_params, flat_m, flat_v, grads, step, lr, wd,
+                       use_pallas=use_pallas)
+    return upd[:3 * n] + (loss, upd[3 * n])
+
+
+def grad_acc(cfg: configs.ModelConfig, a: Sequence[jnp.ndarray],
+             b: Sequence[jnp.ndarray], wa: jnp.ndarray, wb: jnp.ndarray):
+    """Weighted device-side accumulation: a*wa + b*wb per leaf."""
+    del cfg
+    return tuple(x * wa + y * wb for x, y in zip(a, b))
+
+
+def eval_step(cfg: configs.ModelConfig, flat_params: Sequence[jnp.ndarray],
+              tokens: jnp.ndarray, *, use_pallas: bool = True):
+    """Exact held-out metrics: (sum_nll, num_targets) — no z-loss."""
+    params = unflatten(cfg, flat_params)
+    _, (sum_nll, n) = loss_fn(cfg, params, tokens, use_pallas=use_pallas)
+    return sum_nll, n
+
+
+def seq_nll(cfg: configs.ModelConfig, flat_params: Sequence[jnp.ndarray],
+            tokens: jnp.ndarray, mask: jnp.ndarray, *, use_pallas: bool = True):
+    """Masked sequence NLL for zero-shot multiple-choice scoring.
+
+    tokens: [1, seq]; mask: f32 [1, seq], 1.0 on *target* positions
+    (mask[t]=1 means "score the prediction of tokens[t] from t-1").
+    Returns the summed NLL over masked positions.
+    """
+    params = unflatten(cfg, flat_params)
+    logits = forward(cfg, params, tokens, use_pallas=use_pallas).astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1, :]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    target_logit = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1).squeeze(-1)
+    nll = lse - target_logit
+    return (nll * mask[:, 1:]).sum()

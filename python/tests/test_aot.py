@@ -1,0 +1,89 @@
+"""AOT pipeline checks: manifests consistent, HLO text loadable-shaped."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, configs
+
+ART = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "artifacts"))
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(os.path.join(ART, "m0")),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+def _manifest(name):
+    with open(os.path.join(ART, name, "manifest.json")) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_all_models_present(self):
+        for m in configs.mini_ladder():
+            assert os.path.isfile(os.path.join(ART, m.name, "manifest.json"))
+
+    def test_param_signature_matches_specs(self):
+        man = _manifest("m0")
+        cfg = configs.model_by_name("m0")
+        specs = configs.param_specs(cfg)
+        assert len(man["params"]) == len(specs)
+        for entry, (name, shape) in zip(man["params"], specs):
+            assert entry["name"] == name
+            assert tuple(entry["shape"]) == tuple(shape)
+            assert entry["dtype"] == "f32"
+
+    def test_artifact_files_exist_and_are_hlo(self):
+        man = _manifest("m0")
+        expected = {"init", "apply_update", "train_step", "grad_acc",
+                    "eval_step", "seq_nll"}
+        expected |= {f"grad_step_mb{b}" for b in man["micro_batches"]}
+        assert set(man["artifacts"]) == expected
+        for art in man["artifacts"].values():
+            path = os.path.join(ART, "m0", art["file"])
+            assert os.path.isfile(path)
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+
+    def test_train_step_io_arity(self):
+        man = _manifest("m0")
+        n = len(man["params"])
+        ts = man["artifacts"]["train_step"]
+        assert len(ts["inputs"]) == 3 * n + 4   # p,m,v, tokens, step, lr, wd
+        assert len(ts["outputs"]) == 3 * n + 2  # p,m,v, loss, gnorm
+
+    def test_param_count_recorded(self):
+        for m in configs.mini_ladder():
+            man = _manifest(m.name)
+            assert man["model"]["param_count"] == configs.param_count(m)
+            assert man["model"]["token_budget"] == configs.token_budget(m)
+
+    def test_source_hash_current(self):
+        # Manifests must correspond to the *current* compile sources;
+        # otherwise `make artifacts` should have rebuilt them.
+        h = aot._source_hash()
+        for m in configs.mini_ladder():
+            assert _manifest(m.name)["source_hash"] == h, (
+                f"{m.name} artifacts stale; run `make artifacts`")
+
+
+class TestSignatures:
+    def test_artifact_defs_cover_micro_batches(self):
+        raw = configs.load_raw()
+        cfg = configs.model_by_name("m0")
+        defs = aot.artifact_defs(cfg, raw["micro_batches"], raw["eval_batch"])
+        for mb in raw["micro_batches"]:
+            d = defs[f"grad_step_mb{mb}"]
+            assert d["inputs"][-1]["shape"] == [mb, cfg.seq_len]
+
+    def test_grad_acc_symmetric_signature(self):
+        raw = configs.load_raw()
+        cfg = configs.model_by_name("m0")
+        defs = aot.artifact_defs(cfg, raw["micro_batches"], raw["eval_batch"])
+        d = defs["grad_acc"]
+        n = len(configs.param_specs(cfg))
+        assert len(d["inputs"]) == 2 * n + 2
+        assert len(d["outputs"]) == n

@@ -1,0 +1,113 @@
+//! Hot-path benchmarks (deliverable e): the PJRT execution path the
+//! coordinator drives every inner step, measured at each layer so the
+//! perf pass in EXPERIMENTS.md §Perf has precise before/after numbers.
+//!
+//! Run: cargo bench (harness=false; criterion unavailable offline).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use diloco::config::RepoConfig;
+use diloco::coordinator::{outer_gradient, OuterOpt};
+use diloco::data::synthetic::{CorpusSpec, TokenStream};
+use diloco::runtime::{f32_scalar, i32_literal, u32_scalar, HostTensor, ModelRuntime, Runtime};
+use diloco::util::bench::Bencher;
+
+fn main() -> anyhow::Result<()> {
+    let repo = RepoConfig::load(Path::new(env!("CARGO_MANIFEST_DIR")))?;
+    if !repo.model_dir("m0").join("manifest.json").is_file() {
+        println!("bench_hot_path: artifacts missing; run `make artifacts`");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let mut b = Bencher::new(4.0);
+
+    for model in ["m0", "m2"] {
+        let mr = ModelRuntime::load(Rc::clone(&rt), &repo.model_dir(model))?;
+        let n = mr.n_leaves();
+        let seq = mr.manifest.model.seq_len;
+        let init = mr.artifact("init")?;
+        let ts = mr.artifact("train_step")?;
+        let gs = mr.artifact("grad_step_mb8")?;
+        let ev = mr.artifact("eval_step")?;
+
+        let params = init.call(&[&u32_scalar(0)])?;
+        let zeros: Vec<xla::Literal> = mr
+            .manifest
+            .params
+            .iter()
+            .map(|s| HostTensor::zeros(&s.shape).to_literal().unwrap())
+            .collect();
+        let zeros2: Vec<xla::Literal> = mr
+            .manifest
+            .params
+            .iter()
+            .map(|s| HostTensor::zeros(&s.shape).to_literal().unwrap())
+            .collect();
+        let state: Vec<xla::Literal> =
+            params.into_iter().chain(zeros).chain(zeros2).collect();
+
+        let mut stream = TokenStream::new(CorpusSpec::default(), 0, 0);
+        let toks8 = i32_literal(&[8, seq], &stream.next_batch(8, seq))?;
+        let tokse = i32_literal(
+            &[mr.manifest.eval_batch, seq],
+            &stream.next_batch(mr.manifest.eval_batch, seq),
+        )?;
+        let (step_l, lr, wd) = (f32_scalar(5.0), f32_scalar(4e-3), f32_scalar(1e-4));
+
+        b.run(&format!("{model}/train_step fused (mb=8, full roundtrip)"), || {
+            let mut args: Vec<&xla::Literal> = state.iter().collect();
+            args.push(&toks8);
+            args.push(&step_l);
+            args.push(&lr);
+            args.push(&wd);
+            ts.call(&args).unwrap()
+        });
+
+        b.run(&format!("{model}/grad_step mb=8 (fwd+bwd only)"), || {
+            let mut args: Vec<&xla::Literal> = state[..n].iter().collect();
+            args.push(&toks8);
+            gs.call(&args).unwrap()
+        });
+
+        b.run(&format!("{model}/eval_step (batch {})", mr.manifest.eval_batch), || {
+            let mut args: Vec<&xla::Literal> = state[..n].iter().collect();
+            args.push(&tokse);
+            ev.call(&args).unwrap()
+        });
+
+        // the H-cadence host path: literal -> host tensors -> outer step -> literals
+        let host: Vec<HostTensor> = state[..n]
+            .iter()
+            .map(|l| HostTensor::from_literal(l).unwrap())
+            .collect();
+        b.run(&format!("{model}/outer sync: pull params to host"), || {
+            state[..n]
+                .iter()
+                .map(|l| HostTensor::from_literal(l).unwrap())
+                .collect::<Vec<_>>()
+        });
+        let replicas = vec![host.clone(), host.clone()];
+        let mut opt = OuterOpt::new(0.8, 0.9);
+        b.run(&format!("{model}/outer sync: delta + Nesterov (M=2)"), || {
+            let mut g = host.clone();
+            let delta = outer_gradient(&g, &replicas);
+            opt.step(&mut g, &delta);
+            g
+        });
+        b.run(&format!("{model}/outer sync: push params to device"), || {
+            host.iter()
+                .map(|t| t.to_literal().unwrap())
+                .collect::<Vec<_>>()
+        });
+    }
+
+    // data pipeline throughput
+    let mut stream = TokenStream::new(CorpusSpec::default(), 0, 0);
+    b.run("data/synthetic batch 16x64 tokens", || {
+        stream.next_batch(16, 64)
+    });
+
+    b.report("hot path (L3 coordinator over PJRT)");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Substrate micro-benchmarks: JSON, RNG, data generator, fitting
+//! machinery, netsim. These guard against regressions in the pieces
+//! the coordinator and report paths lean on.
+
+use diloco::netsim::utilization::{SimAlgo, SimModel, CHINCHILLA_10B};
+use diloco::netsim::walltime::{walltime, WalltimeAlgo, WalltimeInput};
+use diloco::netsim::MEDIUM;
+use diloco::scaling::parametric::{fit_parametric, Obs, ParametricForm};
+use diloco::scaling::{JointFit, PowerLaw};
+use diloco::util::bench::Bencher;
+use diloco::util::json::Json;
+use diloco::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new(2.0);
+
+    // JSON
+    let value = Json::obj(vec![
+        ("curve", Json::arr((0..500).map(|i| {
+            Json::arr([Json::num(i as f64), Json::num(6.0 - i as f64 * 1e-3)])
+        }))),
+        ("meta", Json::obj(vec![("algo", Json::str("diloco-m2"))])),
+    ]);
+    let text = value.to_string_compact();
+    b.run("json/serialize 500-point record", || value.to_string_compact());
+    b.run("json/parse 500-point record", || Json::parse(&text).unwrap());
+
+    // RNG
+    let mut rng = Rng::new(1);
+    b.run("rng/1e6 next_u64", || {
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc ^= rng.next_u64();
+        }
+        acc
+    });
+
+    // scaling fits
+    let n: Vec<f64> = (0..8).map(|i| 1e4 * 4f64.powi(i)).collect();
+    let y: Vec<f64> = n.iter().map(|&x| 18.0 * x.powf(-0.095)).collect();
+    b.run("scaling/power-law fit (8 points)", || {
+        PowerLaw::fit(&n, &y).unwrap()
+    });
+    let mut jn = Vec::new();
+    let mut jm = Vec::new();
+    let mut jy = Vec::new();
+    for &ni in &n {
+        for m in [1.0f64, 2.0, 4.0, 8.0] {
+            jn.push(ni);
+            jm.push(m);
+            jy.push(19.2 * ni.powf(-0.0985) * m.powf(0.0116));
+        }
+    }
+    b.run("scaling/joint fit (32 points)", || {
+        JointFit::fit(&jn, &jm, &jy).unwrap()
+    });
+    let obs: Vec<Obs> = jn
+        .iter()
+        .zip(&jm)
+        .zip(&jy)
+        .map(|((&n, &m), &loss)| Obs { n, m, loss })
+        .collect();
+    let (train, holdout) = obs.split_at(24);
+    b.run("scaling/parametric fit (16 restarts)", || {
+        fit_parametric(ParametricForm::PowerLawPlusC, train, holdout, 1, 16).unwrap()
+    });
+
+    // netsim
+    b.run("netsim/walltime eval", || {
+        walltime(&WalltimeInput {
+            algo: WalltimeAlgo::DiLoCo { replicas: 4, sync_every: 30 },
+            params: 1e9,
+            tokens: 2e10,
+            batch_tokens: 2f64.powi(20),
+            cross_dc: MEDIUM,
+        })
+    });
+    let sim = SimModel::default();
+    b.run("netsim/table6 block (6 algos x 5 targets)", || {
+        sim.table6_block(&CHINCHILLA_10B)
+    });
+    b.run("netsim/required bandwidth (single cell)", || {
+        sim.required_bandwidth_gbps(&CHINCHILLA_10B, SimAlgo::DiLoCo { sync_every: 50 }, 0.9)
+    });
+
+    b.report("substrates");
+}

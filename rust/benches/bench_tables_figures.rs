@@ -1,0 +1,39 @@
+//! One bench per paper table/figure (deliverable d): times each
+//! generator AND prints a digest of the rows it produces, so `cargo
+//! bench | tee bench_output.txt` doubles as the reproduction record.
+//! Generators read whatever the sweep store currently holds; analytic
+//! ones (Table 6, Figure 10) are store-independent.
+
+use std::path::Path;
+
+use diloco::config::RepoConfig;
+use diloco::report::{experiment_ids, generate};
+use diloco::sweep::SweepStore;
+use diloco::util::bench::Bencher;
+
+fn main() -> anyhow::Result<()> {
+    let repo = RepoConfig::load(Path::new(env!("CARGO_MANIFEST_DIR")))?;
+    let store = SweepStore::open(&repo.root.join("runs/sweep.jsonl"))?;
+    println!(
+        "sweep store: {} completed runs (tables/figures reflect current data)\n",
+        store.len()
+    );
+    let mut b = Bencher::new(2.0);
+    for id in experiment_ids() {
+        // parametric fitting (table13) is the only heavy generator;
+        // keep restarts low in the bench loop.
+        let restarts = 16;
+        match generate(id, &store, &repo, restarts) {
+            Ok(text) => {
+                b.run(&format!("generate {id}"), || {
+                    generate(id, &store, &repo, restarts).unwrap().len()
+                });
+                let digest: Vec<&str> = text.lines().take(6).collect();
+                println!("--- {id} ---\n{}\n...\n", digest.join("\n"));
+            }
+            Err(e) => println!("--- {id} --- SKIPPED: {e}\n"),
+        }
+    }
+    b.report("table/figure regeneration");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Tiny argument parser: `<command> [--key value|--flag]...`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Split argv into (subcommand, parsed flags). argv excludes argv[0].
+    pub fn parse(argv: &[String]) -> Result<(String, Args)> {
+        if argv.is_empty() {
+            return Ok(("help".into(), Args::default()));
+        }
+        let cmd = argv[0].clone();
+        let mut args = Args::default();
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.values.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    args.values.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                bail!("short flags not supported: {tok}");
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok((cmd, args))
+    }
+
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.values.get(key).cloned()
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.values.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_kv() {
+        let (cmd, a) = Args::parse(&sv(&["train", "--model", "m2", "--lr=3e-3"])).unwrap();
+        assert_eq!(cmd, "train");
+        assert_eq!(a.get("model").unwrap(), "m2");
+        assert_eq!(a.get("lr").unwrap(), "3e-3");
+    }
+
+    #[test]
+    fn bare_flags_and_positionals() {
+        let (_, a) =
+            Args::parse(&sv(&["simulate", "utilization", "--downstream", "--out", "x"])).unwrap();
+        assert_eq!(a.positional, vec!["utilization"]);
+        assert!(a.flag("downstream"));
+        assert_eq!(a.get_or("out", "y"), "x");
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let (cmd, _) = Args::parse(&[]).unwrap();
+        assert_eq!(cmd, "help");
+    }
+
+    #[test]
+    fn rejects_short_flags() {
+        assert!(Args::parse(&sv(&["x", "-q"])).is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--delta -3" would be ambiguous; "--delta=-3" works.
+        let (_, a) = Args::parse(&sv(&["x", "--delta=-3"])).unwrap();
+        assert_eq!(a.get("delta").unwrap(), "-3");
+    }
+}

@@ -1,0 +1,193 @@
+//! Command-line interface (clap is unavailable offline): a small
+//! subcommand + `--flag value` parser and the `diloco` entrypoints.
+
+pub mod args;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RepoConfig;
+use crate::coordinator::{run, Algo, RunConfig};
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::sweep::{execute_grid, grid_by_name, grid_names, run_id, SweepStore};
+
+use args::Args;
+
+pub const USAGE: &str = "\
+diloco — Scaling Laws for DiLoCo (reproduction)
+
+USAGE:
+  diloco train   [--model m0] [--algo dp|diloco-mK] [--h 30] [--batch 16]
+                 [--lr 6e-3] [--eta 0.8] [--budget TOKENS] [--overtrain X]
+                 [--seed N] [--eval-every K] [--downstream] [--fragments P]
+  diloco predict --n PARAMS [--m REPLICAS] [--store runs/sweep.jsonl]
+  diloco sweep   --grid NAME [--store runs/sweep.jsonl] [--max-runs N]
+  diloco grids                      # list available sweep grids
+  diloco report  [--exp all|table4|...] [--store runs/sweep.jsonl]
+                 [--out reports/]
+  diloco simulate utilization|walltime [--out reports/]
+
+Artifacts must exist (make artifacts) for train/sweep.";
+
+pub fn dispatch(argv: &[String]) -> Result<()> {
+    let (cmd, args) = Args::parse(argv)?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "grids" => {
+            for g in grid_names() {
+                let n = if g == "all" {
+                    grid_by_name(g)?.len()
+                } else {
+                    grid_by_name(g).map(|v| v.len()).unwrap_or(0)
+                };
+                println!("{g:<12} {n} runs");
+            }
+            Ok(())
+        }
+        "report" => crate::report::cmd_report(&args),
+        "simulate" => crate::report::cmd_simulate(&args),
+        "predict" => cmd_predict(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn run_config_from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig {
+        model: args.get_or("model", "m0"),
+        ..Default::default()
+    };
+    if let Some(a) = args.get("algo") {
+        cfg.algo = Algo::parse(&a)?;
+    }
+    if let Some(h) = args.get("h") {
+        cfg.sync_every = h.parse().context("--h")?;
+    }
+    if let Some(b) = args.get("batch") {
+        cfg.global_batch_seqs = b.parse().context("--batch")?;
+    }
+    if let Some(lr) = args.get("lr") {
+        cfg.inner_lr = lr.parse().context("--lr")?;
+    }
+    if let Some(eta) = args.get("eta") {
+        cfg.outer_lr = eta.parse().context("--eta")?;
+    }
+    if let Some(b) = args.get("budget") {
+        cfg.token_budget = Some(b.parse().context("--budget")?);
+    }
+    if let Some(ot) = args.get("overtrain") {
+        cfg.overtrain = ot.parse().context("--overtrain")?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse().context("--seed")?;
+    }
+    if let Some(k) = args.get("eval-every") {
+        cfg.eval_every = Some(k.parse().context("--eval-every")?);
+    }
+    if let Some(p) = args.get("fragments") {
+        cfg.streaming_fragments = p.parse().context("--fragments")?;
+    }
+    cfg.downstream = args.flag("downstream");
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let repo = RepoConfig::load_default()?;
+    let cfg = run_config_from_args(args)?;
+    let rt = Runtime::cpu()?;
+    let mr = ModelRuntime::load(rt, &repo.model_dir(&cfg.model))?;
+    let metrics = run(&mr, &repo.optimizer, &cfg)?;
+    println!("{}", metrics.to_json().to_string_pretty());
+    Ok(())
+}
+
+/// The paper's practical payoff (section 6.4): predict loss and optimal
+/// hyperparameters for a model size you have NOT trained, from the
+/// scaling laws fit to the sweep store — exactly how the paper set the
+/// 4B/10B hyperparameters without tuning.
+fn cmd_predict(args: &Args) -> Result<()> {
+    use crate::report::tables::{fit_our_loss_laws, fit_paper_loss_laws};
+    let repo = RepoConfig::load_default()?;
+    let n: f64 = args
+        .get("n")
+        .context("--n PARAMS required")?
+        .parse()
+        .context("--n")?;
+    let m: f64 = args.get_or("m", "1").parse().context("--m")?;
+    let store = SweepStore::open(&repo.root.join(args.get_or("store", "runs/sweep.jsonl")))?;
+
+    println!("== predictions for N={n:.3e}, M={m} ==\n");
+    println!("from OUR mini-ladder fits (runs/sweep.jsonl, {} runs):", store.len());
+    let algo = if m <= 1.0 { "diloco-m1".to_string() } else { format!("diloco-m{}", m as usize) };
+    for (a, fit) in fit_our_loss_laws(&store) {
+        if a == "dp" || a == algo {
+            match fit {
+                Some(f) => println!("  {a:<10} predicted eval loss {:.4}  (L ~ {:.3} * N^{:.4})", f.predict(n), f.a, f.alpha),
+                None => println!("  {a:<10} (not enough ladder data yet)"),
+            }
+        }
+    }
+    // joint fit over DiLoCo observations
+    let obs = crate::report::tables::our_joint_obs(&store);
+    if obs.len() >= 4 {
+        let ns: Vec<f64> = obs.iter().map(|o| o.n).collect();
+        let ms: Vec<f64> = obs.iter().map(|o| o.m).collect();
+        let ys: Vec<f64> = obs.iter().map(|o| o.loss).collect();
+        if let Ok(j) = crate::scaling::JointFit::fit(&ns, &ms, &ys) {
+            println!("  joint      predicted eval loss {:.4}  (L ~ {:.3} * N^{:.4} * M^{:.4})",
+                j.predict(n, m.max(1.0)), j.a, j.alpha, j.beta);
+        }
+    }
+    println!("\nfrom the PAPER's fitted laws (Tables 7-10, C4 scale):");
+    for (a, fit) in fit_paper_loss_laws() {
+        if a == "dp" || a == algo {
+            println!("  {a:<10} predicted eval loss {:.4}", fit.predict(n));
+        }
+    }
+    for (label, pa, palpha) in crate::report::paperdata::TABLE8 {
+        if label == algo || label == "dp" {
+            println!("  {label:<10} optimal inner LR ~ {:.3e}", pa * n.powf(palpha));
+        }
+    }
+    for (label, pa, palpha) in crate::report::paperdata::TABLE9 {
+        if label == algo || label == "dp" {
+            println!("  {label:<10} optimal global batch ~ {:.3e} tokens", pa * n.powf(palpha));
+        }
+    }
+    let (_, a, al, be) = crate::report::paperdata::TABLE10[1];
+    println!("  joint      optimal inner LR ~ {:.3e} (A*N^a*M^b)", a * n.powf(al) * m.max(1.0).powf(be));
+    let (_, a, al, be) = crate::report::paperdata::TABLE10[2];
+    println!("  joint      optimal global batch ~ {:.3e} tokens", a * n.powf(al) * m.max(1.0).powf(be));
+    println!("\n(outer LR: constant in N — use the best eta for this M; paper Fig 7)");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let repo = RepoConfig::load_default()?;
+    let grid_name = args
+        .get("grid")
+        .context("--grid required (see `diloco grids`)")?;
+    let grid = grid_by_name(&grid_name)?;
+    let store_path = repo
+        .root
+        .join(args.get_or("store", "runs/sweep.jsonl"));
+    let mut store = SweepStore::open(&store_path)?;
+    let max_runs = args
+        .get("max-runs")
+        .map(|v| v.parse::<usize>())
+        .transpose()
+        .context("--max-runs")?;
+    if args.flag("dry-run") {
+        for cfg in &grid {
+            let done = if store.contains(&run_id(cfg)) { "done" } else { "todo" };
+            println!("{done}  {}", run_id(cfg));
+        }
+        return Ok(());
+    }
+    let n = execute_grid(&repo, &mut store, &grid, max_runs)?;
+    println!("completed {n} runs; store now has {}", store.len());
+    Ok(())
+}

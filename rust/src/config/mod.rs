@@ -1,0 +1,161 @@
+//! Typed configuration layer over `configs/models.json` (the single
+//! source of truth shared with the python AOT pipeline).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Paper-ladder entry (Table 3) — used only by the analytic simulators.
+#[derive(Debug, Clone)]
+pub struct PaperModel {
+    pub name: String,
+    pub layers: usize,
+    pub heads: usize,
+    pub qkv_dim: usize,
+    pub hidden_dim: usize,
+    pub params: f64,
+    pub token_budget: f64,
+}
+
+/// Optimizer policy (paper section 3: AdamW inner, Nesterov outer,
+/// warmup+cosine schedule, weight decay 1/T).
+#[derive(Debug, Clone)]
+pub struct OptimizerPolicy {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub grad_clip: f64,
+    pub outer_momentum: f64,
+    pub warmup_frac: f64,
+    pub warmup_cap: usize,
+    pub final_lr_frac: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct RepoConfig {
+    pub root: PathBuf,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub token_multiplier: f64,
+    pub mini_models: Vec<String>,
+    pub paper_ladder: Vec<PaperModel>,
+    pub optimizer: OptimizerPolicy,
+    pub eval_batch: usize,
+}
+
+/// Locate the repo root by walking up from cwd looking for configs/.
+pub fn find_root() -> Result<PathBuf> {
+    let mut dir = std::env::current_dir()?;
+    loop {
+        if dir.join("configs/models.json").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            anyhow::bail!("configs/models.json not found above cwd");
+        }
+    }
+}
+
+impl RepoConfig {
+    pub fn load_default() -> Result<RepoConfig> {
+        Self::load(&find_root()?)
+    }
+
+    pub fn load(root: &Path) -> Result<RepoConfig> {
+        let j = Json::parse_file(&root.join("configs/models.json"))?;
+        let tok = j.req("tokenizer")?;
+        let opt = j.req("optimizer")?;
+        let inner = opt.req("inner")?;
+        let outer = opt.req("outer")?;
+        let mini_models = j
+            .arr_of("mini_ladder")?
+            .iter()
+            .map(|m| m.str_of("name"))
+            .collect::<Result<Vec<_>>>()?;
+        let paper_ladder = j
+            .arr_of("paper_ladder")?
+            .iter()
+            .map(|m| {
+                Ok(PaperModel {
+                    name: m.str_of("name")?,
+                    layers: m.usize_of("layers")?,
+                    heads: m.usize_of("heads")?,
+                    qkv_dim: m.usize_of("qkv_dim")?,
+                    hidden_dim: m.usize_of("hidden_dim")?,
+                    params: m.f64_of("params")?,
+                    token_budget: m.f64_of("token_budget")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RepoConfig {
+            root: root.to_path_buf(),
+            vocab: tok.usize_of("vocab_size")?,
+            seq_len: j.usize_of("seq_len")?,
+            token_multiplier: j.f64_of("token_multiplier")?,
+            mini_models,
+            paper_ladder,
+            optimizer: OptimizerPolicy {
+                beta1: inner.f64_of("beta1")?,
+                beta2: inner.f64_of("beta2")?,
+                eps: inner.f64_of("eps")?,
+                grad_clip: inner.f64_of("grad_clip")?,
+                outer_momentum: outer.f64_of("momentum")?,
+                warmup_frac: opt.f64_of("warmup_frac")?,
+                warmup_cap: opt.usize_of("warmup_cap")?,
+                final_lr_frac: opt.f64_of("final_lr_frac")?,
+            },
+            eval_batch: j.usize_of("eval_batch")?,
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> PathBuf {
+        self.root.join("artifacts")
+    }
+
+    pub fn model_dir(&self, name: &str) -> PathBuf {
+        self.artifacts_dir().join(name)
+    }
+
+    pub fn paper_model(&self, name: &str) -> Option<&PaperModel> {
+        self.paper_ladder.iter().find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RepoConfig {
+        RepoConfig::load(Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap()
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let c = cfg();
+        assert_eq!(c.vocab, 512);
+        assert_eq!(c.seq_len, 64);
+        assert_eq!(c.mini_models.len(), 5);
+        assert_eq!(c.paper_ladder.len(), 9);
+        assert!((c.token_multiplier - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_ladder_chinchilla_budgets() {
+        // Paper Table 3: token budget = 20 * params for every rung.
+        for m in &cfg().paper_ladder {
+            let ratio = m.token_budget / m.params;
+            assert!((ratio - 20.0).abs() < 0.5, "{}: ratio {ratio}", m.name);
+        }
+    }
+
+    #[test]
+    fn optimizer_policy_matches_paper() {
+        let o = cfg().optimizer;
+        assert_eq!(o.beta1, 0.9);
+        assert_eq!(o.beta2, 0.99);
+        assert_eq!(o.outer_momentum, 0.9);
+        assert_eq!(o.grad_clip, 1.0);
+    }
+}

@@ -1,0 +1,589 @@
+//! The DiLoCo training coordinator — paper Algorithm 1, verbatim.
+//!
+//! M replica states (params + AdamW moments, which *persist across
+//! rounds* — the key difference from FedOpt) take H inner AdamW steps
+//! on their own data shards; every H steps the coordinator forms the
+//! outer gradient Delta = theta_global - mean_m(theta_m), applies an
+//! outer SGD-Nesterov step, and broadcasts the new global params back.
+//! Data-Parallel is the degenerate configuration (M=1, no outer step).
+//!
+//! Replica state lives as PJRT literals between steps (no host copies
+//! on the inner path); host round-trips happen only at the H-cadence
+//! sync and for scalar metrics. The "parallel for" over replicas is
+//! sequential on this single-core substrate; the parallel wall-clock
+//! is modeled by `netsim` exactly as the paper's Appendix A does.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::OptimizerPolicy;
+use crate::data::downstream::{scoring_input, McTaskSpec};
+use crate::data::synthetic::{CorpusSpec, TokenStream};
+use crate::runtime::{
+    decompose_micro, f32_scalar, i32_literal, scalar_f32, u32_scalar, HostTensor,
+    ModelRuntime,
+};
+use crate::train::schedule::{weight_decay, LrSchedule};
+use crate::util::json::Json;
+
+use super::outer_opt::{outer_gradient, OuterOpt};
+
+/// Stream-id namespace: replicas use 0..M, eval uses the high range.
+const EVAL_STREAM: u64 = 0xF000_0001;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    DataParallel,
+    DiLoCo { replicas: usize },
+}
+
+impl Algo {
+    pub fn replicas(&self) -> usize {
+        match self {
+            Algo::DataParallel => 1,
+            Algo::DiLoCo { replicas } => *replicas,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Algo::DataParallel => "dp".into(),
+            Algo::DiLoCo { replicas } => format!("diloco-m{replicas}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Algo> {
+        if s == "dp" || s == "data-parallel" {
+            return Ok(Algo::DataParallel);
+        }
+        if let Some(m) = s.strip_prefix("diloco-m").or_else(|| s.strip_prefix("m")) {
+            return Ok(Algo::DiLoCo {
+                replicas: m.parse().context("replica count")?,
+            });
+        }
+        bail!("unknown algorithm {s:?} (want dp | diloco-mK)")
+    }
+}
+
+/// Full specification of one training run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub algo: Algo,
+    /// Synchronization cadence H (ignored for Data-Parallel).
+    pub sync_every: usize,
+    /// Global batch size B in sequences (tokens = B * seq_len). Evenly
+    /// partitioned across replicas (Algorithm 1 line 4).
+    pub global_batch_seqs: usize,
+    pub inner_lr: f64,
+    pub outer_lr: f64,
+    /// Token budget override; None = Chinchilla 20N from the manifest.
+    pub token_budget: Option<usize>,
+    /// Overtraining multiplier lambda (paper section 5.2): D = 20N*lambda.
+    pub overtrain: f64,
+    pub seed: u64,
+    /// Held-out tokens for eval loss.
+    pub eval_tokens: usize,
+    /// Evaluate every k steps (None = final only).
+    pub eval_every: Option<usize>,
+    pub downstream: bool,
+    pub log_every: usize,
+    /// Perf instrumentation: disable the fused train_step fast path and
+    /// force the grad_step/grad_acc/apply_update decomposition even when
+    /// the local batch matches the fused artifact (EXPERIMENTS.md §Perf).
+    pub force_accumulate: bool,
+    /// Streaming DiLoCo (paper section 8, Appendix A): split the outer
+    /// sync into P parameter fragments, one fragment synchronized every
+    /// H/P steps (offset round-robin). 1 = vanilla DiLoCo. Requires
+    /// H % P == 0. Total communication is unchanged; peak per-sync
+    /// traffic drops by P.
+    pub streaming_fragments: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "m0".into(),
+            algo: Algo::DataParallel,
+            sync_every: 30,
+            global_batch_seqs: 16,
+            inner_lr: 6e-3,
+            outer_lr: 0.8,
+            token_budget: None,
+            overtrain: 1.0,
+            seed: 17,
+            eval_tokens: 32 * 1024,
+            eval_every: None,
+            downstream: false,
+            log_every: 200,
+            force_accumulate: false,
+            streaming_fragments: 1,
+        }
+    }
+}
+
+/// Everything measured during a run (serialized into the sweep store).
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub model: String,
+    pub algo: String,
+    pub replicas: usize,
+    pub sync_every: usize,
+    pub global_batch_tokens: usize,
+    pub inner_lr: f64,
+    pub outer_lr: f64,
+    pub overtrain: f64,
+    pub seed: u64,
+    pub param_count: usize,
+    pub steps: usize,
+    pub tokens: usize,
+    pub final_eval_loss: f64,
+    pub final_train_loss: f64,
+    pub eval_curve: Vec<(usize, f64)>,
+    pub loss_curve: Vec<(usize, f64)>,
+    pub downstream: Vec<(String, f64)>,
+    pub outer_syncs: usize,
+    pub wall_secs: f64,
+}
+
+impl RunMetrics {
+    pub fn to_json(&self) -> Json {
+        let curve = |c: &[(usize, f64)]| {
+            Json::arr(c.iter().map(|&(s, l)| {
+                Json::arr([Json::num(s as f64), Json::num(l)])
+            }))
+        };
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("algo", Json::str(&self.algo)),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("sync_every", Json::num(self.sync_every as f64)),
+            ("global_batch_tokens", Json::num(self.global_batch_tokens as f64)),
+            ("inner_lr", Json::num(self.inner_lr)),
+            ("outer_lr", Json::num(self.outer_lr)),
+            ("overtrain", Json::num(self.overtrain)),
+            ("seed", Json::num(self.seed as f64)),
+            ("param_count", Json::num(self.param_count as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("final_eval_loss", Json::num(self.final_eval_loss)),
+            ("final_train_loss", Json::num(self.final_train_loss)),
+            ("eval_curve", curve(&self.eval_curve)),
+            ("loss_curve", curve(&self.loss_curve)),
+            (
+                "downstream",
+                Json::obj(
+                    self.downstream
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+            ("outer_syncs", Json::num(self.outer_syncs as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunMetrics> {
+        let curve = |key: &str| -> Result<Vec<(usize, f64)>> {
+            j.arr_of(key)?
+                .iter()
+                .map(|p| {
+                    let a = p.as_arr().context("curve point")?;
+                    Ok((
+                        a[0].as_usize().context("step")?,
+                        a[1].as_f64().context("loss")?,
+                    ))
+                })
+                .collect()
+        };
+        let mut downstream = Vec::new();
+        if let Some(Json::Obj(map)) = j.get("downstream") {
+            for (k, v) in map {
+                downstream.push((k.clone(), v.as_f64().unwrap_or(f64::NAN)));
+            }
+        }
+        Ok(RunMetrics {
+            model: j.str_of("model")?,
+            algo: j.str_of("algo")?,
+            replicas: j.usize_of("replicas")?,
+            sync_every: j.usize_of("sync_every")?,
+            global_batch_tokens: j.usize_of("global_batch_tokens")?,
+            inner_lr: j.f64_of("inner_lr")?,
+            outer_lr: j.f64_of("outer_lr")?,
+            overtrain: j.f64_of("overtrain")?,
+            seed: j.f64_of("seed")? as u64,
+            param_count: j.usize_of("param_count")?,
+            steps: j.usize_of("steps")?,
+            tokens: j.usize_of("tokens")?,
+            final_eval_loss: j.f64_of("final_eval_loss")?,
+            final_train_loss: j.f64_of("final_train_loss")?,
+            eval_curve: curve("eval_curve")?,
+            loss_curve: curve("loss_curve")?,
+            downstream,
+            outer_syncs: j.usize_of("outer_syncs")?,
+            wall_secs: j.f64_of("wall_secs")?,
+        })
+    }
+}
+
+/// One replica: params ++ m ++ v as literals (manifest leaf order).
+struct Replica {
+    state: Vec<xla::Literal>,
+    shard: TokenStream,
+}
+
+/// Execute one training run end to end.
+pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Result<RunMetrics> {
+    let t_start = std::time::Instant::now();
+    let n = mr.n_leaves();
+    let seq = mr.manifest.model.seq_len;
+    let m_replicas = cfg.algo.replicas();
+    if m_replicas == 0 {
+        bail!("replicas must be >= 1");
+    }
+    if cfg.global_batch_seqs % m_replicas != 0 {
+        bail!(
+            "global batch ({} seqs) must divide evenly across {m_replicas} replicas",
+            cfg.global_batch_seqs
+        );
+    }
+    let local_seqs = cfg.global_batch_seqs / m_replicas;
+    let budget = cfg
+        .token_budget
+        .unwrap_or(mr.manifest.model.token_budget);
+    let budget = (budget as f64 * cfg.overtrain) as usize;
+    let tokens_per_step = cfg.global_batch_seqs * seq;
+    let total_steps = (budget + tokens_per_step - 1) / tokens_per_step;
+    if total_steps == 0 {
+        bail!("token budget {budget} smaller than one batch");
+    }
+    let sched = LrSchedule::new(
+        cfg.inner_lr,
+        total_steps,
+        policy.warmup_frac,
+        policy.warmup_cap,
+        policy.final_lr_frac,
+    );
+    let wd = weight_decay(total_steps);
+    let is_diloco = matches!(cfg.algo, Algo::DiLoCo { .. });
+    let h = if is_diloco { cfg.sync_every.max(1) } else { usize::MAX };
+    let fragments = cfg.streaming_fragments.max(1);
+    if is_diloco && fragments > 1 && h % fragments != 0 {
+        bail!("streaming_fragments ({fragments}) must divide H ({h})");
+    }
+    // streaming: one fragment syncs every H/P steps, round-robin.
+    let frag_interval = if fragments > 1 { h / fragments } else { h };
+
+    log::info!(
+        "run {} {} B={} tok/step, T={total_steps}, lr={}, H={}, wd={wd:.2e}",
+        cfg.model,
+        cfg.algo.label(),
+        tokens_per_step,
+        cfg.inner_lr,
+        if is_diloco { h } else { 0 },
+    );
+
+    // ---- artifacts ------------------------------------------------------
+    // Path choice (EXPERIMENTS.md §Perf): the fused train_step is ~9%
+    // faster per step but costs 15-48s of XLA compilation; the split
+    // grad/apply artifacts compile in <3s. Use the fused path only when
+    // its compile cost amortizes: it is already compiled in this
+    // process (sweeps re-use executables across runs) or the run is
+    // long enough (M replicas each step the executable).
+    let fused_batch = mr.manifest.train_step_batch();
+    let use_fused = local_seqs == fused_batch
+        && !cfg.force_accumulate
+        && (mr.is_compiled("train_step") || total_steps * m_replicas >= 4000);
+    let init = mr.artifact("init")?;
+    let train_step = if use_fused {
+        Some(mr.artifact("train_step")?)
+    } else {
+        None
+    };
+    let eval_step = mr.artifact("eval_step")?;
+    let micro_sizes = mr.manifest.micro_batches_desc();
+    let micro_plan = if use_fused {
+        None // fused fast path
+    } else {
+        Some(decompose_micro(local_seqs, &micro_sizes)?)
+    };
+    // Compile only what this run's plan actually dispatches — XLA CPU
+    // compilation is seconds per artifact (EXPERIMENTS.md §Perf).
+    let (apply_update, grad_acc) = if micro_plan.is_some() {
+        (Some(mr.artifact("apply_update")?), Some(mr.artifact("grad_acc")?))
+    } else {
+        (None, None)
+    };
+    let grad_steps: std::collections::BTreeMap<usize, _> = micro_plan
+        .as_deref()
+        .unwrap_or(&[])
+        .iter()
+        .copied()
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .map(|mb| Ok((mb, mr.artifact(&format!("grad_step_mb{mb}"))?)))
+        .collect::<Result<_>>()?;
+
+    // ---- state ----------------------------------------------------------
+    let params0 = init.call(&[&u32_scalar(cfg.seed as u32)])?;
+    let host_params0: Vec<HostTensor> = params0
+        .iter()
+        .map(|l| HostTensor::from_literal(l))
+        .collect::<Result<_>>()?;
+    let make_state = |params: &[HostTensor]| -> Result<Vec<xla::Literal>> {
+        let mut state = Vec::with_capacity(3 * n);
+        for p in params {
+            state.push(p.to_literal()?);
+        }
+        for p in params {
+            state.push(HostTensor::zeros(&p.shape).to_literal()?);
+        }
+        for p in params {
+            state.push(HostTensor::zeros(&p.shape).to_literal()?);
+        }
+        Ok(state)
+    };
+    let corpus = CorpusSpec {
+        vocab: mr.manifest.model.vocab,
+        ..CorpusSpec::default()
+    };
+    let mut replicas: Vec<Replica> = (0..m_replicas)
+        .map(|r| {
+            Ok(Replica {
+                state: make_state(&host_params0)?,
+                shard: TokenStream::new(corpus.clone(), cfg.seed, r as u64),
+            })
+        })
+        .collect::<Result<_>>()?;
+    let mut global = host_params0;
+    let mut outer = OuterOpt::new(cfg.outer_lr, policy.outer_momentum);
+    let mut outer_syncs = 0usize;
+
+    // ---- helpers --------------------------------------------------------
+    let eval_model = |params: &[HostTensor]| -> Result<f64> {
+        let eb = mr.manifest.eval_batch;
+        let lits: Vec<xla::Literal> = params
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<Result<_>>()?;
+        let mut stream = TokenStream::new(corpus.clone(), cfg.seed, EVAL_STREAM);
+        let n_batches = (cfg.eval_tokens / (eb * seq)).max(1);
+        let mut sum = 0.0f64;
+        let mut count = 0.0f64;
+        for _ in 0..n_batches {
+            let toks = stream.next_batch(eb, seq);
+            let t = i32_literal(&[eb, seq], &toks)?;
+            let mut args: Vec<&xla::Literal> = lits.iter().collect();
+            args.push(&t);
+            let out = eval_step.call(&args)?;
+            sum += scalar_f32(&out[0])? as f64;
+            count += scalar_f32(&out[1])? as f64;
+        }
+        Ok(sum / count)
+    };
+
+    let params_of = |rep: &Replica| -> Result<Vec<HostTensor>> {
+        rep.state[..n]
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect()
+    };
+
+    // For eval purposes: DP evaluates the current model; DiLoCo the most
+    // recent *global* model (paper section 2.2).
+    let mut loss_curve = Vec::new();
+    let mut eval_curve = Vec::new();
+    let mut last_train_loss = f64::NAN;
+
+    // ---- training loop ----------------------------------------------------
+    for t in 1..=total_steps {
+        let lr = sched.lr(t);
+        let step_lit = f32_scalar(t as f32);
+        let lr_lit = f32_scalar(lr as f32);
+        let wd_lit = f32_scalar(wd as f32);
+        let mut step_loss = 0.0f64;
+
+        for rep in replicas.iter_mut() {
+            let loss = match &micro_plan {
+                None => {
+                    // fused path: one dispatch
+                    let toks = rep.shard.next_batch(local_seqs, seq);
+                    let tok_lit = i32_literal(&[local_seqs, seq], &toks)?;
+                    let mut args: Vec<&xla::Literal> = rep.state.iter().collect();
+                    args.push(&tok_lit);
+                    args.push(&step_lit);
+                    args.push(&lr_lit);
+                    args.push(&wd_lit);
+                    let out = train_step.as_ref().expect("fused path").call(&args)?;
+                    let loss = scalar_f32(&out[3 * n])? as f64;
+                    rep.state = out.into_iter().take(3 * n).collect();
+                    loss
+                }
+                Some(plan) => {
+                    // micro-batch accumulation path
+                    let mut acc: Option<Vec<xla::Literal>> = None;
+                    let mut loss_sum = 0.0f64;
+                    for &mb in plan {
+                        let toks = rep.shard.next_batch(mb, seq);
+                        let tok_lit = i32_literal(&[mb, seq], &toks)?;
+                        let gs = &grad_steps[&mb];
+                        let mut args: Vec<&xla::Literal> =
+                            rep.state[..n].iter().collect();
+                        args.push(&tok_lit);
+                        let out = gs.call(&args)?;
+                        loss_sum +=
+                            scalar_f32(&out[n])? as f64 * mb as f64 / local_seqs as f64;
+                        let w = mb as f32 / local_seqs as f32;
+                        let g: Vec<xla::Literal> = out.into_iter().take(n).collect();
+                        acc = Some(match acc {
+                            None => {
+                                // scale the first micro grad by its weight
+                                let wa = f32_scalar(w);
+                                let wb = f32_scalar(0.0);
+                                let mut args: Vec<&xla::Literal> =
+                                    g.iter().chain(g.iter()).collect();
+                                args.push(&wa);
+                                args.push(&wb);
+                                grad_acc.as_ref().expect("accum path").call(&args)?
+                            }
+                            Some(prev) => {
+                                let wa = f32_scalar(1.0);
+                                let wb = f32_scalar(w);
+                                let mut args: Vec<&xla::Literal> =
+                                    prev.iter().chain(g.iter()).collect();
+                                args.push(&wa);
+                                args.push(&wb);
+                                grad_acc.as_ref().expect("accum path").call(&args)?
+                            }
+                        });
+                    }
+                    let grads = acc.unwrap();
+                    let mut args: Vec<&xla::Literal> =
+                        rep.state.iter().chain(grads.iter()).collect();
+                    args.push(&step_lit);
+                    args.push(&lr_lit);
+                    args.push(&wd_lit);
+                    let out = apply_update.as_ref().expect("accum path").call(&args)?;
+                    rep.state = out.into_iter().take(3 * n).collect();
+                    loss_sum
+                }
+            };
+            step_loss += loss / m_replicas as f64;
+        }
+        last_train_loss = step_loss;
+
+        // ---- outer synchronization (Algorithm 1 lines 8-12) ----------------
+        let sync_now = is_diloco && (t % frag_interval == 0 || t == total_steps);
+        if sync_now {
+            let replica_params: Vec<Vec<HostTensor>> = replicas
+                .iter()
+                .map(params_of)
+                .collect::<Result<_>>()?;
+            let delta = outer_gradient(&global, &replica_params);
+            // vanilla: all leaves; streaming: the due fragment, or a
+            // full flush on the final step so no fragment is left stale.
+            let frag: Option<usize> = if fragments > 1 && t != total_steps {
+                Some(((t / frag_interval).wrapping_sub(1)) % fragments)
+            } else {
+                None
+            };
+            outer.step_subset(&mut global, &delta, |leaf| {
+                frag.map_or(true, |f| leaf % fragments == f)
+            });
+            outer_syncs += 1;
+            // broadcast: replicas adopt the synced leaves; AdamW moments
+            // persist (the key difference from FedOpt).
+            for rep in replicas.iter_mut() {
+                for (leaf, p) in global.iter().enumerate() {
+                    if frag.map_or(true, |f| leaf % fragments == f) {
+                        rep.state[leaf] = p.to_literal()?;
+                    }
+                }
+            }
+        }
+
+        if t % cfg.log_every == 0 || t == 1 || t == total_steps {
+            loss_curve.push((t, step_loss));
+            log::info!(
+                "  step {t}/{total_steps} loss={step_loss:.4} lr={lr:.2e}"
+            );
+        }
+        if let Some(k) = cfg.eval_every {
+            if t % k == 0 && t != total_steps {
+                let params = if is_diloco {
+                    global.clone()
+                } else {
+                    params_of(&replicas[0])?
+                };
+                let e = eval_model(&params)?;
+                eval_curve.push((t, e));
+                log::info!("  step {t} eval_loss={e:.4}");
+            }
+        }
+    }
+
+    // For DP the "global" model is simply the replica's current params.
+    if !is_diloco {
+        global = params_of(&replicas[0])?;
+    }
+
+    let final_eval = eval_model(&global)?;
+    eval_curve.push((total_steps, final_eval));
+
+    // ---- downstream zero-shot scoring --------------------------------------
+    let mut downstream = Vec::new();
+    if cfg.downstream {
+        let seq_nll = mr.artifact("seq_nll")?;
+        let lits: Vec<xla::Literal> = global
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<Result<_>>()?;
+        for task in McTaskSpec::standard_suite(cfg.seed ^ 0xDD) {
+            let instances = task.generate(cfg.seed);
+            let mut correct = 0usize;
+            for inst in &instances {
+                let mut best = (f64::INFINITY, 0usize);
+                for c in 0..inst.candidates.len() {
+                    let (toks, mask) = scoring_input(inst, c, seq);
+                    let t = i32_literal(&[1, seq], &toks)?;
+                    let m = HostTensor::from_vec(&[1, seq], mask).to_literal()?;
+                    let mut args: Vec<&xla::Literal> = lits.iter().collect();
+                    args.push(&t);
+                    args.push(&m);
+                    let nll = scalar_f32(&seq_nll.call(&args)?[0])? as f64;
+                    if nll < best.0 {
+                        best = (nll, c);
+                    }
+                }
+                if best.1 == inst.answer {
+                    correct += 1;
+                }
+            }
+            let acc = correct as f64 / instances.len() as f64;
+            log::info!("  downstream {}: {acc:.3}", task.name);
+            downstream.push((task.name.clone(), acc));
+        }
+    }
+
+    Ok(RunMetrics {
+        model: cfg.model.clone(),
+        algo: cfg.algo.label(),
+        replicas: m_replicas,
+        sync_every: if is_diloco { h } else { 0 },
+        global_batch_tokens: tokens_per_step,
+        inner_lr: cfg.inner_lr,
+        outer_lr: if is_diloco { cfg.outer_lr } else { 0.0 },
+        overtrain: cfg.overtrain,
+        seed: cfg.seed,
+        param_count: mr.manifest.model.param_count,
+        steps: total_steps,
+        tokens: total_steps * tokens_per_step,
+        final_eval_loss: final_eval,
+        final_train_loss: last_train_loss,
+        eval_curve,
+        loss_curve,
+        downstream,
+        outer_syncs,
+        wall_secs: t_start.elapsed().as_secs_f64(),
+    })
+}

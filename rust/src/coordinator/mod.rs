@@ -1,0 +1,8 @@
+//! L3 coordination: the paper's system contribution. DiLoCo driver
+//! (Algorithm 1), outer SGD-Nesterov optimizer, replica management.
+
+pub mod diloco;
+pub mod outer_opt;
+
+pub use diloco::{run, Algo, RunConfig, RunMetrics};
+pub use outer_opt::{outer_gradient, OuterOpt};

@@ -1,0 +1,199 @@
+//! Outer optimizer: SGD with Nesterov momentum over outer gradients
+//! (paper Algorithm 1, line 11; Douillard et al. 2023's recommended
+//! OuterOpt). The outer gradient is the parameter-space delta
+//! Delta = theta_global - mean_m theta_m; this module applies
+//!
+//!   v   <- mu * v + Delta
+//!   theta <- theta - eta * (Delta + mu * v)
+//!
+//! (the standard "Nesterov-as-lookahead-momentum" form, matching
+//! optax/PyTorch `nesterov=True`). With eta=1, mu=0 the update reduces
+//! to theta <- mean_m theta_m, i.e. plain parameter averaging
+//! (FedAvg/Local SGD) — a property the tests pin down.
+
+use crate::runtime::HostTensor;
+
+#[derive(Debug, Clone)]
+pub struct OuterOpt {
+    pub lr: f64,
+    pub momentum: f64,
+    velocity: Option<Vec<HostTensor>>,
+}
+
+impl OuterOpt {
+    pub fn new(lr: f64, momentum: f64) -> OuterOpt {
+        OuterOpt {
+            lr,
+            momentum,
+            velocity: None,
+        }
+    }
+
+    /// Apply one outer step in place on the global params.
+    /// `outer_grad` is Delta (already averaged across replicas).
+    pub fn step(&mut self, global: &mut [HostTensor], outer_grad: &[HostTensor]) {
+        self.step_subset(global, outer_grad, |_| true)
+    }
+
+    /// Streaming DiLoCo (Douillard et al. 2025; paper section 8 /
+    /// Appendix A): apply the outer step only to the parameter leaves
+    /// selected by `in_fragment` — each fragment keeps its own slice of
+    /// the momentum state, untouched leaves are left exactly as-is.
+    pub fn step_subset(
+        &mut self,
+        global: &mut [HostTensor],
+        outer_grad: &[HostTensor],
+        in_fragment: impl Fn(usize) -> bool,
+    ) {
+        assert_eq!(global.len(), outer_grad.len());
+        let velocity = self.velocity.get_or_insert_with(|| {
+            outer_grad
+                .iter()
+                .map(|g| HostTensor::zeros(&g.shape))
+                .collect()
+        });
+        assert_eq!(velocity.len(), outer_grad.len());
+        let mu = self.momentum as f32;
+        let lr = self.lr as f32;
+        for (leaf, ((theta, g), v)) in global
+            .iter_mut()
+            .zip(outer_grad)
+            .zip(velocity.iter_mut())
+            .enumerate()
+        {
+            if !in_fragment(leaf) {
+                continue;
+            }
+            assert_eq!(theta.shape, g.shape);
+            for i in 0..theta.data.len() {
+                v.data[i] = mu * v.data[i] + g.data[i];
+                theta.data[i] -= lr * (g.data[i] + mu * v.data[i]);
+            }
+        }
+    }
+
+    pub fn velocity(&self) -> Option<&[HostTensor]> {
+        self.velocity.as_deref()
+    }
+}
+
+/// Compute the outer gradient Delta = global - mean(replicas)
+/// (Algorithm 1 lines 9-10: Delta_m = theta^(t-H) - theta_m, averaged).
+pub fn outer_gradient(global: &[HostTensor], replicas: &[Vec<HostTensor>]) -> Vec<HostTensor> {
+    assert!(!replicas.is_empty());
+    let m = replicas.len() as f32;
+    global
+        .iter()
+        .enumerate()
+        .map(|(leaf, g)| {
+            let mut out = HostTensor::zeros(&g.shape);
+            for r in replicas {
+                let rt = &r[leaf];
+                assert_eq!(rt.shape, g.shape);
+                for i in 0..out.data.len() {
+                    out.data[i] += rt.data[i];
+                }
+            }
+            for i in 0..out.data.len() {
+                out.data[i] = g.data[i] - out.data[i] / m;
+            }
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn t(data: Vec<f32>) -> HostTensor {
+        let n = data.len();
+        HostTensor::from_vec(&[n], data)
+    }
+
+    #[test]
+    fn plain_averaging_when_lr1_mu0() {
+        // eta=1, mu=0 => global becomes the replica average (FedAvg).
+        let mut global = vec![t(vec![1.0, 2.0])];
+        let replicas = vec![
+            vec![t(vec![0.0, 0.0])],
+            vec![t(vec![2.0, 6.0])],
+        ];
+        let delta = outer_gradient(&global, &replicas);
+        let mut opt = OuterOpt::new(1.0, 0.0);
+        opt.step(&mut global, &delta);
+        assert_eq!(global[0].data, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn single_replica_identity_when_lr1_mu0() {
+        // M=1, eta=1, mu=0: outer step sets global = replica params, so
+        // DiLoCo degenerates to the inner optimizer alone.
+        let mut global = vec![t(vec![5.0, -1.0, 0.5])];
+        let replica = vec![t(vec![4.0, 3.0, 0.25])];
+        let delta = outer_gradient(&global, std::slice::from_ref(&replica));
+        let mut opt = OuterOpt::new(1.0, 0.0);
+        opt.step(&mut global, &delta);
+        for (a, b) in global[0].data.iter().zip(&replica[0].data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn momentum_accumulates_nesterov_style() {
+        // Constant outer grad g with mu, lr: first step = lr*(1+mu)*g,
+        // second = lr*(1 + mu + mu^2)*g... cumulative matches closed form.
+        let g = vec![t(vec![1.0])];
+        let mut global = vec![t(vec![0.0])];
+        let mut opt = OuterOpt::new(0.5, 0.9);
+        opt.step(&mut global, &g);
+        // v=1, update=0.5*(1+0.9*1)=0.95 -> theta=-0.95
+        assert!((global[0].data[0] + 0.95).abs() < 1e-6);
+        opt.step(&mut global, &g);
+        // v=1.9, update=0.5*(1+0.9*1.9)=1.355 -> theta=-2.305
+        assert!((global[0].data[0] + 2.305).abs() < 1e-5);
+    }
+
+    #[test]
+    fn outer_gradient_zero_when_replicas_equal_global() {
+        let global = vec![t(vec![1.0, 2.0, 3.0])];
+        let replicas = vec![global.clone(), global.clone()];
+        let delta = outer_gradient(&global, &replicas);
+        assert!(delta[0].data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn prop_average_invariant() {
+        // Property: for random replicas, eta=1/mu=0 recovers the mean to
+        // float tolerance, for any M in 1..8 and leaf size in 1..64.
+        prop::check(
+            0xA11CE,
+            64,
+            |rng: &mut Rng| {
+                let m = 1 + rng.below(8) as usize;
+                let n = 1 + rng.below(64) as usize;
+                let global: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                let replicas: Vec<Vec<f32>> = (0..m)
+                    .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+                    .collect();
+                (global, replicas)
+            },
+            |(g, rs)| {
+                let mut global = vec![t(g.clone())];
+                let reps: Vec<Vec<HostTensor>> =
+                    rs.iter().map(|r| vec![t(r.clone())]).collect();
+                let delta = outer_gradient(&global, &reps);
+                OuterOpt::new(1.0, 0.0).step(&mut global, &delta);
+                let n = g.len();
+                for i in 0..n {
+                    let mean: f32 =
+                        rs.iter().map(|r| r[i]).sum::<f32>() / rs.len() as f32;
+                    prop::close(global[0].data[i] as f64, mean as f64, 1e-5)?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

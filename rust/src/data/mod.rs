@@ -1,0 +1,6 @@
+//! Data pipeline substrate: synthetic corpus (C4/Dolma substitute),
+//! per-replica sharding, and synthetic zero-shot downstream suites.
+
+pub mod downstream;
+pub mod synthetic;
+pub mod text;

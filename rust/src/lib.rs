@@ -1,0 +1,27 @@
+//! # diloco — Scaling Laws for DiLoCo (reproduction)
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of
+//! *Communication-Efficient Language Model Training Scales Reliably and
+//! Robustly: Scaling Laws for DiLoCo* (Charles et al., NeurIPS 2025).
+//!
+//! - Layer 3 (this crate): DiLoCo coordinator (Algorithm 1), sweep
+//!   harness, scaling-law fitting, analytic network simulators, report
+//!   generation.
+//! - Layer 2 (python/compile, build-time only): JAX transformer fwd/bwd
+//!   + AdamW, lowered once to HLO text artifacts.
+//! - Layer 1 (python/compile/kernels): Pallas flash-attention and fused
+//!   AdamW kernels inside the lowered HLO.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod netsim;
+pub mod report;
+pub mod scaling;
+pub mod runtime;
+pub mod sweep;
+pub mod train;
+pub mod util;

@@ -1,0 +1,10 @@
+//! `diloco` binary: the leader entrypoint. See `diloco help`.
+
+fn main() {
+    diloco::util::init_logging();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = diloco::cli::dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

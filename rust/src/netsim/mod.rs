@@ -1,0 +1,73 @@
+//! Analytic systems models from the paper:
+//! - `walltime`: the idealized end-to-end wall-clock model (Appendix A),
+//! - `utilization`: the compute-utilization/bandwidth simulator behind
+//!   Table 6 / Figure 10 (Douillard et al. 2025's simulator,
+//!   reverse-engineered and calibrated — DESIGN.md section 5).
+
+pub mod utilization;
+pub mod walltime;
+
+/// A network archetype (Appendix A.3): bandwidth in bits/s, latency in
+/// seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Network {
+    pub name: &'static str,
+    pub bandwidth_bps: f64,
+    pub latency_s: f64,
+}
+
+/// The paper's three cross-datacenter archetypes.
+pub const HIGH: Network = Network {
+    name: "high",
+    bandwidth_bps: 400e9,
+    latency_s: 1e-4,
+};
+pub const MEDIUM: Network = Network {
+    name: "medium",
+    bandwidth_bps: 100e9,
+    latency_s: 1e-3,
+};
+pub const LOW: Network = Network {
+    name: "low",
+    bandwidth_bps: 10e9,
+    latency_s: 1e-2,
+};
+
+pub const ARCHETYPES: [Network; 3] = [LOW, MEDIUM, HIGH];
+
+/// Within-datacenter network is always the high-bandwidth archetype.
+pub const WITHIN_DC: Network = HIGH;
+
+/// Bandwidth-optimal all-reduce time over R nodes (Patarasuk & Yuan):
+/// traffic per node >= 2*size*(1-1/R); plus one latency term.
+pub fn allreduce_time(size_bits: f64, r: f64, net: Network) -> f64 {
+    if r <= 1.0 {
+        return 0.0;
+    }
+    2.0 * size_bits / net.bandwidth_bps * (1.0 - 1.0 / r) + net.latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_zero_for_single_node() {
+        assert_eq!(allreduce_time(1e9, 1.0, HIGH), 0.0);
+    }
+
+    #[test]
+    fn allreduce_scales_with_size_and_bandwidth() {
+        let t_small = allreduce_time(1e9, 8.0, HIGH);
+        let t_big = allreduce_time(2e9, 8.0, HIGH);
+        assert!(t_big > t_small);
+        let t_slow = allreduce_time(1e9, 8.0, LOW);
+        assert!(t_slow > t_small);
+    }
+
+    #[test]
+    fn allreduce_approaches_2n_over_w() {
+        let t = allreduce_time(400e9, 1e9, HIGH); // huge R
+        assert!((t - (2.0 + HIGH.latency_s)).abs() < 1e-6);
+    }
+}

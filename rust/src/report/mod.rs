@@ -1,0 +1,100 @@
+//! Report generation: regenerates every table and figure of the paper
+//! (DESIGN.md section 5 experiment index) from the sweep store, the
+//! analytic simulators, and the embedded paper data.
+
+pub mod figures;
+pub mod paperdata;
+pub mod tables;
+
+use anyhow::{Context, Result};
+
+use crate::cli::args::Args;
+use crate::config::RepoConfig;
+use crate::sweep::SweepStore;
+
+/// Every experiment id and its generator.
+pub fn experiment_ids() -> Vec<&'static str> {
+    vec![
+        "table4", "table5", "table6", "table7", "table8_9", "table10", "table11",
+        "table13", "fig2", "fig_batch", "fig6_12", "fig7_8", "fig9", "fig10",
+        "fig11", "fig13",
+    ]
+}
+
+pub fn generate(
+    id: &str,
+    store: &SweepStore,
+    repo: &RepoConfig,
+    restarts: usize,
+) -> Result<String> {
+    Ok(match id {
+        "table4" => tables::table4(store),
+        "table5" => tables::table5_12(store, repo),
+        "table6" => tables::table6(),
+        "table7" => tables::table7(store),
+        "table8_9" => tables::table8_9(store),
+        "table10" => tables::table10(store),
+        "table11" => tables::table11(store),
+        "table13" => tables::table13(store, restarts),
+        "fig2" => figures::fig2(store),
+        "fig_batch" => figures::fig_batch(store),
+        "fig6_12" => figures::fig6_12(store),
+        "fig7_8" => figures::fig7_8(store),
+        "fig9" => figures::fig9(store),
+        "fig10" => figures::fig10(),
+        "fig11" => figures::fig11(store),
+        "fig13" => figures::fig13(store),
+        other => anyhow::bail!("unknown experiment {other:?}; known: {:?}", experiment_ids()),
+    })
+}
+
+pub fn cmd_report(args: &Args) -> Result<()> {
+    let repo = RepoConfig::load_default()?;
+    let store_path = repo.root.join(args.get_or("store", "runs/sweep.jsonl"));
+    let store = SweepStore::open(&store_path)?;
+    let out_dir = repo.root.join(args.get_or("out", "reports"));
+    std::fs::create_dir_all(&out_dir)?;
+    let restarts: usize = args
+        .get_or("restarts", "64")
+        .parse()
+        .context("--restarts")?;
+    let exp = args.get_or("exp", "all");
+    let ids: Vec<&str> = if exp == "all" {
+        experiment_ids()
+    } else {
+        experiment_ids()
+            .into_iter()
+            .filter(|i| *i == exp)
+            .collect()
+    };
+    if ids.is_empty() {
+        anyhow::bail!("unknown experiment {exp:?}; known: {:?}", experiment_ids());
+    }
+    for id in ids {
+        let text = generate(id, &store, &repo, restarts)?;
+        let path = out_dir.join(format!("{id}.md"));
+        std::fs::write(&path, &text)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+pub fn cmd_simulate(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("utilization");
+    match which {
+        "utilization" => print!("{}", tables::table6()),
+        "walltime" => {
+            let repo = RepoConfig::load_default()?;
+            let store = SweepStore::open(&repo.root.join(
+                args.get_or("store", "runs/sweep.jsonl"),
+            ))?;
+            print!("{}", figures::fig6_12(&store));
+        }
+        other => anyhow::bail!("unknown simulator {other:?} (utilization|walltime)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! The paper's published numbers, transcribed for two purposes:
+//! (1) [P]-mode validation — our fitting code is run ON the paper's
+//!     measurements and must recover the paper's fitted coefficients
+//!     (the strongest available check of methodological fidelity), and
+//! (2) side-by-side columns in every generated report.
+
+/// Paper ladder sizes (Table 3), aligned with the loss tables below.
+pub const PAPER_N: [f64; 7] = [35e6, 90e6, 180e6, 335e6, 550e6, 1.3e9, 2.4e9];
+
+pub const PAPER_N_NAMES: [&str; 7] = ["35M", "90M", "180M", "335M", "550M", "1.3B", "2.4B"];
+
+/// Table 4: best evaluation loss per (N, algorithm).
+/// Rows follow PAPER_N; columns: DP, DiLoCo M=1, M=2, M=4, M=8.
+pub const TABLE4: [[f64; 5]; 7] = [
+    [3.485, 3.482, 3.508, 3.554, 3.621],
+    [3.167, 3.162, 3.182, 3.213, 3.265],
+    [2.950, 2.943, 2.957, 2.981, 3.019],
+    [2.784, 2.777, 2.788, 2.808, 2.841],
+    [2.653, 2.645, 2.657, 2.673, 2.698],
+    [2.460, 2.451, 2.464, 2.472, 2.493],
+    [2.326, 2.317, 2.323, 2.332, 2.351],
+];
+
+pub const ALGO_LABELS: [&str; 5] = ["dp", "diloco-m1", "diloco-m2", "diloco-m4", "diloco-m8"];
+
+/// Table 5: 4B / 10B evaluation losses with scaling-law-predicted
+/// hyperparameters (best fit method per row, as in the paper's Table 5).
+pub const TABLE5_4B: [(&str, f64); 4] = [
+    ("dp", 2.224),
+    ("diloco-m1", 2.219),
+    ("diloco-m2", 2.220),
+    ("diloco-m4", 2.230),
+];
+pub const TABLE5_10B: [(&str, f64); 4] = [
+    ("dp", 2.090),
+    ("diloco-m1", 2.086),
+    ("diloco-m2", 2.086),
+    ("diloco-m4", 2.096),
+];
+
+/// Table 7: loss power laws L(N) ~ A*N^alpha. (algo, A, alpha).
+pub const TABLE7: [(&str, f64, f64); 5] = [
+    ("dp", 18.129, -0.0953),
+    ("diloco-m1", 18.363, -0.0961),
+    ("diloco-m2", 18.768, -0.0969),
+    ("diloco-m4", 19.762, -0.0992),
+    ("diloco-m8", 21.051, -0.1018),
+];
+
+/// Table 8: inner-learning-rate power laws gamma(N) ~ A*N^alpha.
+pub const TABLE8: [(&str, f64, f64); 5] = [
+    ("dp", 16319.2, -0.819),
+    ("diloco-m1", 74620.6, -0.945),
+    ("diloco-m2", 3978.82, -0.780),
+    ("diloco-m4", 4512.99, -0.789),
+    ("diloco-m8", 618986.0, -1.102),
+];
+
+/// Table 9: global-batch-size power laws B(N) ~ A*N^alpha (tokens).
+pub const TABLE9: [(&str, f64, f64); 5] = [
+    ("dp", 0.22592, 0.281),
+    ("diloco-m1", 0.01361, 0.435),
+    ("diloco-m2", 0.00769, 0.479),
+    ("diloco-m4", 0.00535, 0.510),
+    ("diloco-m8", 0.01859, 0.455),
+];
+
+/// Table 10: joint laws f(N,M) = A*N^alpha*M^beta for DiLoCo.
+/// (quantity, A, alpha, beta).
+pub const TABLE10: [(&str, f64, f64, f64); 3] = [
+    ("loss", 19.226, -0.0985, 0.0116),
+    ("inner_lr", 22256.0, -0.8827, 0.2929),
+    ("batch", 0.00709, 0.4695, 0.3399),
+];
+
+/// Table 6: required Gbit/s to reach CU targets {50,80,90,95,99}%.
+/// (archetype, H (0 = Data-Parallel), five cells; None = "1000.0+").
+pub const TABLE6: [(&str, usize, [Option<f64>; 5]); 18] = [
+    ("Chinchilla-10B", 0, [Some(104.8), Some(184.2), Some(222.3), Some(222.3), Some(390.7)]),
+    ("Chinchilla-10B", 1, [Some(104.8), Some(184.2), Some(222.3), Some(222.3), Some(390.7)]),
+    ("Chinchilla-10B", 10, [Some(16.0), Some(49.4), Some(86.8), Some(152.6), Some(222.3)]),
+    ("Chinchilla-10B", 50, [Some(3.0), Some(11.0), Some(23.3), Some(41.0), Some(126.5)]),
+    ("Chinchilla-10B", 100, [Some(1.4), Some(6.2), Some(13.3), Some(23.3), Some(86.8)]),
+    ("Chinchilla-10B", 300, [Some(0.5), Some(2.0), Some(4.3), Some(9.1), Some(41.0)]),
+    ("Llama3-405B", 0, [Some(126.5), Some(222.3), Some(268.3), Some(323.8), Some(323.8)]),
+    ("Llama3-405B", 1, [Some(126.5), Some(222.3), Some(268.3), Some(323.8), Some(323.8)]),
+    ("Llama3-405B", 10, [Some(19.3), Some(72.0), Some(126.5), Some(184.2), Some(268.3)]),
+    ("Llama3-405B", 50, [Some(3.6), Some(13.3), Some(28.1), Some(59.6), Some(184.2)]),
+    ("Llama3-405B", 100, [Some(2.0), Some(7.5), Some(16.0), Some(33.9), Some(126.5)]),
+    ("Llama3-405B", 300, [Some(0.7), Some(3.0), Some(6.2), Some(13.3), Some(59.6)]),
+    ("DeepSeek-V3-671B", 0, [Some(323.8), Some(569.0), Some(686.6), Some(686.6), None]),
+    ("DeepSeek-V3-671B", 1, [Some(323.8), Some(569.0), Some(686.6), Some(686.6), None]),
+    ("DeepSeek-V3-671B", 10, [Some(49.4), Some(152.6), Some(268.3), Some(390.7), Some(686.6)]),
+    ("DeepSeek-V3-671B", 50, [Some(7.5), Some(33.9), Some(72.0), Some(126.5), Some(390.7)]),
+    ("DeepSeek-V3-671B", 100, [Some(4.3), Some(16.0), Some(41.0), Some(72.0), Some(268.3)]),
+    ("DeepSeek-V3-671B", 300, [Some(1.7), Some(6.2), Some(13.3), Some(28.1), Some(126.5)]),
+];
+
+/// Column index of an algorithm label in TABLE4.
+pub fn algo_column(label: &str) -> Option<usize> {
+    ALGO_LABELS.iter().position(|&l| l == label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_losses_decrease_with_n() {
+        for col in 0..5 {
+            for row in 1..7 {
+                assert!(TABLE4[row][col] < TABLE4[row - 1][col]);
+            }
+        }
+    }
+
+    #[test]
+    fn table4_m1_beats_dp_everywhere() {
+        // Paper Finding 2: DiLoCo M=1 < DP at every scale.
+        for row in 0..7 {
+            assert!(TABLE4[row][1] < TABLE4[row][0]);
+        }
+    }
+
+    #[test]
+    fn table4_percent_gap_shrinks_with_scale() {
+        // Paper Finding 1: DiLoCo's % gap vs DP decreases in N. The raw
+        // table has sub-0.01pp upticks at 550M/1.3B (rounding in the
+        // published losses), so assert the trend with that tolerance.
+        for col in 2..5 {
+            let gaps: Vec<f64> = (0..7)
+                .map(|r| (TABLE4[r][col] - TABLE4[r][0]) / TABLE4[r][0])
+                .collect();
+            for w in gaps.windows(2) {
+                assert!(w[1] < w[0] + 2e-4, "col {col}: {gaps:?}");
+            }
+            assert!(gaps[6] < gaps[0] * 0.5, "col {col}: no overall shrink");
+        }
+    }
+
+    #[test]
+    fn table5_diloco_m2_beats_dp() {
+        let dp4 = TABLE5_4B[0].1;
+        assert!(TABLE5_4B[2].1 < dp4);
+        let dp10 = TABLE5_10B[0].1;
+        assert!(TABLE5_10B[2].1 < dp10);
+    }
+
+    #[test]
+    fn table6_row_structure() {
+        assert_eq!(TABLE6.len(), 18);
+        // DP row == DiLoCo H=1 row for each archetype.
+        for arch in ["Chinchilla-10B", "Llama3-405B", "DeepSeek-V3-671B"] {
+            let dp = TABLE6.iter().find(|r| r.0 == arch && r.1 == 0).unwrap();
+            let h1 = TABLE6.iter().find(|r| r.0 == arch && r.1 == 1).unwrap();
+            assert_eq!(dp.2, h1.2);
+        }
+        // bandwidth requirement decreases monotonically with H.
+        for arch in ["Chinchilla-10B", "Llama3-405B", "DeepSeek-V3-671B"] {
+            for cu in 0..5 {
+                let vals: Vec<f64> = TABLE6
+                    .iter()
+                    .filter(|r| r.0 == arch && r.1 >= 1)
+                    .filter_map(|r| r.2[cu])
+                    .collect();
+                for w in vals.windows(2) {
+                    assert!(w[1] <= w[0], "{arch} cu{cu}: {vals:?}");
+                }
+            }
+        }
+    }
+}

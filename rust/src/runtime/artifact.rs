@@ -1,0 +1,205 @@
+//! Artifact manifests: the contract between the AOT pipeline (python)
+//! and the runtime (rust).
+//!
+//! `artifacts/<model>/manifest.json` pins the canonical parameter
+//! flatten order and every lowered function's input/output signature;
+//! this module parses and validates it. Any drift between the python
+//! lowering and the rust caller is caught here, at load time, instead
+//! of as garbage numerics.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::{Dtype, TensorSpec};
+use crate::util::json::Json;
+
+/// One lowered function: file + typed signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactDef {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model metadata recorded by aot.py.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub param_count: usize,
+    pub token_budget: usize,
+}
+
+/// Parsed manifest for one model directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub params: Vec<TensorSpec>,
+    pub micro_batches: Vec<usize>,
+    pub eval_batch: usize,
+    pub artifacts: BTreeMap<String, ArtifactDef>,
+}
+
+fn parse_specs(arr: &[Json]) -> Result<Vec<TensorSpec>> {
+    arr.iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e.str_of("name")?,
+                shape: e
+                    .arr_of("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("shape dim"))
+                    .collect::<Result<_>>()?,
+                dtype: Dtype::parse(&e.str_of("dtype")?)?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(model_dir: &Path) -> Result<Manifest> {
+        let manifest_path = model_dir.join("manifest.json");
+        let j = Json::parse_file(&manifest_path)?;
+        let m = j.req("model")?;
+        let model = ModelInfo {
+            name: m.str_of("name")?,
+            layers: m.usize_of("layers")?,
+            d_model: m.usize_of("d_model")?,
+            heads: m.usize_of("heads")?,
+            head_dim: m.usize_of("head_dim")?,
+            d_ff: m.usize_of("d_ff")?,
+            vocab: m.usize_of("vocab")?,
+            seq_len: m.usize_of("seq_len")?,
+            param_count: m.usize_of("param_count")?,
+            token_budget: m.usize_of("token_budget")?,
+        };
+        let params = parse_specs(j.arr_of("params")?)?;
+        let micro_batches = j
+            .arr_of("micro_batches")?
+            .iter()
+            .map(|v| v.as_usize().context("micro_batch"))
+            .collect::<Result<Vec<_>>>()?;
+        let eval_batch = j.usize_of("eval_batch")?;
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .req("artifacts")?
+            .as_obj()
+            .context("artifacts must be an object")?;
+        for (name, a) in arts {
+            let def = ArtifactDef {
+                name: name.clone(),
+                file: model_dir.join(a.str_of("file")?),
+                inputs: parse_specs(a.arr_of("inputs")?)?,
+                outputs: parse_specs(a.arr_of("outputs")?)?,
+            };
+            if !def.file.is_file() {
+                bail!("artifact file missing: {}", def.file.display());
+            }
+            artifacts.insert(name.clone(), def);
+        }
+        let manifest = Manifest {
+            dir: model_dir.to_path_buf(),
+            model,
+            params,
+            micro_batches,
+            eval_batch,
+            artifacts,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Structural invariants the rust side relies on.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.params.len();
+        if n != 10 * self.model.layers + 2 {
+            bail!("param leaf count {n} != 10*layers+2");
+        }
+        let total: usize = self.params.iter().map(|p| p.numel()).sum();
+        if total != self.model.param_count {
+            bail!("param_count {} != sum of leaves {total}", self.model.param_count);
+        }
+        for req in ["init", "apply_update", "train_step", "grad_acc", "eval_step", "seq_nll"] {
+            if !self.artifacts.contains_key(req) {
+                bail!("manifest missing required artifact {req:?}");
+            }
+        }
+        for mb in &self.micro_batches {
+            let key = format!("grad_step_mb{mb}");
+            let a = self
+                .artifacts
+                .get(&key)
+                .with_context(|| format!("missing {key}"))?;
+            if a.inputs.len() != n + 1 || a.outputs.len() != n + 2 {
+                bail!("{key}: bad arity");
+            }
+        }
+        let ts = &self.artifacts["train_step"];
+        if ts.inputs.len() != 3 * n + 4 || ts.outputs.len() != 3 * n + 2 {
+            bail!("train_step: bad arity");
+        }
+        let au = &self.artifacts["apply_update"];
+        if au.inputs.len() != 4 * n + 3 || au.outputs.len() != 3 * n + 1 {
+            bail!("apply_update: bad arity");
+        }
+        Ok(())
+    }
+
+    /// The micro-batch sizes available for grad_step, largest first.
+    pub fn micro_batches_desc(&self) -> Vec<usize> {
+        let mut v = self.micro_batches.clone();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+
+    /// Batch (sequence count) of the fused train_step artifact.
+    pub fn train_step_batch(&self) -> usize {
+        self.artifacts["train_step"]
+            .inputs
+            .iter()
+            .find(|s| s.name == "tokens")
+            .map(|s| s.shape[0])
+            .unwrap_or(0)
+    }
+}
+
+/// Decompose a sequence-count into available micro-batch sizes,
+/// largest-first greedy. E.g. 21 with {8,1} -> [8,8,1,1,1,1,1].
+pub fn decompose_micro(total: usize, sizes_desc: &[usize]) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut rem = total;
+    for &s in sizes_desc {
+        while rem >= s {
+            out.push(s);
+            rem -= s;
+        }
+    }
+    if rem != 0 {
+        bail!("cannot decompose batch of {total} into micro sizes {sizes_desc:?}");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decompose_greedy() {
+        assert_eq!(decompose_micro(21, &[8, 1]).unwrap(),
+                   vec![8, 8, 1, 1, 1, 1, 1]);
+        assert_eq!(decompose_micro(8, &[8, 1]).unwrap(), vec![8]);
+        assert_eq!(decompose_micro(0, &[8, 1]).unwrap(), Vec::<usize>::new());
+        assert!(decompose_micro(3, &[8, 2]).is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! PJRT execution: load HLO text artifacts, compile once, call many.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//! Artifacts are lowered with `return_tuple=True`, so every call
+//! returns a single tuple literal which is decomposed into the typed
+//! outputs declared by the manifest. Arity and scalar/shape mismatches
+//! fail loudly here rather than corrupting training state.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::{ArtifactDef, Manifest};
+
+/// Shared PJRT client (CPU). One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Rc<Runtime>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Rc::new(Runtime { client }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, def: &ArtifactDef) -> Result<Executable> {
+        let path_str = def
+            .file
+            .to_str()
+            .with_context(|| format!("non-utf8 path {}", def.file.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", def.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", def.name))?;
+        Ok(Executable {
+            def: def.clone(),
+            exe,
+        })
+    }
+}
+
+/// A compiled artifact with its manifest signature.
+pub struct Executable {
+    pub def: ArtifactDef,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed tuple outputs
+    /// in manifest order.
+    pub fn call(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.def.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest declares {}",
+                self.def.name,
+                inputs.len(),
+                self.def.inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.def.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.def.name))?;
+        let outs = tuple
+            .to_tuple()
+            .with_context(|| format!("decomposing result tuple of {}", self.def.name))?;
+        if outs.len() != self.def.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest declares {}",
+                self.def.name,
+                outs.len(),
+                self.def.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// All compiled executables for one model, lazily loaded from its
+/// manifest. This is what the coordinator holds per model variant.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    rt: Rc<Runtime>,
+    cache: std::cell::RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl ModelRuntime {
+    pub fn load(rt: Rc<Runtime>, model_dir: &Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(model_dir)?;
+        Ok(ModelRuntime {
+            manifest,
+            rt,
+            cache: std::cell::RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// True if the artifact is already compiled in this process.
+    pub fn is_compiled(&self, name: &str) -> bool {
+        self.cache.borrow().contains_key(name)
+    }
+
+    /// Get (compiling on first use) a named artifact.
+    pub fn artifact(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let def = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("model {} has no artifact {name:?}", self.manifest.model.name))?;
+        log::debug!("compiling artifact {}/{}", self.manifest.model.name, name);
+        let exe = Rc::new(self.rt.load(def)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.manifest.params.len()
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: loads AOT HLO-text artifacts and executes them via
+//! the PJRT C API (`xla` crate). Python never runs here — the rust
+//! binary is self-contained once `make artifacts` has produced the
+//! HLO text + manifests.
+
+pub mod artifact;
+pub mod executor;
+pub mod tensor;
+
+pub use artifact::{decompose_micro, ArtifactDef, Manifest, ModelInfo};
+pub use executor::{Executable, ModelRuntime, Runtime};
+pub use tensor::{f32_scalar, i32_literal, scalar_f32, u32_scalar, Dtype, HostTensor, TensorSpec};

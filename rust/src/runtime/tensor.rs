@@ -1,0 +1,148 @@
+//! Host tensors and the Literal bridge.
+//!
+//! Replica state stays as `xla::Literal`s between steps (zero extra
+//! copies on the hot path); `HostTensor` is the host-side view used by
+//! the outer optimizer, data pipeline, and metrics.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Element type of a tensor (subset used by our artifacts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "u32" => Ok(Dtype::U32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+            Dtype::U32 => "u32",
+        }
+    }
+}
+
+/// Shape + dtype + name of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A host-side tensor (f32 payload; ints carried as exact f32-free vecs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Convert to an XLA literal with this shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Read an f32 literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(HostTensor { shape: dims, data })
+    }
+}
+
+/// Build an i32 literal (token batches) with the given shape.
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("i32 literal: shape {shape:?} != {} elements", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn u32_scalar(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("reading f32 scalar: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_roundtrip() {
+        for d in [Dtype::F32, Dtype::I32, Dtype::U32] {
+            assert_eq!(Dtype::parse(d.name()).unwrap(), d);
+        }
+        assert!(Dtype::parse("bf16").is_err());
+    }
+
+    #[test]
+    fn host_tensor_shapes() {
+        let t = HostTensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        let u = HostTensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(u.data[2], 3.0);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        assert_eq!(scalar_f32(&f32_scalar(2.5)).unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,82 @@
+//! Optimal-batch-size interpolation (paper section 6.1, Table 9 prep):
+//! sweeps use powers of 2, so the true optimum may fall between grid
+//! points; fit a quadratic to loss as a function of log2(B) (using the
+//! best loss at each B) and take the parabola's minimum.
+
+use anyhow::{bail, Result};
+
+use crate::util::stats;
+
+/// Given (batch_tokens, best_loss_at_that_batch) pairs, return the
+/// interpolated optimal log2(batch). Falls back to the argmin grid
+/// point when the quadratic is degenerate or non-convex.
+pub fn optimal_batch_log2(points: &[(f64, f64)]) -> Result<f64> {
+    if points.len() < 2 {
+        bail!("need >= 2 batch points");
+    }
+    let x: Vec<f64> = points.iter().map(|p| p.0.log2()).collect();
+    let y: Vec<f64> = points.iter().map(|p| p.1).collect();
+    let argmin = x[y
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0];
+    if points.len() == 2 {
+        return Ok(argmin);
+    }
+    match stats::quadfit(&x, &y) {
+        Some(c) if c[2] > 1e-12 => {
+            let xmin = -c[1] / (2.0 * c[2]);
+            // Clamp to the swept range: extrapolating a parabola beyond
+            // the grid is meaningless.
+            let lo = x.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            Ok(xmin.clamp(lo, hi))
+        }
+        _ => Ok(argmin),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_parabola_minimum() {
+        // loss = (log2 B - 11.5)^2 + 3 -> optimum 11.5 (between grid pts)
+        let pts: Vec<(f64, f64)> = [9.0f64, 10.0, 11.0, 12.0, 13.0]
+            .iter()
+            .map(|&l| (2f64.powf(l), (l - 11.5) * (l - 11.5) + 3.0))
+            .collect();
+        let b = optimal_batch_log2(&pts).unwrap();
+        assert!((b - 11.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clamps_to_grid_range() {
+        // Monotone decreasing loss: parabola vertex beyond the grid.
+        let pts: Vec<(f64, f64)> = [8.0f64, 9.0, 10.0]
+            .iter()
+            .map(|&l| (2f64.powf(l), 10.0 - l))
+            .collect();
+        let b = optimal_batch_log2(&pts).unwrap();
+        assert!(b <= 10.0 + 1e-9);
+    }
+
+    #[test]
+    fn two_points_uses_argmin() {
+        let pts = vec![(512.0, 3.0), (1024.0, 2.5)];
+        assert_eq!(optimal_batch_log2(&pts).unwrap(), 10.0);
+    }
+
+    #[test]
+    fn concave_falls_back_to_argmin() {
+        let pts: Vec<(f64, f64)> = [8.0f64, 9.0, 10.0]
+            .iter()
+            .map(|&l| (2f64.powf(l), -(l - 9.0) * (l - 9.0)))
+            .collect();
+        let b = optimal_batch_log2(&pts).unwrap();
+        assert!(b == 8.0 || b == 10.0);
+    }
+}

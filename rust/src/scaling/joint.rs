@@ -1,0 +1,93 @@
+//! Joint two-variable power laws f(N, M) ~ A * N^alpha * M^beta
+//! (paper section 6.2, Table 10), fit by linear regression in
+//! log-space: ln f = ln A + alpha ln N + beta ln M.
+
+use anyhow::{bail, Result};
+
+use crate::util::stats;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JointFit {
+    pub a: f64,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl JointFit {
+    pub fn fit(n: &[f64], m: &[f64], y: &[f64]) -> Result<JointFit> {
+        if n.len() != m.len() || n.len() != y.len() || n.len() < 3 {
+            bail!("joint fit needs >= 3 aligned points");
+        }
+        if n.iter().chain(m).chain(y).any(|&v| v <= 0.0) {
+            bail!("joint fit requires positive data");
+        }
+        let rows: Vec<Vec<f64>> = n
+            .iter()
+            .zip(m)
+            .map(|(&ni, &mi)| vec![1.0, ni.ln(), mi.ln()])
+            .collect();
+        let ly: Vec<f64> = y.iter().map(|v| v.ln()).collect();
+        let beta = stats::least_squares(&rows, &ly)
+            .ok_or_else(|| anyhow::anyhow!("degenerate joint fit"))?;
+        Ok(JointFit {
+            a: beta[0].exp(),
+            alpha: beta[1],
+            beta: beta[2],
+        })
+    }
+
+    pub fn predict(&self, n: f64, m: f64) -> f64 {
+        self.a * n.powf(self.alpha) * m.powf(self.beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> (Vec<f64>, Vec<f64>) {
+        let mut ns = Vec::new();
+        let mut ms = Vec::new();
+        for n in [1e5, 1e6, 1e7] {
+            for m in [1.0, 2.0, 4.0, 8.0] {
+                ns.push(n);
+                ms.push(m);
+            }
+        }
+        (ns, ms)
+    }
+
+    #[test]
+    fn recovers_exact_joint_law() {
+        let (ns, ms) = grid();
+        let y: Vec<f64> = ns
+            .iter()
+            .zip(&ms)
+            .map(|(&n, &m)| 19.226 * n.powf(-0.0985) * m.powf(0.0116))
+            .collect();
+        let f = JointFit::fit(&ns, &ms, &y).unwrap();
+        assert!((f.a - 19.226).abs() < 1e-3);
+        assert!((f.alpha + 0.0985).abs() < 1e-9);
+        assert!((f.beta - 0.0116).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_single_m_rejected() {
+        // All M equal -> beta unidentifiable -> singular system.
+        let ns = vec![1e5, 1e6, 1e7];
+        let ms = vec![2.0, 2.0, 2.0];
+        let y = vec![3.0, 2.5, 2.1];
+        assert!(JointFit::fit(&ns, &ms, &y).is_err());
+    }
+
+    #[test]
+    fn predict_matches_formula() {
+        let f = JointFit {
+            a: 2.0,
+            alpha: -0.1,
+            beta: 0.3,
+        };
+        let v = f.predict(1e6, 4.0);
+        assert!((v - 2.0 * 1e6f64.powf(-0.1) * 4f64.powf(0.3)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,26 @@
+//! Scaling-law fitting stack — paper section 6.
+//!
+//! - [`powerlaw`]: independent fits L(N) ~ A*N^alpha (Tables 7-9),
+//! - [`joint`]: joint fits f(N,M) ~ A*N^alpha*M^beta (Table 10),
+//! - [`batchopt`]: quadratic-in-log2(B) interpolation of the optimal
+//!   batch size (section 6.1's batch-size refinement),
+//! - [`neldermead`]: derivative-free minimizer (stands in for L-BFGS,
+//!   which would need a gradient; the objective is 3-7 dimensional),
+//! - [`parametric`]: the four candidate functional forms fit with a
+//!   Huber loss and 256 random restarts, selected on held-out top-rung
+//!   data (Table 13, section 6.5),
+//! - [`residuals`]: the paper's log-residual metric and leave-one-out
+//!   validation (Table 11).
+
+pub mod batchopt;
+pub mod joint;
+pub mod neldermead;
+pub mod parametric;
+pub mod powerlaw;
+pub mod residuals;
+
+pub use batchopt::optimal_batch_log2;
+pub use joint::JointFit;
+pub use parametric::{fit_parametric, ParametricForm};
+pub use powerlaw::PowerLaw;
+pub use residuals::log_residual;

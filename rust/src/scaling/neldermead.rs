@@ -1,0 +1,139 @@
+//! Nelder-Mead simplex minimizer.
+//!
+//! The paper minimizes the Huber objective with L-BFGS from 256 random
+//! inits (section 6.5). L-BFGS needs gradients; for these 3-7 parameter
+//! objectives a derivative-free simplex with random restarts is an
+//! equivalent (and more robust) choice — DESIGN.md section 7 records
+//! the substitution.
+
+/// Minimize `f` starting from `x0`. Returns (argmin, min).
+pub fn minimize(
+    f: &dyn Fn(&[f64]) -> f64,
+    x0: &[f64],
+    scale: f64,
+    max_iter: usize,
+) -> (Vec<f64>, f64) {
+    let n = x0.len();
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+
+    // initial simplex: x0 plus per-coordinate offsets
+    let mut simplex: Vec<Vec<f64>> = vec![x0.to_vec()];
+    for i in 0..n {
+        let mut p = x0.to_vec();
+        p[i] += if p[i].abs() > 1e-8 {
+            scale * p[i].abs()
+        } else {
+            scale
+        };
+        simplex.push(p);
+    }
+    let mut values: Vec<f64> = simplex.iter().map(|p| f(p)).collect();
+
+    for _ in 0..max_iter {
+        // sort simplex by value
+        let mut idx: Vec<usize> = (0..=n).collect();
+        idx.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap_or(std::cmp::Ordering::Equal));
+        simplex = idx.iter().map(|&i| simplex[i].clone()).collect();
+        values = idx.iter().map(|&i| values[i]).collect();
+
+        if (values[n] - values[0]).abs() < 1e-12 * (1.0 + values[0].abs()) {
+            break;
+        }
+
+        // centroid of all but worst
+        let mut centroid = vec![0.0; n];
+        for p in &simplex[..n] {
+            for (c, &v) in centroid.iter_mut().zip(p) {
+                *c += v / n as f64;
+            }
+        }
+        let worst = simplex[n].clone();
+        let reflect: Vec<f64> = centroid
+            .iter()
+            .zip(&worst)
+            .map(|(&c, &w)| c + alpha * (c - w))
+            .collect();
+        let fr = f(&reflect);
+        if fr < values[0] {
+            // expansion
+            let expand: Vec<f64> = centroid
+                .iter()
+                .zip(&worst)
+                .map(|(&c, &w)| c + gamma * (c - w))
+                .collect();
+            let fe = f(&expand);
+            if fe < fr {
+                simplex[n] = expand;
+                values[n] = fe;
+            } else {
+                simplex[n] = reflect;
+                values[n] = fr;
+            }
+        } else if fr < values[n - 1] {
+            simplex[n] = reflect;
+            values[n] = fr;
+        } else {
+            // contraction
+            let contract: Vec<f64> = centroid
+                .iter()
+                .zip(&worst)
+                .map(|(&c, &w)| c + rho * (w - c))
+                .collect();
+            let fc = f(&contract);
+            if fc < values[n] {
+                simplex[n] = contract;
+                values[n] = fc;
+            } else {
+                // shrink toward best
+                let best = simplex[0].clone();
+                for i in 1..=n {
+                    for j in 0..n {
+                        simplex[i][j] = best[j] + sigma * (simplex[i][j] - best[j]);
+                    }
+                    values[i] = f(&simplex[i]);
+                }
+            }
+        }
+    }
+    let mut best = 0;
+    for i in 1..=n {
+        if values[i] < values[best] {
+            best = i;
+        }
+    }
+    (simplex[best].clone(), values[best])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic_bowl() {
+        let f = |x: &[f64]| (x[0] - 3.0).powi(2) + (x[1] + 1.0).powi(2) + 5.0;
+        let (x, v) = minimize(&f, &[0.0, 0.0], 1.0, 500);
+        assert!((x[0] - 3.0).abs() < 1e-4, "{x:?}");
+        assert!((x[1] + 1.0).abs() < 1e-4);
+        assert!((v - 5.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn minimizes_rosenbrock_2d() {
+        let f = |x: &[f64]| {
+            100.0 * (x[1] - x[0] * x[0]).powi(2) + (1.0 - x[0]).powi(2)
+        };
+        let (x, _) = minimize(&f, &[-1.2, 1.0], 0.5, 5000);
+        assert!((x[0] - 1.0).abs() < 1e-2, "{x:?}");
+        assert!((x[1] - 1.0).abs() < 2e-2, "{x:?}");
+    }
+
+    #[test]
+    fn handles_higher_dimensions() {
+        let f = |x: &[f64]| x.iter().map(|v| (v - 2.0) * (v - 2.0)).sum::<f64>();
+        let (x, v) = minimize(&f, &[0.0; 5], 1.0, 3000);
+        for xi in &x {
+            assert!((xi - 2.0).abs() < 1e-3, "{x:?}");
+        }
+        assert!(v < 1e-5);
+    }
+}

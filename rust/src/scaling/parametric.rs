@@ -1,0 +1,252 @@
+//! Parametric function fitting — paper section 6.5, Table 13.
+//!
+//! Four candidate forms for the joint loss surface L(N, M):
+//!   1. A*N^alpha*M^beta                  (joint power law)
+//!   2. A*N^alpha*M^beta + C
+//!   3. A*N^(alpha + beta*M) + C
+//!   4. A*N^alpha + B*M^beta + C          (Chinchilla-style additive)
+//!
+//! Fit protocol (exactly the paper's): minimize
+//!   sum Huber_delta( log f_Q(N,M) - log L(N,M) )
+//! over the training rungs, from 256 random initializations, and select
+//! the parameter vector that best fits the held-out top-rung data
+//! measured by the mean |log f - log L| residual.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+use crate::util::stats::huber;
+
+use super::neldermead;
+use super::residuals::log_residual;
+
+pub const HUBER_DELTA: f64 = 1e-3;
+pub const N_RESTARTS: usize = 256;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParametricForm {
+    PowerLaw,          // A N^a M^b
+    PowerLawPlusC,     // A N^a M^b + C
+    ExponentShift,     // A N^(a + b M) + C
+    Additive,          // A N^a + B M^b + C
+}
+
+impl ParametricForm {
+    pub fn all() -> [ParametricForm; 4] {
+        [
+            ParametricForm::PowerLaw,
+            ParametricForm::PowerLawPlusC,
+            ParametricForm::ExponentShift,
+            ParametricForm::Additive,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ParametricForm::PowerLaw => "A*N^a*M^b",
+            ParametricForm::PowerLawPlusC => "A*N^a*M^b + C",
+            ParametricForm::ExponentShift => "A*N^(a+b*M) + C",
+            ParametricForm::Additive => "A*N^a + B*M^b + C",
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        match self {
+            ParametricForm::PowerLaw => 3,
+            ParametricForm::PowerLawPlusC => 4,
+            ParametricForm::ExponentShift => 4,
+            ParametricForm::Additive => 5,
+        }
+    }
+
+    /// Evaluate with raw (unconstrained) parameter vector q.
+    /// Positivity of A/B/C is enforced by exp() transforms.
+    pub fn eval(&self, q: &[f64], n: f64, m: f64) -> f64 {
+        match self {
+            ParametricForm::PowerLaw => q[0].exp() * n.powf(q[1]) * m.powf(q[2]),
+            ParametricForm::PowerLawPlusC => {
+                q[0].exp() * n.powf(q[1]) * m.powf(q[2]) + q[3].exp()
+            }
+            ParametricForm::ExponentShift => {
+                q[0].exp() * n.powf(q[1] + q[2] * m) + q[3].exp()
+            }
+            ParametricForm::Additive => {
+                q[0].exp() * n.powf(q[1]) + q[2].exp() * m.powf(q[3]) + q[4].exp()
+            }
+        }
+    }
+
+    fn random_init(&self, rng: &mut Rng) -> Vec<f64> {
+        // log A ~ U(-1, 4); exponents ~ U(-0.5, 0.2); log C ~ U(-4, 1)
+        match self {
+            ParametricForm::PowerLaw => vec![
+                rng.range_f64(-1.0, 4.0),
+                rng.range_f64(-0.5, 0.1),
+                rng.range_f64(-0.2, 0.2),
+            ],
+            ParametricForm::PowerLawPlusC => vec![
+                rng.range_f64(-1.0, 4.0),
+                rng.range_f64(-0.5, 0.1),
+                rng.range_f64(-0.2, 0.2),
+                rng.range_f64(-4.0, 1.0),
+            ],
+            ParametricForm::ExponentShift => vec![
+                rng.range_f64(-1.0, 4.0),
+                rng.range_f64(-0.5, 0.1),
+                rng.range_f64(-0.05, 0.05),
+                rng.range_f64(-4.0, 1.0),
+            ],
+            ParametricForm::Additive => vec![
+                rng.range_f64(-1.0, 4.0),
+                rng.range_f64(-0.5, 0.1),
+                rng.range_f64(-4.0, 1.0),
+                rng.range_f64(-0.5, 0.5),
+                rng.range_f64(-4.0, 1.0),
+            ],
+        }
+    }
+}
+
+/// One (N, M, loss) observation.
+#[derive(Debug, Clone, Copy)]
+pub struct Obs {
+    pub n: f64,
+    pub m: f64,
+    pub loss: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParametricFit {
+    pub form: ParametricForm,
+    pub params: Vec<f64>,
+    /// Mean |log f - log L| on the held-out set (Table 13's metric).
+    pub holdout_residual: f64,
+}
+
+impl ParametricFit {
+    pub fn predict(&self, n: f64, m: f64) -> f64 {
+        self.form.eval(&self.params, n, m)
+    }
+}
+
+/// Fit one form on `train`, select the restart by `holdout` residual.
+pub fn fit_parametric(
+    form: ParametricForm,
+    train: &[Obs],
+    holdout: &[Obs],
+    seed: u64,
+    restarts: usize,
+) -> Result<ParametricFit> {
+    if train.is_empty() || holdout.is_empty() {
+        bail!("parametric fit needs train and holdout data");
+    }
+    let objective = |q: &[f64]| -> f64 {
+        let mut total = 0.0;
+        for o in train {
+            let f = form.eval(q, o.n, o.m);
+            if !(f > 0.0) || !f.is_finite() {
+                return 1e18;
+            }
+            total += huber(HUBER_DELTA, f.ln() - o.loss.ln());
+        }
+        total
+    };
+    let mut rng = Rng::new(seed);
+    let mut best: Option<ParametricFit> = None;
+    for _ in 0..restarts {
+        let q0 = form.random_init(&mut rng);
+        let (q, _v) = neldermead::minimize(&objective, &q0, 0.3, 800);
+        // holdout selection (the paper holds out the largest rung)
+        let mut resid = 0.0;
+        let mut ok = true;
+        for o in holdout {
+            let f = form.eval(&q, o.n, o.m);
+            if !(f > 0.0) || !f.is_finite() {
+                ok = false;
+                break;
+            }
+            resid += log_residual(o.loss, f);
+        }
+        if !ok {
+            continue;
+        }
+        resid /= holdout.len() as f64;
+        if best.as_ref().map_or(true, |b| resid < b.holdout_residual) {
+            best = Some(ParametricFit {
+                form,
+                params: q,
+                holdout_residual: resid,
+            });
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no restart produced a finite fit"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(form: ParametricForm, q: &[f64]) -> (Vec<Obs>, Vec<Obs>) {
+        let mut train = Vec::new();
+        let mut holdout = Vec::new();
+        for (i, &n) in [4.6e4, 1.1e5, 2.4e5, 7.2e5].iter().enumerate() {
+            for m in [1.0, 2.0, 4.0, 8.0] {
+                let loss = form.eval(q, n, m);
+                let o = Obs { n, m, loss };
+                if i == 3 {
+                    holdout.push(o);
+                } else {
+                    train.push(o);
+                }
+            }
+        }
+        (train, holdout)
+    }
+
+    #[test]
+    fn recovers_pure_power_law() {
+        let truth = [19.226f64.ln(), -0.0985, 0.0116];
+        let (train, holdout) = synth(ParametricForm::PowerLaw, &truth);
+        let fit = fit_parametric(ParametricForm::PowerLaw, &train, &holdout, 1, 64)
+            .unwrap();
+        assert!(fit.holdout_residual < 1e-3, "resid {}", fit.holdout_residual);
+    }
+
+    #[test]
+    fn plus_c_form_fits_shifted_data() {
+        let truth = [2.0f64.ln(), -0.15, 0.02, 1.5f64.ln()];
+        let (train, holdout) = synth(ParametricForm::PowerLawPlusC, &truth);
+        let fit =
+            fit_parametric(ParametricForm::PowerLawPlusC, &train, &holdout, 2, 128)
+                .unwrap();
+        assert!(fit.holdout_residual < 5e-3, "resid {}", fit.holdout_residual);
+    }
+
+    #[test]
+    fn wrong_form_has_larger_residual_than_right_form() {
+        // Data generated from the exponent-shift form: the pure power
+        // law should extrapolate worse (Table 13's qualitative result).
+        let truth = [3.0f64.ln(), -0.12, -0.004, 0.9f64.ln()];
+        let (train, holdout) = synth(ParametricForm::ExponentShift, &truth);
+        let right =
+            fit_parametric(ParametricForm::ExponentShift, &train, &holdout, 3, 128)
+                .unwrap();
+        let wrong =
+            fit_parametric(ParametricForm::PowerLaw, &train, &holdout, 3, 128).unwrap();
+        assert!(
+            right.holdout_residual < wrong.holdout_residual,
+            "{} vs {}",
+            right.holdout_residual,
+            wrong.holdout_residual
+        );
+    }
+
+    #[test]
+    fn all_forms_have_labels_and_arities() {
+        for f in ParametricForm::all() {
+            assert!(!f.label().is_empty());
+            let mut rng = Rng::new(1);
+            assert_eq!(f.random_init(&mut rng).len(), f.n_params());
+        }
+    }
+}

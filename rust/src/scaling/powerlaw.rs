@@ -1,0 +1,95 @@
+//! Power-law fits y ~ A * N^alpha via log-log linear regression —
+//! exactly the paper's independent-fit methodology ("can easily be done
+//! via applying linear fit techniques to log(L), and is not sensitive
+//! to initial values", section 6.1).
+
+use anyhow::{bail, Result};
+
+use crate::util::stats;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerLaw {
+    pub a: f64,
+    pub alpha: f64,
+}
+
+impl PowerLaw {
+    /// Fit to (n_i, y_i) pairs; all values must be positive.
+    pub fn fit(n: &[f64], y: &[f64]) -> Result<PowerLaw> {
+        if n.len() != y.len() || n.len() < 2 {
+            bail!("power law fit needs >= 2 points");
+        }
+        if n.iter().chain(y).any(|&v| v <= 0.0) {
+            bail!("power law fit requires positive data");
+        }
+        let lx: Vec<f64> = n.iter().map(|v| v.ln()).collect();
+        let ly: Vec<f64> = y.iter().map(|v| v.ln()).collect();
+        let (intercept, slope) =
+            stats::linreg(&lx, &ly).ok_or_else(|| anyhow::anyhow!("degenerate fit"))?;
+        Ok(PowerLaw {
+            a: intercept.exp(),
+            alpha: slope,
+        })
+    }
+
+    pub fn predict(&self, n: f64) -> f64 {
+        self.a * n.powf(self.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_exact_law() {
+        let n: Vec<f64> = vec![1e5, 1e6, 1e7, 1e8];
+        let y: Vec<f64> = n.iter().map(|&x| 18.0 * x.powf(-0.095)).collect();
+        let p = PowerLaw::fit(&n, &y).unwrap();
+        assert!((p.a - 18.0).abs() < 1e-6, "A={}", p.a);
+        assert!((p.alpha + 0.095).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(PowerLaw::fit(&[1.0], &[1.0]).is_err());
+        assert!(PowerLaw::fit(&[1.0, -2.0], &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn prop_recovery_under_noise() {
+        // Property: with small multiplicative noise, recovered exponent
+        // is close to truth for random laws.
+        prop::check(
+            7,
+            48,
+            |rng: &mut Rng| {
+                let a = rng.range_f64(0.5, 30.0);
+                let alpha = rng.range_f64(-1.2, -0.02);
+                (a, alpha, rng.next_u64())
+            },
+            |&(a, alpha, seed)| {
+                let mut noise = Rng::new(seed);
+                let n: Vec<f64> = (0..8).map(|i| 1e4 * 4f64.powi(i)).collect();
+                let y: Vec<f64> = n
+                    .iter()
+                    .map(|&x| a * x.powf(alpha) * (1.0 + 0.002 * noise.normal()))
+                    .collect();
+                let p = PowerLaw::fit(&n, &y).map_err(|e| e.to_string())?;
+                prop::close(p.alpha, alpha, 0.02)?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn predict_interpolates() {
+        let p = PowerLaw {
+            a: 2.0,
+            alpha: 0.5,
+        };
+        assert!((p.predict(4.0) - 4.0).abs() < 1e-12);
+    }
+}

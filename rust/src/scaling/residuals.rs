@@ -1,0 +1,59 @@
+//! The paper's goodness-of-fit metric and leave-one-out validation
+//! (section 6.3, Table 11): res(y, y~) = |log(y) - log(y~)| — chosen
+//! because it works uniformly across loss, learning rate, and batch
+//! size despite their very different scales.
+
+/// |log(actual) - log(predicted)|.
+pub fn log_residual(actual: f64, predicted: f64) -> f64 {
+    (actual.ln() - predicted.ln()).abs()
+}
+
+/// Summary of one leave-one-out comparison row (one M value).
+#[derive(Debug, Clone)]
+pub struct LooRow {
+    pub m: usize,
+    pub loss_residual: f64,
+    pub lr_residual: f64,
+    pub batch_residual: f64,
+}
+
+/// Average residuals across M (the paper's "Average over M" row).
+pub fn average_rows(rows: &[LooRow]) -> (f64, f64, f64) {
+    let n = rows.len().max(1) as f64;
+    (
+        rows.iter().map(|r| r.loss_residual).sum::<f64>() / n,
+        rows.iter().map(|r| r.lr_residual).sum::<f64>() / n,
+        rows.iter().map(|r| r.batch_residual).sum::<f64>() / n,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_is_symmetric_in_ratio() {
+        assert!((log_residual(2.0, 4.0) - log_residual(4.0, 2.0)).abs() < 1e-12);
+        assert_eq!(log_residual(3.0, 3.0), 0.0);
+    }
+
+    #[test]
+    fn residual_scale_free() {
+        // res depends only on the ratio: key for mixed-scale comparisons.
+        let a = log_residual(1e-3, 2e-3);
+        let b = log_residual(1e6, 2e6);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn averages() {
+        let rows = vec![
+            LooRow { m: 1, loss_residual: 0.01, lr_residual: 0.3, batch_residual: 0.1 },
+            LooRow { m: 2, loss_residual: 0.03, lr_residual: 0.1, batch_residual: 0.3 },
+        ];
+        let (l, g, b) = average_rows(&rows);
+        assert!((l - 0.02).abs() < 1e-12);
+        assert!((g - 0.2).abs() < 1e-12);
+        assert!((b - 0.2).abs() < 1e-12);
+    }
+}

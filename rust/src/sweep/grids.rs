@@ -1,0 +1,385 @@
+//! Named sweep grids — the mini-scale analogue of the paper's sweeps
+//! (section 3.1), sized for this single-core substrate (DESIGN.md §3).
+//!
+//! Conventions carried over from the paper:
+//! - inner LR swept in powers of sqrt(2) around a per-size center,
+//! - (global) batch size swept in powers of 2 (sequences),
+//! - outer LR in {0.2, 0.4, 0.6, 0.8, 1.0}, larger for larger M
+//!   (Finding 4: optimal eta depends on M, not N),
+//! - token budget fixed at Chinchilla 20N per run.
+//!
+//! Priority order matters: the runner executes grids front-to-back and
+//! stores are resumable, so the most load-bearing data (loss ladder for
+//! Table 4 / Fig 2) lands first.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Algo, RunConfig};
+
+const SQRT2: f64 = std::f64::consts::SQRT_2;
+
+/// Per-model LR grid center. Tiny models tolerate larger LRs; centers
+/// were located with short pilot runs.
+fn lr_center(model: &str) -> f64 {
+    match model {
+        "m0" => 1.7e-2,
+        "m1" => 9.0e-3,
+        "m2" => 5.0e-3,
+        "m3" => 2.8e-3,
+        "m4" => 1.6e-3,
+        _ => 6.0e-3,
+    }
+}
+
+fn lrs(center: f64, half_steps: &[i32]) -> Vec<f64> {
+    half_steps.iter().map(|&k| center * SQRT2.powi(k)).collect()
+}
+
+/// Default outer-LR pair per replica count (bracketing the paper's
+/// Finding 4 optima: eta grows with M).
+fn etas_for(m: usize) -> Vec<f64> {
+    match m {
+        1 => vec![0.4, 0.8],
+        2 => vec![0.6, 1.0],
+        4 => vec![0.6, 1.0],
+        _ => vec![0.8, 1.0],
+    }
+}
+
+fn base(model: &str) -> RunConfig {
+    RunConfig {
+        model: model.into(),
+        eval_tokens: 16 * 1024,
+        log_every: 1000,
+        ..Default::default()
+    }
+}
+
+fn push(
+    out: &mut Vec<RunConfig>,
+    model: &str,
+    algo: Algo,
+    b: usize,
+    lr: f64,
+    eta: f64,
+    f: impl Fn(&mut RunConfig),
+) {
+    let mut cfg = base(model);
+    cfg.algo = algo;
+    cfg.global_batch_seqs = b;
+    cfg.inner_lr = lr;
+    cfg.outer_lr = eta;
+    f(&mut cfg);
+    out.push(cfg);
+}
+
+/// Main loss-ladder sweep for one rung: the data behind Table 4 /
+/// Figures 2, 4, 7 and the hyperparameter scaling laws (Tables 7-10).
+fn main_grid(model: &str, budget_tier: usize) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    let c = lr_center(model);
+    match budget_tier {
+        // full grid (smallest rung)
+        0 => {
+            for lr in lrs(c, &[-2, 0, 2]) {
+                for b in [8usize, 16, 32] {
+                    push(&mut out, model, Algo::DataParallel, b, lr, 0.0, |cf| {
+                        cf.downstream = true;
+                    });
+                }
+            }
+            for m in [1usize, 2, 4, 8] {
+                for lr in lrs(c, &[-2, 0]) {
+                    for b in [8usize, 16, 32] {
+                        if b / m == 0 || b % m != 0 {
+                            continue;
+                        }
+                        for eta in etas_for(m) {
+                            push(
+                                &mut out,
+                                model,
+                                Algo::DiLoCo { replicas: m },
+                                b,
+                                lr,
+                                eta,
+                                |cf| cf.downstream = true,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // reduced grid (middle rungs)
+        1 => {
+            for lr in lrs(c, &[0, 2]) {
+                for b in [16usize, 32] {
+                    push(&mut out, model, Algo::DataParallel, b, lr, 0.0, |cf| {
+                        cf.downstream = true;
+                    });
+                }
+            }
+            for m in [1usize, 2, 4, 8] {
+                for b in [16usize, 32] {
+                    if b % m != 0 {
+                        continue;
+                    }
+                    let eta = etas_for(m)[1];
+                    push(
+                        &mut out,
+                        model,
+                        Algo::DiLoCo { replicas: m },
+                        b,
+                        lr_center(model),
+                        eta,
+                        |cf| cf.downstream = true,
+                    );
+                }
+            }
+        }
+        // minimal grid (top interpolation rung): one well-centred config
+        // per algorithm (the paper's own protocol for its largest rungs:
+        // no extensive tuning, hypers centred by the smaller-rung laws).
+        _ => {
+            push(&mut out, model, Algo::DataParallel, 16, c, 0.0, |cf| {
+                cf.downstream = true;
+            });
+            for m in [1usize, 2, 4, 8] {
+                let eta = etas_for(m)[1];
+                push(
+                    &mut out,
+                    model,
+                    Algo::DiLoCo { replicas: m },
+                    16,
+                    c,
+                    eta,
+                    |cf| cf.downstream = true,
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Synchronization-cadence ablation (Figures 8-9, section 5.1):
+/// H in {1,5,10,30,100,300} at best-known hypers, plus an eta sweep at
+/// three representative H values.
+fn h_sweep(model: &str) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    let c = lr_center(model);
+    for m in [1usize, 2, 4] {
+        for h in [1usize, 5, 10, 30, 100, 300] {
+            push(
+                &mut out,
+                model,
+                Algo::DiLoCo { replicas: m },
+                16,
+                c,
+                etas_for(m)[1],
+                |cf| cf.sync_every = h,
+            );
+        }
+    }
+    for m in [1usize, 4] {
+        for h in [1usize, 30, 300] {
+            for eta in [0.2, 0.6] {
+                push(
+                    &mut out,
+                    model,
+                    Algo::DiLoCo { replicas: m },
+                    16,
+                    c,
+                    eta,
+                    |cf| cf.sync_every = h,
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Batch-size robustness (Figures 3-5, 14-19): extend the batch axis to
+/// 64 and 128 sequences for DP and DiLoCo M in {1,2}.
+fn batch_sweep(model: &str) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    let c = lr_center(model);
+    for b in [64usize, 128] {
+        push(&mut out, model, Algo::DataParallel, b, c, 0.0, |cf| {
+            cf.downstream = true;
+        });
+        for m in [1usize, 2] {
+            push(
+                &mut out,
+                model,
+                Algo::DiLoCo { replicas: m },
+                b,
+                c,
+                etas_for(m)[1],
+                |cf| cf.downstream = true,
+            );
+        }
+    }
+    out
+}
+
+/// Overtraining ablation (Figure 11-12, section 5.2): overtrain
+/// multipliers on the smallest rung with best-known hypers, no re-tune
+/// (exactly the paper's protocol).
+fn overtrain_sweep(model: &str) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    let c = lr_center(model);
+    for ot in [1.0f64, 2.0, 4.0] {
+        push(&mut out, model, Algo::DataParallel, 16, c, 0.0, |cf| {
+            cf.overtrain = ot;
+            // overtraining runs use a distinct seed (paper: Dolma, not C4)
+            cf.seed = 1817;
+        });
+        for m in [1usize, 2] {
+            push(
+                &mut out,
+                model,
+                Algo::DiLoCo { replicas: m },
+                16,
+                c,
+                etas_for(m)[1],
+                |cf| {
+                    cf.overtrain = ot;
+                    cf.seed = 1817;
+                },
+            );
+        }
+    }
+    out
+}
+
+/// Composite grids can repeat configurations (e.g. the m8 fast-pass
+/// entries also appear in the full m0 grid); keep the first occurrence.
+fn dedup_by_run_id(grid: Vec<RunConfig>) -> Vec<RunConfig> {
+    let mut seen = std::collections::HashSet::new();
+    grid.into_iter()
+        .filter(|cfg| seen.insert(crate::sweep::store::run_id(cfg)))
+        .collect()
+}
+
+/// Grid registry.
+pub fn grid_names() -> Vec<&'static str> {
+    vec![
+        "main-m0", "balanced",
+        "main-m1",
+        "main-m2",
+        "h-sweep",
+        "batch",
+        "overtrain",
+        "all",
+        "smoke",
+    ]
+}
+
+pub fn grid_by_name(name: &str) -> Result<Vec<RunConfig>> {
+    Ok(match name {
+        "main-m0" => main_grid("m0", 0),
+        "main-m1" => main_grid("m1", 1),
+        "main-m2" => main_grid("m2", 2),
+        "h-sweep" => h_sweep("m0"),
+        "batch" => batch_sweep("m0"),
+        "overtrain" => overtrain_sweep("m0"),
+        // priority order: ladder first (Table 4 / scaling laws), then ablations
+        "all" => {
+            let mut v = main_grid("m0", 0);
+            v.extend(main_grid("m1", 1));
+            v.extend(main_grid("m2", 2));
+            v.extend(h_sweep("m0"));
+            v.extend(batch_sweep("m0"));
+            v.extend(overtrain_sweep("m0"));
+            v
+        }
+        // wall-clock-constrained order: give every experiment some data
+        // early (ladder rungs first, then one pass over each ablation,
+        // then the m0 long tail). Resumable against the same store.
+        "balanced" => {
+            let mut v = main_grid("m1", 1);
+            v.extend(main_grid("m2", 2));
+            // h-sweep core: enough for fig8/fig9 trends
+            let hs = h_sweep("m0");
+            v.extend(hs.iter().take(18).cloned());
+            v.extend(batch_sweep("m0"));
+            v.extend(overtrain_sweep("m0"));
+            // minimal m8 coverage for Table 4's last column
+            for b in [16usize, 32] {
+                push(&mut v, "m0", Algo::DiLoCo { replicas: 8 }, b, lr_center("m0"), 1.0, |cf| {
+                    cf.downstream = true;
+                });
+            }
+            // then everything else
+            v.extend(main_grid("m0", 0));
+            v.extend(hs.into_iter().skip(18));
+            dedup_by_run_id(v)
+        }
+        "smoke" => {
+            let mut cfg = base("m0");
+            cfg.token_budget = Some(60_000);
+            let mut cfg2 = cfg.clone();
+            cfg2.algo = Algo::DiLoCo { replicas: 2 };
+            cfg2.sync_every = 10;
+            vec![cfg, cfg2]
+        }
+        other => bail!("unknown grid {other:?}; known: {:?}", grid_names()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::store::run_id;
+    use std::collections::HashSet;
+
+    #[test]
+    fn all_grids_build_and_have_unique_ids() {
+        for name in grid_names() {
+            if name == "all" {
+                continue;
+            }
+            let g = grid_by_name(name).unwrap();
+            assert!(!g.is_empty(), "{name} empty");
+            let ids: HashSet<String> = g.iter().map(run_id).collect();
+            assert_eq!(ids.len(), g.len(), "{name} has duplicate run ids");
+        }
+    }
+
+    #[test]
+    fn batches_divide_replicas() {
+        for cfg in grid_by_name("all").unwrap() {
+            let m = cfg.algo.replicas();
+            assert_eq!(cfg.global_batch_seqs % m, 0, "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn main_m0_covers_all_algorithms() {
+        let g = grid_by_name("main-m0").unwrap();
+        let algos: HashSet<String> = g.iter().map(|c| c.algo.label()).collect();
+        for want in ["dp", "diloco-m1", "diloco-m2", "diloco-m4", "diloco-m8"] {
+            assert!(algos.contains(want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn h_sweep_covers_paper_cadences() {
+        let g = grid_by_name("h-sweep").unwrap();
+        let hs: HashSet<usize> = g.iter().map(|c| c.sync_every).collect();
+        for h in [1, 5, 10, 30, 100, 300] {
+            assert!(hs.contains(&h), "missing H={h}");
+        }
+    }
+
+    #[test]
+    fn lr_grid_uses_sqrt2_steps() {
+        let v = lrs(1.0, &[-2, 0, 2]);
+        assert!((v[0] - 0.5).abs() < 1e-12);
+        assert!((v[2] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_grid_rejected() {
+        assert!(grid_by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! Hyperparameter sweep harness (paper section 3.1).
+//!
+//! Grids are named, prioritized lists of [`RunConfig`]s; the runner is
+//! resumable — each completed run is appended to a JSON-lines store
+//! keyed by a deterministic run id, and already-present ids are
+//! skipped. This mirrors the paper's methodology: sweep (inner) LR in
+//! powers of sqrt(2), batch size in powers of 2, outer LR in
+//! {0.2..1.0}, on every ladder rung, then fit scaling laws to the
+//! best-per-(N, M) results.
+
+pub mod grids;
+pub mod store;
+
+pub use grids::{grid_by_name, grid_names};
+pub use store::{run_id, SweepStore};
+
+use anyhow::Result;
+
+use crate::config::RepoConfig;
+use crate::coordinator::{run, RunConfig};
+use crate::runtime::{ModelRuntime, Runtime};
+
+/// Execute every run in the grid that is not already in the store.
+/// Writes results incrementally; safe to interrupt and re-invoke.
+pub fn execute_grid(
+    repo: &RepoConfig,
+    store: &mut SweepStore,
+    grid: &[RunConfig],
+    max_runs: Option<usize>,
+) -> Result<usize> {
+    let rt = Runtime::cpu()?;
+    let mut runtimes: std::collections::BTreeMap<String, ModelRuntime> =
+        std::collections::BTreeMap::new();
+    let mut done = 0usize;
+    let todo: Vec<&RunConfig> = grid
+        .iter()
+        .filter(|cfg| !store.contains(&run_id(cfg)))
+        .collect();
+    log::info!(
+        "grid: {} runs total, {} already done, {} to go",
+        grid.len(),
+        grid.len() - todo.len(),
+        todo.len()
+    );
+    for cfg in todo {
+        if let Some(cap) = max_runs {
+            if done >= cap {
+                break;
+            }
+        }
+        if !runtimes.contains_key(&cfg.model) {
+            runtimes.insert(
+                cfg.model.clone(),
+                ModelRuntime::load(rt.clone(), &repo.model_dir(&cfg.model))?,
+            );
+        }
+        let mr = &runtimes[&cfg.model];
+        let id = run_id(cfg);
+        match run(mr, &repo.optimizer, cfg) {
+            Ok(metrics) => {
+                log::info!(
+                    "[sweep] {id}: eval={:.4} ({} steps, {:.1}s)",
+                    metrics.final_eval_loss,
+                    metrics.steps,
+                    metrics.wall_secs
+                );
+                store.insert(&id, &metrics)?;
+                done += 1;
+            }
+            Err(e) => {
+                log::warn!("[sweep] {id} FAILED: {e:#}");
+            }
+        }
+    }
+    Ok(done)
+}

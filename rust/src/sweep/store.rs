@@ -1,0 +1,171 @@
+//! Resumable sweep result store: JSON-lines, one record per run,
+//! keyed by a deterministic run id derived from the full config.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{RunConfig, RunMetrics};
+use crate::util::json::Json;
+
+/// Deterministic, human-readable id for a run configuration.
+pub fn run_id(cfg: &RunConfig) -> String {
+    format!(
+        "{}_{}_h{}_b{}_lr{:.5}_eta{:.2}_ot{}_s{}",
+        cfg.model,
+        cfg.algo.label(),
+        cfg.sync_every,
+        cfg.global_batch_seqs,
+        cfg.inner_lr,
+        cfg.outer_lr,
+        cfg.overtrain,
+        cfg.seed
+    )
+}
+
+pub struct SweepStore {
+    path: PathBuf,
+    records: BTreeMap<String, RunMetrics>,
+}
+
+impl SweepStore {
+    /// Open (creating if absent) a JSON-lines store.
+    pub fn open(path: &Path) -> Result<SweepStore> {
+        let mut records = BTreeMap::new();
+        if path.is_file() {
+            let text = std::fs::read_to_string(path)?;
+            for (lineno, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let j = Json::parse(line)
+                    .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+                let id = j.str_of("id")?;
+                let metrics = RunMetrics::from_json(j.req("metrics")?)?;
+                records.insert(id, metrics);
+            }
+        } else if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(SweepStore {
+            path: path.to_path_buf(),
+            records,
+        })
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.records.contains_key(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Append one record (durable immediately — O_APPEND semantics).
+    pub fn insert(&mut self, id: &str, metrics: &RunMetrics) -> Result<()> {
+        let record = Json::obj(vec![
+            ("id", Json::str(id)),
+            ("metrics", metrics.to_json()),
+        ]);
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{}", record.to_string_compact())?;
+        self.records.insert(id.to_string(), metrics.clone());
+        Ok(())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &RunMetrics)> {
+        self.records.iter()
+    }
+
+    pub fn records(&self) -> impl Iterator<Item = &RunMetrics> {
+        self.records.values()
+    }
+
+    /// All records for a given (model, algo label) pair.
+    pub fn by_model_algo(&self, model: &str, algo: &str) -> Vec<&RunMetrics> {
+        self.records
+            .values()
+            .filter(|r| r.model == model && r.algo == algo)
+            .collect()
+    }
+
+    /// Best (lowest final eval loss) record matching a predicate.
+    pub fn best<F: Fn(&RunMetrics) -> bool>(&self, pred: F) -> Option<&RunMetrics> {
+        self.records
+            .values()
+            .filter(|r| pred(r) && r.final_eval_loss.is_finite())
+            .min_by(|a, b| a.final_eval_loss.partial_cmp(&b.final_eval_loss).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Algo;
+
+    fn metrics(model: &str, loss: f64) -> RunMetrics {
+        RunMetrics {
+            model: model.into(),
+            algo: "dp".into(),
+            replicas: 1,
+            sync_every: 0,
+            global_batch_tokens: 1024,
+            inner_lr: 1e-3,
+            outer_lr: 0.0,
+            overtrain: 1.0,
+            seed: 1,
+            param_count: 1000,
+            steps: 10,
+            tokens: 10240,
+            final_eval_loss: loss,
+            final_train_loss: loss,
+            eval_curve: vec![(10, loss)],
+            loss_curve: vec![(1, 6.0), (10, loss)],
+            downstream: vec![("cloze-long".into(), 0.5)],
+            outer_syncs: 0,
+            wall_secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn run_id_is_deterministic_and_distinct() {
+        let a = RunConfig::default();
+        let mut b = RunConfig::default();
+        assert_eq!(run_id(&a), run_id(&a));
+        b.inner_lr *= 2.0;
+        assert_ne!(run_id(&a), run_id(&b));
+        let mut c = RunConfig::default();
+        c.algo = Algo::DiLoCo { replicas: 2 };
+        assert_ne!(run_id(&a), run_id(&c));
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let dir = std::env::temp_dir().join(format!("sweep_test_{}", std::process::id()));
+        let path = dir.join("store.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = SweepStore::open(&path).unwrap();
+            s.insert("a", &metrics("m0", 3.5)).unwrap();
+            s.insert("b", &metrics("m1", 3.1)).unwrap();
+            assert_eq!(s.len(), 2);
+        }
+        let s = SweepStore::open(&path).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.contains("a"));
+        let best = s.best(|_| true).unwrap();
+        assert_eq!(best.model, "m1");
+        let rec = &s.by_model_algo("m0", "dp")[0];
+        assert_eq!(rec.downstream[0].0, "cloze-long");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

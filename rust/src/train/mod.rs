@@ -1,0 +1,4 @@
+//! Training-loop policies: LR schedule (warmup + cosine) and the
+//! paper's weight-decay rule lambda = 1/T.
+
+pub mod schedule;

@@ -1,0 +1,98 @@
+//! Learning-rate schedule and weight-decay policy (paper section 3):
+//! linear warmup then cosine decay to `final_frac` of peak, and
+//! AdamW weight decay lambda = 1/T (Wang & Aitchison 2024), where T is
+//! the run's total step count (which depends on batch size and token
+//! budget — hence computed here at run setup, not baked into HLO).
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub peak: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub final_frac: f64,
+}
+
+impl LrSchedule {
+    /// Paper setup: 1000 warmup steps, cosine to 5% of peak. Mini-scale
+    /// runs are much shorter than the paper's, so warmup is
+    /// min(cap, frac*T) (DESIGN.md §3 substitution table).
+    pub fn new(peak: f64, total_steps: usize, warmup_frac: f64,
+               warmup_cap: usize, final_frac: f64) -> LrSchedule {
+        let warmup = ((total_steps as f64 * warmup_frac) as usize)
+            .min(warmup_cap)
+            .max(1);
+        LrSchedule {
+            peak,
+            warmup_steps: warmup,
+            total_steps: total_steps.max(1),
+            final_frac,
+        }
+    }
+
+    /// LR for 1-based step `t` in [1, total_steps].
+    pub fn lr(&self, t: usize) -> f64 {
+        let t = t.max(1);
+        if t <= self.warmup_steps {
+            return self.peak * t as f64 / self.warmup_steps as f64;
+        }
+        if t >= self.total_steps {
+            return self.peak * self.final_frac;
+        }
+        let progress = (t - self.warmup_steps) as f64
+            / (self.total_steps - self.warmup_steps) as f64;
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+        self.peak * (self.final_frac + (1.0 - self.final_frac) * cos)
+    }
+}
+
+/// lambda = 1/T (decoupled weight decay, per the paper).
+pub fn weight_decay(total_steps: usize) -> f64 {
+    1.0 / total_steps.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> LrSchedule {
+        LrSchedule::new(1e-2, 1000, 0.1, 1000, 0.05)
+    }
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = sched();
+        assert_eq!(s.warmup_steps, 100);
+        assert!((s.lr(50) - 0.5 * s.peak).abs() < 1e-12);
+        assert!((s.lr(100) - s.peak).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decays_to_final_frac() {
+        let s = sched();
+        assert!((s.lr(1000) - 0.05 * s.peak).abs() < 1e-9);
+        assert!(s.lr(1_000_000) == 0.05 * s.peak);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = sched();
+        let mut prev = s.lr(s.warmup_steps);
+        for t in s.warmup_steps + 1..=s.total_steps {
+            let cur = s.lr(t);
+            assert!(cur <= prev + 1e-15, "t={t}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn warmup_cap_applies() {
+        let s = LrSchedule::new(1e-2, 100_000, 0.1, 1000, 0.05);
+        assert_eq!(s.warmup_steps, 1000);
+    }
+
+    #[test]
+    fn wd_is_inverse_t() {
+        assert_eq!(weight_decay(200), 0.005);
+        assert_eq!(weight_decay(0), 1.0);
+    }
+}

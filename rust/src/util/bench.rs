@@ -1,0 +1,129 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! `[[bench]] harness = false` targets call [`Bencher::run`] per case:
+//! warmup, then timed iterations until a wall budget or max-iter cap,
+//! reporting min/median/p95/mean. Output is a fixed-width table so
+//! `cargo bench | tee bench_output.txt` reads like a report.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub mean: Duration,
+}
+
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 2,
+            max_iters: 50,
+            budget: Duration::from_secs(5),
+            results: Vec::new(),
+        }
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+impl Bencher {
+    pub fn new(budget_secs: f64) -> Bencher {
+        Bencher {
+            budget: Duration::from_secs_f64(budget_secs),
+            ..Default::default()
+        }
+    }
+
+    /// Time `f` and record a row. The closure should return something
+    /// observable to keep the optimizer honest; its value is black-boxed.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < 3 || start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: n,
+            min: samples[0],
+            median: samples[n / 2],
+            p95: samples[(n as f64 * 0.95) as usize % n],
+            mean: total / n as u32,
+        });
+    }
+
+    /// Print the result table; call once at the end of a bench binary.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>6} {:>12} {:>12} {:>12} {:>12}",
+            "benchmark", "iters", "min", "median", "p95", "mean"
+        );
+        for r in &self.results {
+            println!(
+                "{:<44} {:>6} {:>12} {:>12} {:>12} {:>12}",
+                r.name,
+                r.iters,
+                fmt_dur(r.min),
+                fmt_dur(r.median),
+                fmt_dur(r.p95),
+                fmt_dur(r.mean)
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let mut b = Bencher::new(0.05);
+        b.run("noop", || 1 + 1);
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].iters >= 3);
+    }
+
+    #[test]
+    fn format_durations() {
+        assert_eq!(fmt_dur(Duration::from_nanos(10)), "10 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,40 @@
+//! Shared substrates: JSON, RNG, statistics, bench harness,
+//! property-testing kit, logging. These stand in for serde/rand/
+//! criterion/proptest, which are unavailable in the offline sandbox
+//! (DESIGN.md section 7).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Tiny stderr logger honoring RUST_LOG=debug|info|warn|error.
+pub struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _: &log::Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:<5}] {}", record.level(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; safe to call repeatedly.
+pub fn init_logging() {
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(level));
+}

@@ -1,0 +1,93 @@
+//! Property-testing kit (proptest is unavailable offline).
+//!
+//! A seeded case runner: generate `cases` random inputs from a closure
+//! over [`Rng`], assert the property on each, and on failure report the
+//! seed + case index so the exact case replays deterministically.
+//! Used across coordinator/scaling/json/data tests.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `property` on `cases` generated inputs. Panics (with replay info)
+/// on the first failing case.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut property: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let root = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = root.child(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f64s are close (absolute + relative).
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol}, scaled {})", tol * scale))
+    }
+}
+
+/// Convenience: assert slices are element-wise close.
+pub fn all_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("index {i}: {x} != {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(
+            1,
+            64,
+            |rng| rng.below(100),
+            |&v| {
+                if v < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        check(2, 64, |rng| rng.below(10), |&v| {
+            if v < 5 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 5"))
+            }
+        });
+    }
+
+    #[test]
+    fn close_scales() {
+        assert!(close(1e9, 1e9 + 10.0, 1e-6).is_ok());
+        assert!(close(1.0, 1.1, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Small numerical/statistics substrate: summaries, linear least squares
+//! (normal equations with multiple regressors), quantiles. Used by the
+//! scaling-law fitters and the bench harness.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// p-quantile (0..=1) by linear interpolation on a copy.
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (idx - lo as f64)
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Ordinary least squares: finds beta minimizing ||X beta - y||^2,
+/// where `rows[i]` is the i-th row of X (len = k). Solves the k x k
+/// normal equations by Gaussian elimination with partial pivoting.
+/// Returns None if the system is singular.
+pub fn least_squares(rows: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(rows.len(), y.len());
+    if rows.is_empty() {
+        return None;
+    }
+    let k = rows[0].len();
+    // Build X^T X and X^T y.
+    let mut a = vec![vec![0.0; k]; k];
+    let mut b = vec![0.0; k];
+    for (row, &yi) in rows.iter().zip(y) {
+        assert_eq!(row.len(), k);
+        for i in 0..k {
+            b[i] += row[i] * yi;
+            for j in 0..k {
+                a[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    solve_linear(&mut a, &mut b)
+}
+
+/// Solve A x = b in place; returns None if singular.
+pub fn solve_linear(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // partial pivot
+        let mut pivot = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[pivot][col].abs() {
+                pivot = r;
+            }
+        }
+        if a[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        let div = a[col][col];
+        for j in col..n {
+            a[col][j] /= div;
+        }
+        b[col] /= div;
+        for r in 0..n {
+            if r != col && a[r][col] != 0.0 {
+                let f = a[r][col];
+                for j in col..n {
+                    a[r][j] -= f * a[col][j];
+                }
+                b[r] -= f * b[col];
+            }
+        }
+    }
+    Some(b.to_vec())
+}
+
+/// Simple linear regression y = a + b x; returns (a, b).
+pub fn linreg(x: &[f64], y: &[f64]) -> Option<(f64, f64)> {
+    let rows: Vec<Vec<f64>> = x.iter().map(|&xi| vec![1.0, xi]).collect();
+    let beta = least_squares(&rows, y)?;
+    Some((beta[0], beta[1]))
+}
+
+/// Fit a quadratic y = c0 + c1 x + c2 x^2; returns [c0, c1, c2].
+pub fn quadfit(x: &[f64], y: &[f64]) -> Option<Vec<f64>> {
+    let rows: Vec<Vec<f64>> = x.iter().map(|&xi| vec![1.0, xi, xi * xi]).collect();
+    least_squares(&rows, y)
+}
+
+/// Huber loss with parameter delta (the paper's parametric-fit objective).
+pub fn huber(delta: f64, r: f64) -> f64 {
+    let a = r.abs();
+    if a <= delta {
+        0.5 * r * r
+    } else {
+        delta * (a - 0.5 * delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+    }
+
+    #[test]
+    fn linreg_exact() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = linreg(&x, &y).unwrap();
+        assert!((a - 1.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn least_squares_two_regressors() {
+        // y = 2 + 3u - 0.5v on a grid, recovered exactly.
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for u in 0..4 {
+            for v in 0..4 {
+                rows.push(vec![1.0, u as f64, v as f64]);
+                y.push(2.0 + 3.0 * u as f64 - 0.5 * v as f64);
+            }
+        }
+        let beta = least_squares(&rows, &y).unwrap();
+        for (got, want) in beta.iter().zip([2.0, 3.0, -0.5]) {
+            assert!((got - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn singular_detected() {
+        let rows = vec![vec![1.0, 2.0], vec![2.0, 4.0], vec![3.0, 6.0]];
+        let y = vec![1.0, 2.0, 3.0];
+        assert!(least_squares(&rows, &y).is_none());
+    }
+
+    #[test]
+    fn quad_exact() {
+        let x: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&x| 1.0 - 2.0 * x + 0.5 * x * x).collect();
+        let c = quadfit(&x, &y).unwrap();
+        assert!((c[0] - 1.0).abs() < 1e-9);
+        assert!((c[1] + 2.0).abs() < 1e-9);
+        assert!((c[2] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn huber_regimes() {
+        assert_eq!(huber(1.0, 0.5), 0.125);
+        assert_eq!(huber(1.0, 2.0), 1.5); // delta*(|r|-delta/2)
+    }
+}

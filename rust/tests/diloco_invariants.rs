@@ -1,0 +1,141 @@
+//! Coordinator invariants that pin Algorithm 1's semantics, exercised
+//! through the full runtime path (real artifacts, real PJRT execution)
+//! on tiny token budgets. Skipped gracefully when artifacts are absent.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use diloco::config::RepoConfig;
+use diloco::coordinator::{run, Algo, RunConfig};
+use diloco::runtime::{ModelRuntime, Runtime};
+
+fn setup() -> Option<(RepoConfig, Rc<Runtime>)> {
+    let repo = RepoConfig::load(Path::new(env!("CARGO_MANIFEST_DIR"))).ok()?;
+    if !repo.model_dir("m0").join("manifest.json").is_file() {
+        eprintln!("skipping: artifacts missing (make artifacts)");
+        return None;
+    }
+    Some((repo, Runtime::cpu().ok()?))
+}
+
+fn quick(algo: Algo, seed: u64) -> RunConfig {
+    RunConfig {
+        algo,
+        global_batch_seqs: 8,
+        sync_every: 5,
+        // multiple of the batch (8*64=512 tokens) so step counts are exact
+        token_budget: Some(20_480),
+        inner_lr: 4e-3,
+        outer_lr: 1.0,
+        seed,
+        eval_tokens: 4096,
+        log_every: 1000,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn determinism_same_seed_same_loss() {
+    let Some((repo, rt)) = setup() else { return };
+    let mr = ModelRuntime::load(rt, &repo.model_dir("m0")).unwrap();
+    let a = run(&mr, &repo.optimizer, &quick(Algo::DiLoCo { replicas: 2 }, 3)).unwrap();
+    let b = run(&mr, &repo.optimizer, &quick(Algo::DiLoCo { replicas: 2 }, 3)).unwrap();
+    assert_eq!(a.final_eval_loss, b.final_eval_loss);
+    assert_eq!(a.final_train_loss, b.final_train_loss);
+    let c = run(&mr, &repo.optimizer, &quick(Algo::DiLoCo { replicas: 2 }, 4)).unwrap();
+    assert_ne!(a.final_eval_loss, c.final_eval_loss);
+}
+
+#[test]
+fn diloco_m1_h1_eta1_mu0_equals_data_parallel() {
+    // With M=1, H=1, eta=1 and zero outer momentum, the outer step sets
+    // global = replica exactly, so DiLoCo degenerates to Data-Parallel
+    // (paper section 2.2's comparison, with the momentum term removed).
+    let Some((repo, rt)) = setup() else { return };
+    let mut policy = repo.optimizer.clone();
+    policy.outer_momentum = 0.0;
+    let mr = ModelRuntime::load(rt, &repo.model_dir("m0")).unwrap();
+    let mut dl = quick(Algo::DiLoCo { replicas: 1 }, 7);
+    dl.sync_every = 1;
+    dl.outer_lr = 1.0;
+    let dp = quick(Algo::DataParallel, 7);
+    let a = run(&mr, &policy, &dl).unwrap();
+    let b = run(&mr, &policy, &dp).unwrap();
+    // Not bit-exact: the outer step computes theta - (theta - r) in f32,
+    // which can differ from r by an ulp per sync; tolerance covers the
+    // accumulated drift over the run.
+    assert!(
+        (a.final_eval_loss - b.final_eval_loss).abs() < 2e-3,
+        "{} vs {}",
+        a.final_eval_loss,
+        b.final_eval_loss
+    );
+}
+
+#[test]
+fn replica_count_partitions_batch() {
+    // Same global batch across M: each setup consumes the same number
+    // of tokens and steps (Algorithm 1's accounting).
+    let Some((repo, rt)) = setup() else { return };
+    let mr = ModelRuntime::load(rt, &repo.model_dir("m0")).unwrap();
+    let mut metrics = Vec::new();
+    for m in [1usize, 2, 4] {
+        let cfg = quick(Algo::DiLoCo { replicas: m }, 11);
+        metrics.push(run(&mr, &repo.optimizer, &cfg).unwrap());
+    }
+    for w in metrics.windows(2) {
+        assert_eq!(w[0].steps, w[1].steps);
+        assert_eq!(w[0].tokens, w[1].tokens);
+        assert_eq!(w[0].global_batch_tokens, w[1].global_batch_tokens);
+    }
+}
+
+#[test]
+fn outer_sync_count_follows_cadence() {
+    let Some((repo, rt)) = setup() else { return };
+    let mr = ModelRuntime::load(rt, &repo.model_dir("m0")).unwrap();
+    let mut cfg = quick(Algo::DiLoCo { replicas: 2 }, 5);
+    cfg.sync_every = 7;
+    let m = run(&mr, &repo.optimizer, &cfg).unwrap();
+    // floor(T/7) cadence syncs plus a final sync if T % 7 != 0
+    let expected = m.steps / 7 + usize::from(m.steps % 7 != 0);
+    assert_eq!(m.outer_syncs, expected, "steps={}", m.steps);
+}
+
+#[test]
+fn overtraining_multiplies_budget() {
+    let Some((repo, rt)) = setup() else { return };
+    let mr = ModelRuntime::load(rt, &repo.model_dir("m0")).unwrap();
+    let mut cfg = quick(Algo::DataParallel, 5);
+    cfg.overtrain = 2.0;
+    let m2 = run(&mr, &repo.optimizer, &cfg).unwrap();
+    cfg.overtrain = 1.0;
+    let m1 = run(&mr, &repo.optimizer, &cfg).unwrap();
+    assert_eq!(m2.steps, 2 * m1.steps);
+}
+
+#[test]
+fn rejects_indivisible_batch() {
+    let Some((repo, rt)) = setup() else { return };
+    let mr = ModelRuntime::load(rt, &repo.model_dir("m0")).unwrap();
+    let mut cfg = quick(Algo::DiLoCo { replicas: 4 }, 5);
+    cfg.global_batch_seqs = 6; // not divisible by 4
+    assert!(run(&mr, &repo.optimizer, &cfg).is_err());
+}
+
+#[test]
+fn eval_loss_decreases_with_budget() {
+    let Some((repo, rt)) = setup() else { return };
+    let mr = ModelRuntime::load(rt, &repo.model_dir("m0")).unwrap();
+    let mut cfg = quick(Algo::DataParallel, 21);
+    cfg.token_budget = Some(8_000);
+    let small = run(&mr, &repo.optimizer, &cfg).unwrap();
+    cfg.token_budget = Some(120_000);
+    let big = run(&mr, &repo.optimizer, &cfg).unwrap();
+    assert!(
+        big.final_eval_loss < small.final_eval_loss - 0.05,
+        "{} vs {}",
+        big.final_eval_loss,
+        small.final_eval_loss
+    );
+}

@@ -1,0 +1,219 @@
+//! Cross-module property tests (seeded kit in util::prop; proptest is
+//! unavailable offline). These pin randomized invariants that the unit
+//! tests only spot-check.
+
+use diloco::netsim::walltime::{walltime, WalltimeAlgo, WalltimeInput};
+use diloco::netsim::{HIGH, LOW, MEDIUM};
+use diloco::runtime::decompose_micro;
+use diloco::scaling::optimal_batch_log2;
+use diloco::train::schedule::LrSchedule;
+use diloco::util::json::Json;
+use diloco::util::prop::{check, close};
+use diloco::util::rng::Rng;
+
+#[test]
+fn prop_schedule_bounded_and_peaks_at_warmup() {
+    check(
+        0x5CED,
+        128,
+        |rng: &mut Rng| {
+            let peak = rng.range_f64(1e-5, 1.0);
+            let total = 2 + rng.below(5000) as usize;
+            (peak, total)
+        },
+        |&(peak, total)| {
+            let s = LrSchedule::new(peak, total, 0.1, 1000, 0.05);
+            let mut max_seen: f64 = 0.0;
+            for t in 1..=total {
+                let lr = s.lr(t);
+                if !(lr > 0.0 && lr <= peak * (1.0 + 1e-12)) {
+                    return Err(format!("lr {lr} out of (0, {peak}] at t={t}"));
+                }
+                max_seen = max_seen.max(lr);
+            }
+            close(max_seen, peak, 1e-9)?;
+            close(s.lr(total), peak * 0.05, 1e-9)
+        },
+    );
+}
+
+#[test]
+fn prop_decompose_micro_sums_to_total() {
+    check(
+        0xDEC0,
+        256,
+        |rng: &mut Rng| {
+            // sizes like the real manifests: {8,1} or {8,4,1} etc.
+            let total = rng.below(200) as usize;
+            let sizes = match rng.below(3) {
+                0 => vec![8usize, 1],
+                1 => vec![8usize, 4, 1],
+                _ => vec![16usize, 8, 1],
+            };
+            (total, sizes)
+        },
+        |(total, sizes)| {
+            let plan = decompose_micro(*total, sizes).map_err(|e| e.to_string())?;
+            if plan.iter().sum::<usize>() != *total {
+                return Err(format!("plan {plan:?} != total {total}"));
+            }
+            // greedy: plan must be non-increasing
+            if plan.windows(2).any(|w| w[1] > w[0]) {
+                return Err(format!("plan not sorted: {plan:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth >= 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => {
+                // mix of integers, fractions, negatives, exponents
+                let v = match rng.below(3) {
+                    0 => rng.below(1_000_000) as f64,
+                    1 => rng.normal() * 1e-3,
+                    _ => -(rng.f64() * 1e12),
+                };
+                Json::Num(v)
+            }
+            3 => {
+                let chars = ["a", "\"", "\\", "\n", "é", "😀", "\t", "x", "\u{1}"];
+                let s: String = (0..rng.below(12))
+                    .map(|_| chars[rng.below(chars.len() as u64) as usize])
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr(
+                (0..rng.below(5))
+                    .map(|_| random_value(rng, depth + 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(
+        0x15A0,
+        256,
+        |rng: &mut Rng| random_value(rng, 0),
+        |v| {
+            for text in [v.to_string_compact(), v.to_string_pretty()] {
+                let back = Json::parse(&text).map_err(|e| e.to_string())?;
+                if &back != v {
+                    return Err(format!("roundtrip mismatch: {v} -> {text} -> {back}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batch_interpolation_within_grid() {
+    check(
+        0xBA7C,
+        128,
+        |rng: &mut Rng| {
+            let k = 3 + rng.below(4) as usize;
+            let opt = rng.range_f64(9.0, 9.0 + k as f64 - 1.0);
+            let pts: Vec<(f64, f64)> = (0..k)
+                .map(|i| {
+                    let l = 9.0 + i as f64;
+                    (2f64.powf(l), (l - opt) * (l - opt) + 2.0)
+                })
+                .collect();
+            (pts, opt)
+        },
+        |(pts, opt)| {
+            let got = optimal_batch_log2(pts).map_err(|e| e.to_string())?;
+            close(got, *opt, 1e-6)?;
+            let lo = pts.first().unwrap().0.log2();
+            let hi = pts.last().unwrap().0.log2();
+            if got < lo - 1e-9 || got > hi + 1e-9 {
+                return Err(format!("{got} outside [{lo}, {hi}]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_walltime_diloco_comm_monotone_in_h_and_bandwidth() {
+    check(
+        0x7A11,
+        96,
+        |rng: &mut Rng| {
+            let params = rng.range_f64(1e7, 1e11);
+            let batch = 2f64.powi(14 + rng.below(8) as i32);
+            let m = [2usize, 4, 8][rng.below(3) as usize];
+            (params, batch, m)
+        },
+        |&(params, batch, m)| {
+            let mk = |h: usize, net| {
+                walltime(&WalltimeInput {
+                    algo: WalltimeAlgo::DiLoCo {
+                        replicas: m,
+                        sync_every: h,
+                    },
+                    params,
+                    tokens: 20.0 * params,
+                    batch_tokens: batch,
+                    cross_dc: net,
+                })
+            };
+            // comm decreases as H grows
+            let mut prev = f64::INFINITY;
+            for h in [1usize, 10, 100, 1000] {
+                let c = mk(h, LOW).comm_s;
+                if c > prev + 1e-9 {
+                    return Err(format!("comm not monotone in H at {h}"));
+                }
+                prev = c;
+            }
+            // comm decreases with better networks
+            let (l, m_, h) = (mk(30, LOW), mk(30, MEDIUM), mk(30, HIGH));
+            if !(l.comm_s >= m_.comm_s && m_.comm_s >= h.comm_s) {
+                return Err("comm not monotone in bandwidth".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_utilization_bounded_and_monotone() {
+    use diloco::netsim::utilization::{SimAlgo, SimModel, ARCHETYPES};
+    check(
+        0xC0,
+        96,
+        |rng: &mut Rng| {
+            let arch = rng.below(3) as usize;
+            let h = [1usize, 10, 50, 100, 300][rng.below(5) as usize];
+            (arch, h)
+        },
+        |&(arch, h)| {
+            let m = SimModel::default();
+            let a = &ARCHETYPES[arch];
+            let mut prev = 0.0;
+            for w in diloco::netsim::utilization::bandwidth_grid_gbps() {
+                let cu = m.utilization(a, SimAlgo::DiLoCo { sync_every: h }, w);
+                if !(0.0..=1.0).contains(&cu) {
+                    return Err(format!("CU {cu} out of [0,1]"));
+                }
+                if cu + 1e-12 < prev {
+                    return Err("CU not monotone in bandwidth".into());
+                }
+                prev = cu;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,205 @@
+//! Integration: the rust runtime loads python-lowered HLO artifacts,
+//! executes them on PJRT CPU, and the numerics behave like a language
+//! model trainer (init deterministic, loss ~ ln(vocab) at init, loss
+//! decreases when training on a repeated batch, micro-batch
+//! accumulation consistent with the fused step).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use diloco::runtime::{
+    f32_scalar, i32_literal, scalar_f32, u32_scalar, HostTensor, ModelRuntime, Runtime,
+};
+
+fn model_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/m0")
+}
+
+fn have_artifacts() -> bool {
+    model_dir().join("manifest.json").is_file()
+}
+
+fn load_m0() -> (Rc<Runtime>, ModelRuntime) {
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let mr = ModelRuntime::load(rt.clone(), &model_dir()).expect("manifest");
+    (rt, mr)
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (_rt, mr) = load_m0();
+    assert_eq!(mr.manifest.model.name, "m0");
+    assert_eq!(mr.n_leaves(), 10 * mr.manifest.model.layers + 2);
+    assert_eq!(mr.manifest.model.vocab, 512);
+}
+
+#[test]
+fn init_is_deterministic_and_executes() {
+    if !have_artifacts() {
+        return;
+    }
+    let (_rt, mr) = load_m0();
+    let init = mr.artifact("init").unwrap();
+    let seed = u32_scalar(7);
+    let a = init.call(&[&seed]).unwrap();
+    let b = init.call(&[&seed]).unwrap();
+    assert_eq!(a.len(), mr.n_leaves());
+    for (x, y) in a.iter().zip(&b) {
+        let hx = HostTensor::from_literal(x).unwrap();
+        let hy = HostTensor::from_literal(y).unwrap();
+        assert_eq!(hx, hy);
+    }
+    // embed leaf is first, shape [512, d_model]
+    let embed = HostTensor::from_literal(&a[0]).unwrap();
+    assert_eq!(embed.shape[0], 512);
+}
+
+#[test]
+fn train_step_reduces_loss_on_repeated_batch() {
+    if !have_artifacts() {
+        return;
+    }
+    let (_rt, mr) = load_m0();
+    let n = mr.n_leaves();
+    let init = mr.artifact("init").unwrap();
+    let ts = mr.artifact("train_step").unwrap();
+    let params = init.call(&[&u32_scalar(0)]).unwrap();
+    let zeros: Vec<xla::Literal> = mr
+        .manifest
+        .params
+        .iter()
+        .map(|s| HostTensor::zeros(&s.shape).to_literal().unwrap())
+        .collect();
+
+    let mb = mr.manifest.train_step_batch();
+    let seq = mr.manifest.model.seq_len;
+    // fixed pseudo-random batch
+    let tokens: Vec<i32> = (0..mb * seq)
+        .map(|i| ((i * 2654435761usize) % 509) as i32)
+        .collect();
+    let tok_lit = i32_literal(&[mb, seq], &tokens).unwrap();
+
+    let zeros2: Vec<xla::Literal> = zeros
+        .iter()
+        .map(|z| HostTensor::from_literal(z).unwrap().to_literal().unwrap())
+        .collect();
+    let mut state: Vec<xla::Literal> = params
+        .into_iter()
+        .chain(zeros2)
+        .chain(zeros)
+        .collect();
+    assert_eq!(state.len(), 3 * n);
+
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 0..30 {
+        let step_l = f32_scalar(step as f32 + 1.0);
+        let lr = f32_scalar(3e-3);
+        let wd = f32_scalar(1e-4);
+        let mut args: Vec<&xla::Literal> = state.iter().collect();
+        args.push(&tok_lit);
+        args.push(&step_l);
+        args.push(&lr);
+        args.push(&wd);
+        let out = ts.call(&args).unwrap();
+        assert_eq!(out.len(), 3 * n + 2);
+        let loss = scalar_f32(&out[3 * n]).unwrap();
+        let gnorm = scalar_f32(&out[3 * n + 1]).unwrap();
+        assert!(loss.is_finite() && gnorm.is_finite());
+        if first.is_none() {
+            first = Some(loss);
+            // init loss should be near ln(512) = 6.24
+            assert!((loss - 6.24).abs() < 1.0, "init loss {loss}");
+        }
+        last = loss;
+        state = out.into_iter().take(3 * n).collect();
+    }
+    assert!(
+        last < first.unwrap() - 0.5,
+        "loss did not decrease: {} -> {last}",
+        first.unwrap()
+    );
+}
+
+#[test]
+fn grad_accumulation_matches_fused_step() {
+    if !have_artifacts() {
+        return;
+    }
+    let (_rt, mr) = load_m0();
+    let n = mr.n_leaves();
+    let init = mr.artifact("init").unwrap();
+    let gs8 = mr.artifact("grad_step_mb8").unwrap();
+    let gs1 = mr.artifact("grad_step_mb1").unwrap();
+    let acc = mr.artifact("grad_acc").unwrap();
+    let params = init.call(&[&u32_scalar(3)]).unwrap();
+    let seq = mr.manifest.model.seq_len;
+
+    let tokens: Vec<i32> = (0..8 * seq).map(|i| ((i * 7 + 3) % 512) as i32).collect();
+    let t8 = i32_literal(&[8, seq], &tokens).unwrap();
+
+    // full batch grad
+    let mut args: Vec<&xla::Literal> = params.iter().collect();
+    args.push(&t8);
+    let full = gs8.call(&args).unwrap();
+
+    // accumulate 8 single-sequence micro grads with weight 1/8 each
+    let mut acc_state: Option<Vec<xla::Literal>> = None;
+    for i in 0..8 {
+        let t1 = i32_literal(&[1, seq], &tokens[i * seq..(i + 1) * seq]).unwrap();
+        let mut a: Vec<&xla::Literal> = params.iter().collect();
+        a.push(&t1);
+        let g = gs1.call(&a).unwrap();
+        let g: Vec<xla::Literal> = g.into_iter().take(n).collect();
+        acc_state = Some(match acc_state {
+            None => g,
+            Some(prev) => {
+                let wa = f32_scalar(1.0);
+                let wb = f32_scalar(1.0);
+                let mut args: Vec<&xla::Literal> =
+                    prev.iter().chain(g.iter()).collect();
+                args.push(&wa);
+                args.push(&wb);
+                acc.call(&args).unwrap()
+            }
+        });
+    }
+    let summed = acc_state.unwrap();
+    for (i, (got, want)) in summed.iter().zip(full.iter().take(n)).enumerate() {
+        let g = HostTensor::from_literal(got).unwrap();
+        let w = HostTensor::from_literal(want).unwrap();
+        for (a, b) in g.data.iter().zip(&w.data) {
+            let mean_micro = a / 8.0;
+            assert!(
+                (mean_micro - b).abs() <= 1e-5 + 2e-4 * b.abs().max(1e-3),
+                "leaf {i}: {mean_micro} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn eval_step_counts_targets() {
+    if !have_artifacts() {
+        return;
+    }
+    let (_rt, mr) = load_m0();
+    let init = mr.artifact("init").unwrap();
+    let ev = mr.artifact("eval_step").unwrap();
+    let params = init.call(&[&u32_scalar(0)]).unwrap();
+    let eb = mr.manifest.eval_batch;
+    let seq = mr.manifest.model.seq_len;
+    let tokens: Vec<i32> = (0..eb * seq).map(|i| (i % 512) as i32).collect();
+    let t = i32_literal(&[eb, seq], &tokens).unwrap();
+    let mut args: Vec<&xla::Literal> = params.iter().collect();
+    args.push(&t);
+    let out = ev.call(&args).unwrap();
+    let sum_nll = scalar_f32(&out[0]).unwrap();
+    let count = scalar_f32(&out[1]).unwrap();
+    assert_eq!(count as usize, eb * (seq - 1));
+    assert!(sum_nll > 0.0);
+}
