@@ -1,6 +1,13 @@
-//! Hot-path benchmarks (deliverable e): the PJRT execution path the
-//! coordinator drives every inner step, measured at each layer so the
-//! perf pass in EXPERIMENTS.md §Perf has precise before/after numbers.
+//! Hot-path benchmarks: the PJRT execution path the coordinator drives
+//! every inner step, plus the flat-bus outer-sync path it drives every
+//! H steps, measured at each layer so perf passes have precise
+//! before/after numbers.
+//!
+//! The PJRT cases need lowered artifacts (`make artifacts`) and are
+//! skipped without them; the outer-sync / broadcast cases run on
+//! synthetic m0/m2-shaped layouts regardless, so every environment
+//! records a perf trajectory. Results are printed as a table and
+//! written to `BENCH_hot_path.json` (machine-readable, exact ns).
 //!
 //! Run: cargo bench (harness=false; criterion unavailable offline).
 
@@ -8,20 +15,168 @@ use std::path::Path;
 use std::rc::Rc;
 
 use diloco::config::RepoConfig;
-use diloco::coordinator::{outer_gradient, OuterOpt};
+use diloco::coordinator::outer_opt::{acc_add, acc_finish, scalar_ref};
+use diloco::coordinator::{OuterOpt, OuterSync};
 use diloco::data::synthetic::{CorpusSpec, TokenStream};
-use diloco::runtime::{f32_scalar, i32_literal, u32_scalar, HostTensor, ModelRuntime, Runtime};
+use diloco::runtime::{
+    f32_scalar, i32_literal, u32_scalar, FlatLayout, FlatParams, HostTensor, ModelRuntime,
+    Runtime,
+};
 use diloco::util::bench::Bencher;
+use diloco::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let repo = RepoConfig::load(Path::new(env!("CARGO_MANIFEST_DIR")))?;
-    if !repo.model_dir("m0").join("manifest.json").is_file() {
-        println!("bench_hot_path: artifacts missing; run `make artifacts`");
-        return Ok(());
+/// The manifest leaf shapes of a mini-ladder rung (mirrors
+/// python/compile/configs.py param_specs; head_dim 16, mlp_ratio 4,
+/// vocab 512 from configs/models.json).
+fn model_shapes(layers: usize, d: usize, heads: usize) -> Vec<Vec<usize>> {
+    let (dh, vocab, f) = (16usize, 512usize, 4 * d);
+    let mut s = vec![vec![vocab, d]];
+    for _ in 0..layers {
+        s.push(vec![d]);
+        s.push(vec![d, heads * dh]);
+        s.push(vec![d, heads * dh]);
+        s.push(vec![d, heads * dh]);
+        s.push(vec![heads * dh, d]);
+        s.push(vec![dh]);
+        s.push(vec![dh]);
+        s.push(vec![d]);
+        s.push(vec![d, f]);
+        s.push(vec![f, d]);
     }
-    let rt = Runtime::cpu()?;
-    let mut b = Bencher::new(4.0);
+    s.push(vec![d]);
+    s
+}
 
+fn randn_params(layout: &Rc<FlatLayout>, seed: u64) -> FlatParams {
+    let mut rng = Rng::new(seed);
+    let mut fp = FlatParams::zeros(layout);
+    for x in fp.data_mut() {
+        *x = rng.normal() as f32 * 0.02;
+    }
+    fp
+}
+
+/// Flat-bus outer sync + broadcast cases for one ladder rung.
+fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Rc<FlatLayout>) {
+    let n = layout.n_leaves();
+    let pristine = randn_params(layout, 7);
+    let host: Vec<HostTensor> = pristine.to_host();
+
+    // -- scalar oracle (the frozen seed implementation, M=2) --
+    {
+        let leaves: Vec<Vec<f32>> = (0..n).map(|l| pristine.leaf(l).to_vec()).collect();
+        let replicas: Vec<Vec<Vec<f32>>> = vec![leaves.clone(), leaves.clone()];
+        let mut opt = scalar_ref::ScalarOuterOpt::new(0.8, 0.9);
+        b.run(&format!("{label}/outer sync scalar-oracle (M=2)"), || {
+            let mut g = leaves.clone();
+            let delta = scalar_ref::outer_gradient(&g, &replicas);
+            opt.step_subset(&mut g, &delta, |_| true);
+            g
+        });
+    }
+
+    // -- flat bus, preallocated arenas (M in {2, 8}) --
+    for m in [2usize, 8] {
+        let replicas: Vec<FlatParams> = (1..=m as u64)
+            .map(|s| randn_params(layout, 100 + s))
+            .collect();
+        let mut global = pristine.clone();
+        let mut acc = FlatParams::zeros(layout);
+        let full = layout.full_range();
+        let mut opt = OuterOpt::new(0.8, 0.9);
+        b.run(&format!("{label}/outer sync: delta + Nesterov (M={m})"), || {
+            // reset global (the scalar case pays an analogous clone)
+            global.data_mut().copy_from_slice(pristine.data());
+            for r in &full {
+                acc.data_mut()[r.clone()].fill(0.0);
+            }
+            for rep in &replicas {
+                acc_add(acc.data_mut(), rep.data());
+            }
+            acc_finish(acc.data_mut(), pristine.data(), m as f32);
+            opt.step_ranges(&mut global, &acc, &full);
+            global.data()[0]
+        });
+    }
+
+    // -- streaming fragment (P=4): one fragment's ranges only --
+    {
+        let fragments = 4usize;
+        let replicas: Vec<FlatParams> =
+            (1..=2u64).map(|s| randn_params(layout, 200 + s)).collect();
+        let mut global = pristine.clone();
+        let mut acc = FlatParams::zeros(layout);
+        let ranges = layout.fragment_ranges(fragments, 1);
+        let mut opt = OuterOpt::new(0.8, 0.9);
+        b.run(
+            &format!("{label}/outer sync: streaming fragment (P={fragments}, M=2)"),
+            || {
+                global.data_mut().copy_from_slice(pristine.data());
+                for r in &ranges {
+                    acc.data_mut()[r.clone()].fill(0.0);
+                }
+                for rep in &replicas {
+                    for r in &ranges {
+                        acc_add(&mut acc.data_mut()[r.clone()], &rep.data()[r.clone()]);
+                    }
+                }
+                for r in &ranges {
+                    acc_finish(
+                        &mut acc.data_mut()[r.clone()],
+                        &pristine.data()[r.clone()],
+                        2.0,
+                    );
+                }
+                opt.step_ranges(&mut global, &acc, &ranges);
+                global.data()[0]
+            },
+        );
+    }
+
+    // -- end-to-end sync through the bus (literals in and out, M=2) --
+    {
+        let init_lits: Vec<Rc<xla::Literal>> = (0..n)
+            .map(|l| Rc::new(pristine.leaf_literal(l).unwrap()))
+            .collect();
+        let mut sync = OuterSync::new(Rc::clone(layout), &host, init_lits, 0.8, 0.9, 1)
+            .expect("bench sync setup");
+        let rep_lits: Vec<Vec<Rc<xla::Literal>>> = (0..2)
+            .map(|_| {
+                (0..n)
+                    .map(|l| Rc::new(pristine.leaf_literal(l).unwrap()))
+                    .collect()
+            })
+            .collect();
+        let parts: Vec<&[Rc<xla::Literal>]> = rep_lits.iter().map(|v| &v[..]).collect();
+        b.run(&format!("{label}/outer sync end-to-end via bus (M=2)"), || {
+            sync.sync(&parts, None).unwrap();
+            sync.uploads()
+        });
+    }
+
+    // -- broadcast: dedup (N uploads shared via Rc) vs seed (M*N) --
+    {
+        let m = 8usize;
+        b.run(&format!("{label}/broadcast: N uploads, Rc-shared (M={m})"), || {
+            let lits: Vec<Rc<xla::Literal>> = (0..n)
+                .map(|l| Rc::new(pristine.leaf_literal(l).unwrap()))
+                .collect();
+            let states: Vec<Vec<Rc<xla::Literal>>> =
+                (0..m).map(|_| lits.iter().cloned().collect()).collect();
+            states
+        });
+        b.run(&format!("{label}/broadcast: M*N uploads (M={m}, seed path)"), || {
+            let states: Vec<Vec<xla::Literal>> = (0..m)
+                .map(|_| host.iter().map(|t| t.to_literal().unwrap()).collect())
+                .collect();
+            states
+        });
+    }
+}
+
+/// PJRT execution cases (need `make artifacts`).
+fn bench_pjrt(b: &mut Bencher, repo: &RepoConfig) -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
     for model in ["m0", "m2"] {
         let mr = ModelRuntime::load(Rc::clone(&rt), &repo.model_dir(model))?;
         let n = mr.n_leaves();
@@ -76,30 +231,45 @@ fn main() -> anyhow::Result<()> {
             ev.call(&args).unwrap()
         });
 
-        // the H-cadence host path: literal -> host tensors -> outer step -> literals
-        let host: Vec<HostTensor> = state[..n]
-            .iter()
-            .map(|l| HostTensor::from_literal(l).unwrap())
-            .collect();
-        b.run(&format!("{model}/outer sync: pull params to host"), || {
-            state[..n]
-                .iter()
-                .map(|l| HostTensor::from_literal(l).unwrap())
+        // the H-cadence device<->host edges, over the flat bus
+        let layout = Rc::new(FlatLayout::from_specs(&mr.manifest.params));
+        let mut pull = FlatParams::zeros(&layout);
+        b.run(&format!("{model}/outer sync: pull params to host (bus)"), || {
+            for leaf in 0..layout.n_leaves() {
+                pull.read_leaf_literal(leaf, &state[leaf]).unwrap();
+            }
+            pull.data()[0]
+        });
+        b.run(&format!("{model}/outer sync: push params to device (bus)"), || {
+            (0..layout.n_leaves())
+                .map(|l| pull.leaf_literal(l).unwrap())
                 .collect::<Vec<_>>()
         });
-        let replicas = vec![host.clone(), host.clone()];
-        let mut opt = OuterOpt::new(0.8, 0.9);
-        b.run(&format!("{model}/outer sync: delta + Nesterov (M=2)"), || {
-            let mut g = host.clone();
-            let delta = outer_gradient(&g, &replicas);
-            opt.step(&mut g, &delta);
-            g
-        });
-        b.run(&format!("{model}/outer sync: push params to device"), || {
-            host.iter()
-                .map(|t| t.to_literal().unwrap())
-                .collect::<Vec<_>>()
-        });
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new(4.0);
+    // a broken config is an error; only *missing artifacts* downgrade
+    // to the host-path-only run
+    let repo = RepoConfig::load(Path::new(env!("CARGO_MANIFEST_DIR")))?;
+    let have_artifacts = repo.model_dir("m0").join("manifest.json").is_file();
+
+    if have_artifacts {
+        bench_pjrt(&mut b, &repo)?;
+    } else {
+        println!(
+            "bench_hot_path: artifacts missing (make artifacts); \
+             PJRT cases skipped, flat-bus cases follow"
+        );
+    }
+
+    // flat-bus outer sync + broadcast on mini-ladder-shaped layouts
+    // (host path: runs in every environment)
+    for (label, layers, d, heads) in [("m0", 2usize, 64usize, 4usize), ("m2", 4, 128, 8)] {
+        let layout = Rc::new(FlatLayout::new(model_shapes(layers, d, heads)));
+        bench_outer_sync(&mut b, label, &layout);
     }
 
     // data pipeline throughput
@@ -108,6 +278,9 @@ fn main() -> anyhow::Result<()> {
         stream.next_batch(16, 64)
     });
 
-    b.report("hot path (L3 coordinator over PJRT)");
+    b.report("hot path (L3 coordinator: PJRT inner step + flat-bus outer sync)");
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hot_path.json");
+    b.write_json(&out, "hot path (L3 coordinator: PJRT inner step + flat-bus outer sync)")?;
+    println!("\nwrote {}", out.display());
     Ok(())
 }

@@ -7,11 +7,19 @@
 //! outer SGD-Nesterov step, and broadcasts the new global params back.
 //! Data-Parallel is the degenerate configuration (M=1, no outer step).
 //!
-//! Replica state lives as PJRT literals between steps (no host copies
-//! on the inner path); host round-trips happen only at the H-cadence
-//! sync and for scalar metrics. The "parallel for" over replicas is
-//! sequential on this single-core substrate; the parallel wall-clock
-//! is modeled by `netsim` exactly as the paper's Appendix A does.
+//! Replica state lives as shared `Rc<xla::Literal>`s between steps (no
+//! host copies on the inner path); host round-trips happen only at the
+//! H-cadence sync and for scalar metrics. The sync itself runs on the
+//! flat parameter bus (`runtime::bus` + `coordinator::sync`): pulls
+//! touch only the due fragment's leaves, the outer step is a
+//! zero-alloc vectorized pass over offset ranges, and the broadcast
+//! uploads each synced leaf once, sharing the immutable literal across
+//! all M replicas and the eval path. The "parallel for" over replicas
+//! is sequential on this single-core substrate; the parallel
+//! wall-clock is modeled by `netsim` exactly as the paper's Appendix A
+//! does.
+
+use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
@@ -19,13 +27,13 @@ use crate::config::OptimizerPolicy;
 use crate::data::downstream::{scoring_input, McTaskSpec};
 use crate::data::synthetic::{CorpusSpec, TokenStream};
 use crate::runtime::{
-    decompose_micro, f32_scalar, i32_literal, scalar_f32, u32_scalar, HostTensor,
+    decompose_micro, f32_scalar, i32_literal, scalar_f32, u32_scalar, FlatLayout, HostTensor,
     ModelRuntime,
 };
 use crate::train::schedule::{weight_decay, LrSchedule};
 use crate::util::json::Json;
 
-use super::outer_opt::{outer_gradient, OuterOpt};
+use super::sync::OuterSync;
 
 /// Stream-id namespace: replicas use 0..M, eval uses the high range.
 const EVAL_STREAM: u64 = 0xF000_0001;
@@ -161,7 +169,9 @@ impl RunMetrics {
             ("inner_lr", Json::num(self.inner_lr)),
             ("outer_lr", Json::num(self.outer_lr)),
             ("overtrain", Json::num(self.overtrain)),
-            ("seed", Json::num(self.seed as f64)),
+            // seeds are u64 and must round-trip exactly (2^53-safe);
+            // Json::int carries integers without an f64 detour.
+            ("seed", Json::int(self.seed)),
             ("param_count", Json::num(self.param_count as f64)),
             ("steps", Json::num(self.steps as f64)),
             ("tokens", Json::num(self.tokens as f64)),
@@ -211,7 +221,7 @@ impl RunMetrics {
             inner_lr: j.f64_of("inner_lr")?,
             outer_lr: j.f64_of("outer_lr")?,
             overtrain: j.f64_of("overtrain")?,
-            seed: j.f64_of("seed")? as u64,
+            seed: j.u64_of("seed")?,
             param_count: j.usize_of("param_count")?,
             steps: j.usize_of("steps")?,
             tokens: j.usize_of("tokens")?,
@@ -226,9 +236,12 @@ impl RunMetrics {
     }
 }
 
-/// One replica: params ++ m ++ v as literals (manifest leaf order).
+/// One replica: params ++ m ++ v as shared literals (manifest leaf
+/// order). `Rc` because after a broadcast all replicas reference the
+/// *same* uploaded literal for each synced leaf, and at init they share
+/// the init params and the zero-moment literals.
 struct Replica {
-    state: Vec<xla::Literal>,
+    state: Vec<Rc<xla::Literal>>,
     shard: TokenStream,
 }
 
@@ -325,47 +338,63 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         .collect::<Result<_>>()?;
 
     // ---- state ----------------------------------------------------------
-    let params0 = init.call(&[&u32_scalar(cfg.seed as u32)])?;
+    let params0: Vec<Rc<xla::Literal>> = init
+        .call(&[&u32_scalar(cfg.seed as u32)])?
+        .into_iter()
+        .map(Rc::new)
+        .collect();
     let host_params0: Vec<HostTensor> = params0
         .iter()
         .map(|l| HostTensor::from_literal(l))
         .collect::<Result<_>>()?;
-    let make_state = |params: &[HostTensor]| -> Result<Vec<xla::Literal>> {
-        let mut state = Vec::with_capacity(3 * n);
-        for p in params {
-            state.push(p.to_literal()?);
-        }
-        for p in params {
-            state.push(HostTensor::zeros(&p.shape).to_literal()?);
-        }
-        for p in params {
-            state.push(HostTensor::zeros(&p.shape).to_literal()?);
-        }
-        Ok(state)
+    // AdamW moments start at zero; build each leaf's zero literal once
+    // and share it across every replica and both moment slots —
+    // literals are immutable, and the inner step replaces (never
+    // mutates) state, so init uploads 2N literals instead of 3N*M.
+    let zero_moments: Vec<Rc<xla::Literal>> = host_params0
+        .iter()
+        .map(|p| Ok(Rc::new(HostTensor::zeros(&p.shape).to_literal()?)))
+        .collect::<Result<_>>()?;
+    let make_state = || -> Vec<Rc<xla::Literal>> {
+        params0
+            .iter()
+            .chain(zero_moments.iter())
+            .chain(zero_moments.iter())
+            .cloned()
+            .collect()
     };
     let corpus = CorpusSpec {
         vocab: mr.manifest.model.vocab,
         ..CorpusSpec::default()
     };
     let mut replicas: Vec<Replica> = (0..m_replicas)
-        .map(|r| {
-            Ok(Replica {
-                state: make_state(&host_params0)?,
-                shard: TokenStream::new(corpus.clone(), cfg.seed, r as u64),
-            })
+        .map(|r| Replica {
+            state: make_state(),
+            shard: TokenStream::new(corpus.clone(), cfg.seed, r as u64),
         })
-        .collect::<Result<_>>()?;
-    let mut global = host_params0;
-    let mut outer = OuterOpt::new(cfg.outer_lr, policy.outer_momentum);
+        .collect();
+    // The H-cadence sync engine: flat-bus global model + outer
+    // optimizer arenas + per-leaf literal cache (DiLoCo only).
+    let mut sync: Option<OuterSync> = if is_diloco {
+        let layout = Rc::new(FlatLayout::from_specs(&mr.manifest.params));
+        Some(OuterSync::new(
+            layout,
+            &host_params0,
+            params0.clone(),
+            cfg.outer_lr,
+            policy.outer_momentum,
+            fragments,
+        )?)
+    } else {
+        None
+    };
     let mut outer_syncs = 0usize;
 
     // ---- helpers --------------------------------------------------------
-    let eval_model = |params: &[HostTensor]| -> Result<f64> {
+    // Evaluation takes literals directly — the DiLoCo path hands the
+    // cached global literal set over without any host->device copies.
+    let eval_model = |lits: &[Rc<xla::Literal>]| -> Result<f64> {
         let eb = mr.manifest.eval_batch;
-        let lits: Vec<xla::Literal> = params
-            .iter()
-            .map(|p| p.to_literal())
-            .collect::<Result<_>>()?;
         let mut stream = TokenStream::new(corpus.clone(), cfg.seed, EVAL_STREAM);
         let n_batches = (cfg.eval_tokens / (eb * seq)).max(1);
         let mut sum = 0.0f64;
@@ -373,20 +402,13 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         for _ in 0..n_batches {
             let toks = stream.next_batch(eb, seq);
             let t = i32_literal(&[eb, seq], &toks)?;
-            let mut args: Vec<&xla::Literal> = lits.iter().collect();
+            let mut args: Vec<&xla::Literal> = lits.iter().map(|l| &**l).collect();
             args.push(&t);
             let out = eval_step.call(&args)?;
             sum += scalar_f32(&out[0])? as f64;
             count += scalar_f32(&out[1])? as f64;
         }
         Ok(sum / count)
-    };
-
-    let params_of = |rep: &Replica| -> Result<Vec<HostTensor>> {
-        rep.state[..n]
-            .iter()
-            .map(HostTensor::from_literal)
-            .collect()
     };
 
     // For eval purposes: DP evaluates the current model; DiLoCo the most
@@ -409,14 +431,15 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
                     // fused path: one dispatch
                     let toks = rep.shard.next_batch(local_seqs, seq);
                     let tok_lit = i32_literal(&[local_seqs, seq], &toks)?;
-                    let mut args: Vec<&xla::Literal> = rep.state.iter().collect();
+                    let mut args: Vec<&xla::Literal> =
+                        rep.state.iter().map(|l| &**l).collect();
                     args.push(&tok_lit);
                     args.push(&step_lit);
                     args.push(&lr_lit);
                     args.push(&wd_lit);
                     let out = train_step.as_ref().expect("fused path").call(&args)?;
                     let loss = scalar_f32(&out[3 * n])? as f64;
-                    rep.state = out.into_iter().take(3 * n).collect();
+                    rep.state = out.into_iter().take(3 * n).map(Rc::new).collect();
                     loss
                 }
                 Some(plan) => {
@@ -428,7 +451,7 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
                         let tok_lit = i32_literal(&[mb, seq], &toks)?;
                         let gs = &grad_steps[&mb];
                         let mut args: Vec<&xla::Literal> =
-                            rep.state[..n].iter().collect();
+                            rep.state[..n].iter().map(|l| &**l).collect();
                         args.push(&tok_lit);
                         let out = gs.call(&args)?;
                         loss_sum +=
@@ -458,13 +481,17 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
                         });
                     }
                     let grads = acc.unwrap();
-                    let mut args: Vec<&xla::Literal> =
-                        rep.state.iter().chain(grads.iter()).collect();
+                    let mut args: Vec<&xla::Literal> = rep
+                        .state
+                        .iter()
+                        .map(|l| &**l)
+                        .chain(grads.iter())
+                        .collect();
                     args.push(&step_lit);
                     args.push(&lr_lit);
                     args.push(&wd_lit);
                     let out = apply_update.as_ref().expect("accum path").call(&args)?;
-                    rep.state = out.into_iter().take(3 * n).collect();
+                    rep.state = out.into_iter().take(3 * n).map(Rc::new).collect();
                     loss_sum
                 }
             };
@@ -475,11 +502,7 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         // ---- outer synchronization (Algorithm 1 lines 8-12) ----------------
         let sync_now = is_diloco && (t % frag_interval == 0 || t == total_steps);
         if sync_now {
-            let replica_params: Vec<Vec<HostTensor>> = replicas
-                .iter()
-                .map(params_of)
-                .collect::<Result<_>>()?;
-            let delta = outer_gradient(&global, &replica_params);
+            let bus = sync.as_mut().expect("DiLoCo sync state");
             // vanilla: all leaves; streaming: the due fragment, or a
             // full flush on the final step so no fragment is left stale.
             let frag: Option<usize> = if fragments > 1 && t != total_steps {
@@ -487,17 +510,19 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
             } else {
                 None
             };
-            outer.step_subset(&mut global, &delta, |leaf| {
-                frag.map_or(true, |f| leaf % fragments == f)
-            });
+            {
+                let parts: Vec<&[Rc<xla::Literal>]> =
+                    replicas.iter().map(|r| &r.state[..n]).collect();
+                bus.sync(&parts, frag)?;
+            }
             outer_syncs += 1;
-            // broadcast: replicas adopt the synced leaves; AdamW moments
-            // persist (the key difference from FedOpt).
+            // broadcast: every replica adopts the same freshly-uploaded
+            // literal per synced leaf (N uploads, not M×N); AdamW
+            // moments persist (the key difference from FedOpt).
+            let lits = bus.global_literals();
             for rep in replicas.iter_mut() {
-                for (leaf, p) in global.iter().enumerate() {
-                    if frag.map_or(true, |f| leaf % fragments == f) {
-                        rep.state[leaf] = p.to_literal()?;
-                    }
+                for leaf in bus.synced_leaves(frag) {
+                    rep.state[leaf] = Rc::clone(&lits[leaf]);
                 }
             }
         }
@@ -510,34 +535,30 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         }
         if let Some(k) = cfg.eval_every {
             if t % k == 0 && t != total_steps {
-                let params = if is_diloco {
-                    global.clone()
-                } else {
-                    params_of(&replicas[0])?
+                let e = match &sync {
+                    Some(bus) => eval_model(bus.global_literals())?,
+                    None => eval_model(&replicas[0].state[..n])?,
                 };
-                let e = eval_model(&params)?;
                 eval_curve.push((t, e));
                 log::info!("  step {t} eval_loss={e:.4}");
             }
         }
     }
 
-    // For DP the "global" model is simply the replica's current params.
-    if !is_diloco {
-        global = params_of(&replicas[0])?;
-    }
-
-    let final_eval = eval_model(&global)?;
+    // DP's "global" model is simply the replica's current params;
+    // DiLoCo's is the literal cache, fresh after the final full-flush
+    // sync. Either way no re-upload happens here.
+    let final_lits: Vec<Rc<xla::Literal>> = match &sync {
+        Some(bus) => bus.global_literals().to_vec(),
+        None => replicas[0].state[..n].to_vec(),
+    };
+    let final_eval = eval_model(&final_lits)?;
     eval_curve.push((total_steps, final_eval));
 
     // ---- downstream zero-shot scoring --------------------------------------
     let mut downstream = Vec::new();
     if cfg.downstream {
         let seq_nll = mr.artifact("seq_nll")?;
-        let lits: Vec<xla::Literal> = global
-            .iter()
-            .map(|p| p.to_literal())
-            .collect::<Result<_>>()?;
         for task in McTaskSpec::standard_suite(cfg.seed ^ 0xDD) {
             let instances = task.generate(cfg.seed);
             let mut correct = 0usize;
@@ -547,7 +568,8 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
                     let (toks, mask) = scoring_input(inst, c, seq);
                     let t = i32_literal(&[1, seq], &toks)?;
                     let m = HostTensor::from_vec(&[1, seq], mask).to_literal()?;
-                    let mut args: Vec<&xla::Literal> = lits.iter().collect();
+                    let mut args: Vec<&xla::Literal> =
+                        final_lits.iter().map(|l| &**l).collect();
                     args.push(&t);
                     args.push(&m);
                     let nll = scalar_f32(&seq_nll.call(&args)?[0])? as f64;

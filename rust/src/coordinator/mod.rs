@@ -1,8 +1,11 @@
 //! L3 coordination: the paper's system contribution. DiLoCo driver
-//! (Algorithm 1), outer SGD-Nesterov optimizer, replica management.
+//! (Algorithm 1), outer SGD-Nesterov optimizer over the flat parameter
+//! bus, the H-cadence sync engine, replica management.
 
 pub mod diloco;
 pub mod outer_opt;
+pub mod sync;
 
 pub use diloco::{run, Algo, RunConfig, RunMetrics};
 pub use outer_opt::{outer_gradient, OuterOpt};
+pub use sync::OuterSync;

@@ -1,6 +1,7 @@
 //! Outer optimizer: SGD with Nesterov momentum over outer gradients
 //! (paper Algorithm 1, line 11; Douillard et al. 2023's recommended
-//! OuterOpt). The outer gradient is the parameter-space delta
+//! OuterOpt), vectorized over the flat parameter bus. The outer
+//! gradient is the parameter-space delta
 //! Delta = theta_global - mean_m theta_m; this module applies
 //!
 //!   v   <- mu * v + Delta
@@ -10,14 +11,27 @@
 //! optax/PyTorch `nesterov=True`). With eta=1, mu=0 the update reduces
 //! to theta <- mean_m theta_m, i.e. plain parameter averaging
 //! (FedAvg/Local SGD) — a property the tests pin down.
+//!
+//! State and scratch are contiguous [`FlatParams`]-shaped arenas
+//! allocated once and reused every round; the update itself is a
+//! branch-free element-wise loop over offset ranges that the compiler
+//! auto-vectorizes. The element-wise operation order is identical to
+//! the retired per-leaf scalar implementation, so results are
+//! bit-for-bit unchanged — `tests/flat_bus.rs` keeps that scalar
+//! version alive as the oracle and pins the equivalence.
 
-use crate::runtime::HostTensor;
+use std::ops::Range;
+
+use crate::runtime::{FlatLayout, FlatParams};
 
 #[derive(Debug, Clone)]
 pub struct OuterOpt {
     pub lr: f64,
     pub momentum: f64,
-    velocity: Option<Vec<HostTensor>>,
+    /// Velocity arena (same layout as the params); sized lazily on the
+    /// first step and reused — streaming fragments each own their
+    /// slices of it, untouched ranges keep their momentum as-is.
+    velocity: Vec<f32>,
 }
 
 impl OuterOpt {
@@ -25,81 +39,181 @@ impl OuterOpt {
         OuterOpt {
             lr,
             momentum,
-            velocity: None,
+            velocity: Vec::new(),
         }
     }
 
-    /// Apply one outer step in place on the global params.
+    /// Apply one outer step in place on the whole global arena.
     /// `outer_grad` is Delta (already averaged across replicas).
-    pub fn step(&mut self, global: &mut [HostTensor], outer_grad: &[HostTensor]) {
-        self.step_subset(global, outer_grad, |_| true)
+    pub fn step(&mut self, global: &mut FlatParams, outer_grad: &FlatParams) {
+        let ranges = global.layout().full_range();
+        self.step_ranges(global, outer_grad, &ranges);
     }
 
     /// Streaming DiLoCo (Douillard et al. 2025; paper section 8 /
-    /// Appendix A): apply the outer step only to the parameter leaves
-    /// selected by `in_fragment` — each fragment keeps its own slice of
-    /// the momentum state, untouched leaves are left exactly as-is.
-    pub fn step_subset(
+    /// Appendix A): apply the outer step only to the element ranges of
+    /// the due fragment (see [`FlatLayout::fragment_ranges`]). Elements
+    /// outside `ranges` — params and velocity both — are left exactly
+    /// as-is.
+    pub fn step_ranges(
         &mut self,
-        global: &mut [HostTensor],
-        outer_grad: &[HostTensor],
-        in_fragment: impl Fn(usize) -> bool,
+        global: &mut FlatParams,
+        outer_grad: &FlatParams,
+        ranges: &[Range<usize>],
     ) {
-        assert_eq!(global.len(), outer_grad.len());
-        let velocity = self.velocity.get_or_insert_with(|| {
-            outer_grad
-                .iter()
-                .map(|g| HostTensor::zeros(&g.shape))
-                .collect()
-        });
-        assert_eq!(velocity.len(), outer_grad.len());
+        let total = global.layout().total();
+        assert_eq!(total, outer_grad.layout().total());
+        if self.velocity.len() != total {
+            assert!(self.velocity.is_empty(), "velocity arena size drifted");
+            self.velocity = vec![0.0; total];
+        }
         let mu = self.momentum as f32;
         let lr = self.lr as f32;
-        for (leaf, ((theta, g), v)) in global
-            .iter_mut()
-            .zip(outer_grad)
-            .zip(velocity.iter_mut())
-            .enumerate()
-        {
-            if !in_fragment(leaf) {
-                continue;
-            }
-            assert_eq!(theta.shape, g.shape);
-            for i in 0..theta.data.len() {
-                v.data[i] = mu * v.data[i] + g.data[i];
-                theta.data[i] -= lr * (g.data[i] + mu * v.data[i]);
-            }
+        let theta = global.data_mut();
+        let grad = outer_grad.data();
+        for r in ranges {
+            nesterov_chunk(
+                &mut theta[r.clone()],
+                &grad[r.clone()],
+                &mut self.velocity[r.clone()],
+                lr,
+                mu,
+            );
         }
     }
 
-    pub fn velocity(&self) -> Option<&[HostTensor]> {
-        self.velocity.as_deref()
+    /// The velocity arena (empty until the first step).
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+}
+
+/// The vectorizable inner kernel: element-wise, no cross-lane
+/// dependencies, identical operation order to the scalar oracle.
+#[inline]
+fn nesterov_chunk(theta: &mut [f32], grad: &[f32], vel: &mut [f32], lr: f32, mu: f32) {
+    assert_eq!(theta.len(), grad.len());
+    assert_eq!(theta.len(), vel.len());
+    for ((t, g), v) in theta.iter_mut().zip(grad).zip(vel.iter_mut()) {
+        *v = mu * *v + *g;
+        *t -= lr * (*g + mu * *v);
+    }
+}
+
+/// acc += x, element-wise (one replica's contribution to the mean).
+#[inline]
+pub fn acc_add(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a += *b;
+    }
+}
+
+/// Finish the outer gradient in place: acc_i <- global_i - acc_i / m
+/// (acc arrives holding sum_m theta_m; leaves holding Delta).
+#[inline]
+pub fn acc_finish(acc: &mut [f32], global: &[f32], m: f32) {
+    assert_eq!(acc.len(), global.len());
+    for (a, g) in acc.iter_mut().zip(global) {
+        *a = *g - *a / m;
     }
 }
 
 /// Compute the outer gradient Delta = global - mean(replicas)
 /// (Algorithm 1 lines 9-10: Delta_m = theta^(t-H) - theta_m, averaged).
-pub fn outer_gradient(global: &[HostTensor], replicas: &[Vec<HostTensor>]) -> Vec<HostTensor> {
+/// Allocates a fresh arena — convenience for tests and benches; the
+/// coordinator's hot path accumulates into a reused arena via
+/// [`acc_add`]/[`acc_finish`] instead.
+pub fn outer_gradient(global: &FlatParams, replicas: &[FlatParams]) -> FlatParams {
     assert!(!replicas.is_empty());
+    let mut acc = FlatParams::zeros(global.layout());
+    for r in replicas {
+        acc_add(acc.data_mut(), r.data());
+    }
     let m = replicas.len() as f32;
-    global
-        .iter()
-        .enumerate()
-        .map(|(leaf, g)| {
-            let mut out = HostTensor::zeros(&g.shape);
-            for r in replicas {
-                let rt = &r[leaf];
-                assert_eq!(rt.shape, g.shape);
-                for i in 0..out.data.len() {
-                    out.data[i] += rt.data[i];
+    acc_finish(acc.data_mut(), global.data(), m);
+    acc
+}
+
+/// The retired per-leaf scalar implementation, frozen verbatim.
+///
+/// This is the reference the flat bus is pinned against — the oracle
+/// in `tests/flat_bus.rs` (bit-for-bit equivalence) and the baseline
+/// in `benches/bench_hot_path.rs` (the ≥2× speedup measurement). ONE
+/// canonical copy lives here so the two cannot drift. Do NOT optimize
+/// or reorder it: its element-wise operation order IS the contract.
+#[doc(hidden)]
+pub mod scalar_ref {
+    /// Delta = global - mean(replicas), one fresh `Vec` per leaf (the
+    /// allocation profile the flat bus eliminated).
+    pub fn outer_gradient(global: &[Vec<f32>], replicas: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+        assert!(!replicas.is_empty());
+        let m = replicas.len() as f32;
+        global
+            .iter()
+            .enumerate()
+            .map(|(leaf, g)| {
+                let mut out = vec![0.0f32; g.len()];
+                for r in replicas {
+                    let rt = &r[leaf];
+                    assert_eq!(rt.len(), g.len());
+                    for i in 0..out.len() {
+                        out[i] += rt[i];
+                    }
+                }
+                for i in 0..out.len() {
+                    out[i] = g[i] - out[i] / m;
+                }
+                out
+            })
+            .collect()
+    }
+
+    pub struct ScalarOuterOpt {
+        pub lr: f32,
+        pub mu: f32,
+        velocity: Option<Vec<Vec<f32>>>,
+    }
+
+    impl ScalarOuterOpt {
+        pub fn new(lr: f32, mu: f32) -> ScalarOuterOpt {
+            ScalarOuterOpt {
+                lr,
+                mu,
+                velocity: None,
+            }
+        }
+
+        /// Nesterov step on the leaves selected by `in_fragment`
+        /// (per-leaf closure — the selection mechanism the flat bus
+        /// replaced with offset ranges).
+        pub fn step_subset(
+            &mut self,
+            global: &mut [Vec<f32>],
+            grad: &[Vec<f32>],
+            in_fragment: impl Fn(usize) -> bool,
+        ) {
+            assert_eq!(global.len(), grad.len());
+            let velocity = self
+                .velocity
+                .get_or_insert_with(|| grad.iter().map(|g| vec![0.0f32; g.len()]).collect());
+            for (leaf, ((theta, g), v)) in
+                global.iter_mut().zip(grad).zip(velocity.iter_mut()).enumerate()
+            {
+                if !in_fragment(leaf) {
+                    continue;
+                }
+                for i in 0..theta.len() {
+                    v[i] = self.mu * v[i] + g[i];
+                    theta[i] -= self.lr * (g[i] + self.mu * v[i]);
                 }
             }
-            for i in 0..out.data.len() {
-                out.data[i] = g.data[i] - out.data[i] / m;
-            }
-            out
-        })
-        .collect()
+        }
+
+        pub fn velocity(&self) -> Option<&[Vec<f32>]> {
+            self.velocity.as_deref()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -107,36 +221,36 @@ mod tests {
     use super::*;
     use crate::util::prop;
     use crate::util::rng::Rng;
+    use std::rc::Rc;
 
-    fn t(data: Vec<f32>) -> HostTensor {
-        let n = data.len();
-        HostTensor::from_vec(&[n], data)
+    fn flat1(data: Vec<f32>) -> FlatParams {
+        let layout = Rc::new(FlatLayout::new(vec![vec![data.len()]]));
+        let mut fp = FlatParams::zeros(&layout);
+        fp.data_mut().copy_from_slice(&data);
+        fp
     }
 
     #[test]
     fn plain_averaging_when_lr1_mu0() {
         // eta=1, mu=0 => global becomes the replica average (FedAvg).
-        let mut global = vec![t(vec![1.0, 2.0])];
-        let replicas = vec![
-            vec![t(vec![0.0, 0.0])],
-            vec![t(vec![2.0, 6.0])],
-        ];
+        let mut global = flat1(vec![1.0, 2.0]);
+        let replicas = vec![flat1(vec![0.0, 0.0]), flat1(vec![2.0, 6.0])];
         let delta = outer_gradient(&global, &replicas);
         let mut opt = OuterOpt::new(1.0, 0.0);
         opt.step(&mut global, &delta);
-        assert_eq!(global[0].data, vec![1.0, 3.0]);
+        assert_eq!(global.data(), &[1.0, 3.0]);
     }
 
     #[test]
     fn single_replica_identity_when_lr1_mu0() {
         // M=1, eta=1, mu=0: outer step sets global = replica params, so
         // DiLoCo degenerates to the inner optimizer alone.
-        let mut global = vec![t(vec![5.0, -1.0, 0.5])];
-        let replica = vec![t(vec![4.0, 3.0, 0.25])];
+        let mut global = flat1(vec![5.0, -1.0, 0.5]);
+        let replica = flat1(vec![4.0, 3.0, 0.25]);
         let delta = outer_gradient(&global, std::slice::from_ref(&replica));
         let mut opt = OuterOpt::new(1.0, 0.0);
         opt.step(&mut global, &delta);
-        for (a, b) in global[0].data.iter().zip(&replica[0].data) {
+        for (a, b) in global.data().iter().zip(replica.data()) {
             assert!((a - b).abs() < 1e-6);
         }
     }
@@ -145,23 +259,43 @@ mod tests {
     fn momentum_accumulates_nesterov_style() {
         // Constant outer grad g with mu, lr: first step = lr*(1+mu)*g,
         // second = lr*(1 + mu + mu^2)*g... cumulative matches closed form.
-        let g = vec![t(vec![1.0])];
-        let mut global = vec![t(vec![0.0])];
+        let g = flat1(vec![1.0]);
+        let mut global = flat1(vec![0.0]);
         let mut opt = OuterOpt::new(0.5, 0.9);
         opt.step(&mut global, &g);
         // v=1, update=0.5*(1+0.9*1)=0.95 -> theta=-0.95
-        assert!((global[0].data[0] + 0.95).abs() < 1e-6);
+        assert!((global.data()[0] + 0.95).abs() < 1e-6);
         opt.step(&mut global, &g);
         // v=1.9, update=0.5*(1+0.9*1.9)=1.355 -> theta=-2.305
-        assert!((global[0].data[0] + 2.305).abs() < 1e-5);
+        assert!((global.data()[0] + 2.305).abs() < 1e-5);
     }
 
     #[test]
     fn outer_gradient_zero_when_replicas_equal_global() {
-        let global = vec![t(vec![1.0, 2.0, 3.0])];
+        let global = flat1(vec![1.0, 2.0, 3.0]);
         let replicas = vec![global.clone(), global.clone()];
         let delta = outer_gradient(&global, &replicas);
-        assert!(delta[0].data.iter().all(|&x| x == 0.0));
+        assert!(delta.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn step_ranges_leaves_other_elements_untouched() {
+        // A fragment step must not move params or velocity outside its
+        // ranges (streaming fragments own disjoint momentum slices).
+        let layout = Rc::new(FlatLayout::new(vec![vec![2], vec![3], vec![2]]));
+        let mut global = FlatParams::zeros(&layout);
+        global.data_mut().copy_from_slice(&[1.0; 7]);
+        let mut delta = FlatParams::zeros(&layout);
+        delta.data_mut().copy_from_slice(&[0.5; 7]);
+        let mut opt = OuterOpt::new(0.7, 0.9);
+        let ranges = layout.fragment_ranges(2, 1); // leaf 1 only -> [2..5]
+        opt.step_ranges(&mut global, &delta, &ranges);
+        assert_eq!(global.leaf(0), &[1.0, 1.0]);
+        assert_eq!(global.leaf(2), &[1.0, 1.0]);
+        assert!(global.leaf(1).iter().all(|&x| x != 1.0));
+        assert!(opt.velocity()[..2].iter().all(|&v| v == 0.0));
+        assert!(opt.velocity()[5..].iter().all(|&v| v == 0.0));
+        assert!(opt.velocity()[2..5].iter().all(|&v| v == 0.5));
     }
 
     #[test]
@@ -181,16 +315,15 @@ mod tests {
                 (global, replicas)
             },
             |(g, rs)| {
-                let mut global = vec![t(g.clone())];
-                let reps: Vec<Vec<HostTensor>> =
-                    rs.iter().map(|r| vec![t(r.clone())]).collect();
+                let mut global = flat1(g.clone());
+                let reps: Vec<FlatParams> = rs.iter().map(|r| flat1(r.clone())).collect();
                 let delta = outer_gradient(&global, &reps);
                 OuterOpt::new(1.0, 0.0).step(&mut global, &delta);
                 let n = g.len();
                 for i in 0..n {
                     let mean: f32 =
                         rs.iter().map(|r| r[i]).sum::<f32>() / rs.len() as f32;
-                    prop::close(global[0].data[i] as f64, mean as f64, 1e-5)?;
+                    prop::close(global.data()[i] as f64, mean as f64, 1e-5)?;
                 }
                 Ok(())
             },

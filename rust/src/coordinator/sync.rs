@@ -1,0 +1,255 @@
+//! The outer-synchronization engine: everything that happens at the
+//! H-cadence (Algorithm 1 lines 8-12), running on the flat parameter
+//! bus with state allocated once per run.
+//!
+//! Per sync event [`OuterSync::sync`]:
+//!
+//! 1. **pull** — only the due leaves of each replica's params come back
+//!    to host, into a scratch arena reused across rounds (streaming
+//!    fragments no longer round-trip the whole model every H/P steps);
+//! 2. **outer step** — accumulate the replica sum, finish
+//!    Delta = global - sum/M, and apply the Nesterov step, all as
+//!    element-wise loops over the fragment's precomputed offset ranges
+//!    (zero allocation in coordinator code);
+//! 3. **publish** — each synced leaf is uploaded to a literal exactly
+//!    **once** and cached; the coordinator broadcasts by handing every
+//!    replica the same immutable `Rc<xla::Literal>`, cutting
+//!    host→device traffic from M×N to N literals per full sync. The
+//!    cache doubles as the global model's literal form for the eval and
+//!    downstream paths (which previously re-uploaded all N leaves per
+//!    eval); a sync invalidates only the fragment it touched.
+//!
+//! Literals are never mutated after construction (PJRT treats inputs
+//! as immutable and copies to device), so sharing one literal across
+//! replicas and the eval path is safe.
+
+use std::ops::Range;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{FlatLayout, FlatParams, HostTensor};
+
+use super::outer_opt::{acc_add, acc_finish, OuterOpt};
+
+pub struct OuterSync {
+    fragments: usize,
+    opt: OuterOpt,
+    /// The global model theta (host side of the bus).
+    global: FlatParams,
+    /// Replica-sum / outer-gradient arena (reused every round).
+    acc: FlatParams,
+    /// Device→host pull arena (reused every round).
+    scratch: FlatParams,
+    /// Precomputed element ranges per fragment (index = fragment id).
+    frag_ranges: Vec<Vec<Range<usize>>>,
+    /// The whole arena as one range (full syncs / final flush).
+    full: Vec<Range<usize>>,
+    /// Cached literal per leaf — the global model as the device sees
+    /// it. Every entry is shared (never rebuilt) until its leaf syncs.
+    lits: Vec<Rc<xla::Literal>>,
+}
+
+impl OuterSync {
+    /// `init` and `init_lits` are the same initial global params in
+    /// host and literal form (the init artifact's outputs), so setup
+    /// costs zero extra uploads.
+    pub fn new(
+        layout: Rc<FlatLayout>,
+        init: &[HostTensor],
+        init_lits: Vec<Rc<xla::Literal>>,
+        outer_lr: f64,
+        outer_momentum: f64,
+        fragments: usize,
+    ) -> Result<OuterSync> {
+        let fragments = fragments.max(1);
+        if init_lits.len() != layout.n_leaves() {
+            bail!(
+                "outer sync: {} cached literals for a {}-leaf layout",
+                init_lits.len(),
+                layout.n_leaves()
+            );
+        }
+        let global = FlatParams::from_host(&layout, init)?;
+        let acc = FlatParams::zeros(&layout);
+        let scratch = FlatParams::zeros(&layout);
+        let frag_ranges = (0..fragments)
+            .map(|f| layout.fragment_ranges(fragments, f))
+            .collect();
+        let full = layout.full_range();
+        Ok(OuterSync {
+            fragments,
+            opt: OuterOpt::new(outer_lr, outer_momentum),
+            global,
+            acc,
+            scratch,
+            frag_ranges,
+            full,
+            lits: init_lits,
+        })
+    }
+
+    pub fn global(&self) -> &FlatParams {
+        &self.global
+    }
+
+    /// The global model's cached literal form (manifest leaf order) —
+    /// valid at every step, freshened leaf-by-leaf as syncs land.
+    pub fn global_literals(&self) -> &[Rc<xla::Literal>] {
+        &self.lits
+    }
+
+    /// Host→device uploads performed through the bus so far.
+    pub fn uploads(&self) -> u64 {
+        self.global.uploads()
+    }
+
+    /// Leaves a sync event touches: all for `frag = None`, the
+    /// round-robin subset for a streaming fragment.
+    pub fn synced_leaves(&self, frag: Option<usize>) -> std::iter::StepBy<Range<usize>> {
+        self.global.layout().leaves(self.fragments, frag)
+    }
+
+    /// One outer synchronization. `replica_params[r]` is replica r's
+    /// current parameter literals (manifest leaf order, length
+    /// n_leaves). After this returns, `global_literals()` holds the
+    /// refreshed leaves; the caller broadcasts by cloning those `Rc`s
+    /// into each replica's state.
+    pub fn sync(
+        &mut self,
+        replica_params: &[&[Rc<xla::Literal>]],
+        frag: Option<usize>,
+    ) -> Result<()> {
+        if replica_params.is_empty() {
+            bail!("outer sync with zero replicas");
+        }
+        if let Some(f) = frag {
+            if f >= self.fragments {
+                bail!("fragment {f} out of range (P={})", self.fragments);
+            }
+        }
+        let layout = Rc::clone(self.global.layout());
+        let n = layout.n_leaves();
+        for rp in replica_params {
+            if rp.len() != n {
+                bail!("outer sync: replica with {} leaves, expected {n}", rp.len());
+            }
+        }
+        let ranges: &[Range<usize>] = match frag {
+            Some(f) => &self.frag_ranges[f],
+            None => &self.full,
+        };
+
+        // 1. pull + accumulate: acc <- sum_m theta_m over the due ranges.
+        for r in ranges {
+            self.acc.data_mut()[r.clone()].fill(0.0);
+        }
+        for rp in replica_params {
+            for leaf in layout.leaves(self.fragments, frag) {
+                self.scratch.read_leaf_literal(leaf, &rp[leaf])?;
+            }
+            for r in ranges {
+                acc_add(
+                    &mut self.acc.data_mut()[r.clone()],
+                    &self.scratch.data()[r.clone()],
+                );
+            }
+        }
+
+        // 2. finish Delta = global - acc/M and take the Nesterov step.
+        let m = replica_params.len() as f32;
+        for r in ranges {
+            acc_finish(
+                &mut self.acc.data_mut()[r.clone()],
+                &self.global.data()[r.clone()],
+                m,
+            );
+        }
+        self.opt.step_ranges(&mut self.global, &self.acc, ranges);
+
+        // 3. publish: one upload per synced leaf, shared by all readers.
+        for leaf in layout.leaves(self.fragments, frag) {
+            self.lits[leaf] = Rc::new(self.global.leaf_literal(leaf)?);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Rc<FlatLayout> {
+        Rc::new(FlatLayout::new(vec![vec![2], vec![3], vec![1], vec![2]]))
+    }
+
+    fn host(layout: &FlatLayout, fill: f32) -> Vec<HostTensor> {
+        (0..layout.n_leaves())
+            .map(|l| {
+                HostTensor::from_vec(
+                    layout.shape(l),
+                    vec![fill; layout.len(l)],
+                )
+            })
+            .collect()
+    }
+
+    fn lits_of(tensors: &[HostTensor]) -> Vec<Rc<xla::Literal>> {
+        tensors
+            .iter()
+            .map(|t| Rc::new(t.to_literal().unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn full_sync_with_eta1_mu0_averages_replicas() {
+        let l = layout();
+        let init = host(&l, 1.0);
+        let mut sync =
+            OuterSync::new(Rc::clone(&l), &init, lits_of(&init), 1.0, 0.0, 1).unwrap();
+        let r0 = lits_of(&host(&l, 0.0));
+        let r1 = lits_of(&host(&l, 4.0));
+        sync.sync(&[&r0[..], &r1[..]], None).unwrap();
+        assert!(sync.global().data().iter().all(|&x| x == 2.0));
+        // one upload per leaf, not per (replica, leaf)
+        assert_eq!(sync.uploads(), l.n_leaves() as u64);
+        // the cache matches the new global
+        for leaf in 0..l.n_leaves() {
+            let v = sync.global_literals()[leaf].to_vec::<f32>().unwrap();
+            assert!(v.iter().all(|&x| x == 2.0));
+        }
+    }
+
+    #[test]
+    fn fragment_sync_touches_only_due_leaves() {
+        let l = layout();
+        let init = host(&l, 1.0);
+        let init_lits = lits_of(&init);
+        let mut sync =
+            OuterSync::new(Rc::clone(&l), &init, init_lits.clone(), 1.0, 0.0, 2).unwrap();
+        let r = lits_of(&host(&l, 5.0));
+        sync.sync(&[&r[..]], Some(1)).unwrap(); // leaves {1, 3}
+        assert_eq!(sync.uploads(), 2);
+        assert_eq!(sync.global().leaf(0), &[1.0, 1.0]);
+        assert!(sync.global().leaf(1).iter().all(|&x| x == 5.0));
+        assert_eq!(sync.global().leaf(2), &[1.0]);
+        assert!(sync.global().leaf(3).iter().all(|&x| x == 5.0));
+        // untouched leaves still share the ORIGINAL literal allocation
+        assert!(Rc::ptr_eq(&sync.global_literals()[0], &init_lits[0]));
+        assert!(Rc::ptr_eq(&sync.global_literals()[2], &init_lits[2]));
+        assert!(!Rc::ptr_eq(&sync.global_literals()[1], &init_lits[1]));
+    }
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        let l = layout();
+        let init = host(&l, 0.0);
+        let mut sync =
+            OuterSync::new(Rc::clone(&l), &init, lits_of(&init), 0.8, 0.9, 2).unwrap();
+        assert!(sync.sync(&[], None).is_err());
+        let short = lits_of(&host(&l, 1.0)[..3]);
+        assert!(sync.sync(&[&short[..]], None).is_err());
+        let ok = lits_of(&host(&l, 1.0));
+        assert!(sync.sync(&[&ok[..]], Some(2)).is_err()); // fragment id out of range
+    }
+}

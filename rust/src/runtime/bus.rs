@@ -1,0 +1,314 @@
+//! Flat parameter bus: the contiguous-arena representation the outer
+//! sync hot path runs on.
+//!
+//! The coordinator's H-cadence path used to materialize one `Vec<f32>`
+//! per leaf per replica per round (delta, velocity, scratch, and the
+//! broadcast re-upload all allocated fresh). [`FlatParams`] instead
+//! holds the whole leaf set in one contiguous `Vec<f32>` with an offset
+//! table ([`FlatLayout`]) derived from the manifest's canonical flatten
+//! order. Per-leaf views are plain subslices, fragment selection is a
+//! precomputed list of element-offset ranges (no per-leaf closure), and
+//! the outer optimizer's state lives in arenas of the same layout that
+//! are reused across rounds — after the first sync the coordinator's
+//! own code allocates nothing. (The `xla::Literal` bridge still copies
+//! at the FFI boundary, as the PJRT C API requires.)
+//!
+//! Host→device traffic through the bus is counted per literal built
+//! (`uploads()`), which is what lets tests pin the deduplicated
+//! broadcast to exactly N uploads per full sync instead of M×N.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::tensor::{HostTensor, TensorSpec};
+
+/// Offset table mapping leaf index -> element range in the flat arena.
+/// Derived once (from the manifest or raw shapes) and shared by every
+/// arena of the model via `Rc`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatLayout {
+    shapes: Vec<Vec<usize>>,
+    /// `n_leaves + 1` entries; `offsets[i]..offsets[i+1]` is leaf i.
+    offsets: Vec<usize>,
+}
+
+impl FlatLayout {
+    pub fn new(shapes: Vec<Vec<usize>>) -> FlatLayout {
+        let mut offsets = Vec::with_capacity(shapes.len() + 1);
+        let mut off = 0usize;
+        offsets.push(0);
+        for s in &shapes {
+            off += s.iter().product::<usize>();
+            offsets.push(off);
+        }
+        FlatLayout { shapes, offsets }
+    }
+
+    /// Layout of a manifest's parameter leaf set (canonical order).
+    pub fn from_specs(specs: &[TensorSpec]) -> FlatLayout {
+        FlatLayout::new(specs.iter().map(|s| s.shape.clone()).collect())
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.shapes.len()
+    }
+
+    /// Total element count across all leaves.
+    pub fn total(&self) -> usize {
+        *self.offsets.last().expect("offsets is never empty")
+    }
+
+    pub fn shape(&self, leaf: usize) -> &[usize] {
+        &self.shapes[leaf]
+    }
+
+    pub fn len(&self, leaf: usize) -> usize {
+        self.offsets[leaf + 1] - self.offsets[leaf]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shapes.is_empty()
+    }
+
+    /// Element-offset range of one leaf in the flat arena.
+    pub fn range(&self, leaf: usize) -> Range<usize> {
+        self.offsets[leaf]..self.offsets[leaf + 1]
+    }
+
+    /// Leaf indices synchronized by a sync event: all leaves for a full
+    /// sync (`frag = None`), the round-robin subset `leaf % fragments
+    /// == f` for a streaming-fragment sync.
+    pub fn leaves(
+        &self,
+        fragments: usize,
+        frag: Option<usize>,
+    ) -> std::iter::StepBy<Range<usize>> {
+        match frag {
+            None => (0..self.n_leaves()).step_by(1),
+            Some(f) => (f..self.n_leaves()).step_by(fragments.max(1)),
+        }
+    }
+
+    /// Element-offset ranges of one fragment's leaves, with adjacent
+    /// leaves merged into maximal contiguous runs. Precomputed once per
+    /// run; the hot path then iterates ranges instead of consulting a
+    /// per-leaf predicate.
+    pub fn fragment_ranges(&self, fragments: usize, frag: usize) -> Vec<Range<usize>> {
+        let mut out: Vec<Range<usize>> = Vec::new();
+        for leaf in self.leaves(fragments.max(1), Some(frag)) {
+            let r = self.range(leaf);
+            if r.is_empty() {
+                continue;
+            }
+            match out.last_mut() {
+                Some(last) if last.end == r.start => last.end = r.end,
+                _ => out.push(r),
+            }
+        }
+        out
+    }
+
+    /// The whole arena as a single range (full-sync fast path).
+    pub fn full_range(&self) -> Vec<Range<usize>> {
+        if self.total() == 0 {
+            Vec::new()
+        } else {
+            vec![0..self.total()]
+        }
+    }
+}
+
+/// One contiguous f32 arena over a [`FlatLayout`]: global params, outer
+/// gradient, velocity, and pull scratch are all instances of this.
+#[derive(Debug, Clone)]
+pub struct FlatParams {
+    layout: Rc<FlatLayout>,
+    data: Vec<f32>,
+    /// Literals built from this arena (host→device uploads through the
+    /// bus). Monotonic; readers diff across events.
+    uploads: Cell<u64>,
+}
+
+impl FlatParams {
+    pub fn zeros(layout: &Rc<FlatLayout>) -> FlatParams {
+        FlatParams {
+            layout: Rc::clone(layout),
+            data: vec![0.0; layout.total()],
+            uploads: Cell::new(0),
+        }
+    }
+
+    /// Pack host tensors (manifest leaf order) into a fresh arena.
+    pub fn from_host(layout: &Rc<FlatLayout>, tensors: &[HostTensor]) -> Result<FlatParams> {
+        if tensors.len() != layout.n_leaves() {
+            bail!(
+                "flat bus: {} tensors for a {}-leaf layout",
+                tensors.len(),
+                layout.n_leaves()
+            );
+        }
+        let mut fp = FlatParams::zeros(layout);
+        for (leaf, t) in tensors.iter().enumerate() {
+            if t.shape != layout.shape(leaf) {
+                bail!(
+                    "flat bus: leaf {leaf} shape {:?} != layout {:?}",
+                    t.shape,
+                    layout.shape(leaf)
+                );
+            }
+            fp.leaf_mut(leaf).copy_from_slice(&t.data);
+        }
+        Ok(fp)
+    }
+
+    pub fn layout(&self) -> &Rc<FlatLayout> {
+        &self.layout
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Per-leaf view (contiguous subslice of the arena).
+    pub fn leaf(&self, leaf: usize) -> &[f32] {
+        &self.data[self.layout.range(leaf)]
+    }
+
+    pub fn leaf_mut(&mut self, leaf: usize) -> &mut [f32] {
+        let r = self.layout.range(leaf);
+        &mut self.data[r]
+    }
+
+    /// Unpack to per-leaf host tensors (reports, tests; not hot).
+    pub fn to_host(&self) -> Vec<HostTensor> {
+        (0..self.layout.n_leaves())
+            .map(|leaf| HostTensor::from_vec(self.layout.shape(leaf), self.leaf(leaf).to_vec()))
+            .collect()
+    }
+
+    /// Device→host: read one leaf's literal straight into the arena
+    /// slot — zero allocation, the arena is reused across rounds.
+    pub fn read_leaf_literal(&mut self, leaf: usize, lit: &xla::Literal) -> Result<()> {
+        lit.to_slice::<f32>(self.leaf_mut(leaf))
+            .map_err(|e| anyhow::anyhow!("flat bus: reading leaf {leaf}: {e}"))
+    }
+
+    /// Host→device: build one leaf's literal straight from the arena
+    /// slice (no intermediate host tensor). Counts one bus upload.
+    pub fn leaf_literal(&self, leaf: usize) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.layout.shape(leaf).iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(self.leaf(leaf)).reshape(&dims)?;
+        self.uploads.set(self.uploads.get() + 1);
+        Ok(lit)
+    }
+
+    /// Host→device uploads built from this arena so far (monotonic).
+    pub fn uploads(&self) -> u64 {
+        self.uploads.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout3() -> Rc<FlatLayout> {
+        // leaves: 2x3, 4, 3x1 -> offsets [0, 6, 10, 13]
+        Rc::new(FlatLayout::new(vec![vec![2, 3], vec![4], vec![3, 1]]))
+    }
+
+    #[test]
+    fn offsets_and_ranges() {
+        let l = layout3();
+        assert_eq!(l.n_leaves(), 3);
+        assert_eq!(l.total(), 13);
+        assert_eq!(l.range(0), 0..6);
+        assert_eq!(l.range(1), 6..10);
+        assert_eq!(l.range(2), 10..13);
+        assert_eq!(l.len(1), 4);
+        assert_eq!(l.shape(2), &[3, 1]);
+    }
+
+    #[test]
+    fn fragment_selection_round_robin() {
+        let l = layout3();
+        // P=2: fragment 0 = leaves {0, 2}, fragment 1 = leaf {1}
+        assert_eq!(l.leaves(2, Some(0)).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(l.leaves(2, Some(1)).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(l.leaves(2, None).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(l.fragment_ranges(2, 0), vec![0..6, 10..13]);
+        assert_eq!(l.fragment_ranges(2, 1), vec![6..10]);
+        // P=1 merges everything into the full range.
+        assert_eq!(l.fragment_ranges(1, 0), vec![0..13]);
+        assert_eq!(l.full_range(), vec![0..13]);
+    }
+
+    #[test]
+    fn fragment_ranges_cover_exactly_once() {
+        let l = Rc::new(FlatLayout::new(
+            (0..11).map(|i| vec![i + 1]).collect::<Vec<_>>(),
+        ));
+        for p in 1..=4usize {
+            let mut covered = vec![0u8; l.total()];
+            for f in 0..p {
+                for r in l.fragment_ranges(p, f) {
+                    for c in &mut covered[r] {
+                        *c += 1;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "P={p}: {covered:?}");
+        }
+    }
+
+    #[test]
+    fn host_roundtrip_through_arena() {
+        let l = layout3();
+        let tensors = vec![
+            HostTensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect()),
+            HostTensor::from_vec(&[4], vec![9.0, 8.0, 7.0, 6.0]),
+            HostTensor::from_vec(&[3, 1], vec![1.5, 2.5, 3.5]),
+        ];
+        let fp = FlatParams::from_host(&l, &tensors).unwrap();
+        assert_eq!(fp.leaf(1), &[9.0, 8.0, 7.0, 6.0]);
+        assert_eq!(fp.to_host(), tensors);
+    }
+
+    #[test]
+    fn from_host_rejects_shape_drift() {
+        let l = layout3();
+        let bad = vec![
+            HostTensor::zeros(&[3, 2]), // transposed
+            HostTensor::zeros(&[4]),
+            HostTensor::zeros(&[3, 1]),
+        ];
+        assert!(FlatParams::from_host(&l, &bad).is_err());
+        assert!(FlatParams::from_host(&l, &bad[..2]).is_err());
+    }
+
+    #[test]
+    fn literal_bridge_and_upload_count() {
+        let l = layout3();
+        let mut fp = FlatParams::zeros(&l);
+        fp.leaf_mut(1).copy_from_slice(&[4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(fp.uploads(), 0);
+        let lit = fp.leaf_literal(1).unwrap();
+        assert_eq!(fp.uploads(), 1);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[4]);
+
+        let mut other = FlatParams::zeros(&l);
+        other.read_leaf_literal(1, &lit).unwrap();
+        assert_eq!(other.leaf(1), fp.leaf(1));
+        assert_eq!(other.uploads(), 0); // reads are not uploads
+
+        // wrong-leaf literal is rejected (size mismatch)
+        assert!(other.read_leaf_literal(0, &lit).is_err());
+    }
+}

@@ -4,9 +4,11 @@
 //! HLO text + manifests.
 
 pub mod artifact;
+pub mod bus;
 pub mod executor;
 pub mod tensor;
 
 pub use artifact::{decompose_micro, ArtifactDef, Manifest, ModelInfo};
+pub use bus::{FlatLayout, FlatParams};
 pub use executor::{Executable, ModelRuntime, Runtime};
 pub use tensor::{f32_scalar, i32_literal, scalar_f32, u32_scalar, Dtype, HostTensor, TensorSpec};

@@ -47,7 +47,10 @@ impl TensorSpec {
     }
 }
 
-/// A host-side tensor (f32 payload; ints carried as exact f32-free vecs).
+/// A host-side tensor. The payload is always f32 — model params,
+/// moments, and metrics are all f32 in this system. Integer tensors
+/// (token batches, masks) never pass through `HostTensor`; they are
+/// built directly as i32 literals via [`i32_literal`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
     pub shape: Vec<usize>,

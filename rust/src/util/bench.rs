@@ -3,9 +3,13 @@
 //! `[[bench]] harness = false` targets call [`Bencher::run`] per case:
 //! warmup, then timed iterations until a wall budget or max-iter cap,
 //! reporting min/median/p95/mean. Output is a fixed-width table so
-//! `cargo bench | tee bench_output.txt` reads like a report.
+//! `cargo bench | tee bench_output.txt` reads like a report, and
+//! [`Bencher::write_json`] emits the same numbers machine-readably
+//! (`BENCH_*.json`) so the perf trajectory is recorded across PRs.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 pub struct BenchResult {
     pub name: String,
@@ -106,6 +110,31 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// The result table as JSON (nanosecond integers — exact, no f64).
+    pub fn to_json(&self, title: &str) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(title)),
+            (
+                "results",
+                Json::arr(self.results.iter().map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(&r.name)),
+                        ("iters", Json::int(r.iters as i128)),
+                        ("min_ns", Json::int(r.min.as_nanos() as i128)),
+                        ("median_ns", Json::int(r.median.as_nanos() as i128)),
+                        ("p95_ns", Json::int(r.p95.as_nanos() as i128)),
+                        ("mean_ns", Json::int(r.mean.as_nanos() as i128)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Write the machine-readable result file (e.g. `BENCH_hot_path.json`).
+    pub fn write_json(&self, path: &std::path::Path, title: &str) -> anyhow::Result<()> {
+        self.to_json(title).write_file(path)
+    }
 }
 
 #[cfg(test)]
@@ -118,6 +147,19 @@ mod tests {
         b.run("noop", || 1 + 1);
         assert_eq!(b.results().len(), 1);
         assert!(b.results()[0].iters >= 3);
+    }
+
+    #[test]
+    fn json_emission_shape() {
+        let mut b = Bencher::new(0.05);
+        b.run("case", || 2 * 2);
+        let j = b.to_json("hot path");
+        assert_eq!(j.str_of("title").unwrap(), "hot path");
+        let rs = j.arr_of("results").unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].str_of("name").unwrap(), "case");
+        assert!(rs[0].u64_of("median_ns").is_ok());
+        assert!(rs[0].u64_of("iters").unwrap() >= 3);
     }
 
     #[test]

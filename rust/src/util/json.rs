@@ -12,14 +12,43 @@ use std::fmt;
 
 /// A JSON value. Object keys are ordered (BTreeMap) for deterministic
 /// serialization — reports and stores diff cleanly.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Integer literals parse into [`Json::Int`] (an `i128`, wide enough
+/// for any `u64` seed) so values above 2^53 survive a round trip
+/// without an `f64` detour; anything with a fraction or exponent stays
+/// [`Json::Num`]. Equality treats `Int(5)` and `Num(5.0)` as equal, so
+/// writers that format integral floats as integers still round-trip.
+#[derive(Debug, Clone)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    Int(i128),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+impl PartialEq for Json {
+    fn eq(&self, other: &Json) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::Int(a), Json::Int(b)) => a == b,
+            // cross-variant: an integral Num equals an Int only when
+            // the values match EXACTLY in both domains — the i128
+            // round-trip keeps equality transitive when two distinct
+            // Ints collide at f64 precision (above 2^53)
+            (Json::Num(a), Json::Int(b)) | (Json::Int(b), Json::Num(a)) => {
+                *a == *b as f64 && *a as i128 == *b
+            }
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -50,6 +79,12 @@ impl Json {
         Json::Num(v.into())
     }
 
+    /// An exact integer (use for ids/seeds that must not pass through
+    /// f64; `u64` and smaller all fit).
+    pub fn int<T: Into<i128>>(v: T) -> Json {
+        Json::Int(v.into())
+    }
+
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
@@ -71,28 +106,51 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(v) => Some(*v),
+            Json::Int(v) => Some(*v as f64),
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().and_then(|v| {
-            if v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64 {
-                Some(v as usize)
-            } else {
-                None
-            }
-        })
+        match self {
+            Json::Int(v) => usize::try_from(*v).ok(),
+            _ => self.as_f64().and_then(|v| {
+                if v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64 {
+                    Some(v as usize)
+                } else {
+                    None
+                }
+            }),
+        }
     }
 
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().and_then(|v| {
-            if v.fract() == 0.0 && v.abs() <= i64::MAX as f64 {
-                Some(v as i64)
-            } else {
-                None
-            }
-        })
+        match self {
+            Json::Int(v) => i64::try_from(*v).ok(),
+            _ => self.as_f64().and_then(|v| {
+                if v.fract() == 0.0 && v.abs() <= i64::MAX as f64 {
+                    Some(v as i64)
+                } else {
+                    None
+                }
+            }),
+        }
+    }
+
+    /// Exact u64 access (seeds): `Int` round-trips all 64 bits; a
+    /// legacy `Num` is accepted when it is a non-negative integer (the
+    /// best a pre-Int store could have recorded).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Int(v) => u64::try_from(*v).ok(),
+            _ => self.as_f64().and_then(|v| {
+                if v >= 0.0 && v.fract() == 0.0 && v < u64::MAX as f64 {
+                    Some(v as u64)
+                } else {
+                    None
+                }
+            }),
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -144,6 +202,12 @@ impl Json {
             .to_string())
     }
 
+    pub fn u64_of(&self, key: &str) -> anyhow::Result<u64> {
+        self.req(key)?
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("key {key:?} is not a u64 integer"))
+    }
+
     pub fn arr_of(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.req(key)?
             .as_arr()
@@ -170,6 +234,7 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(v) => write_num(out, *v),
+            Json::Int(v) => out.push_str(&v.to_string()),
             Json::Str(s) => write_string(out, s),
             Json::Arr(items) => {
                 out.push('[');
@@ -470,6 +535,7 @@ impl<'a> Parser<'a> {
 
     fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
+        let mut is_float = false;
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
@@ -477,12 +543,14 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
         if self.peek() == Some(b'.') {
+            is_float = true;
             self.pos += 1;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.pos += 1;
             }
         }
         if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            is_float = true;
             self.pos += 1;
             if matches!(self.peek(), Some(b'+') | Some(b'-')) {
                 self.pos += 1;
@@ -493,6 +561,14 @@ impl<'a> Parser<'a> {
         }
         let s = std::str::from_utf8(&self.bytes[start..self.pos])
             .map_err(|_| self.err("bad number"))?;
+        if !is_float {
+            // exact integer path (seeds > 2^53 must not pass through
+            // f64); absurdly long digit strings overflow i128 and fall
+            // back to the float path below.
+            if let Ok(v) = s.parse::<i128>() {
+                return Ok(Json::Int(v));
+            }
+        }
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -545,6 +621,40 @@ mod tests {
         for bad in ["", "{", "[1,", "{\"a\"}", "01x", "\"\\q\"", "nulll"] {
             assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn integers_roundtrip_exactly() {
+        // Seeds above 2^53 are exactly the values an f64 detour mangles.
+        let big: u64 = (1u64 << 60) + 12345;
+        assert_ne!((big as f64) as u64, big, "test value must exceed f64 precision");
+        let j = Json::obj(vec![("seed", Json::int(big))]);
+        let back = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(back.u64_of("seed").unwrap(), big);
+        let max = Json::parse(&u64::MAX.to_string()).unwrap();
+        assert_eq!(max.as_u64(), Some(u64::MAX));
+        // fractions and exponents stay floats
+        assert_eq!(Json::parse("2.0").unwrap(), Json::Num(2.0));
+        assert_eq!(Json::parse("2e1").unwrap(), Json::Num(20.0));
+    }
+
+    #[test]
+    fn int_num_cross_equality() {
+        assert_eq!(Json::Num(5.0), Json::Int(5));
+        assert_eq!(Json::Int(5), Json::Num(5.0));
+        assert_ne!(Json::Num(5.5), Json::Int(5));
+        // transitivity above 2^53: two Ints that collide at f64
+        // precision stay distinct, and at most one equals the Num
+        let a = (1i128 << 60) + 12345;
+        let b = (1i128 << 60) + 12288; // = a rounded to f64
+        assert_ne!(Json::Int(a), Json::Int(b));
+        assert_eq!(Json::Num(b as f64), Json::Int(b));
+        assert_ne!(Json::Num(b as f64), Json::Int(a));
+        assert_eq!(Json::parse("7").unwrap(), Json::Num(7.0));
+        // integer accessors prefer the exact path
+        assert_eq!(Json::Int(-3).as_i64(), Some(-3));
+        assert_eq!(Json::Int(-3).as_usize(), None);
+        assert_eq!(Json::Int(9).as_f64(), Some(9.0));
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Flat-bus equivalence and broadcast-dedup invariants.
+//!
+//! (1) The vectorized flat-bus outer step (`OuterSync` over
+//! `FlatParams`) is pinned bit-for-bit against the retired per-leaf
+//! scalar implementation, which lives on (frozen, one canonical copy)
+//! as `coordinator::outer_opt::scalar_ref` and serves here as the
+//! oracle — over random replica counts M in 1..8, leaf shapes,
+//! momentum, outer LR, fragment counts, and multi-round streaming
+//! schedules. This is what
+//! guarantees `tests/diloco_invariants.rs` and
+//! `tests/streaming_diloco.rs` semantics are unchanged by the perf
+//! rework.
+//!
+//! (2) The deduplicated broadcast uploads each synced leaf exactly
+//! once per sync (N, not M×N — counted through the bus), replicas
+//! share the uploaded literal by pointer, and the final full flush
+//! leaves no fragment stale.
+//!
+//! These tests run on the host tier of the literal bridge — no PJRT,
+//! no artifacts needed.
+
+use std::rc::Rc;
+
+use diloco::coordinator::outer_opt::scalar_ref;
+use diloco::coordinator::OuterSync;
+use diloco::runtime::{FlatLayout, HostTensor};
+use diloco::util::prop;
+use diloco::util::rng::Rng;
+
+// ---- helpers ---------------------------------------------------------
+
+fn random_shapes(rng: &mut Rng) -> Vec<Vec<usize>> {
+    let leaves = 1 + rng.below(6) as usize;
+    (0..leaves)
+        .map(|_| {
+            if rng.below(2) == 0 {
+                vec![1 + rng.below(12) as usize]
+            } else {
+                vec![1 + rng.below(6) as usize, 1 + rng.below(6) as usize]
+            }
+        })
+        .collect()
+}
+
+fn random_leaf_values(rng: &mut Rng, layout: &FlatLayout) -> Vec<Vec<f32>> {
+    (0..layout.n_leaves())
+        .map(|l| (0..layout.len(l)).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn to_host(layout: &FlatLayout, leaves: &[Vec<f32>]) -> Vec<HostTensor> {
+    leaves
+        .iter()
+        .enumerate()
+        .map(|(l, v)| HostTensor::from_vec(layout.shape(l), v.clone()))
+        .collect()
+}
+
+fn to_lits(layout: &FlatLayout, leaves: &[Vec<f32>]) -> Vec<Rc<xla::Literal>> {
+    to_host(layout, leaves)
+        .iter()
+        .map(|t| Rc::new(t.to_literal().unwrap()))
+        .collect()
+}
+
+// ---- (1) flat bus == scalar oracle, bit for bit ----------------------
+
+#[test]
+fn prop_flat_bus_matches_scalar_oracle() {
+    #[derive(Debug)]
+    struct Case {
+        shapes: Vec<Vec<usize>>,
+        m: usize,
+        fragments: usize,
+        lr: f64,
+        mu: f64,
+        rounds: Vec<(Option<usize>, Vec<Vec<Vec<f32>>>)>, // (frag, per-replica leaves)
+        init: Vec<Vec<f32>>,
+    }
+
+    prop::check(
+        0xF1A7,
+        48,
+        |rng: &mut Rng| {
+            let shapes = random_shapes(rng);
+            let layout = FlatLayout::new(shapes.clone());
+            let m = 1 + rng.below(8) as usize;
+            let fragments = 1 + rng.below(4) as usize;
+            let lr = rng.range_f64(0.1, 1.5);
+            let mu = if rng.below(3) == 0 { 0.0 } else { rng.range_f64(0.0, 0.99) };
+            let init = random_leaf_values(rng, &layout);
+            // a streaming round-robin schedule ending in a full flush,
+            // with fresh replica values every round (as after H inner
+            // steps)
+            let n_rounds = fragments + 1 + rng.below(3) as usize;
+            let rounds = (0..n_rounds)
+                .map(|k| {
+                    let frag = if fragments > 1 && k + 1 != n_rounds {
+                        Some(k % fragments)
+                    } else {
+                        None
+                    };
+                    let reps = (0..m).map(|_| random_leaf_values(rng, &layout)).collect();
+                    (frag, reps)
+                })
+                .collect();
+            Case {
+                shapes,
+                m,
+                fragments,
+                lr,
+                mu,
+                rounds,
+                init,
+            }
+        },
+        |case| {
+            let layout = Rc::new(FlatLayout::new(case.shapes.clone()));
+
+            // flat side: OuterSync over the literal bridge
+            let init_host = to_host(&layout, &case.init);
+            let init_lits = to_lits(&layout, &case.init);
+            let mut flat = OuterSync::new(
+                Rc::clone(&layout),
+                &init_host,
+                init_lits,
+                case.lr,
+                case.mu,
+                case.fragments,
+            )
+            .map_err(|e| e.to_string())?;
+
+            // oracle side: the frozen scalar reference on raw vectors
+            let mut oracle_global: Vec<Vec<f32>> = case.init.clone();
+            let mut oracle = scalar_ref::ScalarOuterOpt::new(case.lr as f32, case.mu as f32);
+
+            for (frag, reps) in &case.rounds {
+                let rep_lits: Vec<Vec<Rc<xla::Literal>>> =
+                    reps.iter().map(|r| to_lits(&layout, r)).collect();
+                let parts: Vec<&[Rc<xla::Literal>]> =
+                    rep_lits.iter().map(|v| &v[..]).collect();
+                flat.sync(&parts, *frag).map_err(|e| e.to_string())?;
+
+                let p = case.fragments;
+                let delta = scalar_ref::outer_gradient(&oracle_global, reps);
+                oracle.step_subset(&mut oracle_global, &delta, |leaf| {
+                    frag.map_or(true, |f| leaf % p == f)
+                });
+
+                // bit-for-bit: same element-wise operation order
+                for leaf in 0..layout.n_leaves() {
+                    let got = flat.global().leaf(leaf);
+                    let want = &oracle_global[leaf];
+                    for i in 0..want.len() {
+                        if got[i].to_bits() != want[i].to_bits() {
+                            return Err(format!(
+                                "leaf {leaf}[{i}]: flat {} != oracle {} (frag {frag:?}, M={}, P={}, mu={})",
+                                got[i], want[i], case.m, case.fragments, case.mu
+                            ));
+                        }
+                    }
+                    // and the literal cache always mirrors the arena
+                    let cached = flat.global_literals()[leaf].to_vec::<f32>().unwrap();
+                    if cached != got {
+                        return Err(format!("leaf {leaf}: stale literal cache"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- (2) broadcast dedup + streaming staleness -----------------------
+
+#[test]
+fn streaming_broadcast_uploads_only_due_fragment_and_flush_clears_stale() {
+    // 7 leaves, P=3: fragments {0,3,6}, {1,4}, {2,5}
+    let layout = Rc::new(FlatLayout::new(
+        (0..7).map(|i| vec![i + 1]).collect::<Vec<_>>(),
+    ));
+    let fragments = 3usize;
+    let m = 2usize;
+    let mut rng = Rng::new(0xB05);
+
+    let init = random_leaf_values(&mut rng, &layout);
+    let mut sync = OuterSync::new(
+        Rc::clone(&layout),
+        &to_host(&layout, &init),
+        to_lits(&layout, &init),
+        0.8,
+        0.9,
+        fragments,
+    )
+    .unwrap();
+
+    // replica states as the coordinator holds them (params slice only)
+    let mut states: Vec<Vec<Rc<xla::Literal>>> = (0..m)
+        .map(|_| to_lits(&layout, &random_leaf_values(&mut rng, &layout)))
+        .collect();
+
+    let mut uploads_before = sync.uploads();
+    assert_eq!(uploads_before, 0, "setup must not upload through the bus");
+
+    // three fragment syncs (round-robin), then the final full flush
+    let schedule: Vec<Option<usize>> = vec![Some(0), Some(1), Some(2), Some(0), None];
+    for frag in schedule {
+        // replicas drift between syncs (H inner steps)
+        for s in states.iter_mut() {
+            *s = to_lits(&layout, &random_leaf_values(&mut rng, &layout));
+        }
+        {
+            let parts: Vec<&[Rc<xla::Literal>]> = states.iter().map(|v| &v[..]).collect();
+            sync.sync(&parts, frag).unwrap();
+        }
+        let expected: Vec<usize> = sync.synced_leaves(frag).collect();
+        let uploaded = sync.uploads() - uploads_before;
+        assert_eq!(
+            uploaded,
+            expected.len() as u64,
+            "frag {frag:?}: uploads must equal the due fragment's leaf count \
+             (N per full sync, never M*N)"
+        );
+        uploads_before = sync.uploads();
+
+        // broadcast: all replicas adopt the same literal per synced leaf
+        for s in states.iter_mut() {
+            for leaf in sync.synced_leaves(frag) {
+                s[leaf] = Rc::clone(&sync.global_literals()[leaf]);
+            }
+        }
+        for leaf in sync.synced_leaves(frag) {
+            assert!(
+                Rc::ptr_eq(&states[0][leaf], &states[1][leaf]),
+                "leaf {leaf}: replicas must share one uploaded literal"
+            );
+        }
+    }
+
+    // after the final full flush no leaf is stale: every replica points
+    // at the current global literal, whose payload matches the arena
+    for leaf in 0..layout.n_leaves() {
+        for s in &states {
+            assert!(
+                Rc::ptr_eq(&s[leaf], &sync.global_literals()[leaf]),
+                "leaf {leaf} left stale after final flush"
+            );
+        }
+        let cached = sync.global_literals()[leaf].to_vec::<f32>().unwrap();
+        assert_eq!(cached, sync.global().leaf(leaf).to_vec());
+    }
+}
+
+// ---- (3) fragment schedule covers every leaf exactly once per cycle --
+
+#[test]
+fn fragment_round_robin_covers_all_leaves() {
+    let layout = FlatLayout::new((0..10).map(|i| vec![i % 3 + 1]).collect::<Vec<_>>());
+    for p in 1..=5usize {
+        let mut seen = vec![0usize; layout.n_leaves()];
+        for f in 0..p {
+            for leaf in layout.leaves(p, Some(f)) {
+                seen[leaf] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "P={p}: {seen:?}");
+    }
+}
