@@ -35,8 +35,12 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
 
     def body(j, carry):
         m_prev, l_prev, acc_prev = carry
-        k_blk = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k), slice(None)))
-        v_blk = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k), slice(None)))
+        # The leading (block-local) batch index must be a dslice, not a
+        # bare int: jax 0.4.37's interpret-mode discharge rejects int
+        # indices in pl.load (`'int' object has no attribute 'shape'`).
+        kv_idx = (pl.dslice(0, 1), pl.dslice(j * block_k, block_k), slice(None))
+        k_blk = pl.load(k_ref, kv_idx)[0]
+        v_blk = pl.load(v_ref, kv_idx)[0]
         s = jax.lax.dot_general(
             q, k_blk.astype(jnp.float32),
             dimension_numbers=(((1,), (1,)), ((), ())),

@@ -1,28 +1,33 @@
 //! Hot-path benchmarks: the PJRT execution path the coordinator drives
 //! every inner step, plus the flat-bus outer-sync path it drives every
-//! H steps, measured at each layer so perf passes have precise
-//! before/after numbers.
+//! H steps, plus the replica-parallel worker pool's measured inner-loop
+//! wall-clock (vs the `netsim` analytic model), measured at each layer
+//! so perf passes have precise before/after numbers.
 //!
 //! The PJRT cases need lowered artifacts (`make artifacts`) and are
-//! skipped without them; the outer-sync / broadcast cases run on
+//! skipped without them; the outer-sync / broadcast / pool cases run on
 //! synthetic m0/m2-shaped layouts regardless, so every environment
 //! records a perf trajectory. Results are printed as a table and
-//! written to `BENCH_hot_path.json` (machine-readable, exact ns).
+//! written to `BENCH_hot_path.json` (machine-readable, exact ns). Pass
+//! `-- --diff OLD.json` to print per-case deltas against a previous
+//! report (perf trend tracking; also `diloco bench-diff`).
 //!
 //! Run: cargo bench (harness=false; criterion unavailable offline).
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use diloco::config::RepoConfig;
 use diloco::coordinator::outer_opt::{acc_add, acc_finish, scalar_ref};
-use diloco::coordinator::{OuterOpt, OuterSync};
+use diloco::coordinator::{drive, DrivePlan, InnerEngine, OuterOpt, OuterSync, ReplicaState};
 use diloco::data::synthetic::{CorpusSpec, TokenStream};
+use diloco::netsim::walltime::replica_parallel_speedup;
 use diloco::runtime::{
     f32_scalar, i32_literal, u32_scalar, FlatLayout, FlatParams, HostTensor, ModelRuntime,
     Runtime,
 };
-use diloco::util::bench::Bencher;
+use diloco::util::bench::{diff_reports, print_diff, Bencher};
+use diloco::util::json::Json;
 use diloco::util::rng::Rng;
 
 /// The manifest leaf shapes of a mini-ladder rung (mirrors
@@ -47,7 +52,7 @@ fn model_shapes(layers: usize, d: usize, heads: usize) -> Vec<Vec<usize>> {
     s
 }
 
-fn randn_params(layout: &Rc<FlatLayout>, seed: u64) -> FlatParams {
+fn randn_params(layout: &Arc<FlatLayout>, seed: u64) -> FlatParams {
     let mut rng = Rng::new(seed);
     let mut fp = FlatParams::zeros(layout);
     for x in fp.data_mut() {
@@ -57,7 +62,7 @@ fn randn_params(layout: &Rc<FlatLayout>, seed: u64) -> FlatParams {
 }
 
 /// Flat-bus outer sync + broadcast cases for one ladder rung.
-fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Rc<FlatLayout>) {
+fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
     let n = layout.n_leaves();
     let pristine = randn_params(layout, 7);
     let host: Vec<HostTensor> = pristine.to_host();
@@ -135,33 +140,33 @@ fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Rc<FlatLayout>) {
 
     // -- end-to-end sync through the bus (literals in and out, M=2) --
     {
-        let init_lits: Vec<Rc<xla::Literal>> = (0..n)
-            .map(|l| Rc::new(pristine.leaf_literal(l).unwrap()))
+        let init_lits: Vec<Arc<xla::Literal>> = (0..n)
+            .map(|l| Arc::new(pristine.leaf_literal(l).unwrap()))
             .collect();
-        let mut sync = OuterSync::new(Rc::clone(layout), &host, init_lits, 0.8, 0.9, 1)
+        let mut sync = OuterSync::new(Arc::clone(layout), &host, init_lits, 0.8, 0.9, 1)
             .expect("bench sync setup");
-        let rep_lits: Vec<Vec<Rc<xla::Literal>>> = (0..2)
+        let rep_lits: Vec<Vec<Arc<xla::Literal>>> = (0..2)
             .map(|_| {
                 (0..n)
-                    .map(|l| Rc::new(pristine.leaf_literal(l).unwrap()))
+                    .map(|l| Arc::new(pristine.leaf_literal(l).unwrap()))
                     .collect()
             })
             .collect();
-        let parts: Vec<&[Rc<xla::Literal>]> = rep_lits.iter().map(|v| &v[..]).collect();
+        let parts: Vec<&[Arc<xla::Literal>]> = rep_lits.iter().map(|v| &v[..]).collect();
         b.run(&format!("{label}/outer sync end-to-end via bus (M=2)"), || {
             sync.sync(&parts, None).unwrap();
             sync.uploads()
         });
     }
 
-    // -- broadcast: dedup (N uploads shared via Rc) vs seed (M*N) --
+    // -- broadcast: dedup (N uploads shared via Arc) vs seed (M*N) --
     {
         let m = 8usize;
-        b.run(&format!("{label}/broadcast: N uploads, Rc-shared (M={m})"), || {
-            let lits: Vec<Rc<xla::Literal>> = (0..n)
-                .map(|l| Rc::new(pristine.leaf_literal(l).unwrap()))
+        b.run(&format!("{label}/broadcast: N uploads, Arc-shared (M={m})"), || {
+            let lits: Vec<Arc<xla::Literal>> = (0..n)
+                .map(|l| Arc::new(pristine.leaf_literal(l).unwrap()))
                 .collect();
-            let states: Vec<Vec<Rc<xla::Literal>>> =
+            let states: Vec<Vec<Arc<xla::Literal>>> =
                 (0..m).map(|_| lits.iter().cloned().collect()).collect();
             states
         });
@@ -178,7 +183,7 @@ fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Rc<FlatLayout>) {
 fn bench_pjrt(b: &mut Bencher, repo: &RepoConfig) -> anyhow::Result<()> {
     let rt = Runtime::cpu()?;
     for model in ["m0", "m2"] {
-        let mr = ModelRuntime::load(Rc::clone(&rt), &repo.model_dir(model))?;
+        let mr = ModelRuntime::load(Arc::clone(&rt), &repo.model_dir(model))?;
         let n = mr.n_leaves();
         let seq = mr.manifest.model.seq_len;
         let init = mr.artifact("init")?;
@@ -232,7 +237,7 @@ fn bench_pjrt(b: &mut Bencher, repo: &RepoConfig) -> anyhow::Result<()> {
         });
 
         // the H-cadence device<->host edges, over the flat bus
-        let layout = Rc::new(FlatLayout::from_specs(&mr.manifest.params));
+        let layout = Arc::new(FlatLayout::from_specs(&mr.manifest.params));
         let mut pull = FlatParams::zeros(&layout);
         b.run(&format!("{model}/outer sync: pull params to host (bus)"), || {
             for leaf in 0..layout.n_leaves() {
@@ -249,27 +254,156 @@ fn bench_pjrt(b: &mut Bencher, repo: &RepoConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Host-math surrogate inner step for the pool cases: reads every
+/// state literal to host, runs a few deterministic element-wise passes
+/// (the FLOP burn standing in for a PJRT inner step), and re-uploads —
+/// so the pool's scheduling, channels, and barrier are measured with
+/// realistic per-step literal traffic but no artifacts required.
+struct HostMathEngine {
+    layout: Arc<FlatLayout>,
+    passes: usize,
+}
+
+impl InnerEngine for HostMathEngine {
+    fn inner_step(
+        &self,
+        rep: usize,
+        replica: &mut ReplicaState,
+        t: usize,
+    ) -> anyhow::Result<f64> {
+        let mut loss = 0.0f64;
+        for leaf in 0..self.layout.n_leaves() {
+            let mut v = replica.state[leaf].to_vec::<f32>()?;
+            for _ in 0..self.passes {
+                for (i, x) in v.iter_mut().enumerate() {
+                    *x = *x * 0.9995 + ((t * 31 + rep * 7 + i) % 101) as f32 * 1e-6;
+                }
+            }
+            loss += v[0] as f64;
+            let dims: Vec<i64> = self.layout.shape(leaf).iter().map(|&d| d as i64).collect();
+            replica.state[leaf] = Arc::new(xla::Literal::vec1(&v).reshape(&dims)?);
+        }
+        Ok(loss)
+    }
+
+    fn eval(&self, params: &[Arc<xla::Literal>]) -> anyhow::Result<f64> {
+        Ok(params.len() as f64)
+    }
+}
+
+/// Replica-parallel inner loop: measured wall-clock through the worker
+/// pool for M in {1, 2, 4, 8}, sequential (workers=1) vs fully
+/// parallel (workers=M), full DiLoCo schedule (outer sync every H).
+fn bench_pool(b: &mut Bencher, layout: &Arc<FlatLayout>) {
+    let engine = HostMathEngine {
+        layout: Arc::clone(layout),
+        passes: 4,
+    };
+    let n = layout.n_leaves();
+    let pristine = randn_params(layout, 7);
+    let host: Vec<HostTensor> = pristine.to_host();
+    let (steps, h) = (12usize, 4usize);
+    for m in [1usize, 2, 4, 8] {
+        for workers in if m == 1 { vec![1usize] } else { vec![1usize, m] } {
+            b.run(
+                &format!("pool/inner loop M={m} workers={workers} ({steps} steps, H={h})"),
+                || {
+                    let init_lits: Vec<Arc<xla::Literal>> = (0..n)
+                        .map(|l| Arc::new(pristine.leaf_literal(l).unwrap()))
+                        .collect();
+                    let mut replicas: Vec<ReplicaState> = (0..m)
+                        .map(|r| ReplicaState {
+                            state: init_lits.clone(),
+                            shard: TokenStream::new(CorpusSpec::default(), 11, r as u64),
+                        })
+                        .collect();
+                    let mut sync =
+                        OuterSync::new(Arc::clone(layout), &host, init_lits, 0.8, 0.9, 1)
+                            .expect("pool bench sync setup");
+                    let plan = DrivePlan {
+                        total_steps: steps,
+                        sync_interval: h,
+                        fragments: 1,
+                        n_params: n,
+                        eval_every: None,
+                        log_every: usize::MAX,
+                        workers,
+                    };
+                    let out = drive(&engine, &mut replicas, Some(&mut sync), &plan)
+                        .expect("pool bench drive");
+                    (out.step_losses.len(), sync.uploads())
+                },
+            );
+        }
+    }
+}
+
+/// Measured pool speedup vs the netsim analytic model (Appendix A
+/// assumes the M inner loops are perfectly concurrent; the pool should
+/// approach M/ceil(M/W) on an unloaded multi-core host).
+fn report_pool_speedups(b: &Bencher) {
+    println!("\n== replica-parallel inner loop: measured vs analytic model ==");
+    println!("{:<8} {:>14} {:>14}", "M", "measured", "model (W=M)");
+    let median_of = |name: &str| {
+        b.results()
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.median.as_secs_f64())
+    };
+    for m in [2usize, 4, 8] {
+        let seq = median_of(&format!("pool/inner loop M={m} workers=1 (12 steps, H=4)"));
+        let par = median_of(&format!("pool/inner loop M={m} workers={m} (12 steps, H=4)"));
+        if let (Some(seq), Some(par)) = (seq, par) {
+            let measured = seq / par;
+            let model = replica_parallel_speedup(m, m);
+            println!("{m:<8} {measured:>13.2}x {model:>13.1}x");
+        }
+    }
+    println!("(measured < model when cores < M or inner steps are too short to amortize)");
+}
+
 fn main() -> anyhow::Result<()> {
+    // `-- --diff OLD.json`: read the old report BEFORE benching, so a
+    // bad path fails fast and diffing against the default output path
+    // compares the previous run's numbers, not the file this run is
+    // about to overwrite.
+    let argv: Vec<String> = std::env::args().collect();
+    let old_report: Option<(String, Json)> = match argv.iter().position(|a| a == "--diff") {
+        Some(i) => {
+            let path = argv
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("--diff needs a path to an old BENCH json"))?;
+            Some((path.clone(), Json::parse_file(Path::new(path))?))
+        }
+        None => None,
+    };
+
     let mut b = Bencher::new(4.0);
     // a broken config is an error; only *missing artifacts* downgrade
     // to the host-path-only run
     let repo = RepoConfig::load(Path::new(env!("CARGO_MANIFEST_DIR")))?;
     let have_artifacts = repo.model_dir("m0").join("manifest.json").is_file();
 
-    if have_artifacts {
+    if have_artifacts && Runtime::cpu().is_ok() {
         bench_pjrt(&mut b, &repo)?;
     } else {
         println!(
-            "bench_hot_path: artifacts missing (make artifacts); \
-             PJRT cases skipped, flat-bus cases follow"
+            "bench_hot_path: artifacts or PJRT backend missing (make artifacts; \
+             offline xla stub gates execution); PJRT cases skipped, host cases follow"
         );
     }
 
     // flat-bus outer sync + broadcast on mini-ladder-shaped layouts
     // (host path: runs in every environment)
     for (label, layers, d, heads) in [("m0", 2usize, 64usize, 4usize), ("m2", 4, 128, 8)] {
-        let layout = Rc::new(FlatLayout::new(model_shapes(layers, d, heads)));
+        let layout = Arc::new(FlatLayout::new(model_shapes(layers, d, heads)));
         bench_outer_sync(&mut b, label, &layout);
+    }
+
+    // replica-parallel inner loop (worker pool) on the m0-shaped layout
+    {
+        let layout = Arc::new(FlatLayout::new(model_shapes(2, 64, 4)));
+        bench_pool(&mut b, &layout);
     }
 
     // data pipeline throughput
@@ -278,9 +412,17 @@ fn main() -> anyhow::Result<()> {
         stream.next_batch(16, 64)
     });
 
-    b.report("hot path (L3 coordinator: PJRT inner step + flat-bus outer sync)");
+    let title = "hot path (L3 coordinator: PJRT inner step + pool inner loop + flat-bus outer sync)";
+    b.report(title);
+    report_pool_speedups(&b);
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hot_path.json");
-    b.write_json(&out, "hot path (L3 coordinator: PJRT inner step + flat-bus outer sync)")?;
+    b.write_json(&out, title)?;
     println!("\nwrote {}", out.display());
+
+    // perf trend tracking (old report was loaded before the run)
+    if let Some((path, old)) = old_report {
+        println!("\n== diff vs {path} ==");
+        print_diff(&diff_reports(&old, &b.to_json(title))?);
+    }
     Ok(())
 }

@@ -19,12 +19,15 @@ USAGE:
   diloco train   [--model m0] [--algo dp|diloco-mK] [--h 30] [--batch 16]
                  [--lr 6e-3] [--eta 0.8] [--budget TOKENS] [--overtrain X]
                  [--seed N] [--eval-every K] [--downstream] [--fragments P]
+                 [--workers W]   # replica-parallel inner loop; 1 = sequential
   diloco predict --n PARAMS [--m REPLICAS] [--store runs/sweep.jsonl]
   diloco sweep   --grid NAME [--store runs/sweep.jsonl] [--max-runs N]
   diloco grids                      # list available sweep grids
   diloco report  [--exp all|table4|...] [--store runs/sweep.jsonl]
                  [--out reports/]
   diloco simulate utilization|walltime [--out reports/]
+  diloco bench-diff OLD.json NEW.json [--max-regress-pct P]
+                                    # per-case deltas between BENCH_*.json
 
 Artifacts must exist (make artifacts) for train/sweep.";
 
@@ -47,6 +50,7 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
         "report" => crate::report::cmd_report(&args),
         "simulate" => crate::report::cmd_simulate(&args),
         "predict" => cmd_predict(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -90,8 +94,37 @@ fn run_config_from_args(args: &Args) -> Result<RunConfig> {
     if let Some(p) = args.get("fragments") {
         cfg.streaming_fragments = p.parse().context("--fragments")?;
     }
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w.parse().context("--workers")?;
+    }
     cfg.downstream = args.flag("downstream");
     Ok(cfg)
+}
+
+/// Diff two machine-readable bench reports (`BENCH_*.json`) and print
+/// per-case deltas; with `--max-regress-pct P` exit non-zero when any
+/// case slowed down by more than P percent (CI regression gate).
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    use crate::util::bench::{diff_reports, print_diff};
+    use crate::util::json::Json;
+    if args.positional.len() != 2 {
+        bail!("usage: diloco bench-diff OLD.json NEW.json [--max-regress-pct P]");
+    }
+    let old = Json::parse_file(std::path::Path::new(&args.positional[0]))?;
+    let new = Json::parse_file(std::path::Path::new(&args.positional[1]))?;
+    let deltas = diff_reports(&old, &new)?;
+    print_diff(&deltas);
+    if let Some(p) = args.get("max-regress-pct") {
+        let cap: f64 = p.parse().context("--max-regress-pct")?;
+        let worst = deltas
+            .iter()
+            .filter_map(|d| d.delta_pct())
+            .fold(0.0f64, f64::max);
+        if worst > cap {
+            bail!("bench regression {worst:.1}% exceeds --max-regress-pct {cap}%");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {

@@ -7,19 +7,28 @@
 //! outer SGD-Nesterov step, and broadcasts the new global params back.
 //! Data-Parallel is the degenerate configuration (M=1, no outer step).
 //!
-//! Replica state lives as shared `Rc<xla::Literal>`s between steps (no
-//! host copies on the inner path); host round-trips happen only at the
-//! H-cadence sync and for scalar metrics. The sync itself runs on the
-//! flat parameter bus (`runtime::bus` + `coordinator::sync`): pulls
-//! touch only the due fragment's leaves, the outer step is a
+//! Replica state lives as shared `Arc<xla::Literal>`s between steps
+//! (no host copies on the inner path); host round-trips happen only at
+//! the H-cadence sync and for scalar metrics. The sync itself runs on
+//! the flat parameter bus (`runtime::bus` + `coordinator::sync`):
+//! pulls touch only the due fragment's leaves, the outer step is a
 //! zero-alloc vectorized pass over offset ranges, and the broadcast
 //! uploads each synced leaf once, sharing the immutable literal across
-//! all M replicas and the eval path. The "parallel for" over replicas
-//! is sequential on this single-core substrate; the parallel
-//! wall-clock is modeled by `netsim` exactly as the paper's Appendix A
-//! does.
+//! all M replicas and the eval path.
+//!
+//! The "parallel for" over replicas is real concurrency: the worker
+//! pool (`coordinator::pool`) gives each replica a persistent owner
+//! thread that runs its H inner steps between outer syncs, with the
+//! outer step as the barrier. `RunConfig::workers` picks the thread
+//! count; 1 (the default) is the sequential oracle, and any worker
+//! count produces bit-identical results (per-replica RNG streams and
+//! coordinator-side reductions are scheduling-independent — see the
+//! pool module docs). The analytic `netsim` wall-clock model (paper
+//! Appendix A) is now cross-checked against measured pool concurrency
+//! in `benches/bench_hot_path.rs`.
 
-use std::rc::Rc;
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -27,12 +36,13 @@ use crate::config::OptimizerPolicy;
 use crate::data::downstream::{scoring_input, McTaskSpec};
 use crate::data::synthetic::{CorpusSpec, TokenStream};
 use crate::runtime::{
-    decompose_micro, f32_scalar, i32_literal, scalar_f32, u32_scalar, FlatLayout, HostTensor,
-    ModelRuntime,
+    decompose_micro, f32_scalar, i32_literal, scalar_f32, u32_scalar, Executable, FlatLayout,
+    HostTensor, ModelRuntime,
 };
 use crate::train::schedule::{weight_decay, LrSchedule};
 use crate::util::json::Json;
 
+use super::pool::{drive, DrivePlan, InnerEngine, ReplicaState};
 use super::sync::OuterSync;
 
 /// Stream-id namespace: replicas use 0..M, eval uses the high range.
@@ -105,6 +115,12 @@ pub struct RunConfig {
     /// H % P == 0. Total communication is unchanged; peak per-sync
     /// traffic drops by P.
     pub streaming_fragments: usize,
+    /// Worker threads for the replica-parallel inner loop (clamped to
+    /// [1, M]). 1 = sequential execution, the deterministic oracle the
+    /// parallel path is pinned against; any value yields bit-identical
+    /// training results, so this is a pure wall-clock knob and is
+    /// deliberately excluded from sweep-store run ids.
+    pub workers: usize,
 }
 
 impl Default for RunConfig {
@@ -125,6 +141,7 @@ impl Default for RunConfig {
             log_every: 200,
             force_accumulate: false,
             streaming_fragments: 1,
+            workers: 1,
         }
     }
 }
@@ -236,13 +253,135 @@ impl RunMetrics {
     }
 }
 
-/// One replica: params ++ m ++ v as shared literals (manifest leaf
-/// order). `Rc` because after a broadcast all replicas reference the
-/// *same* uploaded literal for each synced leaf, and at init they share
-/// the init params and the zero-moment literals.
-struct Replica {
-    state: Vec<Rc<xla::Literal>>,
-    shard: TokenStream,
+/// The PJRT-backed inner engine the worker pool schedules: one AdamW
+/// step per call on either the fused `train_step` artifact or the
+/// grad/accumulate/apply decomposition (chosen once per run), plus the
+/// held-out eval path. Shared by `&self` across worker threads — the
+/// executables are `Arc`s into the process-wide compile cache and PJRT
+/// CPU execution is thread-safe per client; each call's mutable state
+/// (literal handles, token shard) is owned by exactly one worker.
+struct PjrtEngine {
+    n: usize,
+    seq: usize,
+    local_seqs: usize,
+    sched: LrSchedule,
+    wd: f64,
+    train_step: Option<Arc<Executable>>,
+    micro_plan: Option<Vec<usize>>,
+    grad_steps: BTreeMap<usize, Arc<Executable>>,
+    grad_acc: Option<Arc<Executable>>,
+    apply_update: Option<Arc<Executable>>,
+    eval_step: Arc<Executable>,
+    eval_batch: usize,
+    eval_tokens: usize,
+    corpus: CorpusSpec,
+    seed: u64,
+}
+
+impl InnerEngine for PjrtEngine {
+    fn inner_step(&self, _rep: usize, replica: &mut ReplicaState, t: usize) -> Result<f64> {
+        let n = self.n;
+        let seq = self.seq;
+        let lr = self.sched.lr(t);
+        let step_lit = f32_scalar(t as f32);
+        let lr_lit = f32_scalar(lr as f32);
+        let wd_lit = f32_scalar(self.wd as f32);
+        match &self.micro_plan {
+            None => {
+                // fused path: one dispatch
+                let toks = replica.shard.next_batch(self.local_seqs, seq);
+                let tok_lit = i32_literal(&[self.local_seqs, seq], &toks)?;
+                let mut args: Vec<&xla::Literal> =
+                    replica.state.iter().map(|l| &**l).collect();
+                args.push(&tok_lit);
+                args.push(&step_lit);
+                args.push(&lr_lit);
+                args.push(&wd_lit);
+                let out = self.train_step.as_ref().expect("fused path").call(&args)?;
+                let loss = scalar_f32(&out[3 * n])? as f64;
+                replica.state = out.into_iter().take(3 * n).map(Arc::new).collect();
+                Ok(loss)
+            }
+            Some(plan) => {
+                // micro-batch accumulation path
+                let mut acc: Option<Vec<xla::Literal>> = None;
+                let mut loss_sum = 0.0f64;
+                for &mb in plan {
+                    let toks = replica.shard.next_batch(mb, seq);
+                    let tok_lit = i32_literal(&[mb, seq], &toks)?;
+                    let gs = &self.grad_steps[&mb];
+                    let mut args: Vec<&xla::Literal> =
+                        replica.state[..n].iter().map(|l| &**l).collect();
+                    args.push(&tok_lit);
+                    let out = gs.call(&args)?;
+                    loss_sum +=
+                        scalar_f32(&out[n])? as f64 * mb as f64 / self.local_seqs as f64;
+                    let w = mb as f32 / self.local_seqs as f32;
+                    let g: Vec<xla::Literal> = out.into_iter().take(n).collect();
+                    acc = Some(match acc {
+                        None => {
+                            // scale the first micro grad by its weight
+                            let wa = f32_scalar(w);
+                            let wb = f32_scalar(0.0);
+                            let mut args: Vec<&xla::Literal> =
+                                g.iter().chain(g.iter()).collect();
+                            args.push(&wa);
+                            args.push(&wb);
+                            self.grad_acc.as_ref().expect("accum path").call(&args)?
+                        }
+                        Some(prev) => {
+                            let wa = f32_scalar(1.0);
+                            let wb = f32_scalar(w);
+                            let mut args: Vec<&xla::Literal> =
+                                prev.iter().chain(g.iter()).collect();
+                            args.push(&wa);
+                            args.push(&wb);
+                            self.grad_acc.as_ref().expect("accum path").call(&args)?
+                        }
+                    });
+                }
+                let grads = acc.unwrap();
+                let mut args: Vec<&xla::Literal> = replica
+                    .state
+                    .iter()
+                    .map(|l| &**l)
+                    .chain(grads.iter())
+                    .collect();
+                args.push(&step_lit);
+                args.push(&lr_lit);
+                args.push(&wd_lit);
+                let out = self.apply_update.as_ref().expect("accum path").call(&args)?;
+                replica.state = out.into_iter().take(3 * n).map(Arc::new).collect();
+                Ok(loss_sum)
+            }
+        }
+    }
+
+    /// Evaluation takes literals directly — the DiLoCo path hands the
+    /// cached global literal set over without any host->device copies.
+    /// The eval stream is rebuilt per call (stateless), so eval results
+    /// do not depend on when the pool schedules them.
+    fn eval(&self, params: &[Arc<xla::Literal>]) -> Result<f64> {
+        let eb = self.eval_batch;
+        let mut stream = TokenStream::new(self.corpus.clone(), self.seed, EVAL_STREAM);
+        let n_batches = (self.eval_tokens / (eb * self.seq)).max(1);
+        let mut sum = 0.0f64;
+        let mut count = 0.0f64;
+        for _ in 0..n_batches {
+            let toks = stream.next_batch(eb, self.seq);
+            let t = i32_literal(&[eb, self.seq], &toks)?;
+            let mut args: Vec<&xla::Literal> = params.iter().map(|l| &**l).collect();
+            args.push(&t);
+            let out = self.eval_step.call(&args)?;
+            sum += scalar_f32(&out[0])? as f64;
+            count += scalar_f32(&out[1])? as f64;
+        }
+        Ok(sum / count)
+    }
+
+    fn inner_lr(&self, t: usize) -> Option<f64> {
+        Some(self.sched.lr(t))
+    }
 }
 
 /// Execute one training run end to end.
@@ -338,10 +477,10 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         .collect::<Result<_>>()?;
 
     // ---- state ----------------------------------------------------------
-    let params0: Vec<Rc<xla::Literal>> = init
+    let params0: Vec<Arc<xla::Literal>> = init
         .call(&[&u32_scalar(cfg.seed as u32)])?
         .into_iter()
-        .map(Rc::new)
+        .map(Arc::new)
         .collect();
     let host_params0: Vec<HostTensor> = params0
         .iter()
@@ -351,11 +490,11 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
     // and share it across every replica and both moment slots —
     // literals are immutable, and the inner step replaces (never
     // mutates) state, so init uploads 2N literals instead of 3N*M.
-    let zero_moments: Vec<Rc<xla::Literal>> = host_params0
+    let zero_moments: Vec<Arc<xla::Literal>> = host_params0
         .iter()
-        .map(|p| Ok(Rc::new(HostTensor::zeros(&p.shape).to_literal()?)))
+        .map(|p| Ok(Arc::new(HostTensor::zeros(&p.shape).to_literal()?)))
         .collect::<Result<_>>()?;
-    let make_state = || -> Vec<Rc<xla::Literal>> {
+    let make_state = || -> Vec<Arc<xla::Literal>> {
         params0
             .iter()
             .chain(zero_moments.iter())
@@ -367,8 +506,10 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         vocab: mr.manifest.model.vocab,
         ..CorpusSpec::default()
     };
-    let mut replicas: Vec<Replica> = (0..m_replicas)
-        .map(|r| Replica {
+    // Per-replica state and data shard, owned by one pool worker each
+    // for the whole run (paper Algorithm 1 line 4: shard D_m).
+    let mut replicas: Vec<ReplicaState> = (0..m_replicas)
+        .map(|r| ReplicaState {
             state: make_state(),
             shard: TokenStream::new(corpus.clone(), cfg.seed, r as u64),
         })
@@ -376,7 +517,7 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
     // The H-cadence sync engine: flat-bus global model + outer
     // optimizer arenas + per-leaf literal cache (DiLoCo only).
     let mut sync: Option<OuterSync> = if is_diloco {
-        let layout = Rc::new(FlatLayout::from_specs(&mr.manifest.params));
+        let layout = Arc::new(FlatLayout::from_specs(&mr.manifest.params));
         Some(OuterSync::new(
             layout,
             &host_params0,
@@ -388,171 +529,49 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
     } else {
         None
     };
-    let mut outer_syncs = 0usize;
 
-    // ---- helpers --------------------------------------------------------
-    // Evaluation takes literals directly — the DiLoCo path hands the
-    // cached global literal set over without any host->device copies.
-    let eval_model = |lits: &[Rc<xla::Literal>]| -> Result<f64> {
-        let eb = mr.manifest.eval_batch;
-        let mut stream = TokenStream::new(corpus.clone(), cfg.seed, EVAL_STREAM);
-        let n_batches = (cfg.eval_tokens / (eb * seq)).max(1);
-        let mut sum = 0.0f64;
-        let mut count = 0.0f64;
-        for _ in 0..n_batches {
-            let toks = stream.next_batch(eb, seq);
-            let t = i32_literal(&[eb, seq], &toks)?;
-            let mut args: Vec<&xla::Literal> = lits.iter().map(|l| &**l).collect();
-            args.push(&t);
-            let out = eval_step.call(&args)?;
-            sum += scalar_f32(&out[0])? as f64;
-            count += scalar_f32(&out[1])? as f64;
-        }
-        Ok(sum / count)
+    let engine = PjrtEngine {
+        n,
+        seq,
+        local_seqs,
+        sched,
+        wd,
+        train_step,
+        micro_plan,
+        grad_steps,
+        grad_acc,
+        apply_update,
+        eval_step,
+        eval_batch: mr.manifest.eval_batch,
+        eval_tokens: cfg.eval_tokens,
+        corpus,
+        seed: cfg.seed,
     };
 
-    // For eval purposes: DP evaluates the current model; DiLoCo the most
-    // recent *global* model (paper section 2.2).
-    let mut loss_curve = Vec::new();
-    let mut eval_curve = Vec::new();
-    let mut last_train_loss = f64::NAN;
-
-    // ---- training loop ----------------------------------------------------
-    for t in 1..=total_steps {
-        let lr = sched.lr(t);
-        let step_lit = f32_scalar(t as f32);
-        let lr_lit = f32_scalar(lr as f32);
-        let wd_lit = f32_scalar(wd as f32);
-        let mut step_loss = 0.0f64;
-
-        for rep in replicas.iter_mut() {
-            let loss = match &micro_plan {
-                None => {
-                    // fused path: one dispatch
-                    let toks = rep.shard.next_batch(local_seqs, seq);
-                    let tok_lit = i32_literal(&[local_seqs, seq], &toks)?;
-                    let mut args: Vec<&xla::Literal> =
-                        rep.state.iter().map(|l| &**l).collect();
-                    args.push(&tok_lit);
-                    args.push(&step_lit);
-                    args.push(&lr_lit);
-                    args.push(&wd_lit);
-                    let out = train_step.as_ref().expect("fused path").call(&args)?;
-                    let loss = scalar_f32(&out[3 * n])? as f64;
-                    rep.state = out.into_iter().take(3 * n).map(Rc::new).collect();
-                    loss
-                }
-                Some(plan) => {
-                    // micro-batch accumulation path
-                    let mut acc: Option<Vec<xla::Literal>> = None;
-                    let mut loss_sum = 0.0f64;
-                    for &mb in plan {
-                        let toks = rep.shard.next_batch(mb, seq);
-                        let tok_lit = i32_literal(&[mb, seq], &toks)?;
-                        let gs = &grad_steps[&mb];
-                        let mut args: Vec<&xla::Literal> =
-                            rep.state[..n].iter().map(|l| &**l).collect();
-                        args.push(&tok_lit);
-                        let out = gs.call(&args)?;
-                        loss_sum +=
-                            scalar_f32(&out[n])? as f64 * mb as f64 / local_seqs as f64;
-                        let w = mb as f32 / local_seqs as f32;
-                        let g: Vec<xla::Literal> = out.into_iter().take(n).collect();
-                        acc = Some(match acc {
-                            None => {
-                                // scale the first micro grad by its weight
-                                let wa = f32_scalar(w);
-                                let wb = f32_scalar(0.0);
-                                let mut args: Vec<&xla::Literal> =
-                                    g.iter().chain(g.iter()).collect();
-                                args.push(&wa);
-                                args.push(&wb);
-                                grad_acc.as_ref().expect("accum path").call(&args)?
-                            }
-                            Some(prev) => {
-                                let wa = f32_scalar(1.0);
-                                let wb = f32_scalar(w);
-                                let mut args: Vec<&xla::Literal> =
-                                    prev.iter().chain(g.iter()).collect();
-                                args.push(&wa);
-                                args.push(&wb);
-                                grad_acc.as_ref().expect("accum path").call(&args)?
-                            }
-                        });
-                    }
-                    let grads = acc.unwrap();
-                    let mut args: Vec<&xla::Literal> = rep
-                        .state
-                        .iter()
-                        .map(|l| &**l)
-                        .chain(grads.iter())
-                        .collect();
-                    args.push(&step_lit);
-                    args.push(&lr_lit);
-                    args.push(&wd_lit);
-                    let out = apply_update.as_ref().expect("accum path").call(&args)?;
-                    rep.state = out.into_iter().take(3 * n).map(Rc::new).collect();
-                    loss_sum
-                }
-            };
-            step_loss += loss / m_replicas as f64;
-        }
-        last_train_loss = step_loss;
-
-        // ---- outer synchronization (Algorithm 1 lines 8-12) ----------------
-        let sync_now = is_diloco && (t % frag_interval == 0 || t == total_steps);
-        if sync_now {
-            let bus = sync.as_mut().expect("DiLoCo sync state");
-            // vanilla: all leaves; streaming: the due fragment, or a
-            // full flush on the final step so no fragment is left stale.
-            let frag: Option<usize> = if fragments > 1 && t != total_steps {
-                Some(((t / frag_interval).wrapping_sub(1)) % fragments)
-            } else {
-                None
-            };
-            {
-                let parts: Vec<&[Rc<xla::Literal>]> =
-                    replicas.iter().map(|r| &r.state[..n]).collect();
-                bus.sync(&parts, frag)?;
-            }
-            outer_syncs += 1;
-            // broadcast: every replica adopts the same freshly-uploaded
-            // literal per synced leaf (N uploads, not M×N); AdamW
-            // moments persist (the key difference from FedOpt).
-            let lits = bus.global_literals();
-            for rep in replicas.iter_mut() {
-                for leaf in bus.synced_leaves(frag) {
-                    rep.state[leaf] = Rc::clone(&lits[leaf]);
-                }
-            }
-        }
-
-        if t % cfg.log_every == 0 || t == 1 || t == total_steps {
-            loss_curve.push((t, step_loss));
-            log::info!(
-                "  step {t}/{total_steps} loss={step_loss:.4} lr={lr:.2e}"
-            );
-        }
-        if let Some(k) = cfg.eval_every {
-            if t % k == 0 && t != total_steps {
-                let e = match &sync {
-                    Some(bus) => eval_model(bus.global_literals())?,
-                    None => eval_model(&replicas[0].state[..n])?,
-                };
-                eval_curve.push((t, e));
-                log::info!("  step {t} eval_loss={e:.4}");
-            }
-        }
-    }
+    // ---- training (inner loops in the worker pool, outer steps at the
+    // barrier; see coordinator::pool for the concurrency model) --------
+    let plan = DrivePlan {
+        total_steps,
+        sync_interval: frag_interval,
+        fragments,
+        n_params: n,
+        eval_every: cfg.eval_every,
+        log_every: cfg.log_every,
+        workers: cfg.workers,
+    };
+    let outcome = drive(&engine, &mut replicas, sync.as_mut(), &plan)?;
+    let last_train_loss = outcome.step_losses.last().copied().unwrap_or(f64::NAN);
+    let mut eval_curve = outcome.eval_curve;
 
     // DP's "global" model is simply the replica's current params;
     // DiLoCo's is the literal cache, fresh after the final full-flush
-    // sync. Either way no re-upload happens here.
-    let final_lits: Vec<Rc<xla::Literal>> = match &sync {
+    // sync. Either way no re-upload happens here (paper section 2.2:
+    // DiLoCo evaluates the most recent global model).
+    let final_lits: Vec<Arc<xla::Literal>> = match &sync {
         Some(bus) => bus.global_literals().to_vec(),
         None => replicas[0].state[..n].to_vec(),
     };
-    let final_eval = eval_model(&final_lits)?;
+    let final_eval = engine.eval(&final_lits)?;
     eval_curve.push((total_steps, final_eval));
 
     // ---- downstream zero-shot scoring --------------------------------------
@@ -603,9 +622,9 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         final_eval_loss: final_eval,
         final_train_loss: last_train_loss,
         eval_curve,
-        loss_curve,
+        loss_curve: outcome.loss_curve,
         downstream,
-        outer_syncs,
+        outer_syncs: outcome.outer_syncs,
         wall_secs: t_start.elapsed().as_secs_f64(),
     })
 }

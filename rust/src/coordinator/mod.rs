@@ -1,11 +1,14 @@
 //! L3 coordination: the paper's system contribution. DiLoCo driver
 //! (Algorithm 1), outer SGD-Nesterov optimizer over the flat parameter
-//! bus, the H-cadence sync engine, replica management.
+//! bus, the H-cadence sync engine, and the replica-parallel worker
+//! pool that runs the M inner loops concurrently between outer syncs.
 
 pub mod diloco;
 pub mod outer_opt;
+pub mod pool;
 pub mod sync;
 
 pub use diloco::{run, Algo, RunConfig, RunMetrics};
 pub use outer_opt::{outer_gradient, OuterOpt};
+pub use pool::{drive, DriveOutcome, DrivePlan, InnerEngine, ReplicaState};
 pub use sync::OuterSync;

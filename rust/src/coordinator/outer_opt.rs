@@ -221,10 +221,10 @@ mod tests {
     use super::*;
     use crate::util::prop;
     use crate::util::rng::Rng;
-    use std::rc::Rc;
+    use std::sync::Arc;
 
     fn flat1(data: Vec<f32>) -> FlatParams {
-        let layout = Rc::new(FlatLayout::new(vec![vec![data.len()]]));
+        let layout = Arc::new(FlatLayout::new(vec![vec![data.len()]]));
         let mut fp = FlatParams::zeros(&layout);
         fp.data_mut().copy_from_slice(&data);
         fp
@@ -282,7 +282,7 @@ mod tests {
     fn step_ranges_leaves_other_elements_untouched() {
         // A fragment step must not move params or velocity outside its
         // ranges (streaming fragments own disjoint momentum slices).
-        let layout = Rc::new(FlatLayout::new(vec![vec![2], vec![3], vec![2]]));
+        let layout = Arc::new(FlatLayout::new(vec![vec![2], vec![3], vec![2]]));
         let mut global = FlatParams::zeros(&layout);
         global.data_mut().copy_from_slice(&[1.0; 7]);
         let mut delta = FlatParams::zeros(&layout);

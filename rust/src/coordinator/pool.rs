@@ -1,0 +1,576 @@
+//! Replica-parallel inner loop: the worker pool that makes Algorithm
+//! 1's "parallel for over replicas" actually parallel.
+//!
+//! # Concurrency model
+//!
+//! Training runs as a sequence of **segments** — the step ranges
+//! between consecutive outer-sync boundaries (plus eval boundaries for
+//! Data-Parallel). Each worker thread *owns* a fixed subset of
+//! replicas for the whole run (`replica r -> worker r % workers`): the
+//! replica's literal-handle state and its `TokenStream` shard live
+//! inside the worker, so all RNG/data consumption is per-replica
+//! sequential no matter how segments are scheduled. The coordinator
+//! sends each worker a `Run` command for the segment; workers execute
+//! their replicas' H inner steps concurrently and hand back per-step
+//! losses plus `Arc` handles to their current parameter literals over
+//! a channel.
+//!
+//! The **outer step is the barrier**: the coordinator blocks until
+//! every worker reports, assembles the replica parameter handles in
+//! replica-index order, runs the zero-alloc flat-bus outer step
+//! ([`OuterSync::sync`]), and broadcasts by attaching the deduplicated
+//! global literals to the *next* `Run` command (workers adopt them
+//! before stepping). Only the coordinator ever touches the flat
+//! arenas; workers only ever read literals — ownership never crosses
+//! the barrier in both directions at once.
+//!
+//! # Why determinism holds
+//!
+//! Bit-identical results for any worker count follow from three
+//! invariants, each pinned by `tests/worker_pool.rs`:
+//!
+//! 1. replica state + data shard are owned by exactly one worker and
+//!    advance in step order — scheduling cannot reorder a replica's
+//!    own computation;
+//! 2. cross-replica reduction (the per-step mean loss and the outer
+//!    gradient accumulation) happens on the coordinator in replica
+//!    index order, identical to the sequential loop's summation order;
+//! 3. evaluation reads immutable literal sets that only change at
+//!    barriers, so its placement relative to worker execution is
+//!    irrelevant.
+//!
+//! `workers == 1` (the default, and `--workers 1` on the CLI) runs the
+//! whole schedule inline on the caller's thread with the classic
+//! step-major/replica-minor loop — the sequential oracle the parallel
+//! path is tested against.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::sync::OuterSync;
+use crate::data::synthetic::TokenStream;
+
+/// One replica as the pool owns it: params ++ m ++ v literal handles
+/// (manifest leaf order; only the first `n_params` leaves take part in
+/// outer syncs) plus the replica's private data shard.
+pub struct ReplicaState {
+    pub state: Vec<Arc<xla::Literal>>,
+    pub shard: TokenStream,
+}
+
+impl ReplicaState {
+    /// Apply a broadcast: adopt the shared literal for each synced
+    /// leaf (every replica ends up pointing at the same upload).
+    fn adopt(&mut self, adopt: &Adopt) {
+        for (leaf, lit) in adopt {
+            self.state[*leaf] = Arc::clone(lit);
+        }
+    }
+}
+
+/// The inner computation the pool schedules. Implementations must be
+/// `Sync` (shared by reference across workers) and deterministic per
+/// `(rep, replica state, t)` — the PJRT path satisfies both, and tests
+/// substitute host-math engines.
+pub trait InnerEngine: Sync {
+    /// One inner optimizer step for replica `rep` at 1-based global
+    /// step `t`; replaces `replica.state` handles and returns the
+    /// replica's mean loss for the step.
+    fn inner_step(&self, rep: usize, replica: &mut ReplicaState, t: usize) -> Result<f64>;
+
+    /// Eval loss of a parameter literal set (first `n_params` leaves).
+    fn eval(&self, params: &[Arc<xla::Literal>]) -> Result<f64>;
+
+    /// Effective inner learning rate at step `t`, for log lines only
+    /// (None when the engine has no schedule — e.g. test surrogates).
+    fn inner_lr(&self, _t: usize) -> Option<f64> {
+        None
+    }
+}
+
+/// Schedule parameters for one training run.
+#[derive(Debug, Clone)]
+pub struct DrivePlan {
+    pub total_steps: usize,
+    /// Steps between outer-sync events (H, or H/P with streaming
+    /// fragments). Ignored when no `OuterSync` is supplied.
+    pub sync_interval: usize,
+    /// Streaming fragment count P (1 = vanilla DiLoCo).
+    pub fragments: usize,
+    /// Number of parameter leaves (the prefix of `state` that syncs).
+    pub n_params: usize,
+    /// Evaluate every k steps (None = final only).
+    pub eval_every: Option<usize>,
+    pub log_every: usize,
+    /// Worker threads for the inner loop; clamped to [1, M]. 1 =
+    /// sequential oracle (no threads spawned).
+    pub workers: usize,
+}
+
+/// Everything the drive loop measures (the caller owns final-eval and
+/// metric assembly).
+#[derive(Debug, Default)]
+pub struct DriveOutcome {
+    /// Mean loss across replicas for every step, in step order.
+    pub step_losses: Vec<f64>,
+    /// Sampled (step, loss) points (log_every cadence, as before).
+    pub loss_curve: Vec<(usize, f64)>,
+    /// Intermediate (step, eval loss) points (eval_every cadence).
+    pub eval_curve: Vec<(usize, f64)>,
+    pub outer_syncs: usize,
+}
+
+/// Broadcast payload: (leaf index, shared literal) pairs every replica
+/// adopts before its next inner step.
+type Adopt = Vec<(usize, Arc<xla::Literal>)>;
+
+/// Per-segment result: `losses[r]` / `params[r]` for replica r.
+type SegmentData = (Vec<Vec<f64>>, Vec<Vec<Arc<xla::Literal>>>);
+
+/// Run one training schedule over the replicas, parallelizing the
+/// inner loop across `plan.workers` threads. On return `replicas`
+/// holds the final states (broadcasts applied), whatever the worker
+/// count; `sync`, when supplied, has performed every due outer step.
+pub fn drive<E: InnerEngine>(
+    engine: &E,
+    replicas: &mut Vec<ReplicaState>,
+    sync: Option<&mut OuterSync>,
+    plan: &DrivePlan,
+) -> Result<DriveOutcome> {
+    let m = replicas.len();
+    if m == 0 {
+        bail!("drive: zero replicas");
+    }
+    if plan.n_params == 0 {
+        bail!("drive: n_params must be >= 1");
+    }
+    if plan.log_every == 0 {
+        bail!("drive: log_every must be >= 1");
+    }
+    if plan.eval_every == Some(0) {
+        bail!("drive: eval_every must be >= 1");
+    }
+    if sync.is_some() && plan.sync_interval == 0 {
+        bail!("drive: sync_interval must be >= 1");
+    }
+    for (r, rep) in replicas.iter().enumerate() {
+        if rep.state.len() < plan.n_params {
+            bail!(
+                "drive: replica {r} has {} state leaves, need >= {}",
+                rep.state.len(),
+                plan.n_params
+            );
+        }
+    }
+    let workers = plan.workers.clamp(1, m);
+
+    if workers == 1 {
+        let mut exec = InlineExec {
+            engine,
+            replicas: &mut replicas[..],
+            n_params: plan.n_params,
+        };
+        let (outcome, pending) = coordinate(engine, &mut exec, sync, plan, m)?;
+        // final broadcast (the full flush at t = total_steps)
+        for rep in replicas.iter_mut() {
+            rep.adopt(&pending);
+        }
+        return Ok(outcome);
+    }
+
+    let n_params = plan.n_params;
+    std::thread::scope(|scope| -> Result<DriveOutcome> {
+        // Partition ownership: replica r lives on worker r % workers
+        // for the whole run (its TokenStream advances only there).
+        let mut owned: Vec<Vec<(usize, ReplicaState)>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (r, rep) in replicas.drain(..).enumerate() {
+            owned[r % workers].push((r, rep));
+        }
+        let mut txs = Vec::with_capacity(workers);
+        let mut rxs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for set in owned {
+            let (cmd_tx, cmd_rx) = channel::<Cmd>();
+            let (res_tx, res_rx) = channel::<Result<WorkerReport>>();
+            txs.push(cmd_tx);
+            rxs.push(res_rx);
+            handles.push(scope.spawn(move || worker_loop(engine, n_params, set, cmd_rx, res_tx)));
+        }
+
+        let mut exec = PoolExec { txs, rxs, m };
+        let res = coordinate(engine, &mut exec, sync, plan, m);
+
+        // Shut down and reclaim replica states whether or not the run
+        // succeeded; workers apply the final broadcast before exiting.
+        let pending = match &res {
+            Ok((_, p)) => p.clone(),
+            Err(_) => Vec::new(),
+        };
+        for tx in &exec.txs {
+            let _ = tx.send(Cmd::Finish {
+                adopt: pending.clone(),
+            });
+        }
+        drop(exec); // closes the command channels
+        let mut returned: Vec<(usize, ReplicaState)> = Vec::with_capacity(m);
+        let mut panicked = false;
+        for h in handles {
+            match h.join() {
+                Ok(set) => returned.extend(set),
+                Err(_) => panicked = true,
+            }
+        }
+        returned.sort_by_key(|(r, _)| *r);
+        replicas.extend(returned.into_iter().map(|(_, rep)| rep));
+        let (outcome, _) = res?;
+        if panicked || replicas.len() != m {
+            bail!("drive: a worker panicked; replica states were lost");
+        }
+        Ok(outcome)
+    })
+}
+
+// ---- the coordinator loop (shared by inline and threaded paths) ------
+
+/// Executes one segment of inner steps across all replicas and reports
+/// per-replica per-step losses + current parameter handles.
+trait SegmentExec {
+    fn run_segment(&mut self, from: usize, to: usize, adopt: &Adopt) -> Result<SegmentData>;
+}
+
+/// End of the segment starting after `t0`: the next outer-sync
+/// boundary (DiLoCo), the next eval point (Data-Parallel, whose eval
+/// reads per-step replica state), or the end of training.
+fn next_boundary(t0: usize, plan: &DrivePlan, diloco: bool) -> usize {
+    let mut b = plan.total_steps;
+    if diloco {
+        b = b.min((t0 / plan.sync_interval + 1).saturating_mul(plan.sync_interval));
+    } else if let Some(k) = plan.eval_every {
+        b = b.min((t0 / k + 1).saturating_mul(k));
+    }
+    b
+}
+
+fn coordinate<E: InnerEngine, X: SegmentExec>(
+    engine: &E,
+    exec: &mut X,
+    mut sync: Option<&mut OuterSync>,
+    plan: &DrivePlan,
+    m: usize,
+) -> Result<(DriveOutcome, Adopt)> {
+    let diloco = sync.is_some();
+    let mut out = DriveOutcome::default();
+    let mut pending: Adopt = Vec::new();
+    let mut t0 = 0usize;
+    while t0 < plan.total_steps {
+        let t1 = next_boundary(t0, plan, diloco);
+        let (losses, params) = exec.run_segment(t0, t1, &pending)?;
+        pending.clear();
+
+        // Per-step mean loss, summed in replica index order — the same
+        // order as the sequential loop, so results are bit-identical.
+        for t in t0 + 1..=t1 {
+            let mut step_loss = 0.0f64;
+            for rep_losses in &losses {
+                step_loss += rep_losses[t - t0 - 1] / m as f64;
+            }
+            out.step_losses.push(step_loss);
+            if t % plan.log_every == 0 || t == 1 || t == plan.total_steps {
+                out.loss_curve.push((t, step_loss));
+                match engine.inner_lr(t) {
+                    Some(lr) => log::info!(
+                        "  step {t}/{} loss={step_loss:.4} lr={lr:.2e}",
+                        plan.total_steps
+                    ),
+                    None => log::info!("  step {t}/{} loss={step_loss:.4}", plan.total_steps),
+                }
+            }
+        }
+
+        // DiLoCo evals strictly inside the segment read the global
+        // model from the *previous* sync — by construction no fresher
+        // global exists at those steps, so evaluating at the barrier
+        // reproduces the sequential schedule exactly.
+        if let (Some(bus), Some(k)) = (sync.as_deref(), plan.eval_every) {
+            for t in t0 + 1..t1 {
+                if t % k == 0 && t != plan.total_steps {
+                    let e = engine.eval(bus.global_literals())?;
+                    out.eval_curve.push((t, e));
+                    log::info!("  step {t} eval_loss={e:.4}");
+                }
+            }
+        }
+
+        // Outer synchronization at the boundary (Algorithm 1 lines
+        // 8-12): barrier already passed, replica handles in hand.
+        if let Some(bus) = sync.as_deref_mut() {
+            if t1 % plan.sync_interval == 0 || t1 == plan.total_steps {
+                // vanilla: all leaves; streaming: the due fragment, or
+                // a full flush on the final step so nothing stays stale.
+                let frag: Option<usize> = if plan.fragments > 1 && t1 != plan.total_steps {
+                    Some(((t1 / plan.sync_interval).wrapping_sub(1)) % plan.fragments)
+                } else {
+                    None
+                };
+                {
+                    let parts: Vec<&[Arc<xla::Literal>]> =
+                        params.iter().map(|p| &p[..]).collect();
+                    bus.sync(&parts, frag)?;
+                }
+                out.outer_syncs += 1;
+                // Broadcast = the next segment's adopt list: every
+                // replica gets the same freshly-uploaded literal per
+                // synced leaf (N uploads, never M×N).
+                let lits = bus.global_literals();
+                pending = bus
+                    .synced_leaves(frag)
+                    .map(|leaf| (leaf, Arc::clone(&lits[leaf])))
+                    .collect();
+            }
+        }
+
+        // Eval due exactly at the boundary sees the post-sync model
+        // (DiLoCo) or the boundary-step replica state (Data-Parallel).
+        if let Some(k) = plan.eval_every {
+            if t1 % k == 0 && t1 != plan.total_steps {
+                let e = match sync.as_deref() {
+                    Some(bus) => engine.eval(bus.global_literals())?,
+                    None => engine.eval(&params[0])?,
+                };
+                out.eval_curve.push((t1, e));
+                log::info!("  step {t1} eval_loss={e:.4}");
+            }
+        }
+        t0 = t1;
+    }
+    Ok((out, pending))
+}
+
+// ---- sequential oracle ------------------------------------------------
+
+struct InlineExec<'a, E: InnerEngine> {
+    engine: &'a E,
+    replicas: &'a mut [ReplicaState],
+    n_params: usize,
+}
+
+impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
+    fn run_segment(&mut self, from: usize, to: usize, adopt: &Adopt) -> Result<SegmentData> {
+        for rep in self.replicas.iter_mut() {
+            rep.adopt(adopt);
+        }
+        let m = self.replicas.len();
+        let mut losses = vec![Vec::with_capacity(to - from); m];
+        // the classic sequential shape: step-major, replica-minor
+        for t in from + 1..=to {
+            for (r, rep) in self.replicas.iter_mut().enumerate() {
+                losses[r].push(self.engine.inner_step(r, rep, t)?);
+            }
+        }
+        let params = self
+            .replicas
+            .iter()
+            .map(|r| r.state[..self.n_params].to_vec())
+            .collect();
+        Ok((losses, params))
+    }
+}
+
+// ---- worker pool ------------------------------------------------------
+
+enum Cmd {
+    /// Adopt the broadcast literals, then run steps (from, to].
+    Run { from: usize, to: usize, adopt: Adopt },
+    /// Adopt the final broadcast and exit, returning replica ownership.
+    Finish { adopt: Adopt },
+}
+
+struct WorkerReport {
+    /// (replica id, per-step losses, parameter literal handles).
+    reps: Vec<(usize, Vec<f64>, Vec<Arc<xla::Literal>>)>,
+}
+
+fn worker_loop<E: InnerEngine>(
+    engine: &E,
+    n_params: usize,
+    mut owned: Vec<(usize, ReplicaState)>,
+    rx: Receiver<Cmd>,
+    tx: Sender<Result<WorkerReport>>,
+) -> Vec<(usize, ReplicaState)> {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Run { from, to, adopt } => {
+                let mut report = WorkerReport {
+                    reps: Vec::with_capacity(owned.len()),
+                };
+                let mut err: Option<anyhow::Error> = None;
+                'replicas: for (rid, rep) in owned.iter_mut() {
+                    rep.adopt(&adopt);
+                    let mut losses = Vec::with_capacity(to - from);
+                    for t in from + 1..=to {
+                        match engine.inner_step(*rid, rep, t) {
+                            Ok(l) => losses.push(l),
+                            Err(e) => {
+                                err = Some(e);
+                                break 'replicas;
+                            }
+                        }
+                    }
+                    report.reps.push((*rid, losses, rep.state[..n_params].to_vec()));
+                }
+                let msg = match err {
+                    Some(e) => Err(e),
+                    None => Ok(report),
+                };
+                let failed = msg.is_err();
+                if tx.send(msg).is_err() || failed {
+                    break;
+                }
+            }
+            Cmd::Finish { adopt } => {
+                for (_, rep) in owned.iter_mut() {
+                    rep.adopt(&adopt);
+                }
+                break;
+            }
+        }
+    }
+    owned
+}
+
+struct PoolExec {
+    txs: Vec<Sender<Cmd>>,
+    rxs: Vec<Receiver<Result<WorkerReport>>>,
+    m: usize,
+}
+
+impl SegmentExec for PoolExec {
+    fn run_segment(&mut self, from: usize, to: usize, adopt: &Adopt) -> Result<SegmentData> {
+        for tx in &self.txs {
+            tx.send(Cmd::Run {
+                from,
+                to,
+                adopt: adopt.clone(),
+            })
+            .map_err(|_| anyhow!("worker hung up before segment ({from}, {to}]"))?;
+        }
+        let mut losses: Vec<Vec<f64>> = vec![Vec::new(); self.m];
+        let mut params: Vec<Vec<Arc<xla::Literal>>> = vec![Vec::new(); self.m];
+        for (w, rx) in self.rxs.iter().enumerate() {
+            let report = rx
+                .recv()
+                .map_err(|_| anyhow!("worker {w} died during segment ({from}, {to}]"))??;
+            for (rid, l, p) in report.reps {
+                losses[rid] = l;
+                params[rid] = p;
+            }
+        }
+        for r in 0..self.m {
+            if losses[r].len() != to - from || params[r].is_empty() {
+                bail!(
+                    "replica {r}: incomplete segment report ({} of {} steps)",
+                    losses[r].len(),
+                    to - from
+                );
+            }
+        }
+        Ok((losses, params))
+    }
+}
+
+/// Compile-time pin: everything that crosses a worker-channel is Send.
+#[allow(dead_code)]
+fn _assert_send() {
+    fn ok<T: Send>() {}
+    ok::<ReplicaState>();
+    ok::<Cmd>();
+    ok::<WorkerReport>();
+    ok::<Result<WorkerReport>>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(total: usize) -> DrivePlan {
+        DrivePlan {
+            total_steps: total,
+            sync_interval: usize::MAX,
+            fragments: 1,
+            n_params: 1,
+            eval_every: None,
+            log_every: 1000,
+            workers: 1,
+        }
+    }
+
+    #[test]
+    fn boundaries_follow_sync_cadence() {
+        let mut p = plan(20);
+        p.sync_interval = 6;
+        assert_eq!(next_boundary(0, &p, true), 6);
+        assert_eq!(next_boundary(6, &p, true), 12);
+        assert_eq!(next_boundary(18, &p, true), 20); // clipped to T
+        // DP with eval cadence
+        let mut q = plan(10);
+        q.eval_every = Some(4);
+        assert_eq!(next_boundary(0, &q, false), 4);
+        assert_eq!(next_boundary(8, &q, false), 10);
+        // DP without evals: one segment
+        assert_eq!(next_boundary(0, &plan(10), false), 10);
+        // H larger than T never overflows
+        let mut r = plan(7);
+        r.sync_interval = usize::MAX;
+        assert_eq!(next_boundary(0, &r, true), 7);
+    }
+
+    struct NoopEngine;
+    impl InnerEngine for NoopEngine {
+        fn inner_step(&self, _r: usize, _s: &mut ReplicaState, t: usize) -> Result<f64> {
+            Ok(t as f64)
+        }
+        fn eval(&self, _p: &[Arc<xla::Literal>]) -> Result<f64> {
+            Ok(0.0)
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_plans() {
+        let mut none: Vec<ReplicaState> = Vec::new();
+        assert!(drive(&NoopEngine, &mut none, None, &plan(5)).is_err());
+
+        let mk = || ReplicaState {
+            state: vec![Arc::new(xla::Literal::vec1(&[0.0f32]))],
+            shard: TokenStream::new(crate::data::synthetic::CorpusSpec::default(), 0, 0),
+        };
+        let mut reps = vec![mk()];
+        let mut p = plan(5);
+        p.n_params = 2; // more sync leaves than state
+        assert!(drive(&NoopEngine, &mut reps, None, &p).is_err());
+        let mut p = plan(5);
+        p.eval_every = Some(0);
+        assert!(drive(&NoopEngine, &mut reps, None, &p).is_err());
+    }
+
+    #[test]
+    fn step_losses_cover_every_step() {
+        let mk = |id: u64| ReplicaState {
+            state: vec![Arc::new(xla::Literal::vec1(&[0.0f32]))],
+            shard: TokenStream::new(crate::data::synthetic::CorpusSpec::default(), 0, id),
+        };
+        for workers in [1usize, 3] {
+            let mut reps = vec![mk(0), mk(1), mk(2)];
+            let mut p = plan(9);
+            p.workers = workers;
+            let out = drive(&NoopEngine, &mut reps, None, &p).unwrap();
+            assert_eq!(out.step_losses.len(), 9);
+            // loss is t averaged over replicas = t
+            assert_eq!(out.step_losses[4], 5.0);
+            assert_eq!(reps.len(), 3, "replica ownership must return");
+            assert_eq!(out.outer_syncs, 0);
+        }
+    }
+}

@@ -13,7 +13,7 @@
 //!    (zero allocation in coordinator code);
 //! 3. **publish** — each synced leaf is uploaded to a literal exactly
 //!    **once** and cached; the coordinator broadcasts by handing every
-//!    replica the same immutable `Rc<xla::Literal>`, cutting
+//!    replica the same immutable `Arc<xla::Literal>`, cutting
 //!    host→device traffic from M×N to N literals per full sync. The
 //!    cache doubles as the global model's literal form for the eval and
 //!    downstream paths (which previously re-uploaded all N leaves per
@@ -24,7 +24,7 @@
 //! replicas and the eval path is safe.
 
 use std::ops::Range;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -47,7 +47,7 @@ pub struct OuterSync {
     full: Vec<Range<usize>>,
     /// Cached literal per leaf — the global model as the device sees
     /// it. Every entry is shared (never rebuilt) until its leaf syncs.
-    lits: Vec<Rc<xla::Literal>>,
+    lits: Vec<Arc<xla::Literal>>,
 }
 
 impl OuterSync {
@@ -55,9 +55,9 @@ impl OuterSync {
     /// host and literal form (the init artifact's outputs), so setup
     /// costs zero extra uploads.
     pub fn new(
-        layout: Rc<FlatLayout>,
+        layout: Arc<FlatLayout>,
         init: &[HostTensor],
-        init_lits: Vec<Rc<xla::Literal>>,
+        init_lits: Vec<Arc<xla::Literal>>,
         outer_lr: f64,
         outer_momentum: f64,
         fragments: usize,
@@ -95,7 +95,7 @@ impl OuterSync {
 
     /// The global model's cached literal form (manifest leaf order) —
     /// valid at every step, freshened leaf-by-leaf as syncs land.
-    pub fn global_literals(&self) -> &[Rc<xla::Literal>] {
+    pub fn global_literals(&self) -> &[Arc<xla::Literal>] {
         &self.lits
     }
 
@@ -113,11 +113,11 @@ impl OuterSync {
     /// One outer synchronization. `replica_params[r]` is replica r's
     /// current parameter literals (manifest leaf order, length
     /// n_leaves). After this returns, `global_literals()` holds the
-    /// refreshed leaves; the caller broadcasts by cloning those `Rc`s
+    /// refreshed leaves; the caller broadcasts by cloning those `Arc`s
     /// into each replica's state.
     pub fn sync(
         &mut self,
-        replica_params: &[&[Rc<xla::Literal>]],
+        replica_params: &[&[Arc<xla::Literal>]],
         frag: Option<usize>,
     ) -> Result<()> {
         if replica_params.is_empty() {
@@ -128,7 +128,7 @@ impl OuterSync {
                 bail!("fragment {f} out of range (P={})", self.fragments);
             }
         }
-        let layout = Rc::clone(self.global.layout());
+        let layout = Arc::clone(self.global.layout());
         let n = layout.n_leaves();
         for rp in replica_params {
             if rp.len() != n {
@@ -169,7 +169,7 @@ impl OuterSync {
 
         // 3. publish: one upload per synced leaf, shared by all readers.
         for leaf in layout.leaves(self.fragments, frag) {
-            self.lits[leaf] = Rc::new(self.global.leaf_literal(leaf)?);
+            self.lits[leaf] = Arc::new(self.global.leaf_literal(leaf)?);
         }
         Ok(())
     }
@@ -179,8 +179,8 @@ impl OuterSync {
 mod tests {
     use super::*;
 
-    fn layout() -> Rc<FlatLayout> {
-        Rc::new(FlatLayout::new(vec![vec![2], vec![3], vec![1], vec![2]]))
+    fn layout() -> Arc<FlatLayout> {
+        Arc::new(FlatLayout::new(vec![vec![2], vec![3], vec![1], vec![2]]))
     }
 
     fn host(layout: &FlatLayout, fill: f32) -> Vec<HostTensor> {
@@ -194,10 +194,10 @@ mod tests {
             .collect()
     }
 
-    fn lits_of(tensors: &[HostTensor]) -> Vec<Rc<xla::Literal>> {
+    fn lits_of(tensors: &[HostTensor]) -> Vec<Arc<xla::Literal>> {
         tensors
             .iter()
-            .map(|t| Rc::new(t.to_literal().unwrap()))
+            .map(|t| Arc::new(t.to_literal().unwrap()))
             .collect()
     }
 
@@ -206,7 +206,7 @@ mod tests {
         let l = layout();
         let init = host(&l, 1.0);
         let mut sync =
-            OuterSync::new(Rc::clone(&l), &init, lits_of(&init), 1.0, 0.0, 1).unwrap();
+            OuterSync::new(Arc::clone(&l), &init, lits_of(&init), 1.0, 0.0, 1).unwrap();
         let r0 = lits_of(&host(&l, 0.0));
         let r1 = lits_of(&host(&l, 4.0));
         sync.sync(&[&r0[..], &r1[..]], None).unwrap();
@@ -226,7 +226,7 @@ mod tests {
         let init = host(&l, 1.0);
         let init_lits = lits_of(&init);
         let mut sync =
-            OuterSync::new(Rc::clone(&l), &init, init_lits.clone(), 1.0, 0.0, 2).unwrap();
+            OuterSync::new(Arc::clone(&l), &init, init_lits.clone(), 1.0, 0.0, 2).unwrap();
         let r = lits_of(&host(&l, 5.0));
         sync.sync(&[&r[..]], Some(1)).unwrap(); // leaves {1, 3}
         assert_eq!(sync.uploads(), 2);
@@ -235,9 +235,9 @@ mod tests {
         assert_eq!(sync.global().leaf(2), &[1.0]);
         assert!(sync.global().leaf(3).iter().all(|&x| x == 5.0));
         // untouched leaves still share the ORIGINAL literal allocation
-        assert!(Rc::ptr_eq(&sync.global_literals()[0], &init_lits[0]));
-        assert!(Rc::ptr_eq(&sync.global_literals()[2], &init_lits[2]));
-        assert!(!Rc::ptr_eq(&sync.global_literals()[1], &init_lits[1]));
+        assert!(Arc::ptr_eq(&sync.global_literals()[0], &init_lits[0]));
+        assert!(Arc::ptr_eq(&sync.global_literals()[2], &init_lits[2]));
+        assert!(!Arc::ptr_eq(&sync.global_literals()[1], &init_lits[1]));
     }
 
     #[test]
@@ -245,7 +245,7 @@ mod tests {
         let l = layout();
         let init = host(&l, 0.0);
         let mut sync =
-            OuterSync::new(Rc::clone(&l), &init, lits_of(&init), 0.8, 0.9, 2).unwrap();
+            OuterSync::new(Arc::clone(&l), &init, lits_of(&init), 0.8, 0.9, 2).unwrap();
         assert!(sync.sync(&[], None).is_err());
         let short = lits_of(&host(&l, 1.0)[..3]);
         assert!(sync.sync(&[&short[..]], None).is_err());

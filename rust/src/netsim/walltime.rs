@@ -56,6 +56,23 @@ impl WalltimeBreakdown {
     }
 }
 
+/// Ideal speedup of the coordinator's replica-parallel inner loop:
+/// with M equal-cost replica inner loops spread over W persistent
+/// workers (replica r on worker r % W), each segment's serial depth is
+/// ceil(M/W) inner loops, so the speedup over sequential execution
+/// (W=1) is M / ceil(M/W). This is the measured-concurrency analogue
+/// of Appendix A's assumption that the M replicas compute
+/// independently between outer syncs; `benches/bench_hot_path.rs`
+/// records measured pool wall-clock against this model for
+/// M in {1, 2, 4, 8}. (Host-side outer-step cost is excluded — it is
+/// the barrier, identical in both modes.)
+pub fn replica_parallel_speedup(replicas: usize, workers: usize) -> f64 {
+    let m = replicas.max(1);
+    let w = workers.clamp(1, m);
+    let depth = (m + w - 1) / w;
+    m as f64 / depth as f64
+}
+
 /// Appendix A.3: total wall-clock = computation + communication.
 pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
     let steps = (input.tokens / input.batch_tokens).ceil();
@@ -168,6 +185,30 @@ mod tests {
         a.batch_tokens *= 4.0;
         let t2 = walltime(&a).total_s();
         assert!(t2 < t1);
+    }
+
+    #[test]
+    fn replica_parallel_speedup_model() {
+        // full parallelism: W = M gives exactly M
+        for m in [1usize, 2, 4, 8] {
+            assert_eq!(replica_parallel_speedup(m, m), m as f64);
+        }
+        // sequential: always 1
+        assert_eq!(replica_parallel_speedup(8, 1), 1.0);
+        // partial: serial depth is ceil(M/W)
+        assert_eq!(replica_parallel_speedup(4, 2), 2.0);
+        assert_eq!(replica_parallel_speedup(4, 3), 2.0); // depth ceil(4/3)=2
+        assert_eq!(replica_parallel_speedup(8, 3), 8.0 / 3.0);
+        // workers beyond M are clamped; degenerate inputs saturate at 1
+        assert_eq!(replica_parallel_speedup(2, 16), 2.0);
+        assert_eq!(replica_parallel_speedup(0, 0), 1.0);
+        // never exceeds M, never below 1
+        for m in 1..12usize {
+            for w in 1..12usize {
+                let s = replica_parallel_speedup(m, w);
+                assert!((1.0..=m as f64).contains(&s), "M={m} W={w}: {s}");
+            }
+        }
     }
 
     #[test]

@@ -16,10 +16,15 @@
 //! Host→device traffic through the bus is counted per literal built
 //! (`uploads()`), which is what lets tests pin the deduplicated
 //! broadcast to exactly N uploads per full sync instead of M×N.
+//!
+//! Arenas and layouts are `Send + Sync` (layout shared via `Arc`, the
+//! upload counter is atomic) so the replica-parallel coordinator can
+//! hand literal handles across worker threads; the arenas themselves
+//! stay coordinator-owned — only one thread mutates them.
 
-use std::cell::Cell;
 use std::ops::Range;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -27,7 +32,7 @@ use crate::runtime::tensor::{HostTensor, TensorSpec};
 
 /// Offset table mapping leaf index -> element range in the flat arena.
 /// Derived once (from the manifest or raw shapes) and shared by every
-/// arena of the model via `Rc`.
+/// arena of the model via `Arc`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlatLayout {
     shapes: Vec<Vec<usize>>,
@@ -123,26 +128,37 @@ impl FlatLayout {
 
 /// One contiguous f32 arena over a [`FlatLayout`]: global params, outer
 /// gradient, velocity, and pull scratch are all instances of this.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct FlatParams {
-    layout: Rc<FlatLayout>,
+    layout: Arc<FlatLayout>,
     data: Vec<f32>,
     /// Literals built from this arena (host→device uploads through the
-    /// bus). Monotonic; readers diff across events.
-    uploads: Cell<u64>,
+    /// bus). Monotonic; readers diff across events. Atomic so the arena
+    /// is `Sync` (counting stays accurate even under shared readers).
+    uploads: AtomicU64,
+}
+
+impl Clone for FlatParams {
+    fn clone(&self) -> FlatParams {
+        FlatParams {
+            layout: Arc::clone(&self.layout),
+            data: self.data.clone(),
+            uploads: AtomicU64::new(self.uploads.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl FlatParams {
-    pub fn zeros(layout: &Rc<FlatLayout>) -> FlatParams {
+    pub fn zeros(layout: &Arc<FlatLayout>) -> FlatParams {
         FlatParams {
-            layout: Rc::clone(layout),
+            layout: Arc::clone(layout),
             data: vec![0.0; layout.total()],
-            uploads: Cell::new(0),
+            uploads: AtomicU64::new(0),
         }
     }
 
     /// Pack host tensors (manifest leaf order) into a fresh arena.
-    pub fn from_host(layout: &Rc<FlatLayout>, tensors: &[HostTensor]) -> Result<FlatParams> {
+    pub fn from_host(layout: &Arc<FlatLayout>, tensors: &[HostTensor]) -> Result<FlatParams> {
         if tensors.len() != layout.n_leaves() {
             bail!(
                 "flat bus: {} tensors for a {}-leaf layout",
@@ -164,7 +180,7 @@ impl FlatParams {
         Ok(fp)
     }
 
-    pub fn layout(&self) -> &Rc<FlatLayout> {
+    pub fn layout(&self) -> &Arc<FlatLayout> {
         &self.layout
     }
 
@@ -205,13 +221,13 @@ impl FlatParams {
     pub fn leaf_literal(&self, leaf: usize) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.layout.shape(leaf).iter().map(|&d| d as i64).collect();
         let lit = xla::Literal::vec1(self.leaf(leaf)).reshape(&dims)?;
-        self.uploads.set(self.uploads.get() + 1);
+        self.uploads.fetch_add(1, Ordering::Relaxed);
         Ok(lit)
     }
 
     /// Host→device uploads built from this arena so far (monotonic).
     pub fn uploads(&self) -> u64 {
-        self.uploads.get()
+        self.uploads.load(Ordering::Relaxed)
     }
 }
 
@@ -219,9 +235,9 @@ impl FlatParams {
 mod tests {
     use super::*;
 
-    fn layout3() -> Rc<FlatLayout> {
+    fn layout3() -> Arc<FlatLayout> {
         // leaves: 2x3, 4, 3x1 -> offsets [0, 6, 10, 13]
-        Rc::new(FlatLayout::new(vec![vec![2, 3], vec![4], vec![3, 1]]))
+        Arc::new(FlatLayout::new(vec![vec![2, 3], vec![4], vec![3, 1]]))
     }
 
     #[test]
@@ -252,7 +268,7 @@ mod tests {
 
     #[test]
     fn fragment_ranges_cover_exactly_once() {
-        let l = Rc::new(FlatLayout::new(
+        let l = Arc::new(FlatLayout::new(
             (0..11).map(|i| vec![i + 1]).collect::<Vec<_>>(),
         ));
         for p in 1..=4usize {

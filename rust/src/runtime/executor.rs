@@ -6,10 +6,16 @@
 //! returns a single tuple literal which is decomposed into the typed
 //! outputs declared by the manifest. Arity and scalar/shape mismatches
 //! fail loudly here rather than corrupting training state.
+//!
+//! Everything here is `Send + Sync`: the client and its compiled
+//! executables are shared across the coordinator's replica-parallel
+//! workers as `Arc`s (PJRT CPU execution is thread-safe per client),
+//! and the artifact cache is behind a `Mutex` so lazy compilation is
+//! race-free.
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -21,9 +27,9 @@ pub struct Runtime {
 }
 
 impl Runtime {
-    pub fn cpu() -> Result<Rc<Runtime>> {
+    pub fn cpu() -> Result<Arc<Runtime>> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Rc::new(Runtime { client }))
+        Ok(Arc::new(Runtime { client }))
     }
 
     pub fn platform(&self) -> String {
@@ -94,28 +100,31 @@ impl Executable {
 /// manifest. This is what the coordinator holds per model variant.
 pub struct ModelRuntime {
     pub manifest: Manifest,
-    rt: Rc<Runtime>,
-    cache: std::cell::RefCell<BTreeMap<String, Rc<Executable>>>,
+    rt: Arc<Runtime>,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
 }
 
 impl ModelRuntime {
-    pub fn load(rt: Rc<Runtime>, model_dir: &Path) -> Result<ModelRuntime> {
+    pub fn load(rt: Arc<Runtime>, model_dir: &Path) -> Result<ModelRuntime> {
         let manifest = Manifest::load(model_dir)?;
         Ok(ModelRuntime {
             manifest,
             rt,
-            cache: std::cell::RefCell::new(BTreeMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
         })
     }
 
     /// True if the artifact is already compiled in this process.
     pub fn is_compiled(&self, name: &str) -> bool {
-        self.cache.borrow().contains_key(name)
+        self.cache.lock().expect("artifact cache poisoned").contains_key(name)
     }
 
-    /// Get (compiling on first use) a named artifact.
-    pub fn artifact(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    /// Get (compiling on first use) a named artifact. The cache lock is
+    /// held across compilation so concurrent workers never compile the
+    /// same artifact twice.
+    pub fn artifact(&self, name: &str) -> Result<Arc<Executable>> {
+        let mut cache = self.cache.lock().expect("artifact cache poisoned");
+        if let Some(e) = cache.get(name) {
             return Ok(e.clone());
         }
         let def = self
@@ -124,12 +133,22 @@ impl ModelRuntime {
             .get(name)
             .with_context(|| format!("model {} has no artifact {name:?}", self.manifest.model.name))?;
         log::debug!("compiling artifact {}/{}", self.manifest.model.name, name);
-        let exe = Rc::new(self.rt.load(def)?);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        let exe = Arc::new(self.rt.load(def)?);
+        cache.insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
     pub fn n_leaves(&self) -> usize {
         self.manifest.params.len()
     }
+}
+
+/// Compile-time pin: the runtime layer is shareable across the worker
+/// pool's threads (see `coordinator::pool`).
+#[allow(dead_code)]
+fn _assert_send_sync() {
+    fn ok<T: Send + Sync>() {}
+    ok::<Runtime>();
+    ok::<Executable>();
+    ok::<ModelRuntime>();
 }

@@ -3,6 +3,11 @@
 //! Replica state stays as `xla::Literal`s between steps (zero extra
 //! copies on the hot path); `HostTensor` is the host-side view used by
 //! the outer optimizer, data pipeline, and metrics.
+//!
+//! Literals are immutable after construction and `Send + Sync`, so the
+//! replica-parallel coordinator shares them across worker threads as
+//! `Arc<xla::Literal>` handles — the broadcast dedup (one upload shared
+//! by all replicas) and the worker pool both hinge on that immutability.
 
 use anyhow::{anyhow, bail, Result};
 

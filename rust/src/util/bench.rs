@@ -137,6 +137,96 @@ impl Bencher {
     }
 }
 
+// ---- bench report diffing (perf trend tracking across commits) -------
+
+/// One case's before/after medians. A side is `None` when the case
+/// only exists in the other report (added/removed benchmarks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseDelta {
+    pub name: String,
+    pub old_median_ns: Option<u64>,
+    pub new_median_ns: Option<u64>,
+}
+
+impl CaseDelta {
+    /// Relative median change in percent (positive = slower). `None`
+    /// unless the case is present on both sides.
+    pub fn delta_pct(&self) -> Option<f64> {
+        match (self.old_median_ns, self.new_median_ns) {
+            (Some(o), Some(n)) if o > 0 => Some((n as f64 - o as f64) / o as f64 * 100.0),
+            _ => None,
+        }
+    }
+}
+
+fn case_medians(report: &Json) -> anyhow::Result<Vec<(String, u64)>> {
+    report
+        .arr_of("results")?
+        .iter()
+        .map(|r| Ok((r.str_of("name")?, r.u64_of("median_ns")?)))
+        .collect()
+}
+
+/// Diff two bench reports (the JSON emitted by [`Bencher::write_json`]):
+/// new-report case order first, then cases that were removed. This is
+/// what `diloco bench-diff` and `cargo bench -- --diff OLD.json` print
+/// so perf regressions surface in review.
+pub fn diff_reports(old: &Json, new: &Json) -> anyhow::Result<Vec<CaseDelta>> {
+    let old_cases = case_medians(old)?;
+    let new_cases = case_medians(new)?;
+    let old_by_name: std::collections::BTreeMap<&str, u64> = old_cases
+        .iter()
+        .map(|(n, m)| (n.as_str(), *m))
+        .collect();
+    let new_names: std::collections::BTreeSet<&str> =
+        new_cases.iter().map(|(n, _)| n.as_str()).collect();
+    let mut out: Vec<CaseDelta> = new_cases
+        .iter()
+        .map(|(name, m)| CaseDelta {
+            name: name.clone(),
+            old_median_ns: old_by_name.get(name.as_str()).copied(),
+            new_median_ns: Some(*m),
+        })
+        .collect();
+    for (name, m) in &old_cases {
+        if !new_names.contains(name.as_str()) {
+            out.push(CaseDelta {
+                name: name.clone(),
+                old_median_ns: Some(*m),
+                new_median_ns: None,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Print per-case deltas as a fixed-width table (medians; `new` /
+/// `gone` mark cases present on only one side).
+pub fn print_diff(deltas: &[CaseDelta]) {
+    println!(
+        "{:<52} {:>12} {:>12} {:>9}",
+        "benchmark", "old median", "new median", "delta"
+    );
+    let fmt_opt = |ns: Option<u64>| match ns {
+        Some(v) => fmt_dur(Duration::from_nanos(v)),
+        None => "-".into(),
+    };
+    for d in deltas {
+        let delta = match d.delta_pct() {
+            Some(p) => format!("{p:+.1}%"),
+            None if d.old_median_ns.is_none() => "new".into(),
+            None => "gone".into(),
+        };
+        println!(
+            "{:<52} {:>12} {:>12} {:>9}",
+            d.name,
+            fmt_opt(d.old_median_ns),
+            fmt_opt(d.new_median_ns),
+            delta
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,5 +257,56 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(10)), "10 ns");
         assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
         assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+
+    fn report(cases: &[(&str, u64)]) -> Json {
+        Json::obj(vec![
+            ("title", Json::str("t")),
+            (
+                "results",
+                Json::arr(cases.iter().map(|(n, m)| {
+                    Json::obj(vec![
+                        ("name", Json::str(n)),
+                        ("iters", Json::int(5)),
+                        ("min_ns", Json::int(*m as i128)),
+                        ("median_ns", Json::int(*m as i128)),
+                        ("p95_ns", Json::int(*m as i128)),
+                        ("mean_ns", Json::int(*m as i128)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    #[test]
+    fn diff_matches_adds_and_removes() {
+        let old = report(&[("a", 100), ("b", 200), ("gone", 40)]);
+        let new = report(&[("a", 150), ("b", 100), ("fresh", 70)]);
+        let d = diff_reports(&old, &new).unwrap();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d[0].name, "a");
+        assert_eq!(d[0].delta_pct(), Some(50.0));
+        assert_eq!(d[1].delta_pct(), Some(-50.0));
+        assert_eq!(d[2].name, "fresh");
+        assert_eq!(d[2].old_median_ns, None);
+        assert_eq!(d[2].delta_pct(), None);
+        assert_eq!(d[3].name, "gone");
+        assert_eq!(d[3].new_median_ns, None);
+        print_diff(&d); // formatting must not panic
+    }
+
+    #[test]
+    fn diff_roundtrips_through_bencher_json() {
+        let mut b = Bencher::new(0.05);
+        b.run("case", || 2 * 2);
+        let j = b.to_json("hot path");
+        let d = diff_reports(&j, &j).unwrap();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].delta_pct(), Some(0.0));
+    }
+
+    #[test]
+    fn diff_rejects_malformed_reports() {
+        assert!(diff_reports(&Json::obj(vec![]), &report(&[])).is_err());
     }
 }

@@ -3,13 +3,13 @@
 //! on tiny token budgets. Skipped gracefully when artifacts are absent.
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use diloco::config::RepoConfig;
 use diloco::coordinator::{run, Algo, RunConfig};
 use diloco::runtime::{ModelRuntime, Runtime};
 
-fn setup() -> Option<(RepoConfig, Rc<Runtime>)> {
+fn setup() -> Option<(RepoConfig, Arc<Runtime>)> {
     let repo = RepoConfig::load(Path::new(env!("CARGO_MANIFEST_DIR"))).ok()?;
     if !repo.model_dir("m0").join("manifest.json").is_file() {
         eprintln!("skipping: artifacts missing (make artifacts)");
@@ -44,6 +44,28 @@ fn determinism_same_seed_same_loss() {
     assert_eq!(a.final_train_loss, b.final_train_loss);
     let c = run(&mr, &repo.optimizer, &quick(Algo::DiLoCo { replicas: 2 }, 4)).unwrap();
     assert_ne!(a.final_eval_loss, c.final_eval_loss);
+}
+
+#[test]
+fn replica_parallel_workers_bit_identical_to_sequential() {
+    // The worker pool must not change training at all: same config with
+    // --workers 1 (sequential oracle) and --workers 4 produces
+    // bit-identical losses, curves, and sync counts through the full
+    // PJRT path. (The host-tier twin of this test, which runs without
+    // artifacts, is tests/worker_pool.rs.)
+    let Some((repo, rt)) = setup() else { return };
+    let mr = ModelRuntime::load(rt, &repo.model_dir("m0")).unwrap();
+    let mut cfg = quick(Algo::DiLoCo { replicas: 4 }, 13);
+    cfg.eval_every = Some(8);
+    cfg.workers = 1;
+    let seq = run(&mr, &repo.optimizer, &cfg).unwrap();
+    cfg.workers = 4;
+    let par = run(&mr, &repo.optimizer, &cfg).unwrap();
+    assert_eq!(seq.final_eval_loss, par.final_eval_loss);
+    assert_eq!(seq.final_train_loss, par.final_train_loss);
+    assert_eq!(seq.loss_curve, par.loss_curve);
+    assert_eq!(seq.eval_curve, par.eval_curve);
+    assert_eq!(seq.outer_syncs, par.outer_syncs);
 }
 
 #[test]

@@ -19,7 +19,7 @@
 //! These tests run on the host tier of the literal bridge — no PJRT,
 //! no artifacts needed.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use diloco::coordinator::outer_opt::scalar_ref;
 use diloco::coordinator::OuterSync;
@@ -56,10 +56,10 @@ fn to_host(layout: &FlatLayout, leaves: &[Vec<f32>]) -> Vec<HostTensor> {
         .collect()
 }
 
-fn to_lits(layout: &FlatLayout, leaves: &[Vec<f32>]) -> Vec<Rc<xla::Literal>> {
+fn to_lits(layout: &FlatLayout, leaves: &[Vec<f32>]) -> Vec<Arc<xla::Literal>> {
     to_host(layout, leaves)
         .iter()
-        .map(|t| Rc::new(t.to_literal().unwrap()))
+        .map(|t| Arc::new(t.to_literal().unwrap()))
         .collect()
 }
 
@@ -115,13 +115,13 @@ fn prop_flat_bus_matches_scalar_oracle() {
             }
         },
         |case| {
-            let layout = Rc::new(FlatLayout::new(case.shapes.clone()));
+            let layout = Arc::new(FlatLayout::new(case.shapes.clone()));
 
             // flat side: OuterSync over the literal bridge
             let init_host = to_host(&layout, &case.init);
             let init_lits = to_lits(&layout, &case.init);
             let mut flat = OuterSync::new(
-                Rc::clone(&layout),
+                Arc::clone(&layout),
                 &init_host,
                 init_lits,
                 case.lr,
@@ -135,9 +135,9 @@ fn prop_flat_bus_matches_scalar_oracle() {
             let mut oracle = scalar_ref::ScalarOuterOpt::new(case.lr as f32, case.mu as f32);
 
             for (frag, reps) in &case.rounds {
-                let rep_lits: Vec<Vec<Rc<xla::Literal>>> =
+                let rep_lits: Vec<Vec<Arc<xla::Literal>>> =
                     reps.iter().map(|r| to_lits(&layout, r)).collect();
-                let parts: Vec<&[Rc<xla::Literal>]> =
+                let parts: Vec<&[Arc<xla::Literal>]> =
                     rep_lits.iter().map(|v| &v[..]).collect();
                 flat.sync(&parts, *frag).map_err(|e| e.to_string())?;
 
@@ -176,7 +176,7 @@ fn prop_flat_bus_matches_scalar_oracle() {
 #[test]
 fn streaming_broadcast_uploads_only_due_fragment_and_flush_clears_stale() {
     // 7 leaves, P=3: fragments {0,3,6}, {1,4}, {2,5}
-    let layout = Rc::new(FlatLayout::new(
+    let layout = Arc::new(FlatLayout::new(
         (0..7).map(|i| vec![i + 1]).collect::<Vec<_>>(),
     ));
     let fragments = 3usize;
@@ -185,7 +185,7 @@ fn streaming_broadcast_uploads_only_due_fragment_and_flush_clears_stale() {
 
     let init = random_leaf_values(&mut rng, &layout);
     let mut sync = OuterSync::new(
-        Rc::clone(&layout),
+        Arc::clone(&layout),
         &to_host(&layout, &init),
         to_lits(&layout, &init),
         0.8,
@@ -195,7 +195,7 @@ fn streaming_broadcast_uploads_only_due_fragment_and_flush_clears_stale() {
     .unwrap();
 
     // replica states as the coordinator holds them (params slice only)
-    let mut states: Vec<Vec<Rc<xla::Literal>>> = (0..m)
+    let mut states: Vec<Vec<Arc<xla::Literal>>> = (0..m)
         .map(|_| to_lits(&layout, &random_leaf_values(&mut rng, &layout)))
         .collect();
 
@@ -210,7 +210,7 @@ fn streaming_broadcast_uploads_only_due_fragment_and_flush_clears_stale() {
             *s = to_lits(&layout, &random_leaf_values(&mut rng, &layout));
         }
         {
-            let parts: Vec<&[Rc<xla::Literal>]> = states.iter().map(|v| &v[..]).collect();
+            let parts: Vec<&[Arc<xla::Literal>]> = states.iter().map(|v| &v[..]).collect();
             sync.sync(&parts, frag).unwrap();
         }
         let expected: Vec<usize> = sync.synced_leaves(frag).collect();
@@ -226,12 +226,12 @@ fn streaming_broadcast_uploads_only_due_fragment_and_flush_clears_stale() {
         // broadcast: all replicas adopt the same literal per synced leaf
         for s in states.iter_mut() {
             for leaf in sync.synced_leaves(frag) {
-                s[leaf] = Rc::clone(&sync.global_literals()[leaf]);
+                s[leaf] = Arc::clone(&sync.global_literals()[leaf]);
             }
         }
         for leaf in sync.synced_leaves(frag) {
             assert!(
-                Rc::ptr_eq(&states[0][leaf], &states[1][leaf]),
+                Arc::ptr_eq(&states[0][leaf], &states[1][leaf]),
                 "leaf {leaf}: replicas must share one uploaded literal"
             );
         }
@@ -242,7 +242,7 @@ fn streaming_broadcast_uploads_only_due_fragment_and_flush_clears_stale() {
     for leaf in 0..layout.n_leaves() {
         for s in &states {
             assert!(
-                Rc::ptr_eq(&s[leaf], &sync.global_literals()[leaf]),
+                Arc::ptr_eq(&s[leaf], &sync.global_literals()[leaf]),
                 "leaf {leaf} left stale after final flush"
             );
         }

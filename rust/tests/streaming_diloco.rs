@@ -9,7 +9,7 @@ use diloco::config::RepoConfig;
 use diloco::coordinator::{run, Algo, RunConfig};
 use diloco::runtime::{ModelRuntime, Runtime};
 
-fn setup() -> Option<(RepoConfig, std::rc::Rc<Runtime>)> {
+fn setup() -> Option<(RepoConfig, std::sync::Arc<Runtime>)> {
     let repo = RepoConfig::load(Path::new(env!("CARGO_MANIFEST_DIR"))).ok()?;
     if !repo.model_dir("m0").join("manifest.json").is_file() {
         eprintln!("skipping: artifacts missing (make artifacts)");

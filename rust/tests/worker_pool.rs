@@ -1,0 +1,266 @@
+//! Replica-parallel determinism: the worker pool must be bit-identical
+//! to the sequential oracle (`workers = 1`) for any worker count — same
+//! per-step losses, same eval curve, same outer-sync count, same upload
+//! counts through the bus, same final global arena, same final replica
+//! literals. These tests drive the real `coordinator::pool::drive` loop
+//! (segments, barrier, broadcast) and the real `OuterSync` flat-bus
+//! path with a deterministic host-math engine, so they run on the host
+//! tier in every environment — no PJRT, no artifacts.
+//!
+//! (The same invariant is asserted through the full PJRT path, when
+//! artifacts exist, by `tests/diloco_invariants.rs`.)
+
+use std::sync::Arc;
+
+use diloco::coordinator::{drive, DrivePlan, InnerEngine, OuterSync, ReplicaState};
+use diloco::data::synthetic::{CorpusSpec, TokenStream};
+use diloco::runtime::{FlatLayout, HostTensor};
+
+/// A deterministic stand-in for the PJRT inner step: the update mixes
+/// the replica's private token shard (so shard ownership is exercised)
+/// with the step index, entirely in host math. Loss is a pure function
+/// of the post-step state, so any scheduling difference would surface.
+struct ToyEngine {
+    n: usize,
+    /// Inject a failure at (replica, step) to test error propagation.
+    fail_at: Option<(usize, usize)>,
+}
+
+impl InnerEngine for ToyEngine {
+    fn inner_step(
+        &self,
+        rep: usize,
+        replica: &mut ReplicaState,
+        t: usize,
+    ) -> anyhow::Result<f64> {
+        if self.fail_at == Some((rep, t)) {
+            anyhow::bail!("injected failure at replica {rep}, step {t}");
+        }
+        let toks = replica.shard.next_batch(2, 8);
+        let mut loss = 0.0f64;
+        for leaf in 0..self.n {
+            let lit = &replica.state[leaf];
+            let dims = lit.array_shape()?.dims().to_vec();
+            let mut v = lit.to_vec::<f32>()?;
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = 0.5 * *x
+                    + 1e-3 * toks[(i + t) % toks.len()] as f32
+                    + 1e-2 * (t as f32 + rep as f32 * 0.25).sin();
+            }
+            loss += v.iter().map(|&f| f as f64).sum::<f64>() / v.len() as f64;
+            replica.state[leaf] = Arc::new(xla::Literal::vec1(&v).reshape(&dims)?);
+        }
+        Ok(loss / self.n as f64)
+    }
+
+    /// Deterministic digest of the parameter literals.
+    fn eval(&self, params: &[Arc<xla::Literal>]) -> anyhow::Result<f64> {
+        let mut acc = 0.0f64;
+        for (i, p) in params.iter().enumerate() {
+            for x in p.to_vec::<f32>()? {
+                acc += x as f64 * (i + 1) as f64;
+            }
+        }
+        Ok(acc)
+    }
+}
+
+fn layout() -> Arc<FlatLayout> {
+    Arc::new(FlatLayout::new(vec![
+        vec![3, 2],
+        vec![4],
+        vec![2, 2],
+        vec![5],
+        vec![1],
+    ]))
+}
+
+fn fresh_replicas(layout: &FlatLayout, m: usize, seed: u64) -> Vec<ReplicaState> {
+    // all replicas start from the same "global init", like Algorithm 1
+    let init: Vec<Arc<xla::Literal>> = (0..layout.n_leaves())
+        .map(|l| {
+            let v: Vec<f32> = (0..layout.len(l))
+                .map(|i| ((l * 37 + i * 11 + 5) % 23) as f32 * 0.1 - 1.0)
+                .collect();
+            Arc::new(
+                HostTensor::from_vec(layout.shape(l), v)
+                    .to_literal()
+                    .unwrap(),
+            )
+        })
+        .collect();
+    (0..m)
+        .map(|r| ReplicaState {
+            state: init.clone(),
+            shard: TokenStream::new(CorpusSpec::default(), seed, r as u64),
+        })
+        .collect()
+}
+
+fn init_host(layout: &FlatLayout, replicas: &[ReplicaState]) -> Vec<HostTensor> {
+    (0..layout.n_leaves())
+        .map(|l| HostTensor::from_literal(&replicas[0].state[l]).unwrap())
+        .collect()
+}
+
+struct RunResult {
+    step_losses: Vec<f64>,
+    loss_curve: Vec<(usize, f64)>,
+    eval_curve: Vec<(usize, f64)>,
+    outer_syncs: usize,
+    uploads: u64,
+    global: Vec<f32>,
+    /// Per-replica, per-leaf payloads after the run.
+    finals: Vec<Vec<Vec<f32>>>,
+    /// Whether each replica's synced leaves point at the shared global
+    /// literal after the final full flush.
+    shares_global: bool,
+}
+
+/// One full DiLoCo schedule (streaming fragments included) through the
+/// pool with the given worker count.
+fn run_once(m: usize, workers: usize, fragments: usize, seed: u64) -> RunResult {
+    let l = layout();
+    let engine = ToyEngine {
+        n: l.n_leaves(),
+        fail_at: None,
+    };
+    let mut replicas = fresh_replicas(&l, m, seed);
+    let host = init_host(&l, &replicas);
+    let init_lits: Vec<Arc<xla::Literal>> = replicas[0].state.clone();
+    let mut sync = OuterSync::new(Arc::clone(&l), &host, init_lits, 0.7, 0.9, fragments)
+        .expect("sync setup");
+    let plan = DrivePlan {
+        total_steps: 22,
+        sync_interval: 3, // H=6, P=2 -> a fragment every 3 steps
+        fragments,
+        n_params: l.n_leaves(),
+        eval_every: Some(7),
+        log_every: 5,
+        workers,
+    };
+    let out = drive(&engine, &mut replicas, Some(&mut sync), &plan).expect("drive");
+    let finals: Vec<Vec<Vec<f32>>> = replicas
+        .iter()
+        .map(|r| {
+            (0..l.n_leaves())
+                .map(|leaf| r.state[leaf].to_vec::<f32>().unwrap())
+                .collect()
+        })
+        .collect();
+    let shares_global = replicas.iter().all(|r| {
+        (0..l.n_leaves()).all(|leaf| Arc::ptr_eq(&r.state[leaf], &sync.global_literals()[leaf]))
+    });
+    RunResult {
+        step_losses: out.step_losses,
+        loss_curve: out.loss_curve,
+        eval_curve: out.eval_curve,
+        outer_syncs: out.outer_syncs,
+        uploads: sync.uploads(),
+        global: sync.global().data().to_vec(),
+        finals,
+        shares_global,
+    }
+}
+
+#[test]
+fn parallel_run_is_bit_identical_to_sequential_oracle() {
+    let m = 4;
+    let oracle = run_once(m, 1, 2, 42);
+    assert_eq!(oracle.step_losses.len(), 22);
+    assert!(oracle.outer_syncs > 0);
+    assert!(
+        oracle.shares_global,
+        "final flush must leave every replica sharing the global literals"
+    );
+
+    for workers in [2usize, 4, 16 /* clamped to M */] {
+        let par = run_once(m, workers, 2, 42);
+        // f64 equality is exact: same values in the same order, or bust
+        assert_eq!(par.step_losses, oracle.step_losses, "workers={workers}");
+        assert_eq!(par.loss_curve, oracle.loss_curve, "workers={workers}");
+        assert_eq!(par.eval_curve, oracle.eval_curve, "workers={workers}");
+        assert_eq!(par.outer_syncs, oracle.outer_syncs, "workers={workers}");
+        assert_eq!(par.uploads, oracle.uploads, "workers={workers}");
+        assert_eq!(
+            par.global.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            oracle.global.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "workers={workers}: global arena drifted"
+        );
+        assert_eq!(par.finals, oracle.finals, "workers={workers}");
+        assert!(par.shares_global, "workers={workers}");
+    }
+}
+
+#[test]
+fn uneven_partition_and_vanilla_sync_agree() {
+    // M=3 over 2 workers (worker 0 owns replicas {0, 2}) with P=1
+    let oracle = run_once(3, 1, 1, 7);
+    let par = run_once(3, 2, 1, 7);
+    assert_eq!(par.step_losses, oracle.step_losses);
+    assert_eq!(par.eval_curve, oracle.eval_curve);
+    assert_eq!(par.uploads, oracle.uploads);
+    assert_eq!(par.finals, oracle.finals);
+}
+
+#[test]
+fn data_parallel_mode_without_sync_agrees() {
+    // sync=None exercises the eval-point boundaries (DP evaluates the
+    // replica's live state, so eval steps must be exact barriers).
+    let l = layout();
+    let run_dp = |workers: usize| {
+        let engine = ToyEngine {
+            n: l.n_leaves(),
+            fail_at: None,
+        };
+        let mut replicas = fresh_replicas(&l, 2, 9);
+        let plan = DrivePlan {
+            total_steps: 10,
+            sync_interval: usize::MAX,
+            fragments: 1,
+            n_params: l.n_leaves(),
+            eval_every: Some(4),
+            log_every: 3,
+            workers,
+        };
+        let out = drive(&engine, &mut replicas, None, &plan).expect("drive");
+        let finals: Vec<Vec<f32>> = replicas
+            .iter()
+            .map(|r| r.state[0].to_vec::<f32>().unwrap())
+            .collect();
+        (out.step_losses, out.eval_curve, finals)
+    };
+    assert_eq!(run_dp(1), run_dp(2));
+}
+
+#[test]
+fn worker_failure_propagates_without_hanging() {
+    let l = layout();
+    let engine = ToyEngine {
+        n: l.n_leaves(),
+        fail_at: Some((1, 5)),
+    };
+    for workers in [1usize, 3] {
+        let mut replicas = fresh_replicas(&l, 3, 1);
+        let host = init_host(&l, &replicas);
+        let init_lits = replicas[0].state.clone();
+        let mut sync = OuterSync::new(Arc::clone(&l), &host, init_lits, 0.7, 0.9, 1).unwrap();
+        let plan = DrivePlan {
+            total_steps: 12,
+            sync_interval: 4,
+            fragments: 1,
+            n_params: l.n_leaves(),
+            eval_every: None,
+            log_every: 100,
+            workers,
+        };
+        let err = drive(&engine, &mut replicas, Some(&mut sync), &plan)
+            .expect_err("injected failure must propagate");
+        assert!(
+            format!("{err:#}").contains("injected failure"),
+            "workers={workers}: {err:#}"
+        );
+        // either path must hand replica ownership back on failure
+        assert_eq!(replicas.len(), 3, "workers={workers}");
+    }
+}

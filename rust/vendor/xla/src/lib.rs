@@ -18,6 +18,14 @@
 //! Like the real bindings, `vec1`/`scalar` copy host data into the
 //! literal and `to_vec` copies it back out — so host-path benchmarks
 //! measure genuine per-byte transfer costs, not no-ops.
+//!
+//! **Thread safety:** every type here is `Send + Sync` (plain owned
+//! buffers, no interior mutability), matching the real bindings:
+//! PJRT clients and loaded executables are thread-safe per client, and
+//! literals are immutable once constructed. The coordinator's
+//! replica-parallel worker pool relies on this — executables and
+//! literals are shared across worker threads as `Arc`s — so the
+//! contract is pinned by compile-time assertions below.
 
 use std::fmt;
 
@@ -281,6 +289,21 @@ impl PjRtLoadedExecutable {
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(Error(STUB.into()))
     }
+}
+
+/// Compile-time pin of the thread-safety contract the coordinator's
+/// worker pool depends on (real PJRT bindings satisfy the same bounds).
+#[allow(dead_code)]
+fn _assert_send_sync() {
+    fn ok<T: Send + Sync>() {}
+    ok::<Literal>();
+    ok::<ArrayShape>();
+    ok::<PjRtClient>();
+    ok::<PjRtLoadedExecutable>();
+    ok::<PjRtBuffer>();
+    ok::<HloModuleProto>();
+    ok::<XlaComputation>();
+    ok::<Error>();
 }
 
 #[cfg(test)]
