@@ -78,6 +78,7 @@ fn main() -> anyhow::Result<()> {
                 tokens: m.tokens as f64,
                 batch_tokens: m.global_batch_tokens as f64,
                 cross_dc: net,
+                outer_bits: diloco::netsim::walltime::BITS_PER_PARAM,
             });
             println!(
                 "{:<10} {:<12} {:>12.3}s {:>12.3}s",

@@ -17,6 +17,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use diloco::comm::{codec_for, CommState, OuterBits};
 use diloco::config::RepoConfig;
 use diloco::coordinator::outer_opt::{acc_add, acc_finish, scalar_ref};
 use diloco::coordinator::{drive, DrivePlan, InnerEngine, OuterOpt, OuterSync, ReplicaState};
@@ -175,6 +176,79 @@ fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
                 .map(|_| host.iter().map(|t| t.to_literal().unwrap()).collect())
                 .collect();
             states
+        });
+    }
+}
+
+/// Comm-codec cases: encode/decode throughput per bit width over the
+/// rung's full flat arena, plus one end-to-end quantized sync through
+/// `sync_encoded` (encoder + error feedback + reduce + publish).
+/// Exact wire bytes per width are printed alongside (the codec's
+/// whole point is the byte column, not just the time column).
+fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
+    let pristine = randn_params(layout, 7);
+    let n = layout.total();
+    println!("\n== {label}: wire bytes per replica per full sync ({n} params) ==");
+    let fp32_bytes = 4 * n;
+    for bits in OuterBits::ALL {
+        let codec = codec_for(bits);
+        let bytes = codec.wire_bytes(n);
+        println!(
+            "{:>6}: {bytes:>10} bytes  ({:.2}x vs fp32, {:.3} bits/param)",
+            bits.label(),
+            fp32_bytes as f64 / bytes as f64,
+            bytes as f64 * 8.0 / n as f64
+        );
+        let mut wire = Vec::with_capacity(bytes);
+        b.run(&format!("{label}/comm encode {} (full arena)", bits.label()), || {
+            wire.clear();
+            codec.encode(pristine.data(), 0xC0DE, &mut wire);
+            wire.len()
+        });
+        let mut dst = vec![0.0f32; n];
+        b.run(&format!("{label}/comm decode {} (full arena)", bits.label()), || {
+            codec.decode(&wire, &mut dst).unwrap();
+            dst[0]
+        });
+    }
+
+    // end-to-end int4 sync: encode M=2 replicas with error feedback,
+    // reduce + Nesterov + publish on the coordinator
+    {
+        let host: Vec<HostTensor> = pristine.to_host();
+        let n_leaves = layout.n_leaves();
+        let init_lits: Vec<Arc<xla::Literal>> = (0..n_leaves)
+            .map(|l| Arc::new(pristine.leaf_literal(l).unwrap()))
+            .collect();
+        let mut sync = OuterSync::new(Arc::clone(layout), &host, init_lits.clone(), 0.8, 0.9, 1)
+            .expect("comm bench sync setup")
+            .with_codec(codec_for(OuterBits::Int4), 0xBE);
+        let enc = sync.encoder();
+        let rep_lits: Vec<Vec<Arc<xla::Literal>>> = (1..=2u64)
+            .map(|s| {
+                let rp = randn_params(layout, 300 + s);
+                (0..n_leaves)
+                    .map(|l| Arc::new(rp.leaf_literal(l).unwrap()))
+                    .collect()
+            })
+            .collect();
+        let mut comm: Vec<CommState> = (0..2).map(|_| CommState::default()).collect();
+        for cm in comm.iter_mut() {
+            enc.init_snapshot(cm, &init_lits).expect("comm bench snapshot");
+        }
+        let mut round = 0u64;
+        b.run(&format!("{label}/comm sync end-to-end int4 (M=2)"), || {
+            let payloads: Vec<Vec<u8>> = rep_lits
+                .iter()
+                .enumerate()
+                .map(|(r, lits)| {
+                    enc.encode_replica(r, lits, &mut comm[r], None, round).unwrap()
+                })
+                .collect();
+            let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+            sync.sync_encoded(&frames, None).unwrap();
+            round += 1;
+            sync.wire_stats().total_up()
         });
     }
 }
@@ -398,6 +472,7 @@ fn main() -> anyhow::Result<()> {
     for (label, layers, d, heads) in [("m0", 2usize, 64usize, 4usize), ("m2", 4, 128, 8)] {
         let layout = Arc::new(FlatLayout::new(model_shapes(layers, d, heads)));
         bench_outer_sync(&mut b, label, &layout);
+        bench_comm(&mut b, label, &layout);
     }
 
     // replica-parallel inner loop (worker pool) on the m0-shaped layout

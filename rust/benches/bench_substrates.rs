@@ -73,6 +73,7 @@ fn main() {
             tokens: 2e10,
             batch_tokens: 2f64.powi(20),
             cross_dc: MEDIUM,
+            outer_bits: diloco::netsim::walltime::BITS_PER_PARAM,
         })
     });
     let sim = SimModel::default();

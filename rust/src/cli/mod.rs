@@ -20,6 +20,7 @@ USAGE:
                  [--lr 6e-3] [--eta 0.8] [--budget TOKENS] [--overtrain X]
                  [--seed N] [--eval-every K] [--downstream] [--fragments P]
                  [--workers W]   # replica-parallel inner loop; 1 = sequential
+                 [--outer-bits 32|16|8|4]  # outer-gradient wire width (32 = exact fp32)
   diloco predict --n PARAMS [--m REPLICAS] [--store runs/sweep.jsonl]
   diloco sweep   --grid NAME [--store runs/sweep.jsonl] [--max-runs N]
   diloco grids                      # list available sweep grids
@@ -96,6 +97,9 @@ fn run_config_from_args(args: &Args) -> Result<RunConfig> {
     }
     if let Some(w) = args.get("workers") {
         cfg.workers = w.parse().context("--workers")?;
+    }
+    if let Some(ob) = args.get("outer-bits") {
+        cfg.outer_bits = crate::comm::OuterBits::parse(&ob).context("--outer-bits")?;
     }
     cfg.downstream = args.flag("downstream");
     Ok(cfg)

@@ -1,0 +1,474 @@
+//! Wire codecs: the bit-level encodings a replica's outer-sync
+//! contribution takes on the (simulated) cross-datacenter wire.
+//!
+//! Four widths, matching the paper's section-7 ablation axis:
+//!
+//! - [`Fp32`] — the identity oracle: raw little-endian f32, the exact
+//!   legacy wire format. `decode(encode(x)) == x` bit for bit.
+//! - [`Bf16Sim`] — simulated bfloat16: round-to-nearest-even to the
+//!   top 16 bits of the f32 pattern (the standard hardware cast), then
+//!   widened back on decode. Deterministic, no per-block state.
+//! - [`IntQ`] (int8 / int4) — symmetric per-block integer quantization:
+//!   each [`BLOCK`]-element block carries one f32 scale
+//!   (`max|x| / qmax`) followed by packed signed codes, rounded
+//!   *stochastically* so the quantizer is unbiased (`E[decode] = x`).
+//!
+//! # Determinism
+//!
+//! Stochastic rounding draws from a [`Rng`] derived **only** from the
+//! `seed` argument and the block index — never from global state, time,
+//! or call order. Callers derive `seed` from
+//! `(run seed, sync index, replica id, range offset)` (see
+//! `comm::encoder`), so the same training run produces the same bytes
+//! at any worker count and on any schedule. Encoding the same slice
+//! with the same seed is always byte-identical.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Elements per quantization block (one f32 scale per block). 256
+/// keeps the scale overhead at 0.125 bits/element.
+pub const BLOCK: usize = 256;
+
+/// The outer-communication bit width (`--outer-bits` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OuterBits {
+    Fp32,
+    Bf16,
+    Int8,
+    Int4,
+}
+
+impl OuterBits {
+    /// Every width, widest first (sweep + report order).
+    pub const ALL: [OuterBits; 4] =
+        [OuterBits::Fp32, OuterBits::Bf16, OuterBits::Int8, OuterBits::Int4];
+
+    pub fn parse(s: &str) -> Result<OuterBits> {
+        Ok(match s {
+            "32" | "fp32" => OuterBits::Fp32,
+            "16" | "bf16" => OuterBits::Bf16,
+            "8" | "int8" => OuterBits::Int8,
+            "4" | "int4" => OuterBits::Int4,
+            other => bail!("unknown outer bit width {other:?} (want 32|16|8|4)"),
+        })
+    }
+
+    /// Nominal payload bits per parameter (excludes per-block scales).
+    pub fn bits(self) -> u32 {
+        match self {
+            OuterBits::Fp32 => 32,
+            OuterBits::Bf16 => 16,
+            OuterBits::Int8 => 8,
+            OuterBits::Int4 => 4,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OuterBits::Fp32 => "fp32",
+            OuterBits::Bf16 => "bf16",
+            OuterBits::Int8 => "int8",
+            OuterBits::Int4 => "int4",
+        }
+    }
+}
+
+/// A wire codec over contiguous f32 runs (the flat-bus fragment
+/// ranges). Implementations are stateless and shared across worker
+/// threads; all per-replica state (error-feedback residuals) lives in
+/// `comm::encoder::CommState`.
+pub trait Codec: Send + Sync {
+    fn bits(&self) -> OuterBits;
+
+    /// Identity codecs ship raw f32 replica **parameters** — the exact
+    /// legacy wire. Lossy codecs ship error-compensated outer
+    /// **deltas** instead (shipping low-bit raw parameters would
+    /// destroy the model; deltas are small, centred, and tolerate
+    /// 4-bit quantization — Streaming DiLoCo, arXiv:2501.18512).
+    fn is_identity(&self) -> bool {
+        self.bits() == OuterBits::Fp32
+    }
+
+    /// Exact wire size in bytes of a contiguous run of `n` elements
+    /// (including per-block scales).
+    fn wire_bytes(&self, n: usize) -> usize;
+
+    /// Append the encoding of `src` to `out` — exactly
+    /// `wire_bytes(src.len())` bytes, deterministic in `(src, seed)`.
+    fn encode(&self, src: &[f32], seed: u64, out: &mut Vec<u8>);
+
+    /// Decode exactly `wire_bytes(dst.len())` bytes into `dst`.
+    fn decode(&self, wire: &[u8], dst: &mut [f32]) -> Result<()>;
+}
+
+/// The codec for a bit width (one shared instance per run).
+pub fn codec_for(bits: OuterBits) -> Arc<dyn Codec> {
+    match bits {
+        OuterBits::Fp32 => Arc::new(Fp32),
+        OuterBits::Bf16 => Arc::new(Bf16Sim),
+        OuterBits::Int8 | OuterBits::Int4 => Arc::new(IntQ { bits }),
+    }
+}
+
+// ---- fp32: the identity oracle ---------------------------------------
+
+pub struct Fp32;
+
+impl Codec for Fp32 {
+    fn bits(&self) -> OuterBits {
+        OuterBits::Fp32
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        4 * n
+    }
+
+    fn encode(&self, src: &[f32], _seed: u64, out: &mut Vec<u8>) {
+        out.reserve(4 * src.len());
+        for &x in src {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn decode(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        if wire.len() != 4 * dst.len() {
+            bail!("fp32 decode: {} bytes for {} elements", wire.len(), dst.len());
+        }
+        for (chunk, d) in wire.chunks_exact(4).zip(dst.iter_mut()) {
+            *d = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+}
+
+// ---- bf16: simulated bfloat16 cast -----------------------------------
+
+pub struct Bf16Sim;
+
+/// f32 -> bf16 bit pattern with round-to-nearest-even (the hardware
+/// cast; finite inputs only, which the bus guarantees).
+#[inline]
+fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+#[inline]
+fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+impl Codec for Bf16Sim {
+    fn bits(&self) -> OuterBits {
+        OuterBits::Bf16
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        2 * n
+    }
+
+    fn encode(&self, src: &[f32], _seed: u64, out: &mut Vec<u8>) {
+        out.reserve(2 * src.len());
+        for &x in src {
+            out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+        }
+    }
+
+    fn decode(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        if wire.len() != 2 * dst.len() {
+            bail!("bf16 decode: {} bytes for {} elements", wire.len(), dst.len());
+        }
+        for (chunk, d) in wire.chunks_exact(2).zip(dst.iter_mut()) {
+            *d = bf16_to_f32(u16::from_le_bytes([chunk[0], chunk[1]]));
+        }
+        Ok(())
+    }
+}
+
+// ---- int8 / int4: per-block scales + stochastic rounding -------------
+
+pub struct IntQ {
+    pub bits: OuterBits,
+}
+
+impl IntQ {
+    /// Symmetric code range: codes live in [-qmax, qmax].
+    fn qmax(&self) -> f32 {
+        match self.bits {
+            OuterBits::Int8 => 127.0,
+            OuterBits::Int4 => 7.0,
+            _ => unreachable!("IntQ is only built for int widths"),
+        }
+    }
+
+    /// Packed code bytes for one block of `n` elements.
+    fn code_bytes(&self, n: usize) -> usize {
+        match self.bits {
+            OuterBits::Int8 => n,
+            _ => (n + 1) / 2,
+        }
+    }
+}
+
+impl Codec for IntQ {
+    fn bits(&self) -> OuterBits {
+        self.bits
+    }
+
+    fn wire_bytes(&self, n: usize) -> usize {
+        let full = n / BLOCK;
+        let tail = n % BLOCK;
+        let mut bytes = full * (4 + self.code_bytes(BLOCK));
+        if tail > 0 {
+            bytes += 4 + self.code_bytes(tail);
+        }
+        bytes
+    }
+
+    fn encode(&self, src: &[f32], seed: u64, out: &mut Vec<u8>) {
+        out.reserve(self.wire_bytes(src.len()));
+        let qmax = self.qmax();
+        let root = Rng::new(seed);
+        for (bi, block) in src.chunks(BLOCK).enumerate() {
+            let maxabs = block.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let scale = if maxabs > 0.0 { maxabs / qmax } else { 0.0 };
+            out.extend_from_slice(&scale.to_le_bytes());
+            if scale == 0.0 {
+                // all-zero block: zero codes, no rng draws
+                out.extend(std::iter::repeat(0u8).take(self.code_bytes(block.len())));
+                continue;
+            }
+            // per-block child stream: byte output is independent of
+            // how the caller splits ranges into blocks upstream
+            let mut rng = root.child(bi as u64);
+            let mut quantize = |x: f32| -> i32 {
+                let y = (x / scale).clamp(-qmax, qmax);
+                let f = y.floor();
+                let frac = (y - f) as f64;
+                // unbiased stochastic rounding: round up w.p. frac
+                let up = rng.f64() < frac;
+                (f as i32) + if up { 1 } else { 0 }
+            };
+            match self.bits {
+                OuterBits::Int8 => {
+                    for &x in block {
+                        out.push(quantize(x) as i8 as u8);
+                    }
+                }
+                _ => {
+                    // int4: offset-binary nibbles (code + 8 in 1..=15),
+                    // two per byte, low nibble first; odd tails pad the
+                    // high nibble with 8 (code 0), ignored on decode
+                    for pair in block.chunks(2) {
+                        let lo = (quantize(pair[0]) + 8) as u8 & 0x0F;
+                        let hi = if pair.len() == 2 {
+                            (quantize(pair[1]) + 8) as u8 & 0x0F
+                        } else {
+                            8
+                        };
+                        out.push(lo | (hi << 4));
+                    }
+                }
+            }
+        }
+    }
+
+    fn decode(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        if wire.len() != self.wire_bytes(dst.len()) {
+            bail!(
+                "{} decode: {} bytes for {} elements (expected {})",
+                self.bits.label(),
+                wire.len(),
+                dst.len(),
+                self.wire_bytes(dst.len())
+            );
+        }
+        let mut off = 0usize;
+        for block in dst.chunks_mut(BLOCK) {
+            let scale =
+                f32::from_le_bytes([wire[off], wire[off + 1], wire[off + 2], wire[off + 3]]);
+            off += 4;
+            match self.bits {
+                OuterBits::Int8 => {
+                    for d in block.iter_mut() {
+                        *d = (wire[off] as i8) as f32 * scale;
+                        off += 1;
+                    }
+                }
+                _ => {
+                    for (i, d) in block.iter_mut().enumerate() {
+                        let byte = wire[off + i / 2];
+                        let nibble = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                        *d = (nibble as i32 - 8) as f32 * scale;
+                    }
+                    off += self.code_bytes(block.len());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 - n as f32 / 2.0) * 0.01).collect()
+    }
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(OuterBits::parse("32").unwrap(), OuterBits::Fp32);
+        assert_eq!(OuterBits::parse("bf16").unwrap(), OuterBits::Bf16);
+        assert_eq!(OuterBits::parse("8").unwrap(), OuterBits::Int8);
+        assert_eq!(OuterBits::parse("int4").unwrap(), OuterBits::Int4);
+        assert!(OuterBits::parse("2").is_err());
+        for b in OuterBits::ALL {
+            assert_eq!(OuterBits::parse(b.label()).unwrap(), b);
+            assert_eq!(OuterBits::parse(&b.bits().to_string()).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn fp32_roundtrip_is_bit_exact() {
+        let c = Fp32;
+        let xs = vec![0.0f32, -0.0, 1.5e-39, f32::MAX, -3.25, 7e-12];
+        let mut wire = Vec::new();
+        c.encode(&xs, 9, &mut wire);
+        assert_eq!(wire.len(), c.wire_bytes(xs.len()));
+        let mut back = vec![0.0f32; xs.len()];
+        c.decode(&wire, &mut back).unwrap();
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_error_bounded() {
+        let c = Bf16Sim;
+        let xs = ramp(500);
+        let mut wire = Vec::new();
+        c.encode(&xs, 0, &mut wire);
+        assert_eq!(wire.len(), 2 * xs.len());
+        let mut back = vec![0.0f32; xs.len()];
+        c.decode(&wire, &mut back).unwrap();
+        for (&x, &y) in xs.iter().zip(&back) {
+            // bf16 has 8 mantissa bits: relative error <= 2^-8
+            assert!((x - y).abs() <= x.abs() / 256.0 + 1e-12, "{x} -> {y}");
+        }
+        // exact on bf16-representable values
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0)), 1.0);
+        assert_eq!(bf16_to_f32(f32_to_bf16(-0.5)), -0.5);
+    }
+
+    #[test]
+    fn int_wire_bytes_formula() {
+        let i8c = IntQ { bits: OuterBits::Int8 };
+        let i4c = IntQ { bits: OuterBits::Int4 };
+        assert_eq!(i8c.wire_bytes(0), 0);
+        assert_eq!(i8c.wire_bytes(BLOCK), 4 + BLOCK);
+        assert_eq!(i8c.wire_bytes(BLOCK + 10), (4 + BLOCK) + (4 + 10));
+        assert_eq!(i4c.wire_bytes(BLOCK), 4 + BLOCK / 2);
+        assert_eq!(i4c.wire_bytes(7), 4 + 4); // odd tail packs up
+    }
+
+    #[test]
+    fn int_roundtrip_error_within_one_scale_step() {
+        for bits in [OuterBits::Int8, OuterBits::Int4] {
+            let c = IntQ { bits };
+            let xs = ramp(BLOCK * 2 + 37); // multi-block + ragged tail
+            let mut wire = Vec::new();
+            c.encode(&xs, 0xABCD, &mut wire);
+            assert_eq!(wire.len(), c.wire_bytes(xs.len()));
+            let mut back = vec![0.0f32; xs.len()];
+            c.decode(&wire, &mut back).unwrap();
+            for (bi, block) in xs.chunks(BLOCK).enumerate() {
+                let maxabs = block.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let scale = maxabs / c.qmax();
+                for (i, &x) in block.iter().enumerate() {
+                    let y = back[bi * BLOCK + i];
+                    assert!(
+                        (x - y).abs() <= scale * 1.0001,
+                        "{:?} block {bi}[{i}]: {x} -> {y} (scale {scale})",
+                        bits
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int_zero_block_and_sign_symmetry() {
+        let c = IntQ { bits: OuterBits::Int4 };
+        let xs = vec![0.0f32; 10];
+        let mut wire = Vec::new();
+        c.encode(&xs, 3, &mut wire);
+        let mut back = vec![1.0f32; 10];
+        c.decode(&wire, &mut back).unwrap();
+        assert!(back.iter().all(|&x| x == 0.0));
+        // extremes map exactly (frac = 0 at +-qmax)
+        let xs = vec![-7.0f32, 7.0, 0.0, 3.5];
+        let mut wire = Vec::new();
+        c.encode(&xs, 3, &mut wire);
+        let mut back = vec![0.0f32; 4];
+        c.decode(&wire, &mut back).unwrap();
+        assert_eq!(back[0], -7.0);
+        assert_eq!(back[1], 7.0);
+        assert_eq!(back[2], 0.0);
+    }
+
+    #[test]
+    fn stochastic_rounding_deterministic_in_seed() {
+        let c = IntQ { bits: OuterBits::Int4 };
+        let xs: Vec<f32> = (0..BLOCK + 9).map(|i| ((i * 37 % 100) as f32 - 50.0) * 0.013).collect();
+        let enc = |seed: u64| {
+            let mut w = Vec::new();
+            c.encode(&xs, seed, &mut w);
+            w
+        };
+        assert_eq!(enc(42), enc(42), "same seed must be byte-identical");
+        assert_ne!(enc(42), enc(43), "distinct seeds must perturb rounding");
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        // mean of many independently-seeded quantizations approaches x
+        let c = IntQ { bits: OuterBits::Int4 };
+        let xs = vec![0.33f32, -1.27, 2.5, 0.0101, -3.3];
+        let n = 4000usize;
+        let mut mean = vec![0.0f64; xs.len()];
+        let mut back = vec![0.0f32; xs.len()];
+        for s in 0..n {
+            let mut w = Vec::new();
+            c.encode(&xs, s as u64, &mut w);
+            c.decode(&w, &mut back).unwrap();
+            for (m, &y) in mean.iter_mut().zip(&back) {
+                *m += y as f64 / n as f64;
+            }
+        }
+        let scale = 3.3 / 7.0;
+        for (&x, &m) in xs.iter().zip(&mean) {
+            assert!(
+                (x as f64 - m).abs() < 3.0 * scale as f64 / (n as f64).sqrt(),
+                "E[q({x})] = {m}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_wrong_length() {
+        for bits in OuterBits::ALL {
+            let c = codec_for(bits);
+            let mut wire = Vec::new();
+            c.encode(&[1.0, 2.0, 3.0], 0, &mut wire);
+            let mut dst = vec![0.0f32; 4]; // one element too many
+            assert!(c.decode(&wire, &mut dst).is_err(), "{bits:?}");
+        }
+    }
+}

@@ -1,0 +1,336 @@
+//! Replica-side sync encoding: where the quantize half of the
+//! quantize→reduce→dequantize contract runs.
+//!
+//! A [`SyncEncoder`] is the immutable recipe (layout + codec +
+//! fragment count + run seed), shared by every pool worker; a
+//! [`CommState`] is one replica's mutable comm memory — pull scratch,
+//! the global-parameter snapshot from the last broadcast, and the
+//! error-feedback residual — owned by the replica's worker thread for
+//! the whole run, exactly like its data shard.
+//!
+//! Per sync event, for the due fragment's ranges:
+//!
+//! 1. pull — the replica's current parameter literals are read into
+//!    the scratch arena (device→host edge of the wire);
+//! 2. identity codec: the raw f32 parameters are the payload (the
+//!    legacy wire, bit for bit);
+//!    lossy codec: the payload is the **error-compensated outer
+//!    delta** `x = (global_snap - theta) + residual`, encoded with the
+//!    per-range seed, after which `residual <- x - decode(encode(x))`
+//!    carries this sync's quantization error into the next one
+//!    (error feedback makes the quantized outer step unbiased over
+//!    repeated syncs instead of silently losing mass);
+//! 3. the encoded bytes travel to the coordinator over the pool
+//!    channel — nothing else does for a DiLoCo sync.
+//!
+//! # Determinism rules
+//!
+//! The payload bytes are a pure function of (codec, run seed, sync
+//! index, replica id, range offsets, replica values). Worker count,
+//! thread scheduling, and wall-clock never enter: seeds are derived
+//! per `(sync_index, replica, range.start)` via splitmix chains, and
+//! the residual/snapshot state advances only with the replica's own
+//! sync sequence. This is what lets `tests/comm_codec.rs` pin workers
+//! 1 vs 4 bit-identical at every bit width.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::FlatLayout;
+use crate::util::rng::splitmix64;
+
+use super::codec::Codec;
+
+/// One replica's mutable comm-side state. Arenas are lazily sized to
+/// the layout; lossy codecs additionally need [`SyncEncoder::init_snapshot`]
+/// before the first sync.
+#[derive(Default)]
+pub struct CommState {
+    /// Device→host pull arena (all codecs).
+    scratch: Vec<f32>,
+    /// Global params as of the last broadcast (lossy codecs only).
+    snap: Vec<f32>,
+    /// Error-feedback residual (lossy codecs only).
+    residual: Vec<f32>,
+    /// `delta + residual` staging (lossy codecs only).
+    staging: Vec<f32>,
+}
+
+impl CommState {
+    /// The error-feedback residual arena (empty until the first lossy
+    /// sync) — exposed for tests.
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+}
+
+/// The shared encoding recipe for one training run.
+#[derive(Clone)]
+pub struct SyncEncoder {
+    layout: Arc<FlatLayout>,
+    codec: Arc<dyn Codec>,
+    fragments: usize,
+    run_seed: u64,
+}
+
+impl SyncEncoder {
+    pub fn new(
+        layout: Arc<FlatLayout>,
+        codec: Arc<dyn Codec>,
+        fragments: usize,
+        run_seed: u64,
+    ) -> SyncEncoder {
+        SyncEncoder {
+            layout,
+            codec,
+            fragments: fragments.max(1),
+            run_seed,
+        }
+    }
+
+    pub fn codec(&self) -> &Arc<dyn Codec> {
+        &self.codec
+    }
+
+    /// Exact payload size of one replica's contribution to a sync of
+    /// `frag` (what every worker will put on the channel).
+    pub fn payload_bytes(&self, frag: Option<usize>) -> usize {
+        self.ranges(frag)
+            .iter()
+            .map(|r| self.codec.wire_bytes(r.len()))
+            .sum()
+    }
+
+    fn ranges(&self, frag: Option<usize>) -> Vec<std::ops::Range<usize>> {
+        match frag {
+            Some(f) => self.layout.fragment_ranges(self.fragments, f),
+            None => self.layout.full_range(),
+        }
+    }
+
+    /// Deterministic encode seed: pure in (run seed, sync index,
+    /// replica, range offset) — never scheduling.
+    fn seed_for(&self, sync_index: u64, rep: usize, range_start: usize) -> u64 {
+        let mut s = self.run_seed ^ 0x5EED_C0DE_u64;
+        let a = splitmix64(&mut s);
+        let mut s = a ^ sync_index;
+        let b = splitmix64(&mut s);
+        let mut s = b ^ ((rep as u64) << 32) ^ range_start as u64;
+        splitmix64(&mut s)
+    }
+
+    /// Capture the sync'd global params from the replica's state
+    /// literals (call once before the first inner step, when replica
+    /// state still equals the global init — Algorithm 1 line 2). No-op
+    /// for identity codecs, which never form deltas.
+    pub fn init_snapshot(
+        &self,
+        comm: &mut CommState,
+        state: &[Arc<xla::Literal>],
+    ) -> Result<()> {
+        if self.codec.is_identity() {
+            return Ok(());
+        }
+        let total = self.layout.total();
+        comm.snap = vec![0.0; total];
+        comm.residual = vec![0.0; total];
+        comm.staging = vec![0.0; total];
+        for leaf in 0..self.layout.n_leaves() {
+            let r = self.layout.range(leaf);
+            state[leaf]
+                .to_slice::<f32>(&mut comm.snap[r])
+                .map_err(|e| anyhow::anyhow!("comm snapshot: leaf {leaf}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Refresh the global snapshot from a broadcast's adopt list
+    /// (synced leaves only; untouched leaves keep their values).
+    pub fn adopt(
+        &self,
+        comm: &mut CommState,
+        adopt: &[(usize, Arc<xla::Literal>)],
+    ) -> Result<()> {
+        if self.codec.is_identity() || adopt.is_empty() {
+            return Ok(());
+        }
+        if comm.snap.is_empty() && self.layout.total() > 0 {
+            bail!("comm adopt before init_snapshot");
+        }
+        for (leaf, lit) in adopt {
+            let r = self.layout.range(*leaf);
+            lit.to_slice::<f32>(&mut comm.snap[r])
+                .map_err(|e| anyhow::anyhow!("comm adopt: leaf {leaf}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Encode replica `rep`'s contribution to sync `sync_index` over
+    /// the due ranges of `frag`. `state` holds the replica's literal
+    /// handles in manifest leaf order (the first `n_leaves` are the
+    /// parameters). Returns exactly [`SyncEncoder::payload_bytes`] bytes.
+    pub fn encode_replica(
+        &self,
+        rep: usize,
+        state: &[Arc<xla::Literal>],
+        comm: &mut CommState,
+        frag: Option<usize>,
+        sync_index: u64,
+    ) -> Result<Vec<u8>> {
+        let total = self.layout.total();
+        if state.len() < self.layout.n_leaves() {
+            bail!(
+                "comm encode: replica {rep} has {} state leaves, layout wants {}",
+                state.len(),
+                self.layout.n_leaves()
+            );
+        }
+        if comm.scratch.len() != total {
+            comm.scratch = vec![0.0; total];
+        }
+        // pull the due leaves into the scratch arena
+        for leaf in self.layout.leaves(self.fragments, frag) {
+            let r = self.layout.range(leaf);
+            state[leaf]
+                .to_slice::<f32>(&mut comm.scratch[r])
+                .map_err(|e| anyhow::anyhow!("comm encode: pulling leaf {leaf}: {e}"))?;
+        }
+        let ranges = self.ranges(frag);
+        let mut out = Vec::with_capacity(self.payload_bytes(frag));
+        if self.codec.is_identity() {
+            // legacy wire: raw f32 parameters, bit for bit
+            for r in &ranges {
+                let seed = self.seed_for(sync_index, rep, r.start);
+                self.codec.encode(&comm.scratch[r.clone()], seed, &mut out);
+            }
+            return Ok(out);
+        }
+        if comm.snap.len() != total {
+            bail!("comm encode: lossy codec without init_snapshot (replica {rep})");
+        }
+        for r in &ranges {
+            // x = (global - theta) + residual, the error-compensated delta
+            for i in r.clone() {
+                comm.staging[i] = (comm.snap[i] - comm.scratch[i]) + comm.residual[i];
+            }
+            let seed = self.seed_for(sync_index, rep, r.start);
+            let before = out.len();
+            self.codec.encode(&comm.staging[r.clone()], seed, &mut out);
+            // residual <- x - dq(x): decode our own bytes (scratch is
+            // free again — theta was consumed forming x)
+            self.codec
+                .decode(&out[before..], &mut comm.scratch[r.clone()])?;
+            for i in r.clone() {
+                comm.residual[i] = comm.staging[i] - comm.scratch[i];
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::codec::{codec_for, OuterBits};
+    use crate::runtime::HostTensor;
+
+    fn layout() -> Arc<FlatLayout> {
+        Arc::new(FlatLayout::new(vec![vec![3], vec![2, 2], vec![5]]))
+    }
+
+    fn lits(layout: &FlatLayout, fill: impl Fn(usize) -> f32) -> Vec<Arc<xla::Literal>> {
+        (0..layout.n_leaves())
+            .map(|l| {
+                let r = layout.range(l);
+                let v: Vec<f32> = r.map(|i| fill(i)).collect();
+                Arc::new(
+                    HostTensor::from_vec(layout.shape(l), v)
+                        .to_literal()
+                        .unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn identity_payload_is_raw_params() {
+        let l = layout();
+        let enc = SyncEncoder::new(Arc::clone(&l), codec_for(OuterBits::Fp32), 1, 7);
+        let state = lits(&l, |i| i as f32 * 0.5 - 2.0);
+        let mut comm = CommState::default();
+        let bytes = enc
+            .encode_replica(0, &state, &mut comm, None, 0)
+            .unwrap();
+        assert_eq!(bytes.len(), enc.payload_bytes(None));
+        assert_eq!(bytes.len(), l.total() * 4);
+        let got: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let want: Vec<f32> = (0..l.total()).map(|i| i as f32 * 0.5 - 2.0).collect();
+        assert_eq!(got, want);
+        assert!(comm.residual().is_empty(), "identity never builds residuals");
+    }
+
+    #[test]
+    fn lossy_requires_snapshot_and_builds_residual() {
+        let l = layout();
+        let enc = SyncEncoder::new(Arc::clone(&l), codec_for(OuterBits::Int4), 1, 7);
+        let state = lits(&l, |i| (i as f32).sin());
+        let mut comm = CommState::default();
+        assert!(
+            enc.encode_replica(0, &state, &mut comm, None, 0).is_err(),
+            "lossy encode without snapshot must fail loudly"
+        );
+        enc.init_snapshot(&mut comm, &lits(&l, |_| 0.0)).unwrap();
+        let bytes = enc.encode_replica(0, &state, &mut comm, None, 0).unwrap();
+        assert_eq!(bytes.len(), enc.payload_bytes(None));
+        // residual = x - dq is bounded by one quantization step
+        let maxabs = (0..l.total())
+            .map(|i| (i as f32).sin().abs())
+            .fold(0.0f32, f32::max);
+        assert!(comm
+            .residual()
+            .iter()
+            .all(|&r| r.abs() <= maxabs / 7.0 * 1.0001));
+    }
+
+    #[test]
+    fn payload_bytes_match_fragment_ranges() {
+        let l = layout();
+        for bits in OuterBits::ALL {
+            let enc = SyncEncoder::new(Arc::clone(&l), codec_for(bits), 2, 0);
+            let full = enc.payload_bytes(None);
+            let f0 = enc.payload_bytes(Some(0));
+            let f1 = enc.payload_bytes(Some(1));
+            assert!(f0 > 0 && f1 > 0, "{bits:?}");
+            assert!(f0 < full && f1 < full, "{bits:?}");
+        }
+    }
+
+    #[test]
+    fn adopt_refreshes_only_listed_leaves() {
+        let l = layout();
+        let enc = SyncEncoder::new(Arc::clone(&l), codec_for(OuterBits::Int8), 1, 1);
+        let mut comm = CommState::default();
+        enc.init_snapshot(&mut comm, &lits(&l, |_| 1.0)).unwrap();
+        let fresh = lits(&l, |_| 9.0);
+        enc.adopt(&mut comm, &[(1, Arc::clone(&fresh[1]))]).unwrap();
+        let r1 = l.range(1);
+        for i in 0..l.total() {
+            let want = if r1.contains(&i) { 9.0 } else { 1.0 };
+            assert_eq!(comm.snap[i], want, "element {i}");
+        }
+    }
+
+    #[test]
+    fn seeds_vary_by_sync_replica_and_offset() {
+        let l = layout();
+        let enc = SyncEncoder::new(Arc::clone(&l), codec_for(OuterBits::Int4), 1, 9);
+        let base = enc.seed_for(0, 0, 0);
+        assert_ne!(base, enc.seed_for(1, 0, 0));
+        assert_ne!(base, enc.seed_for(0, 1, 0));
+        assert_ne!(base, enc.seed_for(0, 0, 8));
+    }
+}

@@ -1,0 +1,58 @@
+//! Compressed outer communication: the wire subsystem for low-bit
+//! outer gradients on the flat parameter bus (paper section 7;
+//! Streaming DiLoCo, arXiv:2501.18512, shows 4-bit outer gradients
+//! cost negligible loss).
+//!
+//! # The quantize → reduce → dequantize contract
+//!
+//! Every DiLoCo outer sync moves each replica's contribution across
+//! the cross-datacenter boundary. This module makes that wire explicit
+//! and cheap to narrow:
+//!
+//! 1. **quantize** (replica side, [`encoder::SyncEncoder`]): the
+//!    replica's due fragment is pulled from its literals and encoded
+//!    with the run's [`codec::Codec`]. The identity codec ([`codec::Fp32`])
+//!    ships raw f32 parameters — byte-for-byte the legacy wire, so
+//!    `--outer-bits 32` is bit-identical to the uncompressed path.
+//!    Lossy codecs ship the error-compensated outer delta
+//!    `x = (global - theta) + residual` instead, and update the
+//!    per-replica error-feedback residual `residual <- x - dq(x)` so
+//!    quantization error is carried forward, never lost.
+//! 2. **reduce** (coordinator side, `coordinator::sync::OuterSync::sync_encoded`):
+//!    payloads are decoded into the reused scratch arena and
+//!    accumulated in replica-index order over the precomputed fragment
+//!    ranges — identical summation order to the sequential oracle.
+//! 3. **dequantize / step**: the accumulated value becomes the outer
+//!    gradient (identity: `Delta = global - mean(theta)`; lossy:
+//!    `Delta = mean(dq)`) and the Nesterov outer step runs unchanged
+//!    on the flat bus. The refreshed fragment is broadcast as
+//!    deduplicated f32 literals, and the replica-side snapshot adopts
+//!    it so the next delta is formed against the coordinator's exact
+//!    global.
+//!
+//! Every byte that crosses the wire is counted in [`wire::WireStats`]
+//! — exact encoded sizes per sync, per fragment, per replica — and
+//! surfaces in `RunMetrics` (`wire_up_bytes` / `wire_down_bytes`), the
+//! sweep store, and the `diloco report --exp comm` table. The `netsim`
+//! wall-clock model takes the same width via `WalltimeInput::outer_bits`.
+//!
+//! # Determinism rules
+//!
+//! - Stochastic rounding is seeded purely from
+//!   `(run seed, sync index, replica id, range offset, block index)` —
+//!   never from scheduling, wall-clock, or global state.
+//! - Residuals and snapshots are per-replica state owned by the
+//!   replica's pool worker, advancing only with the replica's own sync
+//!   sequence.
+//! - Reduction happens on the coordinator in replica-index order.
+//!
+//! Together these make every bit width reproduce bit-identically at
+//! any `--workers` count (pinned by `tests/comm_codec.rs`).
+
+pub mod codec;
+pub mod encoder;
+pub mod wire;
+
+pub use codec::{codec_for, Codec, OuterBits};
+pub use encoder::{CommState, SyncEncoder};
+pub use wire::{SyncWireRecord, WireStats};

@@ -1,0 +1,112 @@
+//! Wire accounting: exact byte counts for everything the outer step
+//! moves across the (simulated) cross-datacenter boundary.
+//!
+//! One [`SyncWireRecord`] lands per outer sync event — full or
+//! streaming-fragment — with the encoded payload size per replica
+//! (identical across replicas: same codec, same due ranges), the
+//! replica count, and the broadcast size. Totals are derived, never
+//! stored, so the records are the single source of truth for the
+//! sweep store's `wire_up_bytes` / `wire_down_bytes` and the report's
+//! loss-delta-vs-wire-bytes table.
+//!
+//! Directions, from the coordinator's point of view:
+//!
+//! - **up** — replica → coordinator: the encoded sync contribution,
+//!   counted per replica (an all-reduce ingests every replica's
+//!   payload, so `bytes_up = replicas * bytes_per_replica`);
+//! - **down** — coordinator → replica: the refreshed global fragment.
+//!   Our broadcast ships deduplicated f32 literals, and a
+//!   bandwidth-optimal broadcast costs ~one payload regardless of the
+//!   fan-out, so this is counted **once** per sync at 4 bytes/element,
+//!   not per replica.
+
+/// Exact wire traffic of one outer sync event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SyncWireRecord {
+    /// 0-based sync event index within the run.
+    pub sync_index: u64,
+    /// Streaming fragment id (`None` = full sync / final flush).
+    pub frag: Option<usize>,
+    /// Replicas that contributed a payload.
+    pub replicas: usize,
+    /// Encoded bytes received from each replica.
+    pub bytes_per_replica: u64,
+    /// Broadcast payload pushed back out (f32, deduplicated).
+    pub bytes_down: u64,
+}
+
+impl SyncWireRecord {
+    /// Total replica→coordinator bytes for this sync.
+    pub fn bytes_up(&self) -> u64 {
+        self.bytes_per_replica * self.replicas as u64
+    }
+}
+
+/// Per-run accumulator, owned by `OuterSync`; one record per sync.
+#[derive(Debug, Clone, Default)]
+pub struct WireStats {
+    records: Vec<SyncWireRecord>,
+}
+
+impl WireStats {
+    pub fn record(
+        &mut self,
+        frag: Option<usize>,
+        replicas: usize,
+        bytes_per_replica: u64,
+        bytes_down: u64,
+    ) {
+        let sync_index = self.records.len() as u64;
+        self.records.push(SyncWireRecord {
+            sync_index,
+            frag,
+            replicas,
+            bytes_per_replica,
+            bytes_down,
+        });
+    }
+
+    /// Per-sync records, in sync order.
+    pub fn records(&self) -> &[SyncWireRecord] {
+        &self.records
+    }
+
+    pub fn syncs(&self) -> u64 {
+        self.records.len() as u64
+    }
+
+    /// Total replica→coordinator bytes across the run.
+    pub fn total_up(&self) -> u64 {
+        self.records.iter().map(|r| r.bytes_up()).sum()
+    }
+
+    /// Total coordinator→replica broadcast bytes across the run.
+    pub fn total_down(&self) -> u64 {
+        self.records.iter().map(|r| r.bytes_down).sum()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total_up() + self.total_down()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_totals() {
+        let mut w = WireStats::default();
+        assert_eq!(w.total(), 0);
+        w.record(None, 4, 1000, 500);
+        w.record(Some(1), 4, 300, 500);
+        assert_eq!(w.syncs(), 2);
+        assert_eq!(w.records()[0].sync_index, 0);
+        assert_eq!(w.records()[1].sync_index, 1);
+        assert_eq!(w.records()[1].frag, Some(1));
+        assert_eq!(w.records()[0].bytes_up(), 4000);
+        assert_eq!(w.total_up(), 4000 + 1200);
+        assert_eq!(w.total_down(), 1000);
+        assert_eq!(w.total(), 6200);
+    }
+}

@@ -32,6 +32,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::comm::{codec_for, OuterBits};
 use crate::config::OptimizerPolicy;
 use crate::data::downstream::{scoring_input, McTaskSpec};
 use crate::data::synthetic::{CorpusSpec, TokenStream};
@@ -121,6 +122,14 @@ pub struct RunConfig {
     /// training results, so this is a pure wall-clock knob and is
     /// deliberately excluded from sweep-store run ids.
     pub workers: usize,
+    /// Outer-communication bit width (`--outer-bits`, paper section
+    /// 7): the wire codec replicas encode their sync contribution
+    /// with. Fp32 is the identity oracle (bit-identical to the
+    /// uncompressed path); lower widths quantize the outer gradients
+    /// with per-block scales, stochastic rounding, and error feedback
+    /// (see `crate::comm`). Changes training results, so it IS part of
+    /// the sweep-store run id.
+    pub outer_bits: OuterBits,
 }
 
 impl Default for RunConfig {
@@ -142,6 +151,7 @@ impl Default for RunConfig {
             force_accumulate: false,
             streaming_fragments: 1,
             workers: 1,
+            outer_bits: OuterBits::Fp32,
         }
     }
 }
@@ -168,6 +178,13 @@ pub struct RunMetrics {
     pub downstream: Vec<(String, f64)>,
     pub outer_syncs: usize,
     pub wall_secs: f64,
+    /// Outer-communication bit width the run used (32 = uncompressed).
+    pub outer_bits: u32,
+    /// Exact replica→coordinator wire bytes across all outer syncs
+    /// (encoded payload sizes, counted on the bus; 0 for DP).
+    pub wire_up_bytes: u64,
+    /// Exact coordinator→replica broadcast bytes (deduplicated f32).
+    pub wire_down_bytes: u64,
 }
 
 impl RunMetrics {
@@ -207,6 +224,10 @@ impl RunMetrics {
             ),
             ("outer_syncs", Json::num(self.outer_syncs as f64)),
             ("wall_secs", Json::num(self.wall_secs)),
+            ("outer_bits", Json::int(self.outer_bits)),
+            // wire bytes are u64 exact counts; Json::int avoids f64
+            ("wire_up_bytes", Json::int(self.wire_up_bytes)),
+            ("wire_down_bytes", Json::int(self.wire_down_bytes)),
         ])
     }
 
@@ -249,6 +270,17 @@ impl RunMetrics {
             downstream,
             outer_syncs: j.usize_of("outer_syncs")?,
             wall_secs: j.f64_of("wall_secs")?,
+            // absent in pre-comm-subsystem records: those ran the
+            // uncompressed path and counted no wire bytes
+            outer_bits: j
+                .get("outer_bits")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(32) as u32,
+            wire_up_bytes: j.get("wire_up_bytes").and_then(|v| v.as_u64()).unwrap_or(0),
+            wire_down_bytes: j
+                .get("wire_down_bytes")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0),
         })
     }
 }
@@ -425,14 +457,24 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
     }
     // streaming: one fragment syncs every H/P steps, round-robin.
     let frag_interval = if fragments > 1 { h / fragments } else { h };
+    // DP has no outer wire: --outer-bits is inert there, so normalize
+    // to fp32 (metrics + run ids must not pretend a codec ran)
+    let outer_bits = if is_diloco { cfg.outer_bits } else { OuterBits::Fp32 };
+    if !is_diloco && cfg.outer_bits != OuterBits::Fp32 {
+        log::warn!(
+            "--outer-bits {} has no effect for Data-Parallel (no outer sync); recording 32",
+            cfg.outer_bits.label()
+        );
+    }
 
     log::info!(
-        "run {} {} B={} tok/step, T={total_steps}, lr={}, H={}, wd={wd:.2e}",
+        "run {} {} B={} tok/step, T={total_steps}, lr={}, H={}, wd={wd:.2e}, outer_bits={}",
         cfg.model,
         cfg.algo.label(),
         tokens_per_step,
         cfg.inner_lr,
         if is_diloco { h } else { 0 },
+        outer_bits.label(),
     );
 
     // ---- artifacts ------------------------------------------------------
@@ -518,14 +560,20 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
     // optimizer arenas + per-leaf literal cache (DiLoCo only).
     let mut sync: Option<OuterSync> = if is_diloco {
         let layout = Arc::new(FlatLayout::from_specs(&mr.manifest.params));
-        Some(OuterSync::new(
-            layout,
-            &host_params0,
-            params0.clone(),
-            cfg.outer_lr,
-            policy.outer_momentum,
-            fragments,
-        )?)
+        Some(
+            OuterSync::new(
+                layout,
+                &host_params0,
+                params0.clone(),
+                cfg.outer_lr,
+                policy.outer_momentum,
+                fragments,
+            )?
+            // the wire codec: workers encode their sync contribution
+            // with this, the coordinator decodes + reduces, and every
+            // byte is counted (crate::comm)
+            .with_codec(codec_for(outer_bits), cfg.seed),
+        )
     } else {
         None
     };
@@ -606,6 +654,11 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         }
     }
 
+    let (wire_up_bytes, wire_down_bytes) = match &sync {
+        Some(bus) => (bus.wire_stats().total_up(), bus.wire_stats().total_down()),
+        None => (0, 0),
+    };
+
     Ok(RunMetrics {
         model: cfg.model.clone(),
         algo: cfg.algo.label(),
@@ -626,5 +679,8 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         downstream,
         outer_syncs: outcome.outer_syncs,
         wall_secs: t_start.elapsed().as_secs_f64(),
+        outer_bits: outer_bits.bits(),
+        wire_up_bytes,
+        wire_down_bytes,
     })
 }

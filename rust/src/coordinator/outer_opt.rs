@@ -119,6 +119,17 @@ pub fn acc_finish(acc: &mut [f32], global: &[f32], m: f32) {
     }
 }
 
+/// Finish a delta-coded outer gradient in place: acc_i <- acc_i / m
+/// (acc arrives holding sum_m dq(delta_m), which already IS the outer
+/// gradient up to the mean — the lossy-codec counterpart of
+/// [`acc_finish`]).
+#[inline]
+pub fn acc_scale(acc: &mut [f32], m: f32) {
+    for a in acc.iter_mut() {
+        *a /= m;
+    }
+}
+
 /// Compute the outer gradient Delta = global - mean(replicas)
 /// (Algorithm 1 lines 9-10: Delta_m = theta^(t-H) - theta_m, averaged).
 /// Allocates a fresh arena — convenience for tests and benches; the

@@ -7,31 +7,42 @@
 //! between consecutive outer-sync boundaries (plus eval boundaries for
 //! Data-Parallel). Each worker thread *owns* a fixed subset of
 //! replicas for the whole run (`replica r -> worker r % workers`): the
-//! replica's literal-handle state and its `TokenStream` shard live
-//! inside the worker, so all RNG/data consumption is per-replica
-//! sequential no matter how segments are scheduled. The coordinator
-//! sends each worker a `Run` command for the segment; workers execute
-//! their replicas' H inner steps concurrently and hand back per-step
-//! losses plus `Arc` handles to their current parameter literals over
-//! a channel.
+//! replica's literal-handle state, its `TokenStream` shard, and its
+//! comm-side state (global snapshot + error-feedback residual, see
+//! `crate::comm`) live inside the worker, so all RNG/data/residual
+//! consumption is per-replica sequential no matter how segments are
+//! scheduled. The coordinator sends each worker a `Run` command for
+//! the segment; workers execute their replicas' H inner steps
+//! concurrently and hand back per-step losses plus each replica's
+//! **sync payload** over a channel: under a *lossy* wire codec
+//! (`--outer-bits` below 32) that payload is the replica's encoded
+//! wire contribution — error-compensated quantized outer deltas, the
+//! quantize stage running on the worker, where the replica lives.
+//! Uncompressed runs (the identity codec) and Data-Parallel keep the
+//! zero-copy `Arc` literal handoff from PR 2 — no serialization on
+//! the default path; `OuterSync::sync` counts the identity wire
+//! bytes itself.
 //!
 //! The **outer step is the barrier**: the coordinator blocks until
-//! every worker reports, assembles the replica parameter handles in
-//! replica-index order, runs the zero-alloc flat-bus outer step
-//! ([`OuterSync::sync`]), and broadcasts by attaching the deduplicated
-//! global literals to the *next* `Run` command (workers adopt them
-//! before stepping). Only the coordinator ever touches the flat
-//! arenas; workers only ever read literals — ownership never crosses
-//! the barrier in both directions at once.
+//! every worker reports, assembles the payloads in replica-index
+//! order, runs the zero-alloc flat-bus outer step
+//! ([`OuterSync::sync_encoded`]), and broadcasts by attaching the
+//! deduplicated global literals to the *next* `Run` command (workers
+//! adopt them — state handles and comm snapshot both — before
+//! stepping). Only the coordinator ever touches the flat arenas;
+//! workers only ever read literals — ownership never crosses the
+//! barrier in both directions at once.
 //!
 //! # Why determinism holds
 //!
 //! Bit-identical results for any worker count follow from three
-//! invariants, each pinned by `tests/worker_pool.rs`:
+//! invariants, each pinned by `tests/worker_pool.rs` and (per bit
+//! width) `tests/comm_codec.rs`:
 //!
-//! 1. replica state + data shard are owned by exactly one worker and
-//!    advance in step order — scheduling cannot reorder a replica's
-//!    own computation;
+//! 1. replica state, data shard, and comm residual are owned by
+//!    exactly one worker and advance in step/sync order — scheduling
+//!    cannot reorder a replica's own computation, and encode seeds
+//!    derive from (run seed, sync index, replica), never the schedule;
 //! 2. cross-replica reduction (the per-step mean loss and the outer
 //!    gradient accumulation) happens on the coordinator in replica
 //!    index order, identical to the sequential loop's summation order;
@@ -49,6 +60,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::comm::{CommState, SyncEncoder};
 use crate::coordinator::sync::OuterSync;
 use crate::data::synthetic::TokenStream;
 
@@ -126,13 +138,36 @@ pub struct DriveOutcome {
 /// adopts before its next inner step.
 type Adopt = Vec<(usize, Arc<xla::Literal>)>;
 
-/// Per-segment result: `losses[r]` / `params[r]` for replica r.
-type SegmentData = (Vec<Vec<f64>>, Vec<Vec<Arc<xla::Literal>>>);
+/// What the coordinator told the workers to produce at segment end.
+#[derive(Debug, Clone)]
+struct EncodeSpec {
+    /// Streaming fragment due at the boundary (None = full sync).
+    frag: Option<usize>,
+    /// 0-based outer-sync index (stochastic-rounding seed component).
+    sync_index: u64,
+}
+
+/// One replica's contribution at a segment boundary.
+enum SyncPayload {
+    /// Data-Parallel: current parameter literal handles (for the
+    /// boundary eval; nothing crosses a wire).
+    Params(Vec<Arc<xla::Literal>>),
+    /// DiLoCo: the encoded wire contribution for the due fragment.
+    Encoded(Vec<u8>),
+}
+
+/// Per-segment result: `losses[r]` / `payloads[r]` for replica r.
+type SegmentData = (Vec<Vec<f64>>, Vec<SyncPayload>);
 
 /// Run one training schedule over the replicas, parallelizing the
 /// inner loop across `plan.workers` threads. On return `replicas`
 /// holds the final states (broadcasts applied), whatever the worker
 /// count; `sync`, when supplied, has performed every due outer step.
+///
+/// When `sync` carries a lossy codec, replicas must enter with state
+/// equal to the sync'd global for the synced leaves (Algorithm 1
+/// line 2 guarantees this) — the comm snapshot is captured here,
+/// before the first inner step.
 pub fn drive<E: InnerEngine>(
     engine: &E,
     replicas: &mut Vec<ReplicaState>,
@@ -166,11 +201,30 @@ pub fn drive<E: InnerEngine>(
     }
     let workers = plan.workers.clamp(1, m);
 
+    // Comm-side state: the shared encoder recipe plus one CommState
+    // per replica (snapshot of the global + error-feedback residual),
+    // captured before any step moves the state off the init. Identity
+    // codecs take none of this: they keep the PR 2 zero-copy literal
+    // handoff (OuterSync::sync counts their wire bytes itself), so the
+    // encode detour — and its arenas — exist only for lossy codecs.
+    let encoder: Option<SyncEncoder> = match sync.as_deref() {
+        Some(s) if !s.codec().is_identity() => Some(s.encoder()),
+        _ => None,
+    };
+    let mut comm: Vec<CommState> = (0..m).map(|_| CommState::default()).collect();
+    if let Some(enc) = &encoder {
+        for (rep, cm) in replicas.iter().zip(comm.iter_mut()) {
+            enc.init_snapshot(cm, &rep.state)?;
+        }
+    }
+
     if workers == 1 {
         let mut exec = InlineExec {
             engine,
             replicas: &mut replicas[..],
             n_params: plan.n_params,
+            encoder: encoder.as_ref(),
+            comm: &mut comm,
         };
         let (outcome, pending) = coordinate(engine, &mut exec, sync, plan, m)?;
         // final broadcast (the full flush at t = total_steps)
@@ -183,11 +237,12 @@ pub fn drive<E: InnerEngine>(
     let n_params = plan.n_params;
     std::thread::scope(|scope| -> Result<DriveOutcome> {
         // Partition ownership: replica r lives on worker r % workers
-        // for the whole run (its TokenStream advances only there).
-        let mut owned: Vec<Vec<(usize, ReplicaState)>> =
+        // for the whole run (its TokenStream and comm residual advance
+        // only there).
+        let mut owned: Vec<Vec<(usize, ReplicaState, CommState)>> =
             (0..workers).map(|_| Vec::new()).collect();
-        for (r, rep) in replicas.drain(..).enumerate() {
-            owned[r % workers].push((r, rep));
+        for (r, (rep, cm)) in replicas.drain(..).zip(comm).enumerate() {
+            owned[r % workers].push((r, rep, cm));
         }
         let mut txs = Vec::with_capacity(workers);
         let mut rxs = Vec::with_capacity(workers);
@@ -197,7 +252,10 @@ pub fn drive<E: InnerEngine>(
             let (res_tx, res_rx) = channel::<Result<WorkerReport>>();
             txs.push(cmd_tx);
             rxs.push(res_rx);
-            handles.push(scope.spawn(move || worker_loop(engine, n_params, set, cmd_rx, res_tx)));
+            let enc = encoder.clone();
+            handles.push(
+                scope.spawn(move || worker_loop(engine, n_params, enc, set, cmd_rx, res_tx)),
+            );
         }
 
         let mut exec = PoolExec { txs, rxs, m };
@@ -236,9 +294,15 @@ pub fn drive<E: InnerEngine>(
 // ---- the coordinator loop (shared by inline and threaded paths) ------
 
 /// Executes one segment of inner steps across all replicas and reports
-/// per-replica per-step losses + current parameter handles.
+/// per-replica per-step losses + boundary sync payloads.
 trait SegmentExec {
-    fn run_segment(&mut self, from: usize, to: usize, adopt: &Adopt) -> Result<SegmentData>;
+    fn run_segment(
+        &mut self,
+        from: usize,
+        to: usize,
+        adopt: &Adopt,
+        encode: Option<&EncodeSpec>,
+    ) -> Result<SegmentData>;
 }
 
 /// End of the segment starting after `t0`: the next outer-sync
@@ -254,6 +318,16 @@ fn next_boundary(t0: usize, plan: &DrivePlan, diloco: bool) -> usize {
     b
 }
 
+/// The streaming fragment due at boundary `t1` (None = full sync —
+/// vanilla DiLoCo, or the final full flush so nothing stays stale).
+fn due_fragment(t1: usize, plan: &DrivePlan) -> Option<usize> {
+    if plan.fragments > 1 && t1 != plan.total_steps {
+        Some(((t1 / plan.sync_interval).wrapping_sub(1)) % plan.fragments)
+    } else {
+        None
+    }
+}
+
 fn coordinate<E: InnerEngine, X: SegmentExec>(
     engine: &E,
     exec: &mut X,
@@ -262,12 +336,29 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
     m: usize,
 ) -> Result<(DriveOutcome, Adopt)> {
     let diloco = sync.is_some();
+    // Lossy codecs route through the encoded wire; identity runs keep
+    // the zero-copy literal handoff into OuterSync::sync.
+    let wire_codec = sync
+        .as_deref()
+        .map(|b| !b.codec().is_identity())
+        .unwrap_or(false);
     let mut out = DriveOutcome::default();
     let mut pending: Adopt = Vec::new();
     let mut t0 = 0usize;
     while t0 < plan.total_steps {
         let t1 = next_boundary(t0, plan, diloco);
-        let (losses, params) = exec.run_segment(t0, t1, &pending)?;
+        // A DiLoCo boundary is always a sync boundary, so the workers
+        // know before stepping what they will encode at segment end.
+        let frag = if diloco { due_fragment(t1, plan) } else { None };
+        let spec = if wire_codec {
+            Some(EncodeSpec {
+                frag,
+                sync_index: out.outer_syncs as u64,
+            })
+        } else {
+            None
+        };
+        let (losses, payloads) = exec.run_segment(t0, t1, &pending, spec.as_ref())?;
         pending.clear();
 
         // Per-step mean loss, summed in replica index order — the same
@@ -305,31 +396,41 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
         }
 
         // Outer synchronization at the boundary (Algorithm 1 lines
-        // 8-12): barrier already passed, replica handles in hand.
+        // 8-12): barrier already passed, payloads in hand — encoded
+        // wire frames under a lossy codec, literal handles otherwise.
         if let Some(bus) = sync.as_deref_mut() {
-            if t1 % plan.sync_interval == 0 || t1 == plan.total_steps {
-                // vanilla: all leaves; streaming: the due fragment, or
-                // a full flush on the final step so nothing stays stale.
-                let frag: Option<usize> = if plan.fragments > 1 && t1 != plan.total_steps {
-                    Some(((t1 / plan.sync_interval).wrapping_sub(1)) % plan.fragments)
-                } else {
-                    None
-                };
-                {
-                    let parts: Vec<&[Arc<xla::Literal>]> =
-                        params.iter().map(|p| &p[..]).collect();
-                    bus.sync(&parts, frag)?;
-                }
-                out.outer_syncs += 1;
-                // Broadcast = the next segment's adopt list: every
-                // replica gets the same freshly-uploaded literal per
-                // synced leaf (N uploads, never M×N).
-                let lits = bus.global_literals();
-                pending = bus
-                    .synced_leaves(frag)
-                    .map(|leaf| (leaf, Arc::clone(&lits[leaf])))
-                    .collect();
+            if wire_codec {
+                let frames: Vec<&[u8]> = payloads
+                    .iter()
+                    .map(|p| match p {
+                        SyncPayload::Encoded(bytes) => Ok(&bytes[..]),
+                        SyncPayload::Params(_) => {
+                            Err(anyhow!("drive: wire-codec segment returned unencoded payload"))
+                        }
+                    })
+                    .collect::<Result<_>>()?;
+                bus.sync_encoded(&frames, frag)?;
+            } else {
+                let parts: Vec<&[Arc<xla::Literal>]> = payloads
+                    .iter()
+                    .map(|p| match p {
+                        SyncPayload::Params(v) => Ok(&v[..]),
+                        SyncPayload::Encoded(_) => {
+                            Err(anyhow!("drive: identity segment returned encoded payload"))
+                        }
+                    })
+                    .collect::<Result<_>>()?;
+                bus.sync(&parts, frag)?;
             }
+            out.outer_syncs += 1;
+            // Broadcast = the next segment's adopt list: every
+            // replica gets the same freshly-uploaded literal per
+            // synced leaf (N uploads, never M×N).
+            let lits = bus.global_literals();
+            pending = bus
+                .synced_leaves(frag)
+                .map(|leaf| (leaf, Arc::clone(&lits[leaf])))
+                .collect();
         }
 
         // Eval due exactly at the boundary sees the post-sync model
@@ -338,7 +439,12 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             if t1 % k == 0 && t1 != plan.total_steps {
                 let e = match sync.as_deref() {
                     Some(bus) => engine.eval(bus.global_literals())?,
-                    None => engine.eval(&params[0])?,
+                    None => match &payloads[0] {
+                        SyncPayload::Params(p) => engine.eval(p)?,
+                        SyncPayload::Encoded(_) => {
+                            bail!("drive: Data-Parallel segment returned encoded payload")
+                        }
+                    },
                 };
                 out.eval_curve.push((t1, e));
                 log::info!("  step {t1} eval_loss={e:.4}");
@@ -355,12 +461,23 @@ struct InlineExec<'a, E: InnerEngine> {
     engine: &'a E,
     replicas: &'a mut [ReplicaState],
     n_params: usize,
+    encoder: Option<&'a SyncEncoder>,
+    comm: &'a mut Vec<CommState>,
 }
 
 impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
-    fn run_segment(&mut self, from: usize, to: usize, adopt: &Adopt) -> Result<SegmentData> {
-        for rep in self.replicas.iter_mut() {
+    fn run_segment(
+        &mut self,
+        from: usize,
+        to: usize,
+        adopt: &Adopt,
+        encode: Option<&EncodeSpec>,
+    ) -> Result<SegmentData> {
+        for (rep, cm) in self.replicas.iter_mut().zip(self.comm.iter_mut()) {
             rep.adopt(adopt);
+            if let Some(enc) = self.encoder {
+                enc.adopt(cm, adopt)?;
+            }
         }
         let m = self.replicas.len();
         let mut losses = vec![Vec::with_capacity(to - from); m];
@@ -370,45 +487,84 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
                 losses[r].push(self.engine.inner_step(r, rep, t)?);
             }
         }
-        let params = self
-            .replicas
-            .iter()
-            .map(|r| r.state[..self.n_params].to_vec())
-            .collect();
-        Ok((losses, params))
+        let payloads: Vec<SyncPayload> = match encode {
+            Some(spec) => {
+                let enc = self.encoder.ok_or_else(|| {
+                    anyhow!("drive: encode requested without a sync encoder")
+                })?;
+                self.replicas
+                    .iter()
+                    .zip(self.comm.iter_mut())
+                    .enumerate()
+                    .map(|(r, (rep, cm))| {
+                        Ok(SyncPayload::Encoded(enc.encode_replica(
+                            r,
+                            &rep.state,
+                            cm,
+                            spec.frag,
+                            spec.sync_index,
+                        )?))
+                    })
+                    .collect::<Result<_>>()?
+            }
+            None => self
+                .replicas
+                .iter()
+                .map(|r| SyncPayload::Params(r.state[..self.n_params].to_vec()))
+                .collect(),
+        };
+        Ok((losses, payloads))
     }
 }
 
 // ---- worker pool ------------------------------------------------------
 
 enum Cmd {
-    /// Adopt the broadcast literals, then run steps (from, to].
-    Run { from: usize, to: usize, adopt: Adopt },
+    /// Adopt the broadcast literals, run steps (from, to], then build
+    /// the boundary payload (encoded when `encode` is set).
+    Run {
+        from: usize,
+        to: usize,
+        adopt: Adopt,
+        encode: Option<EncodeSpec>,
+    },
     /// Adopt the final broadcast and exit, returning replica ownership.
     Finish { adopt: Adopt },
 }
 
 struct WorkerReport {
-    /// (replica id, per-step losses, parameter literal handles).
-    reps: Vec<(usize, Vec<f64>, Vec<Arc<xla::Literal>>)>,
+    /// (replica id, per-step losses, boundary sync payload).
+    reps: Vec<(usize, Vec<f64>, SyncPayload)>,
 }
 
 fn worker_loop<E: InnerEngine>(
     engine: &E,
     n_params: usize,
-    mut owned: Vec<(usize, ReplicaState)>,
+    encoder: Option<SyncEncoder>,
+    mut owned: Vec<(usize, ReplicaState, CommState)>,
     rx: Receiver<Cmd>,
     tx: Sender<Result<WorkerReport>>,
 ) -> Vec<(usize, ReplicaState)> {
     while let Ok(cmd) = rx.recv() {
         match cmd {
-            Cmd::Run { from, to, adopt } => {
+            Cmd::Run {
+                from,
+                to,
+                adopt,
+                encode,
+            } => {
                 let mut report = WorkerReport {
                     reps: Vec::with_capacity(owned.len()),
                 };
                 let mut err: Option<anyhow::Error> = None;
-                'replicas: for (rid, rep) in owned.iter_mut() {
+                'replicas: for (rid, rep, cm) in owned.iter_mut() {
                     rep.adopt(&adopt);
+                    if let Some(enc) = &encoder {
+                        if let Err(e) = enc.adopt(cm, &adopt) {
+                            err = Some(e);
+                            break 'replicas;
+                        }
+                    }
                     let mut losses = Vec::with_capacity(to - from);
                     for t in from + 1..=to {
                         match engine.inner_step(*rid, rep, t) {
@@ -419,7 +575,24 @@ fn worker_loop<E: InnerEngine>(
                             }
                         }
                     }
-                    report.reps.push((*rid, losses, rep.state[..n_params].to_vec()));
+                    let payload = match (&encode, &encoder) {
+                        (Some(spec), Some(enc)) => {
+                            match enc.encode_replica(*rid, &rep.state, cm, spec.frag, spec.sync_index)
+                            {
+                                Ok(bytes) => SyncPayload::Encoded(bytes),
+                                Err(e) => {
+                                    err = Some(e);
+                                    break 'replicas;
+                                }
+                            }
+                        }
+                        (Some(_), None) => {
+                            err = Some(anyhow!("worker: encode requested without an encoder"));
+                            break 'replicas;
+                        }
+                        (None, _) => SyncPayload::Params(rep.state[..n_params].to_vec()),
+                    };
+                    report.reps.push((*rid, losses, payload));
                 }
                 let msg = match err {
                     Some(e) => Err(e),
@@ -431,14 +604,14 @@ fn worker_loop<E: InnerEngine>(
                 }
             }
             Cmd::Finish { adopt } => {
-                for (_, rep) in owned.iter_mut() {
+                for (_, rep, _) in owned.iter_mut() {
                     rep.adopt(&adopt);
                 }
                 break;
             }
         }
     }
-    owned
+    owned.into_iter().map(|(r, rep, _)| (r, rep)).collect()
 }
 
 struct PoolExec {
@@ -448,36 +621,45 @@ struct PoolExec {
 }
 
 impl SegmentExec for PoolExec {
-    fn run_segment(&mut self, from: usize, to: usize, adopt: &Adopt) -> Result<SegmentData> {
+    fn run_segment(
+        &mut self,
+        from: usize,
+        to: usize,
+        adopt: &Adopt,
+        encode: Option<&EncodeSpec>,
+    ) -> Result<SegmentData> {
         for tx in &self.txs {
             tx.send(Cmd::Run {
                 from,
                 to,
                 adopt: adopt.clone(),
+                encode: encode.cloned(),
             })
             .map_err(|_| anyhow!("worker hung up before segment ({from}, {to}]"))?;
         }
         let mut losses: Vec<Vec<f64>> = vec![Vec::new(); self.m];
-        let mut params: Vec<Vec<Arc<xla::Literal>>> = vec![Vec::new(); self.m];
+        let mut payloads: Vec<Option<SyncPayload>> = (0..self.m).map(|_| None).collect();
         for (w, rx) in self.rxs.iter().enumerate() {
             let report = rx
                 .recv()
                 .map_err(|_| anyhow!("worker {w} died during segment ({from}, {to}]"))??;
             for (rid, l, p) in report.reps {
                 losses[rid] = l;
-                params[rid] = p;
+                payloads[rid] = Some(p);
             }
         }
-        for r in 0..self.m {
-            if losses[r].len() != to - from || params[r].is_empty() {
+        let mut out = Vec::with_capacity(self.m);
+        for (r, p) in payloads.into_iter().enumerate() {
+            if losses[r].len() != to - from {
                 bail!(
                     "replica {r}: incomplete segment report ({} of {} steps)",
                     losses[r].len(),
                     to - from
                 );
             }
+            out.push(p.ok_or_else(|| anyhow!("replica {r}: missing segment payload"))?);
         }
-        Ok((losses, params))
+        Ok((losses, out))
     }
 }
 
@@ -486,6 +668,9 @@ impl SegmentExec for PoolExec {
 fn _assert_send() {
     fn ok<T: Send>() {}
     ok::<ReplicaState>();
+    ok::<CommState>();
+    ok::<SyncEncoder>();
+    ok::<SyncPayload>();
     ok::<Cmd>();
     ok::<WorkerReport>();
     ok::<Result<WorkerReport>>();
@@ -525,6 +710,19 @@ mod tests {
         let mut r = plan(7);
         r.sync_interval = usize::MAX;
         assert_eq!(next_boundary(0, &r, true), 7);
+    }
+
+    #[test]
+    fn due_fragments_round_robin_with_final_flush() {
+        let mut p = plan(20);
+        p.sync_interval = 5;
+        p.fragments = 2;
+        assert_eq!(due_fragment(5, &p), Some(0));
+        assert_eq!(due_fragment(10, &p), Some(1));
+        assert_eq!(due_fragment(15, &p), Some(0));
+        assert_eq!(due_fragment(20, &p), None, "final boundary is a full flush");
+        p.fragments = 1;
+        assert_eq!(due_fragment(5, &p), None, "vanilla DiLoCo always full");
     }
 
     struct NoopEngine;

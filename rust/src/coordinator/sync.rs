@@ -22,15 +22,26 @@
 //! Literals are never mutated after construction (PJRT treats inputs
 //! as immutable and copies to device), so sharing one literal across
 //! replicas and the eval path is safe.
+//!
+//! Since the comm subsystem landed, the pull stage has two entry
+//! points: [`OuterSync::sync`] ingests replica literal handles — the
+//! live path for uncompressed runs (zero-copy, unchanged from PR 2)
+//! and the oracle the encoded path is pinned against — while
+//! [`OuterSync::sync_encoded`] ingests the wire payloads the pool
+//! workers encode with the run's lossy [`Codec`] — the reduce half of
+//! the quantize→reduce→dequantize contract (see `crate::comm`). Both
+//! count exact wire bytes into [`WireStats`].
 
 use std::ops::Range;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::comm::codec::{codec_for, Codec, OuterBits};
+use crate::comm::{SyncEncoder, WireStats};
 use crate::runtime::{FlatLayout, FlatParams, HostTensor};
 
-use super::outer_opt::{acc_add, acc_finish, OuterOpt};
+use super::outer_opt::{acc_add, acc_finish, acc_scale, OuterOpt};
 
 pub struct OuterSync {
     fragments: usize,
@@ -48,6 +59,13 @@ pub struct OuterSync {
     /// Cached literal per leaf — the global model as the device sees
     /// it. Every entry is shared (never rebuilt) until its leaf syncs.
     lits: Vec<Arc<xla::Literal>>,
+    /// Wire codec for encoded syncs (identity f32 unless the run
+    /// compresses outer communication — `--outer-bits`).
+    codec: Arc<dyn Codec>,
+    /// Seed the replica-side encoders derive stochastic rounding from.
+    run_seed: u64,
+    /// Exact bytes moved per sync/fragment/replica.
+    wire: WireStats,
 }
 
 impl OuterSync {
@@ -86,7 +104,39 @@ impl OuterSync {
             frag_ranges,
             full,
             lits: init_lits,
+            codec: codec_for(OuterBits::Fp32),
+            run_seed: 0,
+            wire: WireStats::default(),
         })
+    }
+
+    /// Attach a wire codec (and the run seed its stochastic rounding
+    /// derives from). Default is the identity f32 codec.
+    pub fn with_codec(mut self, codec: Arc<dyn Codec>, run_seed: u64) -> OuterSync {
+        self.codec = codec;
+        self.run_seed = run_seed;
+        self
+    }
+
+    pub fn codec(&self) -> &Arc<dyn Codec> {
+        &self.codec
+    }
+
+    /// The replica-side encoder matching this sync engine (same
+    /// layout, codec, fragment count, and seed) — what the pool hands
+    /// to its workers.
+    pub fn encoder(&self) -> SyncEncoder {
+        SyncEncoder::new(
+            Arc::clone(self.global.layout()),
+            Arc::clone(&self.codec),
+            self.fragments,
+            self.run_seed,
+        )
+    }
+
+    /// Exact wire traffic so far (one record per sync event).
+    pub fn wire_stats(&self) -> &WireStats {
+        &self.wire
     }
 
     pub fn global(&self) -> &FlatParams {
@@ -167,11 +217,116 @@ impl OuterSync {
         }
         self.opt.step_ranges(&mut self.global, &self.acc, ranges);
 
-        // 3. publish: one upload per synced leaf, shared by all readers.
+        // 3. publish + wire accounting (this path ships raw f32 up).
+        self.publish_and_record(frag, replica_params.len(), None)
+    }
+
+    /// Shared tail of both sync entry points: upload each refreshed
+    /// leaf exactly once (Arc-shared by all readers) and record the
+    /// sync's wire traffic. `bytes_per_replica` is the encoded payload
+    /// size, or `None` for the raw-f32 literal path (4 bytes/element).
+    /// The broadcast is counted at 4 bytes/element — the down-wire is
+    /// still f32 whatever the up-wire codec (ROADMAP: quantized
+    /// broadcast would change only this function).
+    fn publish_and_record(
+        &mut self,
+        frag: Option<usize>,
+        replicas: usize,
+        bytes_per_replica: Option<u64>,
+    ) -> Result<()> {
+        let layout = Arc::clone(self.global.layout());
         for leaf in layout.leaves(self.fragments, frag) {
             self.lits[leaf] = Arc::new(self.global.leaf_literal(leaf)?);
         }
+        let ranges: &[Range<usize>] = match frag {
+            Some(f) => &self.frag_ranges[f],
+            None => &self.full,
+        };
+        let elems: u64 = ranges.iter().map(|r| r.len() as u64).sum();
+        self.wire.record(
+            frag,
+            replicas,
+            bytes_per_replica.unwrap_or(elems * 4),
+            elems * 4,
+        );
         Ok(())
+    }
+
+    /// One outer synchronization from **encoded wire payloads** — the
+    /// reduce half of the quantize→reduce→dequantize contract (see
+    /// `crate::comm`). `payloads[r]` is replica r's contribution for
+    /// the due fragment, produced by this engine's [`SyncEncoder`]:
+    /// raw f32 parameters under the identity codec (making this
+    /// bit-identical to [`OuterSync::sync`] on the same values), or
+    /// error-compensated quantized outer deltas under a lossy codec.
+    /// Payloads are decoded into the reused scratch arena and
+    /// accumulated in replica-index order; the Nesterov step and the
+    /// deduplicated literal publish are exactly the legacy path's.
+    pub fn sync_encoded(&mut self, payloads: &[&[u8]], frag: Option<usize>) -> Result<()> {
+        if payloads.is_empty() {
+            bail!("outer sync with zero replicas");
+        }
+        if let Some(f) = frag {
+            if f >= self.fragments {
+                bail!("fragment {f} out of range (P={})", self.fragments);
+            }
+        }
+        let ranges: &[Range<usize>] = match frag {
+            Some(f) => &self.frag_ranges[f],
+            None => &self.full,
+        };
+        let expected: usize = ranges.iter().map(|r| self.codec.wire_bytes(r.len())).sum();
+        for (r, p) in payloads.iter().enumerate() {
+            if p.len() != expected {
+                bail!(
+                    "outer sync: replica {r} wire payload is {} bytes, expected {expected}",
+                    p.len()
+                );
+            }
+        }
+
+        // 1. decode + accumulate in replica-index order.
+        for r in ranges {
+            self.acc.data_mut()[r.clone()].fill(0.0);
+        }
+        for p in payloads {
+            let mut off = 0usize;
+            for r in ranges {
+                let nb = self.codec.wire_bytes(r.len());
+                self.codec
+                    .decode(&p[off..off + nb], &mut self.scratch.data_mut()[r.clone()])?;
+                off += nb;
+            }
+            for r in ranges {
+                acc_add(
+                    &mut self.acc.data_mut()[r.clone()],
+                    &self.scratch.data()[r.clone()],
+                );
+            }
+        }
+
+        // 2. finish the outer gradient and take the Nesterov step.
+        // Identity payloads hold theta: Delta = global - acc/M (the
+        // legacy summation, bit for bit). Lossy payloads hold dq(delta):
+        // Delta = acc/M directly.
+        let m = payloads.len() as f32;
+        if self.codec.is_identity() {
+            for r in ranges {
+                acc_finish(
+                    &mut self.acc.data_mut()[r.clone()],
+                    &self.global.data()[r.clone()],
+                    m,
+                );
+            }
+        } else {
+            for r in ranges {
+                acc_scale(&mut self.acc.data_mut()[r.clone()], m);
+            }
+        }
+        self.opt.step_ranges(&mut self.global, &self.acc, ranges);
+
+        // 3. publish + wire accounting (exact encoded bytes up).
+        self.publish_and_record(frag, payloads.len(), Some(expected as u64))
     }
 }
 
@@ -238,6 +393,61 @@ mod tests {
         assert!(Arc::ptr_eq(&sync.global_literals()[0], &init_lits[0]));
         assert!(Arc::ptr_eq(&sync.global_literals()[2], &init_lits[2]));
         assert!(!Arc::ptr_eq(&sync.global_literals()[1], &init_lits[1]));
+    }
+
+    #[test]
+    fn wire_stats_count_exact_bytes_per_sync() {
+        let l = layout(); // 8 elements total; P=2 frag 1 = leaves {1,3} = 5 elems
+        let init = host(&l, 1.0);
+        let mut sync =
+            OuterSync::new(Arc::clone(&l), &init, lits_of(&init), 1.0, 0.0, 2).unwrap();
+        let r = lits_of(&host(&l, 5.0));
+        sync.sync(&[&r[..], &r[..]], Some(1)).unwrap();
+        sync.sync(&[&r[..], &r[..]], None).unwrap();
+        let w = sync.wire_stats();
+        assert_eq!(w.syncs(), 2);
+        assert_eq!(w.records()[0].frag, Some(1));
+        assert_eq!(w.records()[0].bytes_per_replica, 5 * 4);
+        assert_eq!(w.records()[0].bytes_up(), 2 * 5 * 4);
+        assert_eq!(w.records()[0].bytes_down, 5 * 4);
+        assert_eq!(w.records()[1].bytes_per_replica, 8 * 4);
+        assert_eq!(w.total_up(), 2 * 5 * 4 + 2 * 8 * 4);
+        assert_eq!(w.total_down(), 5 * 4 + 8 * 4);
+    }
+
+    #[test]
+    fn encoded_fp32_sync_matches_literal_sync() {
+        use crate::comm::CommState;
+        let l = layout();
+        let init = host(&l, 1.0);
+        let mut legacy =
+            OuterSync::new(Arc::clone(&l), &init, lits_of(&init), 0.8, 0.9, 1).unwrap();
+        let mut coded =
+            OuterSync::new(Arc::clone(&l), &init, lits_of(&init), 0.8, 0.9, 1).unwrap();
+        let r0 = lits_of(&host(&l, 0.25));
+        let r1 = lits_of(&host(&l, 4.5));
+        legacy.sync(&[&r0[..], &r1[..]], None).unwrap();
+
+        let enc = coded.encoder();
+        let mut payloads = Vec::new();
+        for lits in [&r0, &r1] {
+            let mut comm = CommState::default();
+            payloads.push(enc.encode_replica(0, lits, &mut comm, None, 0).unwrap());
+        }
+        let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+        coded.sync_encoded(&frames, None).unwrap();
+
+        let a: Vec<u32> = legacy.global().data().iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = coded.global().data().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "fp32 encoded sync must be bit-identical");
+        assert_eq!(
+            legacy.wire_stats().total(),
+            coded.wire_stats().total(),
+            "identity wire bytes must agree between the two entry points"
+        );
+        // short payloads are rejected
+        assert!(coded.sync_encoded(&[&frames[0][1..]], None).is_err());
+        assert!(coded.sync_encoded(&[], None).is_err());
     }
 
     #[test]

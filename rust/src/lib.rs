@@ -15,6 +15,7 @@
 //! See DESIGN.md for the full system inventory and experiment index.
 
 pub mod cli;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;

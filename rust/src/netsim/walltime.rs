@@ -20,7 +20,9 @@ pub const CHIP_FLOPS: f64 = 300e12;
 /// experiments, ensuring doubling the global batch doubles R".
 pub const TOKENS_PER_CHIP: f64 = 16_384.0;
 
-/// bf16 weights/gradients (paper section 3).
+/// bf16 weights/gradients (paper section 3): the per-step gradient
+/// exchange width, and the default outer width when a run does not
+/// compress its outer communication.
 pub const BITS_PER_PARAM: f64 = 16.0;
 
 #[derive(Debug, Clone, Copy)]
@@ -40,6 +42,14 @@ pub struct WalltimeInput {
     pub batch_tokens: f64,
     /// Cross-datacenter network (within-DC is always HIGH).
     pub cross_dc: Network,
+    /// Bits per parameter on the **outer-sync** wire (the H-cadence
+    /// cross-DC all-reduce). [`BITS_PER_PARAM`] (bf16) for
+    /// uncompressed runs; a run's `--outer-bits` width (32/16/8/4)
+    /// otherwise — the comm subsystem's quantized outer gradients
+    /// shrink exactly this term. Per-step gradient traffic (DP's
+    /// cross-DC all-reduce, DiLoCo's within-DC all-reduce) stays at
+    /// bf16, matching the paper's section-3 setup.
+    pub outer_bits: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -78,7 +88,10 @@ pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
     let steps = (input.tokens / input.batch_tokens).ceil();
     let chips = (input.batch_tokens / TOKENS_PER_CHIP).max(1.0);
     let compute = 6.0 * input.params * input.tokens / (chips * CHIP_FLOPS);
+    // per-step gradient exchange is always bf16; the H-cadence outer
+    // sync moves outer gradients at the run's wire width
     let bits = input.params * BITS_PER_PARAM;
+    let outer_bits = input.params * input.outer_bits;
     let comm = match input.algo {
         WalltimeAlgo::DataParallel => {
             // all-reduce over all R chips across DCs, every step
@@ -89,9 +102,9 @@ pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
             sync_every,
         } => {
             // per-step all-reduce like DP, plus outer sync every H
-            allreduce_time(bits, chips, input.cross_dc)
-                * steps
-                * (1.0 + 1.0 / sync_every as f64)
+            allreduce_time(bits, chips, input.cross_dc) * steps
+                + allreduce_time(outer_bits, chips, input.cross_dc) * steps
+                    / sync_every as f64
         }
         WalltimeAlgo::DiLoCo {
             replicas,
@@ -105,7 +118,7 @@ pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
                 * steps;
             // outer: all R chips across DCs, every H steps
             let outer =
-                allreduce_time(bits, chips, input.cross_dc) * steps / sync_every as f64;
+                allreduce_time(outer_bits, chips, input.cross_dc) * steps / sync_every as f64;
             inner + outer
         }
     };
@@ -129,6 +142,7 @@ mod tests {
             tokens: 20e9,
             batch_tokens: 2f64.powi(20),
             cross_dc: net,
+            outer_bits: BITS_PER_PARAM,
         }
     }
 
@@ -209,6 +223,40 @@ mod tests {
                 assert!((1.0..=m as f64).contains(&s), "M={m} W={w}: {s}");
             }
         }
+    }
+
+    #[test]
+    fn reduced_outer_bits_shrink_only_the_outer_term() {
+        // 4-bit outer gradients (paper section 7 / the comm subsystem)
+        // cut the H-cadence cross-DC term ~4x vs bf16; per-step inner
+        // traffic is untouched, and DP ignores the knob entirely.
+        let algo = WalltimeAlgo::DiLoCo {
+            replicas: 4,
+            sync_every: 30,
+        };
+        let mut a = base(algo, LOW);
+        let bf16 = walltime(&a);
+        a.outer_bits = 4.0;
+        let int4 = walltime(&a);
+        assert!(int4.comm_s < bf16.comm_s, "{} vs {}", int4.comm_s, bf16.comm_s);
+        // isolate the outer term via an H -> inf run (inner only)
+        let mut inf = base(algo, LOW);
+        if let WalltimeAlgo::DiLoCo { sync_every, .. } = &mut inf.algo {
+            *sync_every = usize::MAX;
+        }
+        let inner_only = walltime(&inf).comm_s;
+        let outer_bf16 = bf16.comm_s - inner_only;
+        let outer_int4 = int4.comm_s - inner_only;
+        // bandwidth term scales exactly 4x; latency terms dilute it a bit
+        assert!(outer_int4 < outer_bf16 / 3.0, "{outer_int4} vs {outer_bf16}");
+        assert!(outer_int4 > outer_bf16 / 16.0);
+        // DP: outer_bits is irrelevant (no outer sync exists)
+        let mut dp = base(WalltimeAlgo::DataParallel, LOW);
+        let t16 = walltime(&dp).comm_s;
+        dp.outer_bits = 4.0;
+        assert_eq!(walltime(&dp).comm_s, t16);
+        // compute time never depends on the wire width
+        assert_eq!(bf16.compute_s, int4.compute_s);
     }
 
     #[test]

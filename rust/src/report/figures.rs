@@ -4,7 +4,7 @@
 use std::fmt::Write as _;
 
 use crate::netsim::utilization::{SimAlgo, SimModel, ARCHETYPES as LLM_ARCHS};
-use crate::netsim::walltime::{walltime, WalltimeAlgo, WalltimeInput};
+use crate::netsim::walltime::{walltime, WalltimeAlgo, WalltimeInput, BITS_PER_PARAM};
 use crate::netsim::ARCHETYPES;
 use crate::scaling::PowerLaw;
 use crate::sweep::SweepStore;
@@ -207,6 +207,16 @@ pub fn fig6_12(store: &SweepStore) -> String {
                         tokens: r.tokens as f64,
                         batch_tokens: r.global_batch_tokens as f64,
                         cross_dc: net,
+                        // uncompressed runs modelled at bf16 (paper
+                        // section 3 — this figure reproduces Appendix
+                        // A); compressed runs at their width. The comm
+                        // report (tables::table_comm) instead models
+                        // every run at its actual wire width.
+                        outer_bits: if r.outer_bits >= 32 {
+                            BITS_PER_PARAM
+                        } else {
+                            r.outer_bits as f64
+                        },
                     });
                     writeln!(
                         s,
@@ -254,6 +264,7 @@ pub fn fig6_12(store: &SweepStore) -> String {
                         tokens,
                         batch_tokens: b,
                         cross_dc: net,
+                        outer_bits: BITS_PER_PARAM,
                     });
                     writeln!(
                         s,

@@ -14,6 +14,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::comm::OuterBits;
 use crate::coordinator::{Algo, RunConfig};
 
 const SQRT2: f64 = std::f64::consts::SQRT_2;
@@ -251,6 +252,30 @@ fn overtrain_sweep(model: &str) -> Vec<RunConfig> {
     out
 }
 
+/// Compressed outer communication (paper section 7; ROADMAP item):
+/// the data behind `diloco report --exp comm` — loss delta vs wire
+/// bytes at every outer bit width, best-known hypers, no re-tune.
+/// The 32-bit entries are the exact fp32 baselines the deltas are
+/// measured against (bit-identical to the uncompressed path).
+fn comm_sweep(model: &str) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    let c = lr_center(model);
+    for m in [2usize, 4] {
+        for bits in OuterBits::ALL {
+            push(
+                &mut out,
+                model,
+                Algo::DiLoCo { replicas: m },
+                16,
+                c,
+                etas_for(m)[1],
+                |cf| cf.outer_bits = bits,
+            );
+        }
+    }
+    out
+}
+
 /// Composite grids can repeat configurations (e.g. the m8 fast-pass
 /// entries also appear in the full m0 grid); keep the first occurrence.
 fn dedup_by_run_id(grid: Vec<RunConfig>) -> Vec<RunConfig> {
@@ -269,6 +294,7 @@ pub fn grid_names() -> Vec<&'static str> {
         "h-sweep",
         "batch",
         "overtrain",
+        "comm",
         "all",
         "smoke",
     ]
@@ -282,6 +308,7 @@ pub fn grid_by_name(name: &str) -> Result<Vec<RunConfig>> {
         "h-sweep" => h_sweep("m0"),
         "batch" => batch_sweep("m0"),
         "overtrain" => overtrain_sweep("m0"),
+        "comm" => comm_sweep("m0"),
         // priority order: ladder first (Table 4 / scaling laws), then ablations
         "all" => {
             let mut v = main_grid("m0", 0);
@@ -290,7 +317,8 @@ pub fn grid_by_name(name: &str) -> Result<Vec<RunConfig>> {
             v.extend(h_sweep("m0"));
             v.extend(batch_sweep("m0"));
             v.extend(overtrain_sweep("m0"));
-            v
+            v.extend(comm_sweep("m0"));
+            dedup_by_run_id(v)
         }
         // wall-clock-constrained order: give every experiment some data
         // early (ladder rungs first, then one pass over each ablation,
@@ -303,6 +331,9 @@ pub fn grid_by_name(name: &str) -> Result<Vec<RunConfig>> {
             v.extend(hs.iter().take(18).cloned());
             v.extend(batch_sweep("m0"));
             v.extend(overtrain_sweep("m0"));
+            // compression ladder early: loss-delta-vs-bits needs all
+            // four widths of a config before the report says anything
+            v.extend(comm_sweep("m0"));
             // minimal m8 coverage for Table 4's last column
             for b in [16usize, 32] {
                 push(&mut v, "m0", Algo::DiLoCo { replicas: 8 }, b, lr_center("m0"), 1.0, |cf| {
@@ -368,6 +399,25 @@ mod tests {
         let hs: HashSet<usize> = g.iter().map(|c| c.sync_every).collect();
         for h in [1, 5, 10, 30, 100, 300] {
             assert!(hs.contains(&h), "missing H={h}");
+        }
+    }
+
+    #[test]
+    fn comm_grid_covers_every_bit_width() {
+        let g = grid_by_name("comm").unwrap();
+        assert_eq!(g.len(), 8, "2 replica counts x 4 widths");
+        let bits: HashSet<u32> = g.iter().map(|c| c.outer_bits.bits()).collect();
+        for b in [32u32, 16, 8, 4] {
+            assert!(bits.contains(&b), "missing outer_bits={b}");
+        }
+        // within a replica count only the width varies, so the report
+        // can attribute the whole loss delta to the codec
+        for w in g.windows(2) {
+            if w[0].algo == w[1].algo {
+                assert_eq!(w[0].inner_lr, w[1].inner_lr);
+                assert_eq!(w[0].outer_lr, w[1].outer_lr);
+                assert_eq!(w[0].global_batch_seqs, w[1].global_batch_seqs);
+            }
         }
     }
 

@@ -1,0 +1,571 @@
+//! Comm-subsystem invariants (quantize → reduce → dequantize; see
+//! `diloco::comm`):
+//!
+//! (1) the Fp32 identity codec, driven through the encoded wire path
+//!     (`SyncEncoder` + `OuterSync::sync_encoded`), is pinned
+//!     **bit-for-bit** against the legacy literal-handle path
+//!     (`OuterSync::sync`, today's uncompressed outer step) over random
+//!     replica counts, shapes, fragments, and multi-round streaming
+//!     schedules — the flat_bus oracle style;
+//! (2) int8/int4 round-trips obey the per-block error bound
+//!     |x - dq(x)| <= max|block| / qmax, and wire sizes are exact;
+//! (3) error feedback makes repeated quantized outer syncs unbiased:
+//!     residual-compensated dq means converge to the true value, and a
+//!     4-bit outer step drives the global model to the replica mean
+//!     instead of stalling on quantization error;
+//! (4) the worker-pool twin: a full DiLoCo schedule through
+//!     `coordinator::pool::drive` is bit-identical at workers 1 vs 2
+//!     vs 4 for EVERY bit width — encode seeds, residual ownership,
+//!     and reduction order are all scheduling-independent.
+//!
+//! Host tier only: no PJRT, no artifacts.
+
+use std::sync::Arc;
+
+use diloco::comm::codec::BLOCK;
+use diloco::comm::{codec_for, CommState, OuterBits};
+use diloco::coordinator::{drive, DrivePlan, InnerEngine, OuterSync, ReplicaState};
+use diloco::data::synthetic::{CorpusSpec, TokenStream};
+use diloco::runtime::{FlatLayout, HostTensor};
+use diloco::util::prop;
+use diloco::util::rng::Rng;
+
+// ---- helpers ---------------------------------------------------------
+
+fn random_shapes(rng: &mut Rng) -> Vec<Vec<usize>> {
+    let leaves = 1 + rng.below(6) as usize;
+    (0..leaves)
+        .map(|_| {
+            if rng.below(2) == 0 {
+                vec![1 + rng.below(12) as usize]
+            } else {
+                vec![1 + rng.below(6) as usize, 1 + rng.below(6) as usize]
+            }
+        })
+        .collect()
+}
+
+fn random_leaf_values(rng: &mut Rng, layout: &FlatLayout) -> Vec<Vec<f32>> {
+    (0..layout.n_leaves())
+        .map(|l| (0..layout.len(l)).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn to_host(layout: &FlatLayout, leaves: &[Vec<f32>]) -> Vec<HostTensor> {
+    leaves
+        .iter()
+        .enumerate()
+        .map(|(l, v)| HostTensor::from_vec(layout.shape(l), v.clone()))
+        .collect()
+}
+
+fn to_lits(layout: &FlatLayout, leaves: &[Vec<f32>]) -> Vec<Arc<xla::Literal>> {
+    to_host(layout, leaves)
+        .iter()
+        .map(|t| Arc::new(t.to_literal().unwrap()))
+        .collect()
+}
+
+// ---- (1) fp32 wire == legacy literal path, bit for bit ----------------
+
+#[test]
+fn prop_fp32_encoded_sync_matches_legacy_path() {
+    #[derive(Debug)]
+    struct Case {
+        shapes: Vec<Vec<usize>>,
+        m: usize,
+        fragments: usize,
+        lr: f64,
+        mu: f64,
+        rounds: Vec<(Option<usize>, Vec<Vec<Vec<f32>>>)>,
+        init: Vec<Vec<f32>>,
+    }
+
+    prop::check(
+        0xC0DEC,
+        32,
+        |rng: &mut Rng| {
+            let shapes = random_shapes(rng);
+            let layout = FlatLayout::new(shapes.clone());
+            let m = 1 + rng.below(8) as usize;
+            let fragments = 1 + rng.below(4) as usize;
+            let lr = rng.range_f64(0.1, 1.5);
+            let mu = if rng.below(3) == 0 { 0.0 } else { rng.range_f64(0.0, 0.99) };
+            let init = random_leaf_values(rng, &layout);
+            let n_rounds = fragments + 1 + rng.below(3) as usize;
+            let rounds = (0..n_rounds)
+                .map(|k| {
+                    let frag = if fragments > 1 && k + 1 != n_rounds {
+                        Some(k % fragments)
+                    } else {
+                        None
+                    };
+                    let reps = (0..m).map(|_| random_leaf_values(rng, &layout)).collect();
+                    (frag, reps)
+                })
+                .collect();
+            Case {
+                shapes,
+                m,
+                fragments,
+                lr,
+                mu,
+                rounds,
+                init,
+            }
+        },
+        |case| {
+            let layout = Arc::new(FlatLayout::new(case.shapes.clone()));
+            let init_host = to_host(&layout, &case.init);
+
+            // legacy side: literal handles straight into sync()
+            let mut legacy = OuterSync::new(
+                Arc::clone(&layout),
+                &init_host,
+                to_lits(&layout, &case.init),
+                case.lr,
+                case.mu,
+                case.fragments,
+            )
+            .map_err(|e| e.to_string())?;
+
+            // wire side: identity codec, worker-style encode per replica
+            let mut coded = OuterSync::new(
+                Arc::clone(&layout),
+                &init_host,
+                to_lits(&layout, &case.init),
+                case.lr,
+                case.mu,
+                case.fragments,
+            )
+            .map_err(|e| e.to_string())?
+            .with_codec(codec_for(OuterBits::Fp32), 0xABC);
+            let enc = coded.encoder();
+            let mut comm: Vec<CommState> =
+                (0..case.m).map(|_| CommState::default()).collect();
+
+            for (round, (frag, reps)) in case.rounds.iter().enumerate() {
+                let rep_lits: Vec<Vec<Arc<xla::Literal>>> =
+                    reps.iter().map(|r| to_lits(&layout, r)).collect();
+                {
+                    let parts: Vec<&[Arc<xla::Literal>]> =
+                        rep_lits.iter().map(|v| &v[..]).collect();
+                    legacy.sync(&parts, *frag).map_err(|e| e.to_string())?;
+                }
+                let payloads: Vec<Vec<u8>> = rep_lits
+                    .iter()
+                    .enumerate()
+                    .map(|(r, lits)| {
+                        enc.encode_replica(r, lits, &mut comm[r], *frag, round as u64)
+                            .map_err(|e| e.to_string())
+                    })
+                    .collect::<Result<_, String>>()?;
+                let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+                coded
+                    .sync_encoded(&frames, *frag)
+                    .map_err(|e| e.to_string())?;
+
+                for (i, (a, b)) in legacy
+                    .global()
+                    .data()
+                    .iter()
+                    .zip(coded.global().data())
+                    .enumerate()
+                {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!(
+                            "round {round} elem {i}: legacy {a} != coded {b} \
+                             (M={}, P={}, frag {frag:?})",
+                            case.m, case.fragments
+                        ));
+                    }
+                }
+            }
+            // identity wire accounting agrees between the entry points
+            if legacy.wire_stats().total() != coded.wire_stats().total() {
+                return Err(format!(
+                    "wire totals diverged: legacy {} coded {}",
+                    legacy.wire_stats().total(),
+                    coded.wire_stats().total()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- (2) per-block round-trip error bounds ---------------------------
+
+#[test]
+fn prop_int_roundtrip_error_bounded_per_block() {
+    prop::check(
+        0x1B0,
+        48,
+        |rng: &mut Rng| {
+            let n = 1 + rng.below(3 * BLOCK as u64 + 17) as usize;
+            let scale = 10f64.powf(rng.range_f64(-4.0, 2.0)) as f32;
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * scale).collect();
+            let seed = rng.next_u64();
+            (xs, seed)
+        },
+        |(xs, seed)| {
+            for bits in [OuterBits::Int8, OuterBits::Int4] {
+                let qmax = match bits {
+                    OuterBits::Int8 => 127.0f32,
+                    _ => 7.0,
+                };
+                let c = codec_for(bits);
+                let mut wire = Vec::new();
+                c.encode(xs, *seed, &mut wire);
+                if wire.len() != c.wire_bytes(xs.len()) {
+                    return Err(format!(
+                        "{bits:?}: {} wire bytes, expected {}",
+                        wire.len(),
+                        c.wire_bytes(xs.len())
+                    ));
+                }
+                let mut back = vec![0.0f32; xs.len()];
+                c.decode(&wire, &mut back).map_err(|e| e.to_string())?;
+                for (bi, block) in xs.chunks(BLOCK).enumerate() {
+                    let maxabs = block.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                    let bound = maxabs / qmax * 1.0001;
+                    for (i, &x) in block.iter().enumerate() {
+                        let y = back[bi * BLOCK + i];
+                        if (x - y).abs() > bound {
+                            return Err(format!(
+                                "{bits:?} block {bi}[{i}]: |{x} - {y}| > {bound}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- (3) error feedback: unbiased over repeated syncs ----------------
+
+#[test]
+fn error_feedback_makes_repeated_quantization_unbiased() {
+    // Quantize the SAME value K times with residual carry: the running
+    // mean of the dequantized outputs telescopes to x +- residual/K,
+    // so it converges at rate 1/K — without error feedback it would
+    // plateau at the (biased) per-shot rounding error.
+    let mut rng = Rng::new(0xEF);
+    let n = 700usize; // multi-block + ragged tail
+    let xs: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.3).collect();
+    for bits in [OuterBits::Int8, OuterBits::Int4] {
+        let qmax = match bits {
+            OuterBits::Int8 => 127.0f32,
+            _ => 7.0,
+        };
+        let c = codec_for(bits);
+        let k = 64usize;
+        let mut residual = vec![0.0f32; n];
+        let mut staging = vec![0.0f32; n];
+        let mut dq = vec![0.0f32; n];
+        let mut mean = vec![0.0f64; n];
+        for round in 0..k {
+            for i in 0..n {
+                staging[i] = xs[i] + residual[i];
+            }
+            let mut wire = Vec::new();
+            c.encode(&staging, round as u64, &mut wire);
+            c.decode(&wire, &mut dq).unwrap();
+            for i in 0..n {
+                residual[i] = staging[i] - dq[i];
+                mean[i] += dq[i] as f64 / k as f64;
+            }
+        }
+        // |mean - x| = |r_0 - r_K| / K <= (max step) / K; the staging
+        // value can exceed max|x| by one step, so allow a 2x margin
+        let maxabs = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let bound = (maxabs / qmax * 2.0) as f64 / k as f64 + 1e-7;
+        for i in 0..n {
+            assert!(
+                (mean[i] - xs[i] as f64).abs() <= bound,
+                "{bits:?}[{i}]: mean {} vs {} (bound {bound})",
+                mean[i],
+                xs[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn int4_outer_sync_with_error_feedback_is_unbiased_over_syncs() {
+    // eta=1, mu=0, replicas frozen: the exact outer step sets
+    // global = mean(theta) in one shot. The 4-bit step fluctuates
+    // around it by at most the quantization step — but with error
+    // feedback the per-sync errors telescope (e_k = R_k - R_{k-1},
+    // the mean-residual increments), so the TIME-AVERAGED global
+    // converges to the replica mean at rate residual/K. That is the
+    // unbiasedness claim: no quantization mass is ever lost, only
+    // deferred to the next sync.
+    let layout = Arc::new(FlatLayout::new(vec![vec![300], vec![7, 3], vec![40]]));
+    let mut rng = Rng::new(0x44);
+    let init = random_leaf_values(&mut rng, &layout);
+    let theta_a = random_leaf_values(&mut rng, &layout);
+    let theta_b = random_leaf_values(&mut rng, &layout);
+    let mut sync = OuterSync::new(
+        Arc::clone(&layout),
+        &to_host(&layout, &init),
+        to_lits(&layout, &init),
+        1.0,
+        0.0,
+        1,
+    )
+    .unwrap()
+    .with_codec(codec_for(OuterBits::Int4), 99);
+    let enc = sync.encoder();
+    let rep_lits = [to_lits(&layout, &theta_a), to_lits(&layout, &theta_b)];
+    let mut comm = [CommState::default(), CommState::default()];
+    for (cm, _) in comm.iter_mut().zip(&rep_lits) {
+        enc.init_snapshot(cm, &to_lits(&layout, &init)).unwrap();
+    }
+
+    let mean: Vec<f32> = (0..layout.total())
+        .map(|i| {
+            let leaf_of = |vals: &[Vec<f32>]| {
+                // flatten per-leaf vectors to the arena order
+                let mut flat = Vec::new();
+                for v in vals {
+                    flat.extend_from_slice(v);
+                }
+                flat[i]
+            };
+            (leaf_of(&theta_a) + leaf_of(&theta_b)) / 2.0
+        })
+        .collect();
+    let err = |sync: &OuterSync| -> f32 {
+        sync.global()
+            .data()
+            .iter()
+            .zip(&mean)
+            .map(|(g, m)| (g - m).abs())
+            .fold(0.0f32, f32::max)
+    };
+    let err0 = err(&sync);
+    assert!(err0 > 0.1, "degenerate test setup: start already at mean");
+
+    let rounds = 40u64;
+    let mut avg = vec![0.0f64; layout.total()];
+    for round in 0..rounds {
+        let payloads: Vec<Vec<u8>> = rep_lits
+            .iter()
+            .enumerate()
+            .map(|(r, lits)| {
+                enc.encode_replica(r, lits, &mut comm[r], None, round)
+                    .unwrap()
+            })
+            .collect();
+        let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+        sync.sync_encoded(&frames, None).unwrap();
+        for (a, &g) in avg.iter_mut().zip(sync.global().data()) {
+            *a += g as f64 / rounds as f64;
+        }
+        // broadcast: replicas' snapshots adopt the refreshed global
+        let adopt: Vec<(usize, Arc<xla::Literal>)> = sync
+            .global_literals()
+            .iter()
+            .enumerate()
+            .map(|(l, lit)| (l, Arc::clone(lit)))
+            .collect();
+        for cm in comm.iter_mut() {
+            enc.adopt(cm, &adopt).unwrap();
+        }
+    }
+    // time-average: |avg - mean| = |R_K|/K <= one quantization step
+    // over K — far inside the per-sync fluctuation band
+    let avg_err = avg
+        .iter()
+        .zip(&mean)
+        .map(|(a, &m)| (a - m as f64).abs())
+        .fold(0.0f64, f64::max);
+    assert!(
+        avg_err < 0.05 && avg_err < err0 as f64 / 20.0,
+        "EF must make quantized syncs unbiased: err0 {err0}, \
+         time-averaged err {avg_err}"
+    );
+    // the last iterate stays inside the quantization band (no drift,
+    // no lost mass) even though it never pins the mean exactly
+    let errk = err(&sync);
+    assert!(
+        errk < err0 * 0.8,
+        "final iterate drifted: err {err0} -> {errk}"
+    );
+    // wire bytes: 40 syncs, 2 replicas, ~8x smaller than fp32
+    let w = sync.wire_stats();
+    assert_eq!(w.syncs(), rounds);
+    let fp32_per_replica = layout.total() as u64 * 4;
+    assert!(
+        w.records()[0].bytes_per_replica < fp32_per_replica / 6,
+        "int4 payload {} vs fp32 {}",
+        w.records()[0].bytes_per_replica,
+        fp32_per_replica
+    );
+}
+
+// ---- (4) worker-pool twin: bit-identical at every width --------------
+
+/// Deterministic host-math inner step (same shape as
+/// tests/worker_pool.rs): mixes the replica's private shard with the
+/// step index; loss is a pure function of the post-step state.
+struct ToyEngine {
+    n: usize,
+}
+
+impl InnerEngine for ToyEngine {
+    fn inner_step(
+        &self,
+        rep: usize,
+        replica: &mut ReplicaState,
+        t: usize,
+    ) -> anyhow::Result<f64> {
+        let toks = replica.shard.next_batch(2, 8);
+        let mut loss = 0.0f64;
+        for leaf in 0..self.n {
+            let lit = &replica.state[leaf];
+            let dims = lit.array_shape()?.dims().to_vec();
+            let mut v = lit.to_vec::<f32>()?;
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = 0.5 * *x
+                    + 1e-3 * toks[(i + t) % toks.len()] as f32
+                    + 1e-2 * (t as f32 + rep as f32 * 0.25).sin();
+            }
+            loss += v.iter().map(|&f| f as f64).sum::<f64>() / v.len() as f64;
+            replica.state[leaf] = Arc::new(xla::Literal::vec1(&v).reshape(&dims)?);
+        }
+        Ok(loss / self.n as f64)
+    }
+
+    fn eval(&self, params: &[Arc<xla::Literal>]) -> anyhow::Result<f64> {
+        let mut acc = 0.0f64;
+        for (i, p) in params.iter().enumerate() {
+            for x in p.to_vec::<f32>()? {
+                acc += x as f64 * (i + 1) as f64;
+            }
+        }
+        Ok(acc)
+    }
+}
+
+fn twin_layout() -> Arc<FlatLayout> {
+    Arc::new(FlatLayout::new(vec![
+        vec![3, 2],
+        vec![4],
+        vec![2, 2],
+        vec![5],
+        vec![1],
+    ]))
+}
+
+struct TwinResult {
+    step_losses: Vec<f64>,
+    eval_curve: Vec<(usize, f64)>,
+    outer_syncs: usize,
+    global_bits: Vec<u32>,
+    finals: Vec<Vec<Vec<f32>>>,
+    wire_up: u64,
+    wire_down: u64,
+}
+
+fn twin_run(bits: OuterBits, m: usize, workers: usize, fragments: usize) -> TwinResult {
+    let l = twin_layout();
+    let engine = ToyEngine { n: l.n_leaves() };
+    let init: Vec<Arc<xla::Literal>> = (0..l.n_leaves())
+        .map(|leaf| {
+            let v: Vec<f32> = (0..l.len(leaf))
+                .map(|i| ((leaf * 37 + i * 11 + 5) % 23) as f32 * 0.1 - 1.0)
+                .collect();
+            Arc::new(
+                HostTensor::from_vec(l.shape(leaf), v)
+                    .to_literal()
+                    .unwrap(),
+            )
+        })
+        .collect();
+    let mut replicas: Vec<ReplicaState> = (0..m)
+        .map(|r| ReplicaState {
+            state: init.clone(),
+            shard: TokenStream::new(CorpusSpec::default(), 5, r as u64),
+        })
+        .collect();
+    let host: Vec<HostTensor> = (0..l.n_leaves())
+        .map(|leaf| HostTensor::from_literal(&init[leaf]).unwrap())
+        .collect();
+    let mut sync = OuterSync::new(Arc::clone(&l), &host, init.clone(), 0.7, 0.9, fragments)
+        .unwrap()
+        .with_codec(codec_for(bits), 42);
+    let plan = DrivePlan {
+        total_steps: 22,
+        sync_interval: 3,
+        fragments,
+        n_params: l.n_leaves(),
+        eval_every: Some(7),
+        log_every: 100,
+        workers,
+    };
+    let out = drive(&engine, &mut replicas, Some(&mut sync), &plan).expect("drive");
+    TwinResult {
+        step_losses: out.step_losses,
+        eval_curve: out.eval_curve,
+        outer_syncs: out.outer_syncs,
+        global_bits: sync.global().data().iter().map(|x| x.to_bits()).collect(),
+        finals: replicas
+            .iter()
+            .map(|r| {
+                (0..l.n_leaves())
+                    .map(|leaf| r.state[leaf].to_vec::<f32>().unwrap())
+                    .collect()
+            })
+            .collect(),
+        wire_up: sync.wire_stats().total_up(),
+        wire_down: sync.wire_stats().total_down(),
+    }
+}
+
+#[test]
+fn worker_pool_twin_bit_identical_at_every_bit_width() {
+    for bits in OuterBits::ALL {
+        let oracle = twin_run(bits, 4, 1, 2);
+        assert_eq!(oracle.step_losses.len(), 22, "{bits:?}");
+        assert!(oracle.outer_syncs > 0, "{bits:?}");
+        assert!(oracle.wire_up > 0 && oracle.wire_down > 0, "{bits:?}");
+        for workers in [2usize, 4] {
+            let par = twin_run(bits, 4, workers, 2);
+            assert_eq!(par.step_losses, oracle.step_losses, "{bits:?} w={workers}");
+            assert_eq!(par.eval_curve, oracle.eval_curve, "{bits:?} w={workers}");
+            assert_eq!(par.outer_syncs, oracle.outer_syncs, "{bits:?} w={workers}");
+            assert_eq!(
+                par.global_bits, oracle.global_bits,
+                "{bits:?} w={workers}: global arena drifted"
+            );
+            assert_eq!(par.finals, oracle.finals, "{bits:?} w={workers}");
+            assert_eq!(par.wire_up, oracle.wire_up, "{bits:?} w={workers}");
+            assert_eq!(par.wire_down, oracle.wire_down, "{bits:?} w={workers}");
+        }
+    }
+}
+
+#[test]
+fn narrower_wire_strictly_shrinks_payloads() {
+    // Same schedule, descending widths: wire-up bytes must strictly
+    // decrease while sync counts stay identical.
+    let runs: Vec<TwinResult> = OuterBits::ALL
+        .iter()
+        .map(|&b| twin_run(b, 2, 1, 1))
+        .collect();
+    for w in runs.windows(2) {
+        assert_eq!(w[0].outer_syncs, w[1].outer_syncs);
+        assert!(
+            w[1].wire_up < w[0].wire_up,
+            "narrower codec must ship fewer bytes: {} -> {}",
+            w[0].wire_up,
+            w[1].wire_up
+        );
+        // broadcast stays f32 regardless of the up-wire codec
+        assert_eq!(w[0].wire_down, w[1].wire_down);
+    }
+}

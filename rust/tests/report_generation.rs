@@ -39,6 +39,9 @@ fn fake_metrics(model: &str, algo: &str, n: usize, loss: f64, batch: usize, lr: 
         ],
         outer_syncs: if h > 0 { 100 / h } else { 0 },
         wall_secs: 1.0,
+        outer_bits: 32,
+        wire_up_bytes: if h > 0 { (100 / h) as u64 * n as u64 * 4 } else { 0 },
+        wire_down_bytes: if h > 0 { (100 / h) as u64 * n as u64 * 4 } else { 0 },
     }
 }
 
@@ -106,6 +109,12 @@ fn generators_reflect_store_contents() {
 
     let f2 = generate("fig2", &store, &repo, 8).unwrap();
     assert!(f2.contains("pct_vs_dp"));
+
+    // comm report: 32-bit records form the fp32 baseline rows, with
+    // exact wire bytes surfaced from the metrics
+    let comm = generate("comm", &store, &repo, 8).unwrap();
+    assert!(comm.contains("baseline"), "{comm}");
+    assert!(comm.contains("diloco-m2"), "{comm}");
 
     std::fs::remove_dir_all(&dir).ok();
 }
