@@ -79,6 +79,7 @@ fn main() -> anyhow::Result<()> {
                 batch_tokens: m.global_batch_tokens as f64,
                 cross_dc: net,
                 outer_bits: diloco::netsim::walltime::BITS_PER_PARAM,
+                outer_bits_down: diloco::netsim::walltime::BITS_PER_PARAM,
             });
             println!(
                 "{:<10} {:<12} {:>12.3}s {:>12.3}s",

@@ -17,7 +17,9 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use diloco::comm::{codec_for, CommState, OuterBits};
+use diloco::comm::{
+    codec_for, Channel, CommLink, Direction, DownWire, OuterBits, ReplicaComm, WorkerComm,
+};
 use diloco::config::RepoConfig;
 use diloco::coordinator::outer_opt::{acc_add, acc_finish, scalar_ref};
 use diloco::coordinator::{drive, DrivePlan, InnerEngine, OuterOpt, OuterSync, ReplicaState};
@@ -180,25 +182,38 @@ fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
     }
 }
 
-/// Comm-codec cases: encode/decode throughput per bit width over the
-/// rung's full flat arena, plus one end-to-end quantized sync through
-/// `sync_encoded` (encoder + error feedback + reduce + publish).
-/// Exact wire bytes per width are printed alongside (the codec's
-/// whole point is the byte column, not just the time column).
+/// Comm-plane cases: encode/decode throughput per bit width over the
+/// rung's full flat arena on **both legs** — raw codec passes, the
+/// DownWire's error-compensated broadcast encode, and the worker-side
+/// broadcast decode (decode + snap advance + literal rebuild) — plus
+/// one end-to-end quantized sync through `sync_encoded` (encoder +
+/// error feedback + reduce + publish). Exact wire bytes per width and
+/// direction are printed and attached to BENCH_hot_path.json (the
+/// codec's whole point is the byte column, not just the time column).
 fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
     let pristine = randn_params(layout, 7);
     let n = layout.total();
-    println!("\n== {label}: wire bytes per replica per full sync ({n} params) ==");
+    println!("\n== {label}: wire bytes per full sync, up (per replica) vs down (per sync) ({n} params) ==");
     let fp32_bytes = 4 * n;
+    let mut wire_rows: Vec<Json> = Vec::new();
     for bits in OuterBits::ALL {
         let codec = codec_for(bits);
         let bytes = codec.wire_bytes(n);
+        // one codec serves both directions: up ships per replica, the
+        // broadcast ships once — the table records both meanings
         println!(
-            "{:>6}: {bytes:>10} bytes  ({:.2}x vs fp32, {:.3} bits/param)",
+            "{:>6}: up {bytes:>10} B/replica   down {bytes:>10} B/sync  ({:.2}x vs fp32, {:.3} bits/param)",
             bits.label(),
             fp32_bytes as f64 / bytes as f64,
             bytes as f64 * 8.0 / n as f64
         );
+        wire_rows.push(Json::obj(vec![
+            ("bits", Json::str(bits.label())),
+            ("params", Json::int(n as i128)),
+            ("up_bytes_per_replica", Json::int(bytes as i128)),
+            ("down_bytes_per_sync", Json::int(bytes as i128)),
+            ("fp32_bytes", Json::int(fp32_bytes as i128)),
+        ]));
         let mut wire = Vec::with_capacity(bytes);
         b.run(&format!("{label}/comm encode {} (full arena)", bits.label()), || {
             wire.clear();
@@ -211,9 +226,49 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
             dst[0]
         });
     }
+    b.extra(
+        &format!("wire_bytes_{label}"),
+        Json::arr(wire_rows.into_iter()),
+    );
 
-    // end-to-end int4 sync: encode M=2 replicas with error feedback,
-    // reduce + Nesterov + publish on the coordinator
+    // broadcast leg throughput per lossy width: coordinator-side
+    // error-compensated encode (DownWire) and worker-side decode into
+    // the shared snapshot + literal rebuild (CommLink::adopt_encoded)
+    for bits in [OuterBits::Bf16, OuterBits::Int8, OuterBits::Int4] {
+        let target = randn_params(layout, 31);
+        let mut dw = DownWire::new(
+            Channel::new(Arc::clone(layout), codec_for(bits), 1, 0xD0, Direction::Down),
+            pristine.data(),
+        );
+        let mut round = 0u64;
+        let mut last: Vec<u8> = Vec::new();
+        b.run(
+            &format!("{label}/broadcast encode {} (EF, full arena)", bits.label()),
+            || {
+                last = dw.encode_broadcast(target.data(), None, round).unwrap();
+                round += 1;
+                last.len()
+            },
+        );
+        let link = CommLink::new(
+            Channel::new(Arc::clone(layout), codec_for(OuterBits::Fp32), 1, 0xD0, Direction::Up),
+            Channel::new(Arc::clone(layout), codec_for(bits), 1, 0xD0, Direction::Down),
+        );
+        let n_leaves = layout.n_leaves();
+        let init_lits: Vec<Arc<xla::Literal>> = (0..n_leaves)
+            .map(|l| Arc::new(pristine.leaf_literal(l).unwrap()))
+            .collect();
+        let mut wc = WorkerComm::default();
+        link.init_snapshot(&mut wc, &init_lits).expect("bench snapshot");
+        b.run(
+            &format!("{label}/broadcast decode {} (snap + literals)", bits.label()),
+            || link.adopt_encoded(&mut wc, None, &last).unwrap().len(),
+        );
+    }
+
+    // end-to-end int4/int4 sync: encode M=2 replicas with error
+    // feedback, reduce + Nesterov + publish + broadcast encode on the
+    // coordinator
     {
         let host: Vec<HostTensor> = pristine.to_host();
         let n_leaves = layout.n_leaves();
@@ -222,8 +277,9 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
             .collect();
         let mut sync = OuterSync::new(Arc::clone(layout), &host, init_lits.clone(), 0.8, 0.9, 1)
             .expect("comm bench sync setup")
-            .with_codec(codec_for(OuterBits::Int4), 0xBE);
-        let enc = sync.encoder();
+            .with_codec(codec_for(OuterBits::Int4), 0xBE)
+            .with_down_codec(codec_for(OuterBits::Int4));
+        let link = sync.link();
         let rep_lits: Vec<Vec<Arc<xla::Literal>>> = (1..=2u64)
             .map(|s| {
                 let rp = randn_params(layout, 300 + s);
@@ -232,23 +288,29 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
                     .collect()
             })
             .collect();
-        let mut comm: Vec<CommState> = (0..2).map(|_| CommState::default()).collect();
-        for cm in comm.iter_mut() {
-            enc.init_snapshot(cm, &init_lits).expect("comm bench snapshot");
+        let mut wc = WorkerComm::default();
+        link.init_snapshot(&mut wc, &init_lits).expect("comm bench snapshot");
+        let mut rcs: Vec<ReplicaComm> = (0..2).map(|_| ReplicaComm::default()).collect();
+        for rc in rcs.iter_mut() {
+            link.init_replica(rc);
         }
         let mut round = 0u64;
-        b.run(&format!("{label}/comm sync end-to-end int4 (M=2)"), || {
+        b.run(&format!("{label}/comm sync end-to-end int4/int4 (M=2)"), || {
             let payloads: Vec<Vec<u8>> = rep_lits
                 .iter()
                 .enumerate()
                 .map(|(r, lits)| {
-                    enc.encode_replica(r, lits, &mut comm[r], None, round).unwrap()
+                    link.encode_replica(r, lits, &mut wc, &mut rcs[r], None, round)
+                        .unwrap()
                 })
                 .collect();
             let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
             sync.sync_encoded(&frames, None).unwrap();
+            // worker side of the broadcast: decode into the snapshot
+            let bytes = sync.take_broadcast_bytes().expect("lossy down broadcast");
+            link.adopt_encoded(&mut wc, None, &bytes).unwrap();
             round += 1;
-            sync.wire_stats().total_up()
+            sync.wire_stats().total()
         });
     }
 }

@@ -74,6 +74,7 @@ fn main() {
             batch_tokens: 2f64.powi(20),
             cross_dc: MEDIUM,
             outer_bits: diloco::netsim::walltime::BITS_PER_PARAM,
+            outer_bits_down: diloco::netsim::walltime::BITS_PER_PARAM,
         })
     });
     let sim = SimModel::default();

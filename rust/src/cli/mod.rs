@@ -20,7 +20,8 @@ USAGE:
                  [--lr 6e-3] [--eta 0.8] [--budget TOKENS] [--overtrain X]
                  [--seed N] [--eval-every K] [--downstream] [--fragments P]
                  [--workers W]   # replica-parallel inner loop; 1 = sequential
-                 [--outer-bits 32|16|8|4]  # outer-gradient wire width (32 = exact fp32)
+                 [--outer-bits 32|16|8|4]       # up-wire width: outer gradients (32 = exact fp32)
+                 [--outer-bits-down 32|16|8|4]  # down-wire width: global broadcast (32 = literal handoff)
   diloco predict --n PARAMS [--m REPLICAS] [--store runs/sweep.jsonl]
   diloco sweep   --grid NAME [--store runs/sweep.jsonl] [--max-runs N]
   diloco grids                      # list available sweep grids
@@ -100,6 +101,10 @@ fn run_config_from_args(args: &Args) -> Result<RunConfig> {
     }
     if let Some(ob) = args.get("outer-bits") {
         cfg.outer_bits = crate::comm::OuterBits::parse(&ob).context("--outer-bits")?;
+    }
+    if let Some(obd) = args.get("outer-bits-down") {
+        cfg.outer_bits_down =
+            crate::comm::OuterBits::parse(&obd).context("--outer-bits-down")?;
     }
     cfg.downstream = args.flag("downstream");
     Ok(cfg)

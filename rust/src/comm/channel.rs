@@ -1,0 +1,396 @@
+//! The direction-generic channel: one leg of the bidirectional comm
+//! plane. A [`Channel`] bundles everything both wire directions share —
+//! the codec, the flat-bus fragment geometry, the deterministic seed
+//! discipline, and the error-feedback arithmetic — so the up-wire
+//! (replica → coordinator, one logical stream per replica) and the
+//! down-wire (coordinator → replica, a single broadcast stream) are the
+//! *same* code instantiated twice, not two encoders that drift apart.
+//!
+//! The error-feedback contract, identical in both directions:
+//!
+//! ```text
+//! x        = delta + residual        (the error-compensated payload)
+//! wire     = encode(x, seed)
+//! residual = x - decode(wire)        (carry this sync's error forward)
+//! ```
+//!
+//! Only the meaning of `delta` differs: the up-wire ships
+//! `snapshot - theta` (the replica's outer delta), the down-wire ships
+//! `global - view` (how far the replicas' adopted view lags the
+//! coordinator's freshly-stepped global). Because the error is carried,
+//! the time-averaged wire value converges to the true value in both
+//! directions — no quantization mass is ever lost, only deferred
+//! (pinned by `tests/comm_codec.rs` for both legs).
+//!
+//! # Determinism
+//!
+//! Encode seeds are pure in `(run seed, direction, sync index, stream,
+//! range offset)`, where `stream` is the replica id on the up-wire and
+//! 0 on the down-wire (one broadcast stream for everyone). The
+//! direction salt keeps the two legs' stochastic-rounding streams
+//! disjoint even at the same sync index. Scheduling, worker count, and
+//! wall-clock never enter. The up-wire derivation is byte-identical to
+//! the pre-plane `SyncEncoder`, so lossy up-wire payloads are unchanged
+//! by this refactor.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::FlatLayout;
+use crate::util::rng::splitmix64;
+
+use super::codec::Codec;
+
+/// Which leg of the comm plane a channel drives. Enters the encode-seed
+/// derivation so the two directions draw disjoint rounding streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Replica → coordinator: per-replica sync contributions.
+    Up,
+    /// Coordinator → replica: the broadcast of the refreshed global.
+    Down,
+}
+
+impl Direction {
+    /// Seed salt. `Up` keeps the pre-plane constant so lossy up-wire
+    /// payloads are byte-identical across the refactor.
+    fn salt(self) -> u64 {
+        match self {
+            Direction::Up => 0x5EED_C0DE,
+            Direction::Down => 0xD0D0_5EED_C0DE,
+        }
+    }
+}
+
+/// One direction of a run's comm plane: the immutable recipe (layout +
+/// codec + fragment count + run seed + direction) shared by every
+/// thread that touches this leg. All mutable state — residuals, views,
+/// arenas — lives with its owner (`ReplicaComm` / `WorkerComm` /
+/// [`DownWire`]), never in the channel.
+#[derive(Clone)]
+pub struct Channel {
+    layout: Arc<FlatLayout>,
+    codec: Arc<dyn Codec>,
+    fragments: usize,
+    run_seed: u64,
+    dir: Direction,
+}
+
+impl Channel {
+    pub fn new(
+        layout: Arc<FlatLayout>,
+        codec: Arc<dyn Codec>,
+        fragments: usize,
+        run_seed: u64,
+        dir: Direction,
+    ) -> Channel {
+        Channel {
+            layout,
+            codec,
+            fragments: fragments.max(1),
+            run_seed,
+            dir,
+        }
+    }
+
+    pub fn layout(&self) -> &Arc<FlatLayout> {
+        &self.layout
+    }
+
+    pub fn codec(&self) -> &Arc<dyn Codec> {
+        &self.codec
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.codec.is_identity()
+    }
+
+    pub fn fragments(&self) -> usize {
+        self.fragments
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.dir
+    }
+
+    /// The contiguous element ranges a sync of `frag` moves.
+    pub fn ranges(&self, frag: Option<usize>) -> Vec<Range<usize>> {
+        match frag {
+            Some(f) => self.layout.fragment_ranges(self.fragments, f),
+            None => self.layout.full_range(),
+        }
+    }
+
+    /// Exact wire size of one payload on this leg for a sync of `frag`
+    /// (per replica on the up-wire; total on the down-wire, which is a
+    /// single broadcast stream).
+    pub fn payload_bytes(&self, frag: Option<usize>) -> usize {
+        self.ranges(frag)
+            .iter()
+            .map(|r| self.codec.wire_bytes(r.len()))
+            .sum()
+    }
+
+    /// Deterministic encode seed: pure in (run seed, direction, sync
+    /// index, stream, range offset) — never scheduling.
+    fn seed_for(&self, sync_index: u64, stream: u64, range_start: usize) -> u64 {
+        let mut s = self.run_seed ^ self.dir.salt();
+        let a = splitmix64(&mut s);
+        let mut s = a ^ sync_index;
+        let b = splitmix64(&mut s);
+        let mut s = b ^ (stream << 32) ^ range_start as u64;
+        splitmix64(&mut s)
+    }
+
+    /// Encode `src`'s due ranges verbatim — the identity leg's raw-f32
+    /// payload (the exact legacy wire when the codec is [`super::codec::Fp32`]).
+    pub fn encode_raw(
+        &self,
+        src: &[f32],
+        frag: Option<usize>,
+        sync_index: u64,
+        stream: u64,
+    ) -> Vec<u8> {
+        let ranges = self.ranges(frag);
+        let mut out = Vec::with_capacity(self.payload_bytes(frag));
+        for r in &ranges {
+            let seed = self.seed_for(sync_index, stream, r.start);
+            self.codec.encode(&src[r.clone()], seed, &mut out);
+        }
+        out
+    }
+
+    /// Error-feedback encode of the due ranges. On entry `staging`
+    /// holds the raw delta; the channel forms `x = delta + residual`,
+    /// encodes it, and updates `residual <- x - dq(x)`. On exit
+    /// `staging` holds `dq(x)` — what the receiving side will decode —
+    /// so the caller can advance its view by exactly what went out.
+    pub fn encode_ef(
+        &self,
+        staging: &mut [f32],
+        residual: &mut [f32],
+        frag: Option<usize>,
+        sync_index: u64,
+        stream: u64,
+    ) -> Result<Vec<u8>> {
+        let ranges = self.ranges(frag);
+        let mut out = Vec::with_capacity(self.payload_bytes(frag));
+        for r in &ranges {
+            for i in r.clone() {
+                staging[i] += residual[i];
+                // residual temporarily holds x until dq(x) lands below
+                residual[i] = staging[i];
+            }
+            let seed = self.seed_for(sync_index, stream, r.start);
+            let before = out.len();
+            self.codec.encode(&staging[r.clone()], seed, &mut out);
+            self.codec.decode(&out[before..], &mut staging[r.clone()])?;
+            for i in r.clone() {
+                residual[i] -= staging[i];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode one payload of this leg into `dst` over the due ranges
+    /// (everything outside them is untouched).
+    pub fn decode(&self, wire: &[u8], frag: Option<usize>, dst: &mut [f32]) -> Result<()> {
+        let ranges = self.ranges(frag);
+        let expected: usize = ranges.iter().map(|r| self.codec.wire_bytes(r.len())).sum();
+        if wire.len() != expected {
+            bail!(
+                "{:?}-channel decode: {} payload bytes, expected {expected}",
+                self.dir,
+                wire.len()
+            );
+        }
+        let mut off = 0usize;
+        for r in &ranges {
+            let nb = self.codec.wire_bytes(r.len());
+            self.codec.decode(&wire[off..off + nb], &mut dst[r.clone()])?;
+            off += nb;
+        }
+        Ok(())
+    }
+}
+
+/// The coordinator-owned state of the down-wire: the replicas' current
+/// `view` of the global (what every replica's snapshot holds — the
+/// broadcast is one stream, so one arena covers all M replicas) and the
+/// broadcast's own error-feedback `residual`. Identity down-wires
+/// allocate none of this — they keep the zero-copy `Arc` literal
+/// handoff and this struct is never built.
+pub struct DownWire {
+    chan: Channel,
+    view: Vec<f32>,
+    residual: Vec<f32>,
+    staging: Vec<f32>,
+}
+
+impl DownWire {
+    /// `init` is the initial global (Algorithm 1 line 2: every replica
+    /// starts exactly there, so the view starts exact).
+    pub fn new(chan: Channel, init: &[f32]) -> DownWire {
+        let total = chan.layout().total();
+        // a wrong-sized init would build an undersized view that
+        // panics opaquely mid-broadcast — refuse in release builds too
+        // (same policy as CommLink::new)
+        assert_eq!(
+            init.len(),
+            total,
+            "down wire: init must be the full flat arena"
+        );
+        DownWire {
+            chan,
+            view: init.to_vec(),
+            residual: vec![0.0; total],
+            staging: vec![0.0; total],
+        }
+    }
+
+    pub fn chan(&self) -> &Channel {
+        &self.chan
+    }
+
+    /// What the replicas currently hold for the global (exposed for
+    /// tests: the time-average of this converges to the true global).
+    pub fn view(&self) -> &[f32] {
+        &self.view
+    }
+
+    /// The broadcast error carried into the next sync.
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// Coordinator-side down-wire arena footprint in bytes.
+    pub fn arena_bytes(&self) -> u64 {
+        4 * (self.view.len() + self.residual.len() + self.staging.len()) as u64
+    }
+
+    /// Encode the refreshed global's due fragment **once** for all
+    /// replicas: `x = (global - view) + residual`, error-compensated
+    /// like the up-wire. Advances the view by exactly `dq(x)` — the
+    /// value every worker will decode — so coordinator and workers
+    /// stay bit-identical views of the same stream.
+    pub fn encode_broadcast(
+        &mut self,
+        global: &[f32],
+        frag: Option<usize>,
+        sync_index: u64,
+    ) -> Result<Vec<u8>> {
+        let ranges = self.chan.ranges(frag);
+        for r in &ranges {
+            for i in r.clone() {
+                self.staging[i] = global[i] - self.view[i];
+            }
+        }
+        let bytes = self
+            .chan
+            .encode_ef(&mut self.staging, &mut self.residual, frag, sync_index, 0)?;
+        for r in &ranges {
+            for i in r.clone() {
+                self.view[i] += self.staging[i];
+            }
+        }
+        Ok(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::codec::{codec_for, OuterBits};
+
+    fn layout() -> Arc<FlatLayout> {
+        Arc::new(FlatLayout::new(vec![vec![3], vec![2, 2], vec![5]]))
+    }
+
+    fn chan(bits: OuterBits, dir: Direction) -> Channel {
+        Channel::new(layout(), codec_for(bits), 2, 9, dir)
+    }
+
+    #[test]
+    fn directions_draw_disjoint_seed_streams() {
+        let up = chan(OuterBits::Int4, Direction::Up);
+        let down = chan(OuterBits::Int4, Direction::Down);
+        assert_ne!(up.seed_for(0, 0, 0), down.seed_for(0, 0, 0));
+        // and within a direction, seeds vary by sync, stream, offset
+        let base = up.seed_for(0, 0, 0);
+        assert_ne!(base, up.seed_for(1, 0, 0));
+        assert_ne!(base, up.seed_for(0, 1, 0));
+        assert_ne!(base, up.seed_for(0, 0, 8));
+    }
+
+    #[test]
+    fn payload_bytes_match_fragment_ranges() {
+        for bits in OuterBits::ALL {
+            let c = chan(bits, Direction::Down);
+            let full = c.payload_bytes(None);
+            let f0 = c.payload_bytes(Some(0));
+            let f1 = c.payload_bytes(Some(1));
+            assert!(f0 > 0 && f1 > 0, "{bits:?}");
+            assert!(f0 < full && f1 < full, "{bits:?}");
+        }
+    }
+
+    #[test]
+    fn raw_roundtrips_through_decode() {
+        let c = chan(OuterBits::Fp32, Direction::Down);
+        let total = c.layout().total();
+        let src: Vec<f32> = (0..total).map(|i| i as f32 * 0.25 - 1.5).collect();
+        let wire = c.encode_raw(&src, Some(1), 3, 0);
+        assert_eq!(wire.len(), c.payload_bytes(Some(1)));
+        let mut dst = vec![0.0f32; total];
+        c.decode(&wire, Some(1), &mut dst).unwrap();
+        for r in c.ranges(Some(1)) {
+            for i in r {
+                assert_eq!(dst[i].to_bits(), src[i].to_bits());
+            }
+        }
+        // short payloads are rejected
+        assert!(c.decode(&wire[1..], Some(1), &mut dst).is_err());
+    }
+
+    #[test]
+    fn encode_ef_leaves_dq_in_staging_and_error_in_residual() {
+        let c = chan(OuterBits::Int4, Direction::Down);
+        let total = c.layout().total();
+        let delta: Vec<f32> = (0..total).map(|i| ((i as f32) * 0.7).sin()).collect();
+        let mut staging = delta.clone();
+        let mut residual = vec![0.0f32; total];
+        let wire = c.encode_ef(&mut staging, &mut residual, None, 0, 0).unwrap();
+        let mut dq = vec![0.0f32; total];
+        c.decode(&wire, None, &mut dq).unwrap();
+        for i in 0..total {
+            assert_eq!(staging[i].to_bits(), dq[i].to_bits(), "staging must hold dq");
+            assert!(
+                (delta[i] - (dq[i] + residual[i])).abs() < 1e-6,
+                "x = dq + residual must reconstruct the delta at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn down_wire_view_tracks_global_within_one_step() {
+        let total = layout().total();
+        let init: Vec<f32> = vec![0.0; total];
+        let mut dw = DownWire::new(
+            Channel::new(layout(), codec_for(OuterBits::Int8), 1, 7, Direction::Down),
+            &init,
+        );
+        let global: Vec<f32> = (0..total).map(|i| (i as f32 - 4.0) * 0.3).collect();
+        let bytes = dw.encode_broadcast(&global, None, 0).unwrap();
+        assert_eq!(bytes.len(), dw.chan().payload_bytes(None));
+        let maxabs = global.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let step = maxabs / 127.0;
+        for (v, g) in dw.view().iter().zip(&global) {
+            assert!((v - g).abs() <= step * 1.0001, "{v} vs {g}");
+        }
+        // coordinator-side footprint: exactly 3 full-size f32 arenas
+        // (view + residual + staging), pinned so growth is deliberate
+        assert_eq!(dw.arena_bytes(), 3 * total as u64 * 4);
+    }
+}

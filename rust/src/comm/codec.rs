@@ -79,8 +79,10 @@ impl OuterBits {
 
 /// A wire codec over contiguous f32 runs (the flat-bus fragment
 /// ranges). Implementations are stateless and shared across worker
-/// threads; all per-replica state (error-feedback residuals) lives in
-/// `comm::encoder::CommState`.
+/// threads and both wire directions; all mutable state (error-feedback
+/// residuals, views, arenas) lives with its owner —
+/// `comm::encoder::{WorkerComm, ReplicaComm}` worker-side,
+/// `comm::channel::DownWire` coordinator-side.
 pub trait Codec: Send + Sync {
     fn bits(&self) -> OuterBits;
 

@@ -1,249 +1,318 @@
-//! Replica-side sync encoding: where the quantize half of the
-//! quantize→reduce→dequantize contract runs.
+//! Worker-side comm state and the per-run [`CommLink`]: where both
+//! legs of the comm plane touch replica state.
 //!
-//! A [`SyncEncoder`] is the immutable recipe (layout + codec +
-//! fragment count + run seed), shared by every pool worker; a
-//! [`CommState`] is one replica's mutable comm memory — pull scratch,
-//! the global-parameter snapshot from the last broadcast, and the
-//! error-feedback residual — owned by the replica's worker thread for
-//! the whole run, exactly like its data shard.
+//! # Arena ownership (the memory model)
 //!
-//! Per sync event, for the due fragment's ranges:
+//! Comm-side memory is split by what is *genuinely* per-replica:
 //!
-//! 1. pull — the replica's current parameter literals are read into
-//!    the scratch arena (device→host edge of the wire);
-//! 2. identity codec: the raw f32 parameters are the payload (the
-//!    legacy wire, bit for bit);
-//!    lossy codec: the payload is the **error-compensated outer
-//!    delta** `x = (global_snap - theta) + residual`, encoded with the
-//!    per-range seed, after which `residual <- x - decode(encode(x))`
-//!    carries this sync's quantization error into the next one
-//!    (error feedback makes the quantized outer step unbiased over
-//!    repeated syncs instead of silently losing mass);
-//! 3. the encoded bytes travel to the coordinator over the pool
-//!    channel — nothing else does for a DiLoCo sync.
+//! - [`WorkerComm`] — **one per pool worker**, shared by every replica
+//!   the worker owns: the `snap` arena (the replicas' view of the
+//!   global as of the last broadcast — byte-identical across replicas,
+//!   because the broadcast is one stream) plus the transient `staging`
+//!   and `scratch` arenas (dead between calls). Sharing these cuts
+//!   lossy-run comm memory from 4 arenas per replica to 3 per worker +
+//!   1 per replica — ~3x at M=8 with the inline (one-worker) driver.
+//! - [`ReplicaComm`] — **one per replica**: only the up-wire
+//!   error-feedback residual, the single piece of comm state whose
+//!   value actually differs between replicas.
+//!
+//! Identity/identity runs (and Data-Parallel) allocate none of this:
+//! they keep the zero-copy `Arc` literal handoff.
+//!
+//! # Per sync event, for the due fragment's ranges
+//!
+//! **Up** ([`CommLink::encode_replica`], on the replica's worker):
+//! pull theta into `scratch`; identity codecs ship the raw f32
+//! parameters (the legacy wire, bit for bit); lossy codecs ship the
+//! error-compensated outer delta `x = (snap - theta) + residual` and
+//! carry `x - dq(x)` in the replica's residual.
+//!
+//! **Down** ([`CommLink::adopt_encoded`], on every worker): decode the
+//! coordinator's single broadcast payload, advance `snap += dq`, and
+//! rebuild the synced leaves' literals from the snap — once per
+//! worker, shared by all its replicas (the per-worker analogue of the
+//! coordinator's deduplicated upload). Identity down-wires instead
+//! refresh the snap straight from the broadcast literals
+//! ([`CommLink::adopt_literals`]) — no bytes, no decode.
 //!
 //! # Determinism rules
 //!
-//! The payload bytes are a pure function of (codec, run seed, sync
-//! index, replica id, range offsets, replica values). Worker count,
-//! thread scheduling, and wall-clock never enter: seeds are derived
-//! per `(sync_index, replica, range.start)` via splitmix chains, and
-//! the residual/snapshot state advances only with the replica's own
-//! sync sequence. This is what lets `tests/comm_codec.rs` pin workers
-//! 1 vs 4 bit-identical at every bit width.
+//! Payload bytes are a pure function of (codec, run seed, direction,
+//! sync index, stream, range offsets, values). The shared `snap`
+//! advances only at broadcast boundaries, identically on every worker
+//! (same bytes, same decode, same f32 adds), and each replica's
+//! residual advances only with its own sync sequence on its owner
+//! worker. This is what lets `tests/comm_codec.rs` pin workers 1 vs 4
+//! bit-identical at every (up, down) width pair.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::FlatLayout;
-use crate::util::rng::splitmix64;
+use crate::runtime::HostTensor;
 
-use super::codec::Codec;
+use super::channel::Channel;
 
-/// One replica's mutable comm-side state. Arenas are lazily sized to
-/// the layout; lossy codecs additionally need [`SyncEncoder::init_snapshot`]
-/// before the first sync.
+/// Per-worker shared comm arenas (see the module docs for why these
+/// are per worker, not per replica).
 #[derive(Default)]
-pub struct CommState {
-    /// Device→host pull arena (all codecs).
-    scratch: Vec<f32>,
-    /// Global params as of the last broadcast (lossy codecs only).
+pub struct WorkerComm {
+    /// The replicas' view of the global as of the last broadcast.
     snap: Vec<f32>,
-    /// Error-feedback residual (lossy codecs only).
-    residual: Vec<f32>,
-    /// `delta + residual` staging (lossy codecs only).
+    /// Delta / decode staging (transient).
     staging: Vec<f32>,
+    /// Device→host pull and dq arena (transient).
+    scratch: Vec<f32>,
 }
 
-impl CommState {
-    /// The error-feedback residual arena (empty until the first lossy
-    /// sync) — exposed for tests.
+impl WorkerComm {
+    /// The snapshot arena (empty until [`CommLink::init_snapshot`]) —
+    /// exposed for tests.
+    pub fn snap(&self) -> &[f32] {
+        &self.snap
+    }
+
+    /// Comm arena footprint in bytes — the counter behind
+    /// `DriveOutcome::comm_arena_bytes`, so the per-worker sharing
+    /// can't silently regress to per-replica.
+    pub fn arena_bytes(&self) -> u64 {
+        4 * (self.snap.len() + self.staging.len() + self.scratch.len()) as u64
+    }
+}
+
+/// Per-replica comm state: only the up-wire error-feedback residual.
+#[derive(Default)]
+pub struct ReplicaComm {
+    residual: Vec<f32>,
+}
+
+impl ReplicaComm {
+    /// The error-feedback residual (empty until the link initializes
+    /// it for a lossy up-wire) — exposed for tests.
     pub fn residual(&self) -> &[f32] {
         &self.residual
     }
+
+    /// Comm arena footprint in bytes (see [`WorkerComm::arena_bytes`]).
+    pub fn arena_bytes(&self) -> u64 {
+        4 * self.residual.len() as u64
+    }
 }
 
-/// The shared encoding recipe for one training run.
+/// Both legs of one run's comm plane, as workers see them: the up-wire
+/// channel the worker encodes replica contributions with, and the
+/// down-wire channel it decodes broadcasts with. Cloned into every
+/// worker (channels are immutable recipes).
 #[derive(Clone)]
-pub struct SyncEncoder {
-    layout: Arc<FlatLayout>,
-    codec: Arc<dyn Codec>,
-    fragments: usize,
-    run_seed: u64,
+pub struct CommLink {
+    up: Channel,
+    down: Channel,
 }
 
-impl SyncEncoder {
-    pub fn new(
-        layout: Arc<FlatLayout>,
-        codec: Arc<dyn Codec>,
-        fragments: usize,
-        run_seed: u64,
-    ) -> SyncEncoder {
-        SyncEncoder {
-            layout,
-            codec,
-            fragments: fragments.max(1),
-            run_seed,
-        }
+impl CommLink {
+    pub fn new(up: Channel, down: Channel) -> CommLink {
+        // a mismatched pair would index arenas sized from one layout
+        // with ranges from the other — refuse in release builds too
+        assert!(
+            Arc::ptr_eq(up.layout(), down.layout()),
+            "comm link: up and down channels must share one FlatLayout"
+        );
+        CommLink { up, down }
     }
 
-    pub fn codec(&self) -> &Arc<dyn Codec> {
-        &self.codec
+    pub fn up(&self) -> &Channel {
+        &self.up
     }
 
-    /// Exact payload size of one replica's contribution to a sync of
-    /// `frag` (what every worker will put on the channel).
-    pub fn payload_bytes(&self, frag: Option<usize>) -> usize {
-        self.ranges(frag)
-            .iter()
-            .map(|r| self.codec.wire_bytes(r.len()))
-            .sum()
+    pub fn down(&self) -> &Channel {
+        &self.down
     }
 
-    fn ranges(&self, frag: Option<usize>) -> Vec<std::ops::Range<usize>> {
-        match frag {
-            Some(f) => self.layout.fragment_ranges(self.fragments, f),
-            None => self.layout.full_range(),
-        }
+    /// Whether the run needs worker-side comm state at all. False for
+    /// identity/identity runs, which keep the PR 2 zero-copy literal
+    /// handoff end to end.
+    pub fn is_active(&self) -> bool {
+        !self.up.is_identity() || !self.down.is_identity()
     }
 
-    /// Deterministic encode seed: pure in (run seed, sync index,
-    /// replica, range offset) — never scheduling.
-    fn seed_for(&self, sync_index: u64, rep: usize, range_start: usize) -> u64 {
-        let mut s = self.run_seed ^ 0x5EED_C0DE_u64;
-        let a = splitmix64(&mut s);
-        let mut s = a ^ sync_index;
-        let b = splitmix64(&mut s);
-        let mut s = b ^ ((rep as u64) << 32) ^ range_start as u64;
-        splitmix64(&mut s)
-    }
-
-    /// Capture the sync'd global params from the replica's state
-    /// literals (call once before the first inner step, when replica
-    /// state still equals the global init — Algorithm 1 line 2). No-op
-    /// for identity codecs, which never form deltas.
+    /// Size the worker's shared arenas and capture the initial global
+    /// from the replica's state literals (call once before the first
+    /// inner step, when replica state still equals the global init —
+    /// Algorithm 1 line 2; any of the worker's replicas works, they
+    /// are identical at that point).
     pub fn init_snapshot(
         &self,
-        comm: &mut CommState,
+        wc: &mut WorkerComm,
         state: &[Arc<xla::Literal>],
     ) -> Result<()> {
-        if self.codec.is_identity() {
-            return Ok(());
+        let layout = self.up.layout();
+        let total = layout.total();
+        wc.snap = vec![0.0; total];
+        wc.staging = vec![0.0; total];
+        // the pull arena serves only the up-wire encode; identity
+        // up-wires never encode through the driver, so don't carry a
+        // dead full-model arena per worker (encode_replica sizes it
+        // lazily for direct callers)
+        if !self.up.is_identity() {
+            wc.scratch = vec![0.0; total];
         }
-        let total = self.layout.total();
-        comm.snap = vec![0.0; total];
-        comm.residual = vec![0.0; total];
-        comm.staging = vec![0.0; total];
-        for leaf in 0..self.layout.n_leaves() {
-            let r = self.layout.range(leaf);
+        for leaf in 0..layout.n_leaves() {
+            let r = layout.range(leaf);
             state[leaf]
-                .to_slice::<f32>(&mut comm.snap[r])
+                .to_slice::<f32>(&mut wc.snap[r])
                 .map_err(|e| anyhow::anyhow!("comm snapshot: leaf {leaf}: {e}"))?;
         }
         Ok(())
     }
 
-    /// Refresh the global snapshot from a broadcast's adopt list
-    /// (synced leaves only; untouched leaves keep their values).
-    pub fn adopt(
+    /// Size one replica's residual (lossy up-wires only; identity
+    /// up-wires never form deltas and keep this empty).
+    pub fn init_replica(&self, rc: &mut ReplicaComm) {
+        if !self.up.is_identity() {
+            rc.residual = vec![0.0; self.up.layout().total()];
+        }
+    }
+
+    /// Identity-down broadcast: refresh the shared snap from the adopt
+    /// list's literals (synced leaves only; untouched leaves keep
+    /// their values).
+    pub fn adopt_literals(
         &self,
-        comm: &mut CommState,
+        wc: &mut WorkerComm,
         adopt: &[(usize, Arc<xla::Literal>)],
     ) -> Result<()> {
-        if self.codec.is_identity() || adopt.is_empty() {
+        if adopt.is_empty() {
             return Ok(());
         }
-        if comm.snap.is_empty() && self.layout.total() > 0 {
+        let layout = self.up.layout();
+        if wc.snap.is_empty() && layout.total() > 0 {
             bail!("comm adopt before init_snapshot");
         }
         for (leaf, lit) in adopt {
-            let r = self.layout.range(*leaf);
-            lit.to_slice::<f32>(&mut comm.snap[r])
+            let r = layout.range(*leaf);
+            lit.to_slice::<f32>(&mut wc.snap[r])
                 .map_err(|e| anyhow::anyhow!("comm adopt: leaf {leaf}: {e}"))?;
         }
         Ok(())
     }
 
+    /// Lossy-down broadcast: decode the coordinator's single encoded
+    /// payload, advance `snap += dq` over the due ranges, and build
+    /// the refreshed leaves' literals from the snap — returned as the
+    /// adopt list every replica this worker owns applies (one decode
+    /// and one upload per leaf per *worker*, never per replica).
+    pub fn adopt_encoded(
+        &self,
+        wc: &mut WorkerComm,
+        frag: Option<usize>,
+        bytes: &[u8],
+    ) -> Result<Vec<(usize, Arc<xla::Literal>)>> {
+        let layout = self.down.layout();
+        if wc.snap.len() != layout.total() {
+            bail!("comm adopt_encoded before init_snapshot");
+        }
+        self.down.decode(bytes, frag, &mut wc.staging)?;
+        let ranges = self.down.ranges(frag);
+        for r in &ranges {
+            for i in r.clone() {
+                wc.snap[i] += wc.staging[i];
+            }
+        }
+        let mut adopt = Vec::new();
+        for leaf in layout.leaves(self.down.fragments(), frag) {
+            let r = layout.range(leaf);
+            let lit = HostTensor::from_vec(layout.shape(leaf), wc.snap[r].to_vec())
+                .to_literal()
+                .map_err(|e| anyhow::anyhow!("comm adopt_encoded: leaf {leaf}: {e}"))?;
+            adopt.push((leaf, Arc::new(lit)));
+        }
+        Ok(adopt)
+    }
+
+    /// Up-wire payload size of one replica's contribution to a sync of
+    /// `frag` (what every worker puts on the channel).
+    pub fn payload_bytes(&self, frag: Option<usize>) -> usize {
+        self.up.payload_bytes(frag)
+    }
+
     /// Encode replica `rep`'s contribution to sync `sync_index` over
     /// the due ranges of `frag`. `state` holds the replica's literal
     /// handles in manifest leaf order (the first `n_leaves` are the
-    /// parameters). Returns exactly [`SyncEncoder::payload_bytes`] bytes.
+    /// parameters). Returns exactly [`CommLink::payload_bytes`] bytes.
     pub fn encode_replica(
         &self,
         rep: usize,
         state: &[Arc<xla::Literal>],
-        comm: &mut CommState,
+        wc: &mut WorkerComm,
+        rc: &mut ReplicaComm,
         frag: Option<usize>,
         sync_index: u64,
     ) -> Result<Vec<u8>> {
-        let total = self.layout.total();
-        if state.len() < self.layout.n_leaves() {
+        let layout = self.up.layout();
+        let total = layout.total();
+        if state.len() < layout.n_leaves() {
             bail!(
                 "comm encode: replica {rep} has {} state leaves, layout wants {}",
                 state.len(),
-                self.layout.n_leaves()
+                layout.n_leaves()
             );
         }
-        if comm.scratch.len() != total {
-            comm.scratch = vec![0.0; total];
+        if wc.scratch.len() != total {
+            wc.scratch = vec![0.0; total];
         }
-        // pull the due leaves into the scratch arena
-        for leaf in self.layout.leaves(self.fragments, frag) {
-            let r = self.layout.range(leaf);
+        // pull the due leaves into the shared scratch arena
+        for leaf in layout.leaves(self.up.fragments(), frag) {
+            let r = layout.range(leaf);
             state[leaf]
-                .to_slice::<f32>(&mut comm.scratch[r])
+                .to_slice::<f32>(&mut wc.scratch[r])
                 .map_err(|e| anyhow::anyhow!("comm encode: pulling leaf {leaf}: {e}"))?;
         }
-        let ranges = self.ranges(frag);
-        let mut out = Vec::with_capacity(self.payload_bytes(frag));
-        if self.codec.is_identity() {
+        if self.up.is_identity() {
             // legacy wire: raw f32 parameters, bit for bit
-            for r in &ranges {
-                let seed = self.seed_for(sync_index, rep, r.start);
-                self.codec.encode(&comm.scratch[r.clone()], seed, &mut out);
-            }
-            return Ok(out);
+            return Ok(self.up.encode_raw(&wc.scratch, frag, sync_index, rep as u64));
         }
-        if comm.snap.len() != total {
-            bail!("comm encode: lossy codec without init_snapshot (replica {rep})");
+        if wc.snap.len() != total {
+            bail!("comm encode: lossy up-wire without init_snapshot (replica {rep})");
         }
-        for r in &ranges {
-            // x = (global - theta) + residual, the error-compensated delta
-            for i in r.clone() {
-                comm.staging[i] = (comm.snap[i] - comm.scratch[i]) + comm.residual[i];
-            }
-            let seed = self.seed_for(sync_index, rep, r.start);
-            let before = out.len();
-            self.codec.encode(&comm.staging[r.clone()], seed, &mut out);
-            // residual <- x - dq(x): decode our own bytes (scratch is
-            // free again — theta was consumed forming x)
-            self.codec
-                .decode(&out[before..], &mut comm.scratch[r.clone()])?;
-            for i in r.clone() {
-                comm.residual[i] = comm.staging[i] - comm.scratch[i];
+        if rc.residual.len() != total {
+            bail!("comm encode: replica {rep} residual not initialized");
+        }
+        // x = (global view - theta) + residual, the error-compensated
+        // delta; the channel owns the EF arithmetic
+        for r in self.up.ranges(frag) {
+            for i in r {
+                wc.staging[i] = wc.snap[i] - wc.scratch[i];
             }
         }
-        Ok(out)
+        self.up
+            .encode_ef(&mut wc.staging, &mut rc.residual, frag, sync_index, rep as u64)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::channel::Direction;
     use crate::comm::codec::{codec_for, OuterBits};
-    use crate::runtime::HostTensor;
+    use crate::runtime::FlatLayout;
 
     fn layout() -> Arc<FlatLayout> {
         Arc::new(FlatLayout::new(vec![vec![3], vec![2, 2], vec![5]]))
+    }
+
+    fn link(up: OuterBits, down: OuterBits) -> CommLink {
+        let l = layout();
+        CommLink::new(
+            Channel::new(Arc::clone(&l), codec_for(up), 1, 7, Direction::Up),
+            Channel::new(l, codec_for(down), 1, 7, Direction::Down),
+        )
     }
 
     fn lits(layout: &FlatLayout, fill: impl Fn(usize) -> f32) -> Vec<Arc<xla::Literal>> {
         (0..layout.n_leaves())
             .map(|l| {
                 let r = layout.range(l);
-                let v: Vec<f32> = r.map(|i| fill(i)).collect();
+                let v: Vec<f32> = r.map(&fill).collect();
                 Arc::new(
                     HostTensor::from_vec(layout.shape(l), v)
                         .to_literal()
@@ -256,13 +325,15 @@ mod tests {
     #[test]
     fn identity_payload_is_raw_params() {
         let l = layout();
-        let enc = SyncEncoder::new(Arc::clone(&l), codec_for(OuterBits::Fp32), 1, 7);
+        let lk = link(OuterBits::Fp32, OuterBits::Fp32);
+        assert!(!lk.is_active());
         let state = lits(&l, |i| i as f32 * 0.5 - 2.0);
-        let mut comm = CommState::default();
-        let bytes = enc
-            .encode_replica(0, &state, &mut comm, None, 0)
+        let mut wc = WorkerComm::default();
+        let mut rc = ReplicaComm::default();
+        let bytes = lk
+            .encode_replica(0, &state, &mut wc, &mut rc, None, 0)
             .unwrap();
-        assert_eq!(bytes.len(), enc.payload_bytes(None));
+        assert_eq!(bytes.len(), lk.payload_bytes(None));
         assert_eq!(bytes.len(), l.total() * 4);
         let got: Vec<f32> = bytes
             .chunks_exact(4)
@@ -270,67 +341,105 @@ mod tests {
             .collect();
         let want: Vec<f32> = (0..l.total()).map(|i| i as f32 * 0.5 - 2.0).collect();
         assert_eq!(got, want);
-        assert!(comm.residual().is_empty(), "identity never builds residuals");
+        assert!(rc.residual().is_empty(), "identity never builds residuals");
     }
 
     #[test]
     fn lossy_requires_snapshot_and_builds_residual() {
         let l = layout();
-        let enc = SyncEncoder::new(Arc::clone(&l), codec_for(OuterBits::Int4), 1, 7);
+        let lk = link(OuterBits::Int4, OuterBits::Fp32);
+        assert!(lk.is_active());
         let state = lits(&l, |i| (i as f32).sin());
-        let mut comm = CommState::default();
+        let mut wc = WorkerComm::default();
+        let mut rc = ReplicaComm::default();
+        lk.init_replica(&mut rc);
         assert!(
-            enc.encode_replica(0, &state, &mut comm, None, 0).is_err(),
+            lk.encode_replica(0, &state, &mut wc, &mut rc, None, 0).is_err(),
             "lossy encode without snapshot must fail loudly"
         );
-        enc.init_snapshot(&mut comm, &lits(&l, |_| 0.0)).unwrap();
-        let bytes = enc.encode_replica(0, &state, &mut comm, None, 0).unwrap();
-        assert_eq!(bytes.len(), enc.payload_bytes(None));
+        lk.init_snapshot(&mut wc, &lits(&l, |_| 0.0)).unwrap();
+        let bytes = lk
+            .encode_replica(0, &state, &mut wc, &mut rc, None, 0)
+            .unwrap();
+        assert_eq!(bytes.len(), lk.payload_bytes(None));
         // residual = x - dq is bounded by one quantization step
         let maxabs = (0..l.total())
             .map(|i| (i as f32).sin().abs())
             .fold(0.0f32, f32::max);
-        assert!(comm
+        assert!(rc
             .residual()
             .iter()
             .all(|&r| r.abs() <= maxabs / 7.0 * 1.0001));
     }
 
     #[test]
-    fn payload_bytes_match_fragment_ranges() {
+    fn adopt_literals_refreshes_only_listed_leaves() {
         let l = layout();
-        for bits in OuterBits::ALL {
-            let enc = SyncEncoder::new(Arc::clone(&l), codec_for(bits), 2, 0);
-            let full = enc.payload_bytes(None);
-            let f0 = enc.payload_bytes(Some(0));
-            let f1 = enc.payload_bytes(Some(1));
-            assert!(f0 > 0 && f1 > 0, "{bits:?}");
-            assert!(f0 < full && f1 < full, "{bits:?}");
-        }
-    }
-
-    #[test]
-    fn adopt_refreshes_only_listed_leaves() {
-        let l = layout();
-        let enc = SyncEncoder::new(Arc::clone(&l), codec_for(OuterBits::Int8), 1, 1);
-        let mut comm = CommState::default();
-        enc.init_snapshot(&mut comm, &lits(&l, |_| 1.0)).unwrap();
+        let lk = link(OuterBits::Int8, OuterBits::Fp32);
+        let mut wc = WorkerComm::default();
+        lk.init_snapshot(&mut wc, &lits(&l, |_| 1.0)).unwrap();
         let fresh = lits(&l, |_| 9.0);
-        enc.adopt(&mut comm, &[(1, Arc::clone(&fresh[1]))]).unwrap();
+        lk.adopt_literals(&mut wc, &[(1, Arc::clone(&fresh[1]))])
+            .unwrap();
         let r1 = l.range(1);
         for i in 0..l.total() {
             let want = if r1.contains(&i) { 9.0 } else { 1.0 };
-            assert_eq!(comm.snap[i], want, "element {i}");
+            assert_eq!(wc.snap()[i], want, "element {i}");
         }
     }
 
     #[test]
-    fn seeds_vary_by_sync_replica_and_offset() {
+    fn adopt_encoded_advances_snap_and_builds_shared_literals() {
         let l = layout();
-        let enc = SyncEncoder::new(Arc::clone(&l), codec_for(OuterBits::Int4), 1, 9);
-        let base = enc.seed_for(0, 0, 0);
-        assert_ne!(base, enc.seed_for(1, 0, 0));
-        assert_ne!(base, enc.seed_for(0, 1, 0));
-        assert_ne!(base, enc.seed_for(0, 0, 8));
+        let lk = link(OuterBits::Fp32, OuterBits::Int8);
+        assert!(lk.is_active(), "lossy down alone activates the link");
+        let init: Vec<f32> = vec![0.5; l.total()];
+        let mut wc = WorkerComm::default();
+        lk.init_snapshot(&mut wc, &lits(&l, |_| 0.5)).unwrap();
+        // coordinator side: encode one broadcast moving the global to 2.0
+        let global: Vec<f32> = vec![2.0; l.total()];
+        let mut dw = crate::comm::channel::DownWire::new(lk.down().clone(), &init);
+        let bytes = dw.encode_broadcast(&global, None, 0).unwrap();
+        let adopt = lk.adopt_encoded(&mut wc, None, &bytes).unwrap();
+        assert_eq!(adopt.len(), l.n_leaves());
+        // worker snap must land exactly on the coordinator's view
+        for (s, v) in wc.snap().iter().zip(dw.view()) {
+            assert_eq!(s.to_bits(), v.to_bits());
+        }
+        // and the literals hold the snap's values
+        for (leaf, lit) in &adopt {
+            let v = lit.to_vec::<f32>().unwrap();
+            let r = l.range(*leaf);
+            for (x, i) in v.iter().zip(r) {
+                assert_eq!(x.to_bits(), wc.snap()[i].to_bits());
+            }
+        }
+        // rejects decode before init / wrong sizes
+        let mut cold = WorkerComm::default();
+        assert!(lk.adopt_encoded(&mut cold, None, &bytes).is_err());
+        assert!(lk.adopt_encoded(&mut wc, None, &bytes[1..]).is_err());
+    }
+
+    #[test]
+    fn arena_bytes_count_shared_vs_per_replica_split() {
+        let l = layout();
+        let total = l.total() as u64;
+        let lk = link(OuterBits::Int4, OuterBits::Int4);
+        let mut wc = WorkerComm::default();
+        let mut rc = ReplicaComm::default();
+        assert_eq!(wc.arena_bytes() + rc.arena_bytes(), 0);
+        lk.init_snapshot(&mut wc, &lits(&l, |_| 0.0)).unwrap();
+        lk.init_replica(&mut rc);
+        assert_eq!(wc.arena_bytes(), 3 * total * 4, "3 shared arenas per worker");
+        assert_eq!(rc.arena_bytes(), total * 4, "1 residual per replica");
+        // identity up-wire: no residual and no pull scratch — the
+        // worker only ever decodes broadcasts
+        let lk2 = link(OuterBits::Fp32, OuterBits::Int4);
+        let mut rc2 = ReplicaComm::default();
+        lk2.init_replica(&mut rc2);
+        assert_eq!(rc2.arena_bytes(), 0);
+        let mut wc2 = WorkerComm::default();
+        lk2.init_snapshot(&mut wc2, &lits(&l, |_| 0.0)).unwrap();
+        assert_eq!(wc2.arena_bytes(), 2 * total * 4);
     }
 }

@@ -1,58 +1,81 @@
-//! Compressed outer communication: the wire subsystem for low-bit
-//! outer gradients on the flat parameter bus (paper section 7;
-//! Streaming DiLoCo, arXiv:2501.18512, shows 4-bit outer gradients
-//! cost negligible loss).
+//! The bidirectional comm plane: both legs of the H-cadence outer sync
+//! as explicit, narrow, exactly-accounted wires (paper section 7;
+//! Streaming DiLoCo, arXiv:2501.18512, quantizes *both* the outer
+//! gradients and the merged-model broadcast at negligible loss cost;
+//! DiLoCoX, arXiv:2506.21263, makes the same bidirectional-compression
+//! argument at decentralized scale).
 //!
-//! # The quantize → reduce → dequantize contract
+//! # The Channel model
 //!
-//! Every DiLoCo outer sync moves each replica's contribution across
-//! the cross-datacenter boundary. This module makes that wire explicit
-//! and cheap to narrow:
+//! A DiLoCo outer sync moves data across the cross-datacenter boundary
+//! twice: replica contributions travel **up** to the coordinator, and
+//! the refreshed global travels back **down** to every replica. Both
+//! legs are instances of one direction-generic [`channel::Channel`] —
+//! codec + fragment geometry + seed discipline + error-feedback
+//! arithmetic — instantiated twice per run:
 //!
-//! 1. **quantize** (replica side, [`encoder::SyncEncoder`]): the
-//!    replica's due fragment is pulled from its literals and encoded
-//!    with the run's [`codec::Codec`]. The identity codec ([`codec::Fp32`])
-//!    ships raw f32 parameters — byte-for-byte the legacy wire, so
-//!    `--outer-bits 32` is bit-identical to the uncompressed path.
-//!    Lossy codecs ship the error-compensated outer delta
-//!    `x = (global - theta) + residual` instead, and update the
-//!    per-replica error-feedback residual `residual <- x - dq(x)` so
-//!    quantization error is carried forward, never lost.
-//! 2. **reduce** (coordinator side, `coordinator::sync::OuterSync::sync_encoded`):
-//!    payloads are decoded into the reused scratch arena and
-//!    accumulated in replica-index order over the precomputed fragment
-//!    ranges — identical summation order to the sequential oracle.
-//! 3. **dequantize / step**: the accumulated value becomes the outer
-//!    gradient (identity: `Delta = global - mean(theta)`; lossy:
-//!    `Delta = mean(dq)`) and the Nesterov outer step runs unchanged
-//!    on the flat bus. The refreshed fragment is broadcast as
-//!    deduplicated f32 literals, and the replica-side snapshot adopts
-//!    it so the next delta is formed against the coordinator's exact
-//!    global.
+//! - **up-wire** (`Direction::Up`, one logical stream per replica):
+//!   the identity codec ships raw f32 parameters — byte-for-byte the
+//!   legacy wire, so `--outer-bits 32` is bit-identical to the
+//!   uncompressed path. Lossy codecs ship the error-compensated outer
+//!   delta `x = (snap - theta) + residual`, with the residual owned by
+//!   the replica ([`encoder::ReplicaComm`]).
+//! - **down-wire** (`Direction::Down`, a single broadcast stream): the
+//!   identity codec keeps the zero-copy deduplicated `Arc` literal
+//!   handoff — no serialization at all. Lossy codecs
+//!   (`--outer-bits-down`) encode each broadcast fragment **once** on
+//!   the coordinator as `x = (global - view) + residual`, with the
+//!   view and residual owned by the coordinator
+//!   ([`channel::DownWire`]); every worker decodes the same payload
+//!   into its shared snapshot and rebuilds the synced leaves' literals
+//!   for all the replicas it owns ([`encoder::CommLink::adopt_encoded`]).
+//!
+//! Error feedback makes both legs unbiased over repeated syncs: each
+//! quantization error is carried into the next payload, so the
+//! time-averaged wire value telescopes to the true value (pinned for
+//! both directions by `tests/comm_codec.rs`).
+//!
+//! # The arena model
+//!
+//! Comm memory is split by what is genuinely per-replica: the
+//! broadcast snapshot and the staging/scratch arenas are **shared per
+//! worker** ([`encoder::WorkerComm`] — the snapshot is byte-identical
+//! across replicas, staging/scratch are transient), and only the
+//! up-wire residual stays per-replica ([`encoder::ReplicaComm`]).
+//! At M=8 under the inline driver that is 3 + 8 arenas instead of the
+//! old 4-per-replica 32 — the footprint is surfaced as
+//! `DriveOutcome::comm_arena_bytes` and pinned by a bytes-allocated
+//! test so the sharing can't silently regress.
 //!
 //! Every byte that crosses the wire is counted in [`wire::WireStats`]
-//! — exact encoded sizes per sync, per fragment, per replica — and
-//! surfaces in `RunMetrics` (`wire_up_bytes` / `wire_down_bytes`), the
-//! sweep store, and the `diloco report --exp comm` table. The `netsim`
-//! wall-clock model takes the same width via `WalltimeInput::outer_bits`.
+//! — exact encoded sizes per sync, per fragment, per replica, in both
+//! directions — and surfaces in `RunMetrics` (`wire_up_bytes` /
+//! `wire_down_bytes`), the sweep store, and the `diloco report --exp
+//! comm` table. The `netsim` wall-clock model takes the same widths
+//! via `WalltimeInput::{outer_bits, outer_bits_down}`.
 //!
 //! # Determinism rules
 //!
-//! - Stochastic rounding is seeded purely from
-//!   `(run seed, sync index, replica id, range offset, block index)` —
-//!   never from scheduling, wall-clock, or global state.
-//! - Residuals and snapshots are per-replica state owned by the
-//!   replica's pool worker, advancing only with the replica's own sync
-//!   sequence.
-//! - Reduction happens on the coordinator in replica-index order.
+//! - Stochastic rounding is seeded purely from `(run seed, direction,
+//!   sync index, stream, range offset, block index)` — never from
+//!   scheduling, wall-clock, or global state. `stream` is the replica
+//!   id on the up-wire and 0 on the down-wire.
+//! - The up residual is per-replica state owned by the replica's pool
+//!   worker; the down residual and view are coordinator state. Both
+//!   advance only with the run's sync sequence.
+//! - Reduction happens on the coordinator in replica-index order; the
+//!   broadcast is one byte stream decoded identically by every worker.
 //!
-//! Together these make every bit width reproduce bit-identically at
-//! any `--workers` count (pinned by `tests/comm_codec.rs`).
+//! Together these make every (up, down) width pair reproduce
+//! bit-identically at any `--workers` count (pinned by
+//! `tests/comm_codec.rs`).
 
+pub mod channel;
 pub mod codec;
 pub mod encoder;
 pub mod wire;
 
+pub use channel::{Channel, Direction, DownWire};
 pub use codec::{codec_for, Codec, OuterBits};
-pub use encoder::{CommState, SyncEncoder};
+pub use encoder::{CommLink, ReplicaComm, WorkerComm};
 pub use wire::{SyncWireRecord, WireStats};

@@ -14,11 +14,13 @@
 //! - **up** — replica → coordinator: the encoded sync contribution,
 //!   counted per replica (an all-reduce ingests every replica's
 //!   payload, so `bytes_up = replicas * bytes_per_replica`);
-//! - **down** — coordinator → replica: the refreshed global fragment.
-//!   Our broadcast ships deduplicated f32 literals, and a
-//!   bandwidth-optimal broadcast costs ~one payload regardless of the
-//!   fan-out, so this is counted **once** per sync at 4 bytes/element,
-//!   not per replica.
+//! - **down** — coordinator → replica: the refreshed global fragment,
+//!   counted **once** per sync (a bandwidth-optimal broadcast costs
+//!   ~one payload regardless of the fan-out, and ours is literally one
+//!   stream: deduplicated `Arc` literals at the identity width, or a
+//!   single encoded payload every worker decodes) at the down-wire
+//!   codec's exact encoded size — `--outer-bits-down` below 32 shrinks
+//!   this number by the same ~bits/32 factor as the up-wire's.
 
 /// Exact wire traffic of one outer sync event.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -31,7 +33,8 @@ pub struct SyncWireRecord {
     pub replicas: usize,
     /// Encoded bytes received from each replica.
     pub bytes_per_replica: u64,
-    /// Broadcast payload pushed back out (f32, deduplicated).
+    /// Broadcast payload pushed back out, once per sync (the down
+    /// codec's exact encoded size; `4 * elems` at the identity width).
     pub bytes_down: u64,
 }
 

@@ -122,14 +122,22 @@ pub struct RunConfig {
     /// training results, so this is a pure wall-clock knob and is
     /// deliberately excluded from sweep-store run ids.
     pub workers: usize,
-    /// Outer-communication bit width (`--outer-bits`, paper section
-    /// 7): the wire codec replicas encode their sync contribution
-    /// with. Fp32 is the identity oracle (bit-identical to the
-    /// uncompressed path); lower widths quantize the outer gradients
-    /// with per-block scales, stochastic rounding, and error feedback
-    /// (see `crate::comm`). Changes training results, so it IS part of
-    /// the sweep-store run id.
+    /// Up-wire bit width (`--outer-bits`, paper section 7): the wire
+    /// codec replicas encode their sync contribution with. Fp32 is the
+    /// identity oracle (bit-identical to the uncompressed path); lower
+    /// widths quantize the outer gradients with per-block scales,
+    /// stochastic rounding, and error feedback (see `crate::comm`).
+    /// Changes training results, so it IS part of the sweep-store run
+    /// id.
     pub outer_bits: OuterBits,
+    /// Down-wire bit width (`--outer-bits-down`): the broadcast codec
+    /// the coordinator pushes the refreshed global back out with. Fp32
+    /// keeps the zero-copy deduplicated literal handoff; lower widths
+    /// quantize the broadcast with a coordinator-owned error-feedback
+    /// stream (Streaming DiLoCo compresses the merged-model push the
+    /// same way). Changes training results, so it too is part of the
+    /// run id.
+    pub outer_bits_down: OuterBits,
 }
 
 impl Default for RunConfig {
@@ -152,6 +160,7 @@ impl Default for RunConfig {
             streaming_fragments: 1,
             workers: 1,
             outer_bits: OuterBits::Fp32,
+            outer_bits_down: OuterBits::Fp32,
         }
     }
 }
@@ -178,12 +187,17 @@ pub struct RunMetrics {
     pub downstream: Vec<(String, f64)>,
     pub outer_syncs: usize,
     pub wall_secs: f64,
-    /// Outer-communication bit width the run used (32 = uncompressed).
+    /// Up-wire bit width the run used (32 = uncompressed).
     pub outer_bits: u32,
+    /// Down-wire (broadcast) bit width the run used (32 = literal
+    /// handoff).
+    pub outer_bits_down: u32,
     /// Exact replica→coordinator wire bytes across all outer syncs
     /// (encoded payload sizes, counted on the bus; 0 for DP).
     pub wire_up_bytes: u64,
-    /// Exact coordinator→replica broadcast bytes (deduplicated f32).
+    /// Exact coordinator→replica broadcast bytes across all outer
+    /// syncs — the down codec's encoded payload sizes, counted once
+    /// per sync (0 for DP).
     pub wire_down_bytes: u64,
 }
 
@@ -225,6 +239,7 @@ impl RunMetrics {
             ("outer_syncs", Json::num(self.outer_syncs as f64)),
             ("wall_secs", Json::num(self.wall_secs)),
             ("outer_bits", Json::int(self.outer_bits)),
+            ("outer_bits_down", Json::int(self.outer_bits_down)),
             // wire bytes are u64 exact counts; Json::int avoids f64
             ("wire_up_bytes", Json::int(self.wire_up_bytes)),
             ("wire_down_bytes", Json::int(self.wire_down_bytes)),
@@ -274,6 +289,12 @@ impl RunMetrics {
             // uncompressed path and counted no wire bytes
             outer_bits: j
                 .get("outer_bits")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(32) as u32,
+            // absent before the down-wire landed: those runs broadcast
+            // f32 literals
+            outer_bits_down: j
+                .get("outer_bits_down")
                 .and_then(|v| v.as_u64())
                 .unwrap_or(32) as u32,
             wire_up_bytes: j.get("wire_up_bytes").and_then(|v| v.as_u64()).unwrap_or(0),
@@ -457,24 +478,33 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
     }
     // streaming: one fragment syncs every H/P steps, round-robin.
     let frag_interval = if fragments > 1 { h / fragments } else { h };
-    // DP has no outer wire: --outer-bits is inert there, so normalize
-    // to fp32 (metrics + run ids must not pretend a codec ran)
+    // DP has no outer wire: --outer-bits / --outer-bits-down are inert
+    // there, so normalize both to fp32 (metrics + run ids must not
+    // pretend a codec ran)
     let outer_bits = if is_diloco { cfg.outer_bits } else { OuterBits::Fp32 };
+    let outer_bits_down = if is_diloco { cfg.outer_bits_down } else { OuterBits::Fp32 };
     if !is_diloco && cfg.outer_bits != OuterBits::Fp32 {
         log::warn!(
             "--outer-bits {} has no effect for Data-Parallel (no outer sync); recording 32",
             cfg.outer_bits.label()
         );
     }
+    if !is_diloco && cfg.outer_bits_down != OuterBits::Fp32 {
+        log::warn!(
+            "--outer-bits-down {} has no effect for Data-Parallel (no broadcast); recording 32",
+            cfg.outer_bits_down.label()
+        );
+    }
 
     log::info!(
-        "run {} {} B={} tok/step, T={total_steps}, lr={}, H={}, wd={wd:.2e}, outer_bits={}",
+        "run {} {} B={} tok/step, T={total_steps}, lr={}, H={}, wd={wd:.2e}, outer_bits={}/{} (up/down)",
         cfg.model,
         cfg.algo.label(),
         tokens_per_step,
         cfg.inner_lr,
         if is_diloco { h } else { 0 },
         outer_bits.label(),
+        outer_bits_down.label(),
     );
 
     // ---- artifacts ------------------------------------------------------
@@ -569,10 +599,13 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
                 policy.outer_momentum,
                 fragments,
             )?
-            // the wire codec: workers encode their sync contribution
-            // with this, the coordinator decodes + reduces, and every
-            // byte is counted (crate::comm)
-            .with_codec(codec_for(outer_bits), cfg.seed),
+            // the comm plane: workers encode their up-wire sync
+            // contribution with the up codec, the coordinator decodes
+            // + reduces, then pushes the broadcast back out through
+            // the down codec — and every byte on both legs is counted
+            // (crate::comm)
+            .with_codec(codec_for(outer_bits), cfg.seed)
+            .with_down_codec(codec_for(outer_bits_down)),
         )
     } else {
         None
@@ -680,6 +713,7 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         outer_syncs: outcome.outer_syncs,
         wall_secs: t_start.elapsed().as_secs_f64(),
         outer_bits: outer_bits.bits(),
+        outer_bits_down: outer_bits_down.bits(),
         wire_up_bytes,
         wire_down_bytes,
     })

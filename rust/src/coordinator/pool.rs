@@ -8,13 +8,13 @@
 //! Data-Parallel). Each worker thread *owns* a fixed subset of
 //! replicas for the whole run (`replica r -> worker r % workers`): the
 //! replica's literal-handle state, its `TokenStream` shard, and its
-//! comm-side state (global snapshot + error-feedback residual, see
-//! `crate::comm`) live inside the worker, so all RNG/data/residual
-//! consumption is per-replica sequential no matter how segments are
-//! scheduled. The coordinator sends each worker a `Run` command for
-//! the segment; workers execute their replicas' H inner steps
+//! per-replica comm residual live inside the worker; the worker
+//! additionally owns one set of **shared comm arenas** (the broadcast
+//! snapshot + staging/scratch, identical across its replicas — see
+//! `crate::comm`). The coordinator sends each worker a `Run` command
+//! for the segment; workers execute their replicas' H inner steps
 //! concurrently and hand back per-step losses plus each replica's
-//! **sync payload** over a channel: under a *lossy* wire codec
+//! **sync payload** over a channel: under a *lossy* up-wire
 //! (`--outer-bits` below 32) that payload is the replica's encoded
 //! wire contribution — error-compensated quantized outer deltas, the
 //! quantize stage running on the worker, where the replica lives.
@@ -26,26 +26,34 @@
 //! The **outer step is the barrier**: the coordinator blocks until
 //! every worker reports, assembles the payloads in replica-index
 //! order, runs the zero-alloc flat-bus outer step
-//! ([`OuterSync::sync_encoded`]), and broadcasts by attaching the
-//! deduplicated global literals to the *next* `Run` command (workers
-//! adopt them — state handles and comm snapshot both — before
-//! stepping). Only the coordinator ever touches the flat arenas;
-//! workers only ever read literals — ownership never crosses the
-//! barrier in both directions at once.
+//! ([`OuterSync::sync_encoded`]), and broadcasts with the *next* `Run`
+//! command. The broadcast takes one of two forms: deduplicated global
+//! `Arc` literals (identity down-wire — PR 2's zero-copy handoff,
+//! unchanged), or the [`DownWire`]'s single encoded payload (lossy
+//! `--outer-bits-down`), which each worker decodes once into its
+//! shared snapshot before rebuilding the synced leaves' literals for
+//! all the replicas it owns. Only the coordinator ever touches the
+//! flat arenas; workers only ever read literals or broadcast bytes —
+//! ownership never crosses the barrier in both directions at once.
+//!
+//! [`DownWire`]: crate::comm::DownWire
 //!
 //! # Why determinism holds
 //!
 //! Bit-identical results for any worker count follow from three
-//! invariants, each pinned by `tests/worker_pool.rs` and (per bit
-//! width) `tests/comm_codec.rs`:
+//! invariants, each pinned by `tests/worker_pool.rs` and (per (up,
+//! down) width pair) `tests/comm_codec.rs`:
 //!
 //! 1. replica state, data shard, and comm residual are owned by
 //!    exactly one worker and advance in step/sync order — scheduling
 //!    cannot reorder a replica's own computation, and encode seeds
-//!    derive from (run seed, sync index, replica), never the schedule;
+//!    derive from (run seed, direction, sync index, replica), never
+//!    the schedule;
 //! 2. cross-replica reduction (the per-step mean loss and the outer
 //!    gradient accumulation) happens on the coordinator in replica
-//!    index order, identical to the sequential loop's summation order;
+//!    index order, identical to the sequential loop's summation order
+//!    — and the broadcast is one byte stream decoded identically by
+//!    every worker, so the shared snapshots never diverge;
 //! 3. evaluation reads immutable literal sets that only change at
 //!    barriers, so its placement relative to worker execution is
 //!    irrelevant.
@@ -60,7 +68,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::comm::{CommState, SyncEncoder};
+use crate::comm::{CommLink, ReplicaComm, WorkerComm};
 use crate::coordinator::sync::OuterSync;
 use crate::data::synthetic::TokenStream;
 
@@ -74,7 +82,8 @@ pub struct ReplicaState {
 
 impl ReplicaState {
     /// Apply a broadcast: adopt the shared literal for each synced
-    /// leaf (every replica ends up pointing at the same upload).
+    /// leaf (every replica of a worker ends up pointing at the same
+    /// upload).
     fn adopt(&mut self, adopt: &Adopt) {
         for (leaf, lit) in adopt {
             self.state[*leaf] = Arc::clone(lit);
@@ -132,11 +141,44 @@ pub struct DriveOutcome {
     /// Intermediate (step, eval loss) points (eval_every cadence).
     pub eval_curve: Vec<(usize, f64)>,
     pub outer_syncs: usize,
+    /// Worker-side comm arena footprint: the shared per-worker arenas
+    /// plus every replica's residual, in bytes (0 for identity /
+    /// Data-Parallel runs). Pinned by `tests/comm_codec.rs` so the
+    /// per-worker sharing can't silently regress to per-replica.
+    pub comm_arena_bytes: u64,
+    /// Coordinator-side down-wire arena footprint (view + residual +
+    /// staging; 0 unless the broadcast is lossy) — accounted
+    /// separately from the worker-side number so the arena-sharing
+    /// comparison against the retired per-replica scheme stays
+    /// apples-to-apples, while coordinator comm memory still can't
+    /// grow unnoticed.
+    pub down_wire_arena_bytes: u64,
 }
 
-/// Broadcast payload: (leaf index, shared literal) pairs every replica
-/// adopts before its next inner step.
+/// Literal adopt list: (leaf index, shared literal) pairs every replica
+/// applies before its next inner step.
 type Adopt = Vec<(usize, Arc<xla::Literal>)>;
+
+/// One broadcast as it leaves the coordinator.
+#[derive(Clone)]
+enum Broadcast {
+    /// Identity down-wire (and Data-Parallel): deduplicated `Arc`
+    /// literal handoff — zero-copy, one upload per leaf run-wide.
+    Literals(Adopt),
+    /// Lossy down-wire: the fragment's single encoded payload, one
+    /// allocation `Arc`-shared by every worker; each decodes it into
+    /// its shared snapshot.
+    Encoded {
+        frag: Option<usize>,
+        bytes: Arc<Vec<u8>>,
+    },
+}
+
+impl Broadcast {
+    fn empty() -> Broadcast {
+        Broadcast::Literals(Vec::new())
+    }
+}
 
 /// What the coordinator told the workers to produce at segment end.
 #[derive(Debug, Clone)]
@@ -159,15 +201,42 @@ enum SyncPayload {
 /// Per-segment result: `losses[r]` / `payloads[r]` for replica r.
 type SegmentData = (Vec<Vec<f64>>, Vec<SyncPayload>);
 
+/// Apply one broadcast to a worker's shared comm state and return the
+/// literal adopt list its replicas apply: the identity form passes the
+/// coordinator's deduplicated literals through (refreshing the
+/// snapshot when comm state is live), the encoded form decodes the
+/// byte payload once and rebuilds the synced leaves' literals from the
+/// worker's snapshot.
+fn broadcast_adopt(
+    link: Option<&CommLink>,
+    wc: &mut WorkerComm,
+    b: &Broadcast,
+) -> Result<Adopt> {
+    match b {
+        Broadcast::Literals(list) => {
+            if let Some(l) = link {
+                l.adopt_literals(wc, list)?;
+            }
+            Ok(list.clone())
+        }
+        Broadcast::Encoded { frag, bytes } => {
+            let l = link.ok_or_else(|| {
+                anyhow!("drive: encoded broadcast without a comm link")
+            })?;
+            l.adopt_encoded(wc, *frag, bytes)
+        }
+    }
+}
+
 /// Run one training schedule over the replicas, parallelizing the
 /// inner loop across `plan.workers` threads. On return `replicas`
 /// holds the final states (broadcasts applied), whatever the worker
 /// count; `sync`, when supplied, has performed every due outer step.
 ///
-/// When `sync` carries a lossy codec, replicas must enter with state
-/// equal to the sync'd global for the synced leaves (Algorithm 1
-/// line 2 guarantees this) — the comm snapshot is captured here,
-/// before the first inner step.
+/// When `sync` carries a lossy codec on either wire, replicas must
+/// enter with state equal to the sync'd global for the synced leaves
+/// (Algorithm 1 line 2 guarantees this) — each worker's shared comm
+/// snapshot is captured here, before the first inner step.
 pub fn drive<E: InnerEngine>(
     engine: &E,
     replicas: &mut Vec<ReplicaState>,
@@ -201,36 +270,87 @@ pub fn drive<E: InnerEngine>(
     }
     let workers = plan.workers.clamp(1, m);
 
-    // Comm-side state: the shared encoder recipe plus one CommState
-    // per replica (snapshot of the global + error-feedback residual),
-    // captured before any step moves the state off the init. Identity
-    // codecs take none of this: they keep the PR 2 zero-copy literal
-    // handoff (OuterSync::sync counts their wire bytes itself), so the
-    // encode detour — and its arenas — exist only for lossy codecs.
-    let encoder: Option<SyncEncoder> = match sync.as_deref() {
-        Some(s) if !s.codec().is_identity() => Some(s.encoder()),
-        _ => None,
+    // Comm-side recipe: both channels of the plane, shared by every
+    // worker. Identity/identity runs take none of this — they keep
+    // the PR 2 zero-copy literal handoff (OuterSync::sync counts their
+    // wire bytes itself), so the comm arenas exist only when a wire is
+    // actually lossy.
+    let link: Option<CommLink> = match sync.as_deref() {
+        Some(s) => {
+            let l = s.link();
+            l.is_active().then_some(l)
+        }
+        None => None,
     };
-    let mut comm: Vec<CommState> = (0..m).map(|_| CommState::default()).collect();
-    if let Some(enc) = &encoder {
-        for (rep, cm) in replicas.iter().zip(comm.iter_mut()) {
-            enc.init_snapshot(cm, &rep.state)?;
+    // coordinator-side down-wire arenas are sized once at build, so
+    // they can be accounted now, before `sync` moves into coordinate()
+    let down_wire_arena_bytes = sync
+        .as_deref()
+        .and_then(|s| s.down())
+        .map_or(0, |dw| dw.arena_bytes());
+
+    // The shared per-worker snapshot (and the down-wire's single view
+    // stream, both initialized from the coordinator's global) require
+    // every replica to enter AT the sync'd global — the documented
+    // Algorithm 1 line 2 precondition. A violation under per-replica
+    // snapshots (PR 3) was merely odd; under shared snapshots it would
+    // bias every view-referenced outer gradient by the offset, so
+    // fail loud: each replica is checked bitwise against the sync
+    // engine's global (replicas that share replica 0's literal `Arc`s
+    // — the common case — pay one pointer compare, not a read).
+    if link.is_some() {
+        let s = sync.as_deref().expect("link implies sync");
+        let layout = Arc::clone(s.global().layout());
+        let global = s.global().data();
+        for (r, rep) in replicas.iter().enumerate() {
+            for leaf in 0..layout.n_leaves().min(plan.n_params) {
+                if r > 0 && Arc::ptr_eq(&rep.state[leaf], &replicas[0].state[leaf]) {
+                    continue; // replica 0 already vouched for this literal
+                }
+                let v = rep.state[leaf].to_vec::<f32>()?;
+                let want = &global[layout.range(leaf)];
+                if v.len() != want.len()
+                    || v.iter().zip(want).any(|(x, y)| x.to_bits() != y.to_bits())
+                {
+                    bail!(
+                        "drive: lossy comm wires require every replica to enter \
+                         at the sync'd global (Algorithm 1 line 2), but replica \
+                         {r} leaf {leaf} differs from the sync engine's global"
+                    );
+                }
+            }
         }
     }
 
     if workers == 1 {
-        let mut exec = InlineExec {
-            engine,
-            replicas: &mut replicas[..],
-            n_params: plan.n_params,
-            encoder: encoder.as_ref(),
-            comm: &mut comm,
-        };
-        let (outcome, pending) = coordinate(engine, &mut exec, sync, plan, m)?;
-        // final broadcast (the full flush at t = total_steps)
-        for rep in replicas.iter_mut() {
-            rep.adopt(&pending);
+        let mut wc = WorkerComm::default();
+        let mut rcs: Vec<ReplicaComm> = (0..m).map(|_| ReplicaComm::default()).collect();
+        if let Some(l) = &link {
+            l.init_snapshot(&mut wc, &replicas[0].state)?;
+            for rc in rcs.iter_mut() {
+                l.init_replica(rc);
+            }
         }
+        let (outcome, pending) = {
+            let mut exec = InlineExec {
+                engine,
+                replicas: &mut replicas[..],
+                n_params: plan.n_params,
+                link: link.as_ref(),
+                wc: &mut wc,
+                rcs: &mut rcs,
+            };
+            coordinate(engine, &mut exec, sync, plan, m)?
+        };
+        // final broadcast (the full flush at t = total_steps)
+        let adopt = broadcast_adopt(link.as_ref(), &mut wc, &pending)?;
+        for rep in replicas.iter_mut() {
+            rep.adopt(&adopt);
+        }
+        let mut outcome = outcome;
+        outcome.comm_arena_bytes =
+            wc.arena_bytes() + rcs.iter().map(|rc| rc.arena_bytes()).sum::<u64>();
+        outcome.down_wire_arena_bytes = down_wire_arena_bytes;
         return Ok(outcome);
     }
 
@@ -239,22 +359,33 @@ pub fn drive<E: InnerEngine>(
         // Partition ownership: replica r lives on worker r % workers
         // for the whole run (its TokenStream and comm residual advance
         // only there).
-        let mut owned: Vec<Vec<(usize, ReplicaState, CommState)>> =
+        let mut owned: Vec<Vec<(usize, ReplicaState, ReplicaComm)>> =
             (0..workers).map(|_| Vec::new()).collect();
-        for (r, (rep, cm)) in replicas.drain(..).zip(comm).enumerate() {
-            owned[r % workers].push((r, rep, cm));
+        for (r, rep) in replicas.drain(..).enumerate() {
+            let mut rc = ReplicaComm::default();
+            if let Some(l) = &link {
+                l.init_replica(&mut rc);
+            }
+            owned[r % workers].push((r, rep, rc));
         }
         let mut txs = Vec::with_capacity(workers);
         let mut rxs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for set in owned {
+            // one shared arena set per worker, snapshotted from any of
+            // its replicas (all identical at t=0 — Algorithm 1 line 2)
+            let mut wc = WorkerComm::default();
+            if let Some(l) = &link {
+                let (_, rep, _) = set.first().expect("each worker owns >= 1 replica");
+                l.init_snapshot(&mut wc, &rep.state)?;
+            }
             let (cmd_tx, cmd_rx) = channel::<Cmd>();
             let (res_tx, res_rx) = channel::<Result<WorkerReport>>();
             txs.push(cmd_tx);
             rxs.push(res_rx);
-            let enc = encoder.clone();
+            let lk = link.clone();
             handles.push(
-                scope.spawn(move || worker_loop(engine, n_params, enc, set, cmd_rx, res_tx)),
+                scope.spawn(move || worker_loop(engine, n_params, lk, wc, set, cmd_rx, res_tx)),
             );
         }
 
@@ -265,28 +396,41 @@ pub fn drive<E: InnerEngine>(
         // succeeded; workers apply the final broadcast before exiting.
         let pending = match &res {
             Ok((_, p)) => p.clone(),
-            Err(_) => Vec::new(),
+            Err(_) => Broadcast::empty(),
         };
         for tx in &exec.txs {
             let _ = tx.send(Cmd::Finish {
-                adopt: pending.clone(),
+                broadcast: pending.clone(),
             });
         }
         drop(exec); // closes the command channels
         let mut returned: Vec<(usize, ReplicaState)> = Vec::with_capacity(m);
+        let mut comm_bytes = 0u64;
         let mut panicked = false;
+        let mut finish_err: Option<anyhow::Error> = None;
         for h in handles {
             match h.join() {
-                Ok(set) => returned.extend(set),
+                Ok((set, bytes, finish)) => {
+                    returned.extend(set);
+                    comm_bytes += bytes;
+                    if let Err(e) = finish {
+                        finish_err.get_or_insert(e);
+                    }
+                }
                 Err(_) => panicked = true,
             }
         }
         returned.sort_by_key(|(r, _)| *r);
         replicas.extend(returned.into_iter().map(|(_, rep)| rep));
-        let (outcome, _) = res?;
+        let (mut outcome, _) = res?;
         if panicked || replicas.len() != m {
             bail!("drive: a worker panicked; replica states were lost");
         }
+        if let Some(e) = finish_err {
+            return Err(e.context("drive: final broadcast failed on a worker"));
+        }
+        outcome.comm_arena_bytes = comm_bytes;
+        outcome.down_wire_arena_bytes = down_wire_arena_bytes;
         Ok(outcome)
     })
 }
@@ -300,7 +444,7 @@ trait SegmentExec {
         &mut self,
         from: usize,
         to: usize,
-        adopt: &Adopt,
+        broadcast: &Broadcast,
         encode: Option<&EncodeSpec>,
     ) -> Result<SegmentData>;
 }
@@ -334,16 +478,21 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
     mut sync: Option<&mut OuterSync>,
     plan: &DrivePlan,
     m: usize,
-) -> Result<(DriveOutcome, Adopt)> {
+) -> Result<(DriveOutcome, Broadcast)> {
     let diloco = sync.is_some();
-    // Lossy codecs route through the encoded wire; identity runs keep
-    // the zero-copy literal handoff into OuterSync::sync.
+    // Lossy up-wires route through the encoded wire; identity runs
+    // keep the zero-copy literal handoff into OuterSync::sync.
     let wire_codec = sync
         .as_deref()
         .map(|b| !b.codec().is_identity())
         .unwrap_or(false);
+    // Lossy down-wires broadcast encoded bytes instead of literals.
+    let wire_down = sync
+        .as_deref()
+        .map(|b| !b.down_codec().is_identity())
+        .unwrap_or(false);
     let mut out = DriveOutcome::default();
-    let mut pending: Adopt = Vec::new();
+    let mut pending = Broadcast::empty();
     let mut t0 = 0usize;
     while t0 < plan.total_steps {
         let t1 = next_boundary(t0, plan, diloco);
@@ -359,7 +508,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             None
         };
         let (losses, payloads) = exec.run_segment(t0, t1, &pending, spec.as_ref())?;
-        pending.clear();
+        pending = Broadcast::empty();
 
         // Per-step mean loss, summed in replica index order — the same
         // order as the sequential loop, so results are bit-identical.
@@ -397,7 +546,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
 
         // Outer synchronization at the boundary (Algorithm 1 lines
         // 8-12): barrier already passed, payloads in hand — encoded
-        // wire frames under a lossy codec, literal handles otherwise.
+        // wire frames under a lossy up-wire, literal handles otherwise.
         if let Some(bus) = sync.as_deref_mut() {
             if wire_codec {
                 let frames: Vec<&[u8]> = payloads
@@ -423,14 +572,26 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
                 bus.sync(&parts, frag)?;
             }
             out.outer_syncs += 1;
-            // Broadcast = the next segment's adopt list: every
-            // replica gets the same freshly-uploaded literal per
-            // synced leaf (N uploads, never M×N).
-            let lits = bus.global_literals();
-            pending = bus
-                .synced_leaves(frag)
-                .map(|leaf| (leaf, Arc::clone(&lits[leaf])))
-                .collect();
+            // Broadcast = the next segment's payload: the deduplicated
+            // freshly-uploaded literal per synced leaf (identity
+            // down-wire: N uploads, never M×N), or the DownWire's
+            // single encoded fragment (lossy down-wire: one
+            // allocation, decoded once per worker).
+            pending = if wire_down {
+                Broadcast::Encoded {
+                    frag,
+                    bytes: bus.take_broadcast_bytes().ok_or_else(|| {
+                        anyhow!("drive: lossy down-wire produced no broadcast payload")
+                    })?,
+                }
+            } else {
+                let lits = bus.global_literals();
+                Broadcast::Literals(
+                    bus.synced_leaves(frag)
+                        .map(|leaf| (leaf, Arc::clone(&lits[leaf])))
+                        .collect(),
+                )
+            };
         }
 
         // Eval due exactly at the boundary sees the post-sync model
@@ -461,8 +622,9 @@ struct InlineExec<'a, E: InnerEngine> {
     engine: &'a E,
     replicas: &'a mut [ReplicaState],
     n_params: usize,
-    encoder: Option<&'a SyncEncoder>,
-    comm: &'a mut Vec<CommState>,
+    link: Option<&'a CommLink>,
+    wc: &'a mut WorkerComm,
+    rcs: &'a mut Vec<ReplicaComm>,
 }
 
 impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
@@ -470,14 +632,12 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
         &mut self,
         from: usize,
         to: usize,
-        adopt: &Adopt,
+        broadcast: &Broadcast,
         encode: Option<&EncodeSpec>,
     ) -> Result<SegmentData> {
-        for (rep, cm) in self.replicas.iter_mut().zip(self.comm.iter_mut()) {
-            rep.adopt(adopt);
-            if let Some(enc) = self.encoder {
-                enc.adopt(cm, adopt)?;
-            }
+        let adopt = broadcast_adopt(self.link, self.wc, broadcast)?;
+        for rep in self.replicas.iter_mut() {
+            rep.adopt(&adopt);
         }
         let m = self.replicas.len();
         let mut losses = vec![Vec::with_capacity(to - from); m];
@@ -489,18 +649,20 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
         }
         let payloads: Vec<SyncPayload> = match encode {
             Some(spec) => {
-                let enc = self.encoder.ok_or_else(|| {
-                    anyhow!("drive: encode requested without a sync encoder")
+                let link = self.link.ok_or_else(|| {
+                    anyhow!("drive: encode requested without a comm link")
                 })?;
+                let wc = &mut *self.wc;
                 self.replicas
                     .iter()
-                    .zip(self.comm.iter_mut())
+                    .zip(self.rcs.iter_mut())
                     .enumerate()
-                    .map(|(r, (rep, cm))| {
-                        Ok(SyncPayload::Encoded(enc.encode_replica(
+                    .map(|(r, (rep, rc))| {
+                        Ok(SyncPayload::Encoded(link.encode_replica(
                             r,
                             &rep.state,
-                            cm,
+                            wc,
+                            rc,
                             spec.frag,
                             spec.sync_index,
                         )?))
@@ -520,16 +682,16 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
 // ---- worker pool ------------------------------------------------------
 
 enum Cmd {
-    /// Adopt the broadcast literals, run steps (from, to], then build
-    /// the boundary payload (encoded when `encode` is set).
+    /// Apply the broadcast, run steps (from, to], then build the
+    /// boundary payload (encoded when `encode` is set).
     Run {
         from: usize,
         to: usize,
-        adopt: Adopt,
+        broadcast: Broadcast,
         encode: Option<EncodeSpec>,
     },
-    /// Adopt the final broadcast and exit, returning replica ownership.
-    Finish { adopt: Adopt },
+    /// Apply the final broadcast and exit, returning replica ownership.
+    Finish { broadcast: Broadcast },
 }
 
 struct WorkerReport {
@@ -540,59 +702,73 @@ struct WorkerReport {
 fn worker_loop<E: InnerEngine>(
     engine: &E,
     n_params: usize,
-    encoder: Option<SyncEncoder>,
-    mut owned: Vec<(usize, ReplicaState, CommState)>,
+    link: Option<CommLink>,
+    mut wc: WorkerComm,
+    mut owned: Vec<(usize, ReplicaState, ReplicaComm)>,
     rx: Receiver<Cmd>,
     tx: Sender<Result<WorkerReport>>,
-) -> Vec<(usize, ReplicaState)> {
+) -> (Vec<(usize, ReplicaState)>, u64, Result<()>) {
+    let mut finish: Result<()> = Ok(());
     while let Ok(cmd) = rx.recv() {
         match cmd {
             Cmd::Run {
                 from,
                 to,
-                adopt,
+                broadcast,
                 encode,
             } => {
                 let mut report = WorkerReport {
                     reps: Vec::with_capacity(owned.len()),
                 };
                 let mut err: Option<anyhow::Error> = None;
-                'replicas: for (rid, rep, cm) in owned.iter_mut() {
-                    rep.adopt(&adopt);
-                    if let Some(enc) = &encoder {
-                        if let Err(e) = enc.adopt(cm, &adopt) {
-                            err = Some(e);
-                            break 'replicas;
+                // the broadcast is decoded (or the snapshot refreshed)
+                // once per worker; every owned replica adopts the same
+                // literal set
+                match broadcast_adopt(link.as_ref(), &mut wc, &broadcast) {
+                    Ok(adopt) => {
+                        for (_, rep, _) in owned.iter_mut() {
+                            rep.adopt(&adopt);
                         }
                     }
-                    let mut losses = Vec::with_capacity(to - from);
-                    for t in from + 1..=to {
-                        match engine.inner_step(*rid, rep, t) {
-                            Ok(l) => losses.push(l),
-                            Err(e) => {
-                                err = Some(e);
-                                break 'replicas;
-                            }
-                        }
-                    }
-                    let payload = match (&encode, &encoder) {
-                        (Some(spec), Some(enc)) => {
-                            match enc.encode_replica(*rid, &rep.state, cm, spec.frag, spec.sync_index)
-                            {
-                                Ok(bytes) => SyncPayload::Encoded(bytes),
+                    Err(e) => err = Some(e),
+                }
+                if err.is_none() {
+                    'replicas: for (rid, rep, rc) in owned.iter_mut() {
+                        let mut losses = Vec::with_capacity(to - from);
+                        for t in from + 1..=to {
+                            match engine.inner_step(*rid, rep, t) {
+                                Ok(l) => losses.push(l),
                                 Err(e) => {
                                     err = Some(e);
                                     break 'replicas;
                                 }
                             }
                         }
-                        (Some(_), None) => {
-                            err = Some(anyhow!("worker: encode requested without an encoder"));
-                            break 'replicas;
-                        }
-                        (None, _) => SyncPayload::Params(rep.state[..n_params].to_vec()),
-                    };
-                    report.reps.push((*rid, losses, payload));
+                        let payload = match (&encode, &link) {
+                            (Some(spec), Some(l)) => {
+                                match l.encode_replica(
+                                    *rid,
+                                    &rep.state,
+                                    &mut wc,
+                                    rc,
+                                    spec.frag,
+                                    spec.sync_index,
+                                ) {
+                                    Ok(bytes) => SyncPayload::Encoded(bytes),
+                                    Err(e) => {
+                                        err = Some(e);
+                                        break 'replicas;
+                                    }
+                                }
+                            }
+                            (Some(_), None) => {
+                                err = Some(anyhow!("worker: encode requested without a comm link"));
+                                break 'replicas;
+                            }
+                            (None, _) => SyncPayload::Params(rep.state[..n_params].to_vec()),
+                        };
+                        report.reps.push((*rid, losses, payload));
+                    }
                 }
                 let msg = match err {
                     Some(e) => Err(e),
@@ -603,15 +779,30 @@ fn worker_loop<E: InnerEngine>(
                     break;
                 }
             }
-            Cmd::Finish { adopt } => {
-                for (_, rep, _) in owned.iter_mut() {
-                    rep.adopt(&adopt);
+            Cmd::Finish { broadcast } => {
+                // a failed final broadcast must fail the run (the
+                // inline path propagates the same error with `?`), so
+                // it travels back through the join value — the result
+                // channel is already torn down at shutdown
+                match broadcast_adopt(link.as_ref(), &mut wc, &broadcast) {
+                    Ok(adopt) => {
+                        for (_, rep, _) in owned.iter_mut() {
+                            rep.adopt(&adopt);
+                        }
+                    }
+                    Err(e) => finish = Err(e),
                 }
                 break;
             }
         }
     }
-    owned.into_iter().map(|(r, rep, _)| (r, rep)).collect()
+    let comm_bytes =
+        wc.arena_bytes() + owned.iter().map(|(_, _, rc)| rc.arena_bytes()).sum::<u64>();
+    (
+        owned.into_iter().map(|(r, rep, _)| (r, rep)).collect(),
+        comm_bytes,
+        finish,
+    )
 }
 
 struct PoolExec {
@@ -625,14 +816,14 @@ impl SegmentExec for PoolExec {
         &mut self,
         from: usize,
         to: usize,
-        adopt: &Adopt,
+        broadcast: &Broadcast,
         encode: Option<&EncodeSpec>,
     ) -> Result<SegmentData> {
         for tx in &self.txs {
             tx.send(Cmd::Run {
                 from,
                 to,
-                adopt: adopt.clone(),
+                broadcast: broadcast.clone(),
                 encode: encode.cloned(),
             })
             .map_err(|_| anyhow!("worker hung up before segment ({from}, {to}]"))?;
@@ -668,8 +859,10 @@ impl SegmentExec for PoolExec {
 fn _assert_send() {
     fn ok<T: Send>() {}
     ok::<ReplicaState>();
-    ok::<CommState>();
-    ok::<SyncEncoder>();
+    ok::<WorkerComm>();
+    ok::<ReplicaComm>();
+    ok::<CommLink>();
+    ok::<Broadcast>();
     ok::<SyncPayload>();
     ok::<Cmd>();
     ok::<WorkerReport>();
@@ -769,6 +962,8 @@ mod tests {
             assert_eq!(out.step_losses[4], 5.0);
             assert_eq!(reps.len(), 3, "replica ownership must return");
             assert_eq!(out.outer_syncs, 0);
+            // no comm wire => no comm arenas, whatever the worker count
+            assert_eq!(out.comm_arena_bytes, 0);
         }
     }
 }

@@ -12,12 +12,18 @@
 //!    element-wise loops over the fragment's precomputed offset ranges
 //!    (zero allocation in coordinator code);
 //! 3. **publish** — each synced leaf is uploaded to a literal exactly
-//!    **once** and cached; the coordinator broadcasts by handing every
-//!    replica the same immutable `Arc<xla::Literal>`, cutting
-//!    host→device traffic from M×N to N literals per full sync. The
-//!    cache doubles as the global model's literal form for the eval and
-//!    downstream paths (which previously re-uploaded all N leaves per
-//!    eval); a sync invalidates only the fragment it touched.
+//!    **once** and cached; the cache is the global model's literal
+//!    form for the eval and downstream paths (which previously
+//!    re-uploaded all N leaves per eval); a sync invalidates only the
+//!    fragment it touched. Under an identity down-wire the coordinator
+//!    broadcasts by handing every replica the same immutable
+//!    `Arc<xla::Literal>`, cutting host→device traffic from M×N to N
+//!    literals per full sync. Under a lossy down-wire
+//!    (`--outer-bits-down` below 32) the broadcast is instead encoded
+//!    **once** through the coordinator-owned [`DownWire`] — quantized,
+//!    error-compensated against the replicas' running view — and the
+//!    single byte payload is what crosses the wire; workers decode it
+//!    into their shared snapshot (see `crate::comm`).
 //!
 //! Literals are never mutated after construction (PJRT treats inputs
 //! as immutable and copies to device), so sharing one literal across
@@ -30,7 +36,7 @@
 //! [`OuterSync::sync_encoded`] ingests the wire payloads the pool
 //! workers encode with the run's lossy [`Codec`] — the reduce half of
 //! the quantize→reduce→dequantize contract (see `crate::comm`). Both
-//! count exact wire bytes into [`WireStats`].
+//! count exact wire bytes into [`WireStats`], in both directions.
 
 use std::ops::Range;
 use std::sync::Arc;
@@ -38,7 +44,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::comm::codec::{codec_for, Codec, OuterBits};
-use crate::comm::{SyncEncoder, WireStats};
+use crate::comm::{Channel, CommLink, Direction, DownWire, WireStats};
 use crate::runtime::{FlatLayout, FlatParams, HostTensor};
 
 use super::outer_opt::{acc_add, acc_finish, acc_scale, OuterOpt};
@@ -59,10 +65,20 @@ pub struct OuterSync {
     /// Cached literal per leaf — the global model as the device sees
     /// it. Every entry is shared (never rebuilt) until its leaf syncs.
     lits: Vec<Arc<xla::Literal>>,
-    /// Wire codec for encoded syncs (identity f32 unless the run
+    /// Up-wire codec for encoded syncs (identity f32 unless the run
     /// compresses outer communication — `--outer-bits`).
     codec: Arc<dyn Codec>,
-    /// Seed the replica-side encoders derive stochastic rounding from.
+    /// Down-wire codec for the broadcast (`--outer-bits-down`).
+    down_codec: Arc<dyn Codec>,
+    /// Coordinator-owned down-wire state: the replicas' running view
+    /// of the global + the broadcast's error-feedback residual. None
+    /// for identity down-wires (zero-copy literal handoff).
+    down: Option<DownWire>,
+    /// The last sync's encoded broadcast, awaiting pickup by the
+    /// driver (lossy down-wires only; one allocation, `Arc`-shared by
+    /// every worker).
+    pending_down: Option<Arc<Vec<u8>>>,
+    /// Seed both channels derive stochastic rounding from.
     run_seed: u64,
     /// Exact bytes moved per sync/fragment/replica.
     wire: WireStats,
@@ -105,33 +121,91 @@ impl OuterSync {
             full,
             lits: init_lits,
             codec: codec_for(OuterBits::Fp32),
+            down_codec: codec_for(OuterBits::Fp32),
+            down: None,
+            pending_down: None,
             run_seed: 0,
             wire: WireStats::default(),
         })
     }
 
-    /// Attach a wire codec (and the run seed its stochastic rounding
-    /// derives from). Default is the identity f32 codec.
+    /// Attach the up-wire codec (and the run seed both channels derive
+    /// stochastic rounding from). Default is the identity f32 codec.
     pub fn with_codec(mut self, codec: Arc<dyn Codec>, run_seed: u64) -> OuterSync {
         self.codec = codec;
         self.run_seed = run_seed;
+        self.rebuild_down();
         self
+    }
+
+    /// Attach the down-wire (broadcast) codec. Identity keeps the
+    /// zero-copy literal handoff; lossy codecs build the coordinator's
+    /// [`DownWire`] with the view initialized to the current global
+    /// (call at setup, before any sync moves the global off the init).
+    pub fn with_down_codec(mut self, codec: Arc<dyn Codec>) -> OuterSync {
+        self.down_codec = codec;
+        self.rebuild_down();
+        self
+    }
+
+    fn rebuild_down(&mut self) {
+        self.down = if self.down_codec.is_identity() {
+            None
+        } else {
+            Some(DownWire::new(
+                Channel::new(
+                    Arc::clone(self.global.layout()),
+                    Arc::clone(&self.down_codec),
+                    self.fragments,
+                    self.run_seed,
+                    Direction::Down,
+                ),
+                self.global.data(),
+            ))
+        };
     }
 
     pub fn codec(&self) -> &Arc<dyn Codec> {
         &self.codec
     }
 
-    /// The replica-side encoder matching this sync engine (same
-    /// layout, codec, fragment count, and seed) — what the pool hands
-    /// to its workers.
-    pub fn encoder(&self) -> SyncEncoder {
-        SyncEncoder::new(
-            Arc::clone(self.global.layout()),
-            Arc::clone(&self.codec),
-            self.fragments,
-            self.run_seed,
+    pub fn down_codec(&self) -> &Arc<dyn Codec> {
+        &self.down_codec
+    }
+
+    /// The coordinator-side down-wire state (None while the broadcast
+    /// is identity) — exposed for tests.
+    pub fn down(&self) -> Option<&DownWire> {
+        self.down.as_ref()
+    }
+
+    /// Both legs of the comm plane as the pool's workers see them
+    /// (same layout, codecs, fragment count, and seed).
+    pub fn link(&self) -> CommLink {
+        let layout = Arc::clone(self.global.layout());
+        CommLink::new(
+            Channel::new(
+                Arc::clone(&layout),
+                Arc::clone(&self.codec),
+                self.fragments,
+                self.run_seed,
+                Direction::Up,
+            ),
+            Channel::new(
+                layout,
+                Arc::clone(&self.down_codec),
+                self.fragments,
+                self.run_seed,
+                Direction::Down,
+            ),
         )
+    }
+
+    /// Take the last sync's encoded broadcast payload (lossy
+    /// down-wires only; the driver attaches it to the next segment's
+    /// command, one allocation shared by every worker).
+    pub fn take_broadcast_bytes(&mut self) -> Option<Arc<Vec<u8>>> {
+        self.pending_down.take()
     }
 
     /// Exact wire traffic so far (one record per sync event).
@@ -163,8 +237,15 @@ impl OuterSync {
     /// One outer synchronization. `replica_params[r]` is replica r's
     /// current parameter literals (manifest leaf order, length
     /// n_leaves). After this returns, `global_literals()` holds the
-    /// refreshed leaves; the caller broadcasts by cloning those `Arc`s
-    /// into each replica's state.
+    /// refreshed leaves. How the caller must broadcast depends on the
+    /// down-wire: at the identity width, clone those `Arc`s into each
+    /// replica's state (the zero-copy handoff); under a lossy
+    /// `with_down_codec`, the replicas must instead receive this
+    /// sync's [`OuterSync::take_broadcast_bytes`] payload and decode
+    /// it (`CommLink::adopt_encoded`) — adopting the exact global
+    /// literals would desynchronize the replicas from the
+    /// [`DownWire`]'s view, which is the reference the next outer
+    /// gradient is measured against.
     pub fn sync(
         &mut self,
         replica_params: &[&[Arc<xla::Literal>]],
@@ -206,14 +287,23 @@ impl OuterSync {
             }
         }
 
-        // 2. finish Delta = global - acc/M and take the Nesterov step.
+        // 2. finish Delta = reference - acc/M and take the Nesterov
+        // step. The reference is what the replicas actually started
+        // this round from: the broadcast view under a lossy down-wire
+        // (the outer gradient must measure replica movement only —
+        // the global-vs-view lag is carried by the down-wire's error
+        // feedback and re-broadcast, never double-counted into the
+        // outer step), the exact global otherwise (identical values
+        // when the broadcast is exact). The lossy up-wire path agrees:
+        // its deltas are formed against the worker snapshot, which
+        // tracks the same view.
         let m = replica_params.len() as f32;
         for r in ranges {
-            acc_finish(
-                &mut self.acc.data_mut()[r.clone()],
-                &self.global.data()[r.clone()],
-                m,
-            );
+            let reference = match &self.down {
+                Some(dw) => &dw.view()[r.clone()],
+                None => &self.global.data()[r.clone()],
+            };
+            acc_finish(&mut self.acc.data_mut()[r.clone()], reference, m);
         }
         self.opt.step_ranges(&mut self.global, &self.acc, ranges);
 
@@ -222,12 +312,15 @@ impl OuterSync {
     }
 
     /// Shared tail of both sync entry points: upload each refreshed
-    /// leaf exactly once (Arc-shared by all readers) and record the
-    /// sync's wire traffic. `bytes_per_replica` is the encoded payload
-    /// size, or `None` for the raw-f32 literal path (4 bytes/element).
-    /// The broadcast is counted at 4 bytes/element — the down-wire is
-    /// still f32 whatever the up-wire codec (ROADMAP: quantized
-    /// broadcast would change only this function).
+    /// leaf exactly once (Arc-shared by the eval path and, under an
+    /// identity down-wire, by every replica), drive the down-wire, and
+    /// record the sync's wire traffic. `bytes_per_replica` is the
+    /// encoded up payload size, or `None` for the raw-f32 literal path
+    /// (4 bytes/element). The broadcast is counted **once** per sync —
+    /// a bandwidth-optimal broadcast costs ~one payload regardless of
+    /// the fan-out — at the down-wire codec's exact encoded size: the
+    /// measured bytes of the [`DownWire`] payload when the broadcast
+    /// is lossy, `4 * elems` under the identity f32 codec.
     fn publish_and_record(
         &mut self,
         frag: Option<usize>,
@@ -242,12 +335,39 @@ impl OuterSync {
             Some(f) => &self.frag_ranges[f],
             None => &self.full,
         };
+        let sync_index = self.wire.syncs();
+        let bytes_down = match &mut self.down {
+            Some(dw) => {
+                // the view advances with every encode, so a dropped
+                // payload would silently desynchronize the replicas
+                // from the reference the outer gradient is measured
+                // against — refuse instead
+                if self.pending_down.is_some() {
+                    bail!(
+                        "outer sync: the previous broadcast payload was never \
+                         taken — lossy down-wire callers must ship \
+                         take_broadcast_bytes() to the replicas before the \
+                         next sync"
+                    );
+                }
+                // encode the broadcast fragment once for all replicas;
+                // the driver ships these bytes to every worker
+                let bytes = dw.encode_broadcast(self.global.data(), frag, sync_index)?;
+                let n = bytes.len() as u64;
+                self.pending_down = Some(Arc::new(bytes));
+                n
+            }
+            None => ranges
+                .iter()
+                .map(|r| self.down_codec.wire_bytes(r.len()) as u64)
+                .sum(),
+        };
         let elems: u64 = ranges.iter().map(|r| r.len() as u64).sum();
         self.wire.record(
             frag,
             replicas,
             bytes_per_replica.unwrap_or(elems * 4),
-            elems * 4,
+            bytes_down,
         );
         Ok(())
     }
@@ -255,7 +375,7 @@ impl OuterSync {
     /// One outer synchronization from **encoded wire payloads** — the
     /// reduce half of the quantize→reduce→dequantize contract (see
     /// `crate::comm`). `payloads[r]` is replica r's contribution for
-    /// the due fragment, produced by this engine's [`SyncEncoder`]:
+    /// the due fragment, produced by this engine's [`CommLink`]:
     /// raw f32 parameters under the identity codec (making this
     /// bit-identical to [`OuterSync::sync`] on the same values), or
     /// error-compensated quantized outer deltas under a lossy codec.
@@ -306,17 +426,19 @@ impl OuterSync {
         }
 
         // 2. finish the outer gradient and take the Nesterov step.
-        // Identity payloads hold theta: Delta = global - acc/M (the
-        // legacy summation, bit for bit). Lossy payloads hold dq(delta):
-        // Delta = acc/M directly.
+        // Identity payloads hold theta: Delta = reference - acc/M,
+        // where the reference is the broadcast view under a lossy
+        // down-wire and the exact global otherwise (the legacy
+        // summation, bit for bit — see `sync` for why the view).
+        // Lossy payloads hold dq(delta): Delta = acc/M directly.
         let m = payloads.len() as f32;
         if self.codec.is_identity() {
             for r in ranges {
-                acc_finish(
-                    &mut self.acc.data_mut()[r.clone()],
-                    &self.global.data()[r.clone()],
-                    m,
-                );
+                let reference = match &self.down {
+                    Some(dw) => &dw.view()[r.clone()],
+                    None => &self.global.data()[r.clone()],
+                };
+                acc_finish(&mut self.acc.data_mut()[r.clone()], reference, m);
             }
         } else {
             for r in ranges {
@@ -417,7 +539,7 @@ mod tests {
 
     #[test]
     fn encoded_fp32_sync_matches_literal_sync() {
-        use crate::comm::CommState;
+        use crate::comm::{ReplicaComm, WorkerComm};
         let l = layout();
         let init = host(&l, 1.0);
         let mut legacy =
@@ -428,11 +550,14 @@ mod tests {
         let r1 = lits_of(&host(&l, 4.5));
         legacy.sync(&[&r0[..], &r1[..]], None).unwrap();
 
-        let enc = coded.encoder();
+        let link = coded.link();
+        let mut wc = WorkerComm::default();
         let mut payloads = Vec::new();
-        for lits in [&r0, &r1] {
-            let mut comm = CommState::default();
-            payloads.push(enc.encode_replica(0, lits, &mut comm, None, 0).unwrap());
+        for (r, lits) in [&r0, &r1].into_iter().enumerate() {
+            let mut rc = ReplicaComm::default();
+            payloads.push(
+                link.encode_replica(r, lits, &mut wc, &mut rc, None, 0).unwrap(),
+            );
         }
         let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
         coded.sync_encoded(&frames, None).unwrap();
@@ -448,6 +573,57 @@ mod tests {
         // short payloads are rejected
         assert!(coded.sync_encoded(&[&frames[0][1..]], None).is_err());
         assert!(coded.sync_encoded(&[], None).is_err());
+    }
+
+    #[test]
+    fn lossy_down_wire_records_encoded_broadcast_bytes() {
+        use crate::comm::{codec_for, OuterBits};
+        let l = layout(); // 8 elements total
+        let init = host(&l, 1.0);
+        let mut sync = OuterSync::new(Arc::clone(&l), &init, lits_of(&init), 1.0, 0.0, 2)
+            .unwrap()
+            .with_codec(codec_for(OuterBits::Fp32), 7)
+            .with_down_codec(codec_for(OuterBits::Int4));
+        assert!(sync.down().is_some());
+        assert!(sync.take_broadcast_bytes().is_none(), "no sync yet");
+        let r = lits_of(&host(&l, 5.0));
+        sync.sync(&[&r[..], &r[..]], Some(1)).unwrap(); // leaves {1,3}: 5 elems
+        let bytes = sync.take_broadcast_bytes().expect("lossy down must stash bytes");
+        let w = sync.wire_stats();
+        // down counted at the exact encoded size, not 4 B/elem
+        assert_eq!(w.records()[0].bytes_down, bytes.len() as u64);
+        assert!(w.records()[0].bytes_down < 5 * 4, "int4 < f32 broadcast");
+        // up stays the raw f32 literal path
+        assert_eq!(w.records()[0].bytes_per_replica, 5 * 4);
+        // the view tracks the refreshed global over the synced ranges
+        let dw = sync.down().unwrap();
+        let step_bound = 5.0 / 7.0 * 1.0001; // max|delta| / qmax
+        for range in [l.range(1), l.range(3)] {
+            for i in range {
+                let g = sync.global().data()[i];
+                assert!(
+                    (dw.view()[i] - g).abs() <= step_bound,
+                    "view[{i}] {} vs global {g}",
+                    dw.view()[i]
+                );
+            }
+        }
+        // eval cache still holds the exact global, not the lossy view
+        for leaf in [1usize, 3] {
+            let v = sync.global_literals()[leaf].to_vec::<f32>().unwrap();
+            for (x, i) in v.iter().zip(l.range(leaf)) {
+                assert_eq!(x.to_bits(), sync.global().data()[i].to_bits());
+            }
+        }
+        // taking twice yields nothing until the next sync
+        assert!(sync.take_broadcast_bytes().is_none());
+        // a sync whose payload is never shipped must fail loud rather
+        // than silently desynchronize replicas from the down view
+        sync.sync(&[&r[..], &r[..]], Some(0)).unwrap();
+        assert!(
+            sync.sync(&[&r[..], &r[..]], Some(0)).is_err(),
+            "un-taken broadcast payload must refuse the next sync"
+        );
     }
 
     #[test]

@@ -42,14 +42,38 @@ pub struct WalltimeInput {
     pub batch_tokens: f64,
     /// Cross-datacenter network (within-DC is always HIGH).
     pub cross_dc: Network,
-    /// Bits per parameter on the **outer-sync** wire (the H-cadence
-    /// cross-DC all-reduce). [`BITS_PER_PARAM`] (bf16) for
-    /// uncompressed runs; a run's `--outer-bits` width (32/16/8/4)
-    /// otherwise — the comm subsystem's quantized outer gradients
-    /// shrink exactly this term. Per-step gradient traffic (DP's
-    /// cross-DC all-reduce, DiLoCo's within-DC all-reduce) stays at
-    /// bf16, matching the paper's section-3 setup.
+    /// Bits per parameter on the **up leg** of the outer sync (the
+    /// H-cadence reduce of replica contributions — the reduce-scatter
+    /// half of a bandwidth-optimal all-reduce). [`BITS_PER_PARAM`]
+    /// (bf16) for uncompressed runs; a run's `--outer-bits` width
+    /// (32/16/8/4) otherwise — the comm subsystem's quantized outer
+    /// gradients shrink exactly this term. Per-step gradient traffic
+    /// (DP's cross-DC all-reduce, DiLoCo's within-DC all-reduce)
+    /// stays at bf16, matching the paper's section-3 setup.
     pub outer_bits: f64,
+    /// Bits per parameter on the **down leg** (the broadcast of the
+    /// refreshed global — the all-gather half). [`BITS_PER_PARAM`]
+    /// for uncompressed runs; a run's `--outer-bits-down` width
+    /// otherwise. With both legs equal the outer term collapses to
+    /// the classic symmetric all-reduce.
+    pub outer_bits_down: f64,
+}
+
+/// One H-cadence outer sync over `r` nodes: the reduce leg at the up
+/// width plus the broadcast leg at the down width. Each leg moves
+/// `size*(1 - 1/r)` bits per node in the bandwidth-optimal schedule
+/// (Patarasuk & Yuan), so with `bits_up == bits_down` this is exactly
+/// [`crate::netsim::allreduce_time`].
+pub fn outer_sync_time(
+    bits_up: f64,
+    bits_down: f64,
+    r: f64,
+    net: crate::netsim::Network,
+) -> f64 {
+    if r <= 1.0 {
+        return 0.0;
+    }
+    (bits_up + bits_down) / net.bandwidth_bps * (1.0 - 1.0 / r) + net.latency_s
 }
 
 #[derive(Debug, Clone)]
@@ -89,9 +113,11 @@ pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
     let chips = (input.batch_tokens / TOKENS_PER_CHIP).max(1.0);
     let compute = 6.0 * input.params * input.tokens / (chips * CHIP_FLOPS);
     // per-step gradient exchange is always bf16; the H-cadence outer
-    // sync moves outer gradients at the run's wire width
+    // sync moves outer gradients up at the run's up-wire width and the
+    // broadcast back down at its down-wire width
     let bits = input.params * BITS_PER_PARAM;
-    let outer_bits = input.params * input.outer_bits;
+    let bits_up = input.params * input.outer_bits;
+    let bits_down = input.params * input.outer_bits_down;
     let comm = match input.algo {
         WalltimeAlgo::DataParallel => {
             // all-reduce over all R chips across DCs, every step
@@ -103,7 +129,7 @@ pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
         } => {
             // per-step all-reduce like DP, plus outer sync every H
             allreduce_time(bits, chips, input.cross_dc) * steps
-                + allreduce_time(outer_bits, chips, input.cross_dc) * steps
+                + outer_sync_time(bits_up, bits_down, chips, input.cross_dc) * steps
                     / sync_every as f64
         }
         WalltimeAlgo::DiLoCo {
@@ -117,8 +143,8 @@ pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
                 + WITHIN_DC.latency_s)
                 * steps;
             // outer: all R chips across DCs, every H steps
-            let outer =
-                allreduce_time(outer_bits, chips, input.cross_dc) * steps / sync_every as f64;
+            let outer = outer_sync_time(bits_up, bits_down, chips, input.cross_dc) * steps
+                / sync_every as f64;
             inner + outer
         }
     };
@@ -143,6 +169,7 @@ mod tests {
             batch_tokens: 2f64.powi(20),
             cross_dc: net,
             outer_bits: BITS_PER_PARAM,
+            outer_bits_down: BITS_PER_PARAM,
         }
     }
 
@@ -227,9 +254,10 @@ mod tests {
 
     #[test]
     fn reduced_outer_bits_shrink_only_the_outer_term() {
-        // 4-bit outer gradients (paper section 7 / the comm subsystem)
-        // cut the H-cadence cross-DC term ~4x vs bf16; per-step inner
-        // traffic is untouched, and DP ignores the knob entirely.
+        // 4-bit wires on both legs (paper section 7 / the comm
+        // subsystem) cut the H-cadence cross-DC term ~4x vs bf16;
+        // per-step inner traffic is untouched, and DP ignores both
+        // knobs entirely.
         let algo = WalltimeAlgo::DiLoCo {
             replicas: 4,
             sync_every: 30,
@@ -237,6 +265,7 @@ mod tests {
         let mut a = base(algo, LOW);
         let bf16 = walltime(&a);
         a.outer_bits = 4.0;
+        a.outer_bits_down = 4.0;
         let int4 = walltime(&a);
         assert!(int4.comm_s < bf16.comm_s, "{} vs {}", int4.comm_s, bf16.comm_s);
         // isolate the outer term via an H -> inf run (inner only)
@@ -250,13 +279,52 @@ mod tests {
         // bandwidth term scales exactly 4x; latency terms dilute it a bit
         assert!(outer_int4 < outer_bf16 / 3.0, "{outer_int4} vs {outer_bf16}");
         assert!(outer_int4 > outer_bf16 / 16.0);
-        // DP: outer_bits is irrelevant (no outer sync exists)
+        // DP: neither knob is relevant (no outer sync exists)
         let mut dp = base(WalltimeAlgo::DataParallel, LOW);
         let t16 = walltime(&dp).comm_s;
         dp.outer_bits = 4.0;
+        dp.outer_bits_down = 4.0;
         assert_eq!(walltime(&dp).comm_s, t16);
-        // compute time never depends on the wire width
+        // compute time never depends on the wire widths
         assert_eq!(bf16.compute_s, int4.compute_s);
+    }
+
+    #[test]
+    fn down_leg_is_half_the_symmetric_outer_term() {
+        // Narrowing only the broadcast halves at most half the outer
+        // term: the up leg still ships bf16. The split model collapses
+        // to the classic all-reduce when both legs match.
+        let algo = WalltimeAlgo::DiLoCo {
+            replicas: 4,
+            sync_every: 30,
+        };
+        let mut inf = base(algo, LOW);
+        if let WalltimeAlgo::DiLoCo { sync_every, .. } = &mut inf.algo {
+            *sync_every = usize::MAX;
+        }
+        let inner_only = walltime(&inf).comm_s;
+        let outer_of = |up: f64, down: f64| {
+            let mut i = base(algo, LOW);
+            i.outer_bits = up;
+            i.outer_bits_down = down;
+            walltime(&i).comm_s - inner_only
+        };
+        let symmetric = outer_of(BITS_PER_PARAM, BITS_PER_PARAM);
+        // both-legs-equal == the pre-split allreduce_time model
+        let chips = walltime(&base(algo, LOW)).chips;
+        let classic = crate::netsim::allreduce_time(1e9 * BITS_PER_PARAM, chips, LOW)
+            * walltime(&base(algo, LOW)).steps
+            / 30.0;
+        assert!((symmetric - classic).abs() / classic < 1e-9);
+        // down-only narrowing lands strictly between half and full
+        let down4 = outer_of(BITS_PER_PARAM, 4.0);
+        assert!(down4 < symmetric && down4 > symmetric / 2.0, "{down4} vs {symmetric}");
+        // narrowing both beats narrowing either alone
+        let up4 = outer_of(4.0, BITS_PER_PARAM);
+        let both4 = outer_of(4.0, 4.0);
+        assert!(both4 < down4 && both4 < up4);
+        // the two single-leg narrows are symmetric in the model
+        assert!((down4 - up4).abs() / down4 < 1e-9);
     }
 
     #[test]

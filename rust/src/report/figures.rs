@@ -209,13 +209,18 @@ pub fn fig6_12(store: &SweepStore) -> String {
                         cross_dc: net,
                         // uncompressed runs modelled at bf16 (paper
                         // section 3 — this figure reproduces Appendix
-                        // A); compressed runs at their width. The comm
-                        // report (tables::table_comm) instead models
-                        // every run at its actual wire width.
+                        // A); compressed runs at their width, per leg.
+                        // The comm report (tables::table_comm) instead
+                        // models every run at its actual wire widths.
                         outer_bits: if r.outer_bits >= 32 {
                             BITS_PER_PARAM
                         } else {
                             r.outer_bits as f64
+                        },
+                        outer_bits_down: if r.outer_bits_down >= 32 {
+                            BITS_PER_PARAM
+                        } else {
+                            r.outer_bits_down as f64
                         },
                     });
                     writeln!(
@@ -265,6 +270,7 @@ pub fn fig6_12(store: &SweepStore) -> String {
                         batch_tokens: b,
                         cross_dc: net,
                         outer_bits: BITS_PER_PARAM,
+                        outer_bits_down: BITS_PER_PARAM,
                     });
                     writeln!(
                         s,

@@ -608,31 +608,46 @@ pub fn table_comm(store: &SweepStore) -> String {
     writeln!(s, "# Compressed outer communication — loss delta vs wire bytes\n").unwrap();
     writeln!(
         s,
-        "Per (model, M): the best run at each outer-gradient wire width \
-         (`--outer-bits`, sweep grid `comm`). Delta is measured against the \
-         32-bit run of the same (model, algo) family — the exact fp32 \
-         baseline, bit-identical to the uncompressed path. Wire columns are \
-         **exact encoded bytes counted on the bus** (up = replica → \
-         coordinator payloads, down = deduplicated f32 broadcast); netsim \
-         comm time is the Appendix-A model on the LOW archetype at the \
-         run's wire width.\n"
+        "Per (model, M): the best run at each (up, down) wire-width pair \
+         (`--outer-bits` / `--outer-bits-down`, sweep grid `comm`) — the \
+         symmetric ladder plus the two asymmetric corners that narrow one \
+         leg alone. Delta is measured against the 32/32 run of the same \
+         (model, algo) family — the exact fp32 baseline, bit-identical to \
+         the uncompressed path. Wire columns are **exact encoded bytes \
+         counted on the bus** (up = replica → coordinator payloads, \
+         counted per replica; down = the coordinator's single encoded \
+         broadcast per sync — quantized and error-compensated below 32 \
+         bits, a deduplicated f32 literal handoff at 32); netsim comm \
+         time is the Appendix-A model on the LOW archetype at the run's \
+         per-leg wire widths.\n"
     )
     .unwrap();
     writeln!(
         s,
-        "| model | algo | outer_bits | eval loss | delta vs fp32 | wire up (MiB) | wire down (MiB) | netsim comm_s (low) |"
+        "| model | algo | bits up/down | eval loss | delta vs fp32 | wire up (MiB) | wire down (MiB) | netsim comm_s (low) |"
     )
     .unwrap();
     writeln!(s, "|---|---|---|---|---|---|---|---|").unwrap();
     let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
     let mut rows = 0usize;
+    // the row set IS the comm grid's coverage (baseline first for
+    // display) — derived so grid and report can't drift apart
+    let pairs: Vec<(u32, u32)> = crate::sweep::grids::COMM_PAIRS
+        .iter()
+        .map(|&(u, d)| (u.bits(), d.bits()))
+        .collect();
+    // narrowest compressed pair first for the baseline-anchor search
+    let mut anchor_order: Vec<(u32, u32)> =
+        pairs.iter().copied().filter(|&p| p != (32, 32)).collect();
+    anchor_order.sort_by_key(|&(u, d)| u + d);
     for model in SWEEP_LADDER {
         for algo in &ALGOS[1..] {
-            let family = |bits: u32| {
+            let family = |up: u32, down: u32| {
                 store.best(|r| {
                     r.model == model
                         && r.algo == *algo
-                        && r.outer_bits == bits
+                        && r.outer_bits == up
+                        && r.outer_bits_down == down
                         && (r.overtrain - 1.0).abs() < 1e-9
                 })
             };
@@ -647,26 +662,28 @@ pub fn table_comm(store: &SweepStore) -> String {
             // deltas are measured against, and it must share the
             // compressed runs' hyperparameters exactly — otherwise the
             // delta conflates codec loss with tuning differences (the
-            // comm grid varies ONLY the width within a family). Anchor
-            // on the narrowest compressed run present; without any
+            // comm grid varies ONLY the widths within a family). Anchor
+            // on the narrowest compressed pair present; without any
             // compressed runs, fall back to the best fp32 run alone.
-            let anchor = [4u32, 8, 16].iter().filter_map(|&b| family(b)).next();
+            let anchor = anchor_order.iter().filter_map(|&(u, d)| family(u, d)).next();
             let base = match anchor {
                 Some(a) => store.best(|b| {
                     b.model == model
                         && b.algo == *algo
                         && b.outer_bits == 32
+                        && b.outer_bits_down == 32
                         && (b.overtrain - 1.0).abs() < 1e-9
                         && hypers_match(a, b)
                 }),
-                None => family(32),
+                None => family(32, 32),
             };
-            for bits in [32u32, 16, 8, 4] {
-                let Some(r) = (if bits == 32 { base } else { family(bits) }) else {
+            for &(up, down) in &pairs {
+                let is_base = (up, down) == (32, 32);
+                let Some(r) = (if is_base { base } else { family(up, down) }) else {
                     continue;
                 };
                 rows += 1;
-                let delta = if bits == 32 {
+                let delta = if is_base {
                     "baseline".to_string()
                 } else {
                     match base {
@@ -685,15 +702,17 @@ pub fn table_comm(store: &SweepStore) -> String {
                     tokens: r.tokens as f64,
                     batch_tokens: r.global_batch_tokens as f64,
                     cross_dc: LOW,
-                    // THIS run's actual wire width — fp32 rows model 32
-                    // bits, matching the measured wire columns. (fig6_12
-                    // instead models uncompressed runs at the paper's
-                    // bf16, deliberately: it reproduces Appendix A.)
-                    outer_bits: bits as f64,
+                    // THIS run's actual wire widths — fp32 legs model
+                    // 32 bits, matching the measured wire columns.
+                    // (fig6_12 instead models uncompressed runs at the
+                    // paper's bf16, deliberately: it reproduces
+                    // Appendix A.)
+                    outer_bits: up as f64,
+                    outer_bits_down: down as f64,
                 });
                 writeln!(
                     s,
-                    "| {model} | {algo} | {bits} | {:.4} | {delta} | {:.2} | {:.2} | {:.3e} |",
+                    "| {model} | {algo} | {up}/{down} | {:.4} | {delta} | {:.2} | {:.2} | {:.3e} |",
                     r.final_eval_loss,
                     mib(r.wire_up_bytes),
                     mib(r.wire_down_bytes),
@@ -712,11 +731,14 @@ pub fn table_comm(store: &SweepStore) -> String {
     }
     writeln!(
         s,
-        "\nShape check (Streaming DiLoCo, arXiv:2501.18512 / paper section 7): \
-         4-bit outer gradients should cost a negligible loss delta while \
-         cutting outer wire bytes ~8x vs fp32 (per-block scales add 0.125 \
-         bits/param), with error feedback keeping repeated quantized syncs \
-         unbiased."
+        "\nShape check (Streaming DiLoCo, arXiv:2501.18512 / paper section 7; \
+         DiLoCoX, arXiv:2506.21263): 4-bit wires should cost a negligible \
+         loss delta while cutting that leg's bytes ~8x vs fp32 (per-block \
+         scales add 0.125 bits/param), with error feedback — per replica on \
+         the up-wire, coordinator-owned on the down-wire — keeping repeated \
+         quantized syncs unbiased in both directions. At 4/32 the f32 \
+         broadcast dominates total sync bytes ~8:1, which is what the 4/4 \
+         rows close."
     )
     .unwrap();
     s

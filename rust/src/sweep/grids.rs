@@ -252,16 +252,32 @@ fn overtrain_sweep(model: &str) -> Vec<RunConfig> {
     out
 }
 
+/// The (up, down) wire-width pairs the `comm` grid covers, baseline
+/// first: the symmetric ladder narrows both legs together, then the
+/// two asymmetric int4 corners narrow one leg at a time so each
+/// direction's loss cost is attributable on its own. This constant is
+/// the single source of truth — `report::tables::table_comm` derives
+/// its row set (and its baseline-anchor search) from it, so extending
+/// the grid automatically extends the report.
+pub const COMM_PAIRS: [(OuterBits, OuterBits); 6] = [
+    (OuterBits::Fp32, OuterBits::Fp32),
+    (OuterBits::Bf16, OuterBits::Bf16),
+    (OuterBits::Int8, OuterBits::Int8),
+    (OuterBits::Int4, OuterBits::Int4),
+    (OuterBits::Int4, OuterBits::Fp32),
+    (OuterBits::Fp32, OuterBits::Int4),
+];
+
 /// Compressed outer communication (paper section 7; ROADMAP item):
 /// the data behind `diloco report --exp comm` — loss delta vs wire
-/// bytes at every outer bit width, best-known hypers, no re-tune.
-/// The 32-bit entries are the exact fp32 baselines the deltas are
+/// bytes over [`COMM_PAIRS`], best-known hypers, no re-tune. The
+/// (32, 32) entries are the exact fp32 baselines the deltas are
 /// measured against (bit-identical to the uncompressed path).
 fn comm_sweep(model: &str) -> Vec<RunConfig> {
     let mut out = Vec::new();
     let c = lr_center(model);
     for m in [2usize, 4] {
-        for bits in OuterBits::ALL {
+        for (up, down) in COMM_PAIRS {
             push(
                 &mut out,
                 model,
@@ -269,7 +285,10 @@ fn comm_sweep(model: &str) -> Vec<RunConfig> {
                 16,
                 c,
                 etas_for(m)[1],
-                |cf| cf.outer_bits = bits,
+                |cf| {
+                    cf.outer_bits = up;
+                    cf.outer_bits_down = down;
+                },
             );
         }
     }
@@ -403,15 +422,20 @@ mod tests {
     }
 
     #[test]
-    fn comm_grid_covers_every_bit_width() {
+    fn comm_grid_covers_every_width_pair() {
         let g = grid_by_name("comm").unwrap();
-        assert_eq!(g.len(), 8, "2 replica counts x 4 widths");
-        let bits: HashSet<u32> = g.iter().map(|c| c.outer_bits.bits()).collect();
+        assert_eq!(g.len(), 12, "2 replica counts x (4 symmetric + 2 asymmetric)");
+        let up: HashSet<u32> = g.iter().map(|c| c.outer_bits.bits()).collect();
+        let down: HashSet<u32> = g.iter().map(|c| c.outer_bits_down.bits()).collect();
         for b in [32u32, 16, 8, 4] {
-            assert!(bits.contains(&b), "missing outer_bits={b}");
+            assert!(up.contains(&b), "missing outer_bits={b}");
+            assert!(down.contains(&b), "missing outer_bits_down={b}");
         }
-        // within a replica count only the width varies, so the report
-        // can attribute the whole loss delta to the codec
+        // both asymmetric corners present: each leg narrowed alone
+        assert!(g.iter().any(|c| c.outer_bits.bits() == 4 && c.outer_bits_down.bits() == 32));
+        assert!(g.iter().any(|c| c.outer_bits.bits() == 32 && c.outer_bits_down.bits() == 4));
+        // within a replica count only the widths vary, so the report
+        // can attribute the whole loss delta to the codecs
         for w in g.windows(2) {
             if w[0].algo == w[1].algo {
                 assert_eq!(w[0].inner_lr, w[1].inner_lr);

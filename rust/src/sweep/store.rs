@@ -11,19 +11,20 @@ use crate::coordinator::{RunConfig, RunMetrics};
 use crate::util::json::Json;
 
 /// Deterministic, human-readable id for a run configuration.
-/// `outer_bits` is part of the id because compressed outer gradients
-/// change training results; `workers` deliberately is NOT (bit-
-/// identical at any worker count — a pure wall-clock knob). For
-/// Data-Parallel there is no outer wire at all, so the knob is inert
-/// and the id pins it to 32 — DP runs differing only in `--outer-bits`
-/// are byte-identical and must collide.
+/// `outer_bits` / `outer_bits_down` are part of the id because a
+/// compressed wire on either leg changes training results; `workers`
+/// deliberately is NOT (bit-identical at any worker count — a pure
+/// wall-clock knob). For Data-Parallel there is no outer wire at all,
+/// so both knobs are inert and the id pins them to 32 — DP runs
+/// differing only in `--outer-bits` / `--outer-bits-down` are
+/// byte-identical and must collide.
 pub fn run_id(cfg: &RunConfig) -> String {
-    let ob = match cfg.algo {
-        crate::coordinator::Algo::DataParallel => 32,
-        _ => cfg.outer_bits.bits(),
+    let (ob, obd) = match cfg.algo {
+        crate::coordinator::Algo::DataParallel => (32, 32),
+        _ => (cfg.outer_bits.bits(), cfg.outer_bits_down.bits()),
     };
     format!(
-        "{}_{}_h{}_b{}_lr{:.5}_eta{:.2}_ot{}_s{}_ob{ob}",
+        "{}_{}_h{}_b{}_lr{:.5}_eta{:.2}_ot{}_s{}_ob{ob}_obd{obd}",
         cfg.model,
         cfg.algo.label(),
         cfg.sync_every,
@@ -144,6 +145,7 @@ mod tests {
             outer_syncs: 0,
             wall_secs: 1.0,
             outer_bits: 32,
+            outer_bits_down: 32,
             wire_up_bytes: 0,
             wire_down_bytes: 0,
         }
@@ -159,20 +161,27 @@ mod tests {
         let mut c = RunConfig::default();
         c.algo = Algo::DiLoCo { replicas: 2 };
         assert_ne!(run_id(&a), run_id(&c));
-        // compressed and uncompressed DiLoCo runs must never collide...
+        // compressed and uncompressed DiLoCo runs must never collide,
+        // on either wire direction...
         let mut d = c.clone();
         d.outer_bits = crate::comm::OuterBits::Int4;
         assert_ne!(run_id(&c), run_id(&d));
-        assert!(run_id(&c).ends_with("_ob32"));
-        assert!(run_id(&d).ends_with("_ob4"));
+        assert!(run_id(&c).ends_with("_ob32_obd32"));
+        assert!(run_id(&d).ends_with("_ob4_obd32"));
+        let mut d2 = c.clone();
+        d2.outer_bits_down = crate::comm::OuterBits::Int8;
+        assert_ne!(run_id(&c), run_id(&d2));
+        assert_ne!(run_id(&d), run_id(&d2));
+        assert!(run_id(&d2).ends_with("_ob32_obd8"));
         // ...while workers stays excluded (bit-identical results)...
         let mut e = RunConfig::default();
         e.workers = 8;
         assert_eq!(run_id(&a), run_id(&e));
-        // ...and DP ids pin ob=32: the knob is inert without an outer
-        // sync, so differing --outer-bits DP runs are the same run
+        // ...and DP ids pin ob=obd=32: both knobs are inert without an
+        // outer sync, so differing DP runs are the same run
         let mut f = RunConfig::default();
         f.outer_bits = crate::comm::OuterBits::Int4;
+        f.outer_bits_down = crate::comm::OuterBits::Int4;
         assert_eq!(run_id(&a), run_id(&f));
     }
 

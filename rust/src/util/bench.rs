@@ -25,6 +25,10 @@ pub struct Bencher {
     pub max_iters: usize,
     pub budget: Duration,
     results: Vec<BenchResult>,
+    /// Non-timing side tables (e.g. exact wire-byte counts) attached
+    /// to the JSON report alongside `results`. `diff_reports` ignores
+    /// them — they carry context, not regression-gated numbers.
+    extras: Vec<(String, Json)>,
 }
 
 impl Default for Bencher {
@@ -34,6 +38,7 @@ impl Default for Bencher {
             max_iters: 50,
             budget: Duration::from_secs(5),
             results: Vec::new(),
+            extras: Vec::new(),
         }
     }
 }
@@ -111,9 +116,24 @@ impl Bencher {
         &self.results
     }
 
+    /// Attach (or replace) a non-timing side table emitted under the
+    /// given top-level key in the JSON report. The core report keys
+    /// are reserved — a duplicate would shadow the timing results.
+    pub fn extra(&mut self, key: &str, value: Json) {
+        assert!(
+            key != "title" && key != "results",
+            "bench extra key {key:?} would collide with the report schema"
+        );
+        if let Some(slot) = self.extras.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.extras.push((key.to_string(), value));
+        }
+    }
+
     /// The result table as JSON (nanosecond integers — exact, no f64).
     pub fn to_json(&self, title: &str) -> Json {
-        Json::obj(vec![
+        let mut fields: Vec<(&str, Json)> = vec![
             ("title", Json::str(title)),
             (
                 "results",
@@ -128,7 +148,11 @@ impl Bencher {
                     ])
                 })),
             ),
-        ])
+        ];
+        for (k, v) in &self.extras {
+            fields.push((k.as_str(), v.clone()));
+        }
+        Json::obj(fields)
     }
 
     /// Write the machine-readable result file (e.g. `BENCH_hot_path.json`).
@@ -308,5 +332,18 @@ mod tests {
     #[test]
     fn diff_rejects_malformed_reports() {
         assert!(diff_reports(&Json::obj(vec![]), &report(&[])).is_err());
+    }
+
+    #[test]
+    fn extras_ride_along_without_breaking_diffs() {
+        let mut b = Bencher::new(0.05);
+        b.run("case", || 2 * 2);
+        b.extra("wire_bytes", Json::obj(vec![("n", Json::int(5))]));
+        b.extra("wire_bytes", Json::obj(vec![("n", Json::int(6))])); // replaces
+        let j = b.to_json("t");
+        assert_eq!(j.req("wire_bytes").unwrap().u64_of("n").unwrap(), 6);
+        // diffing a report that carries extras still works on results
+        let d = diff_reports(&j, &j).unwrap();
+        assert_eq!(d.len(), 1);
     }
 }

@@ -168,6 +168,7 @@ fn prop_walltime_diloco_comm_monotone_in_h_and_bandwidth() {
                     batch_tokens: batch,
                     cross_dc: net,
                     outer_bits: diloco::netsim::walltime::BITS_PER_PARAM,
+                    outer_bits_down: diloco::netsim::walltime::BITS_PER_PARAM,
                 })
             };
             // comm decreases as H grows

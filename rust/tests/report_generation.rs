@@ -40,6 +40,7 @@ fn fake_metrics(model: &str, algo: &str, n: usize, loss: f64, batch: usize, lr: 
         outer_syncs: if h > 0 { 100 / h } else { 0 },
         wall_secs: 1.0,
         outer_bits: 32,
+        outer_bits_down: 32,
         wire_up_bytes: if h > 0 { (100 / h) as u64 * n as u64 * 4 } else { 0 },
         wire_down_bytes: if h > 0 { (100 / h) as u64 * n as u64 * 4 } else { 0 },
     }
