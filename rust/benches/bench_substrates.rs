@@ -75,6 +75,7 @@ fn main() {
             cross_dc: MEDIUM,
             outer_bits: diloco::netsim::walltime::BITS_PER_PARAM,
             outer_bits_down: diloco::netsim::walltime::BITS_PER_PARAM,
+            overlap_tau: 0.0,
         })
     });
     let sim = SimModel::default();

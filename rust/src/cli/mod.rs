@@ -20,6 +20,7 @@ USAGE:
                  [--lr 6e-3] [--eta 0.8] [--budget TOKENS] [--overtrain X]
                  [--seed N] [--eval-every K] [--downstream] [--fragments P]
                  [--workers W]   # replica-parallel inner loop; 1 = sequential
+                 [--overlap-tau T]  # delayed application: merge a fragment's broadcast T steps after its send (0 = barrier; requires T < H/P)
                  [--outer-bits 32|16|8|4]       # up-wire width: outer gradients (32 = exact fp32)
                  [--outer-bits-down 32|16|8|4]  # down-wire width: global broadcast (32 = literal handoff)
   diloco predict --n PARAMS [--m REPLICAS] [--store runs/sweep.jsonl]
@@ -95,6 +96,9 @@ fn run_config_from_args(args: &Args) -> Result<RunConfig> {
     }
     if let Some(p) = args.get("fragments") {
         cfg.streaming_fragments = p.parse().context("--fragments")?;
+    }
+    if let Some(t) = args.get("overlap-tau") {
+        cfg.overlap_tau = t.parse().context("--overlap-tau")?;
     }
     if let Some(w) = args.get("workers") {
         cfg.workers = w.parse().context("--workers")?;

@@ -69,6 +69,18 @@
 //! Together these make every (up, down) width pair reproduce
 //! bit-identically at any `--workers` count (pinned by
 //! `tests/comm_codec.rs`).
+//!
+//! # Overlap (delayed application)
+//!
+//! Under `--overlap-tau` the pipeline stretches each sync across two
+//! events — payloads encoded at the *send*, the broadcast decoded at
+//! the *merge*, τ inner steps later — but both EF streams stay single,
+//! ordered sequences: the worker snapshot and the coordinator's
+//! down-wire view advance through exactly the same broadcasts in the
+//! same order (one in flight at a time, enforced fail-loud), so the
+//! telescoping-residual invariants above hold unchanged, and τ=0
+//! degenerates to the barrier schedule byte for byte (pinned by
+//! `tests/overlap_pipeline.rs` for all 16 width pairs).
 
 pub mod channel;
 pub mod codec;

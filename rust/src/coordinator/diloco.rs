@@ -18,14 +18,21 @@
 //!
 //! The "parallel for" over replicas is real concurrency: the worker
 //! pool (`coordinator::pool`) gives each replica a persistent owner
-//! thread that runs its H inner steps between outer syncs, with the
-//! outer step as the barrier. `RunConfig::workers` picks the thread
-//! count; 1 (the default) is the sequential oracle, and any worker
-//! count produces bit-identical results (per-replica RNG streams and
+//! thread that runs its H inner steps between outer syncs. The outer
+//! step is no longer a hard barrier: with `--overlap-tau` > 0 the
+//! drive loop emits **send** and **merge** events instead of
+//! barrier-bounded segments — workers ship their sync contribution
+//! and keep stepping, the coordinator reduces under their compute,
+//! and the broadcast merges τ inner steps after the send (Streaming
+//! DiLoCo's delayed application; τ=0 reproduces the barrier bit for
+//! bit). `RunConfig::workers` picks the thread count; 1 (the default)
+//! is the sequential oracle, and any worker count produces
+//! bit-identical results at every τ (per-replica RNG streams and
 //! coordinator-side reductions are scheduling-independent — see the
 //! pool module docs). The analytic `netsim` wall-clock model (paper
-//! Appendix A) is now cross-checked against measured pool concurrency
-//! in `benches/bench_hot_path.rs`.
+//! Appendix A, with the overlap term `max(0, t_comm − τ·t_step)`) is
+//! cross-checked against measured pool concurrency in
+//! `benches/bench_hot_path.rs`.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -116,6 +123,16 @@ pub struct RunConfig {
     /// H % P == 0. Total communication is unchanged; peak per-sync
     /// traffic drops by P.
     pub streaming_fragments: usize,
+    /// Overlapped outer sync (`--overlap-tau`, Streaming DiLoCo's
+    /// delayed application): a fragment's contributions are sent at
+    /// the sync boundary, the workers keep stepping, and the reduced
+    /// broadcast merges into live replica params exactly τ inner
+    /// steps later — the coordinator's reduce + outer step + encode
+    /// hide under compute, and `netsim` charges the outer leg
+    /// `max(0, t_comm − τ·t_step)`. 0 (the default) is the exact
+    /// barrier schedule. Must be < H/P; changes training results for
+    /// τ > 0, so it IS part of the sweep-store run id (`_tau{τ}`).
+    pub overlap_tau: usize,
     /// Worker threads for the replica-parallel inner loop (clamped to
     /// [1, M]). 1 = sequential execution, the deterministic oracle the
     /// parallel path is pinned against; any value yields bit-identical
@@ -158,6 +175,7 @@ impl Default for RunConfig {
             log_every: 200,
             force_accumulate: false,
             streaming_fragments: 1,
+            overlap_tau: 0,
             workers: 1,
             outer_bits: OuterBits::Fp32,
             outer_bits_down: OuterBits::Fp32,
@@ -187,6 +205,10 @@ pub struct RunMetrics {
     pub downstream: Vec<(String, f64)>,
     pub outer_syncs: usize,
     pub wall_secs: f64,
+    /// Streaming fragment count P the run used (1 = vanilla).
+    pub fragments: usize,
+    /// Delayed-application window τ the run used (0 = barrier).
+    pub overlap_tau: usize,
     /// Up-wire bit width the run used (32 = uncompressed).
     pub outer_bits: u32,
     /// Down-wire (broadcast) bit width the run used (32 = literal
@@ -238,6 +260,8 @@ impl RunMetrics {
             ),
             ("outer_syncs", Json::num(self.outer_syncs as f64)),
             ("wall_secs", Json::num(self.wall_secs)),
+            ("fragments", Json::num(self.fragments as f64)),
+            ("overlap_tau", Json::num(self.overlap_tau as f64)),
             ("outer_bits", Json::int(self.outer_bits)),
             ("outer_bits_down", Json::int(self.outer_bits_down)),
             // wire bytes are u64 exact counts; Json::int avoids f64
@@ -285,6 +309,17 @@ impl RunMetrics {
             downstream,
             outer_syncs: j.usize_of("outer_syncs")?,
             wall_secs: j.f64_of("wall_secs")?,
+            // absent in pre-overlap records: the fragment count was
+            // not recorded then and τ did not exist — all old sweep
+            // grids ran P=1 barrier schedules
+            fragments: j
+                .get("fragments")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(1) as usize,
+            overlap_tau: j
+                .get("overlap_tau")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0) as usize,
             // absent in pre-comm-subsystem records: those ran the
             // uncompressed path and counted no wire bytes
             outer_bits: j
@@ -478,6 +513,22 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
     }
     // streaming: one fragment syncs every H/P steps, round-robin.
     let frag_interval = if fragments > 1 { h / fragments } else { h };
+    // overlap: the broadcast merges τ inner steps after the send; DP
+    // has no broadcast to delay, so the knob is inert there
+    let overlap_tau = if is_diloco { cfg.overlap_tau } else { 0 };
+    if is_diloco && overlap_tau >= frag_interval {
+        bail!(
+            "overlap_tau ({overlap_tau}) must be smaller than the per-fragment \
+             sync interval H/P ({frag_interval}) so at most one fragment is in \
+             flight"
+        );
+    }
+    if !is_diloco && cfg.overlap_tau != 0 {
+        log::warn!(
+            "--overlap-tau {} has no effect for Data-Parallel (no outer sync); recording 0",
+            cfg.overlap_tau
+        );
+    }
     // DP has no outer wire: --outer-bits / --outer-bits-down are inert
     // there, so normalize both to fp32 (metrics + run ids must not
     // pretend a codec ran)
@@ -497,7 +548,7 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
     }
 
     log::info!(
-        "run {} {} B={} tok/step, T={total_steps}, lr={}, H={}, wd={wd:.2e}, outer_bits={}/{} (up/down)",
+        "run {} {} B={} tok/step, T={total_steps}, lr={}, H={}, wd={wd:.2e}, outer_bits={}/{} (up/down), tau={overlap_tau}",
         cfg.model,
         cfg.algo.label(),
         tokens_per_step,
@@ -639,6 +690,7 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         eval_every: cfg.eval_every,
         log_every: cfg.log_every,
         workers: cfg.workers,
+        overlap_tau,
     };
     let outcome = drive(&engine, &mut replicas, sync.as_mut(), &plan)?;
     let last_train_loss = outcome.step_losses.last().copied().unwrap_or(f64::NAN);
@@ -648,8 +700,8 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
     // DiLoCo's is the literal cache, fresh after the final full-flush
     // sync. Either way no re-upload happens here (paper section 2.2:
     // DiLoCo evaluates the most recent global model).
-    let final_lits: Vec<Arc<xla::Literal>> = match &sync {
-        Some(bus) => bus.global_literals().to_vec(),
+    let final_lits: Vec<Arc<xla::Literal>> = match sync.as_mut() {
+        Some(bus) => bus.global_literals()?.to_vec(),
         None => replicas[0].state[..n].to_vec(),
     };
     let final_eval = engine.eval(&final_lits)?;
@@ -712,6 +764,8 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         downstream,
         outer_syncs: outcome.outer_syncs,
         wall_secs: t_start.elapsed().as_secs_f64(),
+        fragments: if is_diloco { fragments } else { 1 },
+        overlap_tau,
         outer_bits: outer_bits.bits(),
         outer_bits_down: outer_bits_down.bits(),
         wire_up_bytes,

@@ -1,10 +1,14 @@
 //! Replica-parallel inner loop: the worker pool that makes Algorithm
-//! 1's "parallel for over replicas" actually parallel.
+//! 1's "parallel for over replicas" actually parallel, and the
+//! **non-blocking fragment pipeline** that hides the outer sync's
+//! communication under inner-step compute (Streaming DiLoCo's
+//! delayed application, arXiv:2501.18512 §4; DiLoCoX's one-step
+//! delayed overlap, arXiv:2506.21263).
 //!
 //! # Concurrency model
 //!
 //! Training runs as a sequence of **segments** — the step ranges
-//! between consecutive outer-sync boundaries (plus eval boundaries for
+//! between consecutive pipeline events (plus eval boundaries for
 //! Data-Parallel). Each worker thread *owns* a fixed subset of
 //! replicas for the whole run (`replica r -> worker r % workers`): the
 //! replica's literal-handle state, its `TokenStream` shard, and its
@@ -12,7 +16,7 @@
 //! additionally owns one set of **shared comm arenas** (the broadcast
 //! snapshot + staging/scratch, identical across its replicas — see
 //! `crate::comm`). The coordinator sends each worker a `Run` command
-//! for the segment; workers execute their replicas' H inner steps
+//! for the segment; workers execute their replicas' inner steps
 //! concurrently and hand back per-step losses plus each replica's
 //! **sync payload** over a channel: under a *lossy* up-wire
 //! (`--outer-bits` below 32) that payload is the replica's encoded
@@ -23,26 +27,56 @@
 //! the default path; `OuterSync::sync` counts the identity wire
 //! bytes itself.
 //!
-//! The **outer step is the barrier**: the coordinator blocks until
-//! every worker reports, assembles the payloads in replica-index
-//! order, runs the zero-alloc flat-bus outer step
-//! ([`OuterSync::sync_encoded`]), and broadcasts with the *next* `Run`
-//! command. The broadcast takes one of two forms: deduplicated global
-//! `Arc` literals (identity down-wire — PR 2's zero-copy handoff,
+//! # The send/merge pipeline (delayed application)
+//!
+//! A DiLoCo schedule is driven by two kinds of events, not one:
+//!
+//! - **send** — at a sync-cadence boundary, workers capture their
+//!   replicas' contributions for the due fragment (payloads are
+//!   immutable: `Arc` literal handles or encoded bytes) and
+//!   *immediately continue* inner steps on their current params; the
+//!   coordinator holds the payloads in flight.
+//! - **merge** — exactly `overlap_tau` inner steps later (clamped to
+//!   the end of training), the coordinator has reduced the in-flight
+//!   payloads, run the flat-bus outer step, and built the broadcast;
+//!   workers merge it into their live replica params before their
+//!   next inner step. The merge adopts the broadcast fragment
+//!   outright — the α=1 corner of Streaming DiLoCo's mixing rule,
+//!   which is what lets the deduplicated `Arc`-literal handoff (one
+//!   upload per leaf, never per replica) survive the overlap and
+//!   makes `overlap_tau = 0` reproduce the retired barrier schedule
+//!   bit for bit: send and merge collapse into a single boundary,
+//!   which is exactly the old barrier.
+//!
+//! The coordinator's reduce + outer step + broadcast encode run
+//! *while the workers compute the overlap window*: a segment is
+//! [`SegmentExec::dispatch`]ed first, the in-flight sync (whose
+//! payloads were captured at an earlier boundary) is reduced under
+//! it, and only then does the coordinator [`SegmentExec::collect`]
+//! the segment's results. `netsim::walltime` models the payoff as
+//! `max(0, t_comm - τ·t_step)` per outer sync.
+//!
+//! At most one sync is ever in flight (`overlap_tau` must be smaller
+//! than the per-fragment sync interval — enforced fail-loud), and the
+//! end of training drains the pipeline: a sync still in flight at T
+//! merges first, then the final full flush is captured by a
+//! zero-step trailing segment so nothing stale ever survives the run.
+//! The broadcast takes one of two forms: deduplicated global `Arc`
+//! literals (identity down-wire — PR 2's zero-copy handoff,
 //! unchanged), or the [`DownWire`]'s single encoded payload (lossy
 //! `--outer-bits-down`), which each worker decodes once into its
 //! shared snapshot before rebuilding the synced leaves' literals for
 //! all the replicas it owns. Only the coordinator ever touches the
-//! flat arenas; workers only ever read literals or broadcast bytes —
-//! ownership never crosses the barrier in both directions at once.
+//! flat arenas; workers only ever read literals or broadcast bytes.
 //!
 //! [`DownWire`]: crate::comm::DownWire
 //!
 //! # Why determinism holds
 //!
 //! Bit-identical results for any worker count follow from three
-//! invariants, each pinned by `tests/worker_pool.rs` and (per (up,
-//! down) width pair) `tests/comm_codec.rs`:
+//! invariants, each pinned by `tests/worker_pool.rs`,
+//! `tests/overlap_pipeline.rs`, and (per (up, down) width pair)
+//! `tests/comm_codec.rs`:
 //!
 //! 1. replica state, data shard, and comm residual are owned by
 //!    exactly one worker and advance in step/sync order — scheduling
@@ -53,15 +87,25 @@
 //!    gradient accumulation) happens on the coordinator in replica
 //!    index order, identical to the sequential loop's summation order
 //!    — and the broadcast is one byte stream decoded identically by
-//!    every worker, so the shared snapshots never diverge;
-//! 3. evaluation reads immutable literal sets that only change at
-//!    barriers, so its placement relative to worker execution is
-//!    irrelevant.
+//!    every worker, so the shared snapshots never diverge. Payloads
+//!    captured at a send are immutable snapshots (inner steps replace
+//!    literal handles, never mutate literals), so reducing them τ
+//!    steps later reads exactly the send-time values;
+//! 3. evaluation is re-grounded on the **merge schedule**, not the
+//!    send schedule: an eval at step t reads the global with every
+//!    merge at or before t applied and nothing fresher — no replica
+//!    has seen an in-flight sync, so this is the only consistent
+//!    answer, and at τ=0 it degenerates to the old barrier rule
+//!    (in-segment evals see the previous sync, boundary evals see the
+//!    fresh one).
 //!
 //! `workers == 1` (the default, and `--workers 1` on the CLI) runs the
 //! whole schedule inline on the caller's thread with the classic
 //! step-major/replica-minor loop — the sequential oracle the parallel
-//! path is tested against.
+//! path is tested against. Overlap changes nothing there (no
+//! concurrency to hide work under), but the *schedule* — and
+//! therefore every loss and parameter bit — is identical at any
+//! worker count for any τ.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -102,6 +146,11 @@ pub trait InnerEngine: Sync {
     fn inner_step(&self, rep: usize, replica: &mut ReplicaState, t: usize) -> Result<f64>;
 
     /// Eval loss of a parameter literal set (first `n_params` leaves).
+    /// Must be stateless and safe to call concurrently with
+    /// `inner_step` running on worker threads — the overlap pipeline
+    /// evaluates mid-segment while workers compute (PJRT CPU
+    /// execution is thread-safe per client; test surrogates read
+    /// immutable literals).
     fn eval(&self, params: &[Arc<xla::Literal>]) -> Result<f64>;
 
     /// Effective inner learning rate at step `t`, for log lines only
@@ -128,6 +177,14 @@ pub struct DrivePlan {
     /// Worker threads for the inner loop; clamped to [1, M]. 1 =
     /// sequential oracle (no threads spawned).
     pub workers: usize,
+    /// Delayed-application window τ (Streaming DiLoCo overlap): a
+    /// fragment's broadcast merges into live replica params exactly τ
+    /// inner steps after its contributions were sent, hiding the
+    /// outer sync's communication under compute. 0 = barrier
+    /// semantics, bit-identical to the retired segment loop. Requires
+    /// τ < `sync_interval` so at most one sync is ever in flight;
+    /// ignored (and rejected when nonzero) without an `OuterSync`.
+    pub overlap_tau: usize,
 }
 
 /// Everything the drive loop measures (the caller owns final-eval and
@@ -189,13 +246,31 @@ struct EncodeSpec {
     sync_index: u64,
 }
 
+/// What a segment's boundary asks of the workers. Merge-only
+/// boundaries (and the drain's main segment) ask for nothing — the
+/// coordinator would discard it, so the workers never build it.
+#[derive(Debug, Clone)]
+enum PayloadSpec {
+    /// No payload crosses at this boundary.
+    None,
+    /// Current parameter literal handles (identity up-wire sends, and
+    /// every Data-Parallel segment — its boundary eval reads them).
+    Params,
+    /// Encoded wire contribution for the due fragment (lossy up-wire).
+    Encoded(EncodeSpec),
+}
+
 /// One replica's contribution at a segment boundary.
 enum SyncPayload {
-    /// Data-Parallel: current parameter literal handles (for the
-    /// boundary eval; nothing crosses a wire).
+    /// Data-Parallel (and identity up-wire sends): current parameter
+    /// literal handles.
     Params(Vec<Arc<xla::Literal>>),
-    /// DiLoCo: the encoded wire contribution for the due fragment.
+    /// DiLoCo lossy up-wire: the encoded contribution for the due
+    /// fragment.
     Encoded(Vec<u8>),
+    /// The boundary asked for nothing ([`PayloadSpec::None`]) —
+    /// consuming this anywhere is a coordinator bug and fails loud.
+    Skipped,
 }
 
 /// Per-segment result: `losses[r]` / `payloads[r]` for replica r.
@@ -258,6 +333,27 @@ pub fn drive<E: InnerEngine>(
     }
     if sync.is_some() && plan.sync_interval == 0 {
         bail!("drive: sync_interval must be >= 1");
+    }
+    if plan.overlap_tau > 0 {
+        // merge-ordering guards, fail-loud: a broadcast can only be
+        // delayed when there is a broadcast, and it must land before
+        // the fragment's next send so at most one sync is in flight
+        if sync.is_none() {
+            bail!(
+                "drive: overlap_tau ({}) without an outer sync — \
+                 Data-Parallel has no broadcast to delay",
+                plan.overlap_tau
+            );
+        }
+        if plan.overlap_tau >= plan.sync_interval {
+            bail!(
+                "drive: overlap_tau ({}) must be smaller than the sync \
+                 interval ({}) so a fragment's merge lands before the \
+                 next send (one sync in flight at a time)",
+                plan.overlap_tau,
+                plan.sync_interval
+            );
+        }
     }
     for (r, rep) in replicas.iter().enumerate() {
         if rep.state.len() < plan.n_params {
@@ -339,6 +435,7 @@ pub fn drive<E: InnerEngine>(
                 link: link.as_ref(),
                 wc: &mut wc,
                 rcs: &mut rcs,
+                staged: None,
             };
             coordinate(engine, &mut exec, sync, plan, m)?
         };
@@ -437,25 +534,53 @@ pub fn drive<E: InnerEngine>(
 
 // ---- the coordinator loop (shared by inline and threaded paths) ------
 
-/// Executes one segment of inner steps across all replicas and reports
-/// per-replica per-step losses + boundary sync payloads.
+/// Executes one segment of inner steps across all replicas. Split
+/// into a begin/finish pair so the coordinator can reduce an
+/// in-flight sync *while* the workers compute the segment — the
+/// overlap pipeline's wall-clock win. Calls always pair up:
+/// `dispatch(a, b)` then `collect(a, b)`, never nested.
 trait SegmentExec {
-    fn run_segment(
+    /// Begin one segment: workers apply `broadcast` (the last merge's
+    /// result), run steps (from, to], then build the boundary
+    /// payloads `payload` asks for. The pooled implementation returns
+    /// without waiting; the inline oracle runs the segment here (no
+    /// concurrency to hide work under — results are bit-identical
+    /// either way).
+    fn dispatch(
         &mut self,
         from: usize,
         to: usize,
         broadcast: &Broadcast,
-        encode: Option<&EncodeSpec>,
-    ) -> Result<SegmentData>;
+        payload: &PayloadSpec,
+    ) -> Result<()>;
+
+    /// Block until the dispatched segment completes; hand back its
+    /// per-replica per-step losses + boundary sync payloads.
+    fn collect(&mut self, from: usize, to: usize) -> Result<SegmentData>;
 }
 
-/// End of the segment starting after `t0`: the next outer-sync
-/// boundary (DiLoCo), the next eval point (Data-Parallel, whose eval
-/// reads per-step replica state), or the end of training.
-fn next_boundary(t0: usize, plan: &DrivePlan, diloco: bool) -> usize {
+/// A sync between its send and its merge: the coordinator holds the
+/// boundary payloads (immutable snapshots — `Arc` literal handles or
+/// encoded bytes) until the merge boundary reduces them.
+struct InFlight {
+    frag: Option<usize>,
+    /// Boundary whose processing merges the reduced broadcast: the
+    /// send step + τ, clamped to the end of training (the drain).
+    merge_at: usize,
+    payloads: Vec<SyncPayload>,
+}
+
+/// End of the segment starting after `t0`: the next outer-sync send
+/// boundary (DiLoCo), the pending merge point when a sync is in
+/// flight, the next eval point (Data-Parallel, whose eval reads
+/// per-step replica state), or the end of training.
+fn next_boundary(t0: usize, plan: &DrivePlan, diloco: bool, merge_at: Option<usize>) -> usize {
     let mut b = plan.total_steps;
     if diloco {
         b = b.min((t0 / plan.sync_interval + 1).saturating_mul(plan.sync_interval));
+        if let Some(m) = merge_at {
+            b = b.min(m);
+        }
     } else if let Some(k) = plan.eval_every {
         b = b.min((t0 / k + 1).saturating_mul(k));
     }
@@ -469,6 +594,62 @@ fn due_fragment(t1: usize, plan: &DrivePlan) -> Option<usize> {
         Some(((t1 / plan.sync_interval).wrapping_sub(1)) % plan.fragments)
     } else {
         None
+    }
+}
+
+/// Merge one in-flight sync: reduce its payloads into the flat-bus
+/// outer step (Algorithm 1 lines 8-12) and build the broadcast the
+/// replicas merge — encoded wire frames under a lossy up-wire,
+/// literal handles otherwise. With overlap this runs τ steps after
+/// the send, dispatched *under* the workers' segment compute.
+fn reduce_and_broadcast(
+    bus: &mut OuterSync,
+    infl: InFlight,
+    wire_codec: bool,
+    wire_down: bool,
+    out: &mut DriveOutcome,
+) -> Result<Broadcast> {
+    let InFlight { frag, payloads, .. } = infl;
+    if wire_codec {
+        let frames: Vec<&[u8]> = payloads
+            .iter()
+            .map(|p| match p {
+                SyncPayload::Encoded(bytes) => Ok(&bytes[..]),
+                _ => Err(anyhow!("drive: wire-codec merge without an encoded payload")),
+            })
+            .collect::<Result<_>>()?;
+        bus.sync_encoded(&frames, frag)?;
+    } else {
+        let parts: Vec<&[Arc<xla::Literal>]> = payloads
+            .iter()
+            .map(|p| match p {
+                SyncPayload::Params(v) => Ok(&v[..]),
+                _ => Err(anyhow!("drive: identity merge without a literal payload")),
+            })
+            .collect::<Result<_>>()?;
+        bus.sync(&parts, frag)?;
+    }
+    out.outer_syncs += 1;
+    // Broadcast = the merge boundary's payload: the deduplicated
+    // freshly-uploaded literal per synced leaf (identity down-wire: N
+    // uploads, never M×N), or the DownWire's single encoded fragment
+    // (lossy down-wire: one allocation, decoded once per worker).
+    if wire_down {
+        Ok(Broadcast::Encoded {
+            frag,
+            bytes: bus.take_broadcast_bytes().ok_or_else(|| {
+                anyhow!("drive: lossy down-wire produced no broadcast payload")
+            })?,
+        })
+    } else {
+        let leaves: Vec<usize> = bus.synced_leaves(frag).collect();
+        let lits = bus.global_literals()?;
+        Ok(Broadcast::Literals(
+            leaves
+                .into_iter()
+                .map(|leaf| (leaf, Arc::clone(&lits[leaf])))
+                .collect(),
+        ))
     }
 }
 
@@ -491,24 +672,70 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
         .as_deref()
         .map(|b| !b.down_codec().is_identity())
         .unwrap_or(false);
+    let tau = if diloco { plan.overlap_tau } else { 0 };
     let mut out = DriveOutcome::default();
     let mut pending = Broadcast::empty();
+    let mut in_flight: Option<InFlight> = None;
     let mut t0 = 0usize;
     while t0 < plan.total_steps {
-        let t1 = next_boundary(t0, plan, diloco);
-        // A DiLoCo boundary is always a sync boundary, so the workers
-        // know before stepping what they will encode at segment end.
-        let frag = if diloco { due_fragment(t1, plan) } else { None };
-        let spec = if wire_codec {
-            Some(EncodeSpec {
-                frag,
-                sync_index: out.outer_syncs as u64,
-            })
+        let t1 = next_boundary(t0, plan, diloco, in_flight.as_ref().map(|f| f.merge_at));
+        let merge_due = in_flight.as_ref().map_or(false, |f| f.merge_at == t1);
+        // Send boundaries follow the sync cadence, plus the final full
+        // flush; merge-only boundaries (send + τ) land strictly
+        // between sends because τ < sync_interval.
+        let send_due = diloco && (t1 == plan.total_steps || t1 % plan.sync_interval == 0);
+        // End-of-training drain: a sync still in flight at T merges
+        // first, and the full flush is captured only after its
+        // broadcast is applied — by a zero-step trailing segment
+        // below, so the flush payloads see the merged params.
+        let defer_final = send_due && t1 == plan.total_steps && merge_due;
+        let frag = if send_due { due_fragment(t1, plan) } else { None };
+        // Merge-only boundaries (and the drain's main segment) ask the
+        // workers for nothing — the coordinator would only discard it.
+        let payload_spec = if !diloco {
+            PayloadSpec::Params // DP boundary evals read replica state
+        } else if send_due && !defer_final {
+            if wire_codec {
+                PayloadSpec::Encoded(EncodeSpec {
+                    frag,
+                    sync_index: out.outer_syncs as u64,
+                })
+            } else {
+                PayloadSpec::Params
+            }
         } else {
-            None
+            PayloadSpec::None
         };
-        let (losses, payloads) = exec.run_segment(t0, t1, &pending, spec.as_ref())?;
+        exec.dispatch(t0, t1, &pending, &payload_spec)?;
         pending = Broadcast::empty();
+
+        // DiLoCo evals strictly inside the segment read the global as
+        // of the last *merge* — no replica has adopted anything
+        // fresher at those steps (an in-flight sync is invisible to
+        // the fleet), and at τ=0 this is exactly the old barrier rule
+        // (the previous sync's global). Runs while workers compute.
+        if let (Some(bus), Some(k)) = (sync.as_deref_mut(), plan.eval_every) {
+            for t in t0 + 1..t1 {
+                if t % k == 0 && t != plan.total_steps {
+                    let e = engine.eval(bus.global_literals()?)?;
+                    out.eval_curve.push((t, e));
+                    log::info!("  step {t} eval_loss={e:.4}");
+                }
+            }
+        }
+
+        // Merge due at this boundary: reduce the payloads captured τ
+        // steps ago and run the outer step — coordinator work hidden
+        // under the segment's inner compute (the pipeline's point).
+        if merge_due {
+            let infl = in_flight.take().expect("merge_due implies a sync in flight");
+            let bus = sync
+                .as_deref_mut()
+                .expect("a sync can only be in flight with an OuterSync");
+            pending = reduce_and_broadcast(bus, infl, wire_codec, wire_down, &mut out)?;
+        }
+
+        let (losses, payloads) = exec.collect(t0, t1)?;
 
         // Per-step mean loss, summed in replica index order — the same
         // order as the sequential loop, so results are bit-identical.
@@ -530,88 +757,95 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             }
         }
 
-        // DiLoCo evals strictly inside the segment read the global
-        // model from the *previous* sync — by construction no fresher
-        // global exists at those steps, so evaluating at the barrier
-        // reproduces the sequential schedule exactly.
-        if let (Some(bus), Some(k)) = (sync.as_deref(), plan.eval_every) {
-            for t in t0 + 1..t1 {
-                if t % k == 0 && t != plan.total_steps {
-                    let e = engine.eval(bus.global_literals())?;
-                    out.eval_curve.push((t, e));
-                    log::info!("  step {t} eval_loss={e:.4}");
-                }
-            }
-        }
-
-        // Outer synchronization at the boundary (Algorithm 1 lines
-        // 8-12): barrier already passed, payloads in hand — encoded
-        // wire frames under a lossy up-wire, literal handles otherwise.
-        if let Some(bus) = sync.as_deref_mut() {
-            if wire_codec {
-                let frames: Vec<&[u8]> = payloads
-                    .iter()
-                    .map(|p| match p {
-                        SyncPayload::Encoded(bytes) => Ok(&bytes[..]),
-                        SyncPayload::Params(_) => {
-                            Err(anyhow!("drive: wire-codec segment returned unencoded payload"))
-                        }
-                    })
-                    .collect::<Result<_>>()?;
-                bus.sync_encoded(&frames, frag)?;
-            } else {
-                let parts: Vec<&[Arc<xla::Literal>]> = payloads
-                    .iter()
-                    .map(|p| match p {
-                        SyncPayload::Params(v) => Ok(&v[..]),
-                        SyncPayload::Encoded(_) => {
-                            Err(anyhow!("drive: identity segment returned encoded payload"))
-                        }
-                    })
-                    .collect::<Result<_>>()?;
-                bus.sync(&parts, frag)?;
-            }
-            out.outer_syncs += 1;
-            // Broadcast = the next segment's payload: the deduplicated
-            // freshly-uploaded literal per synced leaf (identity
-            // down-wire: N uploads, never M×N), or the DownWire's
-            // single encoded fragment (lossy down-wire: one
-            // allocation, decoded once per worker).
-            pending = if wire_down {
-                Broadcast::Encoded {
-                    frag,
-                    bytes: bus.take_broadcast_bytes().ok_or_else(|| {
-                        anyhow!("drive: lossy down-wire produced no broadcast payload")
-                    })?,
-                }
-            } else {
-                let lits = bus.global_literals();
-                Broadcast::Literals(
-                    bus.synced_leaves(frag)
-                        .map(|leaf| (leaf, Arc::clone(&lits[leaf])))
-                        .collect(),
-                )
-            };
-        }
-
-        // Eval due exactly at the boundary sees the post-sync model
-        // (DiLoCo) or the boundary-step replica state (Data-Parallel).
-        if let Some(k) = plan.eval_every {
-            if t1 % k == 0 && t1 != plan.total_steps {
-                let e = match sync.as_deref() {
-                    Some(bus) => engine.eval(bus.global_literals())?,
-                    None => match &payloads[0] {
+        // Data-Parallel eval due exactly at the boundary reads the
+        // boundary-step replica state (its segments end at eval
+        // points; the DiLoCo twin of this block runs post-merge,
+        // after send handling consumes the payloads).
+        if !diloco {
+            if let Some(k) = plan.eval_every {
+                if t1 % k == 0 && t1 != plan.total_steps {
+                    let e = match &payloads[0] {
                         SyncPayload::Params(p) => engine.eval(p)?,
-                        SyncPayload::Encoded(_) => {
-                            bail!("drive: Data-Parallel segment returned encoded payload")
-                        }
-                    },
-                };
-                out.eval_curve.push((t1, e));
-                log::info!("  step {t1} eval_loss={e:.4}");
+                        _ => bail!("drive: Data-Parallel boundary without replica params"),
+                    };
+                    out.eval_curve.push((t1, e));
+                    log::info!("  step {t1} eval_loss={e:.4}");
+                }
+            }
+        }
+
+        if send_due && !defer_final {
+            // Capture the boundary payloads; they merge τ steps later
+            // — immediately when τ=0 (the barrier), or at the clamped
+            // end of training.
+            let merge_at = (t1 + tau).min(plan.total_steps);
+            in_flight = Some(InFlight {
+                frag,
+                merge_at,
+                payloads,
+            });
+            if merge_at == t1 {
+                let infl = in_flight.take().expect("stashed above");
+                let bus = sync.as_deref_mut().expect("send implies sync");
+                pending = reduce_and_broadcast(bus, infl, wire_codec, wire_down, &mut out)?;
+            }
+        } else if defer_final {
+            // Drain: the merged broadcast (in `pending`) is applied by
+            // a zero-step trailing segment whose boundary payloads are
+            // the final full flush — nothing in flight survives the
+            // end of training.
+            let flush_spec = if wire_codec {
+                PayloadSpec::Encoded(EncodeSpec {
+                    frag: None,
+                    sync_index: out.outer_syncs as u64,
+                })
+            } else {
+                PayloadSpec::Params
+            };
+            exec.dispatch(t1, t1, &pending, &flush_spec)?;
+            pending = Broadcast::empty();
+            let (_, flush) = exec.collect(t1, t1)?;
+            let bus = sync.as_deref_mut().expect("flush implies sync");
+            pending = reduce_and_broadcast(
+                bus,
+                InFlight {
+                    frag: None,
+                    merge_at: t1,
+                    payloads: flush,
+                },
+                wire_codec,
+                wire_down,
+                &mut out,
+            )?;
+        }
+
+        // DiLoCo eval due exactly at the boundary sees the post-merge
+        // global (at a send-only boundary under τ>0 nothing merged, so
+        // it correctly reads the last merged state — the in-flight
+        // sync has reached no replica yet).
+        if diloco {
+            if let Some(k) = plan.eval_every {
+                if t1 % k == 0 && t1 != plan.total_steps {
+                    let bus = sync.as_deref_mut().expect("diloco implies sync");
+                    let e = engine.eval(bus.global_literals()?)?;
+                    out.eval_curve.push((t1, e));
+                    log::info!("  step {t1} eval_loss={e:.4}");
+                }
             }
         }
         t0 = t1;
+    }
+    // Structurally unreachable (merges are clamped to T and the drain
+    // handles the collision with the final flush), but a silent stale
+    // fragment would corrupt every consumer of the global — refuse.
+    if let Some(infl) = in_flight {
+        bail!(
+            "drive: fragment {:?} was sent but never merged (merge was \
+             scheduled at step {}, training ended at {})",
+            infl.frag,
+            infl.merge_at,
+            plan.total_steps
+        );
     }
     Ok((out, pending))
 }
@@ -625,16 +859,23 @@ struct InlineExec<'a, E: InnerEngine> {
     link: Option<&'a CommLink>,
     wc: &'a mut WorkerComm,
     rcs: &'a mut Vec<ReplicaComm>,
+    /// The dispatched segment's results, awaiting `collect` (the
+    /// sequential oracle has no concurrency to overlap with, so the
+    /// segment runs eagerly at dispatch).
+    staged: Option<SegmentData>,
 }
 
 impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
-    fn run_segment(
+    fn dispatch(
         &mut self,
         from: usize,
         to: usize,
         broadcast: &Broadcast,
-        encode: Option<&EncodeSpec>,
-    ) -> Result<SegmentData> {
+        payload: &PayloadSpec,
+    ) -> Result<()> {
+        if self.staged.is_some() {
+            bail!("drive: segment dispatched while another is uncollected");
+        }
         let adopt = broadcast_adopt(self.link, self.wc, broadcast)?;
         for rep in self.replicas.iter_mut() {
             rep.adopt(&adopt);
@@ -647,8 +888,8 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
                 losses[r].push(self.engine.inner_step(r, rep, t)?);
             }
         }
-        let payloads: Vec<SyncPayload> = match encode {
-            Some(spec) => {
+        let payloads: Vec<SyncPayload> = match payload {
+            PayloadSpec::Encoded(spec) => {
                 let link = self.link.ok_or_else(|| {
                     anyhow!("drive: encode requested without a comm link")
                 })?;
@@ -669,13 +910,21 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
                     })
                     .collect::<Result<_>>()?
             }
-            None => self
+            PayloadSpec::Params => self
                 .replicas
                 .iter()
                 .map(|r| SyncPayload::Params(r.state[..self.n_params].to_vec()))
                 .collect(),
+            PayloadSpec::None => (0..m).map(|_| SyncPayload::Skipped).collect(),
         };
-        Ok((losses, payloads))
+        self.staged = Some((losses, payloads));
+        Ok(())
+    }
+
+    fn collect(&mut self, _from: usize, _to: usize) -> Result<SegmentData> {
+        self.staged
+            .take()
+            .ok_or_else(|| anyhow!("drive: collect without a dispatched segment"))
     }
 }
 
@@ -683,12 +932,12 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
 
 enum Cmd {
     /// Apply the broadcast, run steps (from, to], then build the
-    /// boundary payload (encoded when `encode` is set).
+    /// boundary payload `payload` asks for.
     Run {
         from: usize,
         to: usize,
         broadcast: Broadcast,
-        encode: Option<EncodeSpec>,
+        payload: PayloadSpec,
     },
     /// Apply the final broadcast and exit, returning replica ownership.
     Finish { broadcast: Broadcast },
@@ -715,7 +964,7 @@ fn worker_loop<E: InnerEngine>(
                 from,
                 to,
                 broadcast,
-                encode,
+                payload: want,
             } => {
                 let mut report = WorkerReport {
                     reps: Vec::with_capacity(owned.len()),
@@ -744,8 +993,8 @@ fn worker_loop<E: InnerEngine>(
                                 }
                             }
                         }
-                        let payload = match (&encode, &link) {
-                            (Some(spec), Some(l)) => {
+                        let payload = match (&want, &link) {
+                            (PayloadSpec::Encoded(spec), Some(l)) => {
                                 match l.encode_replica(
                                     *rid,
                                     &rep.state,
@@ -761,11 +1010,14 @@ fn worker_loop<E: InnerEngine>(
                                     }
                                 }
                             }
-                            (Some(_), None) => {
+                            (PayloadSpec::Encoded(_), None) => {
                                 err = Some(anyhow!("worker: encode requested without a comm link"));
                                 break 'replicas;
                             }
-                            (None, _) => SyncPayload::Params(rep.state[..n_params].to_vec()),
+                            (PayloadSpec::Params, _) => {
+                                SyncPayload::Params(rep.state[..n_params].to_vec())
+                            }
+                            (PayloadSpec::None, _) => SyncPayload::Skipped,
                         };
                         report.reps.push((*rid, losses, payload));
                     }
@@ -812,22 +1064,28 @@ struct PoolExec {
 }
 
 impl SegmentExec for PoolExec {
-    fn run_segment(
+    /// Fire the segment at every worker and return immediately — the
+    /// coordinator reduces the in-flight sync while workers compute.
+    fn dispatch(
         &mut self,
         from: usize,
         to: usize,
         broadcast: &Broadcast,
-        encode: Option<&EncodeSpec>,
-    ) -> Result<SegmentData> {
+        payload: &PayloadSpec,
+    ) -> Result<()> {
         for tx in &self.txs {
             tx.send(Cmd::Run {
                 from,
                 to,
                 broadcast: broadcast.clone(),
-                encode: encode.cloned(),
+                payload: payload.clone(),
             })
             .map_err(|_| anyhow!("worker hung up before segment ({from}, {to}]"))?;
         }
+        Ok(())
+    }
+
+    fn collect(&mut self, from: usize, to: usize) -> Result<SegmentData> {
         let mut losses: Vec<Vec<f64>> = vec![Vec::new(); self.m];
         let mut payloads: Vec<Option<SyncPayload>> = (0..self.m).map(|_| None).collect();
         for (w, rx) in self.rxs.iter().enumerate() {
@@ -864,6 +1122,7 @@ fn _assert_send() {
     ok::<CommLink>();
     ok::<Broadcast>();
     ok::<SyncPayload>();
+    ok::<PayloadSpec>();
     ok::<Cmd>();
     ok::<WorkerReport>();
     ok::<Result<WorkerReport>>();
@@ -882,6 +1141,7 @@ mod tests {
             eval_every: None,
             log_every: 1000,
             workers: 1,
+            overlap_tau: 0,
         }
     }
 
@@ -889,20 +1149,35 @@ mod tests {
     fn boundaries_follow_sync_cadence() {
         let mut p = plan(20);
         p.sync_interval = 6;
-        assert_eq!(next_boundary(0, &p, true), 6);
-        assert_eq!(next_boundary(6, &p, true), 12);
-        assert_eq!(next_boundary(18, &p, true), 20); // clipped to T
+        assert_eq!(next_boundary(0, &p, true, None), 6);
+        assert_eq!(next_boundary(6, &p, true, None), 12);
+        assert_eq!(next_boundary(18, &p, true, None), 20); // clipped to T
         // DP with eval cadence
         let mut q = plan(10);
         q.eval_every = Some(4);
-        assert_eq!(next_boundary(0, &q, false), 4);
-        assert_eq!(next_boundary(8, &q, false), 10);
+        assert_eq!(next_boundary(0, &q, false, None), 4);
+        assert_eq!(next_boundary(8, &q, false, None), 10);
         // DP without evals: one segment
-        assert_eq!(next_boundary(0, &plan(10), false), 10);
+        assert_eq!(next_boundary(0, &plan(10), false, None), 10);
         // H larger than T never overflows
         let mut r = plan(7);
         r.sync_interval = usize::MAX;
-        assert_eq!(next_boundary(0, &r, true), 7);
+        assert_eq!(next_boundary(0, &r, true, None), 7);
+    }
+
+    #[test]
+    fn boundaries_include_pending_merge_points() {
+        // a sync in flight splits the segment at its merge point
+        let mut p = plan(20);
+        p.sync_interval = 6;
+        assert_eq!(next_boundary(6, &p, true, Some(8)), 8, "merge before next send");
+        assert_eq!(next_boundary(8, &p, true, None), 12, "after the merge");
+        // merge clamped to the end of training
+        assert_eq!(next_boundary(18, &p, true, Some(20)), 20);
+        // merges never matter for Data-Parallel
+        let mut q = plan(10);
+        q.eval_every = Some(4);
+        assert_eq!(next_boundary(0, &q, false, None), 4);
     }
 
     #[test]
@@ -944,6 +1219,31 @@ mod tests {
         let mut p = plan(5);
         p.eval_every = Some(0);
         assert!(drive(&NoopEngine, &mut reps, None, &p).is_err());
+    }
+
+    #[test]
+    fn overlap_guards_fail_loud() {
+        let mk = || ReplicaState {
+            state: vec![Arc::new(xla::Literal::vec1(&[0.0f32]))],
+            shard: TokenStream::new(crate::data::synthetic::CorpusSpec::default(), 0, 0),
+        };
+        // τ without a sync engine: nothing exists to delay
+        let mut reps = vec![mk()];
+        let mut p = plan(6);
+        p.overlap_tau = 1;
+        let err = drive(&NoopEngine, &mut reps, None, &p).expect_err("tau without sync");
+        assert!(format!("{err:#}").contains("overlap_tau"), "{err:#}");
+        // τ >= sync interval: two syncs would be in flight at once
+        let l = Arc::new(crate::runtime::FlatLayout::new(vec![vec![1]]));
+        let host = vec![crate::runtime::HostTensor::from_vec(&[1], vec![0.0])];
+        let lits = vec![Arc::new(xla::Literal::vec1(&[0.0f32]))];
+        let mut sync = OuterSync::new(Arc::clone(&l), &host, lits, 0.5, 0.0, 1).unwrap();
+        let mut p = plan(6);
+        p.sync_interval = 3;
+        p.overlap_tau = 3;
+        let err = drive(&NoopEngine, &mut reps, Some(&mut sync), &p)
+            .expect_err("tau >= interval");
+        assert!(format!("{err:#}").contains("in flight"), "{err:#}");
     }
 
     #[test]

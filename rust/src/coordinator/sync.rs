@@ -11,19 +11,25 @@
 //!    Delta = global - sum/M, and apply the Nesterov step, all as
 //!    element-wise loops over the fragment's precomputed offset ranges
 //!    (zero allocation in coordinator code);
-//! 3. **publish** — each synced leaf is uploaded to a literal exactly
+//! 3. **publish** — each synced leaf is uploaded to a literal at most
 //!    **once** and cached; the cache is the global model's literal
 //!    form for the eval and downstream paths (which previously
 //!    re-uploaded all N leaves per eval); a sync invalidates only the
 //!    fragment it touched. Under an identity down-wire the coordinator
 //!    broadcasts by handing every replica the same immutable
 //!    `Arc<xla::Literal>`, cutting host→device traffic from M×N to N
-//!    literals per full sync. Under a lossy down-wire
+//!    literals per full sync — those leaves are rebuilt eagerly, the
+//!    broadcast needs them anyway. Under a lossy down-wire
 //!    (`--outer-bits-down` below 32) the broadcast is instead encoded
 //!    **once** through the coordinator-owned [`DownWire`] — quantized,
 //!    error-compensated against the replicas' running view — and the
 //!    single byte payload is what crosses the wire; workers decode it
-//!    into their shared snapshot (see `crate::comm`).
+//!    into their shared snapshot and rebuild their own literals (see
+//!    `crate::comm`), so the coordinator's cache is **dirty-flag
+//!    lazy**: a sync only marks the touched leaves stale, and the
+//!    literal is materialized when eval/downstream actually reads the
+//!    cache through [`OuterSync::global_literals`]. A run that never
+//!    evaluates mid-stream pays zero coordinator uploads per sync.
 //!
 //! Literals are never mutated after construction (PJRT treats inputs
 //! as immutable and copies to device), so sharing one literal across
@@ -65,6 +71,11 @@ pub struct OuterSync {
     /// Cached literal per leaf — the global model as the device sees
     /// it. Every entry is shared (never rebuilt) until its leaf syncs.
     lits: Vec<Arc<xla::Literal>>,
+    /// Per-leaf staleness for `lits`, set by syncs under a lossy
+    /// down-wire (whose broadcast ships bytes, not these literals) and
+    /// cleared by [`OuterSync::global_literals`] when the cache is
+    /// actually read — the ROADMAP "dirty-flag lazy" cleanup.
+    lits_stale: Vec<bool>,
     /// Up-wire codec for encoded syncs (identity f32 unless the run
     /// compresses outer communication — `--outer-bits`).
     codec: Arc<dyn Codec>,
@@ -111,6 +122,7 @@ impl OuterSync {
             .map(|f| layout.fragment_ranges(fragments, f))
             .collect();
         let full = layout.full_range();
+        let lits_stale = vec![false; layout.n_leaves()];
         Ok(OuterSync {
             fragments,
             opt: OuterOpt::new(outer_lr, outer_momentum),
@@ -120,6 +132,7 @@ impl OuterSync {
             frag_ranges,
             full,
             lits: init_lits,
+            lits_stale,
             codec: codec_for(OuterBits::Fp32),
             down_codec: codec_for(OuterBits::Fp32),
             down: None,
@@ -218,9 +231,28 @@ impl OuterSync {
     }
 
     /// The global model's cached literal form (manifest leaf order) —
-    /// valid at every step, freshened leaf-by-leaf as syncs land.
-    pub fn global_literals(&self) -> &[Arc<xla::Literal>] {
-        &self.lits
+    /// valid at every step. Under an identity down-wire the cache is
+    /// freshened eagerly as syncs land (the broadcast shares those
+    /// exact literals); under a lossy down-wire a sync only marks its
+    /// leaves stale, and this read materializes them — so uploads
+    /// happen when eval/downstream actually consumes the cache, never
+    /// per sync.
+    pub fn global_literals(&mut self) -> Result<&[Arc<xla::Literal>]> {
+        if self.lits_stale.iter().any(|&s| s) {
+            for leaf in 0..self.lits_stale.len() {
+                if self.lits_stale[leaf] {
+                    self.lits[leaf] = Arc::new(self.global.leaf_literal(leaf)?);
+                    self.lits_stale[leaf] = false;
+                }
+            }
+        }
+        Ok(&self.lits)
+    }
+
+    /// How many cached leaves are currently stale (lossy down-wire
+    /// syncs not yet read back) — exposed so tests can pin laziness.
+    pub fn stale_literals(&self) -> usize {
+        self.lits_stale.iter().filter(|&&s| s).count()
     }
 
     /// Host→device uploads performed through the bus so far.
@@ -311,9 +343,11 @@ impl OuterSync {
         self.publish_and_record(frag, replica_params.len(), None)
     }
 
-    /// Shared tail of both sync entry points: upload each refreshed
-    /// leaf exactly once (Arc-shared by the eval path and, under an
-    /// identity down-wire, by every replica), drive the down-wire, and
+    /// Shared tail of both sync entry points: refresh the literal
+    /// cache (eagerly under an identity down-wire, whose broadcast
+    /// Arc-shares those exact literals with every replica; lazily —
+    /// stale marks only — under a lossy one, whose replicas rebuild
+    /// their own from the broadcast bytes), drive the down-wire, and
     /// record the sync's wire traffic. `bytes_per_replica` is the
     /// encoded up payload size, or `None` for the raw-f32 literal path
     /// (4 bytes/element). The broadcast is counted **once** per sync —
@@ -328,8 +362,16 @@ impl OuterSync {
         bytes_per_replica: Option<u64>,
     ) -> Result<()> {
         let layout = Arc::clone(self.global.layout());
-        for leaf in layout.leaves(self.fragments, frag) {
-            self.lits[leaf] = Arc::new(self.global.leaf_literal(leaf)?);
+        if self.down.is_some() {
+            // lossy broadcast: nothing consumes these literals at sync
+            // time — defer the uploads to the next cache read
+            for leaf in layout.leaves(self.fragments, frag) {
+                self.lits_stale[leaf] = true;
+            }
+        } else {
+            for leaf in layout.leaves(self.fragments, frag) {
+                self.lits[leaf] = Arc::new(self.global.leaf_literal(leaf)?);
+            }
         }
         let ranges: &[Range<usize>] = match frag {
             Some(f) => &self.frag_ranges[f],
@@ -492,7 +534,7 @@ mod tests {
         assert_eq!(sync.uploads(), l.n_leaves() as u64);
         // the cache matches the new global
         for leaf in 0..l.n_leaves() {
-            let v = sync.global_literals()[leaf].to_vec::<f32>().unwrap();
+            let v = sync.global_literals().unwrap()[leaf].to_vec::<f32>().unwrap();
             assert!(v.iter().all(|&x| x == 2.0));
         }
     }
@@ -512,9 +554,9 @@ mod tests {
         assert_eq!(sync.global().leaf(2), &[1.0]);
         assert!(sync.global().leaf(3).iter().all(|&x| x == 5.0));
         // untouched leaves still share the ORIGINAL literal allocation
-        assert!(Arc::ptr_eq(&sync.global_literals()[0], &init_lits[0]));
-        assert!(Arc::ptr_eq(&sync.global_literals()[2], &init_lits[2]));
-        assert!(!Arc::ptr_eq(&sync.global_literals()[1], &init_lits[1]));
+        assert!(Arc::ptr_eq(&sync.global_literals().unwrap()[0], &init_lits[0]));
+        assert!(Arc::ptr_eq(&sync.global_literals().unwrap()[2], &init_lits[2]));
+        assert!(!Arc::ptr_eq(&sync.global_literals().unwrap()[1], &init_lits[1]));
     }
 
     #[test]
@@ -609,9 +651,11 @@ mod tests {
             }
         }
         // eval cache still holds the exact global, not the lossy view
+        // (materialized lazily at this read)
         for leaf in [1usize, 3] {
-            let v = sync.global_literals()[leaf].to_vec::<f32>().unwrap();
-            for (x, i) in v.iter().zip(l.range(leaf)) {
+            let v = sync.global_literals().unwrap()[leaf].to_vec::<f32>().unwrap();
+            let r = l.range(leaf);
+            for (x, i) in v.iter().zip(r) {
                 assert_eq!(x.to_bits(), sync.global().data()[i].to_bits());
             }
         }
@@ -624,6 +668,40 @@ mod tests {
             sync.sync(&[&r[..], &r[..]], Some(0)).is_err(),
             "un-taken broadcast payload must refuse the next sync"
         );
+    }
+
+    #[test]
+    fn lossy_down_wire_defers_literal_uploads_until_read() {
+        use crate::comm::{codec_for, OuterBits};
+        let l = layout(); // 4 leaves; P=2 frag 1 = leaves {1, 3}
+        let init = host(&l, 1.0);
+        let init_lits = lits_of(&init);
+        let mut sync = OuterSync::new(Arc::clone(&l), &init, init_lits.clone(), 1.0, 0.0, 2)
+            .unwrap()
+            .with_codec(codec_for(OuterBits::Fp32), 3)
+            .with_down_codec(codec_for(OuterBits::Int8));
+        let r = lits_of(&host(&l, 5.0));
+        sync.sync(&[&r[..]], Some(1)).unwrap();
+        let _ = sync.take_broadcast_bytes().unwrap();
+        // the sync itself built no literals: workers rebuild their own
+        // from the broadcast, so the coordinator cache only marks
+        assert_eq!(sync.uploads(), 0, "lossy-down sync must not upload");
+        assert_eq!(sync.stale_literals(), 2);
+        // the first cache read materializes exactly the stale leaves
+        sync.global_literals().unwrap();
+        assert_eq!(sync.uploads(), 2);
+        assert_eq!(sync.stale_literals(), 0);
+        // repeated reads are free, untouched leaves keep the original
+        sync.global_literals().unwrap();
+        assert_eq!(sync.uploads(), 2);
+        assert!(Arc::ptr_eq(&sync.global_literals().unwrap()[0], &init_lits[0]));
+        // a second sync re-marks only its fragment
+        sync.sync(&[&r[..]], Some(0)).unwrap();
+        let _ = sync.take_broadcast_bytes().unwrap();
+        assert_eq!(sync.uploads(), 2);
+        assert_eq!(sync.stale_literals(), 2, "leaves {{0, 2}} stale");
+        sync.global_literals().unwrap();
+        assert_eq!(sync.uploads(), 4);
     }
 
     #[test]

@@ -8,6 +8,17 @@
 //! cross-datacenter network every step, DiLoCo(M>=2) all-reduces
 //! within-datacenter every step and cross-datacenter every H steps;
 //! DiLoCo(M=1) behaves like Data-Parallel plus the outer step every H.
+//!
+//! **Overlap term** (Streaming DiLoCo's delayed application,
+//! `--overlap-tau`): the H-cadence outer sync no longer stops the
+//! workers — its communication runs under τ inner steps of compute,
+//! so each sync's effective serial cost is
+//! `max(0, t_outer − τ·t_step)` where `t_step` is the per-step
+//! compute time. At τ=0 this collapses exactly to the paper's serial
+//! bubble; at `τ·t_step ≥ t_outer` the outer leg vanishes from the
+//! critical path entirely (the paper's Appendix-A aspiration, and
+//! the `stream` sweep grid's subject). Per-step gradient traffic is
+//! never overlapped — only the H-cadence outer legs are.
 
 use super::{allreduce_time, Network, WITHIN_DC};
 
@@ -57,6 +68,12 @@ pub struct WalltimeInput {
     /// otherwise. With both legs equal the outer term collapses to
     /// the classic symmetric all-reduce.
     pub outer_bits_down: f64,
+    /// Delayed-application window τ in inner steps (`--overlap-tau`):
+    /// each outer sync's communication is hidden under τ steps of
+    /// compute, charging `max(0, t_outer − τ·t_step)` per sync. 0 =
+    /// the paper's serial bubble, exactly. Data-Parallel ignores it
+    /// (no outer sync exists).
+    pub overlap_tau: f64,
 }
 
 /// One H-cadence outer sync over `r` nodes: the reduce leg at the up
@@ -118,6 +135,15 @@ pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
     let bits = input.params * BITS_PER_PARAM;
     let bits_up = input.params * input.outer_bits;
     let bits_down = input.params * input.outer_bits_down;
+    // the overlap window hides τ steps of compute worth of outer-leg
+    // communication per sync (delayed application); τ=0 degenerates to
+    // the paper's serial bubble, term for term
+    let t_step = if steps > 0.0 { compute / steps } else { 0.0 };
+    let overlapped_outer = |sync_every: usize| -> f64 {
+        let per_sync = outer_sync_time(bits_up, bits_down, chips, input.cross_dc);
+        let hidden = input.overlap_tau.max(0.0) * t_step;
+        (per_sync - hidden).max(0.0) * steps / sync_every as f64
+    };
     let comm = match input.algo {
         WalltimeAlgo::DataParallel => {
             // all-reduce over all R chips across DCs, every step
@@ -129,8 +155,7 @@ pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
         } => {
             // per-step all-reduce like DP, plus outer sync every H
             allreduce_time(bits, chips, input.cross_dc) * steps
-                + outer_sync_time(bits_up, bits_down, chips, input.cross_dc) * steps
-                    / sync_every as f64
+                + overlapped_outer(sync_every)
         }
         WalltimeAlgo::DiLoCo {
             replicas,
@@ -142,10 +167,9 @@ pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
             let inner = (2.0 * bits / WITHIN_DC.bandwidth_bps * (1.0 - m / chips).max(0.0)
                 + WITHIN_DC.latency_s)
                 * steps;
-            // outer: all R chips across DCs, every H steps
-            let outer = outer_sync_time(bits_up, bits_down, chips, input.cross_dc) * steps
-                / sync_every as f64;
-            inner + outer
+            // outer: all R chips across DCs, every H steps, minus the
+            // τ-step compute window it hides under
+            inner + overlapped_outer(sync_every)
         }
     };
     WalltimeBreakdown {
@@ -170,6 +194,7 @@ mod tests {
             cross_dc: net,
             outer_bits: BITS_PER_PARAM,
             outer_bits_down: BITS_PER_PARAM,
+            overlap_tau: 0.0,
         }
     }
 
@@ -325,6 +350,48 @@ mod tests {
         assert!(both4 < down4 && both4 < up4);
         // the two single-leg narrows are symmetric in the model
         assert!((down4 - up4).abs() / down4 < 1e-9);
+    }
+
+    #[test]
+    fn overlap_tau_strictly_shrinks_only_the_outer_term() {
+        for m in [1usize, 4] {
+            let algo = WalltimeAlgo::DiLoCo {
+                replicas: m,
+                sync_every: 30,
+            };
+            // τ=0 must be the exact pre-overlap formula (same floats)
+            let barrier = walltime(&base(algo, LOW));
+            let mut zero = base(algo, LOW);
+            zero.overlap_tau = 0.0;
+            assert_eq!(walltime(&zero).comm_s, barrier.comm_s, "M={m}");
+            // any τ>0 strictly shrinks comm while t_comm > 0, and
+            // compute is untouched
+            let mut prev = barrier.comm_s;
+            for tau in [1.0, 4.0, 16.0] {
+                let mut i = base(algo, LOW);
+                i.overlap_tau = tau;
+                let w = walltime(&i);
+                assert!(w.comm_s < prev, "M={m} tau={tau}: {} !< {prev}", w.comm_s);
+                assert_eq!(w.compute_s, barrier.compute_s);
+                prev = w.comm_s;
+            }
+            // a huge window floors the outer term at zero: comm equals
+            // the inner-only (H -> inf) schedule, never goes negative
+            let mut inf = base(algo, LOW);
+            if let WalltimeAlgo::DiLoCo { sync_every, .. } = &mut inf.algo {
+                *sync_every = usize::MAX;
+            }
+            let inner_only = walltime(&inf).comm_s;
+            let mut deep = base(algo, LOW);
+            deep.overlap_tau = 1e9;
+            let hidden = walltime(&deep).comm_s;
+            assert!((hidden - inner_only).abs() <= inner_only * 1e-12 + 1e-15, "M={m}");
+        }
+        // DP has no outer sync: τ is inert there
+        let mut dp = base(WalltimeAlgo::DataParallel, LOW);
+        let t0 = walltime(&dp).comm_s;
+        dp.overlap_tau = 8.0;
+        assert_eq!(walltime(&dp).comm_s, t0);
     }
 
     #[test]

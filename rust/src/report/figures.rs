@@ -222,6 +222,7 @@ pub fn fig6_12(store: &SweepStore) -> String {
                         } else {
                             r.outer_bits_down as f64
                         },
+                        overlap_tau: r.overlap_tau as f64,
                     });
                     writeln!(
                         s,
@@ -271,6 +272,7 @@ pub fn fig6_12(store: &SweepStore) -> String {
                         cross_dc: net,
                         outer_bits: BITS_PER_PARAM,
                         outer_bits_down: BITS_PER_PARAM,
+                        overlap_tau: 0.0,
                     });
                     writeln!(
                         s,

@@ -295,6 +295,53 @@ fn comm_sweep(model: &str) -> Vec<RunConfig> {
     out
 }
 
+/// The (fragments, τ, up, down) corners the `stream` grid covers,
+/// baseline first. With the default H=30 the fragment intervals are
+/// H/P ∈ {30, 15}, so every τ obeys the one-in-flight rule τ < H/P:
+/// the barrier baseline, streaming without overlap, shallow and deep
+/// delayed application, the quantized-overlap corner (4-bit wires both
+/// ways — the full Streaming DiLoCo configuration), and a deep window
+/// on the unfragmented schedule. Like [`COMM_PAIRS`], this constant is
+/// the single source of truth: `report::tables::table_stream` derives
+/// its row set from it, so extending the grid extends the report.
+pub const STREAM_CORNERS: [(usize, usize, OuterBits, OuterBits); 6] = [
+    (1, 0, OuterBits::Fp32, OuterBits::Fp32), // vanilla barrier baseline
+    (2, 0, OuterBits::Fp32, OuterBits::Fp32), // streaming fragments, barrier
+    (2, 1, OuterBits::Fp32, OuterBits::Fp32), // one-step delayed application
+    (2, 7, OuterBits::Fp32, OuterBits::Fp32), // ~half the fragment interval
+    (2, 1, OuterBits::Int4, OuterBits::Int4), // overlap + 4-bit wires both ways
+    (1, 14, OuterBits::Fp32, OuterBits::Fp32), // deep window, unfragmented
+];
+
+/// Overlapped outer sync (Streaming DiLoCo / DiLoCoX; ROADMAP item):
+/// the data behind `diloco report --exp stream` — loss vs τ over
+/// [`STREAM_CORNERS`], best-known hypers, no re-tune. The (P=1, τ=0)
+/// entries are the exact barrier baselines the deltas are measured
+/// against (bit-identical to the pre-overlap path).
+fn stream_sweep(model: &str) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    let c = lr_center(model);
+    for m in [2usize, 4] {
+        for (p, tau, up, down) in STREAM_CORNERS {
+            push(
+                &mut out,
+                model,
+                Algo::DiLoCo { replicas: m },
+                16,
+                c,
+                etas_for(m)[1],
+                |cf| {
+                    cf.streaming_fragments = p;
+                    cf.overlap_tau = tau;
+                    cf.outer_bits = up;
+                    cf.outer_bits_down = down;
+                },
+            );
+        }
+    }
+    out
+}
+
 /// Composite grids can repeat configurations (e.g. the m8 fast-pass
 /// entries also appear in the full m0 grid); keep the first occurrence.
 fn dedup_by_run_id(grid: Vec<RunConfig>) -> Vec<RunConfig> {
@@ -314,6 +361,7 @@ pub fn grid_names() -> Vec<&'static str> {
         "batch",
         "overtrain",
         "comm",
+        "stream",
         "all",
         "smoke",
     ]
@@ -328,6 +376,7 @@ pub fn grid_by_name(name: &str) -> Result<Vec<RunConfig>> {
         "batch" => batch_sweep("m0"),
         "overtrain" => overtrain_sweep("m0"),
         "comm" => comm_sweep("m0"),
+        "stream" => stream_sweep("m0"),
         // priority order: ladder first (Table 4 / scaling laws), then ablations
         "all" => {
             let mut v = main_grid("m0", 0);
@@ -337,6 +386,7 @@ pub fn grid_by_name(name: &str) -> Result<Vec<RunConfig>> {
             v.extend(batch_sweep("m0"));
             v.extend(overtrain_sweep("m0"));
             v.extend(comm_sweep("m0"));
+            v.extend(stream_sweep("m0"));
             dedup_by_run_id(v)
         }
         // wall-clock-constrained order: give every experiment some data
@@ -353,6 +403,9 @@ pub fn grid_by_name(name: &str) -> Result<Vec<RunConfig>> {
             // compression ladder early: loss-delta-vs-bits needs all
             // four widths of a config before the report says anything
             v.extend(comm_sweep("m0"));
+            // overlap corners early for the same reason: loss-vs-τ
+            // needs a run per corner before the stream report fills in
+            v.extend(stream_sweep("m0"));
             // minimal m8 coverage for Table 4's last column
             for b in [16usize, 32] {
                 push(&mut v, "m0", Algo::DiLoCo { replicas: 8 }, b, lr_center("m0"), 1.0, |cf| {
@@ -440,6 +493,45 @@ mod tests {
             if w[0].algo == w[1].algo {
                 assert_eq!(w[0].inner_lr, w[1].inner_lr);
                 assert_eq!(w[0].outer_lr, w[1].outer_lr);
+                assert_eq!(w[0].global_batch_seqs, w[1].global_batch_seqs);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_grid_covers_overlap_corners_and_obeys_the_schedule() {
+        let g = grid_by_name("stream").unwrap();
+        assert_eq!(g.len(), 12, "2 replica counts x 6 corners");
+        for cfg in &g {
+            let p = cfg.streaming_fragments.max(1);
+            assert_eq!(cfg.sync_every % p, 0, "H must divide into fragments: {cfg:?}");
+            let interval = cfg.sync_every / p;
+            assert!(
+                cfg.overlap_tau < interval,
+                "one sync in flight: tau {} vs H/P {interval} ({cfg:?})",
+                cfg.overlap_tau
+            );
+        }
+        // every corner present per replica count, baseline included
+        for m in [2usize, 4] {
+            for (p, tau, up, down) in STREAM_CORNERS {
+                assert!(
+                    g.iter().any(|c| c.algo == (Algo::DiLoCo { replicas: m })
+                        && c.streaming_fragments == p
+                        && c.overlap_tau == tau
+                        && c.outer_bits == up
+                        && c.outer_bits_down == down),
+                    "missing corner (P={p}, tau={tau}) for M={m}"
+                );
+            }
+        }
+        // within a replica count only the schedule/width knobs vary,
+        // so the report can attribute the whole loss delta to them
+        for w in g.windows(2) {
+            if w[0].algo == w[1].algo {
+                assert_eq!(w[0].inner_lr, w[1].inner_lr);
+                assert_eq!(w[0].outer_lr, w[1].outer_lr);
+                assert_eq!(w[0].sync_every, w[1].sync_every);
                 assert_eq!(w[0].global_batch_seqs, w[1].global_batch_seqs);
             }
         }

@@ -1,7 +1,20 @@
 //! Resumable sweep result store: JSON-lines, one record per run,
 //! keyed by a deterministic run id derived from the full config.
+//!
+//! # Sharding (scale-out)
+//!
+//! New records are appended to **per-model shard files** next to the
+//! base path — `sweep.jsonl` grows siblings `sweep.m0.jsonl`,
+//! `sweep.m1.jsonl`, ... — so a 10^4-run sweep never rewrites or
+//! rescans one monolithic file per model-scoped query. On open, the
+//! legacy single file (if present) is read first, then every shard,
+//! and a small in-memory index (model → sorted run ids) is built so
+//! `by_model_algo` touches only the asked-for model's records. Old
+//! single-file stores keep reading back unchanged; mixed stores
+//! (legacy file + shards) merge, with shard entries winning on id
+//! collision (they are strictly newer).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
@@ -12,19 +25,27 @@ use crate::util::json::Json;
 
 /// Deterministic, human-readable id for a run configuration.
 /// `outer_bits` / `outer_bits_down` are part of the id because a
-/// compressed wire on either leg changes training results; `workers`
-/// deliberately is NOT (bit-identical at any worker count — a pure
-/// wall-clock knob). For Data-Parallel there is no outer wire at all,
-/// so both knobs are inert and the id pins them to 32 — DP runs
-/// differing only in `--outer-bits` / `--outer-bits-down` are
+/// compressed wire on either leg changes training results, and so are
+/// the streaming fragment count (`_p{P}` — the fragment schedule
+/// changes which leaves sync when) and the overlap window (`_tau{τ}`
+/// — delayed application changes what the outer gradient sees);
+/// `workers` deliberately is NOT (bit-identical at any worker count —
+/// a pure wall-clock knob). For Data-Parallel there is no outer sync
+/// at all, so all four knobs are inert and the id pins them to
+/// (32, 32, 1, 0) — DP runs differing only in those flags are
 /// byte-identical and must collide.
 pub fn run_id(cfg: &RunConfig) -> String {
-    let (ob, obd) = match cfg.algo {
-        crate::coordinator::Algo::DataParallel => (32, 32),
-        _ => (cfg.outer_bits.bits(), cfg.outer_bits_down.bits()),
+    let (ob, obd, p, tau) = match cfg.algo {
+        crate::coordinator::Algo::DataParallel => (32, 32, 1, 0),
+        _ => (
+            cfg.outer_bits.bits(),
+            cfg.outer_bits_down.bits(),
+            cfg.streaming_fragments.max(1),
+            cfg.overlap_tau,
+        ),
     };
     format!(
-        "{}_{}_h{}_b{}_lr{:.5}_eta{:.2}_ot{}_s{}_ob{ob}_obd{obd}",
+        "{}_{}_h{}_b{}_lr{:.5}_eta{:.2}_ot{}_s{}_ob{ob}_obd{obd}_p{p}_tau{tau}",
         cfg.model,
         cfg.algo.label(),
         cfg.sync_every,
@@ -39,31 +60,115 @@ pub fn run_id(cfg: &RunConfig) -> String {
 pub struct SweepStore {
     path: PathBuf,
     records: BTreeMap<String, RunMetrics>,
+    /// model → run ids, built on load and maintained on insert: the
+    /// index that keeps per-model queries from scanning every record.
+    by_model: BTreeMap<String, BTreeSet<String>>,
+}
+
+/// The shard file a model's records append to: `<stem>.<model>.jsonl`
+/// next to the base path (model names are sanitized to the filename-
+/// safe alphabet; anything exotic lands in the `other` shard).
+fn shard_path(base: &Path, model: &str) -> PathBuf {
+    let stem = base
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("sweep");
+    let safe: String = model
+        .chars()
+        .filter(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+        .collect();
+    let safe = if safe.is_empty() { "other".to_string() } else { safe };
+    base.with_file_name(format!("{stem}.{safe}.jsonl"))
 }
 
 impl SweepStore {
-    /// Open (creating if absent) a JSON-lines store.
+    /// Open (creating the parent dir if absent) a store: the legacy
+    /// single file at `path` plus every `<stem>.<model>.jsonl` shard
+    /// beside it.
     pub fn open(path: &Path) -> Result<SweepStore> {
-        let mut records = BTreeMap::new();
+        let mut store = SweepStore {
+            path: path.to_path_buf(),
+            records: BTreeMap::new(),
+            by_model: BTreeMap::new(),
+        };
         if path.is_file() {
-            let text = std::fs::read_to_string(path)?;
-            for (lineno, line) in text.lines().enumerate() {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let j = Json::parse(line)
-                    .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
-                let id = j.str_of("id")?;
-                let metrics = RunMetrics::from_json(j.req("metrics")?)?;
-                records.insert(id, metrics);
-            }
+            store.read_file(path)?;
         } else if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        Ok(SweepStore {
-            path: path.to_path_buf(),
-            records,
-        })
+        // shards, in sorted filename order (deterministic load; shard
+        // entries win id collisions against the legacy file)
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("sweep")
+            .to_string();
+        let base_name = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+        if let Some(parent) = path.parent() {
+            if parent.as_os_str().is_empty() || parent.is_dir() {
+                let dir = if parent.as_os_str().is_empty() {
+                    Path::new(".")
+                } else {
+                    parent
+                };
+                // only names `shard_path` itself writes qualify:
+                // `<stem>.<model>.jsonl` with <model> non-empty and
+                // drawn from the sanitized shard alphabet — so a
+                // stray `sweep.jsonl.bak` or `sweep.notes 2.jsonl`
+                // beside the store is never ingested as a shard
+                let is_shard = |n: &str| -> bool {
+                    if n == base_name || !n.ends_with(".jsonl") {
+                        return false;
+                    }
+                    n.strip_prefix(&format!("{stem}."))
+                        .and_then(|rest| rest.strip_suffix(".jsonl"))
+                        .map_or(false, |model| {
+                            !model.is_empty()
+                                && model.chars().all(|c| {
+                                    c.is_ascii_alphanumeric() || c == '-' || c == '_'
+                                })
+                        })
+                };
+                let mut shards: Vec<PathBuf> = std::fs::read_dir(dir)?
+                    .filter_map(|e| e.ok())
+                    .map(|e| e.path())
+                    .filter(|p| {
+                        p.is_file()
+                            && p.file_name()
+                                .and_then(|s| s.to_str())
+                                .map_or(false, |n| is_shard(n))
+                    })
+                    .collect();
+                shards.sort();
+                for shard in shards {
+                    store.read_file(&shard)?;
+                }
+            }
+        }
+        Ok(store)
+    }
+
+    fn read_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+            let id = j.str_of("id")?;
+            let metrics = RunMetrics::from_json(j.req("metrics")?)?;
+            self.index(&id, &metrics);
+            self.records.insert(id, metrics);
+        }
+        Ok(())
+    }
+
+    fn index(&mut self, id: &str, metrics: &RunMetrics) {
+        self.by_model
+            .entry(metrics.model.clone())
+            .or_default()
+            .insert(id.to_string());
     }
 
     pub fn contains(&self, id: &str) -> bool {
@@ -78,7 +183,8 @@ impl SweepStore {
         self.records.is_empty()
     }
 
-    /// Append one record (durable immediately — O_APPEND semantics).
+    /// Append one record to its model's shard (durable immediately —
+    /// O_APPEND semantics).
     pub fn insert(&mut self, id: &str, metrics: &RunMetrics) -> Result<()> {
         let record = Json::obj(vec![
             ("id", Json::str(id)),
@@ -87,8 +193,9 @@ impl SweepStore {
         let mut f = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
-            .open(&self.path)?;
+            .open(shard_path(&self.path, &metrics.model))?;
         writeln!(f, "{}", record.to_string_compact())?;
+        self.index(id, metrics);
         self.records.insert(id.to_string(), metrics.clone());
         Ok(())
     }
@@ -101,12 +208,16 @@ impl SweepStore {
         self.records.values()
     }
 
-    /// All records for a given (model, algo label) pair.
+    /// All records for a given (model, algo label) pair — resolved
+    /// through the model index, in run-id order (the same order the
+    /// pre-index full scan produced).
     pub fn by_model_algo(&self, model: &str, algo: &str) -> Vec<&RunMetrics> {
-        self.records
-            .values()
-            .filter(|r| r.model == model && r.algo == algo)
-            .collect()
+        self.by_model.get(model).map_or_else(Vec::new, |ids| {
+            ids.iter()
+                .filter_map(|id| self.records.get(id))
+                .filter(|r| r.model == model && r.algo == algo)
+                .collect()
+        })
     }
 
     /// Best (lowest final eval loss) record matching a predicate.
@@ -144,6 +255,8 @@ mod tests {
             downstream: vec![("cloze-long".into(), 0.5)],
             outer_syncs: 0,
             wall_secs: 1.0,
+            fragments: 1,
+            overlap_tau: 0,
             outer_bits: 32,
             outer_bits_down: 32,
             wire_up_bytes: 0,
@@ -166,30 +279,44 @@ mod tests {
         let mut d = c.clone();
         d.outer_bits = crate::comm::OuterBits::Int4;
         assert_ne!(run_id(&c), run_id(&d));
-        assert!(run_id(&c).ends_with("_ob32_obd32"));
-        assert!(run_id(&d).ends_with("_ob4_obd32"));
+        assert!(run_id(&c).ends_with("_ob32_obd32_p1_tau0"));
+        assert!(run_id(&d).ends_with("_ob4_obd32_p1_tau0"));
         let mut d2 = c.clone();
         d2.outer_bits_down = crate::comm::OuterBits::Int8;
         assert_ne!(run_id(&c), run_id(&d2));
         assert_ne!(run_id(&d), run_id(&d2));
-        assert!(run_id(&d2).ends_with("_ob32_obd8"));
+        assert!(run_id(&d2).ends_with("_ob32_obd8_p1_tau0"));
+        // fragment count and overlap window change training results,
+        // so they fork the id too
+        let mut d3 = c.clone();
+        d3.streaming_fragments = 2;
+        assert_ne!(run_id(&c), run_id(&d3));
+        assert!(run_id(&d3).ends_with("_p2_tau0"));
+        let mut d4 = c.clone();
+        d4.overlap_tau = 3;
+        assert_ne!(run_id(&c), run_id(&d4));
+        assert_ne!(run_id(&d3), run_id(&d4));
+        assert!(run_id(&d4).ends_with("_p1_tau3"));
         // ...while workers stays excluded (bit-identical results)...
         let mut e = RunConfig::default();
         e.workers = 8;
         assert_eq!(run_id(&a), run_id(&e));
-        // ...and DP ids pin ob=obd=32: both knobs are inert without an
-        // outer sync, so differing DP runs are the same run
+        // ...and DP ids pin ob=obd=32, p=1, tau=0: every outer-sync
+        // knob is inert without an outer sync, so differing DP runs
+        // are the same run
         let mut f = RunConfig::default();
         f.outer_bits = crate::comm::OuterBits::Int4;
         f.outer_bits_down = crate::comm::OuterBits::Int4;
+        f.streaming_fragments = 4;
+        f.overlap_tau = 2;
         assert_eq!(run_id(&a), run_id(&f));
     }
 
     #[test]
     fn roundtrip_through_file() {
         let dir = std::env::temp_dir().join(format!("sweep_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("store.jsonl");
-        let _ = std::fs::remove_file(&path);
         {
             let mut s = SweepStore::open(&path).unwrap();
             s.insert("a", &metrics("m0", 3.5)).unwrap();
@@ -204,5 +331,66 @@ mod tests {
         let rec = &s.by_model_algo("m0", "dp")[0];
         assert_eq!(rec.downstream[0].0, "cloze-long");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shards_by_model_and_still_reads_legacy_single_files() {
+        let dir = std::env::temp_dir().join(format!("sweep_shard_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sweep.jsonl");
+
+        // a pre-sharding store: one monolithic file at the base path
+        {
+            let legacy = Json::obj(vec![
+                ("id", Json::str("old0")),
+                ("metrics", metrics("m0", 4.0).to_json()),
+            ]);
+            std::fs::write(&path, format!("{}\n", legacy.to_string_compact())).unwrap();
+        }
+        {
+            let mut s = SweepStore::open(&path).unwrap();
+            assert!(s.contains("old0"), "legacy single file must read back");
+            // new inserts land in per-model shards, never the base file
+            s.insert("a0", &metrics("m0", 3.5)).unwrap();
+            s.insert("a1", &metrics("m1", 3.2)).unwrap();
+            s.insert("a2", &metrics("m1", 3.1)).unwrap();
+        }
+        assert!(dir.join("sweep.m0.jsonl").is_file());
+        assert!(dir.join("sweep.m1.jsonl").is_file());
+        let base_len = std::fs::read_to_string(&path).unwrap().lines().count();
+        assert_eq!(base_len, 1, "base file must not grow after sharding");
+
+        // foreign siblings are NOT shards: garbage content here must
+        // not break (or leak into) the store
+        std::fs::write(dir.join("sweep.notes 2.jsonl"), "not json\n").unwrap();
+        std::fs::write(dir.join("sweep.jsonl.bak"), "not json\n").unwrap();
+
+        // reopen: legacy + both shards merge, and the model index
+        // routes per-model queries without a full scan
+        let s = SweepStore::open(&path).unwrap();
+        assert_eq!(s.len(), 4);
+        for id in ["old0", "a0", "a1", "a2"] {
+            assert!(s.contains(id), "{id}");
+        }
+        assert_eq!(s.by_model_algo("m0", "dp").len(), 2);
+        assert_eq!(s.by_model_algo("m1", "dp").len(), 2);
+        assert!(s.by_model_algo("m7", "dp").is_empty());
+        assert_eq!(s.best(|_| true).unwrap().final_eval_loss, 3.1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_paths_are_sanitized() {
+        let base = Path::new("runs/sweep.jsonl");
+        assert_eq!(
+            shard_path(base, "m0"),
+            Path::new("runs/sweep.m0.jsonl")
+        );
+        assert_eq!(
+            shard_path(base, "../evil/../m0"),
+            Path::new("runs/sweep.evilm0.jsonl")
+        );
+        assert_eq!(shard_path(base, "///"), Path::new("runs/sweep.other.jsonl"));
     }
 }

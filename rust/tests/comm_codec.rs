@@ -593,6 +593,7 @@ fn int4_outer_sync_with_error_feedback_is_unbiased_over_syncs() {
         // broadcast: the shared snapshot adopts the refreshed global
         let adopt: Vec<(usize, Arc<xla::Literal>)> = sync
             .global_literals()
+            .unwrap()
             .iter()
             .enumerate()
             .map(|(l, lit)| (l, Arc::clone(lit)))
@@ -738,6 +739,7 @@ fn twin_run(
         eval_every: Some(7),
         log_every: 100,
         workers,
+        overlap_tau: 0,
     };
     let out = drive(&engine, &mut replicas, Some(&mut sync), &plan).expect("drive");
     TwinResult {

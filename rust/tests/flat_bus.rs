@@ -149,7 +149,7 @@ fn prop_flat_bus_matches_scalar_oracle() {
 
                 // bit-for-bit: same element-wise operation order
                 for leaf in 0..layout.n_leaves() {
-                    let got = flat.global().leaf(leaf);
+                    let got: Vec<f32> = flat.global().leaf(leaf).to_vec();
                     let want = &oracle_global[leaf];
                     for i in 0..want.len() {
                         if got[i].to_bits() != want[i].to_bits() {
@@ -160,7 +160,9 @@ fn prop_flat_bus_matches_scalar_oracle() {
                         }
                     }
                     // and the literal cache always mirrors the arena
-                    let cached = flat.global_literals()[leaf].to_vec::<f32>().unwrap();
+                    let cached = flat.global_literals().unwrap()[leaf]
+                        .to_vec::<f32>()
+                        .unwrap();
                     if cached != got {
                         return Err(format!("leaf {leaf}: stale literal cache"));
                     }
@@ -226,7 +228,7 @@ fn streaming_broadcast_uploads_only_due_fragment_and_flush_clears_stale() {
         // broadcast: all replicas adopt the same literal per synced leaf
         for s in states.iter_mut() {
             for leaf in sync.synced_leaves(frag) {
-                s[leaf] = Arc::clone(&sync.global_literals()[leaf]);
+                s[leaf] = Arc::clone(&sync.global_literals().unwrap()[leaf]);
             }
         }
         for leaf in sync.synced_leaves(frag) {
@@ -242,11 +244,11 @@ fn streaming_broadcast_uploads_only_due_fragment_and_flush_clears_stale() {
     for leaf in 0..layout.n_leaves() {
         for s in &states {
             assert!(
-                Arc::ptr_eq(&s[leaf], &sync.global_literals()[leaf]),
+                Arc::ptr_eq(&s[leaf], &sync.global_literals().unwrap()[leaf]),
                 "leaf {leaf} left stale after final flush"
             );
         }
-        let cached = sync.global_literals()[leaf].to_vec::<f32>().unwrap();
+        let cached = sync.global_literals().unwrap()[leaf].to_vec::<f32>().unwrap();
         assert_eq!(cached, sync.global().leaf(leaf).to_vec());
     }
 }

@@ -1,0 +1,451 @@
+//! Overlapped outer sync invariants (the non-blocking fragment
+//! pipeline with delayed application — see `coordinator::pool`):
+//!
+//! (1) **τ=0 is the barrier, bit for bit, at every (up, down) codec
+//!     pair**: `drive` with `overlap_tau = 0` is pinned against an
+//!     in-test *barrier oracle* — a hand-rolled replay of the retired
+//!     segment loop (step, encode, `OuterSync::sync`/`sync_encoded`,
+//!     broadcast-adopt, eval at the barrier) that never goes through
+//!     the pipeline code. Step losses, eval curve, global arena,
+//!     final replica payloads, wire bytes on both legs, and bus
+//!     uploads must all agree exactly.
+//! (2) **workers 1 vs 2 vs 4 are bit-identical at τ > 0** for every
+//!     codec pair — the delayed merge schedule, EF streams, and
+//!     encode seeds are scheduling-independent.
+//! (3) delayed application changes the *schedule*, never the totals:
+//!     τ>0 keeps sync counts and wire bytes, moves losses, and
+//!     grounds evals on the merge schedule (an in-flight sync is
+//!     invisible to eval).
+//! (4) merge-ordering guards fail loud: τ without a sync engine, τ
+//!     big enough to put two syncs in flight, and the end-of-training
+//!     drain that must leave no fragment unflushed.
+//!
+//! Host tier only: no PJRT, no artifacts.
+
+use std::sync::Arc;
+
+use diloco::comm::{codec_for, OuterBits, ReplicaComm, WorkerComm};
+use diloco::coordinator::{drive, DrivePlan, InnerEngine, OuterSync, ReplicaState};
+use diloco::data::synthetic::{CorpusSpec, TokenStream};
+use diloco::runtime::{FlatLayout, HostTensor};
+
+// ---- the deterministic host-math engine (same as the pool twins) -----
+
+struct ToyEngine {
+    n: usize,
+}
+
+impl InnerEngine for ToyEngine {
+    fn inner_step(
+        &self,
+        rep: usize,
+        replica: &mut ReplicaState,
+        t: usize,
+    ) -> anyhow::Result<f64> {
+        let toks = replica.shard.next_batch(2, 8);
+        let mut loss = 0.0f64;
+        for leaf in 0..self.n {
+            let lit = &replica.state[leaf];
+            let dims = lit.array_shape()?.dims().to_vec();
+            let mut v = lit.to_vec::<f32>()?;
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = 0.5 * *x
+                    + 1e-3 * toks[(i + t) % toks.len()] as f32
+                    + 1e-2 * (t as f32 + rep as f32 * 0.25).sin();
+            }
+            loss += v.iter().map(|&f| f as f64).sum::<f64>() / v.len() as f64;
+            replica.state[leaf] = Arc::new(xla::Literal::vec1(&v).reshape(&dims)?);
+        }
+        Ok(loss / self.n as f64)
+    }
+
+    fn eval(&self, params: &[Arc<xla::Literal>]) -> anyhow::Result<f64> {
+        let mut acc = 0.0f64;
+        for (i, p) in params.iter().enumerate() {
+            for x in p.to_vec::<f32>()? {
+                acc += x as f64 * (i + 1) as f64;
+            }
+        }
+        Ok(acc)
+    }
+}
+
+fn layout() -> Arc<FlatLayout> {
+    Arc::new(FlatLayout::new(vec![
+        vec![3, 2],
+        vec![4],
+        vec![2, 2],
+        vec![5],
+        vec![1],
+    ]))
+}
+
+fn init_lits(l: &FlatLayout) -> Vec<Arc<xla::Literal>> {
+    (0..l.n_leaves())
+        .map(|leaf| {
+            let v: Vec<f32> = (0..l.len(leaf))
+                .map(|i| ((leaf * 37 + i * 11 + 5) % 23) as f32 * 0.1 - 1.0)
+                .collect();
+            Arc::new(HostTensor::from_vec(l.shape(leaf), v).to_literal().unwrap())
+        })
+        .collect()
+}
+
+fn fresh_replicas(l: &FlatLayout, m: usize) -> Vec<ReplicaState> {
+    let init = init_lits(l);
+    (0..m)
+        .map(|r| ReplicaState {
+            state: init.clone(),
+            shard: TokenStream::new(CorpusSpec::default(), 5, r as u64),
+        })
+        .collect()
+}
+
+fn fresh_sync(l: &Arc<FlatLayout>, up: OuterBits, down: OuterBits, fragments: usize) -> OuterSync {
+    let init = init_lits(l);
+    let host: Vec<HostTensor> = init
+        .iter()
+        .map(|lit| HostTensor::from_literal(lit).unwrap())
+        .collect();
+    OuterSync::new(Arc::clone(l), &host, init, 0.7, 0.9, fragments)
+        .unwrap()
+        .with_codec(codec_for(up), 42)
+        .with_down_codec(codec_for(down))
+}
+
+/// Everything both the oracle and the pipeline report.
+#[derive(PartialEq, Debug)]
+struct RunTrace {
+    step_losses: Vec<f64>,
+    eval_curve: Vec<(usize, f64)>,
+    outer_syncs: usize,
+    global_bits: Vec<u32>,
+    finals: Vec<Vec<Vec<f32>>>,
+    wire_up: u64,
+    wire_down: u64,
+    uploads: u64,
+}
+
+const TOTAL: usize = 26;
+const INTERVAL: usize = 6; // per-fragment sync interval (H/P)
+const FRAGMENTS: usize = 2;
+// Every third step: hits both in-segment steps (3, 9, 15, 21) and
+// sync/merge boundaries (6, 12, 18, 24), so both eval paths — and
+// their grounding on the merge schedule — are exercised.
+const EVAL_EVERY: usize = 3;
+
+fn finals_of(l: &FlatLayout, replicas: &[ReplicaState]) -> Vec<Vec<Vec<f32>>> {
+    replicas
+        .iter()
+        .map(|r| {
+            (0..l.n_leaves())
+                .map(|leaf| r.state[leaf].to_vec::<f32>().unwrap())
+                .collect()
+        })
+        .collect()
+}
+
+/// The schedule through the real pipeline (`coordinator::pool::drive`).
+fn pipeline_run(up: OuterBits, down: OuterBits, m: usize, workers: usize, tau: usize) -> RunTrace {
+    let l = layout();
+    let engine = ToyEngine { n: l.n_leaves() };
+    let mut replicas = fresh_replicas(&l, m);
+    let mut sync = fresh_sync(&l, up, down, FRAGMENTS);
+    let plan = DrivePlan {
+        total_steps: TOTAL,
+        sync_interval: INTERVAL,
+        fragments: FRAGMENTS,
+        n_params: l.n_leaves(),
+        eval_every: Some(EVAL_EVERY),
+        log_every: 1000,
+        workers,
+        overlap_tau: tau,
+    };
+    let out = drive(&engine, &mut replicas, Some(&mut sync), &plan).expect("drive");
+    RunTrace {
+        step_losses: out.step_losses,
+        eval_curve: out.eval_curve,
+        outer_syncs: out.outer_syncs,
+        global_bits: sync.global().data().iter().map(|x| x.to_bits()).collect(),
+        finals: finals_of(&l, &replicas),
+        wire_up: sync.wire_stats().total_up(),
+        wire_down: sync.wire_stats().total_down(),
+        uploads: sync.uploads(),
+    }
+}
+
+/// The retired barrier semantics, replayed by hand — never touches the
+/// pipeline's dispatch/collect/in-flight machinery. Sequential
+/// (step-major, replica-minor), sync at every boundary, broadcast
+/// adopted on the spot, evals inside a segment read the previous
+/// sync's global and boundary evals the fresh one.
+fn barrier_oracle(up: OuterBits, down: OuterBits, m: usize) -> RunTrace {
+    let l = layout();
+    let engine = ToyEngine { n: l.n_leaves() };
+    let mut replicas = fresh_replicas(&l, m);
+    let mut sync = fresh_sync(&l, up, down, FRAGMENTS);
+    let link = sync.link();
+    let active = link.is_active();
+    let wire_up = !codec_for(up).is_identity();
+    let wire_down = !codec_for(down).is_identity();
+    let mut wc = WorkerComm::default();
+    let mut rcs: Vec<ReplicaComm> = (0..m).map(|_| ReplicaComm::default()).collect();
+    if active {
+        link.init_snapshot(&mut wc, &replicas[0].state).unwrap();
+        for rc in rcs.iter_mut() {
+            link.init_replica(rc);
+        }
+    }
+
+    let mut step_losses = Vec::new();
+    let mut eval_curve = Vec::new();
+    let mut syncs = 0u64;
+    let mut t0 = 0usize;
+    while t0 < TOTAL {
+        let t1 = TOTAL.min((t0 / INTERVAL + 1) * INTERVAL);
+        // inner steps, step-major / replica-minor, mean in replica order
+        for t in t0 + 1..=t1 {
+            let mut step_loss = 0.0f64;
+            for (r, rep) in replicas.iter_mut().enumerate() {
+                step_loss += engine.inner_step(r, rep, t).unwrap() / m as f64;
+            }
+            step_losses.push(step_loss);
+        }
+        // in-segment evals: the previous sync's global
+        for t in t0 + 1..t1 {
+            if t % EVAL_EVERY == 0 && t != TOTAL {
+                eval_curve.push((t, engine.eval(sync.global_literals().unwrap()).unwrap()));
+            }
+        }
+        // the outer sync at the barrier
+        let frag = if FRAGMENTS > 1 && t1 != TOTAL {
+            Some(((t1 / INTERVAL).wrapping_sub(1)) % FRAGMENTS)
+        } else {
+            None
+        };
+        if wire_up {
+            let payloads: Vec<Vec<u8>> = {
+                let wc = &mut wc;
+                replicas
+                    .iter()
+                    .zip(rcs.iter_mut())
+                    .enumerate()
+                    .map(|(r, (rep, rc))| {
+                        link.encode_replica(r, &rep.state, wc, rc, frag, syncs).unwrap()
+                    })
+                    .collect()
+            };
+            let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+            sync.sync_encoded(&frames, frag).unwrap();
+        } else {
+            let parts: Vec<&[Arc<xla::Literal>]> =
+                replicas.iter().map(|r| &r.state[..]).collect();
+            sync.sync(&parts, frag).unwrap();
+        }
+        syncs += 1;
+        // broadcast, adopted on the spot (nothing runs in between)
+        let adopt: Vec<(usize, Arc<xla::Literal>)> = if wire_down {
+            let bytes = sync.take_broadcast_bytes().expect("lossy down payload");
+            link.adopt_encoded(&mut wc, frag, &bytes).unwrap()
+        } else {
+            let leaves: Vec<usize> = sync.synced_leaves(frag).collect();
+            let lits = sync.global_literals().unwrap();
+            let adopt: Vec<(usize, Arc<xla::Literal>)> = leaves
+                .into_iter()
+                .map(|leaf| (leaf, Arc::clone(&lits[leaf])))
+                .collect();
+            if active {
+                link.adopt_literals(&mut wc, &adopt).unwrap();
+            }
+            adopt
+        };
+        for rep in replicas.iter_mut() {
+            for (leaf, lit) in &adopt {
+                rep.state[*leaf] = Arc::clone(lit);
+            }
+        }
+        // boundary eval: the fresh post-sync global
+        if t1 % EVAL_EVERY == 0 && t1 != TOTAL {
+            eval_curve.push((t1, engine.eval(sync.global_literals().unwrap()).unwrap()));
+        }
+        t0 = t1;
+    }
+    RunTrace {
+        step_losses,
+        eval_curve,
+        outer_syncs: syncs as usize,
+        global_bits: sync.global().data().iter().map(|x| x.to_bits()).collect(),
+        finals: finals_of(&l, &replicas),
+        wire_up: sync.wire_stats().total_up(),
+        wire_down: sync.wire_stats().total_down(),
+        uploads: sync.uploads(),
+    }
+}
+
+// ---- (1) τ=0 == the barrier, for every codec pair --------------------
+
+#[test]
+fn tau_zero_is_bit_identical_to_the_barrier_for_every_codec_pair() {
+    for up in OuterBits::ALL {
+        for down in OuterBits::ALL {
+            let oracle = barrier_oracle(up, down, 4);
+            assert_eq!(oracle.step_losses.len(), TOTAL, "{up:?}/{down:?}");
+            assert!(oracle.outer_syncs > 0 && oracle.wire_up > 0, "{up:?}/{down:?}");
+            for workers in [1usize, 2] {
+                let pipe = pipeline_run(up, down, 4, workers, 0);
+                assert_eq!(
+                    pipe, oracle,
+                    "{up:?}/{down:?} w={workers}: τ=0 must replay the barrier \
+                     schedule bit for bit"
+                );
+            }
+        }
+    }
+}
+
+// ---- (2) workers bit-identical at τ > 0 ------------------------------
+
+#[test]
+fn workers_bit_identical_at_positive_tau_for_every_codec_pair() {
+    // τ=1: every merge lands mid-segment; τ=3 (= (H/P)/2): the last
+    // send's merge collides with the end of training and exercises the
+    // drain (merge-then-flush at T).
+    for up in OuterBits::ALL {
+        for down in OuterBits::ALL {
+            for tau in [1usize, INTERVAL / 2] {
+                let oracle = pipeline_run(up, down, 4, 1, tau);
+                assert_eq!(oracle.step_losses.len(), TOTAL);
+                for workers in [2usize, 4] {
+                    let par = pipeline_run(up, down, 4, workers, tau);
+                    assert_eq!(
+                        par, oracle,
+                        "{up:?}/{down:?} τ={tau} w={workers}: overlap must stay \
+                         scheduling-independent"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- (3) τ changes the schedule, not the totals ----------------------
+
+#[test]
+fn overlap_delays_merges_without_changing_sync_totals() {
+    let barrier = pipeline_run(OuterBits::Fp32, OuterBits::Fp32, 4, 1, 0);
+    let overlap = pipeline_run(OuterBits::Fp32, OuterBits::Fp32, 4, 1, 3);
+    // same sync events, same wire traffic: overlap defers application,
+    // it never skips or duplicates communication
+    assert_eq!(overlap.outer_syncs, barrier.outer_syncs);
+    assert_eq!(overlap.wire_up, barrier.wire_up);
+    assert_eq!(overlap.wire_down, barrier.wire_down);
+    // but delayed application is a different training trajectory
+    assert_ne!(
+        overlap.step_losses, barrier.step_losses,
+        "τ>0 must actually delay the merge"
+    );
+
+    // eval grounding on the merge schedule: the eval at step 6 lands
+    // on the send boundary, τ steps before merge(9) — the τ=3 run must
+    // still see the INITIAL global (the sync is in flight, no replica
+    // has it), while the barrier run already sees sync(6)'s result.
+    let l = layout();
+    let engine = ToyEngine { n: l.n_leaves() };
+    let at_init = engine.eval(&init_lits(&l)).unwrap();
+    assert_eq!(overlap.eval_curve[0], (3, at_init), "pre-sync eval sees init");
+    assert_eq!(overlap.eval_curve[1].0, 6);
+    assert_eq!(
+        overlap.eval_curve[1].1, at_init,
+        "an in-flight sync must be invisible to eval"
+    );
+    assert_eq!(barrier.eval_curve[1].0, 6);
+    assert_ne!(
+        barrier.eval_curve[1].1, at_init,
+        "the barrier applies sync(6) at its own boundary"
+    );
+}
+
+// ---- (4) drain + guards ---------------------------------------------
+
+#[test]
+fn end_of_training_drains_the_in_flight_fragment() {
+    // τ=3, sends at 6/12/18/24 and the final flush at 26: merge(24)
+    // clamps to 26, so the drain must merge it, then flush — 5 syncs,
+    // and every replica ends on the shared final global literals.
+    let l = layout();
+    let engine = ToyEngine { n: l.n_leaves() };
+    let mut replicas = fresh_replicas(&l, 4);
+    let mut sync = fresh_sync(&l, OuterBits::Fp32, OuterBits::Fp32, FRAGMENTS);
+    let plan = DrivePlan {
+        total_steps: TOTAL,
+        sync_interval: INTERVAL,
+        fragments: FRAGMENTS,
+        n_params: l.n_leaves(),
+        eval_every: None,
+        log_every: 1000,
+        workers: 2,
+        overlap_tau: 3,
+    };
+    let out = drive(&engine, &mut replicas, Some(&mut sync), &plan).expect("drive");
+    assert_eq!(out.outer_syncs, 5, "4 fragment sends + the final full flush");
+    let lits = sync.global_literals().unwrap().to_vec();
+    for (r, rep) in replicas.iter().enumerate() {
+        for leaf in 0..l.n_leaves() {
+            assert!(
+                Arc::ptr_eq(&rep.state[leaf], &lits[leaf]),
+                "replica {r} leaf {leaf}: final flush must broadcast to everyone"
+            );
+        }
+    }
+}
+
+#[test]
+fn merge_ordering_guards_fail_loud() {
+    let l = layout();
+    let engine = ToyEngine { n: l.n_leaves() };
+    // τ without an outer sync: nothing exists to delay
+    let mut replicas = fresh_replicas(&l, 2);
+    let plan = DrivePlan {
+        total_steps: 10,
+        sync_interval: usize::MAX,
+        fragments: 1,
+        n_params: l.n_leaves(),
+        eval_every: None,
+        log_every: 1000,
+        workers: 1,
+        overlap_tau: 1,
+    };
+    let err = drive(&engine, &mut replicas, None, &plan).expect_err("tau without sync");
+    assert!(format!("{err:#}").contains("overlap_tau"), "{err:#}");
+
+    // τ >= the fragment interval: a second sync would launch while the
+    // first is still in flight
+    for tau in [INTERVAL, INTERVAL + 5] {
+        let mut replicas = fresh_replicas(&l, 2);
+        let mut sync = fresh_sync(&l, OuterBits::Fp32, OuterBits::Fp32, FRAGMENTS);
+        let plan = DrivePlan {
+            total_steps: TOTAL,
+            sync_interval: INTERVAL,
+            fragments: FRAGMENTS,
+            n_params: l.n_leaves(),
+            eval_every: None,
+            log_every: 1000,
+            workers: 1,
+            overlap_tau: tau,
+        };
+        let err = drive(&engine, &mut replicas, Some(&mut sync), &plan)
+            .expect_err("two syncs in flight must be refused");
+        assert!(format!("{err:#}").contains("in flight"), "τ={tau}: {err:#}");
+    }
+
+    // an un-taken lossy broadcast refuses the next sync (the OuterSync
+    // guard the pipeline relies on: a dropped payload would silently
+    // desynchronize every replica from the down-wire view)
+    let mut sync = fresh_sync(&l, OuterBits::Fp32, OuterBits::Int4, 1);
+    let theta = init_lits(&l);
+    sync.sync(&[&theta[..], &theta[..]], None).unwrap();
+    assert!(
+        sync.sync(&[&theta[..], &theta[..]], None).is_err(),
+        "un-taken broadcast payload must refuse the next sync"
+    );
+}

@@ -39,6 +39,8 @@ fn fake_metrics(model: &str, algo: &str, n: usize, loss: f64, batch: usize, lr: 
         ],
         outer_syncs: if h > 0 { 100 / h } else { 0 },
         wall_secs: 1.0,
+        fragments: 1,
+        overlap_tau: 0,
         outer_bits: 32,
         outer_bits_down: 32,
         wire_up_bytes: if h > 0 { (100 / h) as u64 * n as u64 * 4 } else { 0 },
@@ -73,6 +75,15 @@ fn synthetic_store(dir: &Path) -> SweepStore {
             store.insert(&format!("fakeh{id}"), &m).unwrap();
             id += 1;
         }
+    }
+    // stream-grid entries: overlap corners at matched hypers (the
+    // (1, 0) row is the barrier baseline the deltas anchor on)
+    for (p, tau) in [(1usize, 0usize), (2, 0), (2, 1), (2, 7)] {
+        let mut m = fake_metrics("m0", "diloco-m2", 26264, 4.01 + 0.002 * tau as f64, 1024, 6e-3, 0.6, 30);
+        m.fragments = p;
+        m.overlap_tau = tau;
+        store.insert(&format!("fakes{id}"), &m).unwrap();
+        id += 1;
     }
     store
 }
@@ -116,6 +127,13 @@ fn generators_reflect_store_contents() {
     let comm = generate("comm", &store, &repo, 8).unwrap();
     assert!(comm.contains("baseline"), "{comm}");
     assert!(comm.contains("diloco-m2"), "{comm}");
+
+    // stream report: the barrier row anchors the loss-vs-τ deltas,
+    // and the analytic walltime-vs-τ section always renders
+    let stream = generate("stream", &store, &repo, 8).unwrap();
+    assert!(stream.contains("baseline"), "{stream}");
+    assert!(stream.contains("| 2 | 7 |"), "deep-τ row present: {stream}");
+    assert!(stream.contains("Walltime vs τ"), "{stream}");
 
     std::fs::remove_dir_all(&dir).ok();
 }

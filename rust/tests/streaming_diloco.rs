@@ -35,12 +35,29 @@ fn cfg(fragments: usize, h: usize) -> RunConfig {
 }
 
 #[test]
-fn p1_is_exactly_vanilla() {
+fn p2_full_flush_schedule_is_exactly_vanilla() {
+    // A genuinely distinct config pair that provably coincides: with H
+    // larger than the whole run, both P=1 and P=2 schedules collapse
+    // to a single full-flush sync at the final step (due_fragment is
+    // None at t = total_steps), so the fragmented run must reproduce
+    // vanilla bit for bit — schedule, losses, evals, and wire bytes.
+    // (The retired version of this test compared cfg(1, 10) against
+    // itself, which could never fail.)
     let Some((repo, rt)) = setup() else { return };
     let mr = ModelRuntime::load(rt, &repo.model_dir("m0")).unwrap();
-    let vanilla = run(&mr, &repo.optimizer, &cfg(1, 10)).unwrap();
-    let streamed = run(&mr, &repo.optimizer, &cfg(1, 10)).unwrap();
+    let vanilla = run(&mr, &repo.optimizer, &cfg(1, 10_000)).unwrap();
+    let streamed = run(&mr, &repo.optimizer, &cfg(2, 10_000)).unwrap();
+    assert_eq!(vanilla.outer_syncs, 1, "one final full flush");
+    assert_eq!(streamed.outer_syncs, 1, "P=2 with H > T is also one full flush");
     assert_eq!(vanilla.final_eval_loss, streamed.final_eval_loss);
+    assert_eq!(vanilla.final_train_loss, streamed.final_train_loss);
+    assert_eq!(vanilla.loss_curve, streamed.loss_curve);
+    assert_eq!(vanilla.eval_curve, streamed.eval_curve);
+    assert_eq!(vanilla.wire_up_bytes, streamed.wire_up_bytes);
+    assert_eq!(vanilla.wire_down_bytes, streamed.wire_down_bytes);
+    // and the metrics faithfully record the differing fragment counts
+    assert_eq!(vanilla.fragments, 1);
+    assert_eq!(streamed.fragments, 2);
 }
 
 #[test]

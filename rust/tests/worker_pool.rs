@@ -138,6 +138,7 @@ fn run_once(m: usize, workers: usize, fragments: usize, seed: u64) -> RunResult 
         eval_every: Some(7),
         log_every: 5,
         workers,
+        overlap_tau: 0,
     };
     let out = drive(&engine, &mut replicas, Some(&mut sync), &plan).expect("drive");
     let finals: Vec<Vec<Vec<f32>>> = replicas
@@ -148,9 +149,10 @@ fn run_once(m: usize, workers: usize, fragments: usize, seed: u64) -> RunResult 
                 .collect()
         })
         .collect();
-    let shares_global = replicas.iter().all(|r| {
-        (0..l.n_leaves()).all(|leaf| Arc::ptr_eq(&r.state[leaf], &sync.global_literals()[leaf]))
-    });
+    let lits = sync.global_literals().expect("global literal cache").to_vec();
+    let shares_global = replicas
+        .iter()
+        .all(|r| (0..l.n_leaves()).all(|leaf| Arc::ptr_eq(&r.state[leaf], &lits[leaf])));
     RunResult {
         step_losses: out.step_losses,
         loss_curve: out.loss_curve,
@@ -222,6 +224,7 @@ fn data_parallel_mode_without_sync_agrees() {
             eval_every: Some(4),
             log_every: 3,
             workers,
+            overlap_tau: 0,
         };
         let out = drive(&engine, &mut replicas, None, &plan).expect("drive");
         let finals: Vec<Vec<f32>> = replicas
@@ -253,6 +256,7 @@ fn worker_failure_propagates_without_hanging() {
             eval_every: None,
             log_every: 100,
             workers,
+            overlap_tau: 0,
         };
         let err = drive(&engine, &mut replicas, Some(&mut sync), &plan)
             .expect_err("injected failure must propagate");
