@@ -22,7 +22,10 @@ use diloco::comm::{
 };
 use diloco::config::RepoConfig;
 use diloco::coordinator::outer_opt::{acc_add, acc_finish, scalar_ref};
-use diloco::coordinator::{drive, DrivePlan, InnerEngine, OuterOpt, OuterSync, ReplicaState};
+use diloco::coordinator::{
+    drive, Checkpoint, DriveOutcome, DrivePlan, EventKind, InnerEngine, Journal, OuterOpt,
+    OuterSync, ReplicaState,
+};
 use diloco::data::synthetic::{CorpusSpec, TokenStream};
 use diloco::netsim::walltime::replica_parallel_speedup;
 use diloco::runtime::{
@@ -547,6 +550,7 @@ fn bench_overlap(b: &mut Bencher, layout: &Arc<FlatLayout>) {
                 outer_bits: 4.125,
                 outer_bits_down: 4.125,
                 overlap_tau: tau,
+                churn: None,
             })
             .comm_s
         };
@@ -586,6 +590,97 @@ fn bench_overlap(b: &mut Bencher, layout: &Arc<FlatLayout>) {
         ]));
     }
     b.extra("overlap_pipeline", Json::arr(rows.into_iter()));
+}
+
+/// Robustness-path overhead: the event journal the coordinator appends
+/// to at every outer sync, and the boundary checkpoint that
+/// `diloco checkpoint` snapshots (capture + JSON serialize, then parse
+/// + rebuild on the resume side) — measured per sync so the
+/// crash-tolerance machinery's cost stays pinned by the blocking
+/// bench-diff gate like every other hot-path case.
+fn bench_journal(b: &mut Bencher, layout: &Arc<FlatLayout>) {
+    let n = layout.n_leaves();
+    let pristine = randn_params(layout, 7);
+    let host: Vec<HostTensor> = pristine.to_host();
+    let m = 4usize;
+
+    // -- journal append: the per-sync event pair (send + merge) --
+    {
+        let mut journal = Journal::new();
+        let mut sync_idx = 0u64;
+        b.run("journal/append per outer sync (send + merge)", || {
+            journal.append(
+                30,
+                sync_idx,
+                EventKind::SyncSend,
+                None,
+                "fragment 0, 4 contributors",
+            );
+            journal.append(30, sync_idx, EventKind::SyncMerge, None, "fragment 0");
+            sync_idx += 1;
+            journal.events().len()
+        });
+    }
+
+    // -- boundary checkpoint: capture + serialize, then parse back --
+    {
+        let init_lits: Vec<Arc<xla::Literal>> = (0..n)
+            .map(|l| Arc::new(pristine.leaf_literal(l).unwrap()))
+            .collect();
+        let replicas: Vec<ReplicaState> = (0..m)
+            .map(|r| ReplicaState {
+                state: init_lits.clone(),
+                shard: TokenStream::new(CorpusSpec::default(), 17, r as u64),
+            })
+            .collect();
+        let sync = OuterSync::new(Arc::clone(layout), &host, init_lits, 0.8, 0.9, 1)
+            .expect("journal bench sync setup");
+        let residuals: Vec<Vec<f32>> = (0..m).map(|_| Vec::new()).collect();
+        let live = vec![true; m];
+        let mut journal = Journal::new();
+        for k in 0..8u64 {
+            let step = 30 * (k as usize + 1);
+            journal.append(step, k, EventKind::SyncSend, None, "fragment 0");
+            journal.append(step, k, EventKind::SyncMerge, None, "fragment 0");
+        }
+        let outcome = DriveOutcome {
+            step_losses: (0..240).map(|t| 6.0 - t as f64 * 1e-3).collect(),
+            loss_curve: (0..24).map(|i| (i * 10, 6.0 - i as f64 * 1e-2)).collect(),
+            eval_curve: (0..8).map(|i| (i * 30, 6.0 - i as f64 * 1e-2)).collect(),
+            outer_syncs: 8,
+            comm_arena_bytes: 0,
+            down_wire_arena_bytes: 0,
+        };
+        b.run(&format!("checkpoint/capture + serialize (m0-shaped, M={m})"), || {
+            let ck = Checkpoint::capture(
+                240,
+                &replicas,
+                &residuals,
+                &live,
+                Some(&sync),
+                &outcome,
+                &journal,
+            )
+            .expect("bench capture");
+            ck.to_json().to_string_compact().len()
+        });
+        let ck = Checkpoint::capture(
+            240,
+            &replicas,
+            &residuals,
+            &live,
+            Some(&sync),
+            &outcome,
+            &journal,
+        )
+        .expect("bench capture");
+        let text = ck.to_json().to_string_compact();
+        b.run(&format!("checkpoint/parse + rebuild (m0-shaped, M={m})"), || {
+            Checkpoint::from_json(&Json::parse(&text).expect("bench parse"))
+                .expect("bench rebuild")
+                .step
+        });
+    }
 }
 
 /// Measured pool speedup vs the netsim analytic model (Appendix A
@@ -657,6 +752,8 @@ fn main() -> anyhow::Result<()> {
         bench_pool(&mut b, &layout);
         // overlapped outer sync: barrier vs delayed application
         bench_overlap(&mut b, &layout);
+        // event journal + boundary checkpoint (crash-tolerance path)
+        bench_journal(&mut b, &layout);
     }
 
     // data pipeline throughput

@@ -76,6 +76,7 @@ fn main() {
             outer_bits: diloco::netsim::walltime::BITS_PER_PARAM,
             outer_bits_down: diloco::netsim::walltime::BITS_PER_PARAM,
             overlap_tau: 0.0,
+            churn: None,
         })
     });
     let sim = SimModel::default();

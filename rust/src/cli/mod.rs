@@ -6,7 +6,7 @@ pub mod args;
 use anyhow::{bail, Context, Result};
 
 use crate::config::RepoConfig;
-use crate::coordinator::{run, Algo, RunConfig};
+use crate::coordinator::{run, run_checkpoint, run_resume, Algo, RunConfig};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::sweep::{execute_grid, grid_by_name, grid_names, run_id, SweepStore};
 
@@ -23,6 +23,10 @@ USAGE:
                  [--overlap-tau T]  # delayed application: merge a fragment's broadcast T steps after its send (0 = barrier; requires T < H/P)
                  [--outer-bits 32|16|8|4]       # up-wire width: outer gradients (32 = exact fp32)
                  [--outer-bits-down 32|16|8|4]  # down-wire width: global broadcast (32 = literal handoff)
+                 [--churn SPEC]  # deterministic fault plan, e.g. \"crash@2:r1,join@3:r4\" or \"rate=0.1\"
+  diloco checkpoint --after-sync K [--out runs/ckpt.json] [train flags...]
+                                    # run until outer sync K completes, snapshot, stop
+  diloco resume  --from runs/ckpt.json   # finish the run; bit-identical to uninterrupted
   diloco predict --n PARAMS [--m REPLICAS] [--store runs/sweep.jsonl]
   diloco sweep   --grid NAME [--store runs/sweep.jsonl] [--max-runs N]
   diloco grids                      # list available sweep grids
@@ -38,6 +42,8 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
     let (cmd, args) = Args::parse(argv)?;
     match cmd.as_str() {
         "train" => cmd_train(&args),
+        "checkpoint" => cmd_checkpoint(&args),
+        "resume" => cmd_resume(&args),
         "sweep" => cmd_sweep(&args),
         "grids" => {
             for g in grid_names() {
@@ -110,6 +116,9 @@ fn run_config_from_args(args: &Args) -> Result<RunConfig> {
         cfg.outer_bits_down =
             crate::comm::OuterBits::parse(&obd).context("--outer-bits-down")?;
     }
+    if let Some(c) = args.get("churn") {
+        cfg.churn = c;
+    }
     cfg.downstream = args.flag("downstream");
     Ok(cfg)
 }
@@ -146,6 +155,51 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::cpu()?;
     let mr = ModelRuntime::load(rt, &repo.model_dir(&cfg.model))?;
     let metrics = run(&mr, &repo.optimizer, &cfg)?;
+    println!("{}", metrics.to_json().to_string_pretty());
+    Ok(())
+}
+
+/// Run the configured job until outer sync K has merged, then snapshot
+/// replicas, outer state, wire accounting, and the event journal to a
+/// JSON checkpoint and stop. `diloco resume --from FILE` finishes the
+/// run bit-identically to the uninterrupted trajectory.
+fn cmd_checkpoint(args: &Args) -> Result<()> {
+    let repo = RepoConfig::load_default()?;
+    let cfg = run_config_from_args(args)?;
+    let after: u64 = args
+        .get("after-sync")
+        .context("--after-sync K required")?
+        .parse()
+        .context("--after-sync")?;
+    let out = std::path::PathBuf::from(args.get_or("out", "runs/ckpt.json"));
+    let out = if out.is_absolute() { out } else { repo.root.join(out) };
+    let rt = Runtime::cpu()?;
+    let mr = ModelRuntime::load(rt, &repo.model_dir(&cfg.model))?;
+    let step = run_checkpoint(&mr, &repo.optimizer, &cfg, after, &out)?;
+    println!(
+        "checkpointed at step {step} (outer sync {after} merged) -> {}",
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_resume(args: &Args) -> Result<()> {
+    use crate::util::json::Json;
+    let repo = RepoConfig::load_default()?;
+    let from = args.get("from").context("--from CKPT.json required")?;
+    let path = std::path::PathBuf::from(&from);
+    let path = if path.is_absolute() { path } else { repo.root.join(path) };
+    // Peek the embedded config for the model name; run_resume re-reads
+    // and validates the full checkpoint.
+    let model = Json::parse_file(&path)?
+        .get("config")
+        .and_then(|c| c.get("model"))
+        .and_then(|m| m.as_str())
+        .map(str::to_string)
+        .context("checkpoint carries no config.model (not written by `diloco checkpoint`?)")?;
+    let rt = Runtime::cpu()?;
+    let mr = ModelRuntime::load(rt, &repo.model_dir(&model))?;
+    let metrics = run_resume(&mr, &repo.optimizer, &path)?;
     println!("{}", metrics.to_json().to_string_pretty());
     Ok(())
 }

@@ -270,6 +270,24 @@ impl DownWire {
         4 * (self.view.len() + self.residual.len() + self.staging.len()) as u64
     }
 
+    /// Restore view + residual from a checkpoint. The pair IS the
+    /// broadcast stream's whole mutable state, so a restored wire
+    /// continues the EF sequence bit-identically (encode seeds are pure
+    /// in the sync index, which [`super::super::WireStats`] carries).
+    pub fn restore(&mut self, view: &[f32], residual: &[f32]) -> Result<()> {
+        if view.len() != self.view.len() || residual.len() != self.residual.len() {
+            bail!(
+                "down wire restore: got view {} / residual {}, expected {} each",
+                view.len(),
+                residual.len(),
+                self.view.len()
+            );
+        }
+        self.view.copy_from_slice(view);
+        self.residual.copy_from_slice(residual);
+        Ok(())
+    }
+
     /// Encode the refreshed global's due fragment **once** for all
     /// replicas: `x = (global - view) + residual`, error-compensated
     /// like the up-wire. Advances the view by exactly `dq(x)` — the

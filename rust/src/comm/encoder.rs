@@ -87,6 +87,18 @@ pub struct ReplicaComm {
 }
 
 impl ReplicaComm {
+    /// Restore a replica's residual from a checkpoint — the EF stream
+    /// continues bit-identically because encode seeds are pure in the
+    /// sync index and replica id, neither of which shifts on resume.
+    pub fn restore(residual: Vec<f32>) -> ReplicaComm {
+        ReplicaComm { residual }
+    }
+
+    /// Hand the residual back for checkpointing.
+    pub fn into_residual(self) -> Vec<f32> {
+        self.residual
+    }
+
     /// The error-feedback residual (empty until the link initializes
     /// it for a lossy up-wire) — exposed for tests.
     pub fn residual(&self) -> &[f32] {
@@ -171,6 +183,49 @@ impl CommLink {
         if !self.up.is_identity() {
             rc.residual = vec![0.0; self.up.layout().total()];
         }
+    }
+
+    /// Resume-path snapshot init: size the worker's shared arenas and
+    /// fill `snap` from a raw flat arena instead of replica literals.
+    /// Mid-run the replicas' view of the global is NOT the global
+    /// itself (lossy down-wires lag it by the EF residual), so a
+    /// restored worker must start from the checkpointed broadcast view
+    /// — `OuterSync::broadcast_view` — not from replica state.
+    pub fn init_snapshot_from(&self, wc: &mut WorkerComm, view: &[f32]) -> Result<()> {
+        let total = self.up.layout().total();
+        if view.len() != total {
+            bail!(
+                "comm snapshot restore: got {} elements, layout wants {total}",
+                view.len()
+            );
+        }
+        wc.snap = view.to_vec();
+        wc.staging = vec![0.0; total];
+        if !self.up.is_identity() {
+            wc.scratch = vec![0.0; total];
+        }
+        Ok(())
+    }
+
+    /// Build the full-leaf adopt list from the worker's current snap —
+    /// how a joiner is initialized when the link is active: the snap IS
+    /// the broadcast view every sibling replica holds (down-wire EF
+    /// stream state included), so the joiner inherits it exactly and
+    /// identically on every worker.
+    pub fn snap_literals(&self, wc: &WorkerComm) -> Result<Vec<(usize, Arc<xla::Literal>)>> {
+        let layout = self.up.layout();
+        if wc.snap.len() != layout.total() {
+            bail!("comm snap_literals before init_snapshot");
+        }
+        let mut adopt = Vec::with_capacity(layout.n_leaves());
+        for leaf in 0..layout.n_leaves() {
+            let r = layout.range(leaf);
+            let lit = HostTensor::from_vec(layout.shape(leaf), wc.snap[r].to_vec())
+                .to_literal()
+                .map_err(|e| anyhow::anyhow!("comm snap_literals: leaf {leaf}: {e}"))?;
+            adopt.push((leaf, Arc::new(lit)));
+        }
+        Ok(adopt)
     }
 
     /// Identity-down broadcast: refresh the shared snap from the adopt

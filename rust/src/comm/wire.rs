@@ -52,6 +52,21 @@ pub struct WireStats {
 }
 
 impl WireStats {
+    /// Rebuild from checkpointed records. Indices are renumbered to
+    /// positional order — `record()` derives them from position, so a
+    /// restored accumulator must agree with one that never stopped.
+    pub fn from_records(records: Vec<SyncWireRecord>) -> WireStats {
+        let records = records
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut r)| {
+                r.sync_index = i as u64;
+                r
+            })
+            .collect();
+        WireStats { records }
+    }
+
     pub fn record(
         &mut self,
         frag: Option<usize>,

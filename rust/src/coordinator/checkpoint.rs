@@ -1,0 +1,534 @@
+//! Outer-boundary checkpoints with bit-identical resume.
+//!
+//! A [`Checkpoint`] captures everything the drive loop carries across
+//! an outer boundary: per-replica state literals + data-shard
+//! positions + up-wire EF residuals, the live membership set, the
+//! outer engine's [`SyncState`] (global, velocity, down-wire
+//! view/residual, wire records), the partial [`DriveOutcome`] curves,
+//! and the event journal. Resume rebuilds a run from this and
+//! continues it such that losses, evals, wire bytes, and final params
+//! are bit-identical to the uninterrupted run (`tests/churn_resume.rs`
+//! pins this for identity and lossy codec pairs).
+//!
+//! Serialization is JSON through `util::json` (the repo's substrate),
+//! with two exactness rules:
+//! - **f32 arenas** serialize as hex strings of little-endian bytes —
+//!   exact round-trip, no decimal-float detour, and the encoder is a
+//!   straight byte loop cheap enough to sit on the hot path
+//!   (`bench_hot_path` measures serialize cost per sync);
+//! - **f64 curves** (losses, evals) serialize as their IEEE-754 bit
+//!   patterns in exact [`Json::Int`]s.
+//!
+//! Checkpoints are legal only at outer boundaries (post-merge, no
+//! fragment in flight, no unshipped broadcast) — `OuterSync`
+//! enforces the broadcast half, the drive loop the pipeline half.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::SyncWireRecord;
+use crate::runtime::HostTensor;
+use crate::util::json::Json;
+
+use super::journal::Journal;
+use super::pool::{DriveOutcome, ReplicaState};
+use super::sync::{OuterSync, SyncState};
+
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+// ---- exact scalar encodings ------------------------------------------------
+
+const HEX: &[u8; 16] = b"0123456789abcdef";
+
+/// f32 slice -> hex of little-endian bytes (exact, allocation-lean).
+pub fn hex_of_f32(v: &[f32]) -> String {
+    let mut s = String::with_capacity(v.len() * 8);
+    for x in v {
+        for b in x.to_le_bytes() {
+            s.push(HEX[(b >> 4) as usize] as char);
+            s.push(HEX[(b & 15) as usize] as char);
+        }
+    }
+    s
+}
+
+pub fn f32_of_hex(s: &str) -> Result<Vec<f32>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 8 != 0 {
+        bail!("hex f32 arena: length {} is not a multiple of 8", bytes.len());
+    }
+    fn nib(b: u8) -> Result<u8> {
+        match b {
+            b'0'..=b'9' => Ok(b - b'0'),
+            b'a'..=b'f' => Ok(b - b'a' + 10),
+            b'A'..=b'F' => Ok(b - b'A' + 10),
+            other => bail!("hex f32 arena: bad digit {:?}", other as char),
+        }
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 8);
+    for chunk in bytes.chunks_exact(8) {
+        let mut le = [0u8; 4];
+        for (i, pair) in chunk.chunks_exact(2).enumerate() {
+            le[i] = (nib(pair[0])? << 4) | nib(pair[1])?;
+        }
+        out.push(f32::from_le_bytes(le));
+    }
+    Ok(out)
+}
+
+fn json_of_f64_bits(v: f64) -> Json {
+    Json::int(v.to_bits())
+}
+
+fn f64_of_json_bits(j: &Json) -> Result<f64> {
+    let bits = j
+        .as_u64()
+        .ok_or_else(|| anyhow::anyhow!("expected an f64 bit pattern, got {j}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+// ---- checkpoint pieces -----------------------------------------------------
+
+/// One replica's full restorable state.
+#[derive(Debug, Clone)]
+pub struct ReplicaCkpt {
+    /// Every state leaf (params + optimizer moments), shape + values.
+    pub leaves: Vec<(Vec<usize>, Vec<f32>)>,
+    /// Up-wire EF residual (empty for identity up-wires).
+    pub residual: Vec<f32>,
+    /// Tokens the replica's shard has consumed (replayed on resume).
+    pub consumed: u64,
+}
+
+impl ReplicaCkpt {
+    /// Rebuild the state literal list.
+    pub fn literals(&self) -> Result<Vec<Arc<xla::Literal>>> {
+        self.leaves
+            .iter()
+            .map(|(shape, data)| {
+                Ok(Arc::new(
+                    HostTensor::from_vec(shape, data.clone())
+                        .to_literal()
+                        .map_err(|e| anyhow::anyhow!("checkpoint leaf rebuild: {e}"))?,
+                ))
+            })
+            .collect()
+    }
+}
+
+/// The partial run curves at checkpoint time, stitched onto the
+/// resumed segment's curves by [`Checkpoint::stitch`].
+#[derive(Debug, Clone, Default)]
+pub struct OutcomeCkpt {
+    pub step_losses: Vec<f64>,
+    pub loss_curve: Vec<(usize, f64)>,
+    pub eval_curve: Vec<(usize, f64)>,
+    pub outer_syncs: usize,
+}
+
+impl OutcomeCkpt {
+    pub fn of(out: &DriveOutcome) -> OutcomeCkpt {
+        OutcomeCkpt {
+            step_losses: out.step_losses.clone(),
+            loss_curve: out.loss_curve.clone(),
+            eval_curve: out.eval_curve.clone(),
+            outer_syncs: out.outer_syncs,
+        }
+    }
+}
+
+/// A full outer-boundary checkpoint.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub version: u64,
+    /// Inner step the run had completed.
+    pub step: usize,
+    /// Live membership flags over the replica universe.
+    pub live: Vec<bool>,
+    pub replicas: Vec<ReplicaCkpt>,
+    /// Outer engine state (None for data-parallel runs, which have no
+    /// outer sync — checkpointing them is not supported today).
+    pub sync: Option<SyncState>,
+    pub outcome: OutcomeCkpt,
+    pub journal: Journal,
+    /// The originating `RunConfig` as JSON, when captured through the
+    /// CLI path (`diloco checkpoint`); drive-level captures leave it
+    /// None and the caller re-supplies the config.
+    pub config: Option<Json>,
+}
+
+impl Checkpoint {
+    /// Capture at an outer boundary. `residuals[r]` is replica r's
+    /// up-wire EF residual (empty slices for identity up-wires or
+    /// never-initialized replicas).
+    pub fn capture(
+        step: usize,
+        replicas: &[ReplicaState],
+        residuals: &[Vec<f32>],
+        live: &[bool],
+        sync: Option<&OuterSync>,
+        outcome: &DriveOutcome,
+        journal: &Journal,
+    ) -> Result<Checkpoint> {
+        if replicas.len() != live.len() {
+            bail!(
+                "checkpoint: {} replicas but {} live flags",
+                replicas.len(),
+                live.len()
+            );
+        }
+        let mut reps = Vec::with_capacity(replicas.len());
+        for (r, rep) in replicas.iter().enumerate() {
+            let mut leaves = Vec::with_capacity(rep.state.len());
+            for (leaf, lit) in rep.state.iter().enumerate() {
+                let shape: Vec<usize> = lit
+                    .array_shape()
+                    .map_err(|e| anyhow::anyhow!("checkpoint: replica {r} leaf {leaf}: {e}"))?
+                    .dims()
+                    .iter()
+                    .map(|&d| d as usize)
+                    .collect();
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("checkpoint: replica {r} leaf {leaf}: {e}"))?;
+                leaves.push((shape, data));
+            }
+            reps.push(ReplicaCkpt {
+                leaves,
+                residual: residuals.get(r).cloned().unwrap_or_default(),
+                consumed: rep.shard.consumed(),
+            });
+        }
+        Ok(Checkpoint {
+            version: CHECKPOINT_VERSION,
+            step,
+            live: live.to_vec(),
+            replicas: reps,
+            sync: sync.map(|s| s.export_state()).transpose()?,
+            outcome: OutcomeCkpt::of(outcome),
+            journal: journal.clone(),
+            config: None,
+        })
+    }
+
+    /// Stitch the resumed segment's outcome onto the checkpointed
+    /// curves: the result is what the uninterrupted run would have
+    /// produced (resumed curves start after `self.step`).
+    pub fn stitch(&self, resumed: &DriveOutcome) -> DriveOutcome {
+        DriveOutcome {
+            step_losses: [&self.outcome.step_losses[..], &resumed.step_losses[..]].concat(),
+            loss_curve: [&self.outcome.loss_curve[..], &resumed.loss_curve[..]].concat(),
+            eval_curve: [&self.outcome.eval_curve[..], &resumed.eval_curve[..]].concat(),
+            outer_syncs: self.outcome.outer_syncs + resumed.outer_syncs,
+            comm_arena_bytes: resumed.comm_arena_bytes,
+            down_wire_arena_bytes: resumed.down_wire_arena_bytes,
+        }
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let replicas = Json::arr(self.replicas.iter().map(|r| {
+            Json::obj(vec![
+                (
+                    "leaves",
+                    Json::arr(r.leaves.iter().map(|(shape, data)| {
+                        Json::obj(vec![
+                            (
+                                "shape",
+                                Json::arr(shape.iter().map(|&d| Json::int(d as u64))),
+                            ),
+                            ("data", Json::str(&hex_of_f32(data))),
+                        ])
+                    })),
+                ),
+                ("residual", Json::str(&hex_of_f32(&r.residual))),
+                ("consumed", Json::int(r.consumed)),
+            ])
+        }));
+        let sync = match &self.sync {
+            Some(st) => {
+                let wire = Json::arr(st.wire_records.iter().map(|w| {
+                    let mut pairs = vec![
+                        ("sync_index", Json::int(w.sync_index)),
+                        ("replicas", Json::int(w.replicas as u64)),
+                        ("bytes_per_replica", Json::int(w.bytes_per_replica)),
+                        ("bytes_down", Json::int(w.bytes_down)),
+                    ];
+                    if let Some(f) = w.frag {
+                        pairs.push(("frag", Json::int(f as u64)));
+                    }
+                    Json::obj(pairs)
+                }));
+                let mut pairs = vec![
+                    ("global", Json::str(&hex_of_f32(&st.global))),
+                    ("velocity", Json::str(&hex_of_f32(&st.velocity))),
+                    ("wire", wire),
+                ];
+                if let Some(view) = &st.down_view {
+                    pairs.push(("down_view", Json::str(&hex_of_f32(view))));
+                }
+                if let Some(res) = &st.down_residual {
+                    pairs.push(("down_residual", Json::str(&hex_of_f32(res))));
+                }
+                Json::obj(pairs)
+            }
+            None => Json::Null,
+        };
+        let curve = |c: &[(usize, f64)]| {
+            Json::arr(c.iter().map(|&(t, v)| {
+                Json::arr([Json::int(t as u64), json_of_f64_bits(v)])
+            }))
+        };
+        let outcome = Json::obj(vec![
+            (
+                "step_losses",
+                Json::arr(self.outcome.step_losses.iter().map(|&v| json_of_f64_bits(v))),
+            ),
+            ("loss_curve", curve(&self.outcome.loss_curve)),
+            ("eval_curve", curve(&self.outcome.eval_curve)),
+            ("outer_syncs", Json::int(self.outcome.outer_syncs as u64)),
+        ]);
+        let mut pairs = vec![
+            ("version", Json::int(self.version)),
+            ("step", Json::int(self.step as u64)),
+            (
+                "live",
+                Json::arr(self.live.iter().map(|&l| Json::Bool(l))),
+            ),
+            ("replicas", replicas),
+            ("sync", sync),
+            ("outcome", outcome),
+            ("journal", self.journal.to_json()),
+        ];
+        if let Some(cfg) = &self.config {
+            pairs.push(("config", cfg.clone()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Checkpoint> {
+        let version = j.u64_of("version")?;
+        if version != CHECKPOINT_VERSION {
+            bail!("checkpoint version {version} (this build reads {CHECKPOINT_VERSION})");
+        }
+        let live = j
+            .arr_of("live")?
+            .iter()
+            .map(|v| {
+                v.as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("checkpoint: live flag is not a bool"))
+            })
+            .collect::<Result<Vec<bool>>>()?;
+        let mut replicas = Vec::new();
+        for (r, item) in j.arr_of("replicas")?.iter().enumerate() {
+            let mut leaves = Vec::new();
+            for leaf in item.arr_of("leaves")? {
+                let shape = leaf
+                    .arr_of("shape")?
+                    .iter()
+                    .map(|d| {
+                        d.as_usize()
+                            .ok_or_else(|| anyhow::anyhow!("checkpoint: bad shape dim"))
+                    })
+                    .collect::<Result<Vec<usize>>>()?;
+                let data = f32_of_hex(&leaf.str_of("data")?)
+                    .with_context(|| format!("checkpoint: replica {r} leaf data"))?;
+                if shape.iter().product::<usize>() != data.len() {
+                    bail!(
+                        "checkpoint: replica {r}: shape {:?} does not fit {} elements",
+                        shape,
+                        data.len()
+                    );
+                }
+                leaves.push((shape, data));
+            }
+            replicas.push(ReplicaCkpt {
+                leaves,
+                residual: f32_of_hex(&item.str_of("residual")?)?,
+                consumed: item.u64_of("consumed")?,
+            });
+        }
+        let sync = match j.req("sync")? {
+            Json::Null => None,
+            st => {
+                let mut wire_records = Vec::new();
+                for w in st.arr_of("wire")? {
+                    wire_records.push(SyncWireRecord {
+                        sync_index: w.u64_of("sync_index")?,
+                        frag: w.get("frag").and_then(|v| v.as_usize()),
+                        replicas: w.usize_of("replicas")?,
+                        bytes_per_replica: w.u64_of("bytes_per_replica")?,
+                        bytes_down: w.u64_of("bytes_down")?,
+                    });
+                }
+                Some(SyncState {
+                    global: f32_of_hex(&st.str_of("global")?)?,
+                    velocity: f32_of_hex(&st.str_of("velocity")?)?,
+                    down_view: st
+                        .get("down_view")
+                        .map(|v| {
+                            f32_of_hex(v.as_str().ok_or_else(|| {
+                                anyhow::anyhow!("checkpoint: down_view is not a string")
+                            })?)
+                        })
+                        .transpose()?,
+                    down_residual: st
+                        .get("down_residual")
+                        .map(|v| {
+                            f32_of_hex(v.as_str().ok_or_else(|| {
+                                anyhow::anyhow!("checkpoint: down_residual is not a string")
+                            })?)
+                        })
+                        .transpose()?,
+                    wire_records,
+                })
+            }
+        };
+        let out = j.req("outcome")?;
+        let curve = |key: &str| -> Result<Vec<(usize, f64)>> {
+            out.arr_of(key)?
+                .iter()
+                .map(|pt| {
+                    let pair = pt
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("checkpoint: curve point not a pair"))?;
+                    if pair.len() != 2 {
+                        bail!("checkpoint: curve point not a pair");
+                    }
+                    let t = pair[0]
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("checkpoint: bad curve step"))?;
+                    Ok((t, f64_of_json_bits(&pair[1])?))
+                })
+                .collect()
+        };
+        let outcome = OutcomeCkpt {
+            step_losses: out
+                .arr_of("step_losses")?
+                .iter()
+                .map(f64_of_json_bits)
+                .collect::<Result<Vec<f64>>>()?,
+            loss_curve: curve("loss_curve")?,
+            eval_curve: curve("eval_curve")?,
+            outer_syncs: out.usize_of("outer_syncs")?,
+        };
+        Ok(Checkpoint {
+            version,
+            step: j.usize_of("step")?,
+            live,
+            replicas,
+            sync,
+            outcome,
+            journal: Journal::from_json(j.req("journal")?)?,
+            config: j.get("config").cloned(),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Checkpoint> {
+        Checkpoint::from_json(&Json::parse_file(path)?)
+            .with_context(|| format!("loading checkpoint {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_f32_roundtrips_exactly() {
+        let v: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.5,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            -1e-30,
+            std::f32::consts::PI,
+        ];
+        let hex = hex_of_f32(&v);
+        assert_eq!(hex.len(), v.len() * 8);
+        let back = f32_of_hex(&hex).unwrap();
+        assert_eq!(
+            back.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(f32_of_hex("abc").is_err(), "odd length rejected");
+        assert!(f32_of_hex("zzzzzzzz").is_err(), "bad digit rejected");
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_through_json_text() {
+        for v in [0.1, -3.25e-17, f64::MAX, 1.0 / 3.0] {
+            let j = json_of_f64_bits(v);
+            let text = j.to_string_compact();
+            let back = f64_of_json_bits(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn checkpoint_json_roundtrips() {
+        let mut journal = Journal::new();
+        journal.append(4, 1, super::super::journal::EventKind::SyncMerge, None, "");
+        let ck = Checkpoint {
+            version: CHECKPOINT_VERSION,
+            step: 12,
+            live: vec![true, false, true],
+            replicas: vec![ReplicaCkpt {
+                leaves: vec![(vec![2, 2], vec![1.0, -2.5, 0.25, 9.0]), (vec![1], vec![7.0])],
+                residual: vec![0.125, -0.5],
+                consumed: 4096,
+            }],
+            sync: Some(SyncState {
+                global: vec![1.0, 2.0],
+                velocity: vec![],
+                down_view: Some(vec![0.5, 0.5]),
+                down_residual: Some(vec![0.0, -0.25]),
+                wire_records: vec![SyncWireRecord {
+                    sync_index: 0,
+                    frag: Some(1),
+                    replicas: 2,
+                    bytes_per_replica: 40,
+                    bytes_down: 20,
+                }],
+            }),
+            outcome: OutcomeCkpt {
+                step_losses: vec![0.5, 0.25],
+                loss_curve: vec![(1, 0.5)],
+                eval_curve: vec![(2, 0.75)],
+                outer_syncs: 1,
+            },
+            journal,
+            config: Some(Json::obj(vec![("seed", Json::int(7u64))])),
+        };
+        let text = ck.to_json().to_string_pretty();
+        let back = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.step, 12);
+        assert_eq!(back.live, ck.live);
+        assert_eq!(back.replicas[0].leaves, ck.replicas[0].leaves);
+        assert_eq!(back.replicas[0].residual, ck.replicas[0].residual);
+        assert_eq!(back.replicas[0].consumed, 4096);
+        assert_eq!(back.sync, ck.sync);
+        assert_eq!(back.outcome.step_losses, ck.outcome.step_losses);
+        assert_eq!(back.outcome.eval_curve, ck.outcome.eval_curve);
+        assert_eq!(back.journal.events(), ck.journal.events());
+        assert_eq!(back.config.unwrap().u64_of("seed").unwrap(), 7);
+
+        // literals rebuild with the right shapes
+        let lits = back.replicas[0].literals().unwrap();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(lits[0].to_vec::<f32>().unwrap(), vec![1.0, -2.5, 0.25, 9.0]);
+    }
+
+    #[test]
+    fn version_mismatch_fails_loud() {
+        let j = Json::parse(r#"{"version": 999}"#).unwrap();
+        assert!(Checkpoint::from_json(&j).is_err());
+    }
+}

@@ -50,7 +50,9 @@ use crate::runtime::{
 use crate::train::schedule::{weight_decay, LrSchedule};
 use crate::util::json::Json;
 
-use super::pool::{drive, DrivePlan, InnerEngine, ReplicaState};
+use super::checkpoint::Checkpoint;
+use super::membership::{FaultEvent, FaultPlan};
+use super::pool::{drive_ctl, DriveCtl, DriveOutcome, DrivePlan, InnerEngine, ReplicaState};
 use super::sync::OuterSync;
 
 /// Stream-id namespace: replicas use 0..M, eval uses the high range.
@@ -155,6 +157,15 @@ pub struct RunConfig {
     /// same way). Changes training results, so it too is part of the
     /// run id.
     pub outer_bits_down: OuterBits,
+    /// Deterministic membership-churn spec (`--churn`, see
+    /// `membership::FaultPlan` for the grammar): explicit
+    /// `crash|leave|join|straggle@K:rR` events plus an optional
+    /// seed-derived `rate=P` crash rate, keyed to absolute outer-sync
+    /// indices. The empty spec (the default) is the churn-free path,
+    /// bit-identical to a build without membership support. Changes
+    /// training results, so a non-empty spec IS part of the sweep-store
+    /// run id (`_ch{spec}`). Inert for Data-Parallel.
+    pub churn: String,
 }
 
 impl Default for RunConfig {
@@ -179,7 +190,79 @@ impl Default for RunConfig {
             workers: 1,
             outer_bits: OuterBits::Fp32,
             outer_bits_down: OuterBits::Fp32,
+            churn: String::new(),
         }
+    }
+}
+
+impl RunConfig {
+    /// Serialize for checkpoint embedding: `diloco checkpoint` stores
+    /// the originating config inside the checkpoint file so `diloco
+    /// resume` rebuilds the identical run without re-supplied flags.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("algo", Json::str(&self.algo.label())),
+            ("sync_every", Json::int(self.sync_every as u64)),
+            ("global_batch_seqs", Json::int(self.global_batch_seqs as u64)),
+            ("inner_lr", Json::num(self.inner_lr)),
+            ("outer_lr", Json::num(self.outer_lr)),
+            (
+                "token_budget",
+                match self.token_budget {
+                    Some(b) => Json::int(b as u64),
+                    None => Json::Null,
+                },
+            ),
+            ("overtrain", Json::num(self.overtrain)),
+            ("seed", Json::int(self.seed)),
+            ("eval_tokens", Json::int(self.eval_tokens as u64)),
+            (
+                "eval_every",
+                match self.eval_every {
+                    Some(k) => Json::int(k as u64),
+                    None => Json::Null,
+                },
+            ),
+            ("downstream", Json::Bool(self.downstream)),
+            ("log_every", Json::int(self.log_every as u64)),
+            ("force_accumulate", Json::Bool(self.force_accumulate)),
+            ("streaming_fragments", Json::int(self.streaming_fragments as u64)),
+            ("overlap_tau", Json::int(self.overlap_tau as u64)),
+            ("workers", Json::int(self.workers as u64)),
+            ("outer_bits", Json::str(self.outer_bits.label())),
+            ("outer_bits_down", Json::str(self.outer_bits_down.label())),
+            ("churn", Json::str(&self.churn)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        Ok(RunConfig {
+            model: j.str_of("model")?,
+            algo: Algo::parse(&j.str_of("algo")?)?,
+            sync_every: j.usize_of("sync_every")?,
+            global_batch_seqs: j.usize_of("global_batch_seqs")?,
+            inner_lr: j.f64_of("inner_lr")?,
+            outer_lr: j.f64_of("outer_lr")?,
+            token_budget: j.get("token_budget").and_then(|v| v.as_usize()),
+            overtrain: j.f64_of("overtrain")?,
+            seed: j.u64_of("seed")?,
+            eval_tokens: j.usize_of("eval_tokens")?,
+            eval_every: j.get("eval_every").and_then(|v| v.as_usize()),
+            downstream: j.req("downstream")?.as_bool().unwrap_or(false),
+            log_every: j.usize_of("log_every")?,
+            force_accumulate: j.req("force_accumulate")?.as_bool().unwrap_or(false),
+            streaming_fragments: j.usize_of("streaming_fragments")?,
+            overlap_tau: j.usize_of("overlap_tau")?,
+            workers: j.usize_of("workers")?,
+            outer_bits: OuterBits::parse(&j.str_of("outer_bits")?)?,
+            outer_bits_down: OuterBits::parse(&j.str_of("outer_bits_down")?)?,
+            churn: j
+                .get("churn")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+        })
     }
 }
 
@@ -221,6 +304,12 @@ pub struct RunMetrics {
     /// syncs — the down codec's encoded payload sizes, counted once
     /// per sync (0 for DP).
     pub wire_down_bytes: u64,
+    /// The membership-churn spec the run used ("" = churn-free).
+    pub churn: String,
+    /// Fraction of (sync, replica) contribution slots the churn plan
+    /// cost the run (crashes + leaves over m × n_syncs) — the x-axis
+    /// of `diloco report --exp churn`.
+    pub dropout_rate: f64,
 }
 
 impl RunMetrics {
@@ -267,6 +356,8 @@ impl RunMetrics {
             // wire bytes are u64 exact counts; Json::int avoids f64
             ("wire_up_bytes", Json::int(self.wire_up_bytes)),
             ("wire_down_bytes", Json::int(self.wire_down_bytes)),
+            ("churn", Json::str(&self.churn)),
+            ("dropout_rate", Json::num(self.dropout_rate)),
         ])
     }
 
@@ -337,6 +428,13 @@ impl RunMetrics {
                 .get("wire_down_bytes")
                 .and_then(|v| v.as_u64())
                 .unwrap_or(0),
+            // absent in pre-membership records: those ran churn-free
+            churn: j
+                .get("churn")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            dropout_rate: j.get("dropout_rate").and_then(|v| v.as_f64()).unwrap_or(0.0),
         })
     }
 }
@@ -472,9 +570,34 @@ impl InnerEngine for PjrtEngine {
     }
 }
 
-/// Execute one training run end to end.
-pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Result<RunMetrics> {
-    let t_start = std::time::Instant::now();
+/// Everything a drive needs, built once from a [`RunConfig`] — shared
+/// by [`run`], [`run_checkpoint`], and [`run_resume`], so a resumed run
+/// reconstructs the identical engine, schedule, and fault plan that the
+/// interrupted run was using (bit-identical continuation depends on it).
+struct Prepared {
+    engine: PjrtEngine,
+    plan: DrivePlan,
+    sync: Option<OuterSync>,
+    /// The replica universe (initial replicas + planned-joiner slots),
+    /// fresh-initialized; resume overwrites states from the checkpoint.
+    replicas: Vec<ReplicaState>,
+    /// Resolved fault events (empty = churn-free).
+    events: Vec<FaultEvent>,
+    corpus: CorpusSpec,
+    m_replicas: usize,
+    universe: usize,
+    tokens_per_step: usize,
+    h: usize,
+    is_diloco: bool,
+    outer_bits: OuterBits,
+    outer_bits_down: OuterBits,
+    n: usize,
+    /// Normalized churn spec ("" for DP, where churn is inert).
+    churn_spec: String,
+    dropout_rate: f64,
+}
+
+fn prepare(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Result<Prepared> {
     let n = mr.n_leaves();
     let seq = mr.manifest.model.seq_len;
     let m_replicas = cfg.algo.replicas();
@@ -544,6 +667,45 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         log::warn!(
             "--outer-bits-down {} has no effect for Data-Parallel (no broadcast); recording 32",
             cfg.outer_bits_down.label()
+        );
+    }
+
+    // ---- membership / churn ---------------------------------------------
+    // The fault plan resolves against the run shape (replica count,
+    // total sends) into a concrete event list; the universe is fixed
+    // here so replica ids, shards, and encode seeds never shift when
+    // membership changes mid-run.
+    let fault_plan = if is_diloco {
+        FaultPlan::parse(&cfg.churn, cfg.seed)?
+    } else {
+        if !cfg.churn.is_empty() {
+            log::warn!(
+                "--churn {:?} has no effect for Data-Parallel (no membership); recording none",
+                cfg.churn
+            );
+        }
+        FaultPlan::default()
+    };
+    let universe = fault_plan.universe(m_replicas);
+    // Send boundaries: every frag_interval steps, plus the final flush.
+    let n_sends = ((total_steps - 1) / frag_interval + 1) as u64;
+    let events = fault_plan.resolve(m_replicas, n_sends);
+    for ev in &events {
+        if ev.replica >= universe {
+            bail!(
+                "churn: {}@{}:r{} references a replica outside the universe of \
+                 {universe} slots (only join events widen it)",
+                ev.kind.label(),
+                ev.at_sync,
+                ev.replica
+            );
+        }
+    }
+    let dropout_rate = fault_plan.dropout_rate(m_replicas, n_sends);
+    if !events.is_empty() {
+        log::info!(
+            "churn: {} events over {n_sends} sends (dropout rate {dropout_rate:.3})",
+            events.len()
         );
     }
 
@@ -630,8 +792,11 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         ..CorpusSpec::default()
     };
     // Per-replica state and data shard, owned by one pool worker each
-    // for the whole run (paper Algorithm 1 line 4: shard D_m).
-    let mut replicas: Vec<ReplicaState> = (0..m_replicas)
+    // for the whole run (paper Algorithm 1 line 4: shard D_m). The
+    // universe includes planned-joiner slots beyond m_replicas; they
+    // start dark (frozen at params0, shard unconsumed) until their
+    // join event revives them from the then-current broadcast view.
+    let replicas: Vec<ReplicaState> = (0..universe)
         .map(|r| ReplicaState {
             state: make_state(),
             shard: TokenStream::new(corpus.clone(), cfg.seed, r as u64),
@@ -639,7 +804,7 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         .collect();
     // The H-cadence sync engine: flat-bus global model + outer
     // optimizer arenas + per-leaf literal cache (DiLoCo only).
-    let mut sync: Option<OuterSync> = if is_diloco {
+    let sync: Option<OuterSync> = if is_diloco {
         let layout = Arc::new(FlatLayout::from_specs(&mr.manifest.params));
         Some(
             OuterSync::new(
@@ -676,12 +841,10 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         eval_step,
         eval_batch: mr.manifest.eval_batch,
         eval_tokens: cfg.eval_tokens,
-        corpus,
+        corpus: corpus.clone(),
         seed: cfg.seed,
     };
 
-    // ---- training (inner loops in the worker pool, outer steps at the
-    // barrier; see coordinator::pool for the concurrency model) --------
     let plan = DrivePlan {
         total_steps,
         sync_interval: frag_interval,
@@ -692,7 +855,186 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         workers: cfg.workers,
         overlap_tau,
     };
-    let outcome = drive(&engine, &mut replicas, sync.as_mut(), &plan)?;
+    Ok(Prepared {
+        engine,
+        plan,
+        sync,
+        replicas,
+        events,
+        corpus,
+        m_replicas,
+        universe,
+        tokens_per_step,
+        h,
+        is_diloco,
+        outer_bits,
+        outer_bits_down,
+        n,
+        churn_spec: if is_diloco { cfg.churn.clone() } else { String::new() },
+        dropout_rate,
+    })
+}
+
+/// The drive controls a fresh (non-resumed) run starts with: initial
+/// replicas live, planned-joiner slots dark, the resolved fault
+/// schedule attached.
+fn initial_ctl(pre: &Prepared) -> DriveCtl {
+    let mut ctl = DriveCtl::fresh(pre.universe);
+    for flag in ctl.live.iter_mut().skip(pre.m_replicas) {
+        *flag = false;
+    }
+    ctl.events = pre.events.clone();
+    ctl
+}
+
+/// Execute one training run end to end.
+pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Result<RunMetrics> {
+    let t_start = std::time::Instant::now();
+    let mut pre = prepare(mr, policy, cfg)?;
+    let mut sync = pre.sync.take();
+    let mut replicas = std::mem::take(&mut pre.replicas);
+    let mut ctl = initial_ctl(&pre);
+    let outcome = drive_ctl(&pre.engine, &mut replicas, sync.as_mut(), &pre.plan, &mut ctl)?;
+    finish(mr, cfg, &pre, sync, &replicas, outcome, t_start)
+}
+
+/// Run until `after_sync` outer syncs have merged, then capture a
+/// [`Checkpoint`] (with the originating config embedded) to `out`.
+/// Returns the inner step the run stopped at. `run_resume` continues
+/// such a checkpoint bit-identically to the uninterrupted run.
+pub fn run_checkpoint(
+    mr: &ModelRuntime,
+    policy: &OptimizerPolicy,
+    cfg: &RunConfig,
+    after_sync: u64,
+    out: &std::path::Path,
+) -> Result<usize> {
+    let mut pre = prepare(mr, policy, cfg)?;
+    if !pre.is_diloco {
+        bail!("checkpoint: Data-Parallel has no outer syncs to stop at (use DiLoCo)");
+    }
+    let mut sync = pre.sync.take();
+    let mut replicas = std::mem::take(&mut pre.replicas);
+    let mut ctl = initial_ctl(&pre);
+    ctl.stop_after_sync = Some(after_sync);
+    let outcome = drive_ctl(&pre.engine, &mut replicas, sync.as_mut(), &pre.plan, &mut ctl)?;
+    let Some(step) = ctl.stopped_at else {
+        bail!(
+            "checkpoint: the run finished (T={}) before {after_sync} outer syncs \
+             completed with steps to spare — nothing left to resume",
+            pre.plan.total_steps
+        );
+    };
+    let mut ck = Checkpoint::capture(
+        step,
+        &replicas,
+        &ctl.residuals,
+        &ctl.live,
+        sync.as_ref(),
+        &outcome,
+        &ctl.journal,
+    )?;
+    ck.config = Some(cfg.to_json());
+    ck.save(out)?;
+    log::info!(
+        "checkpoint: stopped at step {step}/{} after {after_sync} outer syncs -> {}",
+        pre.plan.total_steps,
+        out.display()
+    );
+    Ok(step)
+}
+
+/// Resume a [`run_checkpoint`] capture and run to completion. The
+/// config is read back out of the checkpoint, so the continuation uses
+/// exactly the schedule, codecs, and fault plan of the original run —
+/// losses, evals, wire bytes, and final params are bit-identical to
+/// the run that was never interrupted (`tests/churn_resume.rs`).
+pub fn run_resume(
+    mr: &ModelRuntime,
+    policy: &OptimizerPolicy,
+    path: &std::path::Path,
+) -> Result<RunMetrics> {
+    let t_start = std::time::Instant::now();
+    let ck = Checkpoint::load(path)?;
+    let cfg_json = ck
+        .config
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("checkpoint {} carries no config", path.display()))?;
+    let cfg = RunConfig::from_json(cfg_json)
+        .with_context(|| format!("checkpoint {} config", path.display()))?;
+    let mut pre = prepare(mr, policy, &cfg)?;
+    if ck.replicas.len() != pre.universe || ck.live.len() != pre.universe {
+        bail!(
+            "checkpoint has {} replicas / {} live flags, the config's universe is {}",
+            ck.replicas.len(),
+            ck.live.len(),
+            pre.universe
+        );
+    }
+    let mut replicas = std::mem::take(&mut pre.replicas);
+    let mut residuals = Vec::with_capacity(pre.universe);
+    for (r, (rep, rck)) in replicas.iter_mut().zip(ck.replicas.iter()).enumerate() {
+        let lits = rck
+            .literals()
+            .with_context(|| format!("checkpoint replica {r}"))?;
+        if lits.len() != rep.state.len() {
+            bail!(
+                "checkpoint replica {r} has {} leaves, the model wants {}",
+                lits.len(),
+                rep.state.len()
+            );
+        }
+        rep.state = lits;
+        // re-seat the shard by replaying its consumed prefix — exact,
+        // because the stream is pure in (corpus seed, stream id)
+        rep.shard = TokenStream::new(pre.corpus.clone(), cfg.seed, r as u64);
+        rep.shard.skip(rck.consumed);
+        residuals.push(rck.residual.clone());
+    }
+    let mut sync = pre.sync.take();
+    let snap_init = match (&mut sync, &ck.sync) {
+        (Some(bus), Some(st)) => {
+            bus.restore_state(st)?;
+            Some(bus.broadcast_view().to_vec())
+        }
+        (None, None) => None,
+        (have, _) => bail!(
+            "checkpoint and config disagree on the outer sync (config {}, checkpoint {})",
+            if have.is_some() { "diloco" } else { "dp" },
+            if ck.sync.is_some() { "diloco" } else { "dp" },
+        ),
+    };
+    let mut ctl = DriveCtl {
+        events: pre.events.clone(),
+        live: ck.live.clone(),
+        stop_after_sync: None,
+        start_step: ck.step,
+        resume: true,
+        journal: ck.journal.clone(),
+        residuals,
+        snap_init,
+        stopped_at: None,
+    };
+    let resumed = drive_ctl(&pre.engine, &mut replicas, sync.as_mut(), &pre.plan, &mut ctl)?;
+    let outcome = ck.stitch(&resumed);
+    finish(mr, &cfg, &pre, sync, &replicas, outcome, t_start)
+}
+
+/// Final eval + downstream scoring + metric assembly, shared by the
+/// fresh and resumed paths (`outcome` is the full-run outcome — the
+/// resumed path stitches before calling).
+fn finish(
+    mr: &ModelRuntime,
+    cfg: &RunConfig,
+    pre: &Prepared,
+    mut sync: Option<OuterSync>,
+    replicas: &[ReplicaState],
+    outcome: DriveOutcome,
+    t_start: std::time::Instant,
+) -> Result<RunMetrics> {
+    let n = pre.n;
+    let seq = pre.engine.seq;
+    let total_steps = pre.plan.total_steps;
     let last_train_loss = outcome.step_losses.last().copied().unwrap_or(f64::NAN);
     let mut eval_curve = outcome.eval_curve;
 
@@ -704,7 +1046,7 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         Some(bus) => bus.global_literals()?.to_vec(),
         None => replicas[0].state[..n].to_vec(),
     };
-    let final_eval = engine.eval(&final_lits)?;
+    let final_eval = pre.engine.eval(&final_lits)?;
     eval_curve.push((total_steps, final_eval));
 
     // ---- downstream zero-shot scoring --------------------------------------
@@ -747,16 +1089,16 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
     Ok(RunMetrics {
         model: cfg.model.clone(),
         algo: cfg.algo.label(),
-        replicas: m_replicas,
-        sync_every: if is_diloco { h } else { 0 },
-        global_batch_tokens: tokens_per_step,
+        replicas: pre.m_replicas,
+        sync_every: if pre.is_diloco { pre.h } else { 0 },
+        global_batch_tokens: pre.tokens_per_step,
         inner_lr: cfg.inner_lr,
-        outer_lr: if is_diloco { cfg.outer_lr } else { 0.0 },
+        outer_lr: if pre.is_diloco { cfg.outer_lr } else { 0.0 },
         overtrain: cfg.overtrain,
         seed: cfg.seed,
         param_count: mr.manifest.model.param_count,
         steps: total_steps,
-        tokens: total_steps * tokens_per_step,
+        tokens: total_steps * pre.tokens_per_step,
         final_eval_loss: final_eval,
         final_train_loss: last_train_loss,
         eval_curve,
@@ -764,11 +1106,13 @@ pub fn run(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
         downstream,
         outer_syncs: outcome.outer_syncs,
         wall_secs: t_start.elapsed().as_secs_f64(),
-        fragments: if is_diloco { fragments } else { 1 },
-        overlap_tau,
-        outer_bits: outer_bits.bits(),
-        outer_bits_down: outer_bits_down.bits(),
+        fragments: if pre.is_diloco { pre.plan.fragments } else { 1 },
+        overlap_tau: pre.plan.overlap_tau,
+        outer_bits: pre.outer_bits.bits(),
+        outer_bits_down: pre.outer_bits_down.bits(),
         wire_up_bytes,
         wire_down_bytes,
+        churn: pre.churn_spec.clone(),
+        dropout_rate: pre.dropout_rate,
     })
 }

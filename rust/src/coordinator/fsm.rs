@@ -1,0 +1,159 @@
+//! The coordinator's ticked run-phase state machine.
+//!
+//! The drive loop has always had implicit phases — validate the
+//! membership, capture comm snapshots, run segments, drain the
+//! pipeline, apply the final broadcast — but they lived as positions
+//! in a function body, invisible to the journal and impossible to
+//! assert on. This module makes them an explicit FSM:
+//!
+//! ```text
+//! WaitingForMembers -> Warmup -> Train -> Cooldown -> Done
+//! ```
+//!
+//! - **WaitingForMembers** — entry: the universe of replicas exists
+//!   but the live set has not been validated yet (elastic runs start
+//!   with joiners dark).
+//! - **Warmup** — at least one live replica; comm arenas and
+//!   snapshots are being captured, no inner step has run.
+//! - **Train** — segments are being dispatched; membership events
+//!   (join/leave/crash) apply at their keyed outer boundaries.
+//! - **Cooldown** — the step loop has exited (end of training or a
+//!   checkpoint stop); the pipeline is drained, the final broadcast
+//!   is pending application.
+//! - **Done** — the final broadcast is built; replica states are
+//!   final.
+//!
+//! Transitions are validated fail-loud: the drive loop *ticks* the
+//! machine at fixed points, and an illegal edge (a bug in the loop's
+//! sequencing, e.g. dispatching before membership validation) is an
+//! error, not a silent relabel. Every successful transition is
+//! recorded in the run's event journal (`coordinator::journal`), so a
+//! run's phase history is replayable from the checkpoint.
+
+use anyhow::{bail, Result};
+
+/// One phase of a coordinated run. Ordering is the legal chain; the
+/// only skip allowed is `Warmup -> Cooldown` (a zero-step schedule
+/// never dispatches a segment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    WaitingForMembers,
+    Warmup,
+    Train,
+    Cooldown,
+    Done,
+}
+
+impl Phase {
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::WaitingForMembers => "waiting-for-members",
+            Phase::Warmup => "warmup",
+            Phase::Train => "train",
+            Phase::Cooldown => "cooldown",
+            Phase::Done => "done",
+        }
+    }
+
+    fn can_advance_to(self, to: Phase) -> bool {
+        matches!(
+            (self, to),
+            (Phase::WaitingForMembers, Phase::Warmup)
+                | (Phase::Warmup, Phase::Train)
+                | (Phase::Warmup, Phase::Cooldown)
+                | (Phase::Train, Phase::Cooldown)
+                | (Phase::Cooldown, Phase::Done)
+        )
+    }
+}
+
+/// The ticked machine: current phase + how many ticks it has taken.
+/// Owned by the drive loop; one instance per `drive_ctl` invocation
+/// (a resumed run re-walks the chain — the phases describe *this*
+/// process's lifecycle, the journal carries history across restarts).
+#[derive(Debug)]
+pub struct CoordinatorFsm {
+    phase: Phase,
+    ticks: u64,
+}
+
+impl CoordinatorFsm {
+    pub fn new() -> CoordinatorFsm {
+        CoordinatorFsm {
+            phase: Phase::WaitingForMembers,
+            ticks: 0,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Tick the machine to `to`. Illegal edges fail loud — they mean
+    /// the drive loop's sequencing is broken, and relabeling silently
+    /// would let a mis-ordered journal masquerade as a clean run.
+    pub fn advance(&mut self, to: Phase) -> Result<Phase> {
+        if !self.phase.can_advance_to(to) {
+            bail!(
+                "coordinator fsm: illegal transition {} -> {}",
+                self.phase.label(),
+                to.label()
+            );
+        }
+        self.phase = to;
+        self.ticks += 1;
+        Ok(to)
+    }
+}
+
+impl Default for CoordinatorFsm {
+    fn default() -> Self {
+        CoordinatorFsm::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn the_legal_chain_walks_end_to_end() {
+        let mut fsm = CoordinatorFsm::new();
+        assert_eq!(fsm.phase(), Phase::WaitingForMembers);
+        for to in [Phase::Warmup, Phase::Train, Phase::Cooldown, Phase::Done] {
+            fsm.advance(to).unwrap();
+            assert_eq!(fsm.phase(), to);
+        }
+        assert_eq!(fsm.ticks(), 4);
+    }
+
+    #[test]
+    fn zero_step_runs_may_skip_train() {
+        let mut fsm = CoordinatorFsm::new();
+        fsm.advance(Phase::Warmup).unwrap();
+        fsm.advance(Phase::Cooldown).unwrap();
+        fsm.advance(Phase::Done).unwrap();
+    }
+
+    #[test]
+    fn illegal_edges_fail_loud() {
+        let mut fsm = CoordinatorFsm::new();
+        // skipping membership validation is a sequencing bug
+        assert!(fsm.advance(Phase::Train).is_err());
+        assert!(fsm.advance(Phase::Done).is_err());
+        fsm.advance(Phase::Warmup).unwrap();
+        // no going back
+        assert!(fsm.advance(Phase::WaitingForMembers).is_err());
+        fsm.advance(Phase::Train).unwrap();
+        // self-loops are not ticks
+        assert!(fsm.advance(Phase::Train).is_err());
+        fsm.advance(Phase::Cooldown).unwrap();
+        fsm.advance(Phase::Done).unwrap();
+        assert!(fsm.advance(Phase::Cooldown).is_err());
+        assert_eq!(fsm.ticks(), 4);
+    }
+}

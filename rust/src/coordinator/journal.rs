@@ -1,0 +1,222 @@
+//! Append-only event journal for coordinated runs.
+//!
+//! Every membership and sync event in a run — phase transitions of the
+//! coordinator FSM, outer-sync sends and merges, joins, leaves,
+//! crashes, straggler notes, checkpoint stops and resumes — appends
+//! one [`JournalEvent`] here. The journal is the run's flight
+//! recorder: it serializes into the checkpoint (so a resumed run
+//! carries its full history) and it is what `diloco resume` replays to
+//! know where the interrupted run stood. Events are keyed by the step
+//! and the *absolute* outer-sync count at the time of the event, so
+//! entries written before and after a resume stitch into one coherent
+//! timeline.
+//!
+//! The journal never drives control flow — the fault plan and the FSM
+//! do that. It only records, which keeps the append path cheap enough
+//! to sit on the hot sync path (measured by `bench_hot_path`).
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// What happened. `label()`/`parse()` round-trip through the
+/// checkpoint's JSON form.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Coordinator FSM entered a phase (detail = phase label).
+    PhaseEnter,
+    /// An outer-sync payload was captured and handed to the reducer.
+    SyncSend,
+    /// An outer sync was reduced and its broadcast built.
+    SyncMerge,
+    /// A replica joined the run at an outer boundary.
+    Join,
+    /// A replica left gracefully (contributed to its last sync).
+    Leave,
+    /// A replica died mid-segment (dropped from that reduce).
+    Crash,
+    /// A replica straggled (walltime-model note; math unaffected).
+    Straggle,
+    /// A checkpoint was captured at an outer boundary.
+    Checkpoint,
+    /// The run resumed from a checkpoint.
+    Resume,
+}
+
+impl EventKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::PhaseEnter => "phase",
+            EventKind::SyncSend => "sync-send",
+            EventKind::SyncMerge => "sync-merge",
+            EventKind::Join => "join",
+            EventKind::Leave => "leave",
+            EventKind::Crash => "crash",
+            EventKind::Straggle => "straggle",
+            EventKind::Checkpoint => "checkpoint",
+            EventKind::Resume => "resume",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<EventKind> {
+        Ok(match s {
+            "phase" => EventKind::PhaseEnter,
+            "sync-send" => EventKind::SyncSend,
+            "sync-merge" => EventKind::SyncMerge,
+            "join" => EventKind::Join,
+            "leave" => EventKind::Leave,
+            "crash" => EventKind::Crash,
+            "straggle" => EventKind::Straggle,
+            "checkpoint" => EventKind::Checkpoint,
+            "resume" => EventKind::Resume,
+            other => bail!("journal: unknown event kind {other:?}"),
+        })
+    }
+}
+
+/// One journal entry. `sync` is the absolute outer-sync count at the
+/// time of the event (merges completed so far, including any before a
+/// resume), `step` the inner step the coordinator had reached.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalEvent {
+    pub step: usize,
+    pub sync: u64,
+    pub kind: EventKind,
+    pub replica: Option<usize>,
+    pub detail: String,
+}
+
+/// The append-only log. Cloned wholesale into checkpoints; `extend`
+/// stitches a resumed run's new events onto the restored history.
+#[derive(Debug, Clone, Default)]
+pub struct Journal {
+    events: Vec<JournalEvent>,
+}
+
+impl Journal {
+    pub fn new() -> Journal {
+        Journal::default()
+    }
+
+    pub fn append(
+        &mut self,
+        step: usize,
+        sync: u64,
+        kind: EventKind,
+        replica: Option<usize>,
+        detail: impl Into<String>,
+    ) {
+        self.events.push(JournalEvent {
+            step,
+            sync,
+            kind,
+            replica,
+            detail: detail.into(),
+        });
+    }
+
+    pub fn events(&self) -> &[JournalEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn count(&self, kind: EventKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// Append all of `later`'s events after this journal's (resume
+    /// stitching: restored history first, new run's events after).
+    pub fn extend(&mut self, later: Journal) {
+        self.events.extend(later.events);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.events.iter().map(|e| {
+            let mut pairs = vec![
+                ("step", Json::int(e.step as u64)),
+                ("sync", Json::int(e.sync)),
+                ("kind", Json::str(e.kind.label())),
+                ("detail", Json::str(&e.detail)),
+            ];
+            if let Some(r) = e.replica {
+                pairs.push(("replica", Json::int(r as u64)));
+            }
+            Json::obj(pairs)
+        }))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Journal> {
+        let Some(items) = j.as_arr() else {
+            bail!("journal: expected a JSON array, got {j}");
+        };
+        let mut journal = Journal::new();
+        for item in items {
+            journal.events.push(JournalEvent {
+                step: item.usize_of("step")?,
+                sync: item.u64_of("sync")?,
+                kind: EventKind::parse(&item.str_of("kind")?)?,
+                replica: item.get("replica").and_then(|v| v.as_usize()),
+                detail: item.str_of("detail")?,
+            });
+        }
+        Ok(journal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appends_counts_and_roundtrips() {
+        let mut j = Journal::new();
+        j.append(0, 0, EventKind::PhaseEnter, None, "warmup");
+        j.append(6, 1, EventKind::SyncMerge, None, "frag 0");
+        j.append(9, 1, EventKind::Crash, Some(2), "fault plan");
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.count(EventKind::Crash), 1);
+        assert_eq!(j.count(EventKind::SyncSend), 0);
+
+        let back = Journal::from_json(&j.to_json()).unwrap();
+        assert_eq!(back.events(), j.events());
+
+        // stitching keeps order: history first, new events after
+        let mut newer = Journal::new();
+        newer.append(12, 2, EventKind::Resume, None, "from ckpt");
+        let mut stitched = back;
+        stitched.extend(newer);
+        assert_eq!(stitched.len(), 4);
+        assert_eq!(stitched.events()[3].kind, EventKind::Resume);
+    }
+
+    #[test]
+    fn rejects_unknown_kinds() {
+        assert!(EventKind::parse("nope").is_err());
+        let j = Json::parse(r#"[{"step":1,"sync":0,"kind":"nope","detail":""}]"#).unwrap();
+        assert!(Journal::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn every_kind_label_roundtrips() {
+        for k in [
+            EventKind::PhaseEnter,
+            EventKind::SyncSend,
+            EventKind::SyncMerge,
+            EventKind::Join,
+            EventKind::Leave,
+            EventKind::Crash,
+            EventKind::Straggle,
+            EventKind::Checkpoint,
+            EventKind::Resume,
+        ] {
+            assert_eq!(EventKind::parse(k.label()).unwrap(), k);
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! Elastic membership: the fault plan and the live set.
+//!
+//! DiLoCo's premise is training over islands of compute that are
+//! individually unreliable; this module gives the coordinator a
+//! *deterministic* model of that unreliability. A [`FaultPlan`] is a
+//! schedule of membership events — joins, graceful leaves, crashes,
+//! straggler notes — keyed to `(outer sync index, replica id)`. It is
+//! parsed from the `--churn` CLI spec and resolved against the run's
+//! shape (replica count, total outer syncs) into a concrete event
+//! list. Seed-derived `rate=` events use splitmix64 chains off the
+//! run seed, so a churn scenario replays bit-identically on any
+//! machine and any worker count, and never touches the data or
+//! encode-seed RNG streams.
+//!
+//! Event timing semantics (all keyed to outer sync index `K`, counted
+//! absolutely across checkpoint/resume):
+//! - `crash@K:rR` — replica R is dead for the whole segment that ends
+//!   at send K: it takes no inner steps and is dropped from that
+//!   reduce onward (mean over survivors).
+//! - `leave@K:rR` — replica R contributes to send K, then leaves.
+//! - `join@K:rR` — replica R goes live at the first segment after the
+//!   merge of sync K, initialized from the current broadcast view.
+//! - `straggle@K:rR` — journal/walltime note only; the math is
+//!   unaffected (stragglers are a netsim concern, `netsim::walltime`).
+//!
+//! The live set itself is a [`Membership`] — a universe-sized bitmap.
+//! The universe (initial replicas plus every planned joiner) is fixed
+//! at startup so replica ids, shard streams, and encode seeds never
+//! shift when membership changes; liveness is the only mutable part.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::splitmix64;
+
+/// Salt for rate-derived crash draws, chained with the run seed so
+/// churn draws are independent of data and wire-codec streams.
+const CHURN_SALT: u64 = 0xC4A5_41F7_BAD5_EED5;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Join,
+    Leave,
+    Crash,
+    Straggle,
+}
+
+impl FaultKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultKind::Join => "join",
+            FaultKind::Leave => "leave",
+            FaultKind::Crash => "crash",
+            FaultKind::Straggle => "straggle",
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultKind> {
+        Ok(match s {
+            "join" => FaultKind::Join,
+            "leave" => FaultKind::Leave,
+            "crash" => FaultKind::Crash,
+            "straggle" => FaultKind::Straggle,
+            other => bail!(
+                "churn: unknown event kind {other:?} (expected join|leave|crash|straggle)"
+            ),
+        })
+    }
+}
+
+/// One scheduled membership event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at_sync: u64,
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// A parsed `--churn` spec: explicit events plus an optional
+/// seed-derived crash rate. The plan is pure data — resolution against
+/// a concrete run shape happens in [`FaultPlan::resolve`].
+///
+/// Grammar (comma-separated, no spaces required):
+/// `crash@K:rR`, `leave@K:rR`, `join@K:rR`, `straggle@K:rR`,
+/// `rate=P` (at most once, `0 <= P < 1`).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    spec: String,
+    seed: u64,
+    explicit: Vec<FaultEvent>,
+    rate: f64,
+}
+
+impl FaultPlan {
+    /// Parse a spec. The empty spec is the empty plan (no churn).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut plan = FaultPlan {
+            spec: spec.to_string(),
+            seed,
+            explicit: Vec::new(),
+            rate: 0.0,
+        };
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some(rate) = item.strip_prefix("rate=") {
+                if plan.rate != 0.0 {
+                    bail!("churn: `rate=` given more than once in {spec:?}");
+                }
+                let r: f64 = rate
+                    .parse()
+                    .with_context(|| format!("churn: bad rate {rate:?}"))?;
+                if !(0.0..1.0).contains(&r) {
+                    bail!("churn: rate must be in [0, 1), got {r}");
+                }
+                plan.rate = r;
+                continue;
+            }
+            let (kind, rest) = item
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("churn: bad event {item:?} (want kind@K:rR)"))?;
+            let kind = FaultKind::parse(kind)?;
+            let (sync, rep) = rest
+                .split_once(":r")
+                .ok_or_else(|| anyhow::anyhow!("churn: bad event {item:?} (want kind@K:rR)"))?;
+            let at_sync: u64 = sync
+                .parse()
+                .with_context(|| format!("churn: bad sync index in {item:?}"))?;
+            let replica: usize = rep
+                .parse()
+                .with_context(|| format!("churn: bad replica id in {item:?}"))?;
+            plan.explicit.push(FaultEvent {
+                at_sync,
+                replica,
+                kind,
+            });
+        }
+        // deterministic order regardless of how the spec was written
+        plan.explicit
+            .sort_by_key(|e| (e.at_sync, e.replica, e.kind.label()));
+        Ok(plan)
+    }
+
+    /// True when the plan schedules nothing (empty spec or rate 0 with
+    /// no explicit events) — the coordinator takes the churn-free path.
+    pub fn is_empty(&self) -> bool {
+        self.explicit.is_empty() && self.rate == 0.0
+    }
+
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// The replica universe for a run starting with `m` replicas:
+    /// initial ids plus room for every explicitly planned joiner.
+    /// Fixed at startup so ids, shards, and encode seeds never shift.
+    pub fn universe(&self, m: usize) -> usize {
+        self.explicit
+            .iter()
+            .filter(|e| e.kind == FaultKind::Join)
+            .map(|e| e.replica + 1)
+            .fold(m, usize::max)
+    }
+
+    /// Resolve the plan against a run shape into a concrete, sorted
+    /// event list: explicit events plus seed-derived crashes at
+    /// `rate` per (sync, replica) cell. Replica 0 is the anchor and is
+    /// never auto-crashed (a plan must not be able to kill the whole
+    /// run by chance), and a rate-crashed replica draws no further
+    /// events. Explicit events are the author's responsibility — the
+    /// coordinator still refuses, loudly, to kill the last survivor.
+    pub fn resolve(&self, m: usize, n_syncs: u64) -> Vec<FaultEvent> {
+        let mut events = self.explicit.clone();
+        if self.rate > 0.0 {
+            let mut dead = vec![false; m];
+            for k in 0..n_syncs {
+                for (r, gone) in dead.iter_mut().enumerate().skip(1) {
+                    if *gone {
+                        continue;
+                    }
+                    let mut s = self.seed ^ CHURN_SALT;
+                    let mut chain = splitmix64(&mut s) ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                    let mut chain2 =
+                        splitmix64(&mut chain) ^ (r as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+                    let draw = splitmix64(&mut chain2);
+                    if (draw >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < self.rate {
+                        *gone = true;
+                        events.push(FaultEvent {
+                            at_sync: k,
+                            replica: r,
+                            kind: FaultKind::Crash,
+                        });
+                    }
+                }
+            }
+        }
+        events.sort_by_key(|e| (e.at_sync, e.replica, e.kind.label()));
+        events
+    }
+
+    /// Fraction of (sync, replica) contribution slots lost to crashes
+    /// and leaves — the x-axis of the churn report table.
+    pub fn dropout_rate(&self, m: usize, n_syncs: u64) -> f64 {
+        if m == 0 || n_syncs == 0 {
+            return 0.0;
+        }
+        let universe = self.universe(m);
+        let mut live = vec![false; universe];
+        for flag in live.iter_mut().take(m) {
+            *flag = true;
+        }
+        let mut lost = 0u64;
+        let mut events = self.resolve(m, n_syncs);
+        events.sort_by_key(|e| e.at_sync);
+        let mut idx = 0;
+        for k in 0..n_syncs {
+            while idx < events.len() && events[idx].at_sync == k {
+                let e = events[idx];
+                idx += 1;
+                match e.kind {
+                    // dead for the segment ending at send k
+                    FaultKind::Crash if live[e.replica] => {
+                        live[e.replica] = false;
+                        lost += n_syncs - k;
+                    }
+                    // contributes to send k, gone after
+                    FaultKind::Leave if live[e.replica] => {
+                        live[e.replica] = false;
+                        lost += n_syncs.saturating_sub(k + 1);
+                    }
+                    FaultKind::Join if !live[e.replica] => live[e.replica] = true,
+                    _ => {}
+                }
+            }
+        }
+        lost as f64 / (m as f64 * n_syncs as f64)
+    }
+}
+
+/// The live set over the replica universe. Replica ids are stable for
+/// the whole run; only liveness flips.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    live: Vec<bool>,
+}
+
+impl Membership {
+    /// All of the first `m` replicas live, the rest (planned joiners)
+    /// dark.
+    pub fn initial(universe: usize, m: usize) -> Membership {
+        let mut live = vec![false; universe];
+        for flag in live.iter_mut().take(m) {
+            *flag = true;
+        }
+        Membership { live }
+    }
+
+    /// Restore from checkpointed flags.
+    pub fn from_flags(live: Vec<bool>) -> Membership {
+        Membership { live }
+    }
+
+    pub fn universe(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_live(&self, r: usize) -> bool {
+        self.live.get(r).copied().unwrap_or(false)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    pub fn flags(&self) -> &[bool] {
+        &self.live
+    }
+
+    pub fn live_ids(&self) -> Vec<usize> {
+        (0..self.live.len()).filter(|&r| self.live[r]).collect()
+    }
+
+    pub fn set_live(&mut self, r: usize, live: bool) {
+        self.live[r] = live;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_explicit_events_in_stable_order() {
+        let plan = FaultPlan::parse("leave@2:r1, crash@1:r2, join@1:r3", 42).unwrap();
+        assert!(!plan.is_empty());
+        let events = plan.resolve(3, 4);
+        assert_eq!(
+            events,
+            vec![
+                FaultEvent {
+                    at_sync: 1,
+                    replica: 2,
+                    kind: FaultKind::Crash
+                },
+                FaultEvent {
+                    at_sync: 1,
+                    replica: 3,
+                    kind: FaultKind::Join
+                },
+                FaultEvent {
+                    at_sync: 2,
+                    replica: 1,
+                    kind: FaultKind::Leave
+                },
+            ]
+        );
+        assert_eq!(plan.universe(3), 4, "join r3 widens the universe");
+        assert_eq!(plan.universe(8), 8);
+    }
+
+    #[test]
+    fn empty_spec_is_empty_plan() {
+        let plan = FaultPlan::parse("", 1).unwrap();
+        assert!(plan.is_empty());
+        assert!(plan.resolve(4, 10).is_empty());
+        assert_eq!(plan.dropout_rate(4, 10), 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "explode@1:r0",
+            "crash@x:r0",
+            "crash@1:rx",
+            "crash@1",
+            "rate=1.5",
+            "rate=0.1,rate=0.2",
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rate_draws_are_deterministic_and_spare_the_anchor() {
+        let plan = FaultPlan::parse("rate=0.4", 7).unwrap();
+        let a = plan.resolve(4, 8);
+        let b = plan.resolve(4, 8);
+        assert_eq!(a, b, "same seed, same events");
+        assert!(!a.is_empty(), "rate=0.4 over 24 cells should fire");
+        assert!(a.iter().all(|e| e.kind == FaultKind::Crash));
+        assert!(a.iter().all(|e| e.replica != 0), "replica 0 is the anchor");
+        // one crash per replica at most
+        let mut seen = vec![0usize; 4];
+        for e in &a {
+            seen[e.replica] += 1;
+        }
+        assert!(seen.iter().all(|&c| c <= 1));
+
+        let other = FaultPlan::parse("rate=0.4", 8).unwrap().resolve(4, 8);
+        assert_ne!(a, other, "different seed, different schedule");
+    }
+
+    #[test]
+    fn dropout_rate_counts_lost_contribution_slots() {
+        // m=2, 4 syncs: crash@2:r1 loses r1's sends 2 and 3 -> 2/8
+        let plan = FaultPlan::parse("crash@2:r1", 0).unwrap();
+        assert!((plan.dropout_rate(2, 4) - 0.25).abs() < 1e-12);
+        // leave@2:r1 contributes to send 2, loses only send 3 -> 1/8
+        let plan = FaultPlan::parse("leave@2:r1", 0).unwrap();
+        assert!((plan.dropout_rate(2, 4) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn membership_tracks_the_live_set() {
+        let mut ms = Membership::initial(4, 3);
+        assert_eq!(ms.live_count(), 3);
+        assert!(!ms.is_live(3));
+        ms.set_live(3, true);
+        ms.set_live(1, false);
+        assert_eq!(ms.live_ids(), vec![0, 2, 3]);
+        let back = Membership::from_flags(ms.flags().to_vec());
+        assert_eq!(back, ms);
+    }
+}

@@ -3,12 +3,20 @@
 //! bus, the H-cadence sync engine, and the replica-parallel worker
 //! pool that runs the M inner loops concurrently between outer syncs.
 
+pub mod checkpoint;
 pub mod diloco;
+pub mod fsm;
+pub mod journal;
+pub mod membership;
 pub mod outer_opt;
 pub mod pool;
 pub mod sync;
 
-pub use diloco::{run, Algo, RunConfig, RunMetrics};
+pub use checkpoint::{Checkpoint, OutcomeCkpt, ReplicaCkpt};
+pub use diloco::{run, run_checkpoint, run_resume, Algo, RunConfig, RunMetrics};
+pub use fsm::{CoordinatorFsm, Phase};
+pub use journal::{EventKind, Journal, JournalEvent};
+pub use membership::{FaultEvent, FaultKind, FaultPlan, Membership};
 pub use outer_opt::{outer_gradient, OuterOpt};
-pub use pool::{drive, DriveOutcome, DrivePlan, InnerEngine, ReplicaState};
-pub use sync::OuterSync;
+pub use pool::{drive, drive_ctl, DriveCtl, DriveOutcome, DrivePlan, InnerEngine, ReplicaState};
+pub use sync::{OuterSync, SyncState};

@@ -86,6 +86,18 @@ impl OuterOpt {
     pub fn velocity(&self) -> &[f32] {
         &self.velocity
     }
+
+    /// Restore the velocity arena from a checkpoint. Only legal before
+    /// the first step of this instance (a sized arena would mean state
+    /// is being overwritten mid-run); an empty restore is a no-op — an
+    /// optimizer that never stepped has nothing to carry.
+    pub fn restore_velocity(&mut self, velocity: Vec<f32>) {
+        assert!(
+            self.velocity.is_empty(),
+            "restore_velocity after the optimizer has stepped"
+        );
+        self.velocity = velocity;
+    }
 }
 
 /// The vectorizable inner kernel: element-wise, no cross-lane

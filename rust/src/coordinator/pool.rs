@@ -113,6 +113,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::comm::{CommLink, ReplicaComm, WorkerComm};
+use crate::coordinator::fsm::{CoordinatorFsm, Phase};
+use crate::coordinator::journal::{EventKind, Journal};
+use crate::coordinator::membership::{FaultEvent, FaultKind};
 use crate::coordinator::sync::OuterSync;
 use crate::data::synthetic::TokenStream;
 
@@ -303,6 +306,64 @@ fn broadcast_adopt(
     }
 }
 
+/// Elastic-membership and resume controls threaded through
+/// [`drive_ctl`]. [`DriveCtl::fresh`] is the churn-free default —
+/// [`drive`] uses it, and with it `drive_ctl` is bit-identical to the
+/// pre-membership drive loop (pinned by `tests/churn_resume.rs`).
+///
+/// `live` spans the replica *universe*: `replicas[r]` takes part in
+/// segments and syncs only while `live[r]` — dead entries are frozen
+/// placeholders (future joiners, or crash/leave remains kept for
+/// salvage). Fault events fire deterministically against absolute
+/// outer-sync indices, so a resumed run replays the same schedule.
+#[derive(Debug, Default)]
+pub struct DriveCtl {
+    /// Deterministic fault schedule (sorted; see `membership::FaultPlan`).
+    pub events: Vec<FaultEvent>,
+    /// In: initial liveness per universe slot. Out: final liveness.
+    pub live: Vec<bool>,
+    /// Stop (checkpoint) once this many outer syncs have merged,
+    /// counted absolutely (resume offsets included). None = run to T.
+    pub stop_after_sync: Option<u64>,
+    /// First inner step already completed (0 fresh; checkpoint step on
+    /// resume). `plan.total_steps` stays the uninterrupted total.
+    pub start_step: usize,
+    /// Resuming from a checkpoint: skip the Algorithm 1 line 2 entry
+    /// check (replicas have stepped) and restore comm-plane state from
+    /// `residuals` / `snap_init` instead of fresh-initializing it.
+    pub resume: bool,
+    /// In: journal to continue (checkpoint's on resume). Out: with
+    /// this run's membership/sync/phase events appended.
+    pub journal: Journal,
+    /// In (resume): per-replica up-wire EF residuals. Out: final
+    /// residuals, always repopulated — checkpoint fodder.
+    pub residuals: Vec<Vec<f32>>,
+    /// Resume only: the broadcast view the worker snapshots restart
+    /// from (`OuterSync::broadcast_view` at capture). Required when
+    /// resuming with a lossy wire on either direction.
+    pub snap_init: Option<Vec<f32>>,
+    /// Out: the step the run stopped at (`stop_after_sync` hit), or
+    /// None when it ran to `total_steps`.
+    pub stopped_at: Option<usize>,
+}
+
+impl DriveCtl {
+    /// No churn, no resume: the plain schedule over `m` replicas.
+    pub fn fresh(m: usize) -> DriveCtl {
+        DriveCtl {
+            events: Vec::new(),
+            live: vec![true; m],
+            stop_after_sync: None,
+            start_step: 0,
+            resume: false,
+            journal: Journal::new(),
+            residuals: vec![Vec::new(); m],
+            snap_init: None,
+            stopped_at: None,
+        }
+    }
+}
+
 /// Run one training schedule over the replicas, parallelizing the
 /// inner loop across `plan.workers` threads. On return `replicas`
 /// holds the final states (broadcasts applied), whatever the worker
@@ -318,9 +379,52 @@ pub fn drive<E: InnerEngine>(
     sync: Option<&mut OuterSync>,
     plan: &DrivePlan,
 ) -> Result<DriveOutcome> {
+    let mut ctl = DriveCtl::fresh(replicas.len());
+    drive_ctl(engine, replicas, sync, plan, &mut ctl)
+}
+
+/// [`drive`] with elastic membership, fault injection, and
+/// checkpoint/resume controls. See [`DriveCtl`].
+pub fn drive_ctl<E: InnerEngine>(
+    engine: &E,
+    replicas: &mut Vec<ReplicaState>,
+    sync: Option<&mut OuterSync>,
+    plan: &DrivePlan,
+    ctl: &mut DriveCtl,
+) -> Result<DriveOutcome> {
     let m = replicas.len();
     if m == 0 {
         bail!("drive: zero replicas");
+    }
+    if ctl.live.len() != m {
+        bail!(
+            "drive: {} live flags for {} replicas (the universe must match)",
+            ctl.live.len(),
+            m
+        );
+    }
+    if !ctl.live.iter().any(|&l| l) {
+        bail!("drive: no live replicas at start");
+    }
+    if !ctl.events.is_empty() && sync.is_none() {
+        bail!("drive: fault events without an outer sync — Data-Parallel has no membership");
+    }
+    if ctl.start_step >= plan.total_steps {
+        bail!(
+            "drive: start_step ({}) must be below total_steps ({})",
+            ctl.start_step,
+            plan.total_steps
+        );
+    }
+    if ctl.residuals.len() != m {
+        if ctl.resume {
+            bail!(
+                "drive: resume with {} residuals for {} replicas",
+                ctl.residuals.len(),
+                m
+            );
+        }
+        ctl.residuals = vec![Vec::new(); m];
     }
     if plan.n_params == 0 {
         bail!("drive: n_params must be >= 1");
@@ -385,6 +489,13 @@ pub fn drive<E: InnerEngine>(
         .and_then(|s| s.down())
         .map_or(0, |dw| dw.arena_bytes());
 
+    if ctl.resume && link.is_some() && ctl.snap_init.is_none() {
+        bail!(
+            "drive: resuming with a lossy comm wire requires the checkpointed \
+             broadcast view (snap_init) to rebuild the worker snapshots"
+        );
+    }
+
     // The shared per-worker snapshot (and the down-wire's single view
     // stream, both initialized from the coordinator's global) require
     // every replica to enter AT the sync'd global — the documented
@@ -394,7 +505,9 @@ pub fn drive<E: InnerEngine>(
     // fail loud: each replica is checked bitwise against the sync
     // engine's global (replicas that share replica 0's literal `Arc`s
     // — the common case — pay one pointer compare, not a read).
-    if link.is_some() {
+    // Skipped on resume: replicas re-enter mid-run, having stepped —
+    // the checkpoint vouches for consistency instead.
+    if link.is_some() && !ctl.resume {
         let s = sync.as_deref().expect("link implies sync");
         let layout = Arc::clone(s.global().layout());
         let global = s.global().data();
@@ -420,13 +533,25 @@ pub fn drive<E: InnerEngine>(
 
     if workers == 1 {
         let mut wc = WorkerComm::default();
-        let mut rcs: Vec<ReplicaComm> = (0..m).map(|_| ReplicaComm::default()).collect();
+        let mut rcs: Vec<ReplicaComm> = if ctl.resume && link.is_some() {
+            (0..m)
+                .map(|r| ReplicaComm::restore(std::mem::take(&mut ctl.residuals[r])))
+                .collect()
+        } else {
+            (0..m).map(|_| ReplicaComm::default()).collect()
+        };
         if let Some(l) = &link {
-            l.init_snapshot(&mut wc, &replicas[0].state)?;
-            for rc in rcs.iter_mut() {
-                l.init_replica(rc);
+            if ctl.resume {
+                let view = ctl.snap_init.as_ref().expect("checked above");
+                l.init_snapshot_from(&mut wc, view)?;
+            } else {
+                l.init_snapshot(&mut wc, &replicas[0].state)?;
+                for rc in rcs.iter_mut() {
+                    l.init_replica(rc);
+                }
             }
         }
+        let init_live = ctl.live.clone();
         let (outcome, pending) = {
             let mut exec = InlineExec {
                 engine,
@@ -435,18 +560,26 @@ pub fn drive<E: InnerEngine>(
                 link: link.as_ref(),
                 wc: &mut wc,
                 rcs: &mut rcs,
+                live: init_live,
                 staged: None,
             };
-            coordinate(engine, &mut exec, sync, plan, m)?
+            coordinate(engine, &mut exec, sync, plan, m, ctl)?
         };
-        // final broadcast (the full flush at t = total_steps)
+        // final broadcast (the full flush at t = total_steps, or the
+        // stop boundary's merge when checkpointing) — dead replicas
+        // stay frozen at their death state
         let adopt = broadcast_adopt(link.as_ref(), &mut wc, &pending)?;
-        for rep in replicas.iter_mut() {
-            rep.adopt(&adopt);
+        for (r, rep) in replicas.iter_mut().enumerate() {
+            if ctl.live[r] {
+                rep.adopt(&adopt);
+            }
+        }
+        for (r, rc) in rcs.into_iter().enumerate() {
+            ctl.residuals[r] = rc.into_residual();
         }
         let mut outcome = outcome;
         outcome.comm_arena_bytes =
-            wc.arena_bytes() + rcs.iter().map(|rc| rc.arena_bytes()).sum::<u64>();
+            wc.arena_bytes() + ctl.residuals.iter().map(|r| r.len() as u64 * 4).sum::<u64>();
         outcome.down_wire_arena_bytes = down_wire_arena_bytes;
         return Ok(outcome);
     }
@@ -456,25 +589,45 @@ pub fn drive<E: InnerEngine>(
         // Partition ownership: replica r lives on worker r % workers
         // for the whole run (its TokenStream and comm residual advance
         // only there).
-        let mut owned: Vec<Vec<(usize, ReplicaState, ReplicaComm)>> =
-            (0..workers).map(|_| Vec::new()).collect();
+        let mut owned: Vec<Vec<OwnedReplica>> = (0..workers).map(|_| Vec::new()).collect();
         for (r, rep) in replicas.drain(..).enumerate() {
             let mut rc = ReplicaComm::default();
             if let Some(l) = &link {
-                l.init_replica(&mut rc);
+                if ctl.resume {
+                    rc = ReplicaComm::restore(std::mem::take(&mut ctl.residuals[r]));
+                } else {
+                    l.init_replica(&mut rc);
+                }
             }
-            owned[r % workers].push((r, rep, rc));
+            owned[r % workers].push(OwnedReplica {
+                rid: r,
+                live: ctl.live[r],
+                rep,
+                rc,
+            });
         }
+        // who owns what, recorded up front: if a worker panics this is
+        // the only way to name the replicas that died with it
+        let owned_ids: Vec<Vec<usize>> = owned
+            .iter()
+            .map(|set| set.iter().map(|o| o.rid).collect())
+            .collect();
         let mut txs = Vec::with_capacity(workers);
         let mut rxs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for set in owned {
             // one shared arena set per worker, snapshotted from any of
-            // its replicas (all identical at t=0 — Algorithm 1 line 2)
+            // its replicas (all identical at t=0 — Algorithm 1 line
+            // 2), or from the checkpointed broadcast view on resume
             let mut wc = WorkerComm::default();
             if let Some(l) = &link {
-                let (_, rep, _) = set.first().expect("each worker owns >= 1 replica");
-                l.init_snapshot(&mut wc, &rep.state)?;
+                if ctl.resume {
+                    let view = ctl.snap_init.as_ref().expect("checked above");
+                    l.init_snapshot_from(&mut wc, view)?;
+                } else {
+                    let first = set.first().expect("each worker owns >= 1 replica");
+                    l.init_snapshot(&mut wc, &first.rep.state)?;
+                }
             }
             let (cmd_tx, cmd_rx) = channel::<Cmd>();
             let (res_tx, res_rx) = channel::<Result<WorkerReport>>();
@@ -487,7 +640,7 @@ pub fn drive<E: InnerEngine>(
         }
 
         let mut exec = PoolExec { txs, rxs, m };
-        let res = coordinate(engine, &mut exec, sync, plan, m);
+        let res = coordinate(engine, &mut exec, sync, plan, m, ctl);
 
         // Shut down and reclaim replica states whether or not the run
         // succeeded; workers apply the final broadcast before exiting.
@@ -501,11 +654,11 @@ pub fn drive<E: InnerEngine>(
             });
         }
         drop(exec); // closes the command channels
-        let mut returned: Vec<(usize, ReplicaState)> = Vec::with_capacity(m);
+        let mut returned: Vec<OwnedReplica> = Vec::with_capacity(m);
         let mut comm_bytes = 0u64;
-        let mut panicked = false;
+        let mut dead_workers: Vec<usize> = Vec::new();
         let mut finish_err: Option<anyhow::Error> = None;
-        for h in handles {
+        for (w, h) in handles.into_iter().enumerate() {
             match h.join() {
                 Ok((set, bytes, finish)) => {
                     returned.extend(set);
@@ -514,14 +667,37 @@ pub fn drive<E: InnerEngine>(
                         finish_err.get_or_insert(e);
                     }
                 }
-                Err(_) => panicked = true,
+                Err(_) => dead_workers.push(w),
             }
         }
-        returned.sort_by_key(|(r, _)| *r);
-        replicas.extend(returned.into_iter().map(|(_, rep)| rep));
+        // Salvage whatever came back — surviving replica states (and
+        // their residuals) reach the caller even when the run failed.
+        returned.sort_by_key(|o| o.rid);
+        for o in returned {
+            ctl.residuals[o.rid] = o.rc.into_residual();
+            replicas.push(o.rep);
+        }
+        if !dead_workers.is_empty() {
+            let lost: Vec<usize> = dead_workers
+                .iter()
+                .flat_map(|&w| owned_ids[w].iter().copied())
+                .collect();
+            let base = match res {
+                Err(e) => e,
+                Ok(_) => anyhow!("drive: worker thread panicked"),
+            };
+            return Err(base.context(format!(
+                "drive: worker(s) {dead_workers:?} panicked, losing replica(s) {lost:?}; \
+                 salvaged {} of {m} replica states",
+                replicas.len()
+            )));
+        }
         let (mut outcome, _) = res?;
-        if panicked || replicas.len() != m {
-            bail!("drive: a worker panicked; replica states were lost");
+        if replicas.len() != m {
+            bail!(
+                "drive: only {} of {m} replica states returned from the pool",
+                replicas.len()
+            );
         }
         if let Some(e) = finish_err {
             return Err(e.context("drive: final broadcast failed on a worker"));
@@ -540,23 +716,47 @@ pub fn drive<E: InnerEngine>(
 /// overlap pipeline's wall-clock win. Calls always pair up:
 /// `dispatch(a, b)` then `collect(a, b)`, never nested.
 trait SegmentExec {
-    /// Begin one segment: workers apply `broadcast` (the last merge's
-    /// result), run steps (from, to], then build the boundary
-    /// payloads `payload` asks for. The pooled implementation returns
-    /// without waiting; the inline oracle runs the segment here (no
-    /// concurrency to hide work under — results are bit-identical
-    /// either way).
+    /// Begin one segment: workers apply membership changes and
+    /// `broadcast` (the last merge's result), run steps (from, to],
+    /// then build the boundary payloads `payload` asks for. The
+    /// pooled implementation returns without waiting; the inline
+    /// oracle runs the segment here (no concurrency to hide work
+    /// under — results are bit-identical either way).
     fn dispatch(
         &mut self,
         from: usize,
         to: usize,
         broadcast: &Broadcast,
         payload: &PayloadSpec,
+        churn: &SegmentChurn,
     ) -> Result<()>;
 
     /// Block until the dispatched segment completes; hand back its
     /// per-replica per-step losses + boundary sync payloads.
     fn collect(&mut self, from: usize, to: usize) -> Result<SegmentData>;
+}
+
+/// Membership changes taking effect at a segment's dispatch, in
+/// application order: `deaths` freeze their replicas *before* the
+/// broadcast is adopted (a crashed/left replica never sees a merge it
+/// missed), then live replicas adopt the broadcast, then `joins` come
+/// alive initialized from the current broadcast view — either
+/// `join_view` (full-leaf literal list the coordinator built from the
+/// global; identity wires, where workers keep no snapshot) or the
+/// worker's own decoded snapshot (lossy wires — which also hands the
+/// joiner the down-wire EF stream state for free, since the snapshot
+/// *is* that stream's decode state).
+#[derive(Clone, Default)]
+struct SegmentChurn {
+    deaths: Vec<usize>,
+    joins: Vec<usize>,
+    join_view: Adopt,
+}
+
+impl SegmentChurn {
+    fn is_empty(&self) -> bool {
+        self.deaths.is_empty() && self.joins.is_empty()
+    }
 }
 
 /// A sync between its send and its merge: the coordinator holds the
@@ -567,7 +767,11 @@ struct InFlight {
     /// Boundary whose processing merges the reduced broadcast: the
     /// send step + τ, clamped to the end of training (the drain).
     merge_at: usize,
+    /// Payloads indexed by universe slot; only `contributors` reduce.
     payloads: Vec<SyncPayload>,
+    /// Replicas live at send time (the reduce averages over exactly
+    /// these — mean over survivors when membership churned).
+    contributors: Vec<usize>,
 }
 
 /// End of the segment starting after `t0`: the next outer-sync send
@@ -609,20 +813,28 @@ fn reduce_and_broadcast(
     wire_down: bool,
     out: &mut DriveOutcome,
 ) -> Result<Broadcast> {
-    let InFlight { frag, payloads, .. } = infl;
+    let InFlight {
+        frag,
+        payloads,
+        contributors,
+        ..
+    } = infl;
+    if contributors.is_empty() {
+        bail!("drive: outer sync with zero contributors");
+    }
     if wire_codec {
-        let frames: Vec<&[u8]> = payloads
+        let frames: Vec<&[u8]> = contributors
             .iter()
-            .map(|p| match p {
+            .map(|&r| match &payloads[r] {
                 SyncPayload::Encoded(bytes) => Ok(&bytes[..]),
                 _ => Err(anyhow!("drive: wire-codec merge without an encoded payload")),
             })
             .collect::<Result<_>>()?;
         bus.sync_encoded(&frames, frag)?;
     } else {
-        let parts: Vec<&[Arc<xla::Literal>]> = payloads
+        let parts: Vec<&[Arc<xla::Literal>]> = contributors
             .iter()
-            .map(|p| match p {
+            .map(|&r| match &payloads[r] {
                 SyncPayload::Params(v) => Ok(&v[..]),
                 _ => Err(anyhow!("drive: identity merge without a literal payload")),
             })
@@ -659,6 +871,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
     mut sync: Option<&mut OuterSync>,
     plan: &DrivePlan,
     m: usize,
+    ctl: &mut DriveCtl,
 ) -> Result<(DriveOutcome, Broadcast)> {
     let diloco = sync.is_some();
     // Lossy up-wires route through the encoded wire; identity runs
@@ -672,14 +885,144 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
         .as_deref()
         .map(|b| !b.down_codec().is_identity())
         .unwrap_or(false);
+    // Workers keep a shared snapshot only when a wire is lossy; with
+    // identity wires the coordinator must build joiners' views itself.
+    let have_link = sync.as_deref().is_some_and(|s| s.link().is_active());
     let tau = if diloco { plan.overlap_tau } else { 0 };
+    // Absolute outer-sync indexing: a resumed run continues the
+    // counter where the checkpoint left it (the restored WireStats
+    // carries it), so encode seeds, fault keying, and the journal all
+    // line up with the uninterrupted run.
+    let start_syncs = sync.as_deref().map_or(0, |s| s.wire_stats().syncs());
+    let mut sends: u64 = 0;
+    // Fault events already in effect at the resume point replay as
+    // no-ops; joins are re-keyed off the live flags (a join due
+    // exactly at the checkpoint boundary fires on the first segment).
+    let events: Vec<FaultEvent> = ctl.events.clone();
+    let mut applied: Vec<bool> = events
+        .iter()
+        .map(|ev| match ev.kind {
+            FaultKind::Join => ctl.live[ev.replica],
+            _ => ev.at_sync < start_syncs,
+        })
+        .collect();
+    // Leavers contribute to the send at their boundary, then freeze at
+    // the *next* dispatch — queued here between iterations.
+    let mut next_deaths: Vec<usize> = Vec::new();
+
+    // The ticked phase machine: every transition is journaled, and an
+    // out-of-order tick is a coordinator bug that fails loud.
+    let mut fsm = CoordinatorFsm::new();
     let mut out = DriveOutcome::default();
     let mut pending = Broadcast::empty();
     let mut in_flight: Option<InFlight> = None;
-    let mut t0 = 0usize;
+    let mut t0 = ctl.start_step;
+
+    fsm.advance(Phase::Warmup)?;
+    ctl.journal
+        .append(t0, start_syncs, EventKind::PhaseEnter, None, Phase::Warmup.label());
+    if ctl.resume {
+        ctl.journal.append(
+            t0,
+            start_syncs,
+            EventKind::Resume,
+            None,
+            format!("resumed at step {t0} after {start_syncs} outer syncs"),
+        );
+    }
+    fsm.advance(Phase::Train)?;
+    ctl.journal
+        .append(t0, start_syncs, EventKind::PhaseEnter, None, Phase::Train.label());
+
     while t0 < plan.total_steps {
+        // ---- membership events due at this boundary ----------------
+        // Deaths queued by the last send's leavers freeze first; then
+        // crashes keyed to the upcoming send index; then joins keyed
+        // to completed merges (the joiner's view — the last merge's
+        // broadcast — ships with this very dispatch).
+        let sends_abs = start_syncs + sends;
+        let merges_abs = start_syncs + out.outer_syncs as u64;
+        let mut churn = SegmentChurn {
+            deaths: std::mem::take(&mut next_deaths),
+            ..SegmentChurn::default()
+        };
+        for (ev, done) in events.iter().zip(applied.iter_mut()) {
+            if *done {
+                continue;
+            }
+            match ev.kind {
+                FaultKind::Crash => {
+                    if sends_abs >= ev.at_sync {
+                        *done = true;
+                        if ctl.live[ev.replica] {
+                            ctl.live[ev.replica] = false;
+                            churn.deaths.push(ev.replica);
+                            ctl.journal.append(
+                                t0,
+                                sends_abs,
+                                EventKind::Crash,
+                                Some(ev.replica),
+                                "mid-segment death; dropped from the next reduce",
+                            );
+                        }
+                    }
+                }
+                FaultKind::Join => {
+                    if merges_abs > ev.at_sync {
+                        *done = true;
+                        if !ctl.live[ev.replica] {
+                            ctl.live[ev.replica] = true;
+                            churn.joins.push(ev.replica);
+                            ctl.journal.append(
+                                t0,
+                                merges_abs,
+                                EventKind::Join,
+                                Some(ev.replica),
+                                "joined from the current broadcast view",
+                            );
+                        }
+                    }
+                }
+                FaultKind::Straggle => {
+                    if sends_abs >= ev.at_sync {
+                        *done = true;
+                        ctl.journal.append(
+                            t0,
+                            sends_abs,
+                            EventKind::Straggle,
+                            Some(ev.replica),
+                            "walltime-only (netsim churn model); math unaffected",
+                        );
+                    }
+                }
+                FaultKind::Leave => {} // handled at send capture below
+            }
+        }
+        if !ctl.live.iter().any(|&l| l) {
+            bail!("drive: membership churn left zero live replicas at step {t0}");
+        }
+        // Joiners initialize from the current broadcast view. With a
+        // lossy wire the worker's decoded snapshot *is* that view (and
+        // carries the down-wire EF stream state); with identity wires
+        // there is no snapshot, so the coordinator hands the global's
+        // literals over directly.
+        if !churn.joins.is_empty() && !have_link {
+            let bus = sync.as_deref_mut().expect("join implies an outer sync");
+            churn.join_view = bus
+                .global_literals()?
+                .iter()
+                .enumerate()
+                .map(|(leaf, lit)| (leaf, Arc::clone(lit)))
+                .collect();
+        }
+        // Liveness for this segment (crashes and joins above applied;
+        // leavers still run it): who steps, whose losses count, who
+        // contributes to a send at its boundary.
+        let seg_live: Vec<bool> = ctl.live.clone();
+        let live_n = seg_live.iter().filter(|&&l| l).count();
+
         let t1 = next_boundary(t0, plan, diloco, in_flight.as_ref().map(|f| f.merge_at));
-        let merge_due = in_flight.as_ref().map_or(false, |f| f.merge_at == t1);
+        let merge_due = in_flight.as_ref().is_some_and(|f| f.merge_at == t1);
         // Send boundaries follow the sync cadence, plus the final full
         // flush; merge-only boundaries (send + τ) land strictly
         // between sends because τ < sync_interval.
@@ -698,7 +1041,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             if wire_codec {
                 PayloadSpec::Encoded(EncodeSpec {
                     frag,
-                    sync_index: out.outer_syncs as u64,
+                    sync_index: start_syncs + out.outer_syncs as u64,
                 })
             } else {
                 PayloadSpec::Params
@@ -706,7 +1049,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
         } else {
             PayloadSpec::None
         };
-        exec.dispatch(t0, t1, &pending, &payload_spec)?;
+        exec.dispatch(t0, t1, &pending, &payload_spec, &churn)?;
         pending = Broadcast::empty();
 
         // DiLoCo evals strictly inside the segment read the global as
@@ -733,16 +1076,38 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
                 .as_deref_mut()
                 .expect("a sync can only be in flight with an OuterSync");
             pending = reduce_and_broadcast(bus, infl, wire_codec, wire_down, &mut out)?;
+            ctl.journal.append(
+                t1,
+                start_syncs + out.outer_syncs as u64 - 1,
+                EventKind::SyncMerge,
+                None,
+                "delayed merge (overlap window closed)",
+            );
         }
 
         let (losses, payloads) = exec.collect(t0, t1)?;
+        for (r, l) in losses.iter().enumerate() {
+            let want = if seg_live[r] { t1 - t0 } else { 0 };
+            if l.len() != want {
+                bail!(
+                    "replica {r}: incomplete segment report ({} of {} steps)",
+                    l.len(),
+                    want
+                );
+            }
+        }
 
-        // Per-step mean loss, summed in replica index order — the same
-        // order as the sequential loop, so results are bit-identical.
+        // Per-step mean loss over the live fleet, summed in replica
+        // index order — the same order as the sequential loop, so
+        // results are bit-identical (and identical to the
+        // pre-membership loop when nothing churns: live_n == m).
         for t in t0 + 1..=t1 {
             let mut step_loss = 0.0f64;
-            for rep_losses in &losses {
-                step_loss += rep_losses[t - t0 - 1] / m as f64;
+            for (r, rep_losses) in losses.iter().enumerate() {
+                if !seg_live[r] {
+                    continue;
+                }
+                step_loss += rep_losses[t - t0 - 1] / live_n as f64;
             }
             out.step_losses.push(step_loss);
             if t % plan.log_every == 0 || t == 1 || t == plan.total_steps {
@@ -777,18 +1142,64 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
         if send_due && !defer_final {
             // Capture the boundary payloads; they merge τ steps later
             // — immediately when τ=0 (the barrier), or at the clamped
-            // end of training.
+            // end of training. Contributors are the replicas live
+            // through the segment: a replica that crashed at the
+            // boundary is gone, one leaving at it still counts (its
+            // last contribution), and the reduce averages over exactly
+            // this set.
+            let contributors: Vec<usize> = seg_live
+                .iter()
+                .enumerate()
+                .filter_map(|(r, &l)| l.then_some(r))
+                .collect();
+            ctl.journal.append(
+                t1,
+                sends_abs,
+                EventKind::SyncSend,
+                None,
+                match frag {
+                    Some(f) => format!("fragment {f}; {} contributors", contributors.len()),
+                    None => format!("full sync; {} contributors", contributors.len()),
+                },
+            );
             let merge_at = (t1 + tau).min(plan.total_steps);
             in_flight = Some(InFlight {
                 frag,
                 merge_at,
                 payloads,
+                contributors,
             });
             if merge_at == t1 {
                 let infl = in_flight.take().expect("stashed above");
                 let bus = sync.as_deref_mut().expect("send implies sync");
                 pending = reduce_and_broadcast(bus, infl, wire_codec, wire_down, &mut out)?;
+                ctl.journal.append(
+                    t1,
+                    start_syncs + out.outer_syncs as u64 - 1,
+                    EventKind::SyncMerge,
+                    None,
+                    "barrier merge (tau = 0 or end of training)",
+                );
             }
+            // Leavers announced for this boundary contributed above
+            // and freeze at the next dispatch.
+            for (ev, done) in events.iter().zip(applied.iter_mut()) {
+                if !*done && matches!(ev.kind, FaultKind::Leave) && ev.at_sync <= sends_abs {
+                    *done = true;
+                    if ctl.live[ev.replica] {
+                        ctl.live[ev.replica] = false;
+                        next_deaths.push(ev.replica);
+                        ctl.journal.append(
+                            t1,
+                            sends_abs,
+                            EventKind::Leave,
+                            Some(ev.replica),
+                            "left after contributing to this sync",
+                        );
+                    }
+                }
+            }
+            sends += 1;
         } else if defer_final {
             // Drain: the merged broadcast (in `pending`) is applied by
             // a zero-step trailing segment whose boundary payloads are
@@ -797,14 +1208,28 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             let flush_spec = if wire_codec {
                 PayloadSpec::Encoded(EncodeSpec {
                     frag: None,
-                    sync_index: out.outer_syncs as u64,
+                    sync_index: start_syncs + out.outer_syncs as u64,
                 })
             } else {
                 PayloadSpec::Params
             };
-            exec.dispatch(t1, t1, &pending, &flush_spec)?;
+            exec.dispatch(t1, t1, &pending, &flush_spec, &SegmentChurn::default())?;
             pending = Broadcast::empty();
             let (_, flush) = exec.collect(t1, t1)?;
+            let contributors: Vec<usize> = ctl
+                .live
+                .iter()
+                .enumerate()
+                .filter_map(|(r, &l)| l.then_some(r))
+                .collect();
+            ctl.journal.append(
+                t1,
+                start_syncs + sends,
+                EventKind::SyncSend,
+                None,
+                format!("final full flush; {} contributors", contributors.len()),
+            );
+            sends += 1;
             let bus = sync.as_deref_mut().expect("flush implies sync");
             pending = reduce_and_broadcast(
                 bus,
@@ -812,11 +1237,19 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
                     frag: None,
                     merge_at: t1,
                     payloads: flush,
+                    contributors,
                 },
                 wire_codec,
                 wire_down,
                 &mut out,
             )?;
+            ctl.journal.append(
+                t1,
+                start_syncs + out.outer_syncs as u64 - 1,
+                EventKind::SyncMerge,
+                None,
+                "final flush merged",
+            );
         }
 
         // DiLoCo eval due exactly at the boundary sees the post-merge
@@ -834,10 +1267,32 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             }
         }
         t0 = t1;
+
+        // Checkpoint stop: once the requested number of outer syncs
+        // has merged and nothing is in flight, this boundary is a
+        // clean cut — the caller snapshots replicas + sync state and a
+        // resumed run continues bit-identically.
+        if let Some(stop) = ctl.stop_after_sync {
+            if t1 < plan.total_steps
+                && in_flight.is_none()
+                && start_syncs + out.outer_syncs as u64 >= stop
+            {
+                ctl.stopped_at = Some(t1);
+                ctl.journal.append(
+                    t1,
+                    start_syncs + out.outer_syncs as u64,
+                    EventKind::Checkpoint,
+                    None,
+                    format!("stopped for checkpoint after {stop} outer syncs"),
+                );
+                break;
+            }
+        }
     }
-    // Structurally unreachable (merges are clamped to T and the drain
-    // handles the collision with the final flush), but a silent stale
-    // fragment would corrupt every consumer of the global — refuse.
+    // Structurally unreachable (merges are clamped to T, the drain
+    // handles the collision with the final flush, and the checkpoint
+    // stop waits out the overlap window), but a silent stale fragment
+    // would corrupt every consumer of the global — refuse.
     if let Some(infl) = in_flight {
         bail!(
             "drive: fragment {:?} was sent but never merged (merge was \
@@ -847,6 +1302,22 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             plan.total_steps
         );
     }
+    fsm.advance(Phase::Cooldown)?;
+    ctl.journal.append(
+        t0,
+        start_syncs + out.outer_syncs as u64,
+        EventKind::PhaseEnter,
+        None,
+        Phase::Cooldown.label(),
+    );
+    fsm.advance(Phase::Done)?;
+    ctl.journal.append(
+        t0,
+        start_syncs + out.outer_syncs as u64,
+        EventKind::PhaseEnter,
+        None,
+        Phase::Done.label(),
+    );
     Ok((out, pending))
 }
 
@@ -859,6 +1330,9 @@ struct InlineExec<'a, E: InnerEngine> {
     link: Option<&'a CommLink>,
     wc: &'a mut WorkerComm,
     rcs: &'a mut Vec<ReplicaComm>,
+    /// Liveness per universe slot, kept in lockstep with the
+    /// coordinator's via the dispatched `SegmentChurn` messages.
+    live: Vec<bool>,
     /// The dispatched segment's results, awaiting `collect` (the
     /// sequential oracle has no concurrency to overlap with, so the
     /// segment runs eagerly at dispatch).
@@ -872,20 +1346,46 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
         to: usize,
         broadcast: &Broadcast,
         payload: &PayloadSpec,
+        churn: &SegmentChurn,
     ) -> Result<()> {
         if self.staged.is_some() {
             bail!("drive: segment dispatched while another is uncollected");
         }
+        // deaths freeze before the broadcast: a replica that crashed
+        // or left never adopts a merge it wasn't part of
+        for &d in &churn.deaths {
+            self.live[d] = false;
+        }
         let adopt = broadcast_adopt(self.link, self.wc, broadcast)?;
-        for rep in self.replicas.iter_mut() {
-            rep.adopt(&adopt);
+        for (r, rep) in self.replicas.iter_mut().enumerate() {
+            if self.live[r] {
+                rep.adopt(&adopt);
+            }
+        }
+        // joiners come alive on the post-broadcast view
+        if !churn.joins.is_empty() {
+            let view: Adopt = if !churn.join_view.is_empty() {
+                churn.join_view.clone()
+            } else {
+                let link = self
+                    .link
+                    .ok_or_else(|| anyhow!("drive: join without a view or comm link"))?;
+                link.snap_literals(self.wc)?
+            };
+            for &j in &churn.joins {
+                self.replicas[j].adopt(&view);
+                self.live[j] = true;
+            }
         }
         let m = self.replicas.len();
-        let mut losses = vec![Vec::with_capacity(to - from); m];
+        let mut losses = vec![Vec::new(); m];
         // the classic sequential shape: step-major, replica-minor
+        // (dead replicas are frozen — no steps, no losses)
         for t in from + 1..=to {
             for (r, rep) in self.replicas.iter_mut().enumerate() {
-                losses[r].push(self.engine.inner_step(r, rep, t)?);
+                if self.live[r] {
+                    losses[r].push(self.engine.inner_step(r, rep, t)?);
+                }
             }
         }
         let payloads: Vec<SyncPayload> = match payload {
@@ -894,11 +1394,15 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
                     anyhow!("drive: encode requested without a comm link")
                 })?;
                 let wc = &mut *self.wc;
+                let live = &self.live;
                 self.replicas
                     .iter()
                     .zip(self.rcs.iter_mut())
                     .enumerate()
                     .map(|(r, (rep, rc))| {
+                        if !live[r] {
+                            return Ok(SyncPayload::Skipped);
+                        }
                         Ok(SyncPayload::Encoded(link.encode_replica(
                             r,
                             &rep.state,
@@ -913,7 +1417,14 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
             PayloadSpec::Params => self
                 .replicas
                 .iter()
-                .map(|r| SyncPayload::Params(r.state[..self.n_params].to_vec()))
+                .enumerate()
+                .map(|(r, rep)| {
+                    if self.live[r] {
+                        SyncPayload::Params(rep.state[..self.n_params].to_vec())
+                    } else {
+                        SyncPayload::Skipped
+                    }
+                })
                 .collect(),
             PayloadSpec::None => (0..m).map(|_| SyncPayload::Skipped).collect(),
         };
@@ -931,13 +1442,14 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
 // ---- worker pool ------------------------------------------------------
 
 enum Cmd {
-    /// Apply the broadcast, run steps (from, to], then build the
-    /// boundary payload `payload` asks for.
+    /// Apply membership changes and the broadcast, run steps
+    /// (from, to], then build the boundary payload `payload` asks for.
     Run {
         from: usize,
         to: usize,
         broadcast: Broadcast,
         payload: PayloadSpec,
+        churn: SegmentChurn,
     },
     /// Apply the final broadcast and exit, returning replica ownership.
     Finish { broadcast: Broadcast },
@@ -948,15 +1460,26 @@ struct WorkerReport {
     reps: Vec<(usize, Vec<f64>, SyncPayload)>,
 }
 
+/// One replica as a worker owns it: id, liveness, state, and up-wire
+/// EF residual. Dead entries (pre-join placeholders, crash/leave
+/// remains) are frozen — no steps, no adopts — until a join revives
+/// them or the run ends and they return for salvage/checkpointing.
+struct OwnedReplica {
+    rid: usize,
+    live: bool,
+    rep: ReplicaState,
+    rc: ReplicaComm,
+}
+
 fn worker_loop<E: InnerEngine>(
     engine: &E,
     n_params: usize,
     link: Option<CommLink>,
     mut wc: WorkerComm,
-    mut owned: Vec<(usize, ReplicaState, ReplicaComm)>,
+    mut owned: Vec<OwnedReplica>,
     rx: Receiver<Cmd>,
     tx: Sender<Result<WorkerReport>>,
-) -> (Vec<(usize, ReplicaState)>, u64, Result<()>) {
+) -> (Vec<OwnedReplica>, u64, Result<()>) {
     let mut finish: Result<()> = Ok(());
     while let Ok(cmd) = rx.recv() {
         match cmd {
@@ -965,27 +1488,80 @@ fn worker_loop<E: InnerEngine>(
                 to,
                 broadcast,
                 payload: want,
+                churn,
             } => {
                 let mut report = WorkerReport {
                     reps: Vec::with_capacity(owned.len()),
                 };
                 let mut err: Option<anyhow::Error> = None;
+                // deaths freeze before the broadcast (same order as
+                // the inline oracle): a crashed/left replica never
+                // adopts a merge it wasn't part of
+                for d in &churn.deaths {
+                    if let Some(o) = owned.iter_mut().find(|o| o.rid == *d) {
+                        o.live = false;
+                    }
+                }
                 // the broadcast is decoded (or the snapshot refreshed)
-                // once per worker; every owned replica adopts the same
-                // literal set
+                // once per worker — even when every owned replica is
+                // dead, so the shared snapshot (the down-wire EF
+                // stream's decode state) never falls behind the fleet
                 match broadcast_adopt(link.as_ref(), &mut wc, &broadcast) {
                     Ok(adopt) => {
-                        for (_, rep, _) in owned.iter_mut() {
-                            rep.adopt(&adopt);
+                        for o in owned.iter_mut() {
+                            if o.live {
+                                o.rep.adopt(&adopt);
+                            }
                         }
                     }
                     Err(e) => err = Some(e),
                 }
+                // joiners come alive on the post-broadcast view: the
+                // coordinator's literal list (identity wires) or this
+                // worker's decoded snapshot (lossy wires)
+                if err.is_none() && !churn.joins.is_empty() {
+                    let mut view: Option<Adopt> = None;
+                    for j in &churn.joins {
+                        let Some(o) = owned.iter_mut().find(|o| o.rid == *j) else {
+                            continue; // another worker's joiner
+                        };
+                        if view.is_none() {
+                            view = Some(if !churn.join_view.is_empty() {
+                                churn.join_view.clone()
+                            } else {
+                                match &link {
+                                    Some(l) => match l.snap_literals(&wc) {
+                                        Ok(v) => v,
+                                        Err(e) => {
+                                            err = Some(e);
+                                            break;
+                                        }
+                                    },
+                                    None => {
+                                        err = Some(anyhow!(
+                                            "worker: join without a view or comm link"
+                                        ));
+                                        break;
+                                    }
+                                }
+                            });
+                        }
+                        o.rep.adopt(view.as_ref().expect("built above"));
+                        o.live = true;
+                    }
+                }
                 if err.is_none() {
-                    'replicas: for (rid, rep, rc) in owned.iter_mut() {
+                    'replicas: for o in owned.iter_mut() {
+                        if !o.live {
+                            // frozen: reports empty losses and no
+                            // payload so the coordinator's books stay
+                            // index-aligned with the universe
+                            report.reps.push((o.rid, Vec::new(), SyncPayload::Skipped));
+                            continue;
+                        }
                         let mut losses = Vec::with_capacity(to - from);
                         for t in from + 1..=to {
-                            match engine.inner_step(*rid, rep, t) {
+                            match engine.inner_step(o.rid, &mut o.rep, t) {
                                 Ok(l) => losses.push(l),
                                 Err(e) => {
                                     err = Some(e);
@@ -996,10 +1572,10 @@ fn worker_loop<E: InnerEngine>(
                         let payload = match (&want, &link) {
                             (PayloadSpec::Encoded(spec), Some(l)) => {
                                 match l.encode_replica(
-                                    *rid,
-                                    &rep.state,
+                                    o.rid,
+                                    &o.rep.state,
                                     &mut wc,
-                                    rc,
+                                    &mut o.rc,
                                     spec.frag,
                                     spec.sync_index,
                                 ) {
@@ -1015,11 +1591,11 @@ fn worker_loop<E: InnerEngine>(
                                 break 'replicas;
                             }
                             (PayloadSpec::Params, _) => {
-                                SyncPayload::Params(rep.state[..n_params].to_vec())
+                                SyncPayload::Params(o.rep.state[..n_params].to_vec())
                             }
                             (PayloadSpec::None, _) => SyncPayload::Skipped,
                         };
-                        report.reps.push((*rid, losses, payload));
+                        report.reps.push((o.rid, losses, payload));
                     }
                 }
                 let msg = match err {
@@ -1038,8 +1614,10 @@ fn worker_loop<E: InnerEngine>(
                 // channel is already torn down at shutdown
                 match broadcast_adopt(link.as_ref(), &mut wc, &broadcast) {
                     Ok(adopt) => {
-                        for (_, rep, _) in owned.iter_mut() {
-                            rep.adopt(&adopt);
+                        for o in owned.iter_mut() {
+                            if o.live {
+                                o.rep.adopt(&adopt);
+                            }
                         }
                     }
                     Err(e) => finish = Err(e),
@@ -1048,13 +1626,8 @@ fn worker_loop<E: InnerEngine>(
             }
         }
     }
-    let comm_bytes =
-        wc.arena_bytes() + owned.iter().map(|(_, _, rc)| rc.arena_bytes()).sum::<u64>();
-    (
-        owned.into_iter().map(|(r, rep, _)| (r, rep)).collect(),
-        comm_bytes,
-        finish,
-    )
+    let comm_bytes = wc.arena_bytes() + owned.iter().map(|o| o.rc.arena_bytes()).sum::<u64>();
+    (owned, comm_bytes, finish)
 }
 
 struct PoolExec {
@@ -1072,6 +1645,7 @@ impl SegmentExec for PoolExec {
         to: usize,
         broadcast: &Broadcast,
         payload: &PayloadSpec,
+        churn: &SegmentChurn,
     ) -> Result<()> {
         for tx in &self.txs {
             tx.send(Cmd::Run {
@@ -1079,6 +1653,7 @@ impl SegmentExec for PoolExec {
                 to,
                 broadcast: broadcast.clone(),
                 payload: payload.clone(),
+                churn: churn.clone(),
             })
             .map_err(|_| anyhow!("worker hung up before segment ({from}, {to}]"))?;
         }
@@ -1097,15 +1672,10 @@ impl SegmentExec for PoolExec {
                 payloads[rid] = Some(p);
             }
         }
+        // step-count validation lives in coordinate(), which knows the
+        // segment's live set (dead replicas legitimately report empty)
         let mut out = Vec::with_capacity(self.m);
         for (r, p) in payloads.into_iter().enumerate() {
-            if losses[r].len() != to - from {
-                bail!(
-                    "replica {r}: incomplete segment report ({} of {} steps)",
-                    losses[r].len(),
-                    to - from
-                );
-            }
             out.push(p.ok_or_else(|| anyhow!("replica {r}: missing segment payload"))?);
         }
         Ok((losses, out))
@@ -1123,6 +1693,8 @@ fn _assert_send() {
     ok::<Broadcast>();
     ok::<SyncPayload>();
     ok::<PayloadSpec>();
+    ok::<SegmentChurn>();
+    ok::<OwnedReplica>();
     ok::<Cmd>();
     ok::<WorkerReport>();
     ok::<Result<WorkerReport>>();

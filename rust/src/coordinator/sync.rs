@@ -50,10 +50,27 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::comm::codec::{codec_for, Codec, OuterBits};
-use crate::comm::{Channel, CommLink, Direction, DownWire, WireStats};
+use crate::comm::{Channel, CommLink, Direction, DownWire, SyncWireRecord, WireStats};
 use crate::runtime::{FlatLayout, FlatParams, HostTensor};
 
 use super::outer_opt::{acc_add, acc_finish, acc_scale, OuterOpt};
+
+/// Everything mutable the outer-sync engine carries between syncs, in
+/// checkpointable form: the global arena, the outer optimizer's
+/// velocity, the down-wire's broadcast view + EF residual (lossy
+/// broadcasts only), and the per-sync wire records (whose length is
+/// the absolute sync counter every encode seed derives from). A fresh
+/// `OuterSync` built with the same config and `restore_state`d from
+/// this continues the run bit-identically — pinned by
+/// `tests/churn_resume.rs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncState {
+    pub global: Vec<f32>,
+    pub velocity: Vec<f32>,
+    pub down_view: Option<Vec<f32>>,
+    pub down_residual: Option<Vec<f32>>,
+    pub wire_records: Vec<SyncWireRecord>,
+}
 
 pub struct OuterSync {
     fragments: usize,
@@ -224,6 +241,80 @@ impl OuterSync {
     /// Exact wire traffic so far (one record per sync event).
     pub fn wire_stats(&self) -> &WireStats {
         &self.wire
+    }
+
+    /// The flat arena the replicas' broadcast view currently holds:
+    /// the [`DownWire`]'s view under a lossy broadcast, the exact
+    /// global otherwise. This is what a resumed worker's snapshot (and
+    /// a joining replica's initial params) must be seeded from — NOT
+    /// the raw global, which a lossy view legitimately lags.
+    pub fn broadcast_view(&self) -> &[f32] {
+        match &self.down {
+            Some(dw) => dw.view(),
+            None => self.global.data(),
+        }
+    }
+
+    /// Snapshot the engine's mutable state at an outer boundary.
+    /// Refuses mid-broadcast (an un-taken lossy payload means the
+    /// replicas have not adopted the last sync — not a clean boundary).
+    pub fn export_state(&self) -> Result<SyncState> {
+        if self.pending_down.is_some() {
+            bail!(
+                "outer sync: cannot checkpoint with an unshipped broadcast \
+                 payload pending"
+            );
+        }
+        Ok(SyncState {
+            global: self.global.data().to_vec(),
+            velocity: self.opt.velocity().to_vec(),
+            down_view: self.down.as_ref().map(|dw| dw.view().to_vec()),
+            down_residual: self.down.as_ref().map(|dw| dw.residual().to_vec()),
+            wire_records: self.wire.records().to_vec(),
+        })
+    }
+
+    /// Restore a freshly built engine (same layout, codecs, fragment
+    /// count, seed, and outer hypers) to a checkpointed state. The
+    /// literal cache is marked all-stale and rebuilt lazily on the
+    /// first read, so restore itself performs zero uploads.
+    pub fn restore_state(&mut self, st: &SyncState) -> Result<()> {
+        let total = self.global.layout().total();
+        if st.global.len() != total {
+            bail!(
+                "sync restore: global has {} elements, layout wants {total}",
+                st.global.len()
+            );
+        }
+        if !st.velocity.is_empty() && st.velocity.len() != total {
+            bail!(
+                "sync restore: velocity has {} elements, expected 0 or {total}",
+                st.velocity.len()
+            );
+        }
+        if st.down_view.is_some() != self.down.is_some() {
+            bail!(
+                "sync restore: checkpoint and engine disagree on the down-wire \
+                 (checkpoint lossy-down: {}, engine: {}) — rebuild with the \
+                 run's own --outer-bits-down",
+                st.down_view.is_some(),
+                self.down.is_some()
+            );
+        }
+        self.global.data_mut().copy_from_slice(&st.global);
+        self.opt.restore_velocity(st.velocity.clone());
+        if let Some(dw) = &mut self.down {
+            let (Some(view), Some(residual)) = (&st.down_view, &st.down_residual) else {
+                bail!("sync restore: down-wire view without residual");
+            };
+            dw.restore(view, residual)?;
+        }
+        self.wire = WireStats::from_records(st.wire_records.clone());
+        self.pending_down = None;
+        for s in self.lits_stale.iter_mut() {
+            *s = true;
+        }
+        Ok(())
     }
 
     pub fn global(&self) -> &FlatParams {

@@ -64,6 +64,11 @@ pub struct TokenStream {
     prev1: i32,
     remaining_in_doc: usize,
     table_salt: u64,
+    /// Tokens drawn so far — the stream's checkpointable position. The
+    /// RNG state itself stays private; a resumed shard is rebuilt by
+    /// replaying `consumed` tokens from the (corpus_seed, stream_id)
+    /// origin, which is exact because the stream is pure in those.
+    consumed: u64,
 }
 
 impl TokenStream {
@@ -92,6 +97,7 @@ impl TokenStream {
             prev1: 0,
             remaining_in_doc: 0,
             table_salt,
+            consumed: 0,
         };
         s.start_doc();
         s
@@ -146,6 +152,7 @@ impl TokenStream {
 
     /// Produce the next token of the shard's infinite stream.
     pub fn next_token(&mut self) -> i32 {
+        self.consumed += 1;
         if self.remaining_in_doc == 0 {
             self.start_doc();
             return self.spec.bos_id;
@@ -155,6 +162,21 @@ impl TokenStream {
         self.prev2 = self.prev1;
         self.prev1 = t;
         t
+    }
+
+    /// Tokens drawn from this shard so far (checkpoint position).
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    /// Fast-forward by drawing and discarding `n` tokens — how a
+    /// resumed run re-seats a shard at its checkpointed `consumed`
+    /// position (the stream is pure in seed and stream id, so replay
+    /// is exact).
+    pub fn skip(&mut self, n: u64) {
+        for _ in 0..n {
+            self.next_token();
+        }
     }
 
     /// Fill a [seqs, seq_len] row-major batch.
@@ -234,6 +256,19 @@ mod tests {
     fn batch_shape() {
         let mut s = stream(6, 0);
         assert_eq!(s.next_batch(4, 64).len(), 256);
+    }
+
+    #[test]
+    fn skip_replays_to_the_same_position() {
+        let mut full = stream(8, 3);
+        let reference: Vec<i32> = (0..1000).map(|_| full.next_token()).collect();
+        assert_eq!(full.consumed(), 1000);
+        // a fresh stream skipped to position 700 continues identically
+        let mut resumed = stream(8, 3);
+        resumed.skip(700);
+        assert_eq!(resumed.consumed(), 700);
+        let tail: Vec<i32> = (0..300).map(|_| resumed.next_token()).collect();
+        assert_eq!(tail, reference[700..]);
     }
 
     #[test]

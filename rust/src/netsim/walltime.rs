@@ -42,6 +42,31 @@ pub enum WalltimeAlgo {
     DiLoCo { replicas: usize, sync_every: usize },
 }
 
+/// Replica churn, as it reaches the wall-clock model (the loss cost of
+/// churn is measured by real runs — `sweep --grid churn`; this is only
+/// the systems side). Two effects on the H-cadence outer legs:
+///
+/// - **Dropout**: a crashed/departed replica contributes nothing to
+///   the reduce, so the expected up-leg volume shrinks by the dropout
+///   rate. Dropout can only *cheapen* the outer sync — the coordinator
+///   means over survivors and never waits for the dead (the drive
+///   loop's membership semantics), so there is no timeout term.
+/// - **Stragglers**: a fraction of syncs arrive late, stretching that
+///   sync's outer leg by a slowdown factor **before** the τ-window
+///   hiding applies — a straggling sync needs proportionally more
+///   compute to hide under, exactly how `--overlap-tau` interacts
+///   with slow links.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnModel {
+    /// Fraction of replica-sync contributions lost to crashes/leaves
+    /// (`FaultPlan::dropout_rate`), in [0, 1].
+    pub dropout_rate: f64,
+    /// Fraction of outer syncs slowed by a straggling replica, in [0, 1].
+    pub straggler_frac: f64,
+    /// Outer-leg time multiplier for a straggling sync (>= 1).
+    pub straggler_slowdown: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct WalltimeInput {
     pub algo: WalltimeAlgo,
@@ -74,6 +99,10 @@ pub struct WalltimeInput {
     /// the paper's serial bubble, exactly. Data-Parallel ignores it
     /// (no outer sync exists).
     pub overlap_tau: f64,
+    /// Replica churn scenario ([`ChurnModel`]); `None` is bit-identical
+    /// to the churn-free model. Data-Parallel ignores it (no outer
+    /// sync to drop out of or straggle on).
+    pub churn: Option<ChurnModel>,
 }
 
 /// One H-cadence outer sync over `r` nodes: the reduce leg at the up
@@ -140,7 +169,18 @@ pub fn walltime(input: &WalltimeInput) -> WalltimeBreakdown {
     // the paper's serial bubble, term for term
     let t_step = if steps > 0.0 { compute / steps } else { 0.0 };
     let overlapped_outer = |sync_every: usize| -> f64 {
-        let per_sync = outer_sync_time(bits_up, bits_down, chips, input.cross_dc);
+        // churn reshapes the outer leg only: dropout thins the up-leg
+        // volume (survivor-mean, no waiting on the dead), stragglers
+        // stretch the sync before the τ window hides any of it
+        let (up_eff, straggle) = match &input.churn {
+            Some(c) => (
+                bits_up * (1.0 - c.dropout_rate.clamp(0.0, 1.0)),
+                1.0 + c.straggler_frac.clamp(0.0, 1.0)
+                    * (c.straggler_slowdown.max(1.0) - 1.0),
+            ),
+            None => (bits_up, 1.0),
+        };
+        let per_sync = outer_sync_time(up_eff, bits_down, chips, input.cross_dc) * straggle;
         let hidden = input.overlap_tau.max(0.0) * t_step;
         (per_sync - hidden).max(0.0) * steps / sync_every as f64
     };
@@ -195,6 +235,7 @@ mod tests {
             outer_bits: BITS_PER_PARAM,
             outer_bits_down: BITS_PER_PARAM,
             overlap_tau: 0.0,
+            churn: None,
         }
     }
 
@@ -391,6 +432,66 @@ mod tests {
         let mut dp = base(WalltimeAlgo::DataParallel, LOW);
         let t0 = walltime(&dp).comm_s;
         dp.overlap_tau = 8.0;
+        assert_eq!(walltime(&dp).comm_s, t0);
+    }
+
+    #[test]
+    fn churn_reshapes_only_the_outer_leg() {
+        let algo = WalltimeAlgo::DiLoCo {
+            replicas: 4,
+            sync_every: 30,
+        };
+        let clean = walltime(&base(algo, LOW));
+        // an explicit zero-churn model is bit-identical to None
+        let mut zero = base(algo, LOW);
+        zero.churn = Some(ChurnModel {
+            dropout_rate: 0.0,
+            straggler_frac: 0.0,
+            straggler_slowdown: 1.0,
+        });
+        assert_eq!(walltime(&zero).comm_s, clean.comm_s);
+        assert_eq!(walltime(&zero).compute_s, clean.compute_s);
+        // stragglers strictly stretch comm (compute untouched)...
+        let mut slow = base(algo, LOW);
+        slow.churn = Some(ChurnModel {
+            dropout_rate: 0.0,
+            straggler_frac: 0.25,
+            straggler_slowdown: 4.0,
+        });
+        let w_slow = walltime(&slow);
+        assert!(w_slow.comm_s > clean.comm_s, "{} !> {}", w_slow.comm_s, clean.comm_s);
+        assert_eq!(w_slow.compute_s, clean.compute_s);
+        // ...and a deep τ window still hides the stretched sync
+        let mut hidden = slow.clone();
+        hidden.overlap_tau = 1e9;
+        let mut inf = base(algo, LOW);
+        if let WalltimeAlgo::DiLoCo { sync_every, .. } = &mut inf.algo {
+            *sync_every = usize::MAX;
+        }
+        let inner_only = walltime(&inf).comm_s;
+        assert!((walltime(&hidden).comm_s - inner_only).abs() <= inner_only * 1e-12 + 1e-15);
+        // dropout never increases walltime: the coordinator means over
+        // survivors and never waits for the dead
+        for d in [0.0, 0.05, 0.2, 0.5, 1.0] {
+            let mut drop = base(algo, LOW);
+            drop.churn = Some(ChurnModel {
+                dropout_rate: d,
+                straggler_frac: 0.0,
+                straggler_slowdown: 1.0,
+            });
+            assert!(
+                walltime(&drop).comm_s <= clean.comm_s,
+                "dropout {d} increased comm"
+            );
+        }
+        // DP has no outer sync: churn is inert there
+        let mut dp = base(WalltimeAlgo::DataParallel, LOW);
+        let t0 = walltime(&dp).comm_s;
+        dp.churn = Some(ChurnModel {
+            dropout_rate: 0.3,
+            straggler_frac: 0.5,
+            straggler_slowdown: 8.0,
+        });
         assert_eq!(walltime(&dp).comm_s, t0);
     }
 

@@ -223,6 +223,7 @@ pub fn fig6_12(store: &SweepStore) -> String {
                             r.outer_bits_down as f64
                         },
                         overlap_tau: r.overlap_tau as f64,
+                        churn: None,
                     });
                     writeln!(
                         s,
@@ -273,6 +274,7 @@ pub fn fig6_12(store: &SweepStore) -> String {
                         outer_bits: BITS_PER_PARAM,
                         outer_bits_down: BITS_PER_PARAM,
                         overlap_tau: 0.0,
+                        churn: None,
                     });
                     writeln!(
                         s,

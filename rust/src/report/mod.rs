@@ -16,7 +16,7 @@ use crate::sweep::SweepStore;
 pub fn experiment_ids() -> Vec<&'static str> {
     vec![
         "table4", "table5", "table6", "table7", "table8_9", "table10", "table11",
-        "table13", "comm", "stream", "fig2", "fig_batch", "fig6_12", "fig7_8", "fig9",
+        "table13", "comm", "stream", "churn", "fig2", "fig_batch", "fig6_12", "fig7_8", "fig9",
         "fig10", "fig11", "fig13",
     ]
 }
@@ -38,6 +38,7 @@ pub fn generate(
         "table13" => tables::table13(store, restarts),
         "comm" => tables::table_comm(store),
         "stream" => tables::table_stream(store),
+        "churn" => tables::table_churn(store),
         "fig2" => figures::fig2(store),
         "fig_batch" => figures::fig_batch(store),
         "fig6_12" => figures::fig6_12(store),

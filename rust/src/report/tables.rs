@@ -710,6 +710,7 @@ pub fn table_comm(store: &SweepStore) -> String {
                     outer_bits: up as f64,
                     outer_bits_down: down as f64,
                     overlap_tau: r.overlap_tau as f64,
+                    churn: None,
                 });
                 writeln!(
                     s,
@@ -869,6 +870,7 @@ pub fn table_stream(store: &SweepStore) -> String {
                             outer_bits: up as f64,
                             outer_bits_down: down as f64,
                             overlap_tau: tau,
+                            churn: None,
                         })
                         .comm_s
                     };
@@ -922,6 +924,7 @@ pub fn table_stream(store: &SweepStore) -> String {
                 outer_bits: BITS_PER_PARAM,
                 outer_bits_down: BITS_PER_PARAM,
                 overlap_tau: tau,
+                churn: None,
             })
         };
         let inner_only = mk(usize::MAX, 0.0).comm_s;
@@ -938,6 +941,215 @@ pub fn table_stream(store: &SweepStore) -> String {
                 if outer0 > 0.0 { (1.0 - outer / outer0) * 100.0 } else { 0.0 }
             )
             .unwrap();
+        }
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Churn report — eval loss vs replica dropout rate for elastic membership
+// (ROADMAP "ticked coordinator state machine"; deterministic fault injection
+// via `--churn`; generated by `diloco report --exp churn`)
+// ---------------------------------------------------------------------------
+pub fn table_churn(store: &SweepStore) -> String {
+    use crate::netsim::walltime::{
+        walltime, ChurnModel, WalltimeAlgo, WalltimeInput,
+    };
+    use crate::netsim::{ARCHETYPES, LOW};
+
+    let mut s = String::new();
+    writeln!(s, "# Elastic membership — eval loss vs replica dropout rate\n").unwrap();
+    writeln!(
+        s,
+        "**The fault plan column** is `--churn`, the coordinator's \
+         deterministic fault injection: crashes drop a replica from the \
+         reduce mid-segment (the outer step means over survivors), leaves \
+         freeze a replica after its last contribution, joins admit a fresh \
+         replica at an outer boundary (initialized from the current \
+         broadcast view), and stragglers only stretch the sync in the \
+         walltime model — the loss trajectory is untouched. `rate=P` \
+         derives a seed-keyed random crash per replica with probability P \
+         per sync (replica 0 always survives). The empty plan is \
+         bit-identical to the churn-free coordinator, which is what makes \
+         the delta column attributable to churn alone.\n"
+    )
+    .unwrap();
+
+    // ---- loss vs dropout, from the sweep store (grid `churn`) ----
+    writeln!(s, "## Loss vs dropout rate (sweep grid `churn`)\n").unwrap();
+    writeln!(
+        s,
+        "Per (model, M): the best run at each fault plan of \
+         `sweep::grids::CHURN_CORNERS`. Delta is measured against the \
+         churn-free run of the same family with the same hyperparameters \
+         (the churn grid varies only the fault plan within a family).\n"
+    )
+    .unwrap();
+    writeln!(
+        s,
+        "| model | algo | fault plan | dropout rate | eval loss | delta vs churn-free | netsim outer_s clean (low) | netsim outer_s churned (low) |"
+    )
+    .unwrap();
+    writeln!(s, "|---|---|---|---|---|---|---|---|").unwrap();
+    let mut rows = 0usize;
+    let corners = crate::sweep::grids::CHURN_CORNERS;
+    for model in SWEEP_LADDER {
+        for algo in &ALGOS[1..] {
+            let family = |spec: &str| {
+                store.best(|r| {
+                    r.model == model
+                        && r.algo == *algo
+                        && r.churn == spec
+                        && (r.overtrain - 1.0).abs() < 1e-9
+                })
+            };
+            let hypers_match = |a: &crate::coordinator::RunMetrics,
+                                b: &crate::coordinator::RunMetrics| {
+                a.sync_every == b.sync_every
+                    && a.global_batch_tokens == b.global_batch_tokens
+                    && a.inner_lr == b.inner_lr
+                    && a.outer_lr == b.outer_lr
+            };
+            // The printed churn-free baseline must be the SAME run the
+            // faulted deltas anchor on (same policy as the comm/stream
+            // reports' anchor search). Without any faulted runs, fall
+            // back to the best churn-free run alone.
+            let anchor = corners
+                .iter()
+                .filter(|c| !c.is_empty())
+                .filter_map(|&c| family(c))
+                .next();
+            let base = match anchor {
+                Some(a) => store.best(|b| {
+                    b.model == model
+                        && b.algo == *algo
+                        && b.churn.is_empty()
+                        && (b.overtrain - 1.0).abs() < 1e-9
+                        && hypers_match(a, b)
+                }),
+                None => family(""),
+            };
+            for &spec in &corners {
+                let is_base = spec.is_empty();
+                let Some(r) = (if is_base { base } else { family(spec) }) else {
+                    continue;
+                };
+                rows += 1;
+                let delta = if is_base {
+                    "baseline".to_string()
+                } else {
+                    match base {
+                        Some(b) if hypers_match(b, r) => {
+                            pct(r.final_eval_loss, b.final_eval_loss)
+                        }
+                        _ => "— (no matched churn-free run)".to_string(),
+                    }
+                };
+                // the outer term in isolation, clean vs churned: the
+                // run's measured dropout rate thins the up leg; any
+                // straggle events in the plan stretch their syncs 4x
+                let straggle_syncs = spec.matches("straggle").count();
+                let churn_model = ChurnModel {
+                    dropout_rate: r.dropout_rate,
+                    straggler_frac: if r.outer_syncs > 0 {
+                        (straggle_syncs as f64 / r.outer_syncs as f64).min(1.0)
+                    } else {
+                        0.0
+                    },
+                    straggler_slowdown: 4.0,
+                };
+                let outer_with = |churn: Option<ChurnModel>| -> f64 {
+                    let mk = |sync_every: usize, churn: Option<ChurnModel>| {
+                        walltime(&WalltimeInput {
+                            algo: WalltimeAlgo::DiLoCo {
+                                replicas: r.replicas.max(1),
+                                sync_every,
+                            },
+                            params: r.param_count as f64,
+                            tokens: r.tokens as f64,
+                            batch_tokens: r.global_batch_tokens as f64,
+                            cross_dc: LOW,
+                            outer_bits: r.outer_bits as f64,
+                            outer_bits_down: r.outer_bits_down as f64,
+                            overlap_tau: r.overlap_tau as f64,
+                            churn,
+                        })
+                        .comm_s
+                    };
+                    mk(r.sync_every.max(1), churn) - mk(usize::MAX, None)
+                };
+                writeln!(
+                    s,
+                    "| {model} | {algo} | {} | {:.3} | {:.4} | {delta} | {:.3e} | {:.3e} |",
+                    if is_base { "(none)" } else { spec },
+                    r.dropout_rate,
+                    r.final_eval_loss,
+                    outer_with(None),
+                    outer_with(Some(churn_model)),
+                )
+                .unwrap();
+            }
+        }
+    }
+    if rows == 0 {
+        writeln!(
+            s,
+            "| (pending) | run `diloco sweep --grid churn` | | | | | | |"
+        )
+        .unwrap();
+    }
+
+    // ---- straggler cost, analytic (works before any runs land) ----
+    writeln!(
+        s,
+        "\n## Straggler cost vs τ (netsim, paper-scale N=1e9, M=4, H=30, bf16 legs)\n"
+    )
+    .unwrap();
+    writeln!(
+        s,
+        "Stragglers stretch a sync's outer leg **before** the τ window \
+         hides any of it, so a straggling sync needs proportionally more \
+         compute to disappear from the critical path; dropout only thins \
+         the up leg (the coordinator never waits for the dead).\n"
+    )
+    .unwrap();
+    writeln!(s, "| network | straggler frac x slowdown | τ | outer_s clean | outer_s churned |").unwrap();
+    writeln!(s, "|---|---|---|---|---|").unwrap();
+    for net in ARCHETYPES {
+        let mk = |sync_every: usize, tau: f64, churn: Option<ChurnModel>| {
+            walltime(&WalltimeInput {
+                algo: WalltimeAlgo::DiLoCo {
+                    replicas: 4,
+                    sync_every,
+                },
+                params: 1e9,
+                tokens: 20e9,
+                batch_tokens: 2f64.powi(20),
+                cross_dc: net,
+                outer_bits: crate::netsim::walltime::BITS_PER_PARAM,
+                outer_bits_down: crate::netsim::walltime::BITS_PER_PARAM,
+                overlap_tau: tau,
+                churn,
+            })
+            .comm_s
+        };
+        for (frac, slow) in [(0.1f64, 4.0f64), (0.25, 4.0), (0.25, 16.0)] {
+            let churn = Some(ChurnModel {
+                dropout_rate: 0.0,
+                straggler_frac: frac,
+                straggler_slowdown: slow,
+            });
+            for tau in [0usize, 8] {
+                let inner_only = mk(usize::MAX, 0.0, None);
+                let clean = mk(30, tau as f64, None) - inner_only;
+                let churned = mk(30, tau as f64, churn) - inner_only;
+                writeln!(
+                    s,
+                    "| {} | {frac} x {slow} | {tau} | {clean:.3e} | {churned:.3e} |",
+                    net.name,
+                )
+                .unwrap();
+            }
         }
     }
     s

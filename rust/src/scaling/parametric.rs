@@ -144,7 +144,7 @@ pub fn fit_parametric(
         let mut total = 0.0;
         for o in train {
             let f = form.eval(q, o.n, o.m);
-            if !(f > 0.0) || !f.is_finite() {
+            if f <= 0.0 || !f.is_finite() {
                 return 1e18;
             }
             total += huber(HUBER_DELTA, f.ln() - o.loss.ln());
@@ -161,7 +161,7 @@ pub fn fit_parametric(
         let mut ok = true;
         for o in holdout {
             let f = form.eval(&q, o.n, o.m);
-            if !(f > 0.0) || !f.is_finite() {
+            if f <= 0.0 || !f.is_finite() {
                 ok = false;
                 break;
             }
@@ -171,7 +171,7 @@ pub fn fit_parametric(
             continue;
         }
         resid /= holdout.len() as f64;
-        if best.as_ref().map_or(true, |b| resid < b.holdout_residual) {
+        if best.as_ref().is_none_or(|b| resid < b.holdout_residual) {
             best = Some(ParametricFit {
                 form,
                 params: q,

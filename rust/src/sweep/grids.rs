@@ -342,6 +342,48 @@ fn stream_sweep(model: &str) -> Vec<RunConfig> {
     out
 }
 
+/// The fault-plan specs the `churn` grid covers, baseline first: the
+/// churn-free anchor (bit-identical to the plain path — the zero row
+/// every delta is measured against), a seed-derived random-dropout
+/// ladder, an explicit elastic-membership corner (a crash plus a later
+/// join), and a straggler-only plan (event journal + walltime model
+/// only — the loss trajectory is untouched). Like [`COMM_PAIRS`], this
+/// constant is the single source of truth: `report::tables::table_churn`
+/// derives its row set from it, so extending the grid extends the
+/// report.
+pub const CHURN_CORNERS: [&str; 6] = [
+    "",
+    "rate=0.05",
+    "rate=0.1",
+    "rate=0.2",
+    "crash@2:r1,join@4:r4",
+    "straggle@1:r1,straggle@3:r2",
+];
+
+/// Elastic membership / crash tolerance (ROADMAP item): the data
+/// behind `diloco report --exp churn` — eval loss vs replica dropout
+/// rate over [`CHURN_CORNERS`], best-known hypers, no re-tune. The
+/// empty-spec entries are the exact churn-free baselines the deltas
+/// are measured against.
+fn churn_sweep(model: &str) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    let c = lr_center(model);
+    for m in [2usize, 4] {
+        for spec in CHURN_CORNERS {
+            push(
+                &mut out,
+                model,
+                Algo::DiLoCo { replicas: m },
+                16,
+                c,
+                etas_for(m)[1],
+                |cf| cf.churn = spec.to_string(),
+            );
+        }
+    }
+    out
+}
+
 /// Composite grids can repeat configurations (e.g. the m8 fast-pass
 /// entries also appear in the full m0 grid); keep the first occurrence.
 fn dedup_by_run_id(grid: Vec<RunConfig>) -> Vec<RunConfig> {
@@ -362,6 +404,7 @@ pub fn grid_names() -> Vec<&'static str> {
         "overtrain",
         "comm",
         "stream",
+        "churn",
         "all",
         "smoke",
     ]
@@ -377,6 +420,7 @@ pub fn grid_by_name(name: &str) -> Result<Vec<RunConfig>> {
         "overtrain" => overtrain_sweep("m0"),
         "comm" => comm_sweep("m0"),
         "stream" => stream_sweep("m0"),
+        "churn" => churn_sweep("m0"),
         // priority order: ladder first (Table 4 / scaling laws), then ablations
         "all" => {
             let mut v = main_grid("m0", 0);
@@ -387,6 +431,7 @@ pub fn grid_by_name(name: &str) -> Result<Vec<RunConfig>> {
             v.extend(overtrain_sweep("m0"));
             v.extend(comm_sweep("m0"));
             v.extend(stream_sweep("m0"));
+            v.extend(churn_sweep("m0"));
             dedup_by_run_id(v)
         }
         // wall-clock-constrained order: give every experiment some data
@@ -406,6 +451,9 @@ pub fn grid_by_name(name: &str) -> Result<Vec<RunConfig>> {
             // overlap corners early for the same reason: loss-vs-τ
             // needs a run per corner before the stream report fills in
             v.extend(stream_sweep("m0"));
+            // churn ladder early too: loss-vs-dropout needs the anchor
+            // plus at least one faulted run before the report says anything
+            v.extend(churn_sweep("m0"));
             // minimal m8 coverage for Table 4's last column
             for b in [16usize, 32] {
                 push(&mut v, "m0", Algo::DiLoCo { replicas: 8 }, b, lr_center("m0"), 1.0, |cf| {
@@ -527,6 +575,36 @@ mod tests {
         }
         // within a replica count only the schedule/width knobs vary,
         // so the report can attribute the whole loss delta to them
+        for w in g.windows(2) {
+            if w[0].algo == w[1].algo {
+                assert_eq!(w[0].inner_lr, w[1].inner_lr);
+                assert_eq!(w[0].outer_lr, w[1].outer_lr);
+                assert_eq!(w[0].sync_every, w[1].sync_every);
+                assert_eq!(w[0].global_batch_seqs, w[1].global_batch_seqs);
+            }
+        }
+    }
+
+    #[test]
+    fn churn_grid_covers_every_corner() {
+        let g = grid_by_name("churn").unwrap();
+        assert_eq!(g.len(), 12, "2 replica counts x 6 fault plans");
+        for m in [2usize, 4] {
+            for spec in CHURN_CORNERS {
+                assert!(
+                    g.iter().any(|c| c.algo == (Algo::DiLoCo { replicas: m })
+                        && c.churn == spec),
+                    "missing churn corner {spec:?} for M={m}"
+                );
+            }
+        }
+        // every spec must parse under the grid's own seeds — a typo in
+        // CHURN_CORNERS should fail here, not mid-sweep
+        for cfg in &g {
+            crate::coordinator::FaultPlan::parse(&cfg.churn, cfg.seed).unwrap();
+        }
+        // within a replica count only the fault plan varies, so the
+        // report can attribute the whole loss delta to churn
         for w in g.windows(2) {
             if w[0].algo == w[1].algo {
                 assert_eq!(w[0].inner_lr, w[1].inner_lr);

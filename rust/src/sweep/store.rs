@@ -33,7 +33,11 @@ use crate::util::json::Json;
 /// a pure wall-clock knob). For Data-Parallel there is no outer sync
 /// at all, so all four knobs are inert and the id pins them to
 /// (32, 32, 1, 0) — DP runs differing only in those flags are
-/// byte-identical and must collide.
+/// byte-identical and must collide. A non-empty fault plan changes the
+/// trajectory, so it forks the id with a trailing `_ch{spec}` segment
+/// (spec sanitized to the filename-safe alphabet); churn-free ids are
+/// byte-identical to the pre-churn format, and DP ignores churn
+/// entirely (no outer sync to inject faults into).
 pub fn run_id(cfg: &RunConfig) -> String {
     let (ob, obd, p, tau) = match cfg.algo {
         crate::coordinator::Algo::DataParallel => (32, 32, 1, 0),
@@ -44,8 +48,20 @@ pub fn run_id(cfg: &RunConfig) -> String {
             cfg.overlap_tau,
         ),
     };
+    let churn = if cfg.churn.is_empty()
+        || matches!(cfg.algo, crate::coordinator::Algo::DataParallel)
+    {
+        String::new()
+    } else {
+        let safe: String = cfg
+            .churn
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '.' { c } else { '-' })
+            .collect();
+        format!("_ch{safe}")
+    };
     format!(
-        "{}_{}_h{}_b{}_lr{:.5}_eta{:.2}_ot{}_s{}_ob{ob}_obd{obd}_p{p}_tau{tau}",
+        "{}_{}_h{}_b{}_lr{:.5}_eta{:.2}_ot{}_s{}_ob{ob}_obd{obd}_p{p}_tau{tau}{churn}",
         cfg.model,
         cfg.algo.label(),
         cfg.sync_every,
@@ -122,7 +138,7 @@ impl SweepStore {
                     }
                     n.strip_prefix(&format!("{stem}."))
                         .and_then(|rest| rest.strip_suffix(".jsonl"))
-                        .map_or(false, |model| {
+                        .is_some_and(|model| {
                             !model.is_empty()
                                 && model.chars().all(|c| {
                                     c.is_ascii_alphanumeric() || c == '-' || c == '_'
@@ -136,7 +152,7 @@ impl SweepStore {
                         p.is_file()
                             && p.file_name()
                                 .and_then(|s| s.to_str())
-                                .map_or(false, |n| is_shard(n))
+                                .is_some_and(|n| is_shard(n))
                     })
                     .collect();
                 shards.sort();
@@ -261,6 +277,8 @@ mod tests {
             outer_bits_down: 32,
             wire_up_bytes: 0,
             wire_down_bytes: 0,
+            churn: String::new(),
+            dropout_rate: 0.0,
         }
     }
 
@@ -310,6 +328,15 @@ mod tests {
         f.streaming_fragments = 4;
         f.overlap_tau = 2;
         assert_eq!(run_id(&a), run_id(&f));
+        // a fault plan forks the id (sanitized), churn-free keeps the
+        // legacy format, and DP ignores churn entirely
+        let mut g = c.clone();
+        g.churn = "crash@2:r1,rate=0.1".into();
+        assert_ne!(run_id(&c), run_id(&g));
+        assert!(run_id(&g).ends_with("_chcrash-2-r1-rate-0.1"), "{}", run_id(&g));
+        let mut h = RunConfig::default();
+        h.churn = "crash@2:r1".into();
+        assert_eq!(run_id(&a), run_id(&h));
     }
 
     #[test]
@@ -325,7 +352,7 @@ mod tests {
         }
         let s = SweepStore::open(&path).unwrap();
         assert_eq!(s.len(), 2);
-        assert!(s.contains("a"));
+        assert!(s.contains('a'));
         let best = s.best(|_| true).unwrap();
         assert_eq!(best.model, "m1");
         let rec = &s.by_model_algo("m0", "dp")[0];

@@ -1,0 +1,500 @@
+//! Elastic membership + checkpoint/resume oracles (the ticked
+//! coordinator of `coordinator::pool::drive_ctl`):
+//!
+//! (1) **the churn-free control path is the old drive loop, bit for
+//!     bit**: `drive_ctl` with `DriveCtl::fresh` (and with the empty
+//!     `FaultPlan` resolved to zero events) must replay `drive`
+//!     exactly — losses, evals, sync counts, the global arena, final
+//!     replica payloads, and both wire legs.
+//! (2) **checkpoint + resume is bit-identical to the uninterrupted
+//!     run** for every (up, down) codec pair at τ=0 and τ>0, with the
+//!     checkpoint pushed through its JSON serialization both ways —
+//!     what `diloco checkpoint` writes is what `diloco resume` reads.
+//! (3) **fault schedules replay across a resume**: a crash scheduled
+//!     after the checkpoint boundary fires identically in the resumed
+//!     run, keyed to the absolute outer-sync index.
+//! (4) **survivor trajectories after a mid-segment death are
+//!     bit-identical at workers 1 vs 2 vs 4**, diverge from the
+//!     churn-free run only after the death, and freeze the dead
+//!     replica at its death state.
+//! (5) **joiners come alive at an outer boundary** initialized from
+//!     the broadcast view, under identity and lossy up-wires alike,
+//!     scheduling-independently.
+//!
+//! Host tier only: no PJRT, no artifacts.
+
+use std::sync::Arc;
+
+use diloco::comm::{codec_for, OuterBits};
+use diloco::coordinator::{
+    drive, drive_ctl, Checkpoint, DriveCtl, DrivePlan, EventKind, FaultEvent, FaultKind,
+    FaultPlan, InnerEngine, OuterSync, ReplicaState,
+};
+use diloco::data::synthetic::{CorpusSpec, TokenStream};
+use diloco::runtime::{FlatLayout, HostTensor};
+use diloco::util::json::Json;
+
+// ---- the deterministic host-math engine (same as the pool twins) -----
+
+struct ToyEngine {
+    n: usize,
+}
+
+impl InnerEngine for ToyEngine {
+    fn inner_step(
+        &self,
+        rep: usize,
+        replica: &mut ReplicaState,
+        t: usize,
+    ) -> anyhow::Result<f64> {
+        let toks = replica.shard.next_batch(2, 8);
+        let mut loss = 0.0f64;
+        for leaf in 0..self.n {
+            let lit = &replica.state[leaf];
+            let dims = lit.array_shape()?.dims().to_vec();
+            let mut v = lit.to_vec::<f32>()?;
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = 0.5 * *x
+                    + 1e-3 * toks[(i + t) % toks.len()] as f32
+                    + 1e-2 * (t as f32 + rep as f32 * 0.25).sin();
+            }
+            loss += v.iter().map(|&f| f as f64).sum::<f64>() / v.len() as f64;
+            replica.state[leaf] = Arc::new(xla::Literal::vec1(&v).reshape(&dims)?);
+        }
+        Ok(loss / self.n as f64)
+    }
+
+    fn eval(&self, params: &[Arc<xla::Literal>]) -> anyhow::Result<f64> {
+        let mut acc = 0.0f64;
+        for (i, p) in params.iter().enumerate() {
+            for x in p.to_vec::<f32>()? {
+                acc += x as f64 * (i + 1) as f64;
+            }
+        }
+        Ok(acc)
+    }
+}
+
+fn layout() -> Arc<FlatLayout> {
+    Arc::new(FlatLayout::new(vec![
+        vec![3, 2],
+        vec![4],
+        vec![2, 2],
+        vec![5],
+        vec![1],
+    ]))
+}
+
+fn init_lits(l: &FlatLayout) -> Vec<Arc<xla::Literal>> {
+    (0..l.n_leaves())
+        .map(|leaf| {
+            let v: Vec<f32> = (0..l.len(leaf))
+                .map(|i| ((leaf * 37 + i * 11 + 5) % 23) as f32 * 0.1 - 1.0)
+                .collect();
+            Arc::new(HostTensor::from_vec(l.shape(leaf), v).to_literal().unwrap())
+        })
+        .collect()
+}
+
+const SEED: u64 = 5;
+
+fn fresh_replicas(l: &FlatLayout, m: usize) -> Vec<ReplicaState> {
+    let init = init_lits(l);
+    (0..m)
+        .map(|r| ReplicaState {
+            state: init.clone(),
+            shard: TokenStream::new(CorpusSpec::default(), SEED, r as u64),
+        })
+        .collect()
+}
+
+fn fresh_sync(l: &Arc<FlatLayout>, up: OuterBits, down: OuterBits) -> OuterSync {
+    let init = init_lits(l);
+    let host: Vec<HostTensor> = init
+        .iter()
+        .map(|lit| HostTensor::from_literal(lit).unwrap())
+        .collect();
+    OuterSync::new(Arc::clone(l), &host, init, 0.7, 0.9, FRAGMENTS)
+        .unwrap()
+        .with_codec(codec_for(up), 42)
+        .with_down_codec(codec_for(down))
+}
+
+const TOTAL: usize = 26;
+const INTERVAL: usize = 6; // per-fragment sync interval (H/P)
+const FRAGMENTS: usize = 2;
+const EVAL_EVERY: usize = 3;
+const M: usize = 4;
+
+fn plan(workers: usize, tau: usize) -> DrivePlan {
+    DrivePlan {
+        total_steps: TOTAL,
+        sync_interval: INTERVAL,
+        fragments: FRAGMENTS,
+        n_params: layout().n_leaves(),
+        eval_every: Some(EVAL_EVERY),
+        log_every: 1000,
+        workers,
+        overlap_tau: tau,
+    }
+}
+
+/// Everything the oracles compare bitwise. Upload counts are deliberately
+/// absent: a resumed run rebuilds its literal cache lazily, so it uploads
+/// less than the uninterrupted run while computing the exact same bits.
+#[derive(PartialEq, Debug)]
+struct Trace {
+    step_losses: Vec<f64>,
+    eval_curve: Vec<(usize, f64)>,
+    outer_syncs: usize,
+    global_bits: Vec<u32>,
+    finals: Vec<Vec<Vec<f32>>>,
+    wire_up: u64,
+    wire_down: u64,
+}
+
+fn finals_of(l: &FlatLayout, replicas: &[ReplicaState]) -> Vec<Vec<Vec<f32>>> {
+    replicas
+        .iter()
+        .map(|r| {
+            (0..l.n_leaves())
+                .map(|leaf| r.state[leaf].to_vec::<f32>().unwrap())
+                .collect()
+        })
+        .collect()
+}
+
+fn trace_of(
+    step_losses: Vec<f64>,
+    eval_curve: Vec<(usize, f64)>,
+    outer_syncs: usize,
+    sync: &OuterSync,
+    l: &FlatLayout,
+    replicas: &[ReplicaState],
+) -> Trace {
+    Trace {
+        step_losses,
+        eval_curve,
+        outer_syncs,
+        global_bits: sync.global().data().iter().map(|x| x.to_bits()).collect(),
+        finals: finals_of(l, replicas),
+        wire_up: sync.wire_stats().total_up(),
+        wire_down: sync.wire_stats().total_down(),
+    }
+}
+
+/// The uninterrupted run through the plain `drive` entry point.
+fn plain_run(up: OuterBits, down: OuterBits, workers: usize, tau: usize) -> Trace {
+    let l = layout();
+    let engine = ToyEngine { n: l.n_leaves() };
+    let mut replicas = fresh_replicas(&l, M);
+    let mut sync = fresh_sync(&l, up, down);
+    let out = drive(&engine, &mut replicas, Some(&mut sync), &plan(workers, tau)).expect("drive");
+    trace_of(out.step_losses, out.eval_curve, out.outer_syncs, &sync, &l, &replicas)
+}
+
+/// The uninterrupted run through `drive_ctl` with the given controls.
+/// Returns the trace and the final `DriveCtl` (journal, live flags).
+fn ctl_run(
+    up: OuterBits,
+    down: OuterBits,
+    workers: usize,
+    tau: usize,
+    mut ctl: DriveCtl,
+) -> (Trace, DriveCtl) {
+    let l = layout();
+    let engine = ToyEngine { n: l.n_leaves() };
+    let mut replicas = fresh_replicas(&l, ctl.live.len());
+    let mut sync = fresh_sync(&l, up, down);
+    let out = drive_ctl(&engine, &mut replicas, Some(&mut sync), &plan(workers, tau), &mut ctl)
+        .expect("drive_ctl");
+    (
+        trace_of(out.step_losses, out.eval_curve, out.outer_syncs, &sync, &l, &replicas),
+        ctl,
+    )
+}
+
+// ---- (1) the churn-free control path is the old drive loop -----------
+
+#[test]
+fn fresh_ctl_and_empty_fault_plan_replay_drive_bit_for_bit() {
+    for (up, down) in [
+        (OuterBits::Fp32, OuterBits::Fp32),
+        (OuterBits::Int4, OuterBits::Bf16),
+    ] {
+        for tau in [0usize, 3] {
+            let oracle = plain_run(up, down, 1, tau);
+            assert_eq!(oracle.step_losses.len(), TOTAL, "{up:?}/{down:?} τ={tau}");
+
+            // DriveCtl::fresh is exactly `drive`
+            let (fresh, _) = ctl_run(up, down, 1, tau, DriveCtl::fresh(M));
+            assert_eq!(
+                fresh, oracle,
+                "{up:?}/{down:?} τ={tau}: DriveCtl::fresh must replay drive"
+            );
+
+            // ... and so is the empty --churn spec, resolved through the
+            // real FaultPlan path (acceptance: a churn-free FaultPlan run
+            // is bit-identical to today's path)
+            let events = FaultPlan::parse("", 17).unwrap().resolve(M, 99);
+            assert!(events.is_empty(), "empty spec resolves to zero events");
+            let mut ctl = DriveCtl::fresh(M);
+            ctl.events = events;
+            let (empty_plan, ctl) = ctl_run(up, down, 2, tau, ctl);
+            assert_eq!(
+                empty_plan, oracle,
+                "{up:?}/{down:?} τ={tau}: the empty fault plan must be inert"
+            );
+            assert_eq!(ctl.journal.count(EventKind::Crash), 0);
+            assert_eq!(ctl.journal.count(EventKind::Join), 0);
+            assert!(
+                ctl.journal.count(EventKind::SyncSend) > 0,
+                "sends are journaled even without churn"
+            );
+        }
+    }
+}
+
+// ---- (2) checkpoint + resume is bit-identical ------------------------
+
+/// Run to `stop` merged outer syncs, capture a checkpoint, push it
+/// through the JSON wire format both ways, rebuild everything from the
+/// parsed copy, and finish the run. `events` (the fault schedule) is
+/// attached to both legs, exactly as `run_resume` re-resolves the
+/// config's `--churn` spec.
+fn interrupted_then_resumed(
+    up: OuterBits,
+    down: OuterBits,
+    tau: usize,
+    stop: u64,
+    events: Vec<FaultEvent>,
+) -> (Trace, DriveCtl) {
+    let l = layout();
+    let engine = ToyEngine { n: l.n_leaves() };
+
+    // leg 1: run until `stop` syncs have merged, then capture
+    let mut replicas = fresh_replicas(&l, M);
+    let mut sync = fresh_sync(&l, up, down);
+    let mut ctl = DriveCtl::fresh(M);
+    ctl.events = events.clone();
+    ctl.stop_after_sync = Some(stop);
+    let out = drive_ctl(&engine, &mut replicas, Some(&mut sync), &plan(1, tau), &mut ctl)
+        .expect("interrupted leg");
+    let step = ctl.stopped_at.expect("the stop boundary must hit before T");
+    assert_eq!(out.step_losses.len(), step, "losses cover exactly the run-so-far");
+    assert_eq!(ctl.journal.count(EventKind::Checkpoint), 1);
+    let ck = Checkpoint::capture(
+        step,
+        &replicas,
+        &ctl.residuals,
+        &ctl.live,
+        Some(&sync),
+        &out,
+        &ctl.journal,
+    )
+    .expect("capture at the stop boundary");
+
+    // the serialized form is the contract: what `diloco checkpoint`
+    // writes is what `diloco resume` reads
+    let text = ck.to_json().to_string_compact();
+    let ck = Checkpoint::from_json(&Json::parse(&text).unwrap()).expect("checkpoint round-trip");
+    assert_eq!(ck.step, step);
+
+    // leg 2: rebuild replicas, bus, and controls from the parsed copy
+    let mut replicas: Vec<ReplicaState> = ck
+        .replicas
+        .iter()
+        .enumerate()
+        .map(|(r, rck)| {
+            let mut shard = TokenStream::new(CorpusSpec::default(), SEED, r as u64);
+            shard.skip(rck.consumed);
+            ReplicaState {
+                state: rck.literals().expect("leaf rebuild"),
+                shard,
+            }
+        })
+        .collect();
+    let mut bus = fresh_sync(&l, up, down);
+    bus.restore_state(ck.sync.as_ref().expect("diloco checkpoint carries sync state"))
+        .expect("sync restore");
+    let snap_init = Some(bus.broadcast_view().to_vec());
+    let mut ctl = DriveCtl {
+        events,
+        live: ck.live.clone(),
+        stop_after_sync: None,
+        start_step: ck.step,
+        resume: true,
+        journal: ck.journal.clone(),
+        residuals: ck.replicas.iter().map(|r| r.residual.clone()).collect(),
+        snap_init,
+        stopped_at: None,
+    };
+    let resumed = drive_ctl(&engine, &mut replicas, Some(&mut bus), &plan(2, tau), &mut ctl)
+        .expect("resumed leg");
+    let full = ck.stitch(&resumed);
+    (
+        trace_of(full.step_losses, full.eval_curve, full.outer_syncs, &bus, &l, &replicas),
+        ctl,
+    )
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical_for_every_codec_pair() {
+    // τ=0 stops at the sync boundary itself; τ=3 must wait out the
+    // overlap window (the stop is only legal with nothing in flight).
+    for up in OuterBits::ALL {
+        for down in OuterBits::ALL {
+            for tau in [0usize, 3] {
+                let oracle = plain_run(up, down, 1, tau);
+                let (stitched, ctl) = interrupted_then_resumed(up, down, tau, 2, Vec::new());
+                assert_eq!(
+                    stitched, oracle,
+                    "{up:?}/{down:?} τ={tau}: resume must continue the \
+                     interrupted run bit for bit"
+                );
+                // the journal carries the whole story across the cut
+                assert_eq!(ctl.journal.count(EventKind::Checkpoint), 1, "{up:?}/{down:?}");
+                assert_eq!(ctl.journal.count(EventKind::Resume), 1, "{up:?}/{down:?}");
+                assert_eq!(
+                    ctl.journal.count(EventKind::SyncMerge),
+                    oracle.outer_syncs,
+                    "{up:?}/{down:?} τ={tau}: every merge journaled exactly once \
+                     across both legs"
+                );
+            }
+        }
+    }
+}
+
+// ---- (3) fault schedules replay across a resume ----------------------
+
+#[test]
+fn scheduled_crash_after_the_checkpoint_replays_identically_on_resume() {
+    // the crash is keyed to absolute sync index 3 — after the stop at
+    // 2, so it must fire in the resumed leg exactly where the
+    // uninterrupted run fires it
+    let events = vec![FaultEvent {
+        at_sync: 3,
+        replica: 1,
+        kind: FaultKind::Crash,
+    }];
+    for (up, down) in [
+        (OuterBits::Fp32, OuterBits::Fp32),
+        (OuterBits::Int8, OuterBits::Fp32),
+    ] {
+        let mut ctl = DriveCtl::fresh(M);
+        ctl.events = events.clone();
+        let (oracle, octl) = ctl_run(up, down, 1, 0, ctl);
+        assert_eq!(octl.journal.count(EventKind::Crash), 1, "{up:?}/{down:?}");
+        assert!(!octl.live[1], "{up:?}/{down:?}: replica 1 dead at the end");
+
+        let (stitched, rctl) = interrupted_then_resumed(up, down, 0, 2, events.clone());
+        assert_eq!(
+            stitched, oracle,
+            "{up:?}/{down:?}: the fault schedule must replay across the cut"
+        );
+        assert_eq!(rctl.journal.count(EventKind::Crash), 1, "fired once, in leg 2");
+        assert_eq!(rctl.live, octl.live, "{up:?}/{down:?}");
+    }
+}
+
+// ---- (4) survivors after a mid-segment death --------------------------
+
+#[test]
+fn survivor_trajectories_after_a_death_are_bit_identical_across_workers() {
+    // crash keyed to sync 2: replica 1 dies at the top of the (12, 18]
+    // segment, so steps 1..=12 match the churn-free run exactly and
+    // the mean switches to the 3 survivors from step 13 on
+    let events = vec![FaultEvent {
+        at_sync: 2,
+        replica: 1,
+        kind: FaultKind::Crash,
+    }];
+    for tau in [0usize, 3] {
+        let mut ctl = DriveCtl::fresh(M);
+        ctl.events = events.clone();
+        let (oracle, octl) = ctl_run(OuterBits::Fp32, OuterBits::Fp32, 1, tau, ctl);
+        assert_eq!(oracle.step_losses.len(), TOTAL, "τ={tau}: dead fleet still logs T steps");
+        assert_eq!(octl.journal.count(EventKind::Crash), 1);
+
+        // acceptance: workers 1 vs 2 vs 4 bit-identical under churn
+        for workers in [2usize, 4] {
+            let mut ctl = DriveCtl::fresh(M);
+            ctl.events = events.clone();
+            let (par, _) = ctl_run(OuterBits::Fp32, OuterBits::Fp32, workers, tau, ctl);
+            assert_eq!(
+                par, oracle,
+                "τ={tau} w={workers}: survivor trajectories must be \
+                 scheduling-independent"
+            );
+        }
+
+        // the death changes the trajectory only after it happens
+        let clean = plain_run(OuterBits::Fp32, OuterBits::Fp32, 1, tau);
+        assert_eq!(
+            oracle.step_losses[..12],
+            clean.step_losses[..12],
+            "τ={tau}: pre-death steps are untouched"
+        );
+        assert_ne!(
+            oracle.step_losses[12..],
+            clean.step_losses[12..],
+            "τ={tau}: the survivor mean must actually move"
+        );
+
+        // the dead replica froze at its death state; every survivor
+        // adopted the final full flush
+        assert_eq!(oracle.finals[0], oracle.finals[2], "τ={tau}");
+        assert_eq!(oracle.finals[0], oracle.finals[3], "τ={tau}");
+        assert_ne!(
+            oracle.finals[1], oracle.finals[0],
+            "τ={tau}: a dead replica never sees the merges it missed"
+        );
+    }
+}
+
+// ---- (5) joiners initialize from the broadcast view -------------------
+
+#[test]
+fn joiner_comes_alive_at_an_outer_boundary_from_the_broadcast_view() {
+    // universe of 4 with slot 3 dark at start; the join is keyed to
+    // sync 0, so it fires at the first boundary after merge 1 lands
+    let events = vec![FaultEvent {
+        at_sync: 0,
+        replica: 3,
+        kind: FaultKind::Join,
+    }];
+    // identity up-wire (the coordinator hands the joiner global
+    // literals) and lossy up-wire (the worker's decoded snapshot is
+    // the joiner's view) are different code paths — pin both
+    for up in [OuterBits::Fp32, OuterBits::Int4] {
+        let fresh_ctl = || {
+            let mut ctl = DriveCtl::fresh(M);
+            ctl.live[3] = false;
+            ctl.events = events.clone();
+            ctl
+        };
+        let (oracle, octl) = ctl_run(up, OuterBits::Fp32, 1, 0, fresh_ctl());
+        assert_eq!(octl.journal.count(EventKind::Join), 1, "{up:?}");
+        assert!(octl.live.iter().all(|&l| l), "{up:?}: everyone live at the end");
+        assert_eq!(oracle.step_losses.len(), TOTAL, "{up:?}");
+
+        // the joiner ends on the same flushed global as everyone else
+        assert_eq!(oracle.finals[3], oracle.finals[0], "{up:?}: joiner converged");
+
+        // joining must change the reduce (4 contributors instead of 3)
+        let mut three = DriveCtl::fresh(M);
+        three.live[3] = false;
+        let (without, _) = ctl_run(up, OuterBits::Fp32, 1, 0, three);
+        assert_ne!(
+            oracle.global_bits, without.global_bits,
+            "{up:?}: the joiner must actually contribute"
+        );
+
+        // scheduling independence with a dark slot + a join in play
+        for workers in [2usize, 4] {
+            let (par, _) = ctl_run(up, OuterBits::Fp32, workers, 0, fresh_ctl());
+            assert_eq!(par, oracle, "{up:?} w={workers}");
+        }
+    }
+}

@@ -144,7 +144,7 @@ fn prop_flat_bus_matches_scalar_oracle() {
                 let p = case.fragments;
                 let delta = scalar_ref::outer_gradient(&oracle_global, reps);
                 oracle.step_subset(&mut oracle_global, &delta, |leaf| {
-                    frag.map_or(true, |f| leaf % p == f)
+                    frag.is_none_or(|f| leaf % p == f)
                 });
 
                 // bit-for-bit: same element-wise operation order

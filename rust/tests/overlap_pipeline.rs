@@ -33,6 +33,8 @@ use diloco::runtime::{FlatLayout, HostTensor};
 
 struct ToyEngine {
     n: usize,
+    /// Inject a failure at (replica, step) to test error propagation.
+    fail_at: Option<(usize, usize)>,
 }
 
 impl InnerEngine for ToyEngine {
@@ -42,6 +44,9 @@ impl InnerEngine for ToyEngine {
         replica: &mut ReplicaState,
         t: usize,
     ) -> anyhow::Result<f64> {
+        if self.fail_at == Some((rep, t)) {
+            anyhow::bail!("injected failure at replica {rep}, step {t}");
+        }
         let toks = replica.shard.next_batch(2, 8);
         let mut loss = 0.0f64;
         for leaf in 0..self.n {
@@ -148,7 +153,7 @@ fn finals_of(l: &FlatLayout, replicas: &[ReplicaState]) -> Vec<Vec<Vec<f32>>> {
 /// The schedule through the real pipeline (`coordinator::pool::drive`).
 fn pipeline_run(up: OuterBits, down: OuterBits, m: usize, workers: usize, tau: usize) -> RunTrace {
     let l = layout();
-    let engine = ToyEngine { n: l.n_leaves() };
+    let engine = ToyEngine { n: l.n_leaves(), fail_at: None };
     let mut replicas = fresh_replicas(&l, m);
     let mut sync = fresh_sync(&l, up, down, FRAGMENTS);
     let plan = DrivePlan {
@@ -181,7 +186,7 @@ fn pipeline_run(up: OuterBits, down: OuterBits, m: usize, workers: usize, tau: u
 /// sync's global and boundary evals the fresh one.
 fn barrier_oracle(up: OuterBits, down: OuterBits, m: usize) -> RunTrace {
     let l = layout();
-    let engine = ToyEngine { n: l.n_leaves() };
+    let engine = ToyEngine { n: l.n_leaves(), fail_at: None };
     let mut replicas = fresh_replicas(&l, m);
     let mut sync = fresh_sync(&l, up, down, FRAGMENTS);
     let link = sync.link();
@@ -350,7 +355,7 @@ fn overlap_delays_merges_without_changing_sync_totals() {
     // still see the INITIAL global (the sync is in flight, no replica
     // has it), while the barrier run already sees sync(6)'s result.
     let l = layout();
-    let engine = ToyEngine { n: l.n_leaves() };
+    let engine = ToyEngine { n: l.n_leaves(), fail_at: None };
     let at_init = engine.eval(&init_lits(&l)).unwrap();
     assert_eq!(overlap.eval_curve[0], (3, at_init), "pre-sync eval sees init");
     assert_eq!(overlap.eval_curve[1].0, 6);
@@ -373,7 +378,7 @@ fn end_of_training_drains_the_in_flight_fragment() {
     // clamps to 26, so the drain must merge it, then flush — 5 syncs,
     // and every replica ends on the shared final global literals.
     let l = layout();
-    let engine = ToyEngine { n: l.n_leaves() };
+    let engine = ToyEngine { n: l.n_leaves(), fail_at: None };
     let mut replicas = fresh_replicas(&l, 4);
     let mut sync = fresh_sync(&l, OuterBits::Fp32, OuterBits::Fp32, FRAGMENTS);
     let plan = DrivePlan {
@@ -402,7 +407,7 @@ fn end_of_training_drains_the_in_flight_fragment() {
 #[test]
 fn merge_ordering_guards_fail_loud() {
     let l = layout();
-    let engine = ToyEngine { n: l.n_leaves() };
+    let engine = ToyEngine { n: l.n_leaves(), fail_at: None };
     // τ without an outer sync: nothing exists to delay
     let mut replicas = fresh_replicas(&l, 2);
     let plan = DrivePlan {
@@ -448,4 +453,45 @@ fn merge_ordering_guards_fail_loud() {
         sync.sync(&[&theta[..], &theta[..]], None).is_err(),
         "un-taken broadcast payload must refuse the next sync"
     );
+}
+
+// ---- (5) worker failure with a sync in flight ------------------------
+
+#[test]
+fn worker_failure_with_sync_in_flight_propagates_without_hanging() {
+    // τ=3: the failure at step 8 lands after the send at 6 and before
+    // its merge at 9 — a sync is in flight when replica 1 dies. The
+    // drive must return a clean Err (no hang on the abandoned merge),
+    // name the injected failure, and hand every replica state back,
+    // at any worker count.
+    let l = layout();
+    let engine = ToyEngine {
+        n: l.n_leaves(),
+        fail_at: Some((1, 8)),
+    };
+    for workers in [1usize, 2, 4] {
+        let mut replicas = fresh_replicas(&l, 4);
+        let mut sync = fresh_sync(&l, OuterBits::Fp32, OuterBits::Fp32, FRAGMENTS);
+        let plan = DrivePlan {
+            total_steps: TOTAL,
+            sync_interval: INTERVAL,
+            fragments: FRAGMENTS,
+            n_params: l.n_leaves(),
+            eval_every: None,
+            log_every: 1000,
+            workers,
+            overlap_tau: 3,
+        };
+        let err = drive(&engine, &mut replicas, Some(&mut sync), &plan)
+            .expect_err("injected failure must propagate with a sync in flight");
+        assert!(
+            format!("{err:#}").contains("injected failure"),
+            "workers={workers}: {err:#}"
+        );
+        assert_eq!(
+            replicas.len(),
+            4,
+            "workers={workers}: replica states must be handed back"
+        );
+    }
 }

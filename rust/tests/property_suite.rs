@@ -170,6 +170,7 @@ fn prop_walltime_diloco_comm_monotone_in_h_and_bandwidth() {
                     outer_bits: diloco::netsim::walltime::BITS_PER_PARAM,
                     outer_bits_down: diloco::netsim::walltime::BITS_PER_PARAM,
                     overlap_tau: 0.0,
+                    churn: None,
                 })
             };
             // comm decreases as H grows

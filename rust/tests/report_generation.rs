@@ -45,6 +45,8 @@ fn fake_metrics(model: &str, algo: &str, n: usize, loss: f64, batch: usize, lr: 
         outer_bits_down: 32,
         wire_up_bytes: if h > 0 { (100 / h) as u64 * n as u64 * 4 } else { 0 },
         wire_down_bytes: if h > 0 { (100 / h) as u64 * n as u64 * 4 } else { 0 },
+        churn: String::new(),
+        dropout_rate: 0.0,
     }
 }
 
@@ -85,6 +87,19 @@ fn synthetic_store(dir: &Path) -> SweepStore {
         store.insert(&format!("fakes{id}"), &m).unwrap();
         id += 1;
     }
+    // churn-grid entries: fault plans at matched hypers (the empty
+    // plan is the churn-free baseline the deltas anchor on)
+    for (spec, rate) in [
+        ("", 0.0f64),
+        ("rate=0.1", 0.125),
+        ("crash@2:r1,join@4:r4", 0.08),
+    ] {
+        let mut m = fake_metrics("m0", "diloco-m4", 26264, 4.02 + 0.5 * rate, 1024, 6e-3, 0.6, 30);
+        m.churn = spec.into();
+        m.dropout_rate = rate;
+        store.insert(&format!("fakec{id}"), &m).unwrap();
+        id += 1;
+    }
     store
 }
 
@@ -110,7 +125,7 @@ fn generators_reflect_store_contents() {
 
     let t4 = generate("table4", &store, &repo, 8).unwrap();
     assert!(t4.contains("m0") && t4.contains("m2"), "{t4}");
-    assert!(t4.contains("%"), "percent diffs present");
+    assert!(t4.contains('%'), "percent diffs present");
 
     let t7 = generate("table7", &store, &repo, 8).unwrap();
     // our fitted alpha on the synthetic store is ~-0.095
@@ -134,6 +149,13 @@ fn generators_reflect_store_contents() {
     assert!(stream.contains("baseline"), "{stream}");
     assert!(stream.contains("| 2 | 7 |"), "deep-τ row present: {stream}");
     assert!(stream.contains("Walltime vs τ"), "{stream}");
+
+    // churn report: the churn-free row anchors the loss-vs-dropout
+    // deltas, and the analytic straggler section always renders
+    let churn = generate("churn", &store, &repo, 8).unwrap();
+    assert!(churn.contains("baseline"), "{churn}");
+    assert!(churn.contains("rate=0.1"), "{churn}");
+    assert!(churn.contains("Straggler cost"), "{churn}");
 
     std::fs::remove_dir_all(&dir).ok();
 }
