@@ -17,6 +17,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use diloco::comm::codec::BLOCK;
 use diloco::comm::{
     codec_for, Channel, CommLink, Direction, DownWire, OuterBits, ReplicaComm, WorkerComm,
 };
@@ -34,6 +35,7 @@ use diloco::runtime::{
 };
 use diloco::util::bench::{diff_reports, print_diff, Bencher};
 use diloco::util::json::Json;
+use diloco::util::par;
 use diloco::util::rng::Rng;
 
 /// The manifest leaf shapes of a mini-ladder rung (mirrors
@@ -70,6 +72,7 @@ fn randn_params(layout: &Arc<FlatLayout>, seed: u64) -> FlatParams {
 /// Flat-bus outer sync + broadcast cases for one ladder rung.
 fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
     let n = layout.n_leaves();
+    let n_elems = layout.total();
     let pristine = randn_params(layout, 7);
     let host: Vec<HostTensor> = pristine.to_host();
 
@@ -86,7 +89,11 @@ fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
         });
     }
 
-    // -- flat bus, preallocated arenas (M in {2, 8}) --
+    // -- flat bus, preallocated arenas (M in {2, 8}), sharded over the
+    // host's cores exactly like `OuterSync::sync` does (block-aligned
+    // deterministic ownership — bit-identical to the sequential walk,
+    // pinned by coordinator::outer_opt tests) --
+    let threads = std::thread::available_parallelism().map_or(1, |t| t.get());
     for m in [2usize, 8] {
         let replicas: Vec<FlatParams> = (1..=m as u64)
             .map(|s| randn_params(layout, 100 + s))
@@ -94,20 +101,34 @@ fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
         let mut global = pristine.clone();
         let mut acc = FlatParams::zeros(layout);
         let full = layout.full_range();
+        let shards = par::shard_ranges(&full, threads, BLOCK);
         let mut opt = OuterOpt::new(0.8, 0.9);
-        b.run(&format!("{label}/outer sync: delta + Nesterov (M={m})"), || {
-            // reset global (the scalar case pays an analogous clone)
-            global.data_mut().copy_from_slice(pristine.data());
-            for r in &full {
-                acc.data_mut()[r.clone()].fill(0.0);
-            }
-            for rep in &replicas {
-                acc_add(acc.data_mut(), rep.data());
-            }
-            acc_finish(acc.data_mut(), pristine.data(), m as f32);
-            opt.step_ranges(&mut global, &acc, &full);
-            global.data()[0]
-        });
+        // bytes per iteration: the global reset (read + write), the
+        // fused zero/add/finish reduce (M payload reads + acc traffic),
+        // and the Nesterov step (theta + velocity read/write)
+        let bytes = 4 * n_elems as u64 * (2 + 1 + 3 * m as u64 + 3 + 5);
+        b.run_throughput(
+            &format!("{label}/outer sync: delta + Nesterov (M={m})"),
+            bytes,
+            (n_elems * m) as u64,
+            || {
+                // reset global (the scalar case pays an analogous clone)
+                global.data_mut().copy_from_slice(pristine.data());
+                let accs = par::split_pieces(acc.data_mut(), &shards);
+                let items: Vec<_> = shards.iter().zip(accs).collect();
+                par::map_shards(items, |_, (pieces, accs)| {
+                    for (p, acc) in pieces.iter().zip(accs) {
+                        acc.fill(0.0);
+                        for rep in &replicas {
+                            acc_add(&mut acc[..], &rep.data()[p.range.clone()]);
+                        }
+                        acc_finish(acc, &pristine.data()[p.range.clone()], m as f32);
+                    }
+                });
+                opt.step_pieces(&mut global, &acc, &shards);
+                global.data()[0]
+            },
+        );
     }
 
     // -- streaming fragment (P=4): one fragment's ranges only --
@@ -217,17 +238,30 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
             ("down_bytes_per_sync", Json::int(bytes as i128)),
             ("fp32_bytes", Json::int(fp32_bytes as i128)),
         ]));
+        // bytes moved per pass: the f32 arena on one side of the codec
+        // plus the wire bytes on the other
+        let moved = (4 * n + bytes) as u64;
         let mut wire = Vec::with_capacity(bytes);
-        b.run(&format!("{label}/comm encode {} (full arena)", bits.label()), || {
-            wire.clear();
-            codec.encode(pristine.data(), 0xC0DE, &mut wire);
-            wire.len()
-        });
+        b.run_throughput(
+            &format!("{label}/comm encode {} (full arena)", bits.label()),
+            moved,
+            n as u64,
+            || {
+                wire.clear();
+                codec.encode(pristine.data(), 0xC0DE, &mut wire);
+                wire.len()
+            },
+        );
         let mut dst = vec![0.0f32; n];
-        b.run(&format!("{label}/comm decode {} (full arena)", bits.label()), || {
-            codec.decode(&wire, &mut dst).unwrap();
-            dst[0]
-        });
+        b.run_throughput(
+            &format!("{label}/comm decode {} (full arena)", bits.label()),
+            moved,
+            n as u64,
+            || {
+                codec.decode(&wire, &mut dst).unwrap();
+                dst[0]
+            },
+        );
     }
     b.extra(
         &format!("wire_bytes_{label}"),
@@ -243,10 +277,13 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
             Channel::new(Arc::clone(layout), codec_for(bits), 1, 0xD0, Direction::Down),
             pristine.data(),
         );
+        let wire_len = codec_for(bits).wire_bytes(n);
         let mut round = 0u64;
         let mut last: Vec<u8> = Vec::new();
-        b.run(
+        b.run_throughput(
             &format!("{label}/broadcast encode {} (EF, full arena)", bits.label()),
+            (4 * n + wire_len) as u64,
+            n as u64,
             || {
                 last = dw.encode_broadcast(target.data(), None, round).unwrap();
                 round += 1;
@@ -263,8 +300,10 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
             .collect();
         let mut wc = WorkerComm::default();
         link.init_snapshot(&mut wc, &init_lits).expect("bench snapshot");
-        b.run(
+        b.run_throughput(
             &format!("{label}/broadcast decode {} (snap + literals)", bits.label()),
+            (4 * n + wire_len) as u64,
+            n as u64,
             || link.adopt_encoded(&mut wc, None, &last).unwrap().len(),
         );
     }
@@ -278,10 +317,12 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
         let init_lits: Vec<Arc<xla::Literal>> = (0..n_leaves)
             .map(|l| Arc::new(pristine.leaf_literal(l).unwrap()))
             .collect();
+        let threads = std::thread::available_parallelism().map_or(1, |t| t.get());
         let mut sync = OuterSync::new(Arc::clone(layout), &host, init_lits.clone(), 0.8, 0.9, 1)
             .expect("comm bench sync setup")
             .with_codec(codec_for(OuterBits::Int4), 0xBE)
-            .with_down_codec(codec_for(OuterBits::Int4));
+            .with_down_codec(codec_for(OuterBits::Int4))
+            .with_sync_threads(threads);
         let link = sync.link();
         let rep_lits: Vec<Vec<Arc<xla::Literal>>> = (1..=2u64)
             .map(|s| {
@@ -312,6 +353,16 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
             // worker side of the broadcast: decode into the snapshot
             let bytes = sync.take_broadcast_bytes().expect("lossy down broadcast");
             link.adopt_encoded(&mut wc, None, &bytes).unwrap();
+            // steady state: spent payloads feed the next round's encodes
+            // (one to the coordinator's broadcast pool, the rest back to
+            // the worker) — the drive loop does exactly this
+            let mut payloads = payloads.into_iter();
+            if let Some(p) = payloads.next() {
+                sync.recycle_wire(p);
+            }
+            for p in payloads {
+                wc.recycle(p);
+            }
             round += 1;
             sync.wire_stats().total()
         });
@@ -765,6 +816,60 @@ fn main() -> anyhow::Result<()> {
     let title = "hot path (L3 coordinator: PJRT inner step + pool inner loop + flat-bus outer sync)";
     b.report(title);
     report_pool_speedups(&b);
+
+    // before/after throughput table over the codec + reduce cases (the
+    // rows that declared bytes/elems): new-rate rows always, old median
+    // and speedup columns when an old report was given via `--diff`.
+    // Attached to BENCH_hot_path.json as `throughput_table`.
+    {
+        let old_medians: std::collections::BTreeMap<String, u64> = match &old_report {
+            Some((_, old)) => old
+                .arr_of("results")?
+                .iter()
+                .filter_map(|r| Some((r.str_of("name").ok()?, r.u64_of("median_ns").ok()?)))
+                .collect(),
+            None => Default::default(),
+        };
+        println!("\n== codec + reduce throughput (median) ==");
+        println!(
+            "{:<52} {:>9} {:>9} {:>10}",
+            "benchmark", "GiB/s", "Melem/s", "speedup"
+        );
+        let mut rows: Vec<Json> = Vec::new();
+        for r in b.results() {
+            let (Some(gib), Some(melem)) = (r.gib_per_s(), r.melem_per_s()) else {
+                continue;
+            };
+            let new_ns = r.median.as_nanos() as u64;
+            let mut fields = vec![
+                ("name", Json::str(&r.name)),
+                ("median_ns", Json::int(new_ns as i128)),
+                ("gib_per_s", Json::num(gib)),
+                ("melem_per_s", Json::num(melem)),
+            ];
+            let speedup = old_medians
+                .get(&r.name)
+                .filter(|&&o| o > 0 && new_ns > 0)
+                .map(|&o| o as f64 / new_ns as f64);
+            if let Some(x) = speedup {
+                fields.push(("old_median_ns", Json::int(old_medians[&r.name] as i128)));
+                fields.push(("speedup_x", Json::num(x)));
+            }
+            println!(
+                "{:<52} {:>9.2} {:>9.1} {:>10}",
+                r.name,
+                gib,
+                melem,
+                match speedup {
+                    Some(x) => format!("{x:.2}x"),
+                    None => "-".into(),
+                }
+            );
+            rows.push(Json::obj(fields));
+        }
+        b.extra("throughput_table", Json::arr(rows.into_iter()));
+    }
+
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hot_path.json");
     b.write_json(&out, title)?;
     println!("\nwrote {}", out.display());

@@ -20,6 +20,7 @@ USAGE:
                  [--lr 6e-3] [--eta 0.8] [--budget TOKENS] [--overtrain X]
                  [--seed N] [--eval-every K] [--downstream] [--fragments P]
                  [--workers W]   # replica-parallel inner loop; 1 = sequential
+                 [--sync-threads N]  # coordinator reduce/outer-step threads (0 = match --workers); bit-identical at any N
                  [--overlap-tau T]  # delayed application: merge a fragment's broadcast T steps after its send (0 = barrier; requires T < H/P)
                  [--outer-bits 32|16|8|4]       # up-wire width: outer gradients (32 = exact fp32)
                  [--outer-bits-down 32|16|8|4]  # down-wire width: global broadcast (32 = literal handoff)
@@ -35,6 +36,7 @@ USAGE:
   diloco simulate utilization|walltime [--out reports/]
   diloco bench-diff OLD.json NEW.json [--max-regress-pct P]
                                     # per-case deltas between BENCH_*.json
+                 [--tight-cases SUB,SUB] [--tight-pct P]  # stricter cap for cases whose name contains any SUB
 
 Artifacts must exist (make artifacts) for train/sweep.";
 
@@ -109,6 +111,9 @@ fn run_config_from_args(args: &Args) -> Result<RunConfig> {
     if let Some(w) = args.get("workers") {
         cfg.workers = w.parse().context("--workers")?;
     }
+    if let Some(n) = args.get("sync-threads") {
+        cfg.sync_threads = n.parse().context("--sync-threads")?;
+    }
     if let Some(ob) = args.get("outer-bits") {
         cfg.outer_bits = crate::comm::OuterBits::parse(&ob).context("--outer-bits")?;
     }
@@ -126,11 +131,17 @@ fn run_config_from_args(args: &Args) -> Result<RunConfig> {
 /// Diff two machine-readable bench reports (`BENCH_*.json`) and print
 /// per-case deltas; with `--max-regress-pct P` exit non-zero when any
 /// case slowed down by more than P percent (CI regression gate).
+/// `--tight-cases SUB,SUB --tight-pct Q` applies the stricter cap Q to
+/// cases whose name contains any comma-separated substring — the hot
+/// codec/reduce kernels hold a tighter line than end-to-end drives.
 fn cmd_bench_diff(args: &Args) -> Result<()> {
     use crate::util::bench::{diff_reports, print_diff};
     use crate::util::json::Json;
     if args.positional.len() != 2 {
-        bail!("usage: diloco bench-diff OLD.json NEW.json [--max-regress-pct P]");
+        bail!(
+            "usage: diloco bench-diff OLD.json NEW.json [--max-regress-pct P] \
+             [--tight-cases SUB,SUB --tight-pct P]"
+        );
     }
     let old = Json::parse_file(std::path::Path::new(&args.positional[0]))?;
     let new = Json::parse_file(std::path::Path::new(&args.positional[1]))?;
@@ -144,6 +155,24 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
             .fold(0.0f64, f64::max);
         if worst > cap {
             bail!("bench regression {worst:.1}% exceeds --max-regress-pct {cap}%");
+        }
+    }
+    if let Some(subs) = args.get("tight-cases") {
+        let cap: f64 = args
+            .get("tight-pct")
+            .ok_or_else(|| anyhow::anyhow!("--tight-cases requires --tight-pct"))?
+            .parse()
+            .context("--tight-pct")?;
+        let subs: Vec<&str> = subs.split(',').filter(|s| !s.is_empty()).collect();
+        for d in &deltas {
+            let Some(pct) = d.delta_pct() else { continue };
+            if pct > cap && subs.iter().any(|s| d.name.contains(s)) {
+                bail!(
+                    "bench regression {pct:.1}% on tight case {:?} exceeds \
+                     --tight-pct {cap}%",
+                    d.name
+                );
+            }
         }
     }
     Ok(())

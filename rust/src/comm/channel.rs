@@ -39,9 +39,10 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::runtime::FlatLayout;
+use crate::util::par::{self, Piece};
 use crate::util::rng::splitmix64;
 
-use super::codec::Codec;
+use super::codec::{Codec, BLOCK};
 
 /// Which leg of the comm plane a channel drives. Enters the encode-seed
 /// derivation so the two directions draw disjoint rounding streams.
@@ -153,13 +154,28 @@ impl Channel {
         sync_index: u64,
         stream: u64,
     ) -> Vec<u8> {
-        let ranges = self.ranges(frag);
-        let mut out = Vec::with_capacity(self.payload_bytes(frag));
-        for r in &ranges {
-            let seed = self.seed_for(sync_index, stream, r.start);
-            self.codec.encode(&src[r.clone()], seed, &mut out);
-        }
+        let mut out = Vec::new();
+        self.encode_raw_into(src, frag, sync_index, stream, &mut out);
         out
+    }
+
+    /// [`Channel::encode_raw`] into a caller-owned (typically recycled)
+    /// buffer: one exact-size reservation per payload, no per-range
+    /// growth.
+    pub fn encode_raw_into(
+        &self,
+        src: &[f32],
+        frag: Option<usize>,
+        sync_index: u64,
+        stream: u64,
+        out: &mut Vec<u8>,
+    ) {
+        out.clear();
+        out.reserve(self.payload_bytes(frag));
+        for r in &self.ranges(frag) {
+            let seed = self.seed_for(sync_index, stream, r.start);
+            self.codec.encode(&src[r.clone()], seed, out);
+        }
     }
 
     /// Error-feedback encode of the due ranges. On entry `staging`
@@ -175,23 +191,75 @@ impl Channel {
         sync_index: u64,
         stream: u64,
     ) -> Result<Vec<u8>> {
-        let ranges = self.ranges(frag);
-        let mut out = Vec::with_capacity(self.payload_bytes(frag));
-        for r in &ranges {
-            for i in r.clone() {
-                staging[i] += residual[i];
-                // residual temporarily holds x until dq(x) lands below
-                residual[i] = staging[i];
-            }
-            let seed = self.seed_for(sync_index, stream, r.start);
-            let before = out.len();
-            self.codec.encode(&staging[r.clone()], seed, &mut out);
-            self.codec.decode(&out[before..], &mut staging[r.clone()])?;
-            for i in r.clone() {
-                residual[i] -= staging[i];
-            }
-        }
+        let mut out = Vec::new();
+        self.encode_ef_into(staging, residual, frag, sync_index, stream, 1, &mut out)?;
         Ok(out)
+    }
+
+    /// [`Channel::encode_ef`] into a caller-owned buffer, sharded over
+    /// up to `threads` scoped threads. The due ranges are cut into
+    /// block-aligned pieces with deterministic ownership
+    /// (`util::par::shard_ranges`); each piece runs the full EF
+    /// sequence (carry-in, encode, decode-back, carry-out) on one
+    /// thread, with stochastic-rounding children drawn per absolute
+    /// block ([`Codec::encode_at`]) — so the payload bytes and both
+    /// arenas are byte/bit-identical at any thread count (pinned by
+    /// `tests/comm_codec.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_ef_into(
+        &self,
+        staging: &mut [f32],
+        residual: &mut [f32],
+        frag: Option<usize>,
+        sync_index: u64,
+        stream: u64,
+        threads: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        let ranges = self.ranges(frag);
+        out.clear();
+        out.resize(self.payload_bytes(frag), 0);
+        // wire offset of each source range within the payload
+        let mut range_off = Vec::with_capacity(ranges.len());
+        let mut off = 0usize;
+        for r in &ranges {
+            range_off.push(off);
+            off += self.codec.wire_bytes(r.len());
+        }
+        let shards = par::shard_ranges(&ranges, threads, BLOCK);
+        let wires = split_wire(out, &shards, &ranges, &range_off, self.codec.as_ref());
+        let stages = par::split_pieces(staging, &shards);
+        let resids = par::split_pieces(residual, &shards);
+        let items: Vec<_> = shards
+            .iter()
+            .zip(wires)
+            .zip(stages)
+            .zip(resids)
+            .map(|(((pieces, w), s), r)| (pieces, w, s, r))
+            .collect();
+        let ranges = &ranges;
+        par::map_shards(items, |_, (pieces, wires, stages, resids)| -> Result<()> {
+            for (((p, wire), stage), resid) in
+                pieces.iter().zip(wires).zip(stages).zip(resids)
+            {
+                let src = &ranges[p.src];
+                let seed = self.seed_for(sync_index, stream, src.start);
+                let block_off = ((p.range.start - src.start) / BLOCK) as u64;
+                for (s, r) in stage.iter_mut().zip(resid.iter_mut()) {
+                    *s += *r;
+                    // residual temporarily holds x until dq(x) lands
+                    *r = *s;
+                }
+                self.codec.encode_at(stage, seed, block_off, &mut wire[..]);
+                self.codec.decode(&wire[..], &mut stage[..])?;
+                for (r, s) in resid.iter_mut().zip(stage.iter()) {
+                    *r -= *s;
+                }
+            }
+            Ok(())
+        })
+        .into_iter()
+        .collect::<Result<()>>()
     }
 
     /// Decode one payload of this leg into `dst` over the due ranges
@@ -214,6 +282,39 @@ impl Channel {
         }
         Ok(())
     }
+}
+
+/// Split a payload buffer into per-shard, per-piece wire views
+/// mirroring an element sharding. A piece's wire slice starts at its
+/// source range's payload offset plus the encoded size of the
+/// elements before it — exact because pieces start block-aligned, so
+/// `wire_bytes` is additive at every cut; its length is
+/// `wire_bytes(piece.len())` (only the last piece of a range can
+/// carry the ragged tail).
+fn split_wire<'a>(
+    wire: &'a mut [u8],
+    shards: &[Vec<Piece>],
+    ranges: &[Range<usize>],
+    range_off: &[usize],
+    codec: &dyn Codec,
+) -> Vec<Vec<&'a mut [u8]>> {
+    let mut rest = wire;
+    let mut base = 0usize;
+    let mut out = Vec::with_capacity(shards.len());
+    for shard in shards {
+        let mut views = Vec::with_capacity(shard.len());
+        for p in shard {
+            let start = range_off[p.src] + codec.wire_bytes(p.range.start - ranges[p.src].start);
+            let len = codec.wire_bytes(p.len());
+            let tail = std::mem::take(&mut rest);
+            let (seg, tail) = tail[start - base..].split_at_mut(len);
+            views.push(seg);
+            rest = tail;
+            base = start + len;
+        }
+        out.push(views);
+    }
+    out
 }
 
 /// The coordinator-owned state of the down-wire: the replicas' current
@@ -299,21 +400,44 @@ impl DownWire {
         frag: Option<usize>,
         sync_index: u64,
     ) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.encode_broadcast_into(global, frag, sync_index, 1, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`DownWire::encode_broadcast`] into a caller-owned (typically
+    /// recycled) buffer, with the EF encode sharded over up to
+    /// `threads` scoped threads ([`Channel::encode_ef_into`]) —
+    /// byte-identical at any thread count.
+    pub fn encode_broadcast_into(
+        &mut self,
+        global: &[f32],
+        frag: Option<usize>,
+        sync_index: u64,
+        threads: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
         let ranges = self.chan.ranges(frag);
         for r in &ranges {
             for i in r.clone() {
                 self.staging[i] = global[i] - self.view[i];
             }
         }
-        let bytes = self
-            .chan
-            .encode_ef(&mut self.staging, &mut self.residual, frag, sync_index, 0)?;
+        self.chan.encode_ef_into(
+            &mut self.staging,
+            &mut self.residual,
+            frag,
+            sync_index,
+            0,
+            threads,
+            out,
+        )?;
         for r in &ranges {
             for i in r.clone() {
                 self.view[i] += self.staging[i];
             }
         }
-        Ok(bytes)
+        Ok(())
     }
 }
 
@@ -388,6 +512,43 @@ mod tests {
                 (delta[i] - (dq[i] + residual[i])).abs() < 1e-6,
                 "x = dq + residual must reconstruct the delta at {i}"
             );
+        }
+    }
+
+    #[test]
+    fn encode_ef_into_is_thread_count_invariant() {
+        // multi-block leaves so the shard cutter actually cuts
+        let layout = Arc::new(FlatLayout::new(vec![vec![700], vec![300, 2], vec![513]]));
+        let total = layout.total();
+        let delta: Vec<f32> = (0..total).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let resid0: Vec<f32> = (0..total).map(|i| (i as f32 * 0.001) - 0.9).collect();
+        for bits in OuterBits::ALL {
+            let c = Channel::new(layout.clone(), codec_for(bits), 2, 11, Direction::Up);
+            let mut base_wire = Vec::new();
+            let mut base_stage = delta.clone();
+            let mut base_resid = resid0.clone();
+            c.encode_ef_into(&mut base_stage, &mut base_resid, Some(1), 4, 2, 1, &mut base_wire)
+                .unwrap();
+            for threads in [2, 3, 8, 64] {
+                let mut wire = vec![0xAAu8; 5]; // dirty recycled buffer
+                let mut stage = delta.clone();
+                let mut resid = resid0.clone();
+                c.encode_ef_into(&mut stage, &mut resid, Some(1), 4, 2, threads, &mut wire)
+                    .unwrap();
+                assert_eq!(wire, base_wire, "{bits:?} threads={threads}");
+                for i in 0..total {
+                    assert_eq!(
+                        stage[i].to_bits(),
+                        base_stage[i].to_bits(),
+                        "{bits:?} threads={threads} staging[{i}]"
+                    );
+                    assert_eq!(
+                        resid[i].to_bits(),
+                        base_resid[i].to_bits(),
+                        "{bits:?} threads={threads} residual[{i}]"
+                    );
+                }
+            }
         }
     }
 

@@ -13,11 +13,25 @@
 //!   (`max|x| / qmax`) followed by packed signed codes, rounded
 //!   *stochastically* so the quantizer is unbiased (`E[decode] = x`).
 //!
+//! # Kernel shape
+//!
+//! All codecs run as fixed-width block kernels: the int8/int4 dispatch
+//! is hoisted out of the element loop, the stochastic-rounding draws
+//! are batched per block (one pass fills the draw buffer, a second
+//! branch-free pass quantizes), and scale search / pack / unpack are
+//! slice-at-a-time passes over `zip`ped exact chunks that the
+//! autovectorizer handles. [`Codec::encode_at`] writes into a
+//! caller-sized buffer at an explicit absolute block offset, so a
+//! range can be encoded whole or in block-aligned pieces (in
+//! parallel) with byte-identical output; [`Codec::decode_add`] fuses
+//! dequantize with `+=` accumulation so the coordinator's reduce
+//! never materializes a per-replica f32 scratch buffer.
+//!
 //! # Determinism
 //!
 //! Stochastic rounding draws from a [`Rng`] derived **only** from the
-//! `seed` argument and the block index — never from global state, time,
-//! or call order. Callers derive `seed` from
+//! `seed` argument and the absolute block index — never from global
+//! state, time, or call order. Callers derive `seed` from
 //! `(run seed, sync index, replica id, range offset)` (see
 //! `comm::encoder`), so the same training run produces the same bytes
 //! at any worker count and on any schedule. Encoding the same slice
@@ -99,12 +113,32 @@ pub trait Codec: Send + Sync {
     /// (including per-block scales).
     fn wire_bytes(&self, n: usize) -> usize;
 
+    /// Encode `src` into `out`, which must be exactly
+    /// `wire_bytes(src.len())` bytes; every byte is written (buffers
+    /// may be recycled dirty). `block_off` is the absolute
+    /// quantization-block index of `src[0]` within its wire stream:
+    /// stochastic-rounding children are drawn per absolute block, so
+    /// a range encoded whole or in block-aligned pieces (possibly on
+    /// different threads) is byte-identical. Codecs without RNG
+    /// ignore `seed` and `block_off`.
+    fn encode_at(&self, src: &[f32], seed: u64, block_off: u64, out: &mut [u8]);
+
     /// Append the encoding of `src` to `out` — exactly
     /// `wire_bytes(src.len())` bytes, deterministic in `(src, seed)`.
-    fn encode(&self, src: &[f32], seed: u64, out: &mut Vec<u8>);
+    fn encode(&self, src: &[f32], seed: u64, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.resize(start + self.wire_bytes(src.len()), 0);
+        self.encode_at(src, seed, 0, &mut out[start..]);
+    }
 
     /// Decode exactly `wire_bytes(dst.len())` bytes into `dst`.
     fn decode(&self, wire: &[u8], dst: &mut [f32]) -> Result<()>;
+
+    /// Decode exactly `wire_bytes(dst.len())` bytes and **accumulate**
+    /// into `dst` (`dst[i] += dq[i]`): the fused decode→reduce
+    /// kernel. Bit-identical to decoding into a scratch buffer and
+    /// adding element-wise, without the scratch.
+    fn decode_add(&self, wire: &[u8], dst: &mut [f32]) -> Result<()>;
 }
 
 /// The codec for a bit width (one shared instance per run).
@@ -116,9 +150,33 @@ pub fn codec_for(bits: OuterBits) -> Arc<dyn Codec> {
     }
 }
 
+/// Monomorphized store: `ADD = false` overwrites, `ADD = true`
+/// accumulates. Inlined into the block kernels so neither variant
+/// carries a per-element branch.
+#[inline(always)]
+fn store<const ADD: bool>(d: &mut f32, v: f32) {
+    if ADD {
+        *d += v;
+    } else {
+        *d = v;
+    }
+}
+
 // ---- fp32: the identity oracle ---------------------------------------
 
 pub struct Fp32;
+
+impl Fp32 {
+    fn decode_impl<const ADD: bool>(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        if wire.len() != 4 * dst.len() {
+            bail!("fp32 decode: {} bytes for {} elements", wire.len(), dst.len());
+        }
+        for (chunk, d) in wire.chunks_exact(4).zip(dst.iter_mut()) {
+            store::<ADD>(d, f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(())
+    }
+}
 
 impl Codec for Fp32 {
     fn bits(&self) -> OuterBits {
@@ -129,21 +187,19 @@ impl Codec for Fp32 {
         4 * n
     }
 
-    fn encode(&self, src: &[f32], _seed: u64, out: &mut Vec<u8>) {
-        out.reserve(4 * src.len());
-        for &x in src {
-            out.extend_from_slice(&x.to_le_bytes());
+    fn encode_at(&self, src: &[f32], _seed: u64, _block_off: u64, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), 4 * src.len());
+        for (chunk, &x) in out.chunks_exact_mut(4).zip(src) {
+            chunk.copy_from_slice(&x.to_le_bytes());
         }
     }
 
     fn decode(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
-        if wire.len() != 4 * dst.len() {
-            bail!("fp32 decode: {} bytes for {} elements", wire.len(), dst.len());
-        }
-        for (chunk, d) in wire.chunks_exact(4).zip(dst.iter_mut()) {
-            *d = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
-        }
-        Ok(())
+        self.decode_impl::<false>(wire, dst)
+    }
+
+    fn decode_add(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        self.decode_impl::<true>(wire, dst)
     }
 }
 
@@ -165,6 +221,18 @@ fn bf16_to_f32(h: u16) -> f32 {
     f32::from_bits((h as u32) << 16)
 }
 
+impl Bf16Sim {
+    fn decode_impl<const ADD: bool>(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        if wire.len() != 2 * dst.len() {
+            bail!("bf16 decode: {} bytes for {} elements", wire.len(), dst.len());
+        }
+        for (chunk, d) in wire.chunks_exact(2).zip(dst.iter_mut()) {
+            store::<ADD>(d, bf16_to_f32(u16::from_le_bytes([chunk[0], chunk[1]])));
+        }
+        Ok(())
+    }
+}
+
 impl Codec for Bf16Sim {
     fn bits(&self) -> OuterBits {
         OuterBits::Bf16
@@ -174,21 +242,19 @@ impl Codec for Bf16Sim {
         2 * n
     }
 
-    fn encode(&self, src: &[f32], _seed: u64, out: &mut Vec<u8>) {
-        out.reserve(2 * src.len());
-        for &x in src {
-            out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+    fn encode_at(&self, src: &[f32], _seed: u64, _block_off: u64, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), 2 * src.len());
+        for (chunk, &x) in out.chunks_exact_mut(2).zip(src) {
+            chunk.copy_from_slice(&f32_to_bf16(x).to_le_bytes());
         }
     }
 
     fn decode(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
-        if wire.len() != 2 * dst.len() {
-            bail!("bf16 decode: {} bytes for {} elements", wire.len(), dst.len());
-        }
-        for (chunk, d) in wire.chunks_exact(2).zip(dst.iter_mut()) {
-            *d = bf16_to_f32(u16::from_le_bytes([chunk[0], chunk[1]]));
-        }
-        Ok(())
+        self.decode_impl::<false>(wire, dst)
+    }
+
+    fn decode_add(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        self.decode_impl::<true>(wire, dst)
     }
 }
 
@@ -196,6 +262,62 @@ impl Codec for Bf16Sim {
 
 pub struct IntQ {
     pub bits: OuterBits,
+}
+
+/// One stochastic rounding: `draw` is this element's pre-batched
+/// uniform. Division by `scale` (not reciprocal multiply), `clamp`,
+/// and `floor` reproduce the retired scalar quantizer bit for bit.
+#[inline(always)]
+fn quantize_one(x: f32, scale: f32, qmax: f32, draw: f64) -> i32 {
+    let y = (x / scale).clamp(-qmax, qmax);
+    let f = y.floor();
+    // unbiased stochastic rounding: round up w.p. frac
+    (f as i32) + (draw < (y - f) as f64) as i32
+}
+
+#[inline]
+fn encode_block_i8(block: &[f32], draws: &[f64], scale: f32, qmax: f32, codes: &mut [u8]) {
+    for ((o, &x), &d) in codes.iter_mut().zip(block).zip(draws) {
+        *o = quantize_one(x, scale, qmax, d) as i8 as u8;
+    }
+}
+
+/// int4: offset-binary nibbles (code + 8 in 1..=15), two per byte, low
+/// nibble first; odd tails pad the high nibble with 8 (code 0),
+/// ignored on decode.
+#[inline]
+fn encode_block_i4(block: &[f32], draws: &[f64], scale: f32, qmax: f32, codes: &mut [u8]) {
+    let n2 = block.len() / 2;
+    for ((o, p), d) in codes[..n2].iter_mut().zip(block.chunks_exact(2)).zip(draws.chunks_exact(2))
+    {
+        let lo = (quantize_one(p[0], scale, qmax, d[0]) + 8) as u8 & 0x0F;
+        let hi = (quantize_one(p[1], scale, qmax, d[1]) + 8) as u8 & 0x0F;
+        *o = lo | (hi << 4);
+    }
+    if block.len() % 2 == 1 {
+        let lo = (quantize_one(block[2 * n2], scale, qmax, draws[2 * n2]) + 8) as u8 & 0x0F;
+        codes[n2] = lo | 0x80;
+    }
+}
+
+#[inline]
+fn decode_block_i8<const ADD: bool>(codes: &[u8], scale: f32, block: &mut [f32]) {
+    for (d, &c) in block.iter_mut().zip(codes) {
+        store::<ADD>(d, (c as i8) as f32 * scale);
+    }
+}
+
+#[inline]
+fn decode_block_i4<const ADD: bool>(codes: &[u8], scale: f32, block: &mut [f32]) {
+    let n2 = block.len() / 2;
+    let (pairs, tail) = block.split_at_mut(n2 * 2);
+    for (pair, &byte) in pairs.chunks_exact_mut(2).zip(&codes[..n2]) {
+        store::<ADD>(&mut pair[0], ((byte & 0x0F) as i32 - 8) as f32 * scale);
+        store::<ADD>(&mut pair[1], ((byte >> 4) as i32 - 8) as f32 * scale);
+    }
+    if let Some(d) = tail.first_mut() {
+        store::<ADD>(d, ((codes[n2] & 0x0F) as i32 - 8) as f32 * scale);
+    }
 }
 
 impl IntQ {
@@ -215,6 +337,33 @@ impl IntQ {
             _ => (n + 1) / 2,
         }
     }
+
+    fn decode_impl<const ADD: bool>(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        if wire.len() != self.wire_bytes(dst.len()) {
+            bail!(
+                "{} decode: {} bytes for {} elements (expected {})",
+                self.bits.label(),
+                wire.len(),
+                dst.len(),
+                self.wire_bytes(dst.len())
+            );
+        }
+        let int8 = self.bits == OuterBits::Int8;
+        let mut off = 0usize;
+        for block in dst.chunks_mut(BLOCK) {
+            let cb = self.code_bytes(block.len());
+            let scale =
+                f32::from_le_bytes([wire[off], wire[off + 1], wire[off + 2], wire[off + 3]]);
+            let codes = &wire[off + 4..off + 4 + cb];
+            off += 4 + cb;
+            if int8 {
+                decode_block_i8::<ADD>(codes, scale, block);
+            } else {
+                decode_block_i4::<ADD>(codes, scale, block);
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Codec for IntQ {
@@ -232,87 +381,49 @@ impl Codec for IntQ {
         bytes
     }
 
-    fn encode(&self, src: &[f32], seed: u64, out: &mut Vec<u8>) {
-        out.reserve(self.wire_bytes(src.len()));
+    fn encode_at(&self, src: &[f32], seed: u64, block_off: u64, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), self.wire_bytes(src.len()));
         let qmax = self.qmax();
+        let int8 = self.bits == OuterBits::Int8;
         let root = Rng::new(seed);
+        let mut draws = [0.0f64; BLOCK];
+        let mut o = 0usize;
         for (bi, block) in src.chunks(BLOCK).enumerate() {
+            let cb = self.code_bytes(block.len());
+            // slice-at-a-time scale search
             let maxabs = block.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
             let scale = if maxabs > 0.0 { maxabs / qmax } else { 0.0 };
-            out.extend_from_slice(&scale.to_le_bytes());
+            out[o..o + 4].copy_from_slice(&scale.to_le_bytes());
+            let codes = &mut out[o + 4..o + 4 + cb];
+            o += 4 + cb;
             if scale == 0.0 {
-                // all-zero block: zero codes, no rng draws
-                out.extend(std::iter::repeat(0u8).take(self.code_bytes(block.len())));
+                // all-zero block: zero codes, no rng draws (explicit
+                // writes — the buffer may be recycled dirty)
+                codes.fill(0);
                 continue;
             }
-            // per-block child stream: byte output is independent of
-            // how the caller splits ranges into blocks upstream
-            let mut rng = root.child(bi as u64);
-            let mut quantize = |x: f32| -> i32 {
-                let y = (x / scale).clamp(-qmax, qmax);
-                let f = y.floor();
-                let frac = (y - f) as f64;
-                // unbiased stochastic rounding: round up w.p. frac
-                let up = rng.f64() < frac;
-                (f as i32) + if up { 1 } else { 0 }
-            };
-            match self.bits {
-                OuterBits::Int8 => {
-                    for &x in block {
-                        out.push(quantize(x) as i8 as u8);
-                    }
-                }
-                _ => {
-                    // int4: offset-binary nibbles (code + 8 in 1..=15),
-                    // two per byte, low nibble first; odd tails pad the
-                    // high nibble with 8 (code 0), ignored on decode
-                    for pair in block.chunks(2) {
-                        let lo = (quantize(pair[0]) + 8) as u8 & 0x0F;
-                        let hi = if pair.len() == 2 {
-                            (quantize(pair[1]) + 8) as u8 & 0x0F
-                        } else {
-                            8
-                        };
-                        out.push(lo | (hi << 4));
-                    }
-                }
+            // per-absolute-block child stream: byte output is
+            // independent of how the caller splits ranges into
+            // block-aligned pieces upstream
+            let mut rng = root.child(block_off + bi as u64);
+            let draws = &mut draws[..block.len()];
+            for d in draws.iter_mut() {
+                *d = rng.f64();
+            }
+            if int8 {
+                encode_block_i8(block, draws, scale, qmax, codes);
+            } else {
+                encode_block_i4(block, draws, scale, qmax, codes);
             }
         }
     }
 
     fn decode(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
-        if wire.len() != self.wire_bytes(dst.len()) {
-            bail!(
-                "{} decode: {} bytes for {} elements (expected {})",
-                self.bits.label(),
-                wire.len(),
-                dst.len(),
-                self.wire_bytes(dst.len())
-            );
-        }
-        let mut off = 0usize;
-        for block in dst.chunks_mut(BLOCK) {
-            let scale =
-                f32::from_le_bytes([wire[off], wire[off + 1], wire[off + 2], wire[off + 3]]);
-            off += 4;
-            match self.bits {
-                OuterBits::Int8 => {
-                    for d in block.iter_mut() {
-                        *d = (wire[off] as i8) as f32 * scale;
-                        off += 1;
-                    }
-                }
-                _ => {
-                    for (i, d) in block.iter_mut().enumerate() {
-                        let byte = wire[off + i / 2];
-                        let nibble = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
-                        *d = (nibble as i32 - 8) as f32 * scale;
-                    }
-                    off += self.code_bytes(block.len());
-                }
-            }
-        }
-        Ok(())
+        self.decode_impl::<false>(wire, dst)
+    }
+
+    fn decode_add(&self, wire: &[u8], dst: &mut [f32]) -> Result<()> {
+        self.decode_impl::<true>(wire, dst)
     }
 }
 
@@ -471,6 +582,54 @@ mod tests {
             c.encode(&[1.0, 2.0, 3.0], 0, &mut wire);
             let mut dst = vec![0.0f32; 4]; // one element too many
             assert!(c.decode(&wire, &mut dst).is_err(), "{bits:?}");
+        }
+    }
+
+    #[test]
+    fn encode_at_pieces_compose_byte_identically() {
+        // a range encoded whole == encoded in block-aligned pieces
+        // with the matching absolute block offsets (the parallel
+        // encode contract)
+        let n = BLOCK * 3 + 41;
+        let xs: Vec<f32> = (0..n).map(|i| ((i * 29 % 211) as f32 - 105.0) * 0.07).collect();
+        for bits in OuterBits::ALL {
+            let c = codec_for(bits);
+            let mut whole = Vec::new();
+            c.encode(&xs, 0xFEED, &mut whole);
+            let mut pieced = vec![0xAAu8; c.wire_bytes(n)]; // dirty buffer
+            for (cut_blocks, piece) in [(0usize, 2usize), (2, 1), (3, 1)] {
+                let lo = cut_blocks * BLOCK;
+                let hi = (lo + piece * BLOCK).min(n);
+                let wlo = c.wire_bytes(lo);
+                let whi = c.wire_bytes(hi.min(n));
+                c.encode_at(&xs[lo..hi], 0xFEED, cut_blocks as u64, &mut pieced[wlo..whi]);
+            }
+            assert_eq!(pieced, whole, "{bits:?}");
+        }
+    }
+
+    #[test]
+    fn decode_add_matches_decode_then_add() {
+        let n = BLOCK + 123; // odd int4 tail
+        let xs: Vec<f32> = (0..n).map(|i| ((i * 31 % 97) as f32 - 48.0) * 0.011).collect();
+        for bits in OuterBits::ALL {
+            let c = codec_for(bits);
+            let mut wire = Vec::new();
+            c.encode(&xs, 7, &mut wire);
+            let base: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5 - 3.0).collect();
+            let mut scratch = vec![0.0f32; n];
+            c.decode(&wire, &mut scratch).unwrap();
+            let mut want = base.clone();
+            for (w, &s) in want.iter_mut().zip(&scratch) {
+                *w += s;
+            }
+            let mut got = base.clone();
+            c.decode_add(&wire, &mut got).unwrap();
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{bits:?}[{i}]");
+            }
+            // same length validation as decode
+            assert!(c.decode_add(&wire, &mut vec![0.0; n + 1]).is_err(), "{bits:?}");
         }
     }
 }

@@ -63,6 +63,10 @@ pub struct WorkerComm {
     staging: Vec<f32>,
     /// Device→host pull and dq arena (transient).
     scratch: Vec<f32>,
+    /// Recycled up-wire payload buffers: spent payloads the driver
+    /// routes back after the reduce, reused by this worker's next
+    /// encodes so steady-state syncs allocate no fresh wire `Vec`s.
+    spares: Vec<Vec<u8>>,
 }
 
 impl WorkerComm {
@@ -70,6 +74,21 @@ impl WorkerComm {
     /// exposed for tests.
     pub fn snap(&self) -> &[f32] {
         &self.snap
+    }
+
+    /// Return a spent wire payload buffer for reuse by this worker's
+    /// next encode. Capacity is retained; every byte is rewritten on
+    /// reuse.
+    pub fn recycle(&mut self, mut buf: Vec<u8>) {
+        if self.spares.len() < 16 {
+            buf.clear();
+            self.spares.push(buf);
+        }
+    }
+
+    /// Pop a recycled payload buffer (or a fresh empty one).
+    fn take_buf(&mut self) -> Vec<u8> {
+        self.spares.pop().unwrap_or_default()
     }
 
     /// Comm arena footprint in bytes — the counter behind
@@ -324,7 +343,10 @@ impl CommLink {
         }
         if self.up.is_identity() {
             // legacy wire: raw f32 parameters, bit for bit
-            return Ok(self.up.encode_raw(&wc.scratch, frag, sync_index, rep as u64));
+            let mut out = wc.take_buf();
+            self.up
+                .encode_raw_into(&wc.scratch, frag, sync_index, rep as u64, &mut out);
+            return Ok(out);
         }
         if wc.snap.len() != total {
             bail!("comm encode: lossy up-wire without init_snapshot (replica {rep})");
@@ -339,8 +361,19 @@ impl CommLink {
                 wc.staging[i] = wc.snap[i] - wc.scratch[i];
             }
         }
-        self.up
-            .encode_ef(&mut wc.staging, &mut rc.residual, frag, sync_index, rep as u64)
+        // Within one worker the encode stays single-threaded: the
+        // parallelism across the worker pool already covers the cores.
+        let mut out = wc.take_buf();
+        self.up.encode_ef_into(
+            &mut wc.staging,
+            &mut rc.residual,
+            frag,
+            sync_index,
+            rep as u64,
+            1,
+            &mut out,
+        )?;
+        Ok(out)
     }
 }
 
@@ -496,5 +529,43 @@ mod tests {
         let mut wc2 = WorkerComm::default();
         lk2.init_snapshot(&mut wc2, &lits(&l, |_| 0.0)).unwrap();
         assert_eq!(wc2.arena_bytes(), 2 * total * 4);
+    }
+
+    #[test]
+    fn recycled_buffers_encode_bit_identically() {
+        let l = layout();
+        for up in [OuterBits::Fp32, OuterBits::Int8] {
+            let lk = link(up, OuterBits::Fp32);
+            let state = lits(&l, |i| (i as f32 * 0.7).cos());
+            let mut wc = WorkerComm::default();
+            let mut rc = ReplicaComm::default();
+            let mut wc2 = WorkerComm::default();
+            let mut rc2 = ReplicaComm::default();
+            lk.init_snapshot(&mut wc, &lits(&l, |_| 0.0)).unwrap();
+            lk.init_snapshot(&mut wc2, &lits(&l, |_| 0.0)).unwrap();
+            lk.init_replica(&mut rc);
+            lk.init_replica(&mut rc2);
+            // Prime the fresh-allocation reference path.
+            let a = lk
+                .encode_replica(0, &state, &mut wc2, &mut rc2, None, 3)
+                .unwrap();
+            // Recycle a dirty, differently-sized buffer into the pool
+            // and encode through it: every byte must still be written.
+            let arena_before = wc.arena_bytes();
+            wc.recycle(vec![0xAAu8; a.len() + 37]);
+            assert_eq!(
+                wc.arena_bytes(),
+                arena_before,
+                "spare wire buffers are transient, not arena state"
+            );
+            let b = lk
+                .encode_replica(0, &state, &mut wc, &mut rc, None, 3)
+                .unwrap();
+            assert_eq!(a, b, "pooled buffer changed the {up:?} wire");
+            assert_eq!(rc.residual(), rc2.residual());
+            // Returning the payload refills the pool for the next sync.
+            wc.recycle(b);
+            assert_eq!(wc.spares.len(), 1);
+        }
     }
 }

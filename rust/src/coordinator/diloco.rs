@@ -141,6 +141,13 @@ pub struct RunConfig {
     /// training results, so this is a pure wall-clock knob and is
     /// deliberately excluded from sweep-store run ids.
     pub workers: usize,
+    /// Coordinator-side sync parallelism (`--sync-threads`): how many
+    /// threads shard the fused decode→reduce and the flat-bus outer
+    /// step. 0 (the default) means "match `workers`". The sharding is
+    /// block-aligned with deterministic range ownership, so any value
+    /// yields bit-identical training results — like `workers`, a pure
+    /// wall-clock knob, deliberately excluded from sweep-store run ids.
+    pub sync_threads: usize,
     /// Up-wire bit width (`--outer-bits`, paper section 7): the wire
     /// codec replicas encode their sync contribution with. Fp32 is the
     /// identity oracle (bit-identical to the uncompressed path); lower
@@ -188,6 +195,7 @@ impl Default for RunConfig {
             streaming_fragments: 1,
             overlap_tau: 0,
             workers: 1,
+            sync_threads: 0,
             outer_bits: OuterBits::Fp32,
             outer_bits_down: OuterBits::Fp32,
             churn: String::new(),
@@ -230,6 +238,7 @@ impl RunConfig {
             ("streaming_fragments", Json::int(self.streaming_fragments as u64)),
             ("overlap_tau", Json::int(self.overlap_tau as u64)),
             ("workers", Json::int(self.workers as u64)),
+            ("sync_threads", Json::int(self.sync_threads as u64)),
             ("outer_bits", Json::str(self.outer_bits.label())),
             ("outer_bits_down", Json::str(self.outer_bits_down.label())),
             ("churn", Json::str(&self.churn)),
@@ -255,6 +264,8 @@ impl RunConfig {
             streaming_fragments: j.usize_of("streaming_fragments")?,
             overlap_tau: j.usize_of("overlap_tau")?,
             workers: j.usize_of("workers")?,
+            // tolerant: checkpoints from before the knob default to auto
+            sync_threads: j.get("sync_threads").and_then(|v| v.as_usize()).unwrap_or(0),
             outer_bits: OuterBits::parse(&j.str_of("outer_bits")?)?,
             outer_bits_down: OuterBits::parse(&j.str_of("outer_bits_down")?)?,
             churn: j
@@ -821,7 +832,14 @@ fn prepare(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
             // the down codec — and every byte on both legs is counted
             // (crate::comm)
             .with_codec(codec_for(outer_bits), cfg.seed)
-            .with_down_codec(codec_for(outer_bits_down)),
+            .with_down_codec(codec_for(outer_bits_down))
+            // 0 = auto: match the worker pool so the reduce uses the
+            // same cores the segment compute just vacated
+            .with_sync_threads(if cfg.sync_threads == 0 {
+                cfg.workers.max(1)
+            } else {
+                cfg.sync_threads
+            }),
         )
     } else {
         None

@@ -23,6 +23,7 @@
 use std::ops::Range;
 
 use crate::runtime::{FlatLayout, FlatParams};
+use crate::util::par::{self, Piece};
 
 #[derive(Debug, Clone)]
 pub struct OuterOpt {
@@ -80,6 +81,37 @@ impl OuterOpt {
                 mu,
             );
         }
+    }
+
+    /// [`OuterOpt::step_ranges`] over a pre-computed shard partition
+    /// (`util::par::shard_ranges` of the due ranges), one scoped
+    /// thread per shard. Each element's Nesterov update runs exactly
+    /// once on exactly one thread — the kernel is element-wise, so
+    /// the result is bit-identical to the sequential step at any
+    /// shard count.
+    pub fn step_pieces(
+        &mut self,
+        global: &mut FlatParams,
+        outer_grad: &FlatParams,
+        shards: &[Vec<Piece>],
+    ) {
+        let total = global.layout().total();
+        assert_eq!(total, outer_grad.layout().total());
+        if self.velocity.len() != total {
+            assert!(self.velocity.is_empty(), "velocity arena size drifted");
+            self.velocity = vec![0.0; total];
+        }
+        let mu = self.momentum as f32;
+        let lr = self.lr as f32;
+        let thetas = par::split_pieces(global.data_mut(), shards);
+        let vels = par::split_pieces(&mut self.velocity, shards);
+        let grad = outer_grad.data();
+        let items: Vec<_> = shards.iter().zip(thetas).zip(vels).collect();
+        par::map_shards(items, |_, ((pieces, thetas), vels)| {
+            for ((p, theta), vel) in pieces.iter().zip(thetas).zip(vels) {
+                nesterov_chunk(theta, &grad[p.range.clone()], vel, lr, mu);
+            }
+        });
     }
 
     /// The velocity arena (empty until the first step).
@@ -319,6 +351,44 @@ mod tests {
         assert!(opt.velocity()[..2].iter().all(|&v| v == 0.0));
         assert!(opt.velocity()[5..].iter().all(|&v| v == 0.0));
         assert!(opt.velocity()[2..5].iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn step_pieces_matches_step_ranges_at_any_shard_count() {
+        let layout = Arc::new(FlatLayout::new(vec![vec![700], vec![300], vec![513]]));
+        let mk = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut fp = FlatParams::zeros(&layout);
+            for x in fp.data_mut() {
+                *x = rng.normal() as f32;
+            }
+            fp
+        };
+        let ranges = layout.fragment_ranges(2, 0);
+        let delta = mk(7);
+        let mut want = mk(1);
+        let mut opt_seq = OuterOpt::new(0.7, 0.9);
+        opt_seq.step_ranges(&mut want, &delta, &ranges);
+        opt_seq.step_ranges(&mut want, &delta, &ranges); // momentum carries
+        for threads in [1, 2, 3, 16] {
+            let shards = par::shard_ranges(&ranges, threads, 256);
+            let mut got = mk(1);
+            let mut opt = OuterOpt::new(0.7, 0.9);
+            opt.step_pieces(&mut got, &delta, &shards);
+            opt.step_pieces(&mut got, &delta, &shards);
+            for i in 0..layout.total() {
+                assert_eq!(
+                    got.data()[i].to_bits(),
+                    want.data()[i].to_bits(),
+                    "threads={threads} theta[{i}]"
+                );
+                assert_eq!(
+                    opt.velocity().get(i).copied().unwrap_or(0.0).to_bits(),
+                    opt_seq.velocity()[i].to_bits(),
+                    "threads={threads} velocity[{i}]"
+                );
+            }
+        }
     }
 
     #[test]

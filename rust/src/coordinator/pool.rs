@@ -734,6 +734,12 @@ trait SegmentExec {
     /// Block until the dispatched segment completes; hand back its
     /// per-replica per-step losses + boundary sync payloads.
     fn collect(&mut self, from: usize, to: usize) -> Result<SegmentData>;
+
+    /// Return spent wire payload buffers from a completed reduce to
+    /// the workers' encode pools. Purely an allocation-reuse channel —
+    /// buffers carry no data (every byte is rewritten on reuse), so
+    /// dropping them is always correct; the default does exactly that.
+    fn recycle_wires(&mut self, _bufs: Vec<Vec<u8>>) {}
 }
 
 /// Membership changes taking effect at a segment's dispatch, in
@@ -806,13 +812,17 @@ fn due_fragment(t1: usize, plan: &DrivePlan) -> Option<usize> {
 /// replicas merge — encoded wire frames under a lossy up-wire,
 /// literal handles otherwise. With overlap this runs τ steps after
 /// the send, dispatched *under* the workers' segment compute.
+///
+/// Also returns the spent wire payload buffers (empty for literal
+/// merges): one is kept on the bus for its next broadcast encode, the
+/// rest go back to the workers so steady-state syncs stop allocating.
 fn reduce_and_broadcast(
     bus: &mut OuterSync,
     infl: InFlight,
     wire_codec: bool,
     wire_down: bool,
     out: &mut DriveOutcome,
-) -> Result<Broadcast> {
+) -> Result<(Broadcast, Vec<Vec<u8>>)> {
     let InFlight {
         frag,
         payloads,
@@ -822,6 +832,7 @@ fn reduce_and_broadcast(
     if contributors.is_empty() {
         bail!("drive: outer sync with zero contributors");
     }
+    let mut spent: Vec<Vec<u8>> = Vec::new();
     if wire_codec {
         let frames: Vec<&[u8]> = contributors
             .iter()
@@ -831,6 +842,16 @@ fn reduce_and_broadcast(
             })
             .collect::<Result<_>>()?;
         bus.sync_encoded(&frames, frag)?;
+        // The reduce is done with the frames; their allocations are
+        // still warm. One refills the bus's broadcast pool, the rest
+        // ride back to the worker pool with the next dispatch.
+        spent.extend(payloads.into_iter().filter_map(|p| match p {
+            SyncPayload::Encoded(bytes) => Some(bytes),
+            _ => None,
+        }));
+        if let Some(buf) = spent.pop() {
+            bus.recycle_wire(buf);
+        }
     } else {
         let parts: Vec<&[Arc<xla::Literal>]> = contributors
             .iter()
@@ -846,23 +867,24 @@ fn reduce_and_broadcast(
     // freshly-uploaded literal per synced leaf (identity down-wire: N
     // uploads, never M×N), or the DownWire's single encoded fragment
     // (lossy down-wire: one allocation, decoded once per worker).
-    if wire_down {
-        Ok(Broadcast::Encoded {
+    let broadcast = if wire_down {
+        Broadcast::Encoded {
             frag,
             bytes: bus.take_broadcast_bytes().ok_or_else(|| {
                 anyhow!("drive: lossy down-wire produced no broadcast payload")
             })?,
-        })
+        }
     } else {
         let leaves: Vec<usize> = bus.synced_leaves(frag).collect();
         let lits = bus.global_literals()?;
-        Ok(Broadcast::Literals(
+        Broadcast::Literals(
             leaves
                 .into_iter()
                 .map(|leaf| (leaf, Arc::clone(&lits[leaf])))
                 .collect(),
-        ))
-    }
+        )
+    };
+    Ok((broadcast, spent))
 }
 
 fn coordinate<E: InnerEngine, X: SegmentExec>(
@@ -1075,7 +1097,9 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             let bus = sync
                 .as_deref_mut()
                 .expect("a sync can only be in flight with an OuterSync");
-            pending = reduce_and_broadcast(bus, infl, wire_codec, wire_down, &mut out)?;
+            let (b, spent) = reduce_and_broadcast(bus, infl, wire_codec, wire_down, &mut out)?;
+            pending = b;
+            exec.recycle_wires(spent);
             ctl.journal.append(
                 t1,
                 start_syncs + out.outer_syncs as u64 - 1,
@@ -1172,7 +1196,10 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             if merge_at == t1 {
                 let infl = in_flight.take().expect("stashed above");
                 let bus = sync.as_deref_mut().expect("send implies sync");
-                pending = reduce_and_broadcast(bus, infl, wire_codec, wire_down, &mut out)?;
+                let (b, spent) =
+                    reduce_and_broadcast(bus, infl, wire_codec, wire_down, &mut out)?;
+                pending = b;
+                exec.recycle_wires(spent);
                 ctl.journal.append(
                     t1,
                     start_syncs + out.outer_syncs as u64 - 1,
@@ -1231,7 +1258,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             );
             sends += 1;
             let bus = sync.as_deref_mut().expect("flush implies sync");
-            pending = reduce_and_broadcast(
+            let (b, spent) = reduce_and_broadcast(
                 bus,
                 InFlight {
                     frag: None,
@@ -1243,6 +1270,8 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
                 wire_down,
                 &mut out,
             )?;
+            pending = b;
+            exec.recycle_wires(spent);
             ctl.journal.append(
                 t1,
                 start_syncs + out.outer_syncs as u64 - 1,
@@ -1437,6 +1466,12 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
             .take()
             .ok_or_else(|| anyhow!("drive: collect without a dispatched segment"))
     }
+
+    fn recycle_wires(&mut self, bufs: Vec<Vec<u8>>) {
+        for b in bufs {
+            self.wc.recycle(b);
+        }
+    }
 }
 
 // ---- worker pool ------------------------------------------------------
@@ -1451,6 +1486,10 @@ enum Cmd {
         payload: PayloadSpec,
         churn: SegmentChurn,
     },
+    /// Spent wire payload buffers from a completed reduce, returned
+    /// for this worker's encode pool. No reply — the worker absorbs
+    /// them between segments.
+    Spares(Vec<Vec<u8>>),
     /// Apply the final broadcast and exit, returning replica ownership.
     Finish { broadcast: Broadcast },
 }
@@ -1607,6 +1646,11 @@ fn worker_loop<E: InnerEngine>(
                     break;
                 }
             }
+            Cmd::Spares(bufs) => {
+                for b in bufs {
+                    wc.recycle(b);
+                }
+            }
             Cmd::Finish { broadcast } => {
                 // a failed final broadcast must fail the run (the
                 // inline path propagates the same error with `?`), so
@@ -1679,6 +1723,24 @@ impl SegmentExec for PoolExec {
             out.push(p.ok_or_else(|| anyhow!("replica {r}: missing segment payload"))?);
         }
         Ok((losses, out))
+    }
+
+    /// Deal the spent buffers round-robin across the pool. Send
+    /// failures are ignored: a hung-up worker already failed the run
+    /// through its result channel, and spares are droppable by design.
+    fn recycle_wires(&mut self, bufs: Vec<Vec<u8>>) {
+        if self.txs.is_empty() {
+            return;
+        }
+        let mut per_worker: Vec<Vec<Vec<u8>>> = (0..self.txs.len()).map(|_| Vec::new()).collect();
+        for (i, b) in bufs.into_iter().enumerate() {
+            per_worker[i % self.txs.len()].push(b);
+        }
+        for (tx, batch) in self.txs.iter().zip(per_worker) {
+            if !batch.is_empty() {
+                let _ = tx.send(Cmd::Spares(batch));
+            }
+        }
     }
 }
 

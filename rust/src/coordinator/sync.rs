@@ -49,9 +49,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::comm::codec::{codec_for, Codec, OuterBits};
+use crate::comm::codec::{codec_for, Codec, OuterBits, BLOCK};
 use crate::comm::{Channel, CommLink, Direction, DownWire, SyncWireRecord, WireStats};
 use crate::runtime::{FlatLayout, FlatParams, HostTensor};
+use crate::util::par;
 
 use super::outer_opt::{acc_add, acc_finish, acc_scale, OuterOpt};
 
@@ -110,6 +111,14 @@ pub struct OuterSync {
     run_seed: u64,
     /// Exact bytes moved per sync/fragment/replica.
     wire: WireStats,
+    /// Shard width for the coordinator-side sync kernels (fused
+    /// decode→reduce, outer step, broadcast encode). Results are
+    /// bit-identical at any value; 1 = the sequential path.
+    sync_threads: usize,
+    /// Recycled wire payload buffers (spent broadcasts returned by the
+    /// driver via [`OuterSync::recycle_wire`]), so steady-state syncs
+    /// allocate nothing for the down-wire payload.
+    wire_pool: Vec<Vec<u8>>,
 }
 
 impl OuterSync {
@@ -156,7 +165,28 @@ impl OuterSync {
             pending_down: None,
             run_seed: 0,
             wire: WireStats::default(),
+            sync_threads: 1,
+            wire_pool: Vec::new(),
         })
+    }
+
+    /// Shard the coordinator-side sync kernels over up to `n` scoped
+    /// threads (`--sync-threads`). Deterministic per-range ownership
+    /// keeps every element's operation order unchanged, so results are
+    /// bit-identical at any value (pinned by `tests/comm_codec.rs`).
+    pub fn with_sync_threads(mut self, n: usize) -> OuterSync {
+        self.sync_threads = n.max(1);
+        self
+    }
+
+    /// Return a spent wire payload buffer (a shipped broadcast or a
+    /// consumed up-wire payload) for reuse by the next broadcast
+    /// encode. Capacity is retained; every byte is rewritten on reuse.
+    pub fn recycle_wire(&mut self, mut buf: Vec<u8>) {
+        if self.wire_pool.len() < 16 {
+            buf.clear();
+            self.wire_pool.push(buf);
+        }
     }
 
     /// Attach the up-wire codec (and the run seed both channels derive
@@ -421,14 +451,19 @@ impl OuterSync {
         // its deltas are formed against the worker snapshot, which
         // tracks the same view.
         let m = replica_params.len() as f32;
-        for r in ranges {
-            let reference = match &self.down {
-                Some(dw) => &dw.view()[r.clone()],
-                None => &self.global.data()[r.clone()],
-            };
-            acc_finish(&mut self.acc.data_mut()[r.clone()], reference, m);
-        }
-        self.opt.step_ranges(&mut self.global, &self.acc, ranges);
+        let shards = par::shard_ranges(ranges, self.sync_threads, BLOCK);
+        let reference: &[f32] = match &self.down {
+            Some(dw) => dw.view(),
+            None => self.global.data(),
+        };
+        let accs = par::split_pieces(self.acc.data_mut(), &shards);
+        let items: Vec<_> = shards.iter().zip(accs).collect();
+        par::map_shards(items, |_, (pieces, accs)| {
+            for (p, acc) in pieces.iter().zip(accs) {
+                acc_finish(acc, &reference[p.range.clone()], m);
+            }
+        });
+        self.opt.step_pieces(&mut self.global, &self.acc, &shards);
 
         // 3. publish + wire accounting (this path ships raw f32 up).
         self.publish_and_record(frag, replica_params.len(), None)
@@ -483,11 +518,20 @@ impl OuterSync {
                          next sync"
                     );
                 }
-                // encode the broadcast fragment once for all replicas;
-                // the driver ships these bytes to every worker
-                let bytes = dw.encode_broadcast(self.global.data(), frag, sync_index)?;
-                let n = bytes.len() as u64;
-                self.pending_down = Some(Arc::new(bytes));
+                // encode the broadcast fragment once for all replicas
+                // — into a recycled buffer, sharded over the sync
+                // threads; the driver ships these bytes to every
+                // worker
+                let mut buf = self.wire_pool.pop().unwrap_or_default();
+                dw.encode_broadcast_into(
+                    self.global.data(),
+                    frag,
+                    sync_index,
+                    self.sync_threads,
+                    &mut buf,
+                )?;
+                let n = buf.len() as u64;
+                self.pending_down = Some(Arc::new(buf));
                 n
             }
             None => ranges
@@ -512,9 +556,10 @@ impl OuterSync {
     /// raw f32 parameters under the identity codec (making this
     /// bit-identical to [`OuterSync::sync`] on the same values), or
     /// error-compensated quantized outer deltas under a lossy codec.
-    /// Payloads are decoded into the reused scratch arena and
-    /// accumulated in replica-index order; the Nesterov step and the
-    /// deduplicated literal publish are exactly the legacy path's.
+    /// Payloads accumulate block-by-block straight into the delta
+    /// arena in replica-index order (fused decode→reduce, sharded
+    /// over `--sync-threads`); the Nesterov step and the deduplicated
+    /// literal publish are exactly the legacy path's, bit for bit.
     pub fn sync_encoded(&mut self, payloads: &[&[u8]], frag: Option<usize>) -> Result<()> {
         if payloads.is_empty() {
             bail!("outer sync with zero replicas");
@@ -538,47 +583,54 @@ impl OuterSync {
             }
         }
 
-        // 1. decode + accumulate in replica-index order.
+        // 1+2. fused decode→reduce→finish, sharded with deterministic
+        // per-piece ownership: each shard zeros its pieces of the
+        // delta arena, accumulates every payload's dequantized blocks
+        // directly into them (`Codec::decode_add` — no per-replica
+        // f32 scratch) in replica-index order, then finishes the
+        // outer gradient in place. Every element's operation sequence
+        // is exactly the retired scratch-buffer path's, so the result
+        // is bit-identical at any thread count. Identity payloads
+        // hold theta: Delta = reference - acc/M, where the reference
+        // is the broadcast view under a lossy down-wire and the exact
+        // global otherwise (see `sync` for why the view). Lossy
+        // payloads hold dq(delta): Delta = acc/M directly.
+        let mut range_off = Vec::with_capacity(ranges.len());
+        let mut off = 0usize;
         for r in ranges {
-            self.acc.data_mut()[r.clone()].fill(0.0);
+            range_off.push(off);
+            off += self.codec.wire_bytes(r.len());
         }
-        for p in payloads {
-            let mut off = 0usize;
-            for r in ranges {
-                let nb = self.codec.wire_bytes(r.len());
-                self.codec
-                    .decode(&p[off..off + nb], &mut self.scratch.data_mut()[r.clone()])?;
-                off += nb;
-            }
-            for r in ranges {
-                acc_add(
-                    &mut self.acc.data_mut()[r.clone()],
-                    &self.scratch.data()[r.clone()],
-                );
-            }
-        }
-
-        // 2. finish the outer gradient and take the Nesterov step.
-        // Identity payloads hold theta: Delta = reference - acc/M,
-        // where the reference is the broadcast view under a lossy
-        // down-wire and the exact global otherwise (the legacy
-        // summation, bit for bit — see `sync` for why the view).
-        // Lossy payloads hold dq(delta): Delta = acc/M directly.
         let m = payloads.len() as f32;
-        if self.codec.is_identity() {
-            for r in ranges {
-                let reference = match &self.down {
-                    Some(dw) => &dw.view()[r.clone()],
-                    None => &self.global.data()[r.clone()],
-                };
-                acc_finish(&mut self.acc.data_mut()[r.clone()], reference, m);
+        let identity = self.codec.is_identity();
+        let shards = par::shard_ranges(ranges, self.sync_threads, BLOCK);
+        let reference: &[f32] = match &self.down {
+            Some(dw) => dw.view(),
+            None => self.global.data(),
+        };
+        let codec = Arc::clone(&self.codec);
+        let accs = par::split_pieces(self.acc.data_mut(), &shards);
+        let items: Vec<_> = shards.iter().zip(accs).collect();
+        par::map_shards(items, |_, (pieces, accs)| -> Result<()> {
+            for (p, acc) in pieces.iter().zip(accs) {
+                let src = &ranges[p.src];
+                let woff = range_off[p.src] + codec.wire_bytes(p.range.start - src.start);
+                let wlen = codec.wire_bytes(p.len());
+                acc.fill(0.0);
+                for payload in payloads {
+                    codec.decode_add(&payload[woff..woff + wlen], &mut acc[..])?;
+                }
+                if identity {
+                    acc_finish(acc, &reference[p.range.clone()], m);
+                } else {
+                    acc_scale(acc, m);
+                }
             }
-        } else {
-            for r in ranges {
-                acc_scale(&mut self.acc.data_mut()[r.clone()], m);
-            }
-        }
-        self.opt.step_ranges(&mut self.global, &self.acc, ranges);
+            Ok(())
+        })
+        .into_iter()
+        .collect::<Result<()>>()?;
+        self.opt.step_pieces(&mut self.global, &self.acc, &shards);
 
         // 3. publish + wire accounting (exact encoded bytes up).
         self.publish_and_record(frag, payloads.len(), Some(expected as u64))

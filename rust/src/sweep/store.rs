@@ -29,8 +29,9 @@ use crate::util::json::Json;
 /// the streaming fragment count (`_p{P}` — the fragment schedule
 /// changes which leaves sync when) and the overlap window (`_tau{τ}`
 /// — delayed application changes what the outer gradient sees);
-/// `workers` deliberately is NOT (bit-identical at any worker count —
-/// a pure wall-clock knob). For Data-Parallel there is no outer sync
+/// `workers` and `sync_threads` deliberately are NOT (bit-identical
+/// at any thread count — pure wall-clock knobs). For Data-Parallel
+/// there is no outer sync
 /// at all, so all four knobs are inert and the id pins them to
 /// (32, 32, 1, 0) — DP runs differing only in those flags are
 /// byte-identical and must collide. A non-empty fault plan changes the
@@ -315,9 +316,11 @@ mod tests {
         assert_ne!(run_id(&c), run_id(&d4));
         assert_ne!(run_id(&d3), run_id(&d4));
         assert!(run_id(&d4).ends_with("_p1_tau3"));
-        // ...while workers stays excluded (bit-identical results)...
+        // ...while workers and sync_threads stay excluded (both are
+        // bit-identical wall-clock knobs)...
         let mut e = RunConfig::default();
         e.workers = 8;
+        e.sync_threads = 4;
         assert_eq!(run_id(&a), run_id(&e));
         // ...and DP ids pin ob=obd=32, p=1, tau=0: every outer-sync
         // knob is inert without an outer sync, so differing DP runs

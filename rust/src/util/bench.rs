@@ -18,6 +18,27 @@ pub struct BenchResult {
     pub median: Duration,
     pub p95: Duration,
     pub mean: Duration,
+    /// Bytes moved per iteration (set via [`Bencher::run_throughput`])
+    /// — reported as GiB/s off the median.
+    pub bytes: Option<u64>,
+    /// Elements processed per iteration — reported as Melem/s.
+    pub elems: Option<u64>,
+}
+
+impl BenchResult {
+    /// Median-based throughput in GiB/s, when the case declared bytes.
+    pub fn gib_per_s(&self) -> Option<f64> {
+        let b = self.bytes?;
+        let s = self.median.as_secs_f64();
+        (s > 0.0).then(|| b as f64 / (1u64 << 30) as f64 / s)
+    }
+
+    /// Median-based throughput in Melem/s, when the case declared elems.
+    pub fn melem_per_s(&self) -> Option<f64> {
+        let e = self.elems?;
+        let s = self.median.as_secs_f64();
+        (s > 0.0).then(|| e as f64 / 1e6 / s)
+    }
 }
 
 pub struct Bencher {
@@ -66,7 +87,31 @@ impl Bencher {
 
     /// Time `f` and record a row. The closure should return something
     /// observable to keep the optimizer honest; its value is black-boxed.
-    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+    pub fn run<T>(&mut self, name: &str, f: impl FnMut() -> T) {
+        self.run_case(name, None, None, f);
+    }
+
+    /// Like [`Bencher::run`] for a case that moves `bytes` bytes and
+    /// processes `elems` elements per iteration: the report adds GiB/s
+    /// and Melem/s columns computed off the median, so memory-bound
+    /// kernels read directly against machine bandwidth.
+    pub fn run_throughput<T>(
+        &mut self,
+        name: &str,
+        bytes: u64,
+        elems: u64,
+        f: impl FnMut() -> T,
+    ) {
+        self.run_case(name, Some(bytes), Some(elems), f);
+    }
+
+    fn run_case<T>(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        elems: Option<u64>,
+        mut f: impl FnMut() -> T,
+    ) {
         for _ in 0..self.warmup_iters {
             std::hint::black_box(f());
         }
@@ -89,6 +134,8 @@ impl Bencher {
             median: samples[n / 2],
             p95: samples[(n as f64 * 0.95) as usize % n],
             mean: total / n as u32,
+            bytes,
+            elems,
         });
     }
 
@@ -96,18 +143,25 @@ impl Bencher {
     pub fn report(&self, title: &str) {
         println!("\n== {title} ==");
         println!(
-            "{:<44} {:>6} {:>12} {:>12} {:>12} {:>12}",
-            "benchmark", "iters", "min", "median", "p95", "mean"
+            "{:<44} {:>6} {:>12} {:>12} {:>12} {:>12} {:>9} {:>9}",
+            "benchmark", "iters", "min", "median", "p95", "mean", "GiB/s", "Melem/s"
         );
+        let fmt_rate = |r: Option<f64>| match r {
+            Some(v) if v >= 100.0 => format!("{v:.0}"),
+            Some(v) => format!("{v:.2}"),
+            None => "-".into(),
+        };
         for r in &self.results {
             println!(
-                "{:<44} {:>6} {:>12} {:>12} {:>12} {:>12}",
+                "{:<44} {:>6} {:>12} {:>12} {:>12} {:>12} {:>9} {:>9}",
                 r.name,
                 r.iters,
                 fmt_dur(r.min),
                 fmt_dur(r.median),
                 fmt_dur(r.p95),
-                fmt_dur(r.mean)
+                fmt_dur(r.mean),
+                fmt_rate(r.gib_per_s()),
+                fmt_rate(r.melem_per_s()),
             );
         }
     }
@@ -138,14 +192,21 @@ impl Bencher {
             (
                 "results",
                 Json::arr(self.results.iter().map(|r| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("name", Json::str(&r.name)),
                         ("iters", Json::int(r.iters as i128)),
                         ("min_ns", Json::int(r.min.as_nanos() as i128)),
                         ("median_ns", Json::int(r.median.as_nanos() as i128)),
                         ("p95_ns", Json::int(r.p95.as_nanos() as i128)),
                         ("mean_ns", Json::int(r.mean.as_nanos() as i128)),
-                    ])
+                    ];
+                    if let Some(b) = r.bytes {
+                        fields.push(("bytes", Json::int(b as i128)));
+                    }
+                    if let Some(e) = r.elems {
+                        fields.push(("elems", Json::int(e as i128)));
+                    }
+                    Json::obj(fields)
                 })),
             ),
         ];
@@ -274,6 +335,28 @@ mod tests {
         assert_eq!(rs[0].str_of("name").unwrap(), "case");
         assert!(rs[0].u64_of("median_ns").is_ok());
         assert!(rs[0].u64_of("iters").unwrap() >= 3);
+    }
+
+    #[test]
+    fn throughput_cases_carry_rates_into_json() {
+        let mut b = Bencher::new(0.05);
+        b.run("plain", || 1 + 1);
+        b.run_throughput("bulk", 2 * (1 << 30), 4_000_000, || 2 * 2);
+        let plain = &b.results()[0];
+        assert_eq!(plain.bytes, None);
+        assert_eq!(plain.gib_per_s(), None);
+        let bulk = &b.results()[1];
+        assert_eq!(bulk.bytes, Some(2 * (1 << 30)));
+        assert!(bulk.gib_per_s().unwrap() > 0.0);
+        assert!(bulk.melem_per_s().unwrap() > 0.0);
+        let j = b.to_json("t");
+        let rs = j.arr_of("results").unwrap();
+        assert!(rs[0].get("bytes").is_none(), "plain cases omit the fields");
+        assert_eq!(rs[1].u64_of("bytes").unwrap(), 2 * (1 << 30));
+        assert_eq!(rs[1].u64_of("elems").unwrap(), 4_000_000);
+        // the diff gate keys on name/median only — extras never break it
+        assert_eq!(diff_reports(&j, &j).unwrap().len(), 2);
+        b.report("t"); // rate columns must format without panicking
     }
 
     #[test]

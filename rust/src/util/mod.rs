@@ -1,10 +1,11 @@
 //! Shared substrates: JSON, RNG, statistics, bench harness,
-//! property-testing kit, logging. These stand in for serde/rand/
-//! criterion/proptest, which are unavailable in the offline sandbox
-//! (DESIGN.md section 7).
+//! property-testing kit, deterministic sharding, logging. These stand
+//! in for serde/rand/criterion/proptest/rayon, which are unavailable
+//! in the offline sandbox (DESIGN.md section 7).
 
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

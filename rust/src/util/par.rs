@@ -1,0 +1,211 @@
+//! Deterministic range sharding + scoped fork-join, the substrate for
+//! the parallel outer sync (codec encode/decode, fused reduce, outer
+//! step). Stands in for rayon, which is unavailable in the offline
+//! sandbox.
+//!
+//! The bit-identity rule: every f32 operation on a given element must
+//! run in the same order regardless of thread count. [`shard_ranges`]
+//! guarantees that by cutting the source ranges into contiguous,
+//! block-aligned pieces with deterministic ownership — each element
+//! belongs to exactly one shard, so its whole op sequence (zero,
+//! decode-add per replica in replica-index order, finish, step) runs
+//! on one thread in the same order as the sequential path. Summation
+//! order never changes; only which thread performs it does.
+
+use std::ops::Range;
+
+/// One contiguous piece of a source range. `src` indexes the slice of
+/// ranges passed to [`shard_ranges`]; the piece's wire/RNG position
+/// within that range follows from `range.start - ranges[src].start`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Piece {
+    pub src: usize,
+    pub range: Range<usize>,
+}
+
+impl Piece {
+    pub fn len(&self) -> usize {
+        self.range.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+}
+
+/// Cut `ranges` into at most `threads` shards of contiguous pieces,
+/// each piece `align`-aligned relative to its source range's start
+/// (so codec blocks never straddle a cut; only the final piece of a
+/// range may end off-alignment). Pieces never span source ranges —
+/// each range has its own wire stream and RNG seed. The partition is
+/// a pure function of `(ranges, threads, align)`: deterministic,
+/// ordered, disjoint, and covering.
+pub fn shard_ranges(ranges: &[Range<usize>], threads: usize, align: usize) -> Vec<Vec<Piece>> {
+    let align = align.max(1);
+    let mut units: Vec<Piece> = Vec::new();
+    for (src, r) in ranges.iter().enumerate() {
+        let mut start = r.start;
+        while start < r.end {
+            let end = (start + align).min(r.end);
+            units.push(Piece { src, range: start..end });
+            start = end;
+        }
+    }
+    let total = units.len();
+    let t = threads.max(1).min(total.max(1));
+    let mut shards: Vec<Vec<Piece>> = Vec::with_capacity(t);
+    let mut iter = units.into_iter();
+    for s in 0..t {
+        let take = (s + 1) * total / t - s * total / t;
+        let mut shard: Vec<Piece> = Vec::new();
+        for _ in 0..take {
+            let u = iter.next().expect("unit budget covers all units");
+            match shard.last_mut() {
+                // fuse adjacent units of the same source range back
+                // into one long piece (fewer kernel calls per shard)
+                Some(last) if last.src == u.src && last.range.end == u.range.start => {
+                    last.range.end = u.range.end;
+                }
+                _ => shard.push(u),
+            }
+        }
+        shards.push(shard);
+    }
+    shards
+}
+
+/// Split one mutable arena into per-shard, per-piece disjoint views.
+/// Pieces are globally ascending and disjoint by construction
+/// ([`shard_ranges`]), so successive `split_at_mut` walks cover them
+/// without aliasing.
+pub fn split_pieces<'a, T>(data: &'a mut [T], shards: &[Vec<Piece>]) -> Vec<Vec<&'a mut [T]>> {
+    let mut rest = data;
+    let mut base = 0usize;
+    let mut out = Vec::with_capacity(shards.len());
+    for shard in shards {
+        let mut views = Vec::with_capacity(shard.len());
+        for p in shard {
+            let skip = p.range.start - base;
+            let tail = std::mem::take(&mut rest);
+            let (seg, tail) = tail[skip..].split_at_mut(p.len());
+            views.push(seg);
+            rest = tail;
+            base = p.range.end;
+        }
+        out.push(views);
+    }
+    out
+}
+
+/// Fork-join map over per-shard work items: one scoped thread per
+/// item, results in item order. A single item (or none) runs inline —
+/// `threads = 1` is structurally the sequential path, not a
+/// one-thread pool. Panics in any shard propagate at scope exit.
+pub fn map_shards<W, R, F>(items: Vec<W>, f: F) -> Vec<R>
+where
+    W: Send,
+    R: Send,
+    F: Fn(usize, W) -> R + Sync,
+{
+    if items.len() <= 1 {
+        return items.into_iter().enumerate().map(|(i, w)| f(i, w)).collect();
+    }
+    let n = items.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (i, (item, slot)) in items.into_iter().zip(slots.iter_mut()).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                *slot = Some(f(i, item));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|o| o.expect("every shard thread writes its slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flatten(shards: &[Vec<Piece>]) -> Vec<Piece> {
+        shards.iter().flatten().cloned().collect()
+    }
+
+    #[test]
+    fn shards_cover_disjoint_ordered_and_aligned() {
+        let ranges = vec![0..700, 700..900, 1000..1001, 1100..1612];
+        for threads in [1, 2, 3, 7, 64] {
+            let shards = shard_ranges(&ranges, threads, 256);
+            assert!(shards.len() <= threads.max(1));
+            let pieces = flatten(&shards);
+            // ascending, disjoint, never spanning source ranges
+            let mut last_end = 0usize;
+            for p in &pieces {
+                assert!(p.range.start >= last_end, "{threads}: {pieces:?}");
+                assert!(p.range.start >= ranges[p.src].start);
+                assert!(p.range.end <= ranges[p.src].end);
+                // interior cuts land on block boundaries
+                let off = p.range.start - ranges[p.src].start;
+                assert_eq!(off % 256, 0, "{threads}: piece {p:?} misaligned");
+                last_end = p.range.end;
+            }
+            // covering: total length matches
+            let want: usize = ranges.iter().map(|r| r.len()).sum();
+            let got: usize = pieces.iter().map(|p| p.len()).sum();
+            assert_eq!(got, want, "threads={threads}");
+            // deterministic
+            assert_eq!(shards, shard_ranges(&ranges, threads, 256));
+        }
+    }
+
+    #[test]
+    fn single_thread_is_one_piece_per_range() {
+        let ranges = vec![3..600, 600..640];
+        let shards = shard_ranges(&ranges, 1, 256);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(
+            shards[0],
+            vec![Piece { src: 0, range: 3..600 }, Piece { src: 1, range: 600..640 }]
+        );
+    }
+
+    #[test]
+    fn empty_ranges_yield_one_empty_shard() {
+        let shards = shard_ranges(&[], 8, 256);
+        assert_eq!(shards, vec![Vec::<Piece>::new()]);
+        let shards = shard_ranges(&[5..5], 8, 256);
+        assert_eq!(flatten(&shards), vec![]);
+    }
+
+    #[test]
+    fn split_pieces_views_are_disjoint_and_correct() {
+        let ranges = vec![0..500, 500..1000];
+        let shards = shard_ranges(&ranges, 3, 256);
+        let mut data: Vec<usize> = (0..1000).collect();
+        let views = split_pieces(&mut data, &shards);
+        assert_eq!(views.len(), shards.len());
+        for (shard, vs) in shards.iter().zip(&views) {
+            for (p, v) in shard.iter().zip(vs) {
+                assert_eq!(v.len(), p.len());
+                assert_eq!(v[0], p.range.start);
+                assert_eq!(*v.last().unwrap(), p.range.end - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn map_shards_matches_inline_and_propagates_order() {
+        let items: Vec<usize> = (0..7).collect();
+        let seq = map_shards(items.clone(), |i, w| i * 1000 + w * w);
+        assert_eq!(seq.len(), 7);
+        for (i, &r) in seq.iter().enumerate() {
+            assert_eq!(r, i * 1000 + i * i);
+        }
+        // single item runs inline (no thread spawn): same contract
+        assert_eq!(map_shards(vec![9usize], |i, w| (i, w)), vec![(0, 9)]);
+        assert_eq!(map_shards(Vec::<usize>::new(), |_, w| w), vec![]);
+    }
+}
