@@ -369,6 +369,53 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
     }
 }
 
+/// Transport frame codec: header + payload framing throughput at real
+/// sync-payload sizes (the per-replica up-wire bytes a TCP lane ships
+/// every H/P steps, fp32 and int4). Framing should be memcpy-bound —
+/// these rows make sure the length-prefixed header never grows a
+/// per-byte cost. (Case names deliberately avoid the bench-diff
+/// tight-case substrings: framing rides the default regression cap,
+/// not the kernel-tight one.)
+fn bench_transport(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
+    use diloco::transport::frame::{
+        decode_frame, encode_frame, FrameHeader, MsgKind, HEADER_LEN,
+    };
+    let n = layout.total();
+    for bits in [OuterBits::Fp32, OuterBits::Int4] {
+        let payload_len = codec_for(bits).wire_bytes(n);
+        let payload = vec![0x5Au8; payload_len];
+        let h = FrameHeader {
+            kind: MsgKind::Report,
+            up_bits: bits.bits() as u8,
+            down_bits: bits.bits() as u8,
+            fingerprint: 0xFEED_F00D,
+            sync_index: 3,
+            frag: Some(1),
+        };
+        let moved = (HEADER_LEN + payload_len) as u64;
+        let mut out: Vec<u8> = Vec::with_capacity(HEADER_LEN + payload_len);
+        b.run_throughput(
+            &format!("{label}/transport frame write {} payload", bits.label()),
+            moved,
+            n as u64,
+            || {
+                out.clear();
+                encode_frame(&h, &payload, &mut out).unwrap();
+                out.len()
+            },
+        );
+        b.run_throughput(
+            &format!("{label}/transport frame read {} payload", bits.label()),
+            moved,
+            n as u64,
+            || {
+                let (hdr, body, total) = decode_frame(&out).unwrap();
+                (hdr.sync_index, body.len(), total)
+            },
+        );
+    }
+}
+
 /// PJRT execution cases (need `make artifacts`).
 fn bench_pjrt(b: &mut Bencher, repo: &RepoConfig) -> anyhow::Result<()> {
     let rt = Runtime::cpu()?;
@@ -795,6 +842,7 @@ fn main() -> anyhow::Result<()> {
         let layout = Arc::new(FlatLayout::new(model_shapes(layers, d, heads)));
         bench_outer_sync(&mut b, label, &layout);
         bench_comm(&mut b, label, &layout);
+        bench_transport(&mut b, label, &layout);
     }
 
     // replica-parallel inner loop (worker pool) on the m0-shaped layout

@@ -2,6 +2,7 @@
 //! subcommand + `--flag value` parser and the `diloco` entrypoints.
 
 pub mod args;
+pub mod remote;
 
 use anyhow::{bail, Context, Result};
 
@@ -28,6 +29,12 @@ USAGE:
   diloco checkpoint --after-sync K [--out runs/ckpt.json] [train flags...]
                                     # run until outer sync K completes, snapshot, stop
   diloco resume  --from runs/ckpt.json   # finish the run; bit-identical to uninterrupted
+  diloco coordinate --toy --expect M [--listen 127.0.0.1:7700] [--steps T]
+                    [train flags...]  # multi-process coordinator: waits for M
+                                      # workers, drives the run over their sockets.
+                                      # --expect 0 = in-process oracle, same final line
+  diloco worker  --connect HOST:PORT --replicas SPEC   # e.g. 0..2 or 1,3
+                 [--verify-config [train flags...]]  # default: adopt coordinator config
   diloco predict --n PARAMS [--m REPLICAS] [--store runs/sweep.jsonl]
   diloco sweep   --grid NAME [--store runs/sweep.jsonl] [--max-runs N]
   diloco grids                      # list available sweep grids
@@ -58,6 +65,8 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
             }
             Ok(())
         }
+        "coordinate" => remote::cmd_coordinate(&args),
+        "worker" => remote::cmd_worker(&args),
         "report" => crate::report::cmd_report(&args),
         "simulate" => crate::report::cmd_simulate(&args),
         "predict" => cmd_predict(&args),

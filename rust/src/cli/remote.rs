@@ -1,0 +1,325 @@
+//! Multi-process verbs: `diloco coordinate` and `diloco worker`.
+//!
+//! The coordinator binds a TCP listener, waits for `--expect` workers
+//! to hand-shake (each claiming a disjoint replica set that must tile
+//! the universe), then runs the exact same `coordinate()` schedule the
+//! in-process driver uses — over [`TcpLane`]s instead of channels. A
+//! worker connects (with bounded-backoff retries), adopts the
+//! coordinator's config from the `Welcome` frame, rebuilds engine,
+//! replicas, and comm link locally, and loops in
+//! [`worker_session`] until `Finish` or the socket closes.
+//!
+//! Remote runs are `--toy` only today: the PJRT engine needs per-host
+//! compiled artifacts and a model manifest, which the handshake does
+//! not ship (the `ENGINE_PJRT` tag in the frame header reserves the
+//! slot). The toy engine is fully deterministic in the handshake
+//! config, which is the property the loopback twin test and the CI
+//! smoke pin: a coordinator plus N worker processes must be
+//! bit-identical to the single-process in-proc run.
+//!
+//! `--expect 0` short-circuits the sockets entirely and runs the
+//! in-process oracle on the same config, printing the same `final:`
+//! line — CI launches both and diffs the two lines.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::{CommLink, ReplicaComm, WorkerComm};
+use crate::coordinator::{
+    drive_ctl, drive_lanes, parse_replica_set, worker_session, Algo, DriveCtl, DrivePlan,
+    EventKind, FaultPlan, Membership, OuterSync, OwnedReplica, RunConfig,
+};
+use crate::runtime::{FlatLayout, HostTensor};
+use crate::train::toy::{toy_init, toy_layout, toy_replicas, toy_replicas_for, ToyEngine};
+use crate::transport::frame::fnv1a64;
+use crate::transport::tcp::{
+    accept_workers, connect_with_backoff, worker_handshake, SessionInfo, TcpWorkerLink,
+    CONNECT_ATTEMPTS, ENGINE_TOY,
+};
+use crate::util::json::Json;
+
+use super::args::Args;
+use super::run_config_from_args;
+
+/// Outer Nesterov momentum for toy remote runs. Coordinator-side state
+/// only (workers never see it), pinned so the oracle and the TCP run
+/// can't drift through a default change.
+const TOY_OUTER_MOMENTUM: f64 = 0.9;
+
+/// The config envelope shipped in the `Welcome` frame and fingerprinted
+/// by the handshake: the full [`RunConfig`] JSON plus the fields a
+/// worker cannot derive from it (step count, engine tag). Key order is
+/// fixed here so a `--verify-config` worker rebuilding the envelope
+/// from its own flags lands on the same fingerprint bytes.
+pub fn toy_envelope(cfg: &RunConfig, steps: usize) -> String {
+    Json::obj(vec![
+        ("engine", Json::str("toy")),
+        ("steps", Json::int(steps as u64)),
+        ("run", cfg.to_json()),
+    ])
+    .to_string()
+}
+
+/// Everything the toy coordinator derives from the run config before
+/// any socket opens — mirrors `prepare()`'s schedule math so remote
+/// runs honor fragments, overlap, and churn exactly like `train`.
+struct ToySchedule {
+    universe: usize,
+    frag_interval: usize,
+    fragments: usize,
+    plan_events: Vec<crate::coordinator::FaultEvent>,
+    live: Vec<bool>,
+}
+
+fn toy_schedule(cfg: &RunConfig, steps: usize) -> Result<ToySchedule> {
+    let m = match cfg.algo {
+        Algo::DiLoCo { replicas } => replicas,
+        Algo::DataParallel => {
+            bail!("remote runs need --algo diloco-mK (Data-Parallel has no outer sync to ship)")
+        }
+    };
+    if m == 0 {
+        bail!("--algo diloco-m0: at least one replica required");
+    }
+    if steps == 0 {
+        bail!("--steps 0: nothing to run");
+    }
+    let h = cfg.sync_every.max(1);
+    let fragments = cfg.streaming_fragments.max(1);
+    if fragments > 1 && h % fragments != 0 {
+        bail!("streaming fragments P={fragments} must divide H={h}");
+    }
+    let frag_interval = if fragments > 1 { h / fragments } else { h };
+    if cfg.overlap_tau > 0 && cfg.overlap_tau >= frag_interval {
+        bail!(
+            "--overlap-tau {} needs tau < H/P = {frag_interval}",
+            cfg.overlap_tau
+        );
+    }
+    let n_sends = ((steps - 1) / frag_interval + 1) as u64;
+    let fault_plan = FaultPlan::parse(&cfg.churn, cfg.seed)?;
+    let universe = fault_plan.universe(m);
+    let plan_events = fault_plan.resolve(m, n_sends);
+    let live = Membership::initial(universe, m).flags().to_vec();
+    Ok(ToySchedule {
+        universe,
+        frag_interval,
+        fragments,
+        plan_events,
+        live,
+    })
+}
+
+/// Build the coordinator-side outer engine over the toy layout with the
+/// run's codecs attached — shared by the oracle and the TCP path.
+fn toy_outer_sync(layout: &Arc<FlatLayout>, cfg: &RunConfig, fragments: usize) -> Result<OuterSync> {
+    use crate::comm::codec_for;
+    let init_lits = toy_init(layout, cfg.seed)?;
+    let host: Vec<HostTensor> = init_lits
+        .iter()
+        .map(|l| HostTensor::from_literal(l))
+        .collect::<Result<_>>()?;
+    Ok(OuterSync::new(
+        Arc::clone(layout),
+        &host,
+        init_lits,
+        cfg.outer_lr,
+        TOY_OUTER_MOMENTUM,
+        fragments,
+    )?
+    .with_sync_threads(cfg.sync_threads.max(1))
+    .with_codec(codec_for(cfg.outer_bits), cfg.seed)
+    .with_down_codec(codec_for(cfg.outer_bits_down)))
+}
+
+/// The one line CI diffs between the `--expect 0` oracle and the real
+/// multi-process run. Everything in it must be transport-invariant:
+/// losses, sync count, and wire accounting — never socket facts.
+fn print_final(cfg: &RunConfig, steps: usize, train: f64, eval: f64, syncs: usize, sync: &OuterSync) {
+    let w = sync.wire_stats();
+    println!(
+        "final: algo={} steps={steps} train_loss={train:.12e} eval_loss={eval:.12e} \
+         syncs={syncs} wire_up={} wire_down={} framed={}",
+        cfg.algo.label(),
+        w.total_up(),
+        w.total_down(),
+        w.total_framed(),
+    );
+}
+
+fn print_journal(ctl: &DriveCtl) {
+    for ev in ctl.journal.events() {
+        match ev.kind {
+            EventKind::Crash | EventKind::Join | EventKind::Leave | EventKind::Straggle => {
+                let r = ev.replica.map(|r| format!("r{r}")).unwrap_or_default();
+                println!(
+                    "journal: {} {r} at step {} sync {} ({})",
+                    ev.kind.label(),
+                    ev.step,
+                    ev.sync,
+                    ev.detail
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `diloco coordinate --toy --expect M [--listen ADDR] [--steps T]
+/// [train flags...]` — bind, hand-shake M workers, drive the run over
+/// their lanes. `--expect 0` runs the in-process oracle instead.
+pub fn cmd_coordinate(args: &Args) -> Result<()> {
+    if !args.flag("toy") {
+        bail!(
+            "diloco coordinate currently requires --toy: the PJRT engine needs per-host \
+             artifacts the handshake does not ship (the frame header reserves an engine \
+             tag for when it does)"
+        );
+    }
+    let cfg = run_config_from_args(args)?;
+    let steps: usize = args.get_or("steps", "24").parse().context("--steps")?;
+    let expect: usize = args.get_or("expect", "1").parse().context("--expect")?;
+    let sched = toy_schedule(&cfg, steps)?;
+
+    let layout = toy_layout();
+    let engine = ToyEngine::new(&layout);
+    let mut sync = toy_outer_sync(&layout, &cfg, sched.fragments)?;
+    let mut ctl = DriveCtl::fresh(sched.universe);
+    ctl.events = sched.plan_events;
+    ctl.live = sched.live;
+    let mut plan = DrivePlan {
+        total_steps: steps,
+        sync_interval: sched.frag_interval,
+        fragments: sched.fragments,
+        n_params: layout.n_leaves(),
+        eval_every: cfg.eval_every,
+        log_every: cfg.log_every.max(1),
+        workers: 1,
+        overlap_tau: cfg.overlap_tau,
+    };
+
+    let outcome = if expect == 0 {
+        // In-process oracle on the identical schedule: same final line,
+        // no sockets. CI runs this next to the real thing and diffs.
+        let mut replicas = toy_replicas(&layout, 0..sched.universe, cfg.seed)?;
+        drive_ctl(&engine, &mut replicas, Some(&mut sync), &plan, &mut ctl)?
+    } else {
+        let envelope = toy_envelope(&cfg, steps);
+        let info = SessionInfo {
+            fingerprint: fnv1a64(envelope.as_bytes()),
+            up_bits: cfg.outer_bits.bits() as u8,
+            down_bits: cfg.outer_bits_down.bits() as u8,
+            engine: ENGINE_TOY,
+            live: ctl.live.clone(),
+            config_json: envelope,
+        };
+        let listen = args.get_or("listen", "127.0.0.1:7700");
+        let listener = TcpListener::bind(&listen)
+            .with_context(|| format!("coordinate: binding {listen}"))?;
+        println!("coordinate: listening on {}", listener.local_addr()?);
+        let lanes = accept_workers(&listener, expect, &info)?;
+        for (i, (_, rids)) in lanes.iter().enumerate() {
+            println!("coordinate: worker {i} owns replicas {rids:?}");
+        }
+        plan.workers = lanes.len();
+        drive_lanes(&engine, lanes, Some(&mut sync), &plan, &mut ctl)?
+    };
+
+    print_journal(&ctl);
+    let eval = engine.eval(sync.global_literals()?)?;
+    let train = outcome.step_losses.last().copied().unwrap_or(f64::NAN);
+    print_final(&cfg, steps, train, eval, outcome.outer_syncs, &sync);
+    Ok(())
+}
+
+/// `diloco worker --connect HOST:PORT --replicas SPEC [--verify-config
+/// [train flags...]]` — connect with bounded backoff, adopt the
+/// coordinator's config (or verify it against local flags), rebuild
+/// the toy engine + replicas + comm link, and serve segments until
+/// `Finish` or the socket closes.
+pub fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.get("connect").context("--connect HOST:PORT required")?;
+    let spec = args
+        .get("replicas")
+        .context("--replicas SPEC required (e.g. 0..2 or 1,3)")?;
+    let claims = parse_replica_set(&spec)?;
+
+    // Adopt by default: fingerprint 0 and zero widths tell the
+    // coordinator "send me the truth". `--verify-config` instead
+    // rebuilds the envelope from this process's own flags, so any
+    // config drift between launch scripts dies in the handshake.
+    let (fp, up, down) = if args.flag("verify-config") {
+        let cfg = run_config_from_args(args)?;
+        let steps: usize = args.get_or("steps", "24").parse().context("--steps")?;
+        let envelope = toy_envelope(&cfg, steps);
+        (
+            fnv1a64(envelope.as_bytes()),
+            cfg.outer_bits.bits() as u8,
+            cfg.outer_bits_down.bits() as u8,
+        )
+    } else {
+        (0, 0, 0)
+    };
+
+    let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS)?;
+    let info = worker_handshake(&mut stream, &claims, fp, up, down)?;
+    if info.engine != ENGINE_TOY {
+        bail!(
+            "coordinator runs engine tag {} but this build only serves toy remote runs",
+            info.engine
+        );
+    }
+    let envelope = Json::parse(&info.config_json)
+        .map_err(|e| anyhow::anyhow!("worker: bad config envelope in Welcome: {e}"))?;
+    let cfg = RunConfig::from_json(
+        envelope
+            .get("run")
+            .context("worker: Welcome envelope has no \"run\" config")?,
+    )?;
+
+    let layout = toy_layout();
+    let engine = ToyEngine::new(&layout);
+    let n_params = layout.n_leaves();
+    let reps = toy_replicas_for(&layout, &claims, cfg.seed)?;
+    let mut owned: Vec<OwnedReplica> = claims
+        .iter()
+        .zip(reps)
+        .map(|(&rid, rep)| OwnedReplica {
+            rid,
+            live: info.live.get(rid).copied().unwrap_or(false),
+            rep,
+            rc: ReplicaComm::default(),
+        })
+        .collect();
+
+    // Rebuild the comm plane exactly like the in-process driver: size
+    // the shared arenas from any owned replica's init state (Algorithm
+    // 1 line 2 — all replicas enter equal to the global).
+    let mut wc = WorkerComm::default();
+    let link = CommLink::for_run(
+        &layout,
+        cfg.outer_bits,
+        cfg.outer_bits_down,
+        cfg.streaming_fragments.max(1),
+        cfg.seed,
+    );
+    let link = if link.is_active() {
+        let first = owned.first().context("worker: empty replica claim")?;
+        link.init_snapshot(&mut wc, &first.rep.state)?;
+        for o in &mut owned {
+            link.init_replica(&mut o.rc);
+        }
+        Some(link)
+    } else {
+        None
+    };
+
+    println!("worker: serving replicas {claims:?} for {addr}");
+    let mut wl = TcpWorkerLink::new(stream, &info)?;
+    let (_owned, arena_bytes, finish) = worker_session(&engine, n_params, link, wc, owned, &mut wl);
+    finish?;
+    println!("worker: done (replicas {claims:?}, comm arena {arena_bytes} B)");
+    Ok(())
+}

@@ -151,6 +151,40 @@ impl CommLink {
         CommLink { up, down }
     }
 
+    /// Build both legs of a run's comm plane from its recipe — the
+    /// same construction as `OuterSync::link()`, callable where no
+    /// `OuterSync` exists (a remote `diloco worker` rebuilding its
+    /// comm state from the handshake config). Bit-compatibility with
+    /// the coordinator side needs only equal (layout, codec widths,
+    /// fragment count, run seed) — exactly the fields the TCP
+    /// handshake pins.
+    pub fn for_run(
+        layout: &Arc<crate::runtime::FlatLayout>,
+        up: super::codec::OuterBits,
+        down: super::codec::OuterBits,
+        fragments: usize,
+        run_seed: u64,
+    ) -> CommLink {
+        use super::channel::Direction;
+        use super::codec::codec_for;
+        CommLink::new(
+            Channel::new(
+                Arc::clone(layout),
+                codec_for(up),
+                fragments,
+                run_seed,
+                Direction::Up,
+            ),
+            Channel::new(
+                Arc::clone(layout),
+                codec_for(down),
+                fragments,
+                run_seed,
+                Direction::Down,
+            ),
+        )
+    }
+
     pub fn up(&self) -> &Channel {
         &self.up
     }

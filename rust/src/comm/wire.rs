@@ -43,6 +43,22 @@ impl SyncWireRecord {
     pub fn bytes_up(&self) -> u64 {
         self.bytes_per_replica * self.replicas as u64
     }
+
+    /// Up bytes as framed on a real socket: payload plus one
+    /// length-prefixed transport header per replica contribution
+    /// (`transport::frame::FRAME_OVERHEAD`). The payload counts stay
+    /// the paper-facing numbers; framed counts are what the TCP
+    /// transport actually moves and what socket calibration compares
+    /// against.
+    pub fn framed_up(&self) -> u64 {
+        self.bytes_up() + self.replicas as u64 * crate::transport::frame::FRAME_OVERHEAD
+    }
+
+    /// Down bytes as framed on a real socket: one header for the
+    /// single broadcast stream.
+    pub fn framed_down(&self) -> u64 {
+        self.bytes_down + crate::transport::frame::FRAME_OVERHEAD
+    }
 }
 
 /// Per-run accumulator, owned by `OuterSync`; one record per sync.
@@ -106,6 +122,21 @@ impl WireStats {
     pub fn total(&self) -> u64 {
         self.total_up() + self.total_down()
     }
+
+    /// Total up bytes including per-contribution frame headers.
+    pub fn total_framed_up(&self) -> u64 {
+        self.records.iter().map(|r| r.framed_up()).sum()
+    }
+
+    /// Total down bytes including per-broadcast frame headers.
+    pub fn total_framed_down(&self) -> u64 {
+        self.records.iter().map(|r| r.framed_down()).sum()
+    }
+
+    /// Total bytes as framed on a real socket.
+    pub fn total_framed(&self) -> u64 {
+        self.total_framed_up() + self.total_framed_down()
+    }
 }
 
 #[cfg(test)]
@@ -126,5 +157,19 @@ mod tests {
         assert_eq!(w.total_up(), 4000 + 1200);
         assert_eq!(w.total_down(), 1000);
         assert_eq!(w.total(), 6200);
+    }
+
+    #[test]
+    fn framed_totals_add_one_header_per_stream() {
+        use crate::transport::frame::FRAME_OVERHEAD;
+        let mut w = WireStats::default();
+        w.record(None, 4, 1000, 500);
+        w.record(Some(1), 4, 300, 500);
+        // 4 contributions per sync, 1 broadcast per sync
+        assert_eq!(w.records()[0].framed_up(), 4000 + 4 * FRAME_OVERHEAD);
+        assert_eq!(w.records()[0].framed_down(), 500 + FRAME_OVERHEAD);
+        assert_eq!(w.total_framed_up(), w.total_up() + 8 * FRAME_OVERHEAD);
+        assert_eq!(w.total_framed_down(), w.total_down() + 2 * FRAME_OVERHEAD);
+        assert_eq!(w.total_framed(), w.total() + 10 * FRAME_OVERHEAD);
     }
 }

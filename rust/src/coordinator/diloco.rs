@@ -275,6 +275,15 @@ impl RunConfig {
                 .to_string(),
         })
     }
+
+    /// FNV-1a fingerprint of the canonical config JSON — what the TCP
+    /// handshake pins, so a worker launched with a different model,
+    /// seed, schedule, or codec pair is rejected before it can corrupt
+    /// a run. Serialization is deterministic (ordered keys, exact
+    /// integer carriage), so equal configs always fingerprint equal.
+    pub fn fingerprint(&self) -> u64 {
+        crate::transport::frame::fnv1a64(self.to_json().to_string().as_bytes())
+    }
 }
 
 /// Everything measured during a run (serialized into the sweep store).
@@ -315,6 +324,12 @@ pub struct RunMetrics {
     /// syncs — the down codec's encoded payload sizes, counted once
     /// per sync (0 for DP).
     pub wire_down_bytes: u64,
+    /// Wire bytes as framed on a real socket: payloads plus one
+    /// length-prefixed transport header per contribution/broadcast
+    /// stream (`transport::frame::FRAME_OVERHEAD` each). The payload
+    /// counts above stay the paper-facing numbers; this is what the
+    /// TCP transport actually moves.
+    pub wire_framed_bytes: u64,
     /// The membership-churn spec the run used ("" = churn-free).
     pub churn: String,
     /// Fraction of (sync, replica) contribution slots the churn plan
@@ -367,6 +382,7 @@ impl RunMetrics {
             // wire bytes are u64 exact counts; Json::int avoids f64
             ("wire_up_bytes", Json::int(self.wire_up_bytes)),
             ("wire_down_bytes", Json::int(self.wire_down_bytes)),
+            ("wire_framed_bytes", Json::int(self.wire_framed_bytes)),
             ("churn", Json::str(&self.churn)),
             ("dropout_rate", Json::num(self.dropout_rate)),
         ])
@@ -439,6 +455,14 @@ impl RunMetrics {
                 .get("wire_down_bytes")
                 .and_then(|v| v.as_u64())
                 .unwrap_or(0),
+            // absent in pre-transport records: approximate with the
+            // payload totals (headers unknowable after the fact)
+            wire_framed_bytes: j.get("wire_framed_bytes").and_then(|v| v.as_u64()).unwrap_or(
+                j.get("wire_up_bytes").and_then(|v| v.as_u64()).unwrap_or(0)
+                    + j.get("wire_down_bytes")
+                        .and_then(|v| v.as_u64())
+                        .unwrap_or(0),
+            ),
             // absent in pre-membership records: those ran churn-free
             churn: j
                 .get("churn")
@@ -1099,9 +1123,13 @@ fn finish(
         }
     }
 
-    let (wire_up_bytes, wire_down_bytes) = match &sync {
-        Some(bus) => (bus.wire_stats().total_up(), bus.wire_stats().total_down()),
-        None => (0, 0),
+    let (wire_up_bytes, wire_down_bytes, wire_framed_bytes) = match &sync {
+        Some(bus) => (
+            bus.wire_stats().total_up(),
+            bus.wire_stats().total_down(),
+            bus.wire_stats().total_framed(),
+        ),
+        None => (0, 0, 0),
     };
 
     Ok(RunMetrics {
@@ -1130,6 +1158,7 @@ fn finish(
         outer_bits_down: pre.outer_bits_down.bits(),
         wire_up_bytes,
         wire_down_bytes,
+        wire_framed_bytes,
         churn: pre.churn_spec.clone(),
         dropout_rate: pre.dropout_rate,
     })

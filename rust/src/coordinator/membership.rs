@@ -286,6 +286,46 @@ impl Membership {
     }
 }
 
+/// Parse a replica-claim spec: a comma list of single ids (`K`) and
+/// half-open ranges (`A..B`), e.g. `0..2,5` = replicas 0, 1, 5. Used
+/// by `diloco worker --replicas` to claim ownership at the handshake.
+/// Duplicates within one spec are rejected here; overlap *between*
+/// workers is the coordinator's handshake check.
+pub fn parse_replica_set(spec: &str) -> Result<Vec<usize>> {
+    let mut out: Vec<usize> = Vec::new();
+    for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if let Some((a, b)) = item.split_once("..") {
+            let a: usize = a
+                .trim()
+                .parse()
+                .with_context(|| format!("replicas: bad range start in {item:?}"))?;
+            let b: usize = b
+                .trim()
+                .parse()
+                .with_context(|| format!("replicas: bad range end in {item:?}"))?;
+            if a >= b {
+                bail!("replicas: empty range {item:?} (want A..B with A < B)");
+            }
+            out.extend(a..b);
+        } else {
+            out.push(
+                item.parse()
+                    .with_context(|| format!("replicas: bad id {item:?}"))?,
+            );
+        }
+    }
+    if out.is_empty() {
+        bail!("replicas: empty spec {spec:?}");
+    }
+    let mut seen = out.clone();
+    seen.sort_unstable();
+    seen.dedup();
+    if seen.len() != out.len() {
+        bail!("replicas: duplicate id in {spec:?}");
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

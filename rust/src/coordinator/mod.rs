@@ -16,7 +16,10 @@ pub use checkpoint::{Checkpoint, OutcomeCkpt, ReplicaCkpt};
 pub use diloco::{run, run_checkpoint, run_resume, Algo, RunConfig, RunMetrics};
 pub use fsm::{CoordinatorFsm, Phase};
 pub use journal::{EventKind, Journal, JournalEvent};
-pub use membership::{FaultEvent, FaultKind, FaultPlan, Membership};
+pub use membership::{parse_replica_set, FaultEvent, FaultKind, FaultPlan, Membership};
 pub use outer_opt::{outer_gradient, OuterOpt};
-pub use pool::{drive, drive_ctl, DriveCtl, DriveOutcome, DrivePlan, InnerEngine, ReplicaState};
+pub use pool::{
+    drive, drive_ctl, drive_lanes, worker_session, DriveCtl, DriveOutcome, DrivePlan, InnerEngine,
+    OwnedReplica, ReplicaState,
+};
 pub use sync::{OuterSync, SyncState};

@@ -107,7 +107,6 @@
 //! therefore every loss and parameter bit — is identical at any
 //! worker count for any τ.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
@@ -118,6 +117,11 @@ use crate::coordinator::journal::{EventKind, Journal};
 use crate::coordinator::membership::{FaultEvent, FaultKind};
 use crate::coordinator::sync::OuterSync;
 use crate::data::synthetic::TokenStream;
+use crate::transport::msg::{
+    Adopt, Broadcast, Cmd, EncodeSpec, PayloadSpec, SegmentChurn, SegmentData, SyncPayload,
+    WorkerReport,
+};
+use crate::transport::{inproc, Lane, WorkerLink};
 
 /// One replica as the pool owns it: params ++ m ++ v literal handles
 /// (manifest leaf order; only the first `n_params` leaves take part in
@@ -214,70 +218,6 @@ pub struct DriveOutcome {
     /// grow unnoticed.
     pub down_wire_arena_bytes: u64,
 }
-
-/// Literal adopt list: (leaf index, shared literal) pairs every replica
-/// applies before its next inner step.
-type Adopt = Vec<(usize, Arc<xla::Literal>)>;
-
-/// One broadcast as it leaves the coordinator.
-#[derive(Clone)]
-enum Broadcast {
-    /// Identity down-wire (and Data-Parallel): deduplicated `Arc`
-    /// literal handoff — zero-copy, one upload per leaf run-wide.
-    Literals(Adopt),
-    /// Lossy down-wire: the fragment's single encoded payload, one
-    /// allocation `Arc`-shared by every worker; each decodes it into
-    /// its shared snapshot.
-    Encoded {
-        frag: Option<usize>,
-        bytes: Arc<Vec<u8>>,
-    },
-}
-
-impl Broadcast {
-    fn empty() -> Broadcast {
-        Broadcast::Literals(Vec::new())
-    }
-}
-
-/// What the coordinator told the workers to produce at segment end.
-#[derive(Debug, Clone)]
-struct EncodeSpec {
-    /// Streaming fragment due at the boundary (None = full sync).
-    frag: Option<usize>,
-    /// 0-based outer-sync index (stochastic-rounding seed component).
-    sync_index: u64,
-}
-
-/// What a segment's boundary asks of the workers. Merge-only
-/// boundaries (and the drain's main segment) ask for nothing — the
-/// coordinator would discard it, so the workers never build it.
-#[derive(Debug, Clone)]
-enum PayloadSpec {
-    /// No payload crosses at this boundary.
-    None,
-    /// Current parameter literal handles (identity up-wire sends, and
-    /// every Data-Parallel segment — its boundary eval reads them).
-    Params,
-    /// Encoded wire contribution for the due fragment (lossy up-wire).
-    Encoded(EncodeSpec),
-}
-
-/// One replica's contribution at a segment boundary.
-enum SyncPayload {
-    /// Data-Parallel (and identity up-wire sends): current parameter
-    /// literal handles.
-    Params(Vec<Arc<xla::Literal>>),
-    /// DiLoCo lossy up-wire: the encoded contribution for the due
-    /// fragment.
-    Encoded(Vec<u8>),
-    /// The boundary asked for nothing ([`PayloadSpec::None`]) —
-    /// consuming this anywhere is a coordinator bug and fails loud.
-    Skipped,
-}
-
-/// Per-segment result: `losses[r]` / `payloads[r]` for replica r.
-type SegmentData = (Vec<Vec<f64>>, Vec<SyncPayload>);
 
 /// Apply one broadcast to a worker's shared comm state and return the
 /// literal adopt list its replicas apply: the identity form passes the
@@ -612,8 +552,7 @@ pub fn drive_ctl<E: InnerEngine>(
             .iter()
             .map(|set| set.iter().map(|o| o.rid).collect())
             .collect();
-        let mut txs = Vec::with_capacity(workers);
-        let mut rxs = Vec::with_capacity(workers);
+        let mut lanes = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for set in owned {
             // one shared arena set per worker, snapshotted from any of
@@ -629,17 +568,17 @@ pub fn drive_ctl<E: InnerEngine>(
                     l.init_snapshot(&mut wc, &first.rep.state)?;
                 }
             }
-            let (cmd_tx, cmd_rx) = channel::<Cmd>();
-            let (res_tx, res_rx) = channel::<Result<WorkerReport>>();
-            txs.push(cmd_tx);
-            rxs.push(res_rx);
+            let (lane, mut wl) = inproc::pair();
+            lanes.push((lane, set.iter().map(|o| o.rid).collect::<Vec<_>>()));
             let lk = link.clone();
             handles.push(
-                scope.spawn(move || worker_loop(engine, n_params, lk, wc, set, cmd_rx, res_tx)),
+                scope.spawn(move || worker_session(engine, n_params, lk, wc, set, &mut wl)),
             );
         }
 
-        let mut exec = PoolExec { txs, rxs, m };
+        // fail_on_death: an in-proc lane dying means a worker thread
+        // vanished without reporting — a bug, never tolerable churn
+        let mut exec = LaneExec::new(lanes, m, /* fail_on_death */ true);
         let res = coordinate(engine, &mut exec, sync, plan, m, ctl);
 
         // Shut down and reclaim replica states whether or not the run
@@ -648,11 +587,7 @@ pub fn drive_ctl<E: InnerEngine>(
             Ok((_, p)) => p.clone(),
             Err(_) => Broadcast::empty(),
         };
-        for tx in &exec.txs {
-            let _ = tx.send(Cmd::Finish {
-                broadcast: pending.clone(),
-            });
-        }
+        exec.finish(&pending);
         drop(exec); // closes the command channels
         let mut returned: Vec<OwnedReplica> = Vec::with_capacity(m);
         let mut comm_bytes = 0u64;
@@ -740,28 +675,16 @@ trait SegmentExec {
     /// buffers carry no data (every byte is rewritten on reuse), so
     /// dropping them is always correct; the default does exactly that.
     fn recycle_wires(&mut self, _bufs: Vec<Vec<u8>>) {}
-}
 
-/// Membership changes taking effect at a segment's dispatch, in
-/// application order: `deaths` freeze their replicas *before* the
-/// broadcast is adopted (a crashed/left replica never sees a merge it
-/// missed), then live replicas adopt the broadcast, then `joins` come
-/// alive initialized from the current broadcast view — either
-/// `join_view` (full-leaf literal list the coordinator built from the
-/// global; identity wires, where workers keep no snapshot) or the
-/// worker's own decoded snapshot (lossy wires — which also hands the
-/// joiner the down-wire EF stream state for free, since the snapshot
-/// *is* that stream's decode state).
-#[derive(Clone, Default)]
-struct SegmentChurn {
-    deaths: Vec<usize>,
-    joins: Vec<usize>,
-    join_view: Adopt,
-}
-
-impl SegmentChurn {
-    fn is_empty(&self) -> bool {
-        self.deaths.is_empty() && self.joins.is_empty()
+    /// Replicas lost to transport-level lane deaths since the last
+    /// call (a TCP worker hung up or timed out mid-run). The
+    /// coordinator consumes this right after every `collect` and turns
+    /// each loss into journaled `Crash` membership. In-process and
+    /// inline executors never lose lanes, so the default is empty —
+    /// which is what keeps crash-free runs bit-identical through the
+    /// transport abstraction.
+    fn take_lost(&mut self) -> Vec<usize> {
+        Vec::new()
     }
 }
 
@@ -1040,8 +963,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
         // Liveness for this segment (crashes and joins above applied;
         // leavers still run it): who steps, whose losses count, who
         // contributes to a send at its boundary.
-        let seg_live: Vec<bool> = ctl.live.clone();
-        let live_n = seg_live.iter().filter(|&&l| l).count();
+        let mut seg_live: Vec<bool> = ctl.live.clone();
 
         let t1 = next_boundary(t0, plan, diloco, in_flight.as_ref().map(|f| f.merge_at));
         let merge_due = in_flight.as_ref().is_some_and(|f| f.merge_at == t1);
@@ -1110,6 +1032,28 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
         }
 
         let (losses, payloads) = exec.collect(t0, t1)?;
+        // Transport-level lane deaths (a remote worker hung up or
+        // timed out) surface here as crashes: the lane's replicas took
+        // no (complete) part in this segment, so they are dead for the
+        // whole of it — the PR 6 crash rule — and drop from this
+        // reduce onward. Survivors complete the run.
+        for r in exec.take_lost() {
+            if ctl.live[r] {
+                ctl.live[r] = false;
+                seg_live[r] = false;
+                ctl.journal.append(
+                    t1,
+                    sends_abs,
+                    EventKind::Crash,
+                    Some(r),
+                    "transport lane died; dropped from this reduce onward",
+                );
+            }
+        }
+        if !ctl.live.iter().any(|&l| l) {
+            bail!("drive: every transport lane died by step {t1}");
+        }
+        let live_n = seg_live.iter().filter(|&&l| l).count();
         for (r, l) in losses.iter().enumerate() {
             let want = if seg_live[r] { t1 - t0 } else { 0 };
             if l.len() != want {
@@ -1243,6 +1187,18 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             exec.dispatch(t1, t1, &pending, &flush_spec, &SegmentChurn::default())?;
             pending = Broadcast::empty();
             let (_, flush) = exec.collect(t1, t1)?;
+            for r in exec.take_lost() {
+                if ctl.live[r] {
+                    ctl.live[r] = false;
+                    ctl.journal.append(
+                        t1,
+                        start_syncs + sends,
+                        EventKind::Crash,
+                        Some(r),
+                        "transport lane died; dropped from the final flush",
+                    );
+                }
+            }
             let contributors: Vec<usize> = ctl
                 .live
                 .iter()
@@ -1476,51 +1432,34 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
 
 // ---- worker pool ------------------------------------------------------
 
-enum Cmd {
-    /// Apply membership changes and the broadcast, run steps
-    /// (from, to], then build the boundary payload `payload` asks for.
-    Run {
-        from: usize,
-        to: usize,
-        broadcast: Broadcast,
-        payload: PayloadSpec,
-        churn: SegmentChurn,
-    },
-    /// Spent wire payload buffers from a completed reduce, returned
-    /// for this worker's encode pool. No reply — the worker absorbs
-    /// them between segments.
-    Spares(Vec<Vec<u8>>),
-    /// Apply the final broadcast and exit, returning replica ownership.
-    Finish { broadcast: Broadcast },
-}
-
-struct WorkerReport {
-    /// (replica id, per-step losses, boundary sync payload).
-    reps: Vec<(usize, Vec<f64>, SyncPayload)>,
-}
-
 /// One replica as a worker owns it: id, liveness, state, and up-wire
 /// EF residual. Dead entries (pre-join placeholders, crash/leave
 /// remains) are frozen — no steps, no adopts — until a join revives
 /// them or the run ends and they return for salvage/checkpointing.
-struct OwnedReplica {
-    rid: usize,
-    live: bool,
-    rep: ReplicaState,
-    rc: ReplicaComm,
+pub struct OwnedReplica {
+    pub rid: usize,
+    pub live: bool,
+    pub rep: ReplicaState,
+    pub rc: ReplicaComm,
 }
 
-fn worker_loop<E: InnerEngine>(
+/// One worker's whole life: loop on commands from a [`WorkerLink`]
+/// (any transport), run segments over the owned replicas, report
+/// back; exit on `Finish` or when the link closes. Returns replica
+/// ownership, the worker-side comm arena footprint, and the final
+/// broadcast's verdict. The in-process pool and the remote
+/// `diloco worker` verb both run exactly this function — which is why
+/// a remote run cannot diverge from the oracle.
+pub fn worker_session<E: InnerEngine>(
     engine: &E,
     n_params: usize,
     link: Option<CommLink>,
     mut wc: WorkerComm,
     mut owned: Vec<OwnedReplica>,
-    rx: Receiver<Cmd>,
-    tx: Sender<Result<WorkerReport>>,
+    lk: &mut dyn WorkerLink,
 ) -> (Vec<OwnedReplica>, u64, Result<()>) {
     let mut finish: Result<()> = Ok(());
-    while let Ok(cmd) = rx.recv() {
+    while let Some(cmd) = lk.recv_cmd() {
         match cmd {
             Cmd::Run {
                 from,
@@ -1642,7 +1581,7 @@ fn worker_loop<E: InnerEngine>(
                     None => Ok(report),
                 };
                 let failed = msg.is_err();
-                if tx.send(msg).is_err() || failed {
+                if lk.send_report(msg).is_err() || failed {
                     break;
                 }
             }
@@ -1674,13 +1613,68 @@ fn worker_loop<E: InnerEngine>(
     (owned, comm_bytes, finish)
 }
 
-struct PoolExec {
-    txs: Vec<Sender<Cmd>>,
-    rxs: Vec<Receiver<Result<WorkerReport>>>,
-    m: usize,
+/// One worker connection as the coordinator's executor sees it.
+struct LaneSlot<L: Lane> {
+    lane: L,
+    /// Replica ids this lane owns (fixed at connection).
+    rids: Vec<usize>,
+    alive: bool,
 }
 
-impl SegmentExec for PoolExec {
+/// The transport-generic segment executor: one [`Lane`] per worker,
+/// whatever carries it — in-proc channels (the pool) or TCP sockets
+/// (`diloco coordinate`). Dispatch fires every lane and returns
+/// immediately (the coordinator reduces the in-flight sync under the
+/// workers' compute); collect blocks per lane in worker-index order
+/// and re-indexes reports by replica id, so the reduction order — and
+/// every downstream bit — is transport-independent.
+///
+/// `fail_on_death` picks the policy for a lane that vanishes: the
+/// in-proc pool fails the run (a vanished thread is a bug), remote
+/// mode records the lane's replicas in `lost` and keeps going — the
+/// drive loop turns them into journaled `Crash` membership.
+struct LaneExec<L: Lane> {
+    slots: Vec<LaneSlot<L>>,
+    m: usize,
+    fail_on_death: bool,
+    lost: Vec<usize>,
+}
+
+impl<L: Lane> LaneExec<L> {
+    fn new(lanes: Vec<(L, Vec<usize>)>, m: usize, fail_on_death: bool) -> LaneExec<L> {
+        LaneExec {
+            slots: lanes
+                .into_iter()
+                .map(|(lane, rids)| LaneSlot {
+                    lane,
+                    rids,
+                    alive: true,
+                })
+                .collect(),
+            m,
+            fail_on_death,
+            lost: Vec::new(),
+        }
+    }
+
+    /// Ship the final broadcast to every surviving lane. Send failures
+    /// are ignored — a lane dead at shutdown already had its replicas
+    /// crashed out (remote) or failed the run (in-proc).
+    fn finish(&mut self, broadcast: &Broadcast) {
+        for slot in self.slots.iter_mut().filter(|s| s.alive) {
+            let _ = slot.lane.send(Cmd::Finish {
+                broadcast: broadcast.clone(),
+            });
+        }
+    }
+
+    fn lane_died(slot: &mut LaneSlot<L>, lost: &mut Vec<usize>) {
+        slot.alive = false;
+        lost.extend(slot.rids.iter().copied());
+    }
+}
+
+impl<L: Lane> SegmentExec for LaneExec<L> {
     /// Fire the segment at every worker and return immediately — the
     /// coordinator reduces the in-flight sync while workers compute.
     fn dispatch(
@@ -1691,15 +1685,20 @@ impl SegmentExec for PoolExec {
         payload: &PayloadSpec,
         churn: &SegmentChurn,
     ) -> Result<()> {
-        for tx in &self.txs {
-            tx.send(Cmd::Run {
+        for slot in self.slots.iter_mut().filter(|s| s.alive) {
+            let cmd = Cmd::Run {
                 from,
                 to,
                 broadcast: broadcast.clone(),
                 payload: payload.clone(),
                 churn: churn.clone(),
-            })
-            .map_err(|_| anyhow!("worker hung up before segment ({from}, {to}]"))?;
+            };
+            if slot.lane.send(cmd).is_err() {
+                if self.fail_on_death {
+                    bail!("worker hung up before segment ({from}, {to}]");
+                }
+                Self::lane_died(slot, &mut self.lost);
+            }
         }
         Ok(())
     }
@@ -1707,13 +1706,34 @@ impl SegmentExec for PoolExec {
     fn collect(&mut self, from: usize, to: usize) -> Result<SegmentData> {
         let mut losses: Vec<Vec<f64>> = vec![Vec::new(); self.m];
         let mut payloads: Vec<Option<SyncPayload>> = (0..self.m).map(|_| None).collect();
-        for (w, rx) in self.rxs.iter().enumerate() {
-            let report = rx
-                .recv()
-                .map_err(|_| anyhow!("worker {w} died during segment ({from}, {to}]"))??;
-            for (rid, l, p) in report.reps {
-                losses[rid] = l;
-                payloads[rid] = Some(p);
+        for (w, slot) in self.slots.iter_mut().enumerate() {
+            if !slot.alive {
+                // a dead lane's replicas are segment-dead: empty
+                // losses and no payload, exactly how a frozen replica
+                // reports — the coordinator flips their membership via
+                // take_lost before validating
+                for &r in &slot.rids {
+                    payloads[r] = Some(SyncPayload::Skipped);
+                }
+                continue;
+            }
+            match slot.lane.recv() {
+                // a worker-reported engine error fails the run on
+                // every transport — a broken engine is never churn
+                Ok(report) => {
+                    for (rid, l, p) in report?.reps {
+                        losses[rid] = l;
+                        payloads[rid] = Some(p);
+                    }
+                }
+                Err(_) if !self.fail_on_death => {
+                    Self::lane_died(slot, &mut self.lost);
+                    for &r in &slot.rids {
+                        losses[r] = Vec::new();
+                        payloads[r] = Some(SyncPayload::Skipped);
+                    }
+                }
+                Err(_) => bail!("worker {w} died during segment ({from}, {to}]"),
             }
         }
         // step-count validation lives in coordinate(), which knows the
@@ -1725,23 +1745,116 @@ impl SegmentExec for PoolExec {
         Ok((losses, out))
     }
 
-    /// Deal the spent buffers round-robin across the pool. Send
-    /// failures are ignored: a hung-up worker already failed the run
-    /// through its result channel, and spares are droppable by design.
+    /// Deal the spent buffers round-robin across the surviving lanes.
+    /// Send failures are ignored: spares are droppable by design (and
+    /// the TCP lane drops them unconditionally — shipping empty
+    /// buffers across a socket would cost more than it saves).
     fn recycle_wires(&mut self, bufs: Vec<Vec<u8>>) {
-        if self.txs.is_empty() {
+        let n = self.slots.iter().filter(|s| s.alive).count();
+        if n == 0 {
             return;
         }
-        let mut per_worker: Vec<Vec<Vec<u8>>> = (0..self.txs.len()).map(|_| Vec::new()).collect();
+        let mut per_lane: Vec<Vec<Vec<u8>>> = (0..n).map(|_| Vec::new()).collect();
         for (i, b) in bufs.into_iter().enumerate() {
-            per_worker[i % self.txs.len()].push(b);
+            per_lane[i % n].push(b);
         }
-        for (tx, batch) in self.txs.iter().zip(per_worker) {
+        for (slot, batch) in self.slots.iter_mut().filter(|s| s.alive).zip(per_lane) {
             if !batch.is_empty() {
-                let _ = tx.send(Cmd::Spares(batch));
+                let _ = slot.lane.send(Cmd::Spares(batch));
             }
         }
     }
+
+    fn take_lost(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.lost)
+    }
+}
+
+/// Drive a run over pre-connected transport lanes — the remote
+/// (`diloco coordinate`) twin of [`drive_ctl`]'s threaded path. Each
+/// lane owns a fixed replica set; together they must cover the
+/// universe exactly. Lane deaths are tolerated as journaled `Crash`
+/// membership (survivors complete the run); worker-reported engine
+/// errors still fail it. The final broadcast ships to survivors as
+/// `Finish` before returning.
+///
+/// Remote workers rebuild their replicas and comm state from the
+/// handshake config, so unlike [`drive_ctl`] there are no replica
+/// states on this side to validate or return — the coordinator's own
+/// copy of the trained parameters is the sync engine's global.
+pub fn drive_lanes<E: InnerEngine, L: Lane>(
+    engine: &E,
+    lanes: Vec<(L, Vec<usize>)>,
+    mut sync: Option<&mut OuterSync>,
+    plan: &DrivePlan,
+    ctl: &mut DriveCtl,
+) -> Result<DriveOutcome> {
+    let m = ctl.live.len();
+    if m == 0 {
+        bail!("drive_lanes: empty replica universe");
+    }
+    if !ctl.live.iter().any(|&l| l) {
+        bail!("drive_lanes: no live replicas at start");
+    }
+    let mut owner = vec![false; m];
+    for (_, rids) in &lanes {
+        if rids.is_empty() {
+            bail!("drive_lanes: a lane owns no replicas");
+        }
+        for &r in rids {
+            if r >= m {
+                bail!("drive_lanes: replica {r} is outside the universe of {m}");
+            }
+            if owner[r] {
+                bail!("drive_lanes: replica {r} is owned by two lanes");
+            }
+            owner[r] = true;
+        }
+    }
+    if let Some(r) = owner.iter().position(|&o| !o) {
+        bail!("drive_lanes: replica {r} is owned by no lane");
+    }
+    if plan.n_params == 0 {
+        bail!("drive_lanes: n_params must be >= 1");
+    }
+    if plan.log_every == 0 {
+        bail!("drive_lanes: log_every must be >= 1");
+    }
+    if plan.eval_every == Some(0) {
+        bail!("drive_lanes: eval_every must be >= 1");
+    }
+    if sync.is_some() && plan.sync_interval == 0 {
+        bail!("drive_lanes: sync_interval must be >= 1");
+    }
+    if plan.overlap_tau > 0 && (sync.is_none() || plan.overlap_tau >= plan.sync_interval) {
+        bail!(
+            "drive_lanes: overlap_tau ({}) needs an outer sync and must stay below \
+             the sync interval (one sync in flight at a time)",
+            plan.overlap_tau
+        );
+    }
+    if ctl.start_step >= plan.total_steps {
+        bail!(
+            "drive_lanes: start_step ({}) must be below total_steps ({})",
+            ctl.start_step,
+            plan.total_steps
+        );
+    }
+    if !ctl.events.is_empty() && sync.is_none() {
+        bail!("drive_lanes: fault events without an outer sync");
+    }
+    if ctl.residuals.len() != m {
+        ctl.residuals = vec![Vec::new(); m];
+    }
+    let mut exec = LaneExec::new(lanes, m, /* fail_on_death */ false);
+    let res = coordinate(engine, &mut exec, sync.as_deref_mut(), plan, m, ctl);
+    let pending = match &res {
+        Ok((_, p)) => p.clone(),
+        Err(_) => Broadcast::empty(),
+    };
+    exec.finish(&pending);
+    let (out, _) = res?;
+    Ok(out)
 }
 
 /// Compile-time pin: everything that crosses a worker-channel is Send.

@@ -25,4 +25,5 @@ pub mod scaling;
 pub mod runtime;
 pub mod sweep;
 pub mod train;
+pub mod transport;
 pub mod util;

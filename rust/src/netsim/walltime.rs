@@ -122,6 +122,21 @@ pub fn outer_sync_time(
     (bits_up + bits_down) / net.bandwidth_bps * (1.0 - 1.0 / r) + net.latency_s
 }
 
+/// Calibration bridge between **measured** wire traffic and the
+/// Appendix-A model: convert a run's exact framed byte total
+/// (`RunMetrics::wire_framed_bytes` — encoded payloads plus one
+/// transport frame header per contribution and per broadcast, what
+/// the TCP transport actually writes to a socket) into model seconds
+/// on a network archetype, charging one latency per outer sync. The
+/// analytic `walltime()` above models ideal all-reduces over chips;
+/// this models the repo's real star topology (M replicas → one
+/// coordinator), so comparing the two against a measured loopback or
+/// LAN run separates model error from transport overhead — see
+/// EXPERIMENTS.md "Socket calibration".
+pub fn measured_comm_time(framed_bytes: u64, outer_syncs: usize, net: Network) -> f64 {
+    framed_bytes as f64 * 8.0 / net.bandwidth_bps + outer_syncs as f64 * net.latency_s
+}
+
 #[derive(Debug, Clone)]
 pub struct WalltimeBreakdown {
     pub steps: f64,
@@ -493,6 +508,21 @@ mod tests {
             straggler_slowdown: 8.0,
         });
         assert_eq!(walltime(&dp).comm_s, t0);
+    }
+
+    #[test]
+    fn measured_comm_time_is_bits_over_bandwidth_plus_latency() {
+        let t = measured_comm_time(0, 0, LOW);
+        assert_eq!(t, 0.0);
+        // pure bandwidth term: 1 GiB over the LOW archetype
+        let bytes = 1u64 << 30;
+        let t = measured_comm_time(bytes, 0, LOW);
+        assert!((t - bytes as f64 * 8.0 / LOW.bandwidth_bps).abs() < 1e-12);
+        // each sync charges exactly one latency
+        let t10 = measured_comm_time(bytes, 10, LOW);
+        assert!((t10 - t - 10.0 * LOW.latency_s).abs() < 1e-12);
+        // more traffic, more time — monotone in both arguments
+        assert!(measured_comm_time(2 * bytes, 10, LOW) > t10);
     }
 
     #[test]

@@ -617,17 +617,20 @@ pub fn table_comm(store: &SweepStore) -> String {
          counted on the bus** (up = replica → coordinator payloads, \
          counted per replica; down = the coordinator's single encoded \
          broadcast per sync — quantized and error-compensated below 32 \
-         bits, a deduplicated f32 literal handoff at 32); netsim comm \
+         bits, a deduplicated f32 literal handoff at 32); framed adds \
+         the TCP transport's length-prefixed header per contribution \
+         and per broadcast (36 B each — what a real socket moves, see \
+         EXPERIMENTS.md on calibration); netsim comm \
          time is the Appendix-A model on the LOW archetype at the run's \
          per-leg wire widths.\n"
     )
     .unwrap();
     writeln!(
         s,
-        "| model | algo | bits up/down | eval loss | delta vs fp32 | wire up (MiB) | wire down (MiB) | netsim comm_s (low) |"
+        "| model | algo | bits up/down | eval loss | delta vs fp32 | wire up (MiB) | wire down (MiB) | framed (MiB) | netsim comm_s (low) |"
     )
     .unwrap();
-    writeln!(s, "|---|---|---|---|---|---|---|---|").unwrap();
+    writeln!(s, "|---|---|---|---|---|---|---|---|---|").unwrap();
     let mib = |b: u64| b as f64 / (1024.0 * 1024.0);
     let mut rows = 0usize;
     // the row set IS the comm grid's coverage (baseline first for
@@ -714,10 +717,11 @@ pub fn table_comm(store: &SweepStore) -> String {
                 });
                 writeln!(
                     s,
-                    "| {model} | {algo} | {up}/{down} | {:.4} | {delta} | {:.2} | {:.2} | {:.3e} |",
+                    "| {model} | {algo} | {up}/{down} | {:.4} | {delta} | {:.2} | {:.2} | {:.2} | {:.3e} |",
                     r.final_eval_loss,
                     mib(r.wire_up_bytes),
                     mib(r.wire_down_bytes),
+                    mib(r.wire_framed_bytes),
                     w.comm_s
                 )
                 .unwrap();
@@ -727,7 +731,7 @@ pub fn table_comm(store: &SweepStore) -> String {
     if rows == 0 {
         writeln!(
             s,
-            "| (pending) | run `diloco sweep --grid comm` | | | | | | |"
+            "| (pending) | run `diloco sweep --grid comm` | | | | | | | |"
         )
         .unwrap();
     }

@@ -278,6 +278,7 @@ mod tests {
             outer_bits_down: 32,
             wire_up_bytes: 0,
             wire_down_bytes: 0,
+            wire_framed_bytes: 0,
             churn: String::new(),
             dropout_rate: 0.0,
         }

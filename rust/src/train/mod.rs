@@ -1,4 +1,7 @@
 //! Training-loop policies: LR schedule (warmup + cosine) and the
-//! paper's weight-decay rule lambda = 1/T.
+//! paper's weight-decay rule lambda = 1/T. Plus the [`toy`] engine —
+//! the deterministic host-math inner step shared by the CLI's `--toy`
+//! mode, the loopback twin test, and the CI multi-process smoke.
 
 pub mod schedule;
+pub mod toy;

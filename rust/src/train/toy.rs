@@ -1,0 +1,189 @@
+//! The toy engine: a deterministic host-math stand-in for the PJRT
+//! inner step, promoted from the test suite into the crate so the CLI
+//! (`--toy`), the loopback twin test, and the CI multi-process smoke
+//! all drive the *same* engine.
+//!
+//! The update mixes the replica's private token shard with the step
+//! index, entirely in host f32 math; the loss is a pure function of
+//! the post-step state. No PJRT, no artifacts — it runs in any
+//! environment, which is exactly what a CI job spawning three OS
+//! processes needs. Determinism is total: replica init is pure in the
+//! run seed, shards are pure in `(seed, replica id)`, and the step is
+//! pure in `(replica id, state, t)` — so two processes that agree on
+//! the handshake config cannot disagree on a single bit.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{InnerEngine, ReplicaState};
+use crate::data::synthetic::{CorpusSpec, TokenStream};
+use crate::runtime::{FlatLayout, HostTensor};
+
+/// The toy model's fixed parameter layout: five small leaves (17
+/// scalars total) — enough shape variety to exercise fragment ranges
+/// and literal rebuilds while staying trivially cheap.
+pub fn toy_layout() -> Arc<FlatLayout> {
+    Arc::new(FlatLayout::new(vec![
+        vec![3, 2],
+        vec![4],
+        vec![2, 2],
+        vec![5],
+        vec![1],
+    ]))
+}
+
+/// The shared init literals, pure in `(layout, seed)` — every replica
+/// (on every process) starts from this view, like Algorithm 1 line 2.
+pub fn toy_init(layout: &FlatLayout, seed: u64) -> Result<Vec<Arc<xla::Literal>>> {
+    (0..layout.n_leaves())
+        .map(|l| {
+            let v: Vec<f32> = (0..layout.len(l))
+                .map(|i| {
+                    let h = (l as u64)
+                        .wrapping_mul(37)
+                        .wrapping_add(i as u64 * 11)
+                        .wrapping_add(seed.wrapping_mul(7) + 5);
+                    (h % 23) as f32 * 0.1 - 1.0
+                })
+                .collect();
+            Ok(Arc::new(
+                HostTensor::from_vec(layout.shape(l), v).to_literal()?,
+            ))
+        })
+        .collect()
+}
+
+/// Build replica states `first..last` (half-open) of an `m`-replica
+/// universe. A remote worker calls this with just its owned range;
+/// shard streams are per-replica pure, so partial construction is
+/// bit-identical to slicing the full set.
+pub fn toy_replicas(
+    layout: &FlatLayout,
+    range: std::ops::Range<usize>,
+    seed: u64,
+) -> Result<Vec<ReplicaState>> {
+    let init = toy_init(layout, seed)?;
+    Ok(range
+        .map(|r| ReplicaState {
+            state: init.clone(),
+            shard: TokenStream::new(CorpusSpec::default(), seed, r as u64),
+        })
+        .collect())
+}
+
+/// Build replica states for an explicit id set (remote workers own
+/// arbitrary claims, not necessarily a contiguous range).
+pub fn toy_replicas_for(
+    layout: &FlatLayout,
+    rids: &[usize],
+    seed: u64,
+) -> Result<Vec<ReplicaState>> {
+    let init = toy_init(layout, seed)?;
+    Ok(rids
+        .iter()
+        .map(|&r| ReplicaState {
+            state: init.clone(),
+            shard: TokenStream::new(CorpusSpec::default(), seed, r as u64),
+        })
+        .collect())
+}
+
+/// The deterministic host-math inner engine (see module docs).
+pub struct ToyEngine {
+    n_leaves: usize,
+}
+
+impl ToyEngine {
+    pub fn new(layout: &FlatLayout) -> ToyEngine {
+        ToyEngine {
+            n_leaves: layout.n_leaves(),
+        }
+    }
+}
+
+impl InnerEngine for ToyEngine {
+    fn inner_step(&self, rep: usize, replica: &mut ReplicaState, t: usize) -> Result<f64> {
+        let toks = replica.shard.next_batch(2, 8);
+        let mut loss = 0.0f64;
+        for leaf in 0..self.n_leaves {
+            let lit = &replica.state[leaf];
+            let dims = lit.array_shape()?.dims().to_vec();
+            let mut v = lit.to_vec::<f32>()?;
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = 0.5 * *x
+                    + 1e-3 * toks[(i + t) % toks.len()] as f32
+                    + 1e-2 * (t as f32 + rep as f32 * 0.25).sin();
+            }
+            loss += v.iter().map(|&f| f as f64).sum::<f64>() / v.len() as f64;
+            replica.state[leaf] = Arc::new(xla::Literal::vec1(&v).reshape(&dims)?);
+        }
+        Ok(loss / self.n_leaves as f64)
+    }
+
+    /// Deterministic digest of the parameter literals — a weighted sum
+    /// so leaf order matters (any mixed-up rebuild changes the curve).
+    fn eval(&self, params: &[Arc<xla::Literal>]) -> Result<f64> {
+        let mut acc = 0.0f64;
+        for (i, p) in params.iter().enumerate() {
+            for x in p.to_vec::<f32>()? {
+                acc += x as f64 * (i + 1) as f64;
+            }
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_pure_in_seed() {
+        let l = toy_layout();
+        let a = toy_init(&l, 9).unwrap();
+        let b = toy_init(&l, 9).unwrap();
+        let c = toy_init(&l, 10).unwrap();
+        for leaf in 0..l.n_leaves() {
+            assert_eq!(
+                a[leaf].to_vec::<f32>().unwrap(),
+                b[leaf].to_vec::<f32>().unwrap()
+            );
+        }
+        assert_ne!(
+            a[0].to_vec::<f32>().unwrap(),
+            c[0].to_vec::<f32>().unwrap()
+        );
+    }
+
+    #[test]
+    fn partial_replica_sets_match_the_full_universe() {
+        let l = toy_layout();
+        let full = toy_replicas(&l, 0..4, 7).unwrap();
+        let tail = toy_replicas_for(&l, &[2, 3], 7).unwrap();
+        let engine = ToyEngine::new(&l);
+        let mut a = full.into_iter().nth(2).unwrap();
+        let mut b = tail.into_iter().next().unwrap();
+        for t in 1..=3 {
+            let la = engine.inner_step(2, &mut a, t).unwrap();
+            let lb = engine.inner_step(2, &mut b, t).unwrap();
+            assert_eq!(la.to_bits(), lb.to_bits());
+        }
+    }
+
+    #[test]
+    fn steps_are_deterministic() {
+        let l = toy_layout();
+        let engine = ToyEngine::new(&l);
+        let mut a = toy_replicas(&l, 0..1, 3).unwrap().remove(0);
+        let mut b = toy_replicas(&l, 0..1, 3).unwrap().remove(0);
+        for t in 1..=5 {
+            let la = engine.inner_step(0, &mut a, t).unwrap();
+            let lb = engine.inner_step(0, &mut b, t).unwrap();
+            assert_eq!(la.to_bits(), lb.to_bits());
+        }
+        let ea = engine.eval(&a.state).unwrap();
+        let eb = engine.eval(&b.state).unwrap();
+        assert_eq!(ea.to_bits(), eb.to_bits());
+    }
+}

@@ -1,0 +1,392 @@
+//! Length-prefixed, versioned wire frames — the unit of everything
+//! that crosses a transport link.
+//!
+//! A frame is a fixed 36-byte header followed by `payload_len` payload
+//! bytes. The header is little-endian throughout and carries enough
+//! context to reject a mismatched peer *before* any payload is
+//! interpreted: magic + protocol version (wrong build), the run-config
+//! fingerprint (wrong run), the codec widths (wrong comm plane), and
+//! the sync index / fragment id of the payload (wrong schedule
+//! position — and free observability on the wire).
+//!
+//! Layout (offsets in bytes):
+//!
+//! | off | size | field |
+//! |-----|------|-------|
+//! | 0   | 4    | magic `"DLCW"` |
+//! | 4   | 2    | protocol version ([`PROTO_VERSION`]) |
+//! | 6   | 1    | message kind ([`MsgKind`]) |
+//! | 7   | 1    | up-wire codec width (bits; 0 = unspecified) |
+//! | 8   | 1    | down-wire codec width (bits; 0 = unspecified) |
+//! | 9   | 3    | reserved (must be zero) |
+//! | 12  | 8    | run-config fingerprint (fnv1a64; 0 = unclaimed) |
+//! | 20  | 8    | outer-sync index of the payload |
+//! | 28  | 4    | fragment id (`u32::MAX` = none / full sync) |
+//! | 32  | 4    | payload length |
+//!
+//! Decoding is hardened: truncated input, a bad magic, a version
+//! mismatch, a nonzero reserved byte, an unknown kind, or an oversized
+//! length all return a clean `Err` — never a panic, never a partial
+//! read acted upon (`tests` pin each rejection).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// First bytes of every frame ("DiLoCo Wire").
+pub const MAGIC: [u8; 4] = *b"DLCW";
+/// Protocol version; bump on any incompatible frame or message change.
+pub const PROTO_VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 36;
+/// Per-frame framing overhead (the header *is* the length prefix —
+/// `payload_len` lives inside it), used by `comm::wire` to report
+/// framed bytes apples-to-apples with measured socket transfer.
+pub const FRAME_OVERHEAD: u64 = HEADER_LEN as u64;
+/// Upper bound on a single frame's payload (1 GiB) — a corrupted or
+/// hostile length field must not turn into an allocation bomb.
+pub const MAX_PAYLOAD: usize = 1 << 30;
+/// Fragment-id sentinel for "no fragment" (full sync / non-sync frame).
+pub const NO_FRAG: u32 = u32::MAX;
+
+/// What a frame carries. Handshake kinds flow once per connection;
+/// Run/Finish flow coordinator→worker, Report/Error worker→coordinator,
+/// Heartbeat worker→coordinator on its own cadence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Worker→coordinator: claimed replica ids (+ fingerprint/widths
+    /// in the header, 0 = adopt the coordinator's).
+    Hello,
+    /// Coordinator→worker: accepted; payload = engine kind, initial
+    /// liveness, and the run config JSON (the source of truth).
+    Welcome,
+    /// Coordinator→worker: refused; payload = human-readable reason.
+    Reject,
+    /// One segment command (`Cmd::Run`).
+    Run,
+    /// Final broadcast + shutdown (`Cmd::Finish`).
+    Finish,
+    /// A worker's segment report (losses + sync payloads).
+    Report,
+    /// A worker-side error, in place of a report (payload = message).
+    Error,
+    /// Liveness beacon; empty payload, skipped by receivers.
+    Heartbeat,
+}
+
+impl MsgKind {
+    pub fn code(self) -> u8 {
+        match self {
+            MsgKind::Hello => 1,
+            MsgKind::Welcome => 2,
+            MsgKind::Reject => 3,
+            MsgKind::Run => 4,
+            MsgKind::Finish => 5,
+            MsgKind::Report => 6,
+            MsgKind::Error => 7,
+            MsgKind::Heartbeat => 8,
+        }
+    }
+
+    pub fn parse(code: u8) -> Result<MsgKind> {
+        Ok(match code {
+            1 => MsgKind::Hello,
+            2 => MsgKind::Welcome,
+            3 => MsgKind::Reject,
+            4 => MsgKind::Run,
+            5 => MsgKind::Finish,
+            6 => MsgKind::Report,
+            7 => MsgKind::Error,
+            8 => MsgKind::Heartbeat,
+            other => bail!("frame: unknown message kind {other}"),
+        })
+    }
+}
+
+/// The decoded header (payload length is returned separately — it
+/// describes the byte stream, not the message).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: MsgKind,
+    /// Up-wire codec width in bits (0 = unspecified).
+    pub up_bits: u8,
+    /// Down-wire codec width in bits (0 = unspecified).
+    pub down_bits: u8,
+    /// Run-config fingerprint (0 = sender has not claimed one).
+    pub fingerprint: u64,
+    /// Outer-sync index the payload belongs to (0 when not applicable).
+    pub sync_index: u64,
+    /// Streaming fragment id (None = full sync / not applicable).
+    pub frag: Option<u32>,
+}
+
+impl FrameHeader {
+    /// A header with everything but the kind zeroed — handshake and
+    /// heartbeat frames before a fingerprint exists.
+    pub fn bare(kind: MsgKind) -> FrameHeader {
+        FrameHeader {
+            kind,
+            up_bits: 0,
+            down_bits: 0,
+            fingerprint: 0,
+            sync_index: 0,
+            frag: None,
+        }
+    }
+}
+
+/// Append one encoded frame (header + payload) to `out`.
+pub fn encode_frame(h: &FrameHeader, payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    if payload.len() > MAX_PAYLOAD {
+        bail!(
+            "frame: payload of {} bytes exceeds the {} byte cap",
+            payload.len(),
+            MAX_PAYLOAD
+        );
+    }
+    out.reserve(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    out.push(h.kind.code());
+    out.push(h.up_bits);
+    out.push(h.down_bits);
+    out.extend_from_slice(&[0u8; 3]);
+    out.extend_from_slice(&h.fingerprint.to_le_bytes());
+    out.extend_from_slice(&h.sync_index.to_le_bytes());
+    out.extend_from_slice(&h.frag.unwrap_or(NO_FRAG).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    Ok(())
+}
+
+fn le_u16(b: &[u8]) -> u16 {
+    u16::from_le_bytes([b[0], b[1]])
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Parse and validate one header; returns the payload length it
+/// announces. Rejects (clean `Err`) on truncation, bad magic, version
+/// mismatch, nonzero reserved bytes, unknown kind, or oversized length.
+pub fn parse_header(buf: &[u8]) -> Result<(FrameHeader, usize)> {
+    if buf.len() < HEADER_LEN {
+        bail!(
+            "frame: truncated header ({} of {HEADER_LEN} bytes)",
+            buf.len()
+        );
+    }
+    if buf[0..4] != MAGIC {
+        bail!("frame: bad magic {:02x?} (want {MAGIC:02x?})", &buf[0..4]);
+    }
+    let version = le_u16(&buf[4..6]);
+    if version != PROTO_VERSION {
+        bail!("frame: protocol version {version} (this build speaks {PROTO_VERSION})");
+    }
+    let kind = MsgKind::parse(buf[6])?;
+    if buf[9..12] != [0u8; 3] {
+        bail!("frame: nonzero reserved bytes {:02x?}", &buf[9..12]);
+    }
+    let payload_len = le_u32(&buf[32..36]) as usize;
+    if payload_len > MAX_PAYLOAD {
+        bail!("frame: payload length {payload_len} exceeds the {MAX_PAYLOAD} byte cap");
+    }
+    let frag = le_u32(&buf[28..32]);
+    Ok((
+        FrameHeader {
+            kind,
+            up_bits: buf[7],
+            down_bits: buf[8],
+            fingerprint: le_u64(&buf[12..20]),
+            sync_index: le_u64(&buf[20..28]),
+            frag: (frag != NO_FRAG).then_some(frag),
+        },
+        payload_len,
+    ))
+}
+
+/// Decode one full frame from a buffer; returns the header, the
+/// payload slice, and the total bytes consumed.
+pub fn decode_frame(buf: &[u8]) -> Result<(FrameHeader, &[u8], usize)> {
+    let (h, payload_len) = parse_header(buf)?;
+    let total = HEADER_LEN + payload_len;
+    if buf.len() < total {
+        bail!(
+            "frame: truncated payload ({} of {payload_len} bytes present)",
+            buf.len() - HEADER_LEN
+        );
+    }
+    Ok((h, &buf[HEADER_LEN..total], total))
+}
+
+/// Read one frame off a stream (blocking; honors the stream's read
+/// timeout). A clean EOF before the first header byte reports as an
+/// error too — callers decide whether that ends a session gracefully.
+pub fn read_frame(r: &mut impl Read) -> Result<(FrameHeader, Vec<u8>)> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr).context("frame: reading header")?;
+    let (h, payload_len) = parse_header(&hdr)?;
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("frame: reading {payload_len} byte payload"))?;
+    Ok((h, payload))
+}
+
+/// Write one frame to a stream as a single `write_all` (one contiguous
+/// buffer, so concurrent writers serialized by a lock never interleave
+/// partial frames).
+pub fn write_frame(w: &mut impl Write, h: &FrameHeader, payload: &[u8]) -> Result<()> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    encode_frame(h, payload, &mut buf)?;
+    w.write_all(&buf).context("frame: writing")?;
+    Ok(())
+}
+
+/// FNV-1a (64-bit) — the run-config fingerprint hash. Chosen for
+/// being trivially reimplementable by any peer, not for strength: the
+/// handshake guards against configuration drift, not adversaries.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_header() -> FrameHeader {
+        FrameHeader {
+            kind: MsgKind::Run,
+            up_bits: 4,
+            down_bits: 8,
+            fingerprint: 0x1122_3344_5566_7788,
+            sync_index: 7,
+            frag: Some(2),
+        }
+    }
+
+    #[test]
+    fn golden_header_bytes() {
+        let mut buf = Vec::new();
+        encode_frame(&sample_header(), b"xyz", &mut buf).unwrap();
+        // the exact wire layout, byte for byte — if this changes,
+        // PROTO_VERSION must bump
+        #[rustfmt::skip]
+        let want: [u8; HEADER_LEN] = [
+            b'D', b'L', b'C', b'W',             // magic
+            1, 0,                               // version 1 LE
+            4,                                  // kind = Run
+            4, 8,                               // up / down bits
+            0, 0, 0,                            // reserved
+            0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11, // fingerprint LE
+            7, 0, 0, 0, 0, 0, 0, 0,             // sync index LE
+            2, 0, 0, 0,                         // fragment id LE
+            3, 0, 0, 0,                         // payload length LE
+        ];
+        assert_eq!(&buf[..HEADER_LEN], &want);
+        assert_eq!(&buf[HEADER_LEN..], b"xyz");
+        assert_eq!(buf.len() as u64, FRAME_OVERHEAD + 3);
+    }
+
+    #[test]
+    fn roundtrips_and_reports_consumed_length() {
+        let mut buf = Vec::new();
+        encode_frame(&sample_header(), &[9u8; 10], &mut buf).unwrap();
+        // trailing bytes beyond the frame are left untouched
+        buf.extend_from_slice(&[0xAA; 5]);
+        let (h, payload, used) = decode_frame(&buf).unwrap();
+        assert_eq!(h, sample_header());
+        assert_eq!(payload, &[9u8; 10]);
+        assert_eq!(used, HEADER_LEN + 10);
+
+        // no-fragment sentinel round-trips as None
+        let mut buf = Vec::new();
+        encode_frame(&FrameHeader::bare(MsgKind::Heartbeat), &[], &mut buf).unwrap();
+        let (h, payload, _) = decode_frame(&buf).unwrap();
+        assert_eq!(h.frag, None);
+        assert!(payload.is_empty());
+    }
+
+    #[test]
+    fn rejects_truncated_frames_cleanly() {
+        let mut buf = Vec::new();
+        encode_frame(&sample_header(), b"payload", &mut buf).unwrap();
+        // every possible truncation point: clean Err, never a panic
+        for cut in 0..buf.len() {
+            let err = decode_frame(&buf[..cut]).expect_err("truncated frame must be rejected");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("truncated"), "cut={cut}: {msg}");
+        }
+        assert!(decode_frame(&buf).is_ok(), "the full frame still decodes");
+    }
+
+    #[test]
+    fn rejects_oversized_length() {
+        let mut buf = Vec::new();
+        encode_frame(&sample_header(), b"x", &mut buf).unwrap();
+        // corrupt the length field to just over the cap
+        buf[32..36].copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_le_bytes());
+        let err = decode_frame(&buf).expect_err("oversized length must be rejected");
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+        // and the encoder refuses to produce one in the first place
+        let huge = vec![0u8; MAX_PAYLOAD + 1];
+        assert!(encode_frame(&sample_header(), &huge, &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_version_mismatch_and_bad_magic() {
+        let mut buf = Vec::new();
+        encode_frame(&sample_header(), b"", &mut buf).unwrap();
+        let mut wrong_version = buf.clone();
+        wrong_version[4..6].copy_from_slice(&(PROTO_VERSION + 1).to_le_bytes());
+        let err = decode_frame(&wrong_version).expect_err("version mismatch");
+        assert!(format!("{err:#}").contains("protocol version"), "{err:#}");
+
+        let mut wrong_magic = buf.clone();
+        wrong_magic[0] = b'X';
+        assert!(decode_frame(&wrong_magic).is_err());
+
+        let mut wrong_kind = buf.clone();
+        wrong_kind[6] = 99;
+        assert!(decode_frame(&wrong_kind).is_err());
+
+        let mut dirty_reserved = buf;
+        dirty_reserved[10] = 1;
+        assert!(decode_frame(&dirty_reserved).is_err());
+    }
+
+    #[test]
+    fn every_kind_roundtrips() {
+        for k in [
+            MsgKind::Hello,
+            MsgKind::Welcome,
+            MsgKind::Reject,
+            MsgKind::Run,
+            MsgKind::Finish,
+            MsgKind::Report,
+            MsgKind::Error,
+            MsgKind::Heartbeat,
+        ] {
+            assert_eq!(MsgKind::parse(k.code()).unwrap(), k);
+        }
+        assert!(MsgKind::parse(0).is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_stable() {
+        // pinned: the handshake compares these across builds and
+        // machines, so the hash can never silently change
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"diloco"), fnv1a64(b"diloco"));
+        assert_ne!(fnv1a64(b"diloco"), fnv1a64(b"dilocO"));
+    }
+}

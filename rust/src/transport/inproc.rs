@@ -1,0 +1,112 @@
+//! In-process transport: `std::sync::mpsc` channels moving Rust
+//! values — the default lane and the bit-identity oracle.
+//!
+//! This is exactly the worker pool's original message plane, wrapped
+//! behind the [`Lane`]/[`WorkerLink`] traits: commands and reports
+//! move by value (broadcast `Arc`s are cloned, buffers are moved), so
+//! nothing is serialized and the zero-copy literal handoff survives.
+//! `Spares` recycling works here and only here — across a socket the
+//! buffers would cost more to ship than to reallocate.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::msg::{Cmd, WorkerReport};
+use super::{Lane, WorkerLink};
+
+/// Coordinator end: command sender + report receiver.
+pub struct InProcLane {
+    tx: Sender<Cmd>,
+    rx: Receiver<Result<WorkerReport>>,
+}
+
+/// Worker end: command receiver + report sender.
+pub struct InProcWorkerLink {
+    rx: Receiver<Cmd>,
+    tx: Sender<Result<WorkerReport>>,
+}
+
+/// One connected lane/link pair.
+pub fn pair() -> (InProcLane, InProcWorkerLink) {
+    let (cmd_tx, cmd_rx) = channel::<Cmd>();
+    let (res_tx, res_rx) = channel::<Result<WorkerReport>>();
+    (
+        InProcLane {
+            tx: cmd_tx,
+            rx: res_rx,
+        },
+        InProcWorkerLink {
+            rx: cmd_rx,
+            tx: res_tx,
+        },
+    )
+}
+
+impl Lane for InProcLane {
+    fn send(&mut self, cmd: Cmd) -> Result<()> {
+        self.tx
+            .send(cmd)
+            .map_err(|_| anyhow!("in-proc lane: worker hung up"))
+    }
+
+    fn recv(&mut self) -> Result<Result<WorkerReport>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("in-proc lane: worker died without reporting"))
+    }
+}
+
+impl WorkerLink for InProcWorkerLink {
+    fn recv_cmd(&mut self) -> Option<Cmd> {
+        self.rx.recv().ok()
+    }
+
+    fn send_report(&mut self, report: Result<WorkerReport>) -> Result<()> {
+        self.tx
+            .send(report)
+            .map_err(|_| anyhow!("in-proc link: coordinator hung up"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::msg::{Broadcast, PayloadSpec, SegmentChurn, SyncPayload};
+
+    #[test]
+    fn pair_moves_commands_and_reports() {
+        let (mut lane, mut link) = pair();
+        lane.send(Cmd::Run {
+            from: 0,
+            to: 2,
+            broadcast: Broadcast::empty(),
+            payload: PayloadSpec::None,
+            churn: SegmentChurn::default(),
+        })
+        .unwrap();
+        let Some(Cmd::Run { from, to, .. }) = link.recv_cmd() else {
+            panic!("expected the Run command");
+        };
+        assert_eq!((from, to), (0, 2));
+        link.send_report(Ok(WorkerReport {
+            reps: vec![(0, vec![1.0, 2.0], SyncPayload::Skipped)],
+        }))
+        .unwrap();
+        let report = lane.recv().unwrap().unwrap();
+        assert_eq!(report.reps[0].1, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn closed_ends_surface_as_lane_errors() {
+        let (mut lane, link) = pair();
+        drop(link);
+        assert!(lane.send(Cmd::Finish { broadcast: Broadcast::empty() }).is_err());
+        assert!(lane.recv().is_err());
+
+        let (lane, mut link) = pair();
+        drop(lane);
+        assert!(link.recv_cmd().is_none());
+        assert!(link.send_report(Ok(WorkerReport { reps: Vec::new() })).is_err());
+    }
+}

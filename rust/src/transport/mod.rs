@@ -1,0 +1,67 @@
+//! Pluggable transport behind the worker↔coordinator comm plane.
+//!
+//! The coordinator drives training through pairs of abstract endpoints:
+//! a [`Lane`] (coordinator side — one per worker) and a [`WorkerLink`]
+//! (worker side). Everything that crosses them is a [`msg`] type —
+//! segment commands, worker reports, membership churn — so the drive
+//! loop in `coordinator::pool` is transport-agnostic: the schedule,
+//! the reduction order, and therefore every loss and parameter bit are
+//! decided above this layer.
+//!
+//! Two implementations:
+//!
+//! - [`inproc`] — `std::sync::mpsc` channels moving Rust values, the
+//!   default and the bit-identity oracle. Zero-copy (`Arc` handoffs),
+//!   zero serialization: exactly the pre-transport behavior.
+//! - [`tcp`] — length-prefixed [`frame`]s over TCP sockets, so one run
+//!   spans OS processes or machines (`diloco coordinate` /
+//!   `diloco worker`). A versioned handshake rejects mismatched peers
+//!   fail-loud; worker heartbeats plus a coordinator read-timeout turn
+//!   a dead peer into a journaled `Crash` instead of a hang. The
+//!   loopback twin test (`tests/transport_loopback.rs`) pins TCP runs
+//!   bit-identical to in-proc runs.
+//!
+//! Error semantics are part of the contract:
+//!
+//! - `Lane::send` / `Lane::recv` **outer** errors mean the lane itself
+//!   died (peer hung up, timed out, spoke garbage). The drive loop
+//!   maps that to crash-membership semantics (remote mode) or fails
+//!   the run (in-proc mode, where a vanished thread is a bug).
+//! - `Lane::recv`'s **inner** `Result` is the worker's own verdict: a
+//!   worker-reported engine error fails the run on every transport —
+//!   a broken engine is never churn.
+
+pub mod frame;
+pub mod inproc;
+pub mod msg;
+pub mod tcp;
+
+use anyhow::Result;
+
+use msg::{Cmd, WorkerReport};
+
+/// Coordinator-side endpoint of one worker connection.
+pub trait Lane: Send {
+    /// Ship one command. Takes the command by value so transports can
+    /// move its buffers (`Spares` recycling) or serialize without a
+    /// second copy. An error means the lane is dead.
+    fn send(&mut self, cmd: Cmd) -> Result<()>;
+
+    /// Block for the worker's next report (honoring any transport
+    /// read-timeout). Outer `Err` = the lane died; inner `Err` = the
+    /// worker reported an engine failure.
+    fn recv(&mut self) -> Result<Result<WorkerReport>>;
+}
+
+/// Worker-side endpoint of the coordinator connection.
+pub trait WorkerLink {
+    /// Block for the next command. `None` means the coordinator is
+    /// gone (clean channel close, socket EOF, or an unrecoverable
+    /// transport error) — the worker session ends quietly; the
+    /// coordinator side is where failures are judged.
+    fn recv_cmd(&mut self) -> Option<Cmd>;
+
+    /// Ship a segment report (or the worker's own error). An error
+    /// means the coordinator is gone.
+    fn send_report(&mut self, report: Result<WorkerReport>) -> Result<()>;
+}

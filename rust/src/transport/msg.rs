@@ -1,0 +1,692 @@
+//! The worker↔coordinator message plane: the types that cross a
+//! [`Lane`](crate::transport::Lane), and their byte serialization for
+//! transports that leave the process.
+//!
+//! These types were born inside `coordinator/pool.rs` hard-wired to
+//! `std::sync::mpsc`; they live here now so every transport speaks the
+//! same vocabulary. In-process lanes move them as Rust values (the
+//! zero-copy `Arc` handoff the oracle path depends on); the TCP lane
+//! serializes them with the little-endian codecs below. Serialization
+//! is **exact**: f32/f64 values travel as raw bit patterns, so a
+//! payload decoded on the far side is bit-identical to the value sent
+//! — the loopback twin test pins the whole pipeline on this.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::frame::{MsgKind, MAX_PAYLOAD};
+
+/// Literal adopt list: (leaf index, shared literal) pairs every replica
+/// applies before its next inner step.
+pub type Adopt = Vec<(usize, Arc<xla::Literal>)>;
+
+/// One broadcast as it leaves the coordinator.
+#[derive(Clone)]
+pub enum Broadcast {
+    /// Identity down-wire (and Data-Parallel): deduplicated `Arc`
+    /// literal handoff — zero-copy, one upload per leaf run-wide.
+    Literals(Adopt),
+    /// Lossy down-wire: the fragment's single encoded payload, one
+    /// allocation `Arc`-shared by every worker; each decodes it into
+    /// its shared snapshot.
+    Encoded {
+        frag: Option<usize>,
+        bytes: Arc<Vec<u8>>,
+    },
+}
+
+impl Broadcast {
+    pub fn empty() -> Broadcast {
+        Broadcast::Literals(Vec::new())
+    }
+}
+
+/// What the coordinator told the workers to produce at segment end.
+#[derive(Debug, Clone)]
+pub struct EncodeSpec {
+    /// Streaming fragment due at the boundary (None = full sync).
+    pub frag: Option<usize>,
+    /// 0-based outer-sync index (stochastic-rounding seed component).
+    pub sync_index: u64,
+}
+
+/// What a segment's boundary asks of the workers. Merge-only
+/// boundaries (and the drain's main segment) ask for nothing — the
+/// coordinator would discard it, so the workers never build it.
+#[derive(Debug, Clone)]
+pub enum PayloadSpec {
+    /// No payload crosses at this boundary.
+    None,
+    /// Current parameter literal handles (identity up-wire sends, and
+    /// every Data-Parallel segment — its boundary eval reads them).
+    Params,
+    /// Encoded wire contribution for the due fragment (lossy up-wire).
+    Encoded(EncodeSpec),
+}
+
+/// One replica's contribution at a segment boundary.
+pub enum SyncPayload {
+    /// Data-Parallel (and identity up-wire sends): current parameter
+    /// literal handles.
+    Params(Vec<Arc<xla::Literal>>),
+    /// DiLoCo lossy up-wire: the encoded contribution for the due
+    /// fragment.
+    Encoded(Vec<u8>),
+    /// The boundary asked for nothing ([`PayloadSpec::None`]) —
+    /// consuming this anywhere is a coordinator bug and fails loud.
+    Skipped,
+}
+
+/// Per-segment result: `losses[r]` / `payloads[r]` for replica r.
+pub type SegmentData = (Vec<Vec<f64>>, Vec<SyncPayload>);
+
+/// Membership changes taking effect at a segment's dispatch, in
+/// application order: `deaths` freeze their replicas *before* the
+/// broadcast is adopted (a crashed/left replica never sees a merge it
+/// missed), then live replicas adopt the broadcast, then `joins` come
+/// alive initialized from the current broadcast view — either
+/// `join_view` (full-leaf literal list the coordinator built from the
+/// global; identity wires, where workers keep no snapshot) or the
+/// worker's own decoded snapshot (lossy wires — which also hands the
+/// joiner the down-wire EF stream state for free, since the snapshot
+/// *is* that stream's decode state).
+#[derive(Clone, Default)]
+pub struct SegmentChurn {
+    pub deaths: Vec<usize>,
+    pub joins: Vec<usize>,
+    pub join_view: Adopt,
+}
+
+impl SegmentChurn {
+    pub fn is_empty(&self) -> bool {
+        self.deaths.is_empty() && self.joins.is_empty()
+    }
+}
+
+/// A coordinator→worker command.
+pub enum Cmd {
+    /// Apply membership changes and the broadcast, run steps
+    /// (from, to], then build the boundary payload `payload` asks for.
+    Run {
+        from: usize,
+        to: usize,
+        broadcast: Broadcast,
+        payload: PayloadSpec,
+        churn: SegmentChurn,
+    },
+    /// Spent wire payload buffers from a completed reduce, returned
+    /// for this worker's encode pool. No reply — the worker absorbs
+    /// them between segments. Never serialized: shipping empty
+    /// buffers across a socket to save the far side an allocation
+    /// would cost more than it saves, so the TCP lane drops these.
+    Spares(Vec<Vec<u8>>),
+    /// Apply the final broadcast and exit, returning replica ownership.
+    Finish { broadcast: Broadcast },
+}
+
+/// A worker's answer to one `Cmd::Run`.
+pub struct WorkerReport {
+    /// (replica id, per-step losses, boundary sync payload).
+    pub reps: Vec<(usize, Vec<f64>, SyncPayload)>,
+}
+
+// ---- byte serialization ----------------------------------------------
+//
+// Everything little-endian; floats as raw bit patterns (exactness is
+// load-bearing). Containers are u32-counted — MAX_PAYLOAD bounds any
+// single frame long before u32 does.
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(out: &mut Vec<u8>, v: usize) -> Result<()> {
+    let v = u32::try_from(v).map_err(|_| anyhow!("msg: count {v} exceeds u32"))?;
+    put_u32(out, v);
+    Ok(())
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) -> Result<()> {
+    put_usize(out, b.len())?;
+    out.extend_from_slice(b);
+    Ok(())
+}
+
+fn put_opt_frag(out: &mut Vec<u8>, frag: Option<usize>) -> Result<()> {
+    match frag {
+        Some(f) => {
+            out.push(1);
+            put_usize(out, f)?;
+        }
+        None => out.push(0),
+    }
+    Ok(())
+}
+
+fn put_literal(out: &mut Vec<u8>, lit: &xla::Literal) -> Result<()> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims();
+    put_usize(out, dims.len())?;
+    for &d in dims {
+        put_u64(out, u64::try_from(d).map_err(|_| anyhow!("msg: negative dim {d}"))?);
+    }
+    let data = lit.to_vec::<f32>()?;
+    put_usize(out, data.len())?;
+    out.reserve(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    Ok(())
+}
+
+fn put_adopt(out: &mut Vec<u8>, list: &Adopt) -> Result<()> {
+    put_usize(out, list.len())?;
+    for (leaf, lit) in list {
+        put_usize(out, *leaf)?;
+        put_literal(out, lit)?;
+    }
+    Ok(())
+}
+
+/// Bounds-checked little-endian reader: every truncation is a clean
+/// `Err`, never a slice panic.
+struct Rd<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Rd<'a> {
+        Rd { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "msg: truncated payload (need {n} bytes at offset {}, have {})",
+                    self.at,
+                    self.buf.len() - self.at.min(self.buf.len())
+                )
+            })?;
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn count(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        // a count can never describe more bytes than a frame may hold
+        if n > MAX_PAYLOAD {
+            bail!("msg: count {n} exceeds any legal payload");
+        }
+        Ok(n)
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn opt_frag(&mut self) -> Result<Option<usize>> {
+        Ok(match self.u8()? {
+            0 => None,
+            _ => Some(self.count()?),
+        })
+    }
+
+    fn literal(&mut self) -> Result<Arc<xla::Literal>> {
+        let ndims = self.count()?;
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            dims.push(i64::try_from(self.u64()?).map_err(|_| anyhow!("msg: dim exceeds i64"))?);
+        }
+        let n = self.count()?;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(f32::from_bits(self.u32()?));
+        }
+        Ok(Arc::new(xla::Literal::vec1(&data).reshape(&dims)?))
+    }
+
+    fn adopt(&mut self) -> Result<Adopt> {
+        let n = self.count()?;
+        let mut list = Vec::with_capacity(n);
+        for _ in 0..n {
+            let leaf = self.count()?;
+            list.push((leaf, self.literal()?));
+        }
+        Ok(list)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!(
+                "msg: {} trailing bytes after a complete message",
+                self.buf.len() - self.at
+            );
+        }
+        Ok(())
+    }
+}
+
+fn put_broadcast(out: &mut Vec<u8>, b: &Broadcast) -> Result<()> {
+    match b {
+        Broadcast::Literals(list) => {
+            out.push(0);
+            put_adopt(out, list)
+        }
+        Broadcast::Encoded { frag, bytes } => {
+            out.push(1);
+            put_opt_frag(out, *frag)?;
+            put_bytes(out, bytes)
+        }
+    }
+}
+
+fn read_broadcast(rd: &mut Rd) -> Result<Broadcast> {
+    Ok(match rd.u8()? {
+        0 => Broadcast::Literals(rd.adopt()?),
+        1 => Broadcast::Encoded {
+            frag: rd.opt_frag()?,
+            bytes: Arc::new(rd.bytes()?),
+        },
+        t => bail!("msg: unknown broadcast tag {t}"),
+    })
+}
+
+fn put_payload_spec(out: &mut Vec<u8>, p: &PayloadSpec) -> Result<()> {
+    match p {
+        PayloadSpec::None => out.push(0),
+        PayloadSpec::Params => out.push(1),
+        PayloadSpec::Encoded(spec) => {
+            out.push(2);
+            put_opt_frag(out, spec.frag)?;
+            put_u64(out, spec.sync_index);
+        }
+    }
+    Ok(())
+}
+
+fn read_payload_spec(rd: &mut Rd) -> Result<PayloadSpec> {
+    Ok(match rd.u8()? {
+        0 => PayloadSpec::None,
+        1 => PayloadSpec::Params,
+        2 => PayloadSpec::Encoded(EncodeSpec {
+            frag: rd.opt_frag()?,
+            sync_index: rd.u64()?,
+        }),
+        t => bail!("msg: unknown payload-spec tag {t}"),
+    })
+}
+
+fn put_churn(out: &mut Vec<u8>, c: &SegmentChurn) -> Result<()> {
+    put_usize(out, c.deaths.len())?;
+    for &d in &c.deaths {
+        put_usize(out, d)?;
+    }
+    put_usize(out, c.joins.len())?;
+    for &j in &c.joins {
+        put_usize(out, j)?;
+    }
+    put_adopt(out, &c.join_view)
+}
+
+fn read_churn(rd: &mut Rd) -> Result<SegmentChurn> {
+    let n = rd.count()?;
+    let mut deaths = Vec::with_capacity(n);
+    for _ in 0..n {
+        deaths.push(rd.count()?);
+    }
+    let n = rd.count()?;
+    let mut joins = Vec::with_capacity(n);
+    for _ in 0..n {
+        joins.push(rd.count()?);
+    }
+    Ok(SegmentChurn {
+        deaths,
+        joins,
+        join_view: rd.adopt()?,
+    })
+}
+
+fn put_sync_payload(out: &mut Vec<u8>, p: &SyncPayload) -> Result<()> {
+    match p {
+        SyncPayload::Params(lits) => {
+            out.push(0);
+            put_usize(out, lits.len())?;
+            for lit in lits {
+                put_literal(out, lit)?;
+            }
+        }
+        SyncPayload::Encoded(bytes) => {
+            out.push(1);
+            put_bytes(out, bytes)?;
+        }
+        SyncPayload::Skipped => out.push(2),
+    }
+    Ok(())
+}
+
+fn read_sync_payload(rd: &mut Rd) -> Result<SyncPayload> {
+    Ok(match rd.u8()? {
+        0 => {
+            let n = rd.count()?;
+            let mut lits = Vec::with_capacity(n);
+            for _ in 0..n {
+                lits.push(rd.literal()?);
+            }
+            SyncPayload::Params(lits)
+        }
+        1 => SyncPayload::Encoded(rd.bytes()?),
+        2 => SyncPayload::Skipped,
+        t => bail!("msg: unknown sync-payload tag {t}"),
+    })
+}
+
+/// Serialize a command into `out`; returns the frame kind it travels
+/// under. `Spares` is deliberately unencodable (see [`Cmd::Spares`]).
+pub fn cmd_payload(cmd: &Cmd, out: &mut Vec<u8>) -> Result<MsgKind> {
+    match cmd {
+        Cmd::Run {
+            from,
+            to,
+            broadcast,
+            payload,
+            churn,
+        } => {
+            put_u64(out, *from as u64);
+            put_u64(out, *to as u64);
+            put_broadcast(out, broadcast)?;
+            put_payload_spec(out, payload)?;
+            put_churn(out, churn)?;
+            Ok(MsgKind::Run)
+        }
+        Cmd::Finish { broadcast } => {
+            put_broadcast(out, broadcast)?;
+            Ok(MsgKind::Finish)
+        }
+        Cmd::Spares(_) => bail!("msg: Spares never crosses a serialized transport"),
+    }
+}
+
+/// Deserialize a command from a received frame.
+pub fn cmd_from_frame(kind: MsgKind, payload: &[u8]) -> Result<Cmd> {
+    let mut rd = Rd::new(payload);
+    let cmd = match kind {
+        MsgKind::Run => {
+            let from = rd.u64()? as usize;
+            let to = rd.u64()? as usize;
+            let broadcast = read_broadcast(&mut rd)?;
+            let payload = read_payload_spec(&mut rd)?;
+            let churn = read_churn(&mut rd)?;
+            Cmd::Run {
+                from,
+                to,
+                broadcast,
+                payload,
+                churn,
+            }
+        }
+        MsgKind::Finish => Cmd::Finish {
+            broadcast: read_broadcast(&mut rd)?,
+        },
+        other => bail!("msg: frame kind {other:?} is not a command"),
+    };
+    rd.done()?;
+    Ok(cmd)
+}
+
+/// Serialize a worker report.
+pub fn report_payload(report: &WorkerReport, out: &mut Vec<u8>) -> Result<()> {
+    put_usize(out, report.reps.len())?;
+    for (rid, losses, payload) in &report.reps {
+        put_usize(out, *rid)?;
+        put_usize(out, losses.len())?;
+        for &l in losses {
+            put_u64(out, l.to_bits());
+        }
+        put_sync_payload(out, payload)?;
+    }
+    Ok(())
+}
+
+/// Deserialize a worker report.
+pub fn report_from_payload(payload: &[u8]) -> Result<WorkerReport> {
+    let mut rd = Rd::new(payload);
+    let n = rd.count()?;
+    let mut reps = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rid = rd.count()?;
+        let nl = rd.count()?;
+        let mut losses = Vec::with_capacity(nl);
+        for _ in 0..nl {
+            losses.push(f64::from_bits(rd.u64()?));
+        }
+        reps.push((rid, losses, read_sync_payload(&mut rd)?));
+    }
+    rd.done()?;
+    Ok(WorkerReport { reps })
+}
+
+/// Handshake Hello payload: the replica ids this worker claims.
+pub fn hello_payload(claims: &[usize], out: &mut Vec<u8>) -> Result<()> {
+    put_usize(out, claims.len())?;
+    for &r in claims {
+        put_usize(out, r)?;
+    }
+    Ok(())
+}
+
+pub fn hello_from_payload(payload: &[u8]) -> Result<Vec<usize>> {
+    let mut rd = Rd::new(payload);
+    let n = rd.count()?;
+    let mut claims = Vec::with_capacity(n);
+    for _ in 0..n {
+        claims.push(rd.count()?);
+    }
+    rd.done()?;
+    Ok(claims)
+}
+
+/// Handshake Welcome payload: engine kind, initial liveness over the
+/// replica universe, and the coordinator's run config JSON (the source
+/// of truth the worker rebuilds from).
+pub fn welcome_payload(
+    engine: u8,
+    live: &[bool],
+    config_json: &str,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    out.push(engine);
+    put_usize(out, live.len())?;
+    out.extend(live.iter().map(|&l| l as u8));
+    put_bytes(out, config_json.as_bytes())
+}
+
+pub fn welcome_from_payload(payload: &[u8]) -> Result<(u8, Vec<bool>, String)> {
+    let mut rd = Rd::new(payload);
+    let engine = rd.u8()?;
+    let n = rd.count()?;
+    let live = rd.take(n)?.iter().map(|&b| b != 0).collect();
+    let config = String::from_utf8(rd.bytes()?)
+        .map_err(|_| anyhow!("msg: welcome config is not UTF-8"))?;
+    rd.done()?;
+    Ok((engine, live, config))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lit(shape: &[i64], vals: &[f32]) -> Arc<xla::Literal> {
+        Arc::new(xla::Literal::vec1(vals).reshape(shape).unwrap())
+    }
+
+    #[test]
+    fn run_cmd_roundtrips_bit_exact() {
+        let cmd = Cmd::Run {
+            from: 3,
+            to: 9,
+            broadcast: Broadcast::Literals(vec![
+                (0, lit(&[2, 2], &[1.5, -0.0, f32::MIN_POSITIVE, 3.25])),
+                (2, lit(&[3], &[0.1, 0.2, 0.3])),
+            ]),
+            payload: PayloadSpec::Encoded(EncodeSpec {
+                frag: Some(1),
+                sync_index: 42,
+            }),
+            churn: SegmentChurn {
+                deaths: vec![1],
+                joins: vec![3],
+                join_view: vec![(0, lit(&[1], &[7.0]))],
+            },
+        };
+        let mut buf = Vec::new();
+        let kind = cmd_payload(&cmd, &mut buf).unwrap();
+        assert_eq!(kind, MsgKind::Run);
+        let back = cmd_from_frame(kind, &buf).unwrap();
+        let Cmd::Run {
+            from,
+            to,
+            broadcast,
+            payload,
+            churn,
+        } = back
+        else {
+            panic!("wrong command kind");
+        };
+        assert_eq!((from, to), (3, 9));
+        let Broadcast::Literals(list) = broadcast else {
+            panic!("wrong broadcast kind");
+        };
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].0, 0);
+        // bit-exact, including the negative zero
+        let v = list[0].1.to_vec::<f32>().unwrap();
+        assert_eq!(
+            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            [1.5f32, -0.0, f32::MIN_POSITIVE, 3.25]
+                .iter()
+                .map(|x| x.to_bits())
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(list[0].1.array_shape().unwrap().dims(), &[2, 2]);
+        let PayloadSpec::Encoded(spec) = payload else {
+            panic!("wrong payload spec");
+        };
+        assert_eq!((spec.frag, spec.sync_index), (Some(1), 42));
+        assert_eq!((churn.deaths, churn.joins), (vec![1], vec![3]));
+        assert_eq!(churn.join_view.len(), 1);
+    }
+
+    #[test]
+    fn finish_and_encoded_broadcast_roundtrip() {
+        let cmd = Cmd::Finish {
+            broadcast: Broadcast::Encoded {
+                frag: None,
+                bytes: Arc::new(vec![1, 2, 3, 255]),
+            },
+        };
+        let mut buf = Vec::new();
+        let kind = cmd_payload(&cmd, &mut buf).unwrap();
+        assert_eq!(kind, MsgKind::Finish);
+        let Cmd::Finish {
+            broadcast: Broadcast::Encoded { frag, bytes },
+        } = cmd_from_frame(kind, &buf).unwrap()
+        else {
+            panic!("wrong shape back");
+        };
+        assert_eq!(frag, None);
+        assert_eq!(&bytes[..], &[1, 2, 3, 255]);
+    }
+
+    #[test]
+    fn spares_never_serialize() {
+        assert!(cmd_payload(&Cmd::Spares(vec![vec![0u8; 4]]), &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn report_roundtrips_losses_bit_exact() {
+        let report = WorkerReport {
+            reps: vec![
+                (0, vec![1.0625, -2.5, f64::EPSILON], SyncPayload::Encoded(vec![9, 8, 7])),
+                (2, Vec::new(), SyncPayload::Skipped),
+                (4, vec![0.0], SyncPayload::Params(vec![lit(&[2], &[1.0, 2.0])])),
+            ],
+        };
+        let mut buf = Vec::new();
+        report_payload(&report, &mut buf).unwrap();
+        let back = report_from_payload(&buf).unwrap();
+        assert_eq!(back.reps.len(), 3);
+        assert_eq!(back.reps[0].0, 0);
+        assert_eq!(
+            back.reps[0].1.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            report.reps[0].1.iter().map(|l| l.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(matches!(back.reps[1].2, SyncPayload::Skipped));
+        let SyncPayload::Params(lits) = &back.reps[2].2 else {
+            panic!("wrong payload kind");
+        };
+        assert_eq!(lits[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn truncated_messages_reject_cleanly() {
+        let mut buf = Vec::new();
+        report_payload(
+            &WorkerReport {
+                reps: vec![(1, vec![3.5, 4.5], SyncPayload::Encoded(vec![1, 2, 3]))],
+            },
+            &mut buf,
+        )
+        .unwrap();
+        for cut in 0..buf.len() {
+            assert!(
+                report_from_payload(&buf[..cut]).is_err(),
+                "cut at {cut} must reject"
+            );
+        }
+        // trailing garbage rejects too
+        buf.push(0);
+        assert!(report_from_payload(&buf).is_err());
+    }
+
+    #[test]
+    fn handshake_payloads_roundtrip() {
+        let mut buf = Vec::new();
+        hello_payload(&[0, 2, 5], &mut buf).unwrap();
+        assert_eq!(hello_from_payload(&buf).unwrap(), vec![0, 2, 5]);
+
+        let mut buf = Vec::new();
+        welcome_payload(1, &[true, false, true], "{\"seed\":17}", &mut buf).unwrap();
+        let (engine, live, cfg) = welcome_from_payload(&buf).unwrap();
+        assert_eq!(engine, 1);
+        assert_eq!(live, vec![true, false, true]);
+        assert_eq!(cfg, "{\"seed\":17}");
+    }
+}

@@ -1,0 +1,552 @@
+//! TCP transport: length-prefixed [`frame`]s over sockets, so one run
+//! spans OS processes (or machines).
+//!
+//! # Handshake
+//!
+//! Workers connect (with bounded backoff — racing the coordinator's
+//! bind is expected, not an error) and send a `Hello` frame claiming a
+//! replica set; the header carries the worker's run-config fingerprint
+//! and codec widths when the operator passed train flags (0 =
+//! "unspecified, adopt the coordinator's"). The coordinator validates
+//! — protocol version (enforced by frame decoding itself), nonzero
+//! fingerprint/width agreement, claim sanity (in-universe, disjoint,
+//! and jointly covering every replica) — and answers `Welcome` (engine
+//! kind + initial liveness + the authoritative run-config JSON) or
+//! `Reject` (reason string), failing the run loudly on any mismatch:
+//! a quietly divergent peer would poison every reduce it touches.
+//!
+//! # Liveness
+//!
+//! Each worker runs a heartbeat thread writing `Heartbeat` frames on a
+//! fixed cadence (writes share a mutex with report frames, held across
+//! the whole `write_all`, so frames never interleave). The coordinator
+//! reads with a timeout a few heartbeats long: a dead or wedged worker
+//! surfaces as a lane error within seconds, which the drive loop turns
+//! into a journaled `Crash` with survivors continuing — never a hang.
+//! Workers read commands without a timeout: a dead coordinator closes
+//! the socket, which ends the session cleanly.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::frame::{read_frame, write_frame, FrameHeader, MsgKind};
+use super::msg::{self, Cmd, WorkerReport};
+use super::{Lane, WorkerLink};
+
+/// Worker heartbeat cadence.
+pub const HEARTBEAT_PERIOD: Duration = Duration::from_millis(500);
+/// Coordinator read patience: this many heartbeats missed = dead peer.
+pub const HEARTBEAT_PATIENCE: u32 = 6;
+/// Handshake read timeout (a connecting peer that never says Hello).
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Default connect attempts for [`connect_with_backoff`].
+pub const CONNECT_ATTEMPTS: usize = 10;
+/// First retry delay; doubles per attempt, capped at [`BACKOFF_CAP`].
+pub const BACKOFF_START: Duration = Duration::from_millis(100);
+pub const BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// Engine kinds shipped in the Welcome payload.
+pub const ENGINE_PJRT: u8 = 0;
+pub const ENGINE_TOY: u8 = 1;
+
+/// Connect to `addr`, retrying with bounded exponential backoff: a
+/// worker launched alongside the coordinator routinely races its
+/// `--listen` bind, so refused connections retry (100ms, 200ms, ...,
+/// capped at 2s) up to `attempts` times before giving up with an
+/// error naming the address and the attempt count.
+pub fn connect_with_backoff(addr: &str, attempts: usize) -> Result<TcpStream> {
+    let attempts = attempts.max(1);
+    let mut delay = BACKOFF_START;
+    let mut last_err: Option<std::io::Error> = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(BACKOFF_CAP);
+        }
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                return Ok(stream);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(anyhow!(
+        "could not connect to {addr} after {attempts} attempts: {}",
+        last_err.expect("attempts >= 1 guarantees an error")
+    ))
+}
+
+/// What both sides agree on after the handshake.
+#[derive(Debug, Clone)]
+pub struct SessionInfo {
+    /// fnv1a64 of the canonical run-config JSON.
+    pub fingerprint: u64,
+    /// Up/down codec widths in bits (stamped on every data frame).
+    pub up_bits: u8,
+    pub down_bits: u8,
+    /// Engine kind ([`ENGINE_PJRT`] / [`ENGINE_TOY`]).
+    pub engine: u8,
+    /// Initial liveness per universe slot (joiner slots dark).
+    pub live: Vec<bool>,
+    /// The coordinator's run config JSON — the source of truth every
+    /// worker rebuilds its engine, replicas, and comm link from.
+    pub config_json: String,
+}
+
+fn data_header(kind: MsgKind, info_fp: u64, up: u8, down: u8) -> FrameHeader {
+    FrameHeader {
+        kind,
+        up_bits: up,
+        down_bits: down,
+        fingerprint: info_fp,
+        sync_index: 0,
+        frag: None,
+    }
+}
+
+// ---- coordinator side -------------------------------------------------
+
+/// Coordinator-side endpoint of one worker connection.
+pub struct TcpLane {
+    stream: TcpStream,
+    header: FrameHeader,
+    peer: String,
+}
+
+impl Lane for TcpLane {
+    fn send(&mut self, cmd: Cmd) -> Result<()> {
+        if matches!(cmd, Cmd::Spares(_)) {
+            return Ok(()); // buffer recycling never crosses a socket
+        }
+        let mut payload = Vec::new();
+        let kind = msg::cmd_payload(&cmd, &mut payload)?;
+        let mut h = self.header.clone();
+        h.kind = kind;
+        // stamp the schedule position for wire-level observability
+        if let Cmd::Run {
+            payload: super::msg::PayloadSpec::Encoded(spec),
+            ..
+        } = &cmd
+        {
+            h.sync_index = spec.sync_index;
+            h.frag = spec.frag.map(|f| f as u32);
+        }
+        write_frame(&mut self.stream, &h, &payload)
+            .with_context(|| format!("tcp lane to {}", self.peer))
+    }
+
+    fn recv(&mut self) -> Result<Result<WorkerReport>> {
+        loop {
+            let (h, payload) = read_frame(&mut self.stream).with_context(|| {
+                format!(
+                    "tcp lane to {}: no frame within the read timeout \
+                     ({HEARTBEAT_PATIENCE} heartbeats)",
+                    self.peer
+                )
+            })?;
+            match h.kind {
+                MsgKind::Heartbeat => continue,
+                MsgKind::Report => return Ok(Ok(msg::report_from_payload(&payload)?)),
+                MsgKind::Error => {
+                    return Ok(Err(anyhow!(
+                        "worker at {}: {}",
+                        self.peer,
+                        String::from_utf8_lossy(&payload)
+                    )))
+                }
+                other => bail!(
+                    "tcp lane to {}: unexpected {other:?} frame while awaiting a report",
+                    self.peer
+                ),
+            }
+        }
+    }
+}
+
+fn reject(stream: &mut TcpStream, reason: &str) {
+    let _ = write_frame(
+        stream,
+        &FrameHeader::bare(MsgKind::Reject),
+        reason.as_bytes(),
+    );
+}
+
+/// Accept and handshake exactly `expect` workers off `listener`,
+/// validating every claim; returns one lane per worker paired with the
+/// replica ids it owns. Any mismatch rejects the peer AND fails the
+/// coordinator — a run with a divergent or missing worker must never
+/// limp onward silently.
+pub fn accept_workers(
+    listener: &TcpListener,
+    expect: usize,
+    info: &SessionInfo,
+) -> Result<Vec<(TcpLane, Vec<usize>)>> {
+    let universe = info.live.len();
+    let mut claimed: Vec<bool> = vec![false; universe];
+    let mut lanes: Vec<(TcpLane, Vec<usize>)> = Vec::with_capacity(expect);
+    while lanes.len() < expect {
+        let (mut stream, peer_addr) = listener.accept().context("transport: accept")?;
+        let peer = peer_addr.to_string();
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+            .context("transport: set handshake timeout")?;
+        let (h, payload) = read_frame(&mut stream)
+            .with_context(|| format!("transport: handshake with {peer}"))?;
+        if h.kind != MsgKind::Hello {
+            let why = format!("expected Hello, got {:?}", h.kind);
+            reject(&mut stream, &why);
+            bail!("transport: handshake with {peer}: {why}");
+        }
+        if h.fingerprint != 0 && h.fingerprint != info.fingerprint {
+            let why = format!(
+                "run-config fingerprint mismatch: worker has {:#018x}, \
+                 coordinator has {:#018x} (flags or build differ)",
+                h.fingerprint, info.fingerprint
+            );
+            reject(&mut stream, &why);
+            bail!("transport: handshake with {peer}: {why}");
+        }
+        if (h.up_bits != 0 && h.up_bits != info.up_bits)
+            || (h.down_bits != 0 && h.down_bits != info.down_bits)
+        {
+            let why = format!(
+                "codec width mismatch: worker claims {}/{} bits, run uses {}/{}",
+                h.up_bits, h.down_bits, info.up_bits, info.down_bits
+            );
+            reject(&mut stream, &why);
+            bail!("transport: handshake with {peer}: {why}");
+        }
+        let claims = msg::hello_from_payload(&payload)
+            .with_context(|| format!("transport: handshake with {peer}"))?;
+        if claims.is_empty() {
+            reject(&mut stream, "claimed no replicas");
+            bail!("transport: handshake with {peer}: worker claimed no replicas");
+        }
+        for &r in &claims {
+            if r >= universe {
+                let why = format!("replica {r} is outside the universe of {universe}");
+                reject(&mut stream, &why);
+                bail!("transport: handshake with {peer}: {why}");
+            }
+            if claimed[r] {
+                let why = format!("replica {r} is already claimed by another worker");
+                reject(&mut stream, &why);
+                bail!("transport: handshake with {peer}: {why}");
+            }
+            claimed[r] = true;
+        }
+        let mut welcome = Vec::new();
+        msg::welcome_payload(info.engine, &info.live, &info.config_json, &mut welcome)?;
+        let mut wh = data_header(MsgKind::Welcome, info.fingerprint, info.up_bits, info.down_bits);
+        wh.kind = MsgKind::Welcome;
+        write_frame(&mut stream, &wh, &welcome)
+            .with_context(|| format!("transport: welcoming {peer}"))?;
+        stream
+            .set_read_timeout(Some(HEARTBEAT_PERIOD * HEARTBEAT_PATIENCE))
+            .context("transport: set lane timeout")?;
+        lanes.push((
+            TcpLane {
+                stream,
+                header: data_header(MsgKind::Run, info.fingerprint, info.up_bits, info.down_bits),
+                peer,
+            },
+            claims,
+        ));
+    }
+    if let Some(r) = claimed.iter().position(|&c| !c) {
+        bail!(
+            "transport: all {expect} workers connected but replica {r} is unclaimed \
+             (claims must cover the whole universe of {universe})"
+        );
+    }
+    Ok(lanes)
+}
+
+// ---- worker side ------------------------------------------------------
+
+/// Worker-side endpoint of the coordinator connection. Owns the
+/// heartbeat thread; dropping the link stops it within one period.
+pub struct TcpWorkerLink {
+    reader: TcpStream,
+    writer: Arc<Mutex<TcpStream>>,
+    header: FrameHeader,
+    stop: Arc<AtomicBool>,
+}
+
+/// Connect-side handshake: claim `claims`, offer `fingerprint` and
+/// codec widths (0 = unspecified), and adopt the coordinator's
+/// session. Fail-loud on `Reject` — the reason travels in the frame.
+pub fn worker_handshake(
+    stream: &mut TcpStream,
+    claims: &[usize],
+    fingerprint: u64,
+    up_bits: u8,
+    down_bits: u8,
+) -> Result<SessionInfo> {
+    let mut hello = Vec::new();
+    msg::hello_payload(claims, &mut hello)?;
+    let h = FrameHeader {
+        kind: MsgKind::Hello,
+        up_bits,
+        down_bits,
+        fingerprint,
+        sync_index: 0,
+        frag: None,
+    };
+    write_frame(stream, &h, &hello).context("transport: sending Hello")?;
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .context("transport: set handshake timeout")?;
+    let (wh, payload) = read_frame(stream).context("transport: awaiting Welcome")?;
+    match wh.kind {
+        MsgKind::Welcome => {
+            let (engine, live, config_json) = msg::welcome_from_payload(&payload)?;
+            Ok(SessionInfo {
+                fingerprint: wh.fingerprint,
+                up_bits: wh.up_bits,
+                down_bits: wh.down_bits,
+                engine,
+                live,
+                config_json,
+            })
+        }
+        MsgKind::Reject => bail!(
+            "transport: coordinator rejected this worker: {}",
+            String::from_utf8_lossy(&payload)
+        ),
+        other => bail!("transport: expected Welcome or Reject, got {other:?}"),
+    }
+}
+
+impl TcpWorkerLink {
+    /// Wrap a handshaken stream and start the heartbeat thread.
+    pub fn new(stream: TcpStream, info: &SessionInfo) -> Result<TcpWorkerLink> {
+        // commands can be arbitrarily far apart (the coordinator
+        // reduces between segments) — block without a timeout; a dead
+        // coordinator closes the socket, which ends the read
+        stream
+            .set_read_timeout(None)
+            .context("transport: clear worker read timeout")?;
+        let writer = Arc::new(Mutex::new(
+            stream.try_clone().context("transport: clone stream for writes")?,
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let hb_writer = Arc::clone(&writer);
+        let hb_stop = Arc::clone(&stop);
+        let hb_header = data_header(
+            MsgKind::Heartbeat,
+            info.fingerprint,
+            info.up_bits,
+            info.down_bits,
+        );
+        // detached on purpose: it holds only the shared writer and
+        // exits within one period of `stop` (or on the first failed
+        // write once the socket closes)
+        std::thread::spawn(move || {
+            while !hb_stop.load(Ordering::Relaxed) {
+                std::thread::sleep(HEARTBEAT_PERIOD);
+                if hb_stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let mut w = match hb_writer.lock() {
+                    Ok(w) => w,
+                    Err(_) => break,
+                };
+                let mut hh = hb_header.clone();
+                hh.kind = MsgKind::Heartbeat;
+                if write_frame(&mut *w, &hh, &[]).is_err() {
+                    break;
+                }
+                let _ = w.flush();
+            }
+        });
+        Ok(TcpWorkerLink {
+            reader: stream,
+            writer,
+            header: data_header(
+                MsgKind::Report,
+                info.fingerprint,
+                info.up_bits,
+                info.down_bits,
+            ),
+            stop,
+        })
+    }
+}
+
+impl Drop for TcpWorkerLink {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl WorkerLink for TcpWorkerLink {
+    fn recv_cmd(&mut self) -> Option<Cmd> {
+        // any failure — EOF, reset, garbage — ends the session; the
+        // coordinator side is where failures are judged and journaled
+        let (h, payload) = read_frame(&mut self.reader).ok()?;
+        msg::cmd_from_frame(h.kind, &payload).ok()
+    }
+
+    fn send_report(&mut self, report: Result<WorkerReport>) -> Result<()> {
+        let mut payload = Vec::new();
+        let kind = match &report {
+            Ok(rep) => {
+                msg::report_payload(rep, &mut payload)?;
+                MsgKind::Report
+            }
+            Err(e) => {
+                payload.extend_from_slice(format!("{e:#}").as_bytes());
+                MsgKind::Error
+            }
+        };
+        let mut h = self.header.clone();
+        h.kind = kind;
+        let mut w = self
+            .writer
+            .lock()
+            .map_err(|_| anyhow!("transport: writer mutex poisoned"))?;
+        write_frame(&mut *w, &h, &payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::msg::{Broadcast, PayloadSpec, SegmentChurn, SyncPayload};
+
+    fn session(universe: usize) -> SessionInfo {
+        SessionInfo {
+            fingerprint: 0xDEAD_BEEF,
+            up_bits: 32,
+            down_bits: 32,
+            engine: ENGINE_TOY,
+            live: vec![true; universe],
+            config_json: "{\"seed\":17}".to_string(),
+        }
+    }
+
+    #[test]
+    fn connect_backoff_names_address_and_attempts() {
+        // a port nothing listens on: bind, learn the port, drop
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = connect_with_backoff(&addr, 3).expect_err("nothing listens there");
+        let msg = format!("{err:#}");
+        assert!(msg.contains(&addr), "{msg}");
+        assert!(msg.contains("3 attempts"), "{msg}");
+    }
+
+    #[test]
+    fn loopback_handshake_and_one_segment() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let info = session(2);
+        let worker_info = info.clone();
+        let worker = std::thread::spawn(move || {
+            let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+            let got = worker_handshake(&mut stream, &[0, 1], 0, 0, 0).unwrap();
+            assert_eq!(got.fingerprint, worker_info.fingerprint);
+            assert_eq!(got.engine, ENGINE_TOY);
+            assert_eq!(got.live, vec![true, true]);
+            assert_eq!(got.config_json, worker_info.config_json);
+            let mut link = TcpWorkerLink::new(stream, &got).unwrap();
+            let Some(Cmd::Run { from, to, .. }) = link.recv_cmd() else {
+                panic!("expected Run");
+            };
+            assert_eq!((from, to), (0, 3));
+            link.send_report(Ok(WorkerReport {
+                reps: vec![
+                    (0, vec![1.5, 2.5, 3.5], SyncPayload::Skipped),
+                    (1, vec![4.5, 5.5, 6.5], SyncPayload::Encoded(vec![7, 7])),
+                ],
+            }))
+            .unwrap();
+            assert!(link.recv_cmd().is_none(), "coordinator closed: clean end");
+        });
+        let mut lanes = accept_workers(&listener, 1, &info).unwrap();
+        assert_eq!(lanes.len(), 1);
+        assert_eq!(lanes[0].1, vec![0, 1]);
+        let lane = &mut lanes[0].0;
+        lane.send(Cmd::Spares(vec![vec![1u8; 8]])).unwrap(); // dropped, not sent
+        lane.send(Cmd::Run {
+            from: 0,
+            to: 3,
+            broadcast: Broadcast::empty(),
+            payload: PayloadSpec::None,
+            churn: SegmentChurn::default(),
+        })
+        .unwrap();
+        let report = lane.recv().unwrap().unwrap();
+        assert_eq!(report.reps[0].1, vec![1.5, 2.5, 3.5]);
+        assert!(matches!(report.reps[1].2, SyncPayload::Encoded(ref b) if b == &vec![7, 7]));
+        drop(lanes);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_rejects_fail_loud() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = std::thread::spawn(move || {
+            let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+            worker_handshake(&mut stream, &[0], 0x1234, 0, 0)
+                .expect_err("mismatched fingerprint must be rejected")
+        });
+        let err = accept_workers(&listener, 1, &session(1))
+            .expect_err("coordinator fails loud too");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fingerprint mismatch"), "{msg}");
+        assert!(msg.contains("0x0000000000001234"), "{msg}");
+        let werr = format!("{:#}", worker.join().unwrap());
+        assert!(werr.contains("rejected"), "{werr}");
+        assert!(werr.contains("fingerprint"), "{werr}");
+    }
+
+    #[test]
+    fn overlapping_claims_reject() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let a1 = addr.clone();
+        let w1 = std::thread::spawn(move || {
+            let mut s = connect_with_backoff(&a1, CONNECT_ATTEMPTS).unwrap();
+            worker_handshake(&mut s, &[0, 1], 0, 0, 0).map(|_| s)
+        });
+        let w2 = std::thread::spawn(move || {
+            // second worker waits so the claim order is deterministic
+            std::thread::sleep(Duration::from_millis(200));
+            let mut s = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+            worker_handshake(&mut s, &[1], 0, 0, 0).map(|_| s)
+        });
+        let err = accept_workers(&listener, 2, &session(2)).expect_err("claim overlap");
+        assert!(format!("{err:#}").contains("already claimed"), "{err:#}");
+        assert!(w1.join().unwrap().is_ok(), "first claimer was welcomed");
+        assert!(w2.join().unwrap().is_err(), "second claimer was rejected");
+    }
+
+    #[test]
+    fn dead_worker_times_out_as_lane_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let worker = std::thread::spawn(move || {
+            let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+            let info = worker_handshake(&mut stream, &[0], 0, 0, 0).unwrap();
+            let link = TcpWorkerLink::new(stream, &info).unwrap();
+            // die without reporting: drop the link (and socket)
+            drop(link);
+        });
+        let mut lanes = accept_workers(&listener, 1, &session(1)).unwrap();
+        worker.join().unwrap();
+        let err = lanes[0].0.recv().expect_err("closed socket = dead lane");
+        assert!(!format!("{err:#}").is_empty());
+    }
+}

@@ -45,6 +45,7 @@ fn fake_metrics(model: &str, algo: &str, n: usize, loss: f64, batch: usize, lr: 
         outer_bits_down: 32,
         wire_up_bytes: if h > 0 { (100 / h) as u64 * n as u64 * 4 } else { 0 },
         wire_down_bytes: if h > 0 { (100 / h) as u64 * n as u64 * 4 } else { 0 },
+        wire_framed_bytes: if h > 0 { (100 / h) as u64 * (n as u64 * 8 + 72) } else { 0 },
         churn: String::new(),
         dropout_rate: 0.0,
     }

@@ -1,0 +1,349 @@
+//! The loopback twin: a coordinator driving real TCP sockets on
+//! 127.0.0.1 must be bit-identical to the single-process in-proc run —
+//! same per-step losses, same eval curve, same wire accounting, same
+//! final replica payloads — for the identity codecs and for the int4
+//! quantized wires, at barrier (τ=0) and overlapped (τ=1) schedules.
+//! The in-proc channel transport is the oracle; any divergence means
+//! the frame codec, the lane executor, or the worker-side comm rebuild
+//! changed training math.
+//!
+//! Also pins the crash path: a worker that silently drops its socket
+//! mid-run must surface as journaled `Crash` events for its replicas
+//! while the survivors finish the schedule.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+
+use diloco::comm::{CommLink, OuterBits, ReplicaComm, WorkerComm};
+use diloco::coordinator::{
+    drive_ctl, drive_lanes, worker_session, DriveCtl, DrivePlan, EventKind, InnerEngine,
+    OuterSync, OwnedReplica,
+};
+use diloco::runtime::HostTensor;
+use diloco::train::toy::{toy_init, toy_layout, toy_replicas, toy_replicas_for, ToyEngine};
+use diloco::transport::msg::Cmd;
+use diloco::transport::tcp::{
+    accept_workers, connect_with_backoff, worker_handshake, SessionInfo, TcpWorkerLink,
+    CONNECT_ATTEMPTS, ENGINE_TOY,
+};
+use diloco::transport::WorkerLink;
+
+const M: usize = 4;
+const SEED: u64 = 42;
+const FRAGMENTS: usize = 2;
+
+fn plan(workers: usize, tau: usize) -> DrivePlan {
+    DrivePlan {
+        total_steps: 22,
+        sync_interval: 3, // H=6, P=2 -> a fragment every 3 steps
+        fragments: FRAGMENTS,
+        n_params: toy_layout().n_leaves(),
+        eval_every: Some(7),
+        log_every: 5,
+        workers,
+        overlap_tau: tau,
+    }
+}
+
+fn outer_sync(up: OuterBits, down: OuterBits) -> OuterSync {
+    use diloco::comm::codec_for;
+    let l = toy_layout();
+    let init_lits = toy_init(&l, SEED).unwrap();
+    let host: Vec<HostTensor> = init_lits
+        .iter()
+        .map(|lit| HostTensor::from_literal(lit).unwrap())
+        .collect();
+    OuterSync::new(Arc::clone(&l), &host, init_lits, 0.7, 0.9, FRAGMENTS)
+        .unwrap()
+        .with_codec(codec_for(up), SEED)
+        .with_down_codec(codec_for(down))
+}
+
+struct RunResult {
+    step_losses: Vec<f64>,
+    loss_curve: Vec<(usize, f64)>,
+    eval_curve: Vec<(usize, f64)>,
+    outer_syncs: usize,
+    wire_up: u64,
+    wire_down: u64,
+    framed: u64,
+    global_bits: Vec<u32>,
+    final_eval: f64,
+    /// Per-replica, per-leaf payload bits after the final flush, in
+    /// replica-id order.
+    finals: Vec<Vec<Vec<u32>>>,
+}
+
+fn leaf_bits(state: &[Arc<xla::Literal>], n_leaves: usize) -> Vec<Vec<u32>> {
+    (0..n_leaves)
+        .map(|leaf| {
+            state[leaf]
+                .to_vec::<f32>()
+                .unwrap()
+                .iter()
+                .map(|x| x.to_bits())
+                .collect()
+        })
+        .collect()
+}
+
+/// The oracle: the whole universe in this process over mpsc channels
+/// (`drive_ctl`'s sequential path — the reference every transport is
+/// pinned against).
+fn run_inproc(up: OuterBits, down: OuterBits, tau: usize) -> RunResult {
+    let l = toy_layout();
+    let engine = ToyEngine::new(&l);
+    let mut replicas = toy_replicas(&l, 0..M, SEED).unwrap();
+    let mut sync = outer_sync(up, down);
+    let mut ctl = DriveCtl::fresh(M);
+    let out = drive_ctl(&engine, &mut replicas, Some(&mut sync), &plan(1, tau), &mut ctl)
+        .expect("in-proc drive");
+    let final_eval = engine.eval(sync.global_literals().unwrap()).unwrap();
+    RunResult {
+        step_losses: out.step_losses,
+        loss_curve: out.loss_curve,
+        eval_curve: out.eval_curve,
+        outer_syncs: out.outer_syncs,
+        wire_up: sync.wire_stats().total_up(),
+        wire_down: sync.wire_stats().total_down(),
+        framed: sync.wire_stats().total_framed(),
+        global_bits: sync.global().data().iter().map(|x| x.to_bits()).collect(),
+        final_eval,
+        finals: replicas
+            .iter()
+            .map(|r| leaf_bits(&r.state, l.n_leaves()))
+            .collect(),
+    }
+}
+
+/// One worker process, played by a thread: connect, hand-shake, rebuild
+/// engine + replicas + comm link from scratch (exactly what
+/// `diloco worker` does), serve segments, return final replica states.
+fn spawn_worker(
+    addr: String,
+    claims: Vec<usize>,
+    up: OuterBits,
+    down: OuterBits,
+) -> thread::JoinHandle<Vec<OwnedReplica>> {
+    thread::spawn(move || {
+        let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+        let info = worker_handshake(&mut stream, &claims, 0, 0, 0).unwrap();
+        assert_eq!(info.engine, ENGINE_TOY);
+        let l = toy_layout();
+        let engine = ToyEngine::new(&l);
+        let reps = toy_replicas_for(&l, &claims, SEED).unwrap();
+        let mut owned: Vec<OwnedReplica> = claims
+            .iter()
+            .zip(reps)
+            .map(|(&rid, rep)| OwnedReplica {
+                rid,
+                live: info.live[rid],
+                rep,
+                rc: ReplicaComm::default(),
+            })
+            .collect();
+        let mut wc = WorkerComm::default();
+        let link = CommLink::for_run(&l, up, down, FRAGMENTS, SEED);
+        let link = if link.is_active() {
+            link.init_snapshot(&mut wc, &owned[0].rep.state).unwrap();
+            for o in &mut owned {
+                link.init_replica(&mut o.rc);
+            }
+            Some(link)
+        } else {
+            None
+        };
+        let mut wl = TcpWorkerLink::new(stream, &info).unwrap();
+        let (owned, _arena, finish) =
+            worker_session(&engine, l.n_leaves(), link, wc, owned, &mut wl);
+        finish.unwrap();
+        owned
+    })
+}
+
+/// The same schedule over real sockets: two worker threads each owning
+/// half the universe, the coordinator on TCP lanes.
+fn run_tcp(up: OuterBits, down: OuterBits, tau: usize) -> RunResult {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let info = SessionInfo {
+        fingerprint: 0x7717, // nonzero: workers sending 0 adopt it
+        up_bits: up.bits() as u8,
+        down_bits: down.bits() as u8,
+        engine: ENGINE_TOY,
+        live: vec![true; M],
+        config_json: String::from("{}"),
+    };
+    let workers = vec![
+        spawn_worker(addr.clone(), vec![0, 1], up, down),
+        spawn_worker(addr, vec![2, 3], up, down),
+    ];
+    let lanes = accept_workers(&listener, workers.len(), &info).unwrap();
+
+    let l = toy_layout();
+    let engine = ToyEngine::new(&l);
+    let mut sync = outer_sync(up, down);
+    let mut ctl = DriveCtl::fresh(M);
+    let out = drive_lanes(&engine, lanes, Some(&mut sync), &plan(2, tau), &mut ctl)
+        .expect("tcp drive");
+    let final_eval = engine.eval(sync.global_literals().unwrap()).unwrap();
+
+    let mut owned: Vec<OwnedReplica> = workers
+        .into_iter()
+        .flat_map(|h| h.join().expect("worker thread"))
+        .collect();
+    owned.sort_by_key(|o| o.rid);
+    RunResult {
+        step_losses: out.step_losses,
+        loss_curve: out.loss_curve,
+        eval_curve: out.eval_curve,
+        outer_syncs: out.outer_syncs,
+        wire_up: sync.wire_stats().total_up(),
+        wire_down: sync.wire_stats().total_down(),
+        framed: sync.wire_stats().total_framed(),
+        global_bits: sync.global().data().iter().map(|x| x.to_bits()).collect(),
+        final_eval,
+        finals: owned
+            .iter()
+            .map(|o| leaf_bits(&o.rep.state, l.n_leaves()))
+            .collect(),
+    }
+}
+
+fn assert_twin(up: OuterBits, down: OuterBits, tau: usize) {
+    let oracle = run_inproc(up, down, tau);
+    let tcp = run_tcp(up, down, tau);
+    let tag = format!("{up:?}/{down:?} tau={tau}");
+    assert_eq!(oracle.step_losses.len(), 22, "{tag}");
+    assert!(oracle.outer_syncs > 0, "{tag}");
+    // f64/bit equality is exact: same values in the same order, or bust
+    assert_eq!(tcp.step_losses, oracle.step_losses, "{tag}: step losses");
+    assert_eq!(tcp.loss_curve, oracle.loss_curve, "{tag}: loss curve");
+    assert_eq!(tcp.eval_curve, oracle.eval_curve, "{tag}: eval curve");
+    assert_eq!(tcp.outer_syncs, oracle.outer_syncs, "{tag}: sync count");
+    assert_eq!(tcp.wire_up, oracle.wire_up, "{tag}: up-wire bytes");
+    assert_eq!(tcp.wire_down, oracle.wire_down, "{tag}: down-wire bytes");
+    assert_eq!(tcp.framed, oracle.framed, "{tag}: framed bytes");
+    assert_eq!(tcp.global_bits, oracle.global_bits, "{tag}: global arena");
+    assert_eq!(
+        tcp.final_eval.to_bits(),
+        oracle.final_eval.to_bits(),
+        "{tag}: final eval"
+    );
+    assert_eq!(tcp.finals, oracle.finals, "{tag}: final replica payloads");
+}
+
+#[test]
+fn tcp_twin_identity_codecs_barrier() {
+    assert_twin(OuterBits::Fp32, OuterBits::Fp32, 0);
+}
+
+#[test]
+fn tcp_twin_identity_codecs_overlapped() {
+    assert_twin(OuterBits::Fp32, OuterBits::Fp32, 1);
+}
+
+#[test]
+fn tcp_twin_int4_both_wires_barrier() {
+    assert_twin(OuterBits::Int4, OuterBits::Int4, 0);
+}
+
+#[test]
+fn tcp_twin_int4_both_wires_overlapped() {
+    assert_twin(OuterBits::Int4, OuterBits::Int4, 1);
+}
+
+/// A worker link that vanishes (socket and all) after serving `left`
+/// commands — the test double for `kill -9` on a worker process.
+struct DropAfter {
+    inner: TcpWorkerLink,
+    left: usize,
+}
+
+impl WorkerLink for DropAfter {
+    fn recv_cmd(&mut self) -> Option<Cmd> {
+        if self.left == 0 {
+            return None;
+        }
+        self.left -= 1;
+        self.inner.recv_cmd()
+    }
+
+    fn send_report(
+        &mut self,
+        report: anyhow::Result<diloco::transport::msg::WorkerReport>,
+    ) -> anyhow::Result<()> {
+        self.inner.send_report(report)
+    }
+}
+
+#[test]
+fn dead_tcp_worker_becomes_a_journaled_crash_and_survivors_finish() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let info = SessionInfo {
+        fingerprint: 0,
+        up_bits: 32,
+        down_bits: 32,
+        engine: ENGINE_TOY,
+        live: vec![true; M],
+        config_json: String::from("{}"),
+    };
+
+    // Worker A serves the whole run; worker B drops its socket after
+    // three segments without a goodbye.
+    let survivor = spawn_worker(addr.clone(), vec![0, 1], OuterBits::Fp32, OuterBits::Fp32);
+    let casualty = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let claims = vec![2usize, 3];
+            let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+            let session = worker_handshake(&mut stream, &claims, 0, 0, 0).unwrap();
+            let l = toy_layout();
+            let engine = ToyEngine::new(&l);
+            let reps = toy_replicas_for(&l, &claims, SEED).unwrap();
+            let owned: Vec<OwnedReplica> = claims
+                .iter()
+                .zip(reps)
+                .map(|(&rid, rep)| OwnedReplica {
+                    rid,
+                    live: session.live[rid],
+                    rep,
+                    rc: ReplicaComm::default(),
+                })
+                .collect();
+            let wl = TcpWorkerLink::new(stream, &session).unwrap();
+            let mut wl = DropAfter { inner: wl, left: 3 };
+            let (_, _, finish) =
+                worker_session(&engine, l.n_leaves(), None, WorkerComm::default(), owned, &mut wl);
+            finish.unwrap(); // the casualty itself exits cleanly
+        })
+    };
+    let lanes = accept_workers(&listener, 2, &info).unwrap();
+
+    let l = toy_layout();
+    let engine = ToyEngine::new(&l);
+    let mut sync = outer_sync(OuterBits::Fp32, OuterBits::Fp32);
+    let mut ctl = DriveCtl::fresh(M);
+    let out = drive_lanes(&engine, lanes, Some(&mut sync), &plan(2, 0), &mut ctl)
+        .expect("survivors must finish the schedule");
+    assert_eq!(out.step_losses.len(), 22, "full schedule ran");
+
+    // The dropped lane's replicas crash out of the membership...
+    assert_eq!(ctl.live, vec![true, true, false, false]);
+    let crashed: Vec<usize> = ctl
+        .journal
+        .events()
+        .iter()
+        .filter(|e| e.kind == EventKind::Crash)
+        .filter_map(|e| e.replica)
+        .collect();
+    assert_eq!(crashed, vec![2, 3], "both of the dead worker's replicas journal a crash");
+    // ...and the run keeps syncing afterwards (survivors contribute).
+    assert!(out.outer_syncs > 3, "survivors kept the outer loop going");
+
+    let survivors = survivor.join().expect("survivor thread");
+    assert_eq!(survivors.len(), 2, "survivor hands back both replicas");
+    casualty.join().expect("casualty thread");
+}
