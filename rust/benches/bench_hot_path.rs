@@ -215,6 +215,7 @@ fn bench_outer_sync(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
 /// direction are printed and attached to BENCH_hot_path.json (the
 /// codec's whole point is the byte column, not just the time column).
 fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
+    use diloco::transport::frame::{reclaim_wires, WireBuf, WireSlice};
     let pristine = randn_params(layout, 7);
     let n = layout.total();
     println!("\n== {label}: wire bytes per full sync, up (per replica) vs down (per sync) ({n} params) ==");
@@ -279,15 +280,16 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
         );
         let wire_len = codec_for(bits).wire_bytes(n);
         let mut round = 0u64;
-        let mut last: Vec<u8> = Vec::new();
+        let mut last = WireBuf::new();
         b.run_throughput(
             &format!("{label}/broadcast encode {} (EF, full arena)", bits.label()),
             (4 * n + wire_len) as u64,
             n as u64,
             || {
-                last = dw.encode_broadcast(target.data(), None, round).unwrap();
+                dw.encode_broadcast_into(target.data(), None, round, 1, &mut last)
+                    .unwrap();
                 round += 1;
-                last.len()
+                last.payload_len()
             },
         );
         let link = CommLink::new(
@@ -304,7 +306,7 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
             &format!("{label}/broadcast decode {} (snap + literals)", bits.label()),
             (4 * n + wire_len) as u64,
             n as u64,
-            || link.adopt_encoded(&mut wc, None, &last).unwrap().len(),
+            || link.adopt_encoded(&mut wc, None, last.payload()).unwrap().len(),
         );
     }
 
@@ -340,7 +342,7 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
         }
         let mut round = 0u64;
         b.run(&format!("{label}/comm sync end-to-end int4/int4 (M=2)"), || {
-            let payloads: Vec<Vec<u8>> = rep_lits
+            let payloads: Vec<WireSlice> = rep_lits
                 .iter()
                 .enumerate()
                 .map(|(r, lits)| {
@@ -348,19 +350,20 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
                         .unwrap()
                 })
                 .collect();
-            let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+            let frames: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
             sync.sync_encoded(&frames, None).unwrap();
             // worker side of the broadcast: decode into the snapshot
             let bytes = sync.take_broadcast_bytes().expect("lossy down broadcast");
-            link.adopt_encoded(&mut wc, None, &bytes).unwrap();
-            // steady state: spent payloads feed the next round's encodes
-            // (one to the coordinator's broadcast pool, the rest back to
-            // the worker) — the drive loop does exactly this
-            let mut payloads = payloads.into_iter();
-            if let Some(p) = payloads.next() {
+            link.adopt_encoded(&mut wc, None, bytes.as_slice()).unwrap();
+            // steady state: spent wire buffers feed the next round's
+            // encodes (the broadcast frame back to the coordinator's
+            // pool, the report frames back to the worker) — the drive
+            // loop does exactly this
+            drop(frames);
+            for p in reclaim_wires(vec![bytes]) {
                 sync.recycle_wire(p);
             }
-            for p in payloads {
+            for p in reclaim_wires(payloads) {
                 wc.recycle(p);
             }
             round += 1;
@@ -369,21 +372,24 @@ fn bench_comm(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
     }
 }
 
-/// Transport frame codec: header + payload framing throughput at real
-/// sync-payload sizes (the per-replica up-wire bytes a TCP lane ships
-/// every H/P steps, fp32 and int4). Framing should be memcpy-bound —
-/// these rows make sure the length-prefixed header never grows a
-/// per-byte cost. (Case names deliberately avoid the bench-diff
-/// tight-case substrings: framing rides the default regression cap,
-/// not the kernel-tight one.)
+/// Transport frame path: the zero-copy framed write (header stamped
+/// over the `WireBuf`'s reserved prefix, one contiguous write) against
+/// the retained copying baseline (`write_frame_copying`: fresh buffer
+/// plus a payload memcpy per frame), and the recycled-buffer frame
+/// read, at real sync-payload sizes (the per-replica up-wire bytes a
+/// TCP lane ships every H/P steps, fp32 and int4). These rows ride the
+/// CI bench-diff *tight* gate — a staging copy creeping back into the
+/// wire path shows up here first, as a throughput drop toward the
+/// copying row.
 fn bench_transport(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
     use diloco::transport::frame::{
-        decode_frame, encode_frame, FrameHeader, MsgKind, HEADER_LEN,
+        encode_frame, read_frame_into, write_frame_copying, FrameHeader, MsgKind, WireBuf,
+        HEADER_LEN,
     };
+    use std::io::Write;
     let n = layout.total();
     for bits in [OuterBits::Fp32, OuterBits::Int4] {
         let payload_len = codec_for(bits).wire_bytes(n);
-        let payload = vec![0x5Au8; payload_len];
         let h = FrameHeader {
             kind: MsgKind::Report,
             up_bits: bits.bits() as u8,
@@ -393,26 +399,149 @@ fn bench_transport(b: &mut Bencher, label: &str, layout: &Arc<FlatLayout>) {
             frag: Some(1),
         };
         let moved = (HEADER_LEN + payload_len) as u64;
-        let mut out: Vec<u8> = Vec::with_capacity(HEADER_LEN + payload_len);
+        let payload = vec![0x5Au8; payload_len];
+        let mut sink = std::io::sink();
+        // zero-copy leg: the payload already lives framed in a WireBuf;
+        // per frame, stamp the 36-byte header and write one slice
+        let mut buf = WireBuf::new();
+        buf.extend_payload(&payload);
         b.run_throughput(
-            &format!("{label}/transport frame write {} payload", bits.label()),
+            &format!("{label}/transport frame write zero-copy {}", bits.label()),
             moved,
             n as u64,
             || {
-                out.clear();
-                encode_frame(&h, &payload, &mut out).unwrap();
-                out.len()
+                let bytes = buf.frame(&h).unwrap();
+                sink.write_all(bytes).unwrap();
+                bytes.len()
             },
         );
+        // the retired baseline: stage header + payload into a fresh Vec
         b.run_throughput(
-            &format!("{label}/transport frame read {} payload", bits.label()),
+            &format!("{label}/transport frame write copying {}", bits.label()),
             moved,
             n as u64,
             || {
-                let (hdr, body, total) = decode_frame(&out).unwrap();
-                (hdr.sync_index, body.len(), total)
+                write_frame_copying(&mut sink, &h, &payload).unwrap();
+                payload.len()
             },
         );
+        // read leg: parse into a recycled WireBuf (no allocation)
+        let mut framed = Vec::with_capacity(HEADER_LEN + payload_len);
+        encode_frame(&h, &payload, &mut framed).unwrap();
+        let mut rbuf = WireBuf::new();
+        b.run_throughput(
+            &format!("{label}/transport frame read recycled {}", bits.label()),
+            moved,
+            n as u64,
+            || {
+                let mut rd = &framed[..];
+                let hdr = read_frame_into(&mut rd, &mut rbuf).unwrap();
+                (hdr.sync_index, rbuf.payload_len())
+            },
+        );
+    }
+}
+
+/// Loopback sync latency through the real socket stack: one lane
+/// reactor and one `TcpWorkerLink` over 127.0.0.1, measuring a full
+/// round — streamed broadcast down, `Run`, encoded report back up —
+/// with every wire buffer recycled, at real per-sync payload sizes.
+/// The medians feed the blocking bench-diff tight gate: a stray copy
+/// or allocation on the steady-state socket path lands here as
+/// latency.
+fn bench_loopback(b: &mut Bencher, layout: &Arc<FlatLayout>) {
+    use diloco::transport::frame::{reclaim_wires, WireBuf, WireSlice};
+    use diloco::transport::msg::{
+        Broadcast, Cmd, PayloadSpec, SegmentChurn, SyncPayload, WorkerReport,
+    };
+    use diloco::transport::tcp::{
+        accept_workers, connect_with_backoff, worker_handshake, LaneReactor, SessionInfo,
+        TcpWorkerLink, CONNECT_ATTEMPTS, ENGINE_TOY,
+    };
+    use diloco::transport::WorkerLink;
+    use std::net::TcpListener;
+
+    let n = layout.total();
+    for bits in [OuterBits::Fp32, OuterBits::Int4] {
+        let wire_len = codec_for(bits).wire_bytes(n);
+        let listener = TcpListener::bind("127.0.0.1:0").expect("loopback bench bind");
+        let addr = listener.local_addr().expect("loopback bench addr").to_string();
+        let info = SessionInfo {
+            fingerprint: 0xBE7C,
+            up_bits: bits.bits() as u8,
+            down_bits: bits.bits() as u8,
+            engine: ENGINE_TOY,
+            live: vec![true],
+            config_json: String::from("{}"),
+        };
+        let up = vec![0x5Au8; wire_len];
+        let worker = std::thread::spawn(move || {
+            let mut stream =
+                connect_with_backoff(&addr, CONNECT_ATTEMPTS).expect("loopback bench connect");
+            let got = worker_handshake(&mut stream, &[0], 0, 0, 0).expect("loopback handshake");
+            let mut link = TcpWorkerLink::new(stream, &got).expect("loopback bench link");
+            // encode buffers reclaimed from shipped reports, reused
+            let mut bank: Vec<WireBuf> = Vec::new();
+            loop {
+                match link.recv_cmd() {
+                    Some(Cmd::Spares(bufs)) => bank.extend(bufs),
+                    Some(Cmd::Run { broadcast, .. }) => {
+                        drop(broadcast);
+                        let mut buf = bank.pop().unwrap_or_default();
+                        buf.reset();
+                        buf.extend_payload(&up);
+                        link.send_report(Ok(WorkerReport {
+                            reps: vec![(
+                                0,
+                                vec![0.0],
+                                SyncPayload::Encoded(WireSlice::whole(Arc::new(buf))),
+                            )],
+                        }))
+                        .expect("loopback bench report");
+                    }
+                    Some(Cmd::Finish { .. }) | None => break,
+                }
+            }
+        });
+        let lanes = accept_workers(&listener, 1, &info).expect("loopback bench accept");
+        let mut reactor = LaneReactor::new(lanes).expect("loopback bench reactor");
+        let down = vec![0xC3u8; wire_len];
+        let mut round = 0u64;
+        b.run_throughput(
+            &format!("transport/loopback sync latency {} (1 worker)", bits.label()),
+            2 * wire_len as u64,
+            n as u64,
+            || {
+                reactor
+                    .bcast_begin(None, round, down.len() as u64)
+                    .expect("loopback bench bcast");
+                reactor.bcast_chunk(&down).expect("loopback bench chunk");
+                reactor
+                    .send_cmd(&Cmd::Run {
+                        from: round as usize,
+                        to: round as usize + 1,
+                        broadcast: Broadcast::Pending { frag: None },
+                        payload: PayloadSpec::None,
+                        churn: SegmentChurn::default(),
+                    })
+                    .expect("loopback bench run");
+                let reports = reactor.collect_reports().expect("loopback bench collect");
+                let spent: Vec<WireSlice> = reports
+                    .into_iter()
+                    .flat_map(|r| r.reps)
+                    .filter_map(|(_, _, p)| match p {
+                        SyncPayload::Encoded(ws) => Some(ws),
+                        _ => None,
+                    })
+                    .collect();
+                let got = spent.len();
+                reactor.recycle(reclaim_wires(spent));
+                round += 1;
+                got
+            },
+        );
+        reactor.send_finish(&Broadcast::empty());
+        worker.join().expect("loopback bench worker");
     }
 }
 
@@ -853,6 +982,8 @@ fn main() -> anyhow::Result<()> {
         bench_overlap(&mut b, &layout);
         // event journal + boundary checkpoint (crash-tolerance path)
         bench_journal(&mut b, &layout);
+        // socket sync latency over 127.0.0.1 (reactor + worker link)
+        bench_loopback(&mut b, &layout);
     }
 
     // data pipeline throughput

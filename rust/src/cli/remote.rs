@@ -28,15 +28,15 @@ use anyhow::{bail, Context, Result};
 
 use crate::comm::{CommLink, ReplicaComm, WorkerComm};
 use crate::coordinator::{
-    drive_ctl, drive_lanes, parse_replica_set, worker_session, Algo, DriveCtl, DrivePlan,
+    drive_ctl, drive_reactor, parse_replica_set, worker_session, Algo, DriveCtl, DrivePlan,
     EventKind, FaultPlan, Membership, OuterSync, OwnedReplica, RunConfig,
 };
 use crate::runtime::{FlatLayout, HostTensor};
 use crate::train::toy::{toy_init, toy_layout, toy_replicas, toy_replicas_for, ToyEngine};
 use crate::transport::frame::fnv1a64;
 use crate::transport::tcp::{
-    accept_workers, connect_with_backoff, worker_handshake, SessionInfo, TcpWorkerLink,
-    CONNECT_ATTEMPTS, ENGINE_TOY,
+    accept_workers, connect_with_backoff, worker_handshake, LaneReactor, SessionInfo,
+    TcpWorkerLink, CONNECT_ATTEMPTS, ENGINE_TOY,
 };
 use crate::util::json::Json;
 
@@ -224,7 +224,16 @@ pub fn cmd_coordinate(args: &Args) -> Result<()> {
             println!("coordinate: worker {i} owns replicas {rids:?}");
         }
         plan.workers = lanes.len();
-        drive_lanes(&engine, lanes, Some(&mut sync), &plan, &mut ctl)?
+        // One poll loop over every lane — not one reader thread each.
+        let mut reactor = LaneReactor::new(lanes)?;
+        let outcome = drive_reactor(&engine, &mut reactor, Some(&mut sync), &plan, &mut ctl)?;
+        // Socket facts (heartbeats) print on their own line, never in
+        // the transport-invariant `final:` line CI diffs.
+        println!(
+            "transport: control_bytes={}",
+            sync.wire_stats().control_bytes()
+        );
+        outcome
     };
 
     print_journal(&ctl);

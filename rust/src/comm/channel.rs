@@ -39,6 +39,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::runtime::FlatLayout;
+use crate::transport::frame::WireBuf;
 use crate::util::par::{self, Piece};
 use crate::util::rng::splitmix64;
 
@@ -153,28 +154,33 @@ impl Channel {
         frag: Option<usize>,
         sync_index: u64,
         stream: u64,
-    ) -> Vec<u8> {
-        let mut out = Vec::new();
+    ) -> WireBuf {
+        let mut out = WireBuf::new();
         self.encode_raw_into(src, frag, sync_index, stream, &mut out);
         out
     }
 
     /// [`Channel::encode_raw`] into a caller-owned (typically recycled)
-    /// buffer: one exact-size reservation per payload, no per-range
-    /// growth.
+    /// wire buffer: one exact-size reservation per payload, no
+    /// per-range growth. The payload lands after the buffer's reserved
+    /// frame prefix, so a transport can stamp the header in place and
+    /// ship without any assembly copy.
     pub fn encode_raw_into(
         &self,
         src: &[f32],
         frag: Option<usize>,
         sync_index: u64,
         stream: u64,
-        out: &mut Vec<u8>,
+        out: &mut WireBuf,
     ) {
-        out.clear();
-        out.reserve(self.payload_bytes(frag));
-        for r in &self.ranges(frag) {
+        out.reset();
+        let ranges = self.ranges(frag);
+        let payload_bytes = self.payload_bytes(frag);
+        let v = out.vec_for_append();
+        v.reserve(payload_bytes);
+        for r in &ranges {
             let seed = self.seed_for(sync_index, stream, r.start);
-            self.codec.encode(&src[r.clone()], seed, out);
+            self.codec.encode(&src[r.clone()], seed, v);
         }
     }
 
@@ -190,8 +196,8 @@ impl Channel {
         frag: Option<usize>,
         sync_index: u64,
         stream: u64,
-    ) -> Result<Vec<u8>> {
-        let mut out = Vec::new();
+    ) -> Result<WireBuf> {
+        let mut out = WireBuf::new();
         self.encode_ef_into(staging, residual, frag, sync_index, stream, 1, &mut out)?;
         Ok(out)
     }
@@ -214,52 +220,145 @@ impl Channel {
         sync_index: u64,
         stream: u64,
         threads: usize,
-        out: &mut Vec<u8>,
+        out: &mut WireBuf,
     ) -> Result<()> {
         let ranges = self.ranges(frag);
-        out.clear();
-        out.resize(self.payload_bytes(frag), 0);
-        // wire offset of each source range within the payload
-        let mut range_off = Vec::with_capacity(ranges.len());
-        let mut off = 0usize;
-        for r in &ranges {
-            range_off.push(off);
-            off += self.codec.wire_bytes(r.len());
-        }
-        let shards = par::shard_ranges(&ranges, threads, BLOCK);
-        let wires = split_wire(out, &shards, &ranges, &range_off, self.codec.as_ref());
-        let stages = par::split_pieces(staging, &shards);
-        let resids = par::split_pieces(residual, &shards);
-        let items: Vec<_> = shards
-            .iter()
-            .zip(wires)
-            .zip(stages)
-            .zip(resids)
-            .map(|(((pieces, w), s), r)| (pieces, w, s, r))
-            .collect();
+        out.reset();
+        out.resize_payload(self.payload_bytes(frag));
+        let items = shard_items(
+            self,
+            &ranges,
+            threads,
+            out.payload_mut(),
+            staging,
+            residual,
+        );
         let ranges = &ranges;
         par::map_shards(items, |_, (pieces, wires, stages, resids)| -> Result<()> {
-            for (((p, wire), stage), resid) in
-                pieces.iter().zip(wires).zip(stages).zip(resids)
-            {
-                let src = &ranges[p.src];
-                let seed = self.seed_for(sync_index, stream, src.start);
-                let block_off = ((p.range.start - src.start) / BLOCK) as u64;
-                for (s, r) in stage.iter_mut().zip(resid.iter_mut()) {
-                    *s += *r;
-                    // residual temporarily holds x until dq(x) lands
-                    *r = *s;
-                }
-                self.codec.encode_at(stage, seed, block_off, &mut wire[..]);
-                self.codec.decode(&wire[..], &mut stage[..])?;
-                for (r, s) in resid.iter_mut().zip(stage.iter()) {
-                    *r -= *s;
-                }
-            }
+            self.encode_shard(ranges, sync_index, stream, &pieces, wires, stages, resids)?;
             Ok(())
         })
         .into_iter()
         .collect::<Result<()>>()
+    }
+
+    /// [`Channel::encode_ef_into`] with streaming flushes: the payload
+    /// is still produced shard-by-shard over up to `threads` scoped
+    /// threads, but completed shards are handed to `flush` **in payload
+    /// order as they finish** — a transport can push early bytes onto
+    /// the socket while later shards are still encoding. The
+    /// concatenation of the flushed chunks is byte-identical to the
+    /// one-shot payload (`out` holds the same full payload on return),
+    /// and the EF arenas end bit-identical at any thread count — the
+    /// per-shard arithmetic is the exact same helper.
+    ///
+    /// On `Err` (a failed flush is a dead transport) the EF arenas are
+    /// partially advanced and must be treated as poisoned — callers
+    /// abandon the run, never retry the sync.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_ef_chunked(
+        &self,
+        staging: &mut [f32],
+        residual: &mut [f32],
+        frag: Option<usize>,
+        sync_index: u64,
+        stream: u64,
+        threads: usize,
+        out: &mut WireBuf,
+        flush: &mut dyn FnMut(&[u8]) -> Result<()>,
+    ) -> Result<()> {
+        let ranges = self.ranges(frag);
+        out.reset();
+        out.resize_payload(self.payload_bytes(frag));
+        let items = shard_items(
+            self,
+            &ranges,
+            threads,
+            out.payload_mut(),
+            staging,
+            residual,
+        );
+        let n = items.len();
+        if n <= 1 {
+            // degenerate sharding runs inline (mirrors par::map_shards)
+            for (pieces, wires, stages, resids) in items {
+                let views =
+                    self.encode_shard(&ranges, sync_index, stream, &pieces, wires, stages, resids)?;
+                for v in views {
+                    flush(v)?;
+                }
+            }
+            return Ok(());
+        }
+        let ranges = &ranges;
+        std::thread::scope(|scope| -> Result<()> {
+            let (tx, rx) = std::sync::mpsc::channel();
+            for (k, (pieces, wires, stages, resids)) in items.into_iter().enumerate() {
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    let views =
+                        self.encode_shard(ranges, sync_index, stream, &pieces, wires, stages, resids);
+                    // a send failure means the flush loop bailed early;
+                    // the error that caused it is already on its way up
+                    let _ = tx.send((k, views));
+                });
+            }
+            drop(tx);
+            // flush completed shards in payload order: shard k+1 may
+            // finish first, but its bytes wait until k has gone out
+            let mut pending: Vec<Option<Vec<&[u8]>>> = (0..n).map(|_| None).collect();
+            let mut next = 0usize;
+            for _ in 0..n {
+                let (k, views) = rx.recv().expect("encode shard thread vanished");
+                pending[k] = Some(views?);
+                while next < n {
+                    let Some(views) = pending[next].take() else {
+                        break;
+                    };
+                    for v in views {
+                        flush(v)?;
+                    }
+                    next += 1;
+                }
+            }
+            Ok(())
+        })
+    }
+
+    /// One shard's error-feedback encode — the single implementation
+    /// both the fork-join and the streaming paths run, so their bytes
+    /// cannot drift. Returns the shard's wire views downgraded to
+    /// shared slices (the streaming path flushes them; the fork-join
+    /// path drops them).
+    #[allow(clippy::too_many_arguments)]
+    fn encode_shard<'a>(
+        &self,
+        ranges: &[Range<usize>],
+        sync_index: u64,
+        stream: u64,
+        pieces: &[Piece],
+        wires: Vec<&'a mut [u8]>,
+        stages: Vec<&mut [f32]>,
+        resids: Vec<&mut [f32]>,
+    ) -> Result<Vec<&'a [u8]>> {
+        let mut views: Vec<&'a [u8]> = Vec::with_capacity(pieces.len());
+        for (((p, wire), stage), resid) in pieces.iter().zip(wires).zip(stages).zip(resids) {
+            let src = &ranges[p.src];
+            let seed = self.seed_for(sync_index, stream, src.start);
+            let block_off = ((p.range.start - src.start) / BLOCK) as u64;
+            for (s, r) in stage.iter_mut().zip(resid.iter_mut()) {
+                *s += *r;
+                // residual temporarily holds x until dq(x) lands
+                *r = *s;
+            }
+            self.codec.encode_at(stage, seed, block_off, &mut wire[..]);
+            self.codec.decode(&wire[..], &mut stage[..])?;
+            for (r, s) in resid.iter_mut().zip(stage.iter()) {
+                *r -= *s;
+            }
+            views.push(wire);
+        }
+        Ok(views)
     }
 
     /// Decode one payload of this leg into `dst` over the due ranges
@@ -282,6 +381,44 @@ impl Channel {
         }
         Ok(())
     }
+}
+
+/// The per-shard work items of one EF encode: deterministic
+/// block-aligned pieces plus matching disjoint views of the payload
+/// and both arenas (shared by the fork-join and streaming paths).
+type ShardItem<'a> = (
+    Vec<Piece>,
+    Vec<&'a mut [u8]>,
+    Vec<&'a mut [f32]>,
+    Vec<&'a mut [f32]>,
+);
+
+fn shard_items<'a>(
+    chan: &Channel,
+    ranges: &[Range<usize>],
+    threads: usize,
+    payload: &'a mut [u8],
+    staging: &'a mut [f32],
+    residual: &'a mut [f32],
+) -> Vec<ShardItem<'a>> {
+    // wire offset of each source range within the payload
+    let mut range_off = Vec::with_capacity(ranges.len());
+    let mut off = 0usize;
+    for r in ranges {
+        range_off.push(off);
+        off += chan.codec.wire_bytes(r.len());
+    }
+    let shards = par::shard_ranges(ranges, threads, BLOCK);
+    let wires = split_wire(payload, &shards, ranges, &range_off, chan.codec.as_ref());
+    let stages = par::split_pieces(staging, &shards);
+    let resids = par::split_pieces(residual, &shards);
+    shards
+        .into_iter()
+        .zip(wires)
+        .zip(stages)
+        .zip(resids)
+        .map(|(((pieces, w), s), r)| (pieces, w, s, r))
+        .collect()
 }
 
 /// Split a payload buffer into per-shard, per-piece wire views
@@ -399,14 +536,14 @@ impl DownWire {
         global: &[f32],
         frag: Option<usize>,
         sync_index: u64,
-    ) -> Result<Vec<u8>> {
-        let mut out = Vec::new();
+    ) -> Result<WireBuf> {
+        let mut out = WireBuf::new();
         self.encode_broadcast_into(global, frag, sync_index, 1, &mut out)?;
         Ok(out)
     }
 
     /// [`DownWire::encode_broadcast`] into a caller-owned (typically
-    /// recycled) buffer, with the EF encode sharded over up to
+    /// recycled) wire buffer, with the EF encode sharded over up to
     /// `threads` scoped threads ([`Channel::encode_ef_into`]) —
     /// byte-identical at any thread count.
     pub fn encode_broadcast_into(
@@ -415,14 +552,9 @@ impl DownWire {
         frag: Option<usize>,
         sync_index: u64,
         threads: usize,
-        out: &mut Vec<u8>,
+        out: &mut WireBuf,
     ) -> Result<()> {
-        let ranges = self.chan.ranges(frag);
-        for r in &ranges {
-            for i in r.clone() {
-                self.staging[i] = global[i] - self.view[i];
-            }
-        }
+        self.stage_delta(global, frag);
         self.chan.encode_ef_into(
             &mut self.staging,
             &mut self.residual,
@@ -432,12 +564,59 @@ impl DownWire {
             threads,
             out,
         )?;
-        for r in &ranges {
+        self.advance_view(frag);
+        Ok(())
+    }
+
+    /// [`DownWire::encode_broadcast_into`] with streaming flushes
+    /// ([`Channel::encode_ef_chunked`]): completed encode shards are
+    /// handed to `flush` in payload order while later shards are still
+    /// encoding, so a transport overlaps broadcast encode with socket
+    /// writes. Flushed bytes concatenate to exactly the one-shot
+    /// payload; on `Err` the wire state is poisoned (the sync was
+    /// half-shipped) and the run must be abandoned.
+    pub fn encode_broadcast_chunked(
+        &mut self,
+        global: &[f32],
+        frag: Option<usize>,
+        sync_index: u64,
+        threads: usize,
+        out: &mut WireBuf,
+        flush: &mut dyn FnMut(&[u8]) -> Result<()>,
+    ) -> Result<()> {
+        self.stage_delta(global, frag);
+        self.chan.encode_ef_chunked(
+            &mut self.staging,
+            &mut self.residual,
+            frag,
+            sync_index,
+            0,
+            threads,
+            out,
+            flush,
+        )?;
+        self.advance_view(frag);
+        Ok(())
+    }
+
+    /// Stage `global - view` over the due ranges (the broadcast's raw
+    /// delta, before error compensation).
+    fn stage_delta(&mut self, global: &[f32], frag: Option<usize>) {
+        for r in &self.chan.ranges(frag) {
+            for i in r.clone() {
+                self.staging[i] = global[i] - self.view[i];
+            }
+        }
+    }
+
+    /// Advance the view by `dq(x)` — what every worker will decode —
+    /// which the EF encode left in staging.
+    fn advance_view(&mut self, frag: Option<usize>) {
+        for r in &self.chan.ranges(frag) {
             for i in r.clone() {
                 self.view[i] += self.staging[i];
             }
         }
-        Ok(())
     }
 }
 
@@ -484,16 +663,16 @@ mod tests {
         let total = c.layout().total();
         let src: Vec<f32> = (0..total).map(|i| i as f32 * 0.25 - 1.5).collect();
         let wire = c.encode_raw(&src, Some(1), 3, 0);
-        assert_eq!(wire.len(), c.payload_bytes(Some(1)));
+        assert_eq!(wire.payload_len(), c.payload_bytes(Some(1)));
         let mut dst = vec![0.0f32; total];
-        c.decode(&wire, Some(1), &mut dst).unwrap();
+        c.decode(wire.payload(), Some(1), &mut dst).unwrap();
         for r in c.ranges(Some(1)) {
             for i in r {
                 assert_eq!(dst[i].to_bits(), src[i].to_bits());
             }
         }
         // short payloads are rejected
-        assert!(c.decode(&wire[1..], Some(1), &mut dst).is_err());
+        assert!(c.decode(&wire.payload()[1..], Some(1), &mut dst).is_err());
     }
 
     #[test]
@@ -505,7 +684,7 @@ mod tests {
         let mut residual = vec![0.0f32; total];
         let wire = c.encode_ef(&mut staging, &mut residual, None, 0, 0).unwrap();
         let mut dq = vec![0.0f32; total];
-        c.decode(&wire, None, &mut dq).unwrap();
+        c.decode(wire.payload(), None, &mut dq).unwrap();
         for i in 0..total {
             assert_eq!(staging[i].to_bits(), dq[i].to_bits(), "staging must hold dq");
             assert!(
@@ -524,18 +703,19 @@ mod tests {
         let resid0: Vec<f32> = (0..total).map(|i| (i as f32 * 0.001) - 0.9).collect();
         for bits in OuterBits::ALL {
             let c = Channel::new(layout.clone(), codec_for(bits), 2, 11, Direction::Up);
-            let mut base_wire = Vec::new();
+            let mut base_wire = WireBuf::new();
             let mut base_stage = delta.clone();
             let mut base_resid = resid0.clone();
             c.encode_ef_into(&mut base_stage, &mut base_resid, Some(1), 4, 2, 1, &mut base_wire)
                 .unwrap();
             for threads in [2, 3, 8, 64] {
-                let mut wire = vec![0xAAu8; 5]; // dirty recycled buffer
+                // dirty recycled buffer: reuse must rewrite every byte
+                let mut wire = WireBuf::from_payload(&[0xAAu8; 5]);
                 let mut stage = delta.clone();
                 let mut resid = resid0.clone();
                 c.encode_ef_into(&mut stage, &mut resid, Some(1), 4, 2, threads, &mut wire)
                     .unwrap();
-                assert_eq!(wire, base_wire, "{bits:?} threads={threads}");
+                assert_eq!(wire.payload(), base_wire.payload(), "{bits:?} threads={threads}");
                 for i in 0..total {
                     assert_eq!(
                         stage[i].to_bits(),
@@ -562,7 +742,7 @@ mod tests {
         );
         let global: Vec<f32> = (0..total).map(|i| (i as f32 - 4.0) * 0.3).collect();
         let bytes = dw.encode_broadcast(&global, None, 0).unwrap();
-        assert_eq!(bytes.len(), dw.chan().payload_bytes(None));
+        assert_eq!(bytes.payload_len(), dw.chan().payload_bytes(None));
         let maxabs = global.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
         let step = maxabs / 127.0;
         for (v, g) in dw.view().iter().zip(&global) {
@@ -571,5 +751,92 @@ mod tests {
         // coordinator-side footprint: exactly 3 full-size f32 arenas
         // (view + residual + staging), pinned so growth is deliberate
         assert_eq!(dw.arena_bytes(), 3 * total as u64 * 4);
+    }
+
+    #[test]
+    fn chunked_broadcast_streams_the_exact_one_shot_bytes() {
+        // multi-block leaves so the shard cutter actually cuts
+        let layout = Arc::new(FlatLayout::new(vec![vec![700], vec![300, 2], vec![513]]));
+        let total = layout.total();
+        let init: Vec<f32> = (0..total).map(|i| (i as f32 * 0.01).cos()).collect();
+        for bits in [OuterBits::Fp32, OuterBits::Int4] {
+            for threads in [1, 3, 8] {
+                let mk = || {
+                    DownWire::new(
+                        Channel::new(layout.clone(), codec_for(bits), 2, 13, Direction::Down),
+                        &init,
+                    )
+                };
+                let mut oracle = mk();
+                let mut chunked = mk();
+                // two syncs, so the second round exercises carried EF state
+                for round in 0..2u64 {
+                    let global: Vec<f32> = (0..total)
+                        .map(|i| init[i] + ((i as u64 + round) as f32 * 0.03).sin())
+                        .collect();
+                    let mut one_shot = WireBuf::new();
+                    oracle
+                        .encode_broadcast_into(&global, Some(1), round, 1, &mut one_shot)
+                        .unwrap();
+                    let mut streamed = Vec::new();
+                    let mut out = WireBuf::new();
+                    let mut chunks = 0usize;
+                    chunked
+                        .encode_broadcast_chunked(
+                            &global,
+                            Some(1),
+                            round,
+                            threads,
+                            &mut out,
+                            &mut |c| {
+                                chunks += 1;
+                                streamed.extend_from_slice(c);
+                                Ok(())
+                            },
+                        )
+                        .unwrap();
+                    assert!(chunks >= 1, "{bits:?} t={threads}");
+                    // flushed chunks concatenate to the one-shot frame,
+                    // and the retained buffer holds the same payload
+                    assert_eq!(streamed, one_shot.payload(), "{bits:?} t={threads} r={round}");
+                    assert_eq!(out.payload(), one_shot.payload());
+                    // EF state advanced identically on both wires
+                    for i in 0..total {
+                        assert_eq!(
+                            chunked.view()[i].to_bits(),
+                            oracle.view()[i].to_bits(),
+                            "{bits:?} t={threads} view[{i}]"
+                        );
+                        assert_eq!(
+                            chunked.residual()[i].to_bits(),
+                            oracle.residual()[i].to_bits(),
+                            "{bits:?} t={threads} residual[{i}]"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_flush_failure_propagates() {
+        let total = layout().total();
+        let init = vec![0.0f32; total];
+        let mut dw = DownWire::new(
+            Channel::new(layout(), codec_for(OuterBits::Int8), 1, 7, Direction::Down),
+            &init,
+        );
+        let global: Vec<f32> = (0..total).map(|i| i as f32).collect();
+        let err = dw
+            .encode_broadcast_chunked(
+                &global,
+                None,
+                0,
+                4,
+                &mut WireBuf::new(),
+                &mut |_| anyhow::bail!("socket died"),
+            )
+            .expect_err("flush failure must surface");
+        assert!(format!("{err:#}").contains("socket died"));
     }
 }

@@ -50,6 +50,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::runtime::HostTensor;
+use crate::transport::frame::{WireBuf, WireSlice};
 
 use super::channel::Channel;
 
@@ -65,8 +66,10 @@ pub struct WorkerComm {
     scratch: Vec<f32>,
     /// Recycled up-wire payload buffers: spent payloads the driver
     /// routes back after the reduce, reused by this worker's next
-    /// encodes so steady-state syncs allocate no fresh wire `Vec`s.
-    spares: Vec<Vec<u8>>,
+    /// encodes so steady-state syncs allocate no fresh wire buffers.
+    /// Each carries the transport's reserved frame prefix, so encoding
+    /// into one produces a ship-ready frame with no assembly copy.
+    spares: Vec<WireBuf>,
 }
 
 impl WorkerComm {
@@ -79,15 +82,15 @@ impl WorkerComm {
     /// Return a spent wire payload buffer for reuse by this worker's
     /// next encode. Capacity is retained; every byte is rewritten on
     /// reuse.
-    pub fn recycle(&mut self, mut buf: Vec<u8>) {
+    pub fn recycle(&mut self, mut buf: WireBuf) {
         if self.spares.len() < 16 {
-            buf.clear();
+            buf.reset();
             self.spares.push(buf);
         }
     }
 
-    /// Pop a recycled payload buffer (or a fresh empty one).
-    fn take_buf(&mut self) -> Vec<u8> {
+    /// Pop a recycled payload buffer (or a fresh — audited — one).
+    fn take_buf(&mut self) -> WireBuf {
         self.spares.pop().unwrap_or_default()
     }
 
@@ -346,7 +349,10 @@ impl CommLink {
     /// Encode replica `rep`'s contribution to sync `sync_index` over
     /// the due ranges of `frag`. `state` holds the replica's literal
     /// handles in manifest leaf order (the first `n_leaves` are the
-    /// parameters). Returns exactly [`CommLink::payload_bytes`] bytes.
+    /// parameters). Returns exactly [`CommLink::payload_bytes`] bytes,
+    /// as a shareable view of a recycled frame-prefixed buffer — a
+    /// transport ships it with zero assembly copies, and the reduce
+    /// reclaims the buffer for the next encode.
     pub fn encode_replica(
         &self,
         rep: usize,
@@ -355,7 +361,7 @@ impl CommLink {
         rc: &mut ReplicaComm,
         frag: Option<usize>,
         sync_index: u64,
-    ) -> Result<Vec<u8>> {
+    ) -> Result<WireSlice> {
         let layout = self.up.layout();
         let total = layout.total();
         if state.len() < layout.n_leaves() {
@@ -380,7 +386,7 @@ impl CommLink {
             let mut out = wc.take_buf();
             self.up
                 .encode_raw_into(&wc.scratch, frag, sync_index, rep as u64, &mut out);
-            return Ok(out);
+            return Ok(WireSlice::whole(Arc::new(out)));
         }
         if wc.snap.len() != total {
             bail!("comm encode: lossy up-wire without init_snapshot (replica {rep})");
@@ -407,7 +413,7 @@ impl CommLink {
             1,
             &mut out,
         )?;
-        Ok(out)
+        Ok(WireSlice::whole(Arc::new(out)))
     }
 }
 
@@ -458,6 +464,7 @@ mod tests {
         assert_eq!(bytes.len(), lk.payload_bytes(None));
         assert_eq!(bytes.len(), l.total() * 4);
         let got: Vec<f32> = bytes
+            .as_slice()
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
@@ -522,7 +529,7 @@ mod tests {
         let global: Vec<f32> = vec![2.0; l.total()];
         let mut dw = crate::comm::channel::DownWire::new(lk.down().clone(), &init);
         let bytes = dw.encode_broadcast(&global, None, 0).unwrap();
-        let adopt = lk.adopt_encoded(&mut wc, None, &bytes).unwrap();
+        let adopt = lk.adopt_encoded(&mut wc, None, bytes.payload()).unwrap();
         assert_eq!(adopt.len(), l.n_leaves());
         // worker snap must land exactly on the coordinator's view
         for (s, v) in wc.snap().iter().zip(dw.view()) {
@@ -538,8 +545,8 @@ mod tests {
         }
         // rejects decode before init / wrong sizes
         let mut cold = WorkerComm::default();
-        assert!(lk.adopt_encoded(&mut cold, None, &bytes).is_err());
-        assert!(lk.adopt_encoded(&mut wc, None, &bytes[1..]).is_err());
+        assert!(lk.adopt_encoded(&mut cold, None, bytes.payload()).is_err());
+        assert!(lk.adopt_encoded(&mut wc, None, &bytes.payload()[1..]).is_err());
     }
 
     #[test]
@@ -586,7 +593,7 @@ mod tests {
             // Recycle a dirty, differently-sized buffer into the pool
             // and encode through it: every byte must still be written.
             let arena_before = wc.arena_bytes();
-            wc.recycle(vec![0xAAu8; a.len() + 37]);
+            wc.recycle(WireBuf::from_payload(&vec![0xAAu8; a.len() + 37]));
             assert_eq!(
                 wc.arena_bytes(),
                 arena_before,
@@ -597,8 +604,11 @@ mod tests {
                 .unwrap();
             assert_eq!(a, b, "pooled buffer changed the {up:?} wire");
             assert_eq!(rc.residual(), rc2.residual());
-            // Returning the payload refills the pool for the next sync.
-            wc.recycle(b);
+            // Returning the spent payload refills the pool for the
+            // next sync (the slice is the buffer's only holder here).
+            for spent in crate::transport::frame::reclaim_wires(vec![b]) {
+                wc.recycle(spent);
+            }
             assert_eq!(wc.spares.len(), 1);
         }
     }

@@ -65,6 +65,14 @@ impl SyncWireRecord {
 #[derive(Debug, Clone, Default)]
 pub struct WireStats {
     records: Vec<SyncWireRecord>,
+    /// Transport control traffic (heartbeat frames, handshake frames)
+    /// actually moved on sockets. Deliberately **not** part of
+    /// [`WireStats::total_framed`]: sync totals are schedule-derived
+    /// and transport-invariant (the CI oracle diff depends on that),
+    /// while control bytes are a socket fact that varies with wall
+    /// clock. Reported on its own line, and not checkpointed — a
+    /// resumed run starts a fresh socket session.
+    control_bytes: u64,
 }
 
 impl WireStats {
@@ -80,7 +88,22 @@ impl WireStats {
                 r
             })
             .collect();
-        WireStats { records }
+        WireStats {
+            records,
+            control_bytes: 0,
+        }
+    }
+
+    /// Fold in transport control traffic (heartbeats, handshakes)
+    /// measured by a socket transport.
+    pub fn add_control_bytes(&mut self, bytes: u64) {
+        self.control_bytes += bytes;
+    }
+
+    /// Socket control traffic accumulated this session (0 for
+    /// in-process runs).
+    pub fn control_bytes(&self) -> u64 {
+        self.control_bytes
     }
 
     pub fn record(
@@ -171,5 +194,22 @@ mod tests {
         assert_eq!(w.total_framed_up(), w.total_up() + 8 * FRAME_OVERHEAD);
         assert_eq!(w.total_framed_down(), w.total_down() + 2 * FRAME_OVERHEAD);
         assert_eq!(w.total_framed(), w.total() + 10 * FRAME_OVERHEAD);
+    }
+
+    #[test]
+    fn control_bytes_stay_out_of_framed_totals() {
+        // heartbeat/handshake traffic is a socket fact; the framed
+        // totals must stay schedule-derived so the multi-process run's
+        // `final:` line diffs clean against the in-process oracle
+        let mut w = WireStats::default();
+        w.record(None, 2, 100, 50);
+        let framed = w.total_framed();
+        w.add_control_bytes(36 * 7);
+        w.add_control_bytes(36);
+        assert_eq!(w.control_bytes(), 36 * 8);
+        assert_eq!(w.total_framed(), framed);
+        // and a checkpoint restore starts the session counter fresh
+        let restored = WireStats::from_records(w.records().to_vec());
+        assert_eq!(restored.control_bytes(), 0);
     }
 }

@@ -19,7 +19,7 @@ pub use journal::{EventKind, Journal, JournalEvent};
 pub use membership::{parse_replica_set, FaultEvent, FaultKind, FaultPlan, Membership};
 pub use outer_opt::{outer_gradient, OuterOpt};
 pub use pool::{
-    drive, drive_ctl, drive_lanes, worker_session, DriveCtl, DriveOutcome, DrivePlan, InnerEngine,
-    OwnedReplica, ReplicaState,
+    drive, drive_ctl, drive_lanes, drive_reactor, worker_session, DriveCtl, DriveOutcome,
+    DrivePlan, InnerEngine, OwnedReplica, ReplicaState,
 };
 pub use sync::{OuterSync, SyncState};

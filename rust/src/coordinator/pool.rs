@@ -117,10 +117,12 @@ use crate::coordinator::journal::{EventKind, Journal};
 use crate::coordinator::membership::{FaultEvent, FaultKind};
 use crate::coordinator::sync::OuterSync;
 use crate::data::synthetic::TokenStream;
+use crate::transport::frame::{reclaim_wires, WireBuf};
 use crate::transport::msg::{
     Adopt, Broadcast, Cmd, EncodeSpec, PayloadSpec, SegmentChurn, SegmentData, SyncPayload,
     WorkerReport,
 };
+use crate::transport::tcp::LaneReactor;
 use crate::transport::{inproc, Lane, WorkerLink};
 
 /// One replica as the pool owns it: params ++ m ++ v literal handles
@@ -241,8 +243,15 @@ fn broadcast_adopt(
             let l = link.ok_or_else(|| {
                 anyhow!("drive: encoded broadcast without a comm link")
             })?;
-            l.adopt_encoded(wc, *frag, bytes)
+            l.adopt_encoded(wc, *frag, bytes.as_slice())
         }
+        // a Pending marker is resolved to Encoded by the transport's
+        // worker link (the stashed Bcast frame); seeing one here means
+        // a streamed broadcast leaked past a non-streaming path
+        Broadcast::Pending { frag } => Err(anyhow!(
+            "drive: unresolved streamed broadcast (fragment {frag:?}) — \
+             the transport never delivered its Bcast frame"
+        )),
     }
 }
 
@@ -670,11 +679,37 @@ trait SegmentExec {
     /// per-replica per-step losses + boundary sync payloads.
     fn collect(&mut self, from: usize, to: usize) -> Result<SegmentData>;
 
-    /// Return spent wire payload buffers from a completed reduce to
-    /// the workers' encode pools. Purely an allocation-reuse channel —
+    /// Return spent wire buffers from a completed reduce to the
+    /// workers' encode pools. Purely an allocation-reuse channel —
     /// buffers carry no data (every byte is rewritten on reuse), so
     /// dropping them is always correct; the default does exactly that.
-    fn recycle_wires(&mut self, _bufs: Vec<Vec<u8>>) {}
+    fn recycle_wires(&mut self, _bufs: Vec<WireBuf>) {}
+
+    /// Whether this executor can stream a lossy broadcast onto its
+    /// transport while it encodes: the payload goes out as a dedicated
+    /// `Bcast` frame, shard by shard as the encode finishes each one,
+    /// and the next `Run` carries only a [`Broadcast::Pending`] marker.
+    /// Default: no — the broadcast rides whole inside the `Run`.
+    fn stream_down(&self) -> bool {
+        false
+    }
+
+    /// Open the streamed broadcast frame (exactly `payload_len` bytes
+    /// to follow) on every live lane. Only called when
+    /// [`SegmentExec::stream_down`] returned true for this merge.
+    fn bcast_begin(
+        &mut self,
+        _frag: Option<usize>,
+        _sync_index: u64,
+        _payload_len: u64,
+    ) -> Result<()> {
+        bail!("drive: this executor does not stream broadcasts")
+    }
+
+    /// Append the next encoded chunk to the open broadcast frame.
+    fn bcast_chunk(&mut self, _chunk: &[u8]) -> Result<()> {
+        bail!("drive: this executor does not stream broadcasts")
+    }
 
     /// Replicas lost to transport-level lane deaths since the last
     /// call (a TCP worker hung up or timed out mid-run). The
@@ -736,16 +771,25 @@ fn due_fragment(t1: usize, plan: &DrivePlan) -> Option<usize> {
 /// literal handles otherwise. With overlap this runs τ steps after
 /// the send, dispatched *under* the workers' segment compute.
 ///
-/// Also returns the spent wire payload buffers (empty for literal
-/// merges): one is kept on the bus for its next broadcast encode, the
-/// rest go back to the workers so steady-state syncs stop allocating.
-fn reduce_and_broadcast(
+/// Also returns the spent wire buffers (empty for literal merges):
+/// one is kept on the bus for its next broadcast encode, the rest go
+/// back to the workers so steady-state syncs stop allocating.
+///
+/// When the executor streams ([`SegmentExec::stream_down`]) and both
+/// wires are lossy, the broadcast payload is flushed onto the lanes
+/// shard by shard *while it encodes* — overlapping the encode with the
+/// socket write inside the overlap window — and the returned broadcast
+/// is a [`Broadcast::Pending`] marker the workers resolve against the
+/// `Bcast` frame they already received. On-wire payload bytes are
+/// pinned identical to the one-shot frame.
+fn reduce_and_broadcast<X: SegmentExec>(
+    exec: &mut X,
     bus: &mut OuterSync,
     infl: InFlight,
     wire_codec: bool,
     wire_down: bool,
     out: &mut DriveOutcome,
-) -> Result<(Broadcast, Vec<Vec<u8>>)> {
+) -> Result<(Broadcast, Vec<WireBuf>)> {
     let InFlight {
         frag,
         payloads,
@@ -755,23 +799,45 @@ fn reduce_and_broadcast(
     if contributors.is_empty() {
         bail!("drive: outer sync with zero contributors");
     }
-    let mut spent: Vec<Vec<u8>> = Vec::new();
+    let mut spent: Vec<WireBuf> = Vec::new();
+    let mut streamed = false;
     if wire_codec {
-        let frames: Vec<&[u8]> = contributors
-            .iter()
-            .map(|&r| match &payloads[r] {
-                SyncPayload::Encoded(bytes) => Ok(&bytes[..]),
-                _ => Err(anyhow!("drive: wire-codec merge without an encoded payload")),
-            })
-            .collect::<Result<_>>()?;
-        bus.sync_encoded(&frames, frag)?;
+        {
+            let frames: Vec<&[u8]> = contributors
+                .iter()
+                .map(|&r| match &payloads[r] {
+                    SyncPayload::Encoded(bytes) => Ok(bytes.as_slice()),
+                    _ => Err(anyhow!("drive: wire-codec merge without an encoded payload")),
+                })
+                .collect::<Result<_>>()?;
+            if wire_down && exec.stream_down() {
+                let payload_len = bus.down_payload_bytes(frag).ok_or_else(|| {
+                    anyhow!("drive: lossy down-wire without a payload size")
+                })?;
+                let sync_index = bus.wire_stats().syncs();
+                exec.bcast_begin(frag, sync_index, payload_len)?;
+                bus.sync_encoded_streamed(&frames, frag, &mut |chunk| {
+                    exec.bcast_chunk(chunk)
+                })?;
+                streamed = true;
+            } else {
+                bus.sync_encoded(&frames, frag)?;
+            }
+        }
         // The reduce is done with the frames; their allocations are
-        // still warm. One refills the bus's broadcast pool, the rest
-        // ride back to the worker pool with the next dispatch.
-        spent.extend(payloads.into_iter().filter_map(|p| match p {
-            SyncPayload::Encoded(bytes) => Some(bytes),
-            _ => None,
-        }));
+        // still warm. Views of one shared receive buffer collapse to
+        // that single buffer here. One refills the bus's broadcast
+        // pool, the rest ride back to the worker pool with the next
+        // dispatch.
+        spent = reclaim_wires(
+            payloads
+                .into_iter()
+                .filter_map(|p| match p {
+                    SyncPayload::Encoded(bytes) => Some(bytes),
+                    _ => None,
+                })
+                .collect(),
+        );
         if let Some(buf) = spent.pop() {
             bus.recycle_wire(buf);
         }
@@ -789,8 +855,11 @@ fn reduce_and_broadcast(
     // Broadcast = the merge boundary's payload: the deduplicated
     // freshly-uploaded literal per synced leaf (identity down-wire: N
     // uploads, never M×N), or the DownWire's single encoded fragment
-    // (lossy down-wire: one allocation, decoded once per worker).
-    let broadcast = if wire_down {
+    // (lossy down-wire: one buffer, decoded once per worker) — already
+    // on the wire when the executor streamed it.
+    let broadcast = if streamed {
+        Broadcast::Pending { frag }
+    } else if wire_down {
         Broadcast::Encoded {
             frag,
             bytes: bus.take_broadcast_bytes().ok_or_else(|| {
@@ -1019,7 +1088,8 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             let bus = sync
                 .as_deref_mut()
                 .expect("a sync can only be in flight with an OuterSync");
-            let (b, spent) = reduce_and_broadcast(bus, infl, wire_codec, wire_down, &mut out)?;
+            let (b, spent) =
+                reduce_and_broadcast(exec, bus, infl, wire_codec, wire_down, &mut out)?;
             pending = b;
             exec.recycle_wires(spent);
             ctl.journal.append(
@@ -1141,7 +1211,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
                 let infl = in_flight.take().expect("stashed above");
                 let bus = sync.as_deref_mut().expect("send implies sync");
                 let (b, spent) =
-                    reduce_and_broadcast(bus, infl, wire_codec, wire_down, &mut out)?;
+                    reduce_and_broadcast(exec, bus, infl, wire_codec, wire_down, &mut out)?;
                 pending = b;
                 exec.recycle_wires(spent);
                 ctl.journal.append(
@@ -1215,6 +1285,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             sends += 1;
             let bus = sync.as_deref_mut().expect("flush implies sync");
             let (b, spent) = reduce_and_broadcast(
+                exec,
                 bus,
                 InFlight {
                     frag: None,
@@ -1423,7 +1494,7 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
             .ok_or_else(|| anyhow!("drive: collect without a dispatched segment"))
     }
 
-    fn recycle_wires(&mut self, bufs: Vec<Vec<u8>>) {
+    fn recycle_wires(&mut self, bufs: Vec<WireBuf>) {
         for b in bufs {
             self.wc.recycle(b);
         }
@@ -1749,12 +1820,12 @@ impl<L: Lane> SegmentExec for LaneExec<L> {
     /// Send failures are ignored: spares are droppable by design (and
     /// the TCP lane drops them unconditionally — shipping empty
     /// buffers across a socket would cost more than it saves).
-    fn recycle_wires(&mut self, bufs: Vec<Vec<u8>>) {
+    fn recycle_wires(&mut self, bufs: Vec<WireBuf>) {
         let n = self.slots.iter().filter(|s| s.alive).count();
         if n == 0 {
             return;
         }
-        let mut per_lane: Vec<Vec<Vec<u8>>> = (0..n).map(|_| Vec::new()).collect();
+        let mut per_lane: Vec<Vec<WireBuf>> = (0..n).map(|_| Vec::new()).collect();
         for (i, b) in bufs.into_iter().enumerate() {
             per_lane[i % n].push(b);
         }
@@ -1789,6 +1860,29 @@ pub fn drive_lanes<E: InnerEngine, L: Lane>(
     plan: &DrivePlan,
     ctl: &mut DriveCtl,
 ) -> Result<DriveOutcome> {
+    let rids: Vec<&[usize]> = lanes.iter().map(|(_, r)| &r[..]).collect();
+    let m = validate_remote_plan(&rids, sync.is_some(), plan, ctl)?;
+    let mut exec = LaneExec::new(lanes, m, /* fail_on_death */ false);
+    let res = coordinate(engine, &mut exec, sync.as_deref_mut(), plan, m, ctl);
+    let pending = match &res {
+        Ok((_, p)) => p.clone(),
+        Err(_) => Broadcast::empty(),
+    };
+    exec.finish(&pending);
+    let (out, _) = res?;
+    Ok(out)
+}
+
+/// Shared entry checks for the socket-side drivers ([`drive_lanes`]
+/// and [`drive_reactor`]): the lanes must cover the replica universe
+/// exactly, and the plan must be self-consistent. Returns the universe
+/// size.
+fn validate_remote_plan(
+    lane_rids: &[&[usize]],
+    have_sync: bool,
+    plan: &DrivePlan,
+    ctl: &mut DriveCtl,
+) -> Result<usize> {
     let m = ctl.live.len();
     if m == 0 {
         bail!("drive_lanes: empty replica universe");
@@ -1797,11 +1891,11 @@ pub fn drive_lanes<E: InnerEngine, L: Lane>(
         bail!("drive_lanes: no live replicas at start");
     }
     let mut owner = vec![false; m];
-    for (_, rids) in &lanes {
+    for rids in lane_rids {
         if rids.is_empty() {
             bail!("drive_lanes: a lane owns no replicas");
         }
-        for &r in rids {
+        for &r in *rids {
             if r >= m {
                 bail!("drive_lanes: replica {r} is outside the universe of {m}");
             }
@@ -1823,10 +1917,10 @@ pub fn drive_lanes<E: InnerEngine, L: Lane>(
     if plan.eval_every == Some(0) {
         bail!("drive_lanes: eval_every must be >= 1");
     }
-    if sync.is_some() && plan.sync_interval == 0 {
+    if have_sync && plan.sync_interval == 0 {
         bail!("drive_lanes: sync_interval must be >= 1");
     }
-    if plan.overlap_tau > 0 && (sync.is_none() || plan.overlap_tau >= plan.sync_interval) {
+    if plan.overlap_tau > 0 && (!have_sync || plan.overlap_tau >= plan.sync_interval) {
         bail!(
             "drive_lanes: overlap_tau ({}) needs an outer sync and must stay below \
              the sync interval (one sync in flight at a time)",
@@ -1840,19 +1934,136 @@ pub fn drive_lanes<E: InnerEngine, L: Lane>(
             plan.total_steps
         );
     }
-    if !ctl.events.is_empty() && sync.is_none() {
+    if !ctl.events.is_empty() && !have_sync {
         bail!("drive_lanes: fault events without an outer sync");
     }
     if ctl.residuals.len() != m {
         ctl.residuals = vec![Vec::new(); m];
     }
-    let mut exec = LaneExec::new(lanes, m, /* fail_on_death */ false);
-    let res = coordinate(engine, &mut exec, sync.as_deref_mut(), plan, m, ctl);
-    let pending = match &res {
-        Ok((_, p)) => p.clone(),
-        Err(_) => Broadcast::empty(),
+    Ok(m)
+}
+
+/// The reactor-backed segment executor: every TCP lane is one socket
+/// inside a single [`LaneReactor`] poll loop, so dispatch fans a
+/// once-serialized command onto every lane, collect drains reports as
+/// lanes produce them (heartbeats consumed in-loop, patience clocks
+/// ticking), and a lossy broadcast streams onto the wire while it
+/// encodes. One coordinator thread, however many workers.
+struct ReactorExec<'r> {
+    reactor: &'r mut LaneReactor,
+    m: usize,
+}
+
+impl ReactorExec<'_> {
+    /// Ship the final broadcast to every surviving lane (errors
+    /// ignored — a lane dead at shutdown already crashed out).
+    fn finish(&mut self, broadcast: &Broadcast) {
+        self.reactor.send_finish(broadcast);
+    }
+}
+
+impl SegmentExec for ReactorExec<'_> {
+    fn dispatch(
+        &mut self,
+        from: usize,
+        to: usize,
+        broadcast: &Broadcast,
+        payload: &PayloadSpec,
+        churn: &SegmentChurn,
+    ) -> Result<()> {
+        let cmd = Cmd::Run {
+            from,
+            to,
+            broadcast: broadcast.clone(),
+            payload: payload.clone(),
+            churn: churn.clone(),
+        };
+        self.reactor.send_cmd(&cmd)
+    }
+
+    fn collect(&mut self, _from: usize, _to: usize) -> Result<SegmentData> {
+        let mut losses: Vec<Vec<f64>> = vec![Vec::new(); self.m];
+        let mut payloads: Vec<Option<SyncPayload>> = (0..self.m).map(|_| None).collect();
+        for report in self.reactor.collect_reports()? {
+            for (rid, l, p) in report.reps {
+                if rid >= self.m {
+                    bail!("drive: worker reported unknown replica {rid}");
+                }
+                losses[rid] = l;
+                payloads[rid] = Some(p);
+            }
+        }
+        // replicas on dead lanes (now or earlier) report nothing:
+        // segment-dead, exactly how a frozen replica looks — the
+        // coordinator flips their membership via take_lost
+        for r in self.reactor.dead_rids() {
+            payloads[r].get_or_insert(SyncPayload::Skipped);
+        }
+        let mut out = Vec::with_capacity(self.m);
+        for (r, p) in payloads.into_iter().enumerate() {
+            out.push(p.ok_or_else(|| anyhow!("replica {r}: missing segment payload"))?);
+        }
+        Ok((losses, out))
+    }
+
+    fn recycle_wires(&mut self, bufs: Vec<WireBuf>) {
+        self.reactor.recycle(bufs);
+    }
+
+    fn stream_down(&self) -> bool {
+        true
+    }
+
+    fn bcast_begin(
+        &mut self,
+        frag: Option<usize>,
+        sync_index: u64,
+        payload_len: u64,
+    ) -> Result<()> {
+        self.reactor.bcast_begin(frag, sync_index, payload_len)
+    }
+
+    fn bcast_chunk(&mut self, chunk: &[u8]) -> Result<()> {
+        self.reactor.bcast_chunk(chunk)
+    }
+
+    fn take_lost(&mut self) -> Vec<usize> {
+        self.reactor.take_lost()
+    }
+}
+
+/// Drive a run over a [`LaneReactor`] — the multiplexed successor of
+/// [`drive_lanes`]'s thread-per-lane TCP path. Semantics are
+/// identical (lane deaths become journaled `Crash` membership,
+/// worker-reported engine errors fail the run, the final broadcast
+/// ships as `Finish`), but the coordinator costs one poll loop instead
+/// of one reader thread per worker, and lossy broadcasts stream onto
+/// the lanes while they encode. On return the reactor's heartbeat
+/// traffic has been folded into the sync engine's control-bytes
+/// bucket (never the framed totals — those stay transport-invariant).
+pub fn drive_reactor<E: InnerEngine>(
+    engine: &E,
+    reactor: &mut LaneReactor,
+    mut sync: Option<&mut OuterSync>,
+    plan: &DrivePlan,
+    ctl: &mut DriveCtl,
+) -> Result<DriveOutcome> {
+    let rids = reactor.lane_rids();
+    let rids: Vec<&[usize]> = rids.iter().map(|r| &r[..]).collect();
+    let m = validate_remote_plan(&rids, sync.is_some(), plan, ctl)?;
+    let res = {
+        let mut exec = ReactorExec { reactor, m };
+        let res = coordinate(engine, &mut exec, sync.as_deref_mut(), plan, m, ctl);
+        let pending = match &res {
+            Ok((_, p)) => p.clone(),
+            Err(_) => Broadcast::empty(),
+        };
+        exec.finish(&pending);
+        res
     };
-    exec.finish(&pending);
+    if let Some(bus) = sync.as_deref_mut() {
+        bus.add_control_bytes(reactor.take_control_bytes());
+    }
     let (out, _) = res?;
     Ok(out)
 }

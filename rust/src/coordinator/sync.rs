@@ -52,6 +52,7 @@ use anyhow::{bail, Result};
 use crate::comm::codec::{codec_for, Codec, OuterBits, BLOCK};
 use crate::comm::{Channel, CommLink, Direction, DownWire, SyncWireRecord, WireStats};
 use crate::runtime::{FlatLayout, FlatParams, HostTensor};
+use crate::transport::frame::{WireBuf, WireSlice};
 use crate::util::par;
 
 use super::outer_opt::{acc_add, acc_finish, acc_scale, OuterOpt};
@@ -104,9 +105,10 @@ pub struct OuterSync {
     /// for identity down-wires (zero-copy literal handoff).
     down: Option<DownWire>,
     /// The last sync's encoded broadcast, awaiting pickup by the
-    /// driver (lossy down-wires only; one allocation, `Arc`-shared by
-    /// every worker).
-    pending_down: Option<Arc<Vec<u8>>>,
+    /// driver (lossy down-wires only; one recycled buffer,
+    /// `Arc`-shared by every worker). None when the payload was
+    /// streamed to a transport sink at encode time.
+    pending_down: Option<WireSlice>,
     /// Seed both channels derive stochastic rounding from.
     run_seed: u64,
     /// Exact bytes moved per sync/fragment/replica.
@@ -115,10 +117,10 @@ pub struct OuterSync {
     /// decode→reduce, outer step, broadcast encode). Results are
     /// bit-identical at any value; 1 = the sequential path.
     sync_threads: usize,
-    /// Recycled wire payload buffers (spent broadcasts returned by the
-    /// driver via [`OuterSync::recycle_wire`]), so steady-state syncs
+    /// Recycled wire buffers (spent broadcasts returned by the driver
+    /// via [`OuterSync::recycle_wire`]), so steady-state syncs
     /// allocate nothing for the down-wire payload.
-    wire_pool: Vec<Vec<u8>>,
+    wire_pool: Vec<WireBuf>,
 }
 
 impl OuterSync {
@@ -179,12 +181,12 @@ impl OuterSync {
         self
     }
 
-    /// Return a spent wire payload buffer (a shipped broadcast or a
-    /// consumed up-wire payload) for reuse by the next broadcast
-    /// encode. Capacity is retained; every byte is rewritten on reuse.
-    pub fn recycle_wire(&mut self, mut buf: Vec<u8>) {
+    /// Return a spent wire buffer (a shipped broadcast or a consumed
+    /// up-wire payload) for reuse by the next broadcast encode.
+    /// Capacity is retained; every byte is rewritten on reuse.
+    pub fn recycle_wire(&mut self, mut buf: WireBuf) {
         if self.wire_pool.len() < 16 {
-            buf.clear();
+            buf.reset();
             self.wire_pool.push(buf);
         }
     }
@@ -263,14 +265,42 @@ impl OuterSync {
 
     /// Take the last sync's encoded broadcast payload (lossy
     /// down-wires only; the driver attaches it to the next segment's
-    /// command, one allocation shared by every worker).
-    pub fn take_broadcast_bytes(&mut self) -> Option<Arc<Vec<u8>>> {
+    /// command, one buffer shared by every worker). Empty when the
+    /// payload was streamed onto the transport at encode time.
+    pub fn take_broadcast_bytes(&mut self) -> Option<WireSlice> {
         self.pending_down.take()
+    }
+
+    /// Exact encoded payload size of the next broadcast for `frag`
+    /// under a lossy down-wire, `None` at the identity width. A
+    /// streaming transport stamps this into the `Bcast` frame header
+    /// before the encode starts, so shards can hit the socket as they
+    /// finish.
+    pub fn down_payload_bytes(&self, frag: Option<usize>) -> Option<u64> {
+        self.down.as_ref()?;
+        let ranges: &[Range<usize>] = match frag {
+            Some(f) => self.frag_ranges.get(f)?,
+            None => &self.full,
+        };
+        Some(
+            ranges
+                .iter()
+                .map(|r| self.down_codec.wire_bytes(r.len()) as u64)
+                .sum(),
+        )
     }
 
     /// Exact wire traffic so far (one record per sync event).
     pub fn wire_stats(&self) -> &WireStats {
         &self.wire
+    }
+
+    /// Fold transport control traffic (heartbeats, handshakes) measured
+    /// by a socket transport into the wire accounting's control bucket
+    /// — reported separately, never part of the framed totals (those
+    /// stay schedule-derived and transport-invariant).
+    pub fn add_control_bytes(&mut self, bytes: u64) {
+        self.wire.add_control_bytes(bytes);
     }
 
     /// The flat arena the replicas' broadcast view currently holds:
@@ -466,7 +496,7 @@ impl OuterSync {
         self.opt.step_pieces(&mut self.global, &self.acc, &shards);
 
         // 3. publish + wire accounting (this path ships raw f32 up).
-        self.publish_and_record(frag, replica_params.len(), None)
+        self.publish_and_record(frag, replica_params.len(), None, None)
     }
 
     /// Shared tail of both sync entry points: refresh the literal
@@ -481,11 +511,19 @@ impl OuterSync {
     /// the fan-out — at the down-wire codec's exact encoded size: the
     /// measured bytes of the [`DownWire`] payload when the broadcast
     /// is lossy, `4 * elems` under the identity f32 codec.
+    ///
+    /// With a `sink`, a lossy broadcast is **streamed**: encode shards
+    /// are flushed through the sink in payload order as each finishes
+    /// (overlapping encode with the transport write), the spent buffer
+    /// is recycled immediately, and nothing is stashed for
+    /// [`OuterSync::take_broadcast_bytes`] — the transport already
+    /// shipped the exact one-shot bytes.
     fn publish_and_record(
         &mut self,
         frag: Option<usize>,
         replicas: usize,
         bytes_per_replica: Option<u64>,
+        sink: Option<&mut dyn FnMut(&[u8]) -> Result<()>>,
     ) -> Result<()> {
         let layout = Arc::clone(self.global.layout());
         if self.down.is_some() {
@@ -521,17 +559,39 @@ impl OuterSync {
                 // encode the broadcast fragment once for all replicas
                 // — into a recycled buffer, sharded over the sync
                 // threads; the driver ships these bytes to every
-                // worker
+                // worker (streamed shard-by-shard when a sink is
+                // attached, stashed whole otherwise)
                 let mut buf = self.wire_pool.pop().unwrap_or_default();
-                dw.encode_broadcast_into(
-                    self.global.data(),
-                    frag,
-                    sync_index,
-                    self.sync_threads,
-                    &mut buf,
-                )?;
-                let n = buf.len() as u64;
-                self.pending_down = Some(Arc::new(buf));
+                let n;
+                match sink {
+                    Some(flush) => {
+                        dw.encode_broadcast_chunked(
+                            self.global.data(),
+                            frag,
+                            sync_index,
+                            self.sync_threads,
+                            &mut buf,
+                            flush,
+                        )?;
+                        n = buf.payload_len() as u64;
+                        // already on the wire — recycle right away
+                        if self.wire_pool.len() < 16 {
+                            buf.reset();
+                            self.wire_pool.push(buf);
+                        }
+                    }
+                    None => {
+                        dw.encode_broadcast_into(
+                            self.global.data(),
+                            frag,
+                            sync_index,
+                            self.sync_threads,
+                            &mut buf,
+                        )?;
+                        n = buf.payload_len() as u64;
+                        self.pending_down = Some(WireSlice::whole(Arc::new(buf)));
+                    }
+                }
                 n
             }
             None => ranges
@@ -561,6 +621,42 @@ impl OuterSync {
     /// over `--sync-threads`); the Nesterov step and the deduplicated
     /// literal publish are exactly the legacy path's, bit for bit.
     pub fn sync_encoded(&mut self, payloads: &[&[u8]], frag: Option<usize>) -> Result<()> {
+        self.sync_encoded_inner(payloads, frag, None)
+    }
+
+    /// [`OuterSync::sync_encoded`] with the lossy broadcast **streamed**
+    /// through `sink` as encode shards finish, instead of stashed for
+    /// [`OuterSync::take_broadcast_bytes`] — a socket transport writes
+    /// each shard onto its lanes while the next is still encoding,
+    /// overlapping broadcast encode with the wire inside the overlap
+    /// window. The concatenation of sink calls is byte-identical to
+    /// the one-shot payload (pinned by `chunked` tests in
+    /// `comm::channel`), and the global/view/residual state advances
+    /// identically. Callers must check [`OuterSync::down_payload_bytes`]
+    /// first: at the identity width there is no byte payload to
+    /// stream, and this refuses rather than silently skipping the
+    /// literal handoff.
+    pub fn sync_encoded_streamed(
+        &mut self,
+        payloads: &[&[u8]],
+        frag: Option<usize>,
+        sink: &mut dyn FnMut(&[u8]) -> Result<()>,
+    ) -> Result<()> {
+        if self.down.is_none() {
+            bail!(
+                "outer sync: streamed broadcast requested under an identity \
+                 down-wire (the broadcast is a literal handoff, not bytes)"
+            );
+        }
+        self.sync_encoded_inner(payloads, frag, Some(sink))
+    }
+
+    fn sync_encoded_inner(
+        &mut self,
+        payloads: &[&[u8]],
+        frag: Option<usize>,
+        sink: Option<&mut dyn FnMut(&[u8]) -> Result<()>>,
+    ) -> Result<()> {
         if payloads.is_empty() {
             bail!("outer sync with zero replicas");
         }
@@ -633,7 +729,7 @@ impl OuterSync {
         self.opt.step_pieces(&mut self.global, &self.acc, &shards);
 
         // 3. publish + wire accounting (exact encoded bytes up).
-        self.publish_and_record(frag, payloads.len(), Some(expected as u64))
+        self.publish_and_record(frag, payloads.len(), Some(expected as u64), sink)
     }
 }
 
@@ -744,7 +840,7 @@ mod tests {
                 link.encode_replica(r, lits, &mut wc, &mut rc, None, 0).unwrap(),
             );
         }
-        let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+        let frames: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
         coded.sync_encoded(&frames, None).unwrap();
 
         let a: Vec<u32> = legacy.global().data().iter().map(|x| x.to_bits()).collect();
@@ -845,6 +941,76 @@ mod tests {
         assert_eq!(sync.stale_literals(), 2, "leaves {{0, 2}} stale");
         sync.global_literals().unwrap();
         assert_eq!(sync.uploads(), 4);
+    }
+
+    #[test]
+    fn streamed_broadcast_matches_the_stashed_payload() {
+        use crate::comm::{codec_for, OuterBits, ReplicaComm, WorkerComm};
+        let l = layout(); // 8 elements, P=2
+        let init = host(&l, 1.0);
+        let build = || {
+            OuterSync::new(Arc::clone(&l), &init, lits_of(&init), 0.8, 0.9, 2)
+                .unwrap()
+                .with_codec(codec_for(OuterBits::Fp32), 7)
+                .with_down_codec(codec_for(OuterBits::Int4))
+                .with_sync_threads(3)
+        };
+        let mut oracle = build();
+        let mut streamed = build();
+        let r0 = lits_of(&host(&l, 0.25));
+        let r1 = lits_of(&host(&l, 4.5));
+        for (round, frag) in [(0u64, Some(0)), (1, Some(1)), (2, None)] {
+            let mut payloads = Vec::new();
+            for sync in [&oracle, &streamed] {
+                let link = sync.link();
+                let mut per_sync = Vec::new();
+                for (r, lits) in [&r0, &r1].into_iter().enumerate() {
+                    let mut wc = WorkerComm::default();
+                    let mut rc = ReplicaComm::default();
+                    per_sync.push(
+                        link.encode_replica(r, lits, &mut wc, &mut rc, frag, round).unwrap(),
+                    );
+                }
+                payloads.push(per_sync);
+            }
+            let frames: Vec<&[u8]> = payloads[0].iter().map(|p| p.as_slice()).collect();
+            oracle.sync_encoded(&frames, frag).unwrap();
+            let want = oracle.take_broadcast_bytes().unwrap();
+            assert_eq!(
+                oracle.down_payload_bytes(frag),
+                Some(want.len() as u64),
+                "down_payload_bytes must predict the exact encoded size"
+            );
+
+            let frames: Vec<&[u8]> = payloads[1].iter().map(|p| p.as_slice()).collect();
+            let mut got = Vec::new();
+            streamed
+                .sync_encoded_streamed(&frames, frag, &mut |chunk| {
+                    got.extend_from_slice(chunk);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(got, want.as_slice(), "streamed bytes == stashed payload");
+            // nothing stashed — the sink already shipped it
+            assert!(streamed.take_broadcast_bytes().is_none());
+            // and the engines stay bit-identical
+            assert_eq!(
+                oracle.global().data(), streamed.global().data(),
+                "round {round}: globals diverged"
+            );
+        }
+        // identity down-wire refuses to stream (nothing to stream)
+        let mut ident =
+            OuterSync::new(Arc::clone(&l), &init, lits_of(&init), 1.0, 0.0, 1).unwrap();
+        assert!(ident.down_payload_bytes(None).is_none());
+        let link = ident.link();
+        let mut wc = WorkerComm::default();
+        let mut rc = ReplicaComm::default();
+        let p = link.encode_replica(0, &lits_of(&host(&l, 2.0)), &mut wc, &mut rc, None, 0)
+            .unwrap();
+        assert!(ident
+            .sync_encoded_streamed(&[p.as_slice()], None, &mut |_| Ok(()))
+            .is_err());
     }
 
     #[test]

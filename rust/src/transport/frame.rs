@@ -28,15 +28,35 @@
 //! mismatch, a nonzero reserved byte, an unknown kind, or an oversized
 //! length all return a clean `Err` — never a panic, never a partial
 //! read acted upon (`tests` pin each rejection).
+//!
+//! # The zero-copy wire path
+//!
+//! The hot path never assembles a frame by copying. A [`WireBuf`] is a
+//! recycled byte buffer that reserves [`HEADER_LEN`] bytes of prefix;
+//! encoders append payload directly after the prefix, and
+//! [`WireBuf::frame`] stamps the header **in place**, yielding one
+//! contiguous `write_all`-able frame with zero allocation and zero
+//! payload memcpy. Borrowed payloads that don't live in a `WireBuf`
+//! go out via [`write_frame`]'s vectored path (header on the stack,
+//! payload straight from its owner). Received frames land in pooled
+//! `WireBuf`s ([`read_frame_into`] + [`BufPool`]) and are carved into
+//! shared [`WireSlice`] views, so multi-replica reports are consumed
+//! without per-replica copies. The [`metrics`] counters audit the
+//! discipline: steady-state socket syncs must show zero fresh wire
+//! allocations and zero payload copies (pinned by
+//! `tests/transport_loopback.rs`).
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
+use std::ops::Range;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 /// First bytes of every frame ("DiLoCo Wire").
 pub const MAGIC: [u8; 4] = *b"DLCW";
 /// Protocol version; bump on any incompatible frame or message change.
-pub const PROTO_VERSION: u16 = 1;
+/// v2: streamed-broadcast `Bcast` frames + the `Pending` broadcast tag.
+pub const PROTO_VERSION: u16 = 2;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 36;
 /// Per-frame framing overhead (the header *is* the length prefix —
@@ -50,8 +70,8 @@ pub const MAX_PAYLOAD: usize = 1 << 30;
 pub const NO_FRAG: u32 = u32::MAX;
 
 /// What a frame carries. Handshake kinds flow once per connection;
-/// Run/Finish flow coordinator→worker, Report/Error worker→coordinator,
-/// Heartbeat worker→coordinator on its own cadence.
+/// Run/Finish/Bcast flow coordinator→worker, Report/Error
+/// worker→coordinator, Heartbeat worker→coordinator on its own cadence.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MsgKind {
     /// Worker→coordinator: claimed replica ids (+ fingerprint/widths
@@ -70,8 +90,13 @@ pub enum MsgKind {
     Report,
     /// A worker-side error, in place of a report (payload = message).
     Error,
-    /// Liveness beacon; empty payload, skipped by receivers.
+    /// Liveness beacon; empty payload, consumed by the lane reactor.
     Heartbeat,
+    /// A streamed broadcast payload, shipped at merge time ahead of
+    /// the `Run` that references it (`Broadcast::Pending`). The header
+    /// carries the sync index and fragment; the payload is the encoded
+    /// broadcast bytes, flushed in encode-shard order.
+    Bcast,
 }
 
 impl MsgKind {
@@ -85,6 +110,7 @@ impl MsgKind {
             MsgKind::Report => 6,
             MsgKind::Error => 7,
             MsgKind::Heartbeat => 8,
+            MsgKind::Bcast => 9,
         }
     }
 
@@ -98,6 +124,7 @@ impl MsgKind {
             6 => MsgKind::Report,
             7 => MsgKind::Error,
             8 => MsgKind::Heartbeat,
+            9 => MsgKind::Bcast,
             other => bail!("frame: unknown message kind {other}"),
         })
     }
@@ -135,26 +162,305 @@ impl FrameHeader {
     }
 }
 
-/// Append one encoded frame (header + payload) to `out`.
-pub fn encode_frame(h: &FrameHeader, payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
-    if payload.len() > MAX_PAYLOAD {
+/// Transport-path allocation/copy audit counters. The zero-copy
+/// discipline is enforced by tests that snapshot these around a
+/// steady-state window and assert the deltas are zero; production code
+/// only ever increments them (relaxed atomics — a few ns per event,
+/// and steady state has no events).
+pub mod metrics {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static WIRE_ALLOCS: AtomicU64 = AtomicU64::new(0);
+    static PAYLOAD_COPIES: AtomicU64 = AtomicU64::new(0);
+
+    /// A fresh wire buffer was allocated (a [`super::WireBuf`] built
+    /// outside the recycle loop).
+    pub fn count_wire_alloc() {
+        WIRE_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Payload bytes were memcpy'd between buffers (staging copies the
+    /// zero-copy path exists to eliminate).
+    pub fn count_payload_copy() {
+        PAYLOAD_COPIES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(wire_allocs, payload_copies)` so far — diff two snapshots
+    /// around a window to audit it.
+    pub fn snapshot() -> (u64, u64) {
+        (
+            WIRE_ALLOCS.load(Ordering::Relaxed),
+            PAYLOAD_COPIES.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// A recycled wire buffer with a [`HEADER_LEN`]-byte reserved prefix:
+/// encoders write payload directly after the prefix, and
+/// [`WireBuf::frame`] stamps the header in place — the whole frame
+/// then ships as one `write_all`, no assembly copy, no allocation.
+///
+/// Invariant: the backing vec is always at least `HEADER_LEN` long;
+/// everything past the prefix is payload.
+pub struct WireBuf {
+    buf: Vec<u8>,
+}
+
+impl Default for WireBuf {
+    fn default() -> WireBuf {
+        WireBuf::new()
+    }
+}
+
+impl std::fmt::Debug for WireBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WireBuf({} payload bytes)", self.payload_len())
+    }
+}
+
+impl PartialEq for WireBuf {
+    fn eq(&self, other: &WireBuf) -> bool {
+        self.payload() == other.payload()
+    }
+}
+
+impl WireBuf {
+    /// A fresh, empty-payload buffer. Counted by
+    /// [`metrics::count_wire_alloc`] — steady-state hot paths must get
+    /// theirs from a recycle pool instead.
+    pub fn new() -> WireBuf {
+        metrics::count_wire_alloc();
+        WireBuf {
+            buf: vec![0u8; HEADER_LEN],
+        }
+    }
+
+    /// A buffer holding `payload` (copied — setup/test convenience,
+    /// never the hot path; counted by both audit counters).
+    pub fn from_payload(payload: &[u8]) -> WireBuf {
+        metrics::count_payload_copy();
+        let mut wb = WireBuf::new();
+        wb.buf.extend_from_slice(payload);
+        wb
+    }
+
+    /// Truncate the payload to zero, keeping capacity (the recycle
+    /// entry point: every payload byte is rewritten on reuse).
+    pub fn reset(&mut self) {
+        self.buf.truncate(HEADER_LEN);
+        // a buffer that was (ab)used as a raw vec could be shorter
+        // than the prefix; restore the invariant
+        if self.buf.len() < HEADER_LEN {
+            self.buf.resize(HEADER_LEN, 0);
+        }
+    }
+
+    pub fn payload_len(&self) -> usize {
+        self.buf.len() - HEADER_LEN
+    }
+
+    pub fn payload(&self) -> &[u8] {
+        &self.buf[HEADER_LEN..]
+    }
+
+    pub fn payload_mut(&mut self) -> &mut [u8] {
+        &mut self.buf[HEADER_LEN..]
+    }
+
+    /// Resize the payload region to exactly `n` bytes (new bytes
+    /// zeroed; encoders overwrite every byte anyway).
+    pub fn resize_payload(&mut self, n: usize) {
+        self.buf.resize(HEADER_LEN + n, 0);
+    }
+
+    /// Append bytes to the payload — a deliberate copy for small meta
+    /// segments; payload-sized blobs must go through the vectored or
+    /// in-place paths instead.
+    pub fn extend_payload(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The raw backing vec, positioned for append-only payload writes
+    /// (the first [`HEADER_LEN`] bytes are the reserved prefix — do
+    /// not truncate below it; [`WireBuf::reset`] repairs the invariant
+    /// if a caller did).
+    pub fn vec_for_append(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+
+    /// Stamp `h` (with this buffer's payload length) into the reserved
+    /// prefix and return the complete frame — header + payload, one
+    /// contiguous slice, ready for a single `write_all`.
+    pub fn frame(&mut self, h: &FrameHeader) -> Result<&[u8]> {
+        let payload_len = self.payload_len();
+        if payload_len > MAX_PAYLOAD {
+            bail!(
+                "frame: payload of {payload_len} bytes exceeds the {MAX_PAYLOAD} byte cap"
+            );
+        }
+        write_header(&mut self.buf[..HEADER_LEN], h, payload_len);
+        Ok(&self.buf)
+    }
+}
+
+/// An immutable, shareable view of a sub-range of one [`WireBuf`]'s
+/// payload. This is how received frames are consumed without copying:
+/// one frame buffer, many per-replica payload views, all holding the
+/// same `Arc`. When every view drops, [`reclaim_wires`] recovers the
+/// buffer for the recycle pool.
+#[derive(Clone)]
+pub struct WireSlice {
+    buf: Arc<WireBuf>,
+    range: Range<usize>,
+}
+
+impl std::fmt::Debug for WireSlice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WireSlice({} bytes)", self.range.len())
+    }
+}
+
+impl PartialEq for WireSlice {
+    fn eq(&self, other: &WireSlice) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl WireSlice {
+    /// The whole payload of `buf`.
+    pub fn whole(buf: Arc<WireBuf>) -> WireSlice {
+        let range = 0..buf.payload_len();
+        WireSlice { buf, range }
+    }
+
+    /// A payload-relative sub-range of `buf` (panics on out-of-bounds —
+    /// ranges come from the bounds-checked frame parser).
+    pub fn part(buf: Arc<WireBuf>, range: Range<usize>) -> WireSlice {
+        assert!(
+            range.start <= range.end && range.end <= buf.payload_len(),
+            "wire slice {range:?} outside a {} byte payload",
+            buf.payload_len()
+        );
+        WireSlice { buf, range }
+    }
+
+    /// Copy `bytes` into a fresh buffer — setup/test convenience,
+    /// never the hot path (audited by [`metrics`]).
+    pub fn copied_from(bytes: &[u8]) -> WireSlice {
+        WireSlice::whole(Arc::new(WireBuf::from_payload(bytes)))
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf.payload()[self.range.clone()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.range.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+
+    /// The backing buffer (for `Arc::ptr_eq` dedup during reclaim).
+    pub fn buf(&self) -> &Arc<WireBuf> {
+        &self.buf
+    }
+}
+
+/// Recover the unique backing buffers from a batch of spent payload
+/// views: dedupe by `Arc` identity (many views of one received frame
+/// count once), then unwrap the `Arc`s whose every view has dropped.
+/// Buffers still shared elsewhere are left to their holders.
+pub fn reclaim_wires(slices: Vec<WireSlice>) -> Vec<WireBuf> {
+    let mut arcs: Vec<Arc<WireBuf>> = Vec::with_capacity(slices.len());
+    for s in slices {
+        if !arcs.iter().any(|a| Arc::ptr_eq(a, &s.buf)) {
+            arcs.push(s.buf);
+        }
+    }
+    arcs.into_iter()
+        .filter_map(|a| Arc::try_unwrap(a).ok())
+        .collect()
+}
+
+/// A bounded recycle pool of [`WireBuf`]s. `take` prefers a pooled
+/// buffer (reset, capacity retained) and only allocates — audited —
+/// when the pool is dry; `put` drops beyond the cap so a burst can't
+/// pin unbounded memory.
+pub struct BufPool {
+    free: Vec<WireBuf>,
+    cap: usize,
+}
+
+impl BufPool {
+    pub fn with_cap(cap: usize) -> BufPool {
+        BufPool {
+            free: Vec::new(),
+            cap,
+        }
+    }
+
+    pub fn take(&mut self) -> WireBuf {
+        match self.free.pop() {
+            Some(mut b) => {
+                b.reset();
+                b
+            }
+            None => WireBuf::new(),
+        }
+    }
+
+    pub fn put(&mut self, b: WireBuf) {
+        if self.free.len() < self.cap {
+            self.free.push(b);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.free.is_empty()
+    }
+}
+
+/// Serialize `h` into a `dst` of at least [`HEADER_LEN`] bytes — the
+/// one place the byte layout lives (in-place stamping, stack headers,
+/// and `encode_frame` all route here, so the golden-bytes test pins
+/// them all at once).
+fn write_header(dst: &mut [u8], h: &FrameHeader, payload_len: usize) {
+    dst[0..4].copy_from_slice(&MAGIC);
+    dst[4..6].copy_from_slice(&PROTO_VERSION.to_le_bytes());
+    dst[6] = h.kind.code();
+    dst[7] = h.up_bits;
+    dst[8] = h.down_bits;
+    dst[9..12].copy_from_slice(&[0u8; 3]);
+    dst[12..20].copy_from_slice(&h.fingerprint.to_le_bytes());
+    dst[20..28].copy_from_slice(&h.sync_index.to_le_bytes());
+    dst[28..32].copy_from_slice(&h.frag.unwrap_or(NO_FRAG).to_le_bytes());
+    dst[32..36].copy_from_slice(&(payload_len as u32).to_le_bytes());
+}
+
+/// The 36 header bytes for a frame of `payload_len`, on the stack —
+/// the vectored write path's first `IoSlice`.
+pub fn header_bytes(h: &FrameHeader, payload_len: usize) -> Result<[u8; HEADER_LEN]> {
+    if payload_len > MAX_PAYLOAD {
         bail!(
-            "frame: payload of {} bytes exceeds the {} byte cap",
-            payload.len(),
-            MAX_PAYLOAD
+            "frame: payload of {payload_len} bytes exceeds the {MAX_PAYLOAD} byte cap"
         );
     }
+    let mut hdr = [0u8; HEADER_LEN];
+    write_header(&mut hdr, h, payload_len);
+    Ok(hdr)
+}
+
+/// Append one encoded frame (header + payload) to `out`.
+pub fn encode_frame(h: &FrameHeader, payload: &[u8], out: &mut Vec<u8>) -> Result<()> {
+    let hdr = header_bytes(h, payload.len())?;
     out.reserve(HEADER_LEN + payload.len());
-    out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&PROTO_VERSION.to_le_bytes());
-    out.push(h.kind.code());
-    out.push(h.up_bits);
-    out.push(h.down_bits);
-    out.extend_from_slice(&[0u8; 3]);
-    out.extend_from_slice(&h.fingerprint.to_le_bytes());
-    out.extend_from_slice(&h.sync_index.to_le_bytes());
-    out.extend_from_slice(&h.frag.unwrap_or(NO_FRAG).to_le_bytes());
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&hdr);
     out.extend_from_slice(payload);
     Ok(())
 }
@@ -237,10 +543,65 @@ pub fn read_frame(r: &mut impl Read) -> Result<(FrameHeader, Vec<u8>)> {
     Ok((h, payload))
 }
 
-/// Write one frame to a stream as a single `write_all` (one contiguous
-/// buffer, so concurrent writers serialized by a lock never interleave
-/// partial frames).
+/// Read one frame off a stream into a recycled buffer: header on the
+/// stack, payload straight into `buf` (resized, capacity retained
+/// across frames) — the receive leg's zero-alloc twin of
+/// [`WireBuf::frame`].
+pub fn read_frame_into(r: &mut impl Read, buf: &mut WireBuf) -> Result<FrameHeader> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr).context("frame: reading header")?;
+    let (h, payload_len) = parse_header(&hdr)?;
+    buf.reset();
+    buf.resize_payload(payload_len);
+    r.read_exact(buf.payload_mut())
+        .with_context(|| format!("frame: reading {payload_len} byte payload"))?;
+    Ok(h)
+}
+
+/// Write every byte of `parts`, preferring one vectored syscall;
+/// resumes correctly across short writes. The degenerate single-part
+/// call is just `write_all`.
+pub fn write_all_vectored(w: &mut impl Write, parts: &[&[u8]]) -> Result<()> {
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut written = 0usize;
+    while written < total {
+        // rebuild the slice list past what's already gone (short
+        // writes are rare; the steady state is one pass)
+        let mut skip = written;
+        let mut bufs: Vec<IoSlice> = Vec::with_capacity(parts.len());
+        for p in parts {
+            if skip >= p.len() {
+                skip -= p.len();
+                continue;
+            }
+            bufs.push(IoSlice::new(&p[skip..]));
+            skip = 0;
+        }
+        let n = w.write_vectored(&bufs).context("frame: writing")?;
+        if n == 0 {
+            bail!("frame: writer accepted zero bytes");
+        }
+        written += n;
+    }
+    Ok(())
+}
+
+/// Write one frame to a stream: header on the stack, payload borrowed,
+/// shipped as one vectored write — no assembly buffer, no copy. (The
+/// two `IoSlice`s reach the kernel as one atomic writev on the
+/// platforms we run, and every concurrent writer in this crate is
+/// serialized by a lock anyway.)
 pub fn write_frame(w: &mut impl Write, h: &FrameHeader, payload: &[u8]) -> Result<()> {
+    let hdr = header_bytes(h, payload.len())?;
+    write_all_vectored(w, &[&hdr, payload])
+}
+
+/// The retired copying writer — assembles header + payload into a
+/// fresh `Vec` per frame. Kept only as the bench baseline the
+/// zero-copy path is measured against (`bench_hot_path`: "transport
+/// frame write" vs the "copy baseline" case).
+#[doc(hidden)]
+pub fn write_frame_copying(w: &mut impl Write, h: &FrameHeader, payload: &[u8]) -> Result<()> {
     let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
     encode_frame(h, payload, &mut buf)?;
     w.write_all(&buf).context("frame: writing")?;
@@ -279,11 +640,11 @@ mod tests {
         let mut buf = Vec::new();
         encode_frame(&sample_header(), b"xyz", &mut buf).unwrap();
         // the exact wire layout, byte for byte — if this changes,
-        // PROTO_VERSION must bump
+        // PROTO_VERSION must bump (v2 = streamed broadcasts)
         #[rustfmt::skip]
         let want: [u8; HEADER_LEN] = [
             b'D', b'L', b'C', b'W',             // magic
-            1, 0,                               // version 1 LE
+            2, 0,                               // version 2 LE
             4,                                  // kind = Run
             4, 8,                               // up / down bits
             0, 0, 0,                            // reserved
@@ -295,6 +656,115 @@ mod tests {
         assert_eq!(&buf[..HEADER_LEN], &want);
         assert_eq!(&buf[HEADER_LEN..], b"xyz");
         assert_eq!(buf.len() as u64, FRAME_OVERHEAD + 3);
+    }
+
+    #[test]
+    fn in_place_framing_matches_the_copying_encoder() {
+        // the zero-copy path (payload written after the reserved
+        // prefix, header stamped in place) must produce byte-identical
+        // frames to encode_frame
+        let mut oracle = Vec::new();
+        encode_frame(&sample_header(), b"hello wire", &mut oracle).unwrap();
+
+        let mut wb = WireBuf::new();
+        wb.extend_payload(b"hello wire");
+        let framed = wb.frame(&sample_header()).unwrap();
+        assert_eq!(framed, &oracle[..]);
+
+        // recycled reuse rewrites every byte — dirty state never leaks
+        wb.reset();
+        assert_eq!(wb.payload_len(), 0);
+        wb.extend_payload(b"xyz");
+        let mut oracle2 = Vec::new();
+        encode_frame(&sample_header(), b"xyz", &mut oracle2).unwrap();
+        assert_eq!(wb.frame(&sample_header()).unwrap(), &oracle2[..]);
+
+        // and the vectored writer produces the same stream
+        let mut sink = Vec::new();
+        write_frame(&mut sink, &sample_header(), b"hello wire").unwrap();
+        assert_eq!(sink, oracle);
+        let mut sink2 = Vec::new();
+        write_frame_copying(&mut sink2, &sample_header(), b"hello wire").unwrap();
+        assert_eq!(sink2, oracle);
+    }
+
+    #[test]
+    fn read_frame_into_reuses_the_buffer() {
+        let mut stream = Vec::new();
+        encode_frame(&sample_header(), &[7u8; 20], &mut stream).unwrap();
+        encode_frame(&FrameHeader::bare(MsgKind::Heartbeat), &[], &mut stream).unwrap();
+        let mut rd = &stream[..];
+        let mut buf = WireBuf::from_payload(&[0xAA; 64]); // dirty recycled buffer
+        let h = read_frame_into(&mut rd, &mut buf).unwrap();
+        assert_eq!(h, sample_header());
+        assert_eq!(buf.payload(), &[7u8; 20]);
+        let h2 = read_frame_into(&mut rd, &mut buf).unwrap();
+        assert_eq!(h2.kind, MsgKind::Heartbeat);
+        assert_eq!(buf.payload_len(), 0);
+    }
+
+    #[test]
+    fn wire_slices_share_one_buffer_and_reclaim_once() {
+        let buf = Arc::new(WireBuf::from_payload(&[1, 2, 3, 4, 5, 6]));
+        let a = WireSlice::part(Arc::clone(&buf), 0..2);
+        let b = WireSlice::part(Arc::clone(&buf), 2..6);
+        let whole = WireSlice::whole(Arc::clone(&buf));
+        assert_eq!(a.as_slice(), &[1, 2]);
+        assert_eq!(b.as_slice(), &[3, 4, 5, 6]);
+        assert_eq!(whole.len(), 6);
+        drop(buf);
+        // while `whole` is alive the backing buffer can't be reclaimed
+        let held = reclaim_wires(vec![a.clone(), b.clone()]);
+        assert!(held.is_empty(), "shared buffer must not be unwrapped");
+        // once every view is in the batch, exactly one buffer returns
+        let got = reclaim_wires(vec![a, b, whole]);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].payload(), &[1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn buf_pool_recycles_and_caps() {
+        let mut pool = BufPool::with_cap(2);
+        let (allocs0, _) = metrics::snapshot();
+        let mut a = pool.take(); // dry pool: one audited alloc
+        a.extend_payload(b"dirty");
+        pool.put(a);
+        let b = pool.take(); // recycled: reset, no alloc
+        assert_eq!(b.payload_len(), 0);
+        pool.put(b);
+        let (allocs1, _) = metrics::snapshot();
+        assert_eq!(allocs1 - allocs0, 1, "one alloc for the dry take only");
+        pool.put(WireBuf::new());
+        pool.put(WireBuf::new());
+        pool.put(WireBuf::new());
+        assert_eq!(pool.len(), 2, "pool drops beyond its cap");
+    }
+
+    #[test]
+    fn vectored_writes_survive_short_writers() {
+        // a writer that accepts one byte at a time still gets the
+        // whole frame, in order
+        struct Trickle(Vec<u8>);
+        impl Write for Trickle {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                if buf.is_empty() {
+                    return Ok(0);
+                }
+                self.0.push(buf[0]);
+                Ok(1)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut t = Trickle(Vec::new());
+        write_all_vectored(&mut t, &[b"abc", b"", b"defg", b"h"]).unwrap();
+        assert_eq!(t.0, b"abcdefgh");
+        let mut t = Trickle(Vec::new());
+        write_frame(&mut t, &sample_header(), b"xyz").unwrap();
+        let mut oracle = Vec::new();
+        encode_frame(&sample_header(), b"xyz", &mut oracle).unwrap();
+        assert_eq!(t.0, oracle);
     }
 
     #[test]
@@ -375,6 +845,7 @@ mod tests {
             MsgKind::Report,
             MsgKind::Error,
             MsgKind::Heartbeat,
+            MsgKind::Bcast,
         ] {
             assert_eq!(MsgKind::parse(k.code()).unwrap(), k);
         }

@@ -16,10 +16,15 @@
 //! - [`tcp`] — length-prefixed [`frame`]s over TCP sockets, so one run
 //!   spans OS processes or machines (`diloco coordinate` /
 //!   `diloco worker`). A versioned handshake rejects mismatched peers
-//!   fail-loud; worker heartbeats plus a coordinator read-timeout turn
+//!   fail-loud; worker heartbeats plus per-lane patience clocks turn
 //!   a dead peer into a journaled `Crash` instead of a hang. The
-//!   loopback twin test (`tests/transport_loopback.rs`) pins TCP runs
-//!   bit-identical to in-proc runs.
+//!   coordinator drives every lane from one nonblocking poll loop
+//!   ([`tcp::LaneReactor`]) rather than a reader thread per worker,
+//!   and both legs run zero-copy in steady state: payloads serialize
+//!   straight into recycled framed wire buffers and parse as slices
+//!   of the frame they arrived in. The loopback twin test
+//!   (`tests/transport_loopback.rs`) pins TCP runs bit-identical to
+//!   in-proc runs.
 //!
 //! Error semantics are part of the contract:
 //!

@@ -10,12 +10,37 @@
 //! is **exact**: f32/f64 values travel as raw bit patterns, so a
 //! payload decoded on the far side is bit-identical to the value sent
 //! — the loopback twin test pins the whole pipeline on this.
+//!
+//! # The zero-copy codec
+//!
+//! Serialization never assembles a message into a fresh `Vec`. An
+//! [`Emit`] writes the small *meta* bytes (tags, counts, ids, losses,
+//! literal bits) into a caller-recycled scratch buffer and records a
+//! *cut* wherever a payload-sized blob (an encoded [`WireSlice`])
+//! belongs; [`WireCuts::write`] then ships header, meta segments, and
+//! borrowed blobs with one vectored write — the multi-megabyte sync
+//! payloads go from encoder arena to socket without ever being copied
+//! into a message buffer. Literal elements are read by borrow
+//! (`Literal::as_slice`), killing the old `to_vec::<f32>` staging
+//! allocation. The receive side parses straight out of one pooled
+//! frame buffer: every encoded payload comes back as a [`WireSlice`]
+//! sub-range of that buffer, so a 4-replica report is one read and
+//! zero per-replica copies.
+//!
+//! The retired copying serializer is kept verbatim in the in-test
+//! [`retired`] module as the byte oracle: the wire format is
+//! unchanged, and the property tests pin the two byte-identical
+//! across the codec's corner cases.
 
+use std::io::Write;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::frame::{MsgKind, MAX_PAYLOAD};
+use super::frame::{
+    header_bytes, write_all_vectored, FrameHeader, MsgKind, WireBuf, WireSlice, HEADER_LEN,
+    MAX_PAYLOAD,
+};
 
 /// Literal adopt list: (leaf index, shared literal) pairs every replica
 /// applies before its next inner step.
@@ -28,12 +53,20 @@ pub enum Broadcast {
     /// literal handoff — zero-copy, one upload per leaf run-wide.
     Literals(Adopt),
     /// Lossy down-wire: the fragment's single encoded payload, one
-    /// allocation `Arc`-shared by every worker; each decodes it into
-    /// its shared snapshot.
+    /// buffer `Arc`-shared by every worker; each decodes it into its
+    /// shared snapshot.
     Encoded {
         frag: Option<usize>,
-        bytes: Arc<Vec<u8>>,
+        bytes: WireSlice,
     },
+    /// Lossy down-wire, streamed ahead of this command: the payload
+    /// already went out as its own `Bcast` frame (flushed shard by
+    /// shard, overlapping encode with the socket) and the worker
+    /// stashed it; this marker tells it which fragment to resolve.
+    /// Never crosses the in-process lane — streaming is a socket
+    /// optimization, and the oracle path must stay byte-for-byte the
+    /// pre-streaming pipeline.
+    Pending { frag: Option<usize> },
 }
 
 impl Broadcast {
@@ -71,8 +104,10 @@ pub enum SyncPayload {
     /// literal handles.
     Params(Vec<Arc<xla::Literal>>),
     /// DiLoCo lossy up-wire: the encoded contribution for the due
-    /// fragment.
-    Encoded(Vec<u8>),
+    /// fragment, as a view of a recycled wire buffer (on the receive
+    /// side, of the report's single frame buffer — many replicas, one
+    /// buffer, zero copies).
+    Encoded(WireSlice),
     /// The boundary asked for nothing ([`PayloadSpec::None`]) —
     /// consuming this anywhere is a coordinator bug and fails loud.
     Skipped,
@@ -115,12 +150,13 @@ pub enum Cmd {
         payload: PayloadSpec,
         churn: SegmentChurn,
     },
-    /// Spent wire payload buffers from a completed reduce, returned
-    /// for this worker's encode pool. No reply — the worker absorbs
-    /// them between segments. Never serialized: shipping empty
-    /// buffers across a socket to save the far side an allocation
-    /// would cost more than it saves, so the TCP lane drops these.
-    Spares(Vec<Vec<u8>>),
+    /// Spent wire buffers from a completed reduce, returned for this
+    /// worker's encode pool. No reply — the worker absorbs them
+    /// between segments. Never serialized: shipping empty buffers
+    /// across a socket to save the far side an allocation would cost
+    /// more than it saves, so socket transports recycle locally
+    /// instead of sending these.
+    Spares(Vec<WireBuf>),
     /// Apply the final broadcast and exit, returning replica ownership.
     Finish { broadcast: Broadcast },
 }
@@ -137,60 +173,268 @@ pub struct WorkerReport {
 // load-bearing). Containers are u32-counted — MAX_PAYLOAD bounds any
 // single frame long before u32 does.
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
-    out.extend_from_slice(&v.to_le_bytes());
+/// The zero-copy emitter: meta bytes append to a recycled scratch,
+/// payload blobs are recorded as cuts (scratch offset + borrowed
+/// slice) to be interleaved at write time.
+struct Emit<'m, 's> {
+    meta: &'s mut Vec<u8>,
+    cuts: Vec<(usize, &'m [u8])>,
 }
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
+impl<'m> Emit<'m, '_> {
+    fn u8(&mut self, v: u8) {
+        self.meta.push(v);
+    }
 
-fn put_usize(out: &mut Vec<u8>, v: usize) -> Result<()> {
-    let v = u32::try_from(v).map_err(|_| anyhow!("msg: count {v} exceeds u32"))?;
-    put_u32(out, v);
-    Ok(())
-}
+    fn u32(&mut self, v: u32) {
+        self.meta.extend_from_slice(&v.to_le_bytes());
+    }
 
-fn put_bytes(out: &mut Vec<u8>, b: &[u8]) -> Result<()> {
-    put_usize(out, b.len())?;
-    out.extend_from_slice(b);
-    Ok(())
-}
+    fn u64(&mut self, v: u64) {
+        self.meta.extend_from_slice(&v.to_le_bytes());
+    }
 
-fn put_opt_frag(out: &mut Vec<u8>, frag: Option<usize>) -> Result<()> {
-    match frag {
-        Some(f) => {
-            out.push(1);
-            put_usize(out, f)?;
+    fn count(&mut self, v: usize) -> Result<()> {
+        let v = u32::try_from(v).map_err(|_| anyhow!("msg: count {v} exceeds u32"))?;
+        self.u32(v);
+        Ok(())
+    }
+
+    /// Length-prefixed bytes, copied into the meta scratch — for small
+    /// fields only; payload-sized data must use [`Emit::blob`].
+    fn bytes(&mut self, b: &[u8]) -> Result<()> {
+        self.count(b.len())?;
+        self.meta.extend_from_slice(b);
+        Ok(())
+    }
+
+    /// Length-prefixed bytes, **borrowed**: the prefix goes into the
+    /// meta scratch, the blob itself is stitched in at write time —
+    /// zero copies between the encoder's buffer and the socket.
+    fn blob(&mut self, b: &'m [u8]) -> Result<()> {
+        self.count(b.len())?;
+        self.cuts.push((self.meta.len(), b));
+        Ok(())
+    }
+
+    fn opt_frag(&mut self, frag: Option<usize>) -> Result<()> {
+        match frag {
+            Some(f) => {
+                self.u8(1);
+                self.count(f)?;
+            }
+            None => self.u8(0),
         }
-        None => out.push(0),
+        Ok(())
     }
-    Ok(())
+
+    /// Literal bits straight off the borrowed element buffer — no
+    /// `to_vec` staging allocation.
+    fn literal(&mut self, lit: &xla::Literal) -> Result<()> {
+        let shape = lit.array_shape()?;
+        let dims = shape.dims();
+        self.count(dims.len())?;
+        for &d in dims {
+            self.u64(u64::try_from(d).map_err(|_| anyhow!("msg: negative dim {d}"))?);
+        }
+        let data: &[f32] = lit.as_slice()?;
+        self.count(data.len())?;
+        self.meta.reserve(data.len() * 4);
+        for v in data {
+            self.meta.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        Ok(())
+    }
+
+    fn adopt(&mut self, list: &Adopt) -> Result<()> {
+        self.count(list.len())?;
+        for (leaf, lit) in list {
+            self.count(*leaf)?;
+            self.literal(lit)?;
+        }
+        Ok(())
+    }
+
+    fn broadcast(&mut self, b: &'m Broadcast) -> Result<()> {
+        match b {
+            Broadcast::Literals(list) => {
+                self.u8(0);
+                self.adopt(list)
+            }
+            Broadcast::Encoded { frag, bytes } => {
+                self.u8(1);
+                self.opt_frag(*frag)?;
+                self.blob(bytes.as_slice())
+            }
+            Broadcast::Pending { frag } => {
+                self.u8(2);
+                self.opt_frag(*frag)
+            }
+        }
+    }
+
+    fn payload_spec(&mut self, p: &PayloadSpec) -> Result<()> {
+        match p {
+            PayloadSpec::None => self.u8(0),
+            PayloadSpec::Params => self.u8(1),
+            PayloadSpec::Encoded(spec) => {
+                self.u8(2);
+                self.opt_frag(spec.frag)?;
+                self.u64(spec.sync_index);
+            }
+        }
+        Ok(())
+    }
+
+    fn churn(&mut self, c: &SegmentChurn) -> Result<()> {
+        self.count(c.deaths.len())?;
+        for &d in &c.deaths {
+            self.count(d)?;
+        }
+        self.count(c.joins.len())?;
+        for &j in &c.joins {
+            self.count(j)?;
+        }
+        self.adopt(&c.join_view)
+    }
+
+    fn sync_payload(&mut self, p: &'m SyncPayload) -> Result<()> {
+        match p {
+            SyncPayload::Params(lits) => {
+                self.u8(0);
+                self.count(lits.len())?;
+                for lit in lits {
+                    self.literal(lit)?;
+                }
+                Ok(())
+            }
+            SyncPayload::Encoded(bytes) => {
+                self.u8(1);
+                self.blob(bytes.as_slice())
+            }
+            SyncPayload::Skipped => {
+                self.u8(2);
+                Ok(())
+            }
+        }
+    }
 }
 
-fn put_literal(out: &mut Vec<u8>, lit: &xla::Literal) -> Result<()> {
-    let shape = lit.array_shape()?;
-    let dims = shape.dims();
-    put_usize(out, dims.len())?;
-    for &d in dims {
-        put_u64(out, u64::try_from(d).map_err(|_| anyhow!("msg: negative dim {d}"))?);
-    }
-    let data = lit.to_vec::<f32>()?;
-    put_usize(out, data.len())?;
-    out.reserve(data.len() * 4);
-    for v in data {
-        out.extend_from_slice(&v.to_bits().to_le_bytes());
-    }
-    Ok(())
+/// A serialized message body: the blob cut list over a meta scratch
+/// the caller recycles. Ship it with [`WireCuts::write`] — one
+/// vectored write of header + meta segments + borrowed blobs.
+pub struct WireCuts<'m> {
+    cuts: Vec<(usize, &'m [u8])>,
+    blob_len: usize,
 }
 
-fn put_adopt(out: &mut Vec<u8>, list: &Adopt) -> Result<()> {
-    put_usize(out, list.len())?;
-    for (leaf, lit) in list {
-        put_usize(out, *leaf)?;
-        put_literal(out, lit)?;
+impl WireCuts<'_> {
+    /// Payload length this body frames to (meta + blobs).
+    pub fn payload_len(&self, meta: &[u8]) -> usize {
+        meta.len() + self.blob_len
     }
-    Ok(())
+
+    /// The payload as its ordered borrowed segments — meta runs
+    /// interleaved with blobs, exactly what a vectored write ships
+    /// after the header. The lane reactor consumes this form so it can
+    /// resume a nonblocking write mid-message.
+    pub fn parts<'a>(&'a self, meta: &'a [u8]) -> Vec<&'a [u8]> {
+        let mut parts: Vec<&[u8]> = Vec::with_capacity(self.cuts.len() * 2 + 1);
+        let mut prev = 0usize;
+        for (off, blob) in &self.cuts {
+            parts.push(&meta[prev..*off]);
+            parts.push(blob);
+            prev = *off;
+        }
+        parts.push(&meta[prev..]);
+        parts
+    }
+
+    /// Write the complete frame — header stamped from `h` with this
+    /// body's payload length — as one vectored write. Returns the
+    /// framed byte count (header included).
+    pub fn write(&self, w: &mut impl Write, h: &FrameHeader, meta: &[u8]) -> Result<u64> {
+        let payload_len = self.payload_len(meta);
+        let hdr = header_bytes(h, payload_len)?;
+        let mut parts: Vec<&[u8]> = Vec::with_capacity(self.cuts.len() * 2 + 2);
+        parts.push(&hdr);
+        parts.extend(self.parts(meta));
+        write_all_vectored(w, &parts)?;
+        Ok((HEADER_LEN + payload_len) as u64)
+    }
+
+    /// The assembled payload as one contiguous vector — test/oracle
+    /// use only (the hot path never materializes this).
+    pub fn to_bytes(&self, meta: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.payload_len(meta));
+        for part in self.parts(meta) {
+            out.extend_from_slice(part);
+        }
+        out
+    }
+}
+
+/// Serialize a command: meta into the recycled `scratch` (cleared
+/// here), blobs borrowed from `cmd`. Returns the frame kind it travels
+/// under and the cut list. `Spares` is deliberately unencodable (see
+/// [`Cmd::Spares`]).
+pub fn cmd_wire<'m>(cmd: &'m Cmd, scratch: &mut Vec<u8>) -> Result<(MsgKind, WireCuts<'m>)> {
+    scratch.clear();
+    let mut e = Emit {
+        meta: scratch,
+        cuts: Vec::new(),
+    };
+    let kind = match cmd {
+        Cmd::Run {
+            from,
+            to,
+            broadcast,
+            payload,
+            churn,
+        } => {
+            e.u64(*from as u64);
+            e.u64(*to as u64);
+            e.broadcast(broadcast)?;
+            e.payload_spec(payload)?;
+            e.churn(churn)?;
+            MsgKind::Run
+        }
+        Cmd::Finish { broadcast } => {
+            e.broadcast(broadcast)?;
+            MsgKind::Finish
+        }
+        Cmd::Spares(_) => bail!("msg: Spares never crosses a serialized transport"),
+    };
+    Ok((
+        kind,
+        WireCuts {
+            blob_len: e.cuts.iter().map(|(_, b)| b.len()).sum(),
+            cuts: e.cuts,
+        },
+    ))
+}
+
+/// Serialize a worker report (meta into recycled `scratch`, encoded
+/// sync payloads as borrowed blobs).
+pub fn report_wire<'m>(report: &'m WorkerReport, scratch: &mut Vec<u8>) -> Result<WireCuts<'m>> {
+    scratch.clear();
+    let mut e = Emit {
+        meta: scratch,
+        cuts: Vec::new(),
+    };
+    e.count(report.reps.len())?;
+    for (rid, losses, payload) in &report.reps {
+        e.count(*rid)?;
+        e.count(losses.len())?;
+        for &l in losses {
+            e.u64(l.to_bits());
+        }
+        e.sync_payload(payload)?;
+    }
+    Ok(WireCuts {
+        blob_len: e.cuts.iter().map(|(_, b)| b.len()).sum(),
+        cuts: e.cuts,
+    })
 }
 
 /// Bounds-checked little-endian reader: every truncation is a clean
@@ -252,6 +496,17 @@ impl<'a> Rd<'a> {
         Ok(self.take(n)?.to_vec())
     }
 
+    /// Length-prefixed bytes as a zero-copy view of the frame buffer
+    /// this reader walks. `src` must be the very buffer the reader was
+    /// built over (`Rd::new(src.payload())`), so reader offsets are
+    /// payload offsets.
+    fn blob(&mut self, src: &Arc<WireBuf>) -> Result<WireSlice> {
+        let n = self.count()?;
+        let start = self.at;
+        self.take(n)?;
+        Ok(WireSlice::part(Arc::clone(src), start..start + n))
+    }
+
     fn opt_frag(&mut self) -> Result<Option<usize>> {
         Ok(match self.u8()? {
             0 => None,
@@ -294,42 +549,18 @@ impl<'a> Rd<'a> {
     }
 }
 
-fn put_broadcast(out: &mut Vec<u8>, b: &Broadcast) -> Result<()> {
-    match b {
-        Broadcast::Literals(list) => {
-            out.push(0);
-            put_adopt(out, list)
-        }
-        Broadcast::Encoded { frag, bytes } => {
-            out.push(1);
-            put_opt_frag(out, *frag)?;
-            put_bytes(out, bytes)
-        }
-    }
-}
-
-fn read_broadcast(rd: &mut Rd) -> Result<Broadcast> {
+fn read_broadcast(rd: &mut Rd, src: &Arc<WireBuf>) -> Result<Broadcast> {
     Ok(match rd.u8()? {
         0 => Broadcast::Literals(rd.adopt()?),
         1 => Broadcast::Encoded {
             frag: rd.opt_frag()?,
-            bytes: Arc::new(rd.bytes()?),
+            bytes: rd.blob(src)?,
+        },
+        2 => Broadcast::Pending {
+            frag: rd.opt_frag()?,
         },
         t => bail!("msg: unknown broadcast tag {t}"),
     })
-}
-
-fn put_payload_spec(out: &mut Vec<u8>, p: &PayloadSpec) -> Result<()> {
-    match p {
-        PayloadSpec::None => out.push(0),
-        PayloadSpec::Params => out.push(1),
-        PayloadSpec::Encoded(spec) => {
-            out.push(2);
-            put_opt_frag(out, spec.frag)?;
-            put_u64(out, spec.sync_index);
-        }
-    }
-    Ok(())
 }
 
 fn read_payload_spec(rd: &mut Rd) -> Result<PayloadSpec> {
@@ -342,18 +573,6 @@ fn read_payload_spec(rd: &mut Rd) -> Result<PayloadSpec> {
         }),
         t => bail!("msg: unknown payload-spec tag {t}"),
     })
-}
-
-fn put_churn(out: &mut Vec<u8>, c: &SegmentChurn) -> Result<()> {
-    put_usize(out, c.deaths.len())?;
-    for &d in &c.deaths {
-        put_usize(out, d)?;
-    }
-    put_usize(out, c.joins.len())?;
-    for &j in &c.joins {
-        put_usize(out, j)?;
-    }
-    put_adopt(out, &c.join_view)
 }
 
 fn read_churn(rd: &mut Rd) -> Result<SegmentChurn> {
@@ -374,25 +593,7 @@ fn read_churn(rd: &mut Rd) -> Result<SegmentChurn> {
     })
 }
 
-fn put_sync_payload(out: &mut Vec<u8>, p: &SyncPayload) -> Result<()> {
-    match p {
-        SyncPayload::Params(lits) => {
-            out.push(0);
-            put_usize(out, lits.len())?;
-            for lit in lits {
-                put_literal(out, lit)?;
-            }
-        }
-        SyncPayload::Encoded(bytes) => {
-            out.push(1);
-            put_bytes(out, bytes)?;
-        }
-        SyncPayload::Skipped => out.push(2),
-    }
-    Ok(())
-}
-
-fn read_sync_payload(rd: &mut Rd) -> Result<SyncPayload> {
+fn read_sync_payload(rd: &mut Rd, src: &Arc<WireBuf>) -> Result<SyncPayload> {
     Ok(match rd.u8()? {
         0 => {
             let n = rd.count()?;
@@ -402,46 +603,21 @@ fn read_sync_payload(rd: &mut Rd) -> Result<SyncPayload> {
             }
             SyncPayload::Params(lits)
         }
-        1 => SyncPayload::Encoded(rd.bytes()?),
+        1 => SyncPayload::Encoded(rd.blob(src)?),
         2 => SyncPayload::Skipped,
         t => bail!("msg: unknown sync-payload tag {t}"),
     })
 }
 
-/// Serialize a command into `out`; returns the frame kind it travels
-/// under. `Spares` is deliberately unencodable (see [`Cmd::Spares`]).
-pub fn cmd_payload(cmd: &Cmd, out: &mut Vec<u8>) -> Result<MsgKind> {
-    match cmd {
-        Cmd::Run {
-            from,
-            to,
-            broadcast,
-            payload,
-            churn,
-        } => {
-            put_u64(out, *from as u64);
-            put_u64(out, *to as u64);
-            put_broadcast(out, broadcast)?;
-            put_payload_spec(out, payload)?;
-            put_churn(out, churn)?;
-            Ok(MsgKind::Run)
-        }
-        Cmd::Finish { broadcast } => {
-            put_broadcast(out, broadcast)?;
-            Ok(MsgKind::Finish)
-        }
-        Cmd::Spares(_) => bail!("msg: Spares never crosses a serialized transport"),
-    }
-}
-
-/// Deserialize a command from a received frame.
-pub fn cmd_from_frame(kind: MsgKind, payload: &[u8]) -> Result<Cmd> {
-    let mut rd = Rd::new(payload);
+/// Deserialize a command straight out of a received frame buffer.
+/// Encoded broadcast bytes come back as a zero-copy view of `buf`.
+pub fn cmd_from_wire(kind: MsgKind, buf: &Arc<WireBuf>) -> Result<Cmd> {
+    let mut rd = Rd::new(buf.payload());
     let cmd = match kind {
         MsgKind::Run => {
             let from = rd.u64()? as usize;
             let to = rd.u64()? as usize;
-            let broadcast = read_broadcast(&mut rd)?;
+            let broadcast = read_broadcast(&mut rd, buf)?;
             let payload = read_payload_spec(&mut rd)?;
             let churn = read_churn(&mut rd)?;
             Cmd::Run {
@@ -453,7 +629,7 @@ pub fn cmd_from_frame(kind: MsgKind, payload: &[u8]) -> Result<Cmd> {
             }
         }
         MsgKind::Finish => Cmd::Finish {
-            broadcast: read_broadcast(&mut rd)?,
+            broadcast: read_broadcast(&mut rd, buf)?,
         },
         other => bail!("msg: frame kind {other:?} is not a command"),
     };
@@ -461,23 +637,11 @@ pub fn cmd_from_frame(kind: MsgKind, payload: &[u8]) -> Result<Cmd> {
     Ok(cmd)
 }
 
-/// Serialize a worker report.
-pub fn report_payload(report: &WorkerReport, out: &mut Vec<u8>) -> Result<()> {
-    put_usize(out, report.reps.len())?;
-    for (rid, losses, payload) in &report.reps {
-        put_usize(out, *rid)?;
-        put_usize(out, losses.len())?;
-        for &l in losses {
-            put_u64(out, l.to_bits());
-        }
-        put_sync_payload(out, payload)?;
-    }
-    Ok(())
-}
-
-/// Deserialize a worker report.
-pub fn report_from_payload(payload: &[u8]) -> Result<WorkerReport> {
-    let mut rd = Rd::new(payload);
+/// Deserialize a worker report straight out of a received frame
+/// buffer: every replica's encoded payload is a sub-range view of the
+/// one buffer — one socket read, zero per-replica copies.
+pub fn report_from_wire(buf: &Arc<WireBuf>) -> Result<WorkerReport> {
+    let mut rd = Rd::new(buf.payload());
     let n = rd.count()?;
     let mut reps = Vec::with_capacity(n);
     for _ in 0..n {
@@ -487,17 +651,33 @@ pub fn report_from_payload(payload: &[u8]) -> Result<WorkerReport> {
         for _ in 0..nl {
             losses.push(f64::from_bits(rd.u64()?));
         }
-        reps.push((rid, losses, read_sync_payload(&mut rd)?));
+        reps.push((rid, losses, read_sync_payload(&mut rd, buf)?));
     }
     rd.done()?;
     Ok(WorkerReport { reps })
 }
 
+/// Compat/test parser over a bare byte slice (copies it into a fresh
+/// frame buffer first — the hot path uses [`cmd_from_wire`]).
+pub fn cmd_from_frame(kind: MsgKind, payload: &[u8]) -> Result<Cmd> {
+    cmd_from_wire(kind, &Arc::new(WireBuf::from_payload(payload)))
+}
+
+/// Compat/test parser over a bare byte slice (see [`cmd_from_frame`]).
+pub fn report_from_payload(payload: &[u8]) -> Result<WorkerReport> {
+    report_from_wire(&Arc::new(WireBuf::from_payload(payload)))
+}
+
 /// Handshake Hello payload: the replica ids this worker claims.
+/// (Handshakes run once per connection — plain copying serialization.)
 pub fn hello_payload(claims: &[usize], out: &mut Vec<u8>) -> Result<()> {
-    put_usize(out, claims.len())?;
+    let mut e = Emit {
+        meta: out,
+        cuts: Vec::new(),
+    };
+    e.count(claims.len())?;
     for &r in claims {
-        put_usize(out, r)?;
+        e.count(r)?;
     }
     Ok(())
 }
@@ -522,10 +702,16 @@ pub fn welcome_payload(
     config_json: &str,
     out: &mut Vec<u8>,
 ) -> Result<()> {
-    out.push(engine);
-    put_usize(out, live.len())?;
-    out.extend(live.iter().map(|&l| l as u8));
-    put_bytes(out, config_json.as_bytes())
+    let mut e = Emit {
+        meta: out,
+        cuts: Vec::new(),
+    };
+    e.u8(engine);
+    e.count(live.len())?;
+    for &l in live {
+        e.u8(l as u8);
+    }
+    e.bytes(config_json.as_bytes())
 }
 
 pub fn welcome_from_payload(payload: &[u8]) -> Result<(u8, Vec<bool>, String)> {
@@ -539,12 +725,194 @@ pub fn welcome_from_payload(payload: &[u8]) -> Result<(u8, Vec<bool>, String)> {
     Ok((engine, live, config))
 }
 
+/// The retired copying serializer, kept verbatim as the wire-format
+/// oracle: it assembles each message into one contiguous `Vec` with
+/// per-literal `to_vec` staging — exactly what shipped before the
+/// zero-copy codec. The property tests pin the zero-copy output
+/// byte-identical to this, so any accidental format drift fails loud.
+#[cfg(test)]
+pub(crate) mod retired {
+    use super::*;
+
+    fn put_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_usize(out: &mut Vec<u8>, v: usize) -> Result<()> {
+        let v = u32::try_from(v).map_err(|_| anyhow!("msg: count {v} exceeds u32"))?;
+        put_u32(out, v);
+        Ok(())
+    }
+
+    fn put_bytes(out: &mut Vec<u8>, b: &[u8]) -> Result<()> {
+        put_usize(out, b.len())?;
+        out.extend_from_slice(b);
+        Ok(())
+    }
+
+    fn put_opt_frag(out: &mut Vec<u8>, frag: Option<usize>) -> Result<()> {
+        match frag {
+            Some(f) => {
+                out.push(1);
+                put_usize(out, f)?;
+            }
+            None => out.push(0),
+        }
+        Ok(())
+    }
+
+    fn put_literal(out: &mut Vec<u8>, lit: &xla::Literal) -> Result<()> {
+        let shape = lit.array_shape()?;
+        let dims = shape.dims();
+        put_usize(out, dims.len())?;
+        for &d in dims {
+            put_u64(
+                out,
+                u64::try_from(d).map_err(|_| anyhow!("msg: negative dim {d}"))?,
+            );
+        }
+        let data = lit.to_vec::<f32>()?;
+        put_usize(out, data.len())?;
+        out.reserve(data.len() * 4);
+        for v in data {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        Ok(())
+    }
+
+    fn put_adopt(out: &mut Vec<u8>, list: &Adopt) -> Result<()> {
+        put_usize(out, list.len())?;
+        for (leaf, lit) in list {
+            put_usize(out, *leaf)?;
+            put_literal(out, lit)?;
+        }
+        Ok(())
+    }
+
+    fn put_broadcast(out: &mut Vec<u8>, b: &Broadcast) -> Result<()> {
+        match b {
+            Broadcast::Literals(list) => {
+                out.push(0);
+                put_adopt(out, list)
+            }
+            Broadcast::Encoded { frag, bytes } => {
+                out.push(1);
+                put_opt_frag(out, *frag)?;
+                put_bytes(out, bytes.as_slice())
+            }
+            Broadcast::Pending { frag } => {
+                out.push(2);
+                put_opt_frag(out, *frag)
+            }
+        }
+    }
+
+    fn put_payload_spec(out: &mut Vec<u8>, p: &PayloadSpec) -> Result<()> {
+        match p {
+            PayloadSpec::None => out.push(0),
+            PayloadSpec::Params => out.push(1),
+            PayloadSpec::Encoded(spec) => {
+                out.push(2);
+                put_opt_frag(out, spec.frag)?;
+                put_u64(out, spec.sync_index);
+            }
+        }
+        Ok(())
+    }
+
+    fn put_churn(out: &mut Vec<u8>, c: &SegmentChurn) -> Result<()> {
+        put_usize(out, c.deaths.len())?;
+        for &d in &c.deaths {
+            put_usize(out, d)?;
+        }
+        put_usize(out, c.joins.len())?;
+        for &j in &c.joins {
+            put_usize(out, j)?;
+        }
+        put_adopt(out, &c.join_view)
+    }
+
+    fn put_sync_payload(out: &mut Vec<u8>, p: &SyncPayload) -> Result<()> {
+        match p {
+            SyncPayload::Params(lits) => {
+                out.push(0);
+                put_usize(out, lits.len())?;
+                for lit in lits {
+                    put_literal(out, lit)?;
+                }
+            }
+            SyncPayload::Encoded(bytes) => {
+                out.push(1);
+                put_bytes(out, bytes.as_slice())?;
+            }
+            SyncPayload::Skipped => out.push(2),
+        }
+        Ok(())
+    }
+
+    /// Serialize a command into `out`; returns the frame kind it
+    /// travels under.
+    pub fn cmd_payload(cmd: &Cmd, out: &mut Vec<u8>) -> Result<MsgKind> {
+        match cmd {
+            Cmd::Run {
+                from,
+                to,
+                broadcast,
+                payload,
+                churn,
+            } => {
+                put_u64(out, *from as u64);
+                put_u64(out, *to as u64);
+                put_broadcast(out, broadcast)?;
+                put_payload_spec(out, payload)?;
+                put_churn(out, churn)?;
+                Ok(MsgKind::Run)
+            }
+            Cmd::Finish { broadcast } => {
+                put_broadcast(out, broadcast)?;
+                Ok(MsgKind::Finish)
+            }
+            Cmd::Spares(_) => bail!("msg: Spares never crosses a serialized transport"),
+        }
+    }
+
+    /// Serialize a worker report.
+    pub fn report_payload(report: &WorkerReport, out: &mut Vec<u8>) -> Result<()> {
+        put_usize(out, report.reps.len())?;
+        for (rid, losses, payload) in &report.reps {
+            put_usize(out, *rid)?;
+            put_usize(out, losses.len())?;
+            for &l in losses {
+                put_u64(out, l.to_bits());
+            }
+            put_sync_payload(out, payload)?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn lit(shape: &[i64], vals: &[f32]) -> Arc<xla::Literal> {
         Arc::new(xla::Literal::vec1(vals).reshape(shape).unwrap())
+    }
+
+    fn cmd_bytes(cmd: &Cmd) -> (MsgKind, Vec<u8>) {
+        let mut scratch = Vec::new();
+        let (kind, cuts) = cmd_wire(cmd, &mut scratch).unwrap();
+        (kind, cuts.to_bytes(&scratch))
+    }
+
+    fn report_bytes(report: &WorkerReport) -> Vec<u8> {
+        let mut scratch = Vec::new();
+        let cuts = report_wire(report, &mut scratch).unwrap();
+        cuts.to_bytes(&scratch)
     }
 
     #[test]
@@ -566,8 +934,7 @@ mod tests {
                 join_view: vec![(0, lit(&[1], &[7.0]))],
             },
         };
-        let mut buf = Vec::new();
-        let kind = cmd_payload(&cmd, &mut buf).unwrap();
+        let (kind, buf) = cmd_bytes(&cmd);
         assert_eq!(kind, MsgKind::Run);
         let back = cmd_from_frame(kind, &buf).unwrap();
         let Cmd::Run {
@@ -609,11 +976,10 @@ mod tests {
         let cmd = Cmd::Finish {
             broadcast: Broadcast::Encoded {
                 frag: None,
-                bytes: Arc::new(vec![1, 2, 3, 255]),
+                bytes: WireSlice::copied_from(&[1, 2, 3, 255]),
             },
         };
-        let mut buf = Vec::new();
-        let kind = cmd_payload(&cmd, &mut buf).unwrap();
+        let (kind, buf) = cmd_bytes(&cmd);
         assert_eq!(kind, MsgKind::Finish);
         let Cmd::Finish {
             broadcast: Broadcast::Encoded { frag, bytes },
@@ -622,25 +988,50 @@ mod tests {
             panic!("wrong shape back");
         };
         assert_eq!(frag, None);
-        assert_eq!(&bytes[..], &[1, 2, 3, 255]);
+        assert_eq!(bytes.as_slice(), &[1, 2, 3, 255]);
+    }
+
+    #[test]
+    fn pending_broadcast_roundtrips() {
+        let cmd = Cmd::Run {
+            from: 0,
+            to: 4,
+            broadcast: Broadcast::Pending { frag: Some(7) },
+            payload: PayloadSpec::None,
+            churn: SegmentChurn::default(),
+        };
+        let (kind, buf) = cmd_bytes(&cmd);
+        let Cmd::Run {
+            broadcast: Broadcast::Pending { frag },
+            ..
+        } = cmd_from_frame(kind, &buf).unwrap()
+        else {
+            panic!("wrong shape back");
+        };
+        assert_eq!(frag, Some(7));
     }
 
     #[test]
     fn spares_never_serialize() {
-        assert!(cmd_payload(&Cmd::Spares(vec![vec![0u8; 4]]), &mut Vec::new()).is_err());
+        let cmd = Cmd::Spares(vec![WireBuf::new()]);
+        assert!(cmd_wire(&cmd, &mut Vec::new()).is_err());
+        assert!(retired::cmd_payload(&cmd, &mut Vec::new()).is_err());
     }
 
     #[test]
     fn report_roundtrips_losses_bit_exact() {
         let report = WorkerReport {
             reps: vec![
-                (0, vec![1.0625, -2.5, f64::EPSILON], SyncPayload::Encoded(vec![9, 8, 7])),
+                (
+                    0,
+                    vec![1.0625, -2.5, f64::EPSILON],
+                    SyncPayload::Encoded(WireSlice::copied_from(&[9, 8, 7])),
+                ),
                 (2, Vec::new(), SyncPayload::Skipped),
                 (4, vec![0.0], SyncPayload::Params(vec![lit(&[2], &[1.0, 2.0])])),
             ],
         };
-        let mut buf = Vec::new();
-        report_payload(&report, &mut buf).unwrap();
+        let buf = report_bytes(&report);
         let back = report_from_payload(&buf).unwrap();
         assert_eq!(back.reps.len(), 3);
         assert_eq!(back.reps[0].0, 0);
@@ -648,6 +1039,10 @@ mod tests {
             back.reps[0].1.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
             report.reps[0].1.iter().map(|l| l.to_bits()).collect::<Vec<_>>()
         );
+        let SyncPayload::Encoded(bytes) = &back.reps[0].2 else {
+            panic!("wrong payload kind");
+        };
+        assert_eq!(bytes.as_slice(), &[9, 8, 7]);
         assert!(matches!(back.reps[1].2, SyncPayload::Skipped));
         let SyncPayload::Params(lits) = &back.reps[2].2 else {
             panic!("wrong payload kind");
@@ -656,15 +1051,41 @@ mod tests {
     }
 
     #[test]
+    fn report_payloads_share_the_frame_buffer() {
+        // the receive-side zero-copy invariant: every replica's
+        // encoded payload is a view of the ONE received frame buffer
+        let report = WorkerReport {
+            reps: vec![
+                (0, vec![1.0], SyncPayload::Encoded(WireSlice::copied_from(&[1, 2, 3, 4]))),
+                (1, vec![2.0], SyncPayload::Encoded(WireSlice::copied_from(&[5, 6]))),
+            ],
+        };
+        let frame = Arc::new(WireBuf::from_payload(&report_bytes(&report)));
+        let back = report_from_wire(&frame).unwrap();
+        for (i, (_, _, p)) in back.reps.iter().enumerate() {
+            let SyncPayload::Encoded(ws) = p else {
+                panic!("wrong payload kind");
+            };
+            assert!(
+                Arc::ptr_eq(ws.buf(), &frame),
+                "replica {i} payload must view the frame buffer"
+            );
+        }
+        let SyncPayload::Encoded(a) = &back.reps[0].2 else { unreachable!() };
+        let SyncPayload::Encoded(b) = &back.reps[1].2 else { unreachable!() };
+        assert_eq!(a.as_slice(), &[1, 2, 3, 4]);
+        assert_eq!(b.as_slice(), &[5, 6]);
+    }
+
+    #[test]
     fn truncated_messages_reject_cleanly() {
-        let mut buf = Vec::new();
-        report_payload(
-            &WorkerReport {
-                reps: vec![(1, vec![3.5, 4.5], SyncPayload::Encoded(vec![1, 2, 3]))],
-            },
-            &mut buf,
-        )
-        .unwrap();
+        let buf = report_bytes(&WorkerReport {
+            reps: vec![(
+                1,
+                vec![3.5, 4.5],
+                SyncPayload::Encoded(WireSlice::copied_from(&[1, 2, 3])),
+            )],
+        });
         for cut in 0..buf.len() {
             assert!(
                 report_from_payload(&buf[..cut]).is_err(),
@@ -672,6 +1093,7 @@ mod tests {
             );
         }
         // trailing garbage rejects too
+        let mut buf = buf;
         buf.push(0);
         assert!(report_from_payload(&buf).is_err());
     }
@@ -688,5 +1110,144 @@ mod tests {
         assert_eq!(engine, 1);
         assert_eq!(live, vec![true, false, true]);
         assert_eq!(cfg, "{\"seed\":17}");
+    }
+
+    // ---- zero-copy vs retired-oracle property pins -------------------
+
+    fn assert_cmd_matches_oracle(cmd: &Cmd, label: &str) {
+        let (kind, zero_copy) = cmd_bytes(cmd);
+        let mut oracle = Vec::new();
+        let oracle_kind = retired::cmd_payload(cmd, &mut oracle).unwrap();
+        assert_eq!(kind, oracle_kind, "{label}: kind");
+        assert_eq!(zero_copy, oracle, "{label}: bytes");
+    }
+
+    fn assert_report_matches_oracle(report: &WorkerReport, label: &str) {
+        let zero_copy = report_bytes(report);
+        let mut oracle = Vec::new();
+        retired::report_payload(report, &mut oracle).unwrap();
+        assert_eq!(zero_copy, oracle, "{label}: bytes");
+    }
+
+    #[test]
+    fn zero_copy_cmds_match_the_retired_oracle() {
+        // empty-literal corner: zero elements, zero dims, rank-2 empty
+        assert_cmd_matches_oracle(
+            &Cmd::Run {
+                from: 0,
+                to: 1,
+                broadcast: Broadcast::Literals(vec![
+                    (0, lit(&[0], &[])),
+                    (1, lit(&[2, 0], &[])),
+                    (5, Arc::new(xla::Literal::vec1::<f32>(&[]))),
+                ]),
+                payload: PayloadSpec::Params,
+                churn: SegmentChurn::default(),
+            },
+            "empty literals",
+        );
+        // empty-blob corner: a zero-length encoded broadcast
+        assert_cmd_matches_oracle(
+            &Cmd::Run {
+                from: 7,
+                to: 13,
+                broadcast: Broadcast::Encoded {
+                    frag: Some(0),
+                    bytes: WireSlice::copied_from(&[]),
+                },
+                payload: PayloadSpec::Encoded(EncodeSpec {
+                    frag: Some(0),
+                    sync_index: u64::MAX,
+                }),
+                churn: SegmentChurn::default(),
+            },
+            "empty encoded broadcast",
+        );
+        // max-claim churn corner: every replica dying and joining at
+        // once, with a multi-leaf join view
+        assert_cmd_matches_oracle(
+            &Cmd::Run {
+                from: 100,
+                to: 106,
+                broadcast: Broadcast::Encoded {
+                    frag: None,
+                    bytes: WireSlice::copied_from(&(0..=255u8).collect::<Vec<_>>()),
+                },
+                payload: PayloadSpec::None,
+                churn: SegmentChurn {
+                    deaths: (0..64).collect(),
+                    joins: (0..64).collect(),
+                    join_view: (0..8)
+                        .map(|l| (l, lit(&[3], &[l as f32, -0.0, f32::NAN])))
+                        .collect(),
+                },
+            },
+            "max churn",
+        );
+        // pending-broadcast corner (new tag, both frag arms)
+        for frag in [None, Some(3)] {
+            assert_cmd_matches_oracle(
+                &Cmd::Run {
+                    from: 1,
+                    to: 2,
+                    broadcast: Broadcast::Pending { frag },
+                    payload: PayloadSpec::None,
+                    churn: SegmentChurn::default(),
+                },
+                "pending broadcast",
+            );
+        }
+        assert_cmd_matches_oracle(
+            &Cmd::Finish {
+                broadcast: Broadcast::Encoded {
+                    frag: Some(1),
+                    bytes: WireSlice::copied_from(&[42; 1000]),
+                },
+            },
+            "finish",
+        );
+    }
+
+    #[test]
+    fn zero_copy_reports_match_the_retired_oracle() {
+        // multi-fragment report corner: several replicas, mixed
+        // payload kinds, bit-pattern-hostile losses
+        assert_report_matches_oracle(
+            &WorkerReport {
+                reps: vec![
+                    (
+                        0,
+                        vec![f64::NAN, -0.0, f64::INFINITY, f64::MIN_POSITIVE],
+                        SyncPayload::Encoded(WireSlice::copied_from(&[0; 513])),
+                    ),
+                    (
+                        3,
+                        vec![1.0; 64],
+                        SyncPayload::Encoded(WireSlice::copied_from(&[0xFF; 7])),
+                    ),
+                    (5, Vec::new(), SyncPayload::Skipped),
+                    (
+                        9,
+                        vec![2.5],
+                        SyncPayload::Params(vec![lit(&[2, 2], &[1.0, 2.0, 3.0, 4.0]), lit(&[0], &[])]),
+                    ),
+                ],
+            },
+            "mixed report",
+        );
+        // empty report corner
+        assert_report_matches_oracle(&WorkerReport { reps: Vec::new() }, "empty report");
+        // sub-range blobs: payloads that are views into a shared buffer
+        // (exactly what the reduce hands back) serialize identically
+        let shared = Arc::new(WireBuf::from_payload(&(0..100u8).collect::<Vec<_>>()));
+        assert_report_matches_oracle(
+            &WorkerReport {
+                reps: vec![
+                    (0, vec![1.0], SyncPayload::Encoded(WireSlice::part(Arc::clone(&shared), 0..50))),
+                    (1, vec![2.0], SyncPayload::Encoded(WireSlice::part(shared, 50..100))),
+                ],
+            },
+            "shared-buffer report",
+        );
     }
 }

@@ -15,27 +15,53 @@
 //! `Reject` (reason string), failing the run loudly on any mismatch:
 //! a quietly divergent peer would poison every reduce it touches.
 //!
+//! # The lane reactor
+//!
+//! After the handshake the coordinator folds every worker socket into
+//! one [`LaneReactor`]: a nonblocking poll(2) loop over all lanes. One
+//! thread serves however many workers — `--expect 64` costs 64 file
+//! descriptors, not 64 parked reader threads. Commands serialize once
+//! ([`msg::cmd_wire`]) and fan out to every lane; reports drain as
+//! lanes produce them, each parsed zero-copy out of a pooled frame
+//! buffer; heartbeats are consumed inside the loop (counted into a
+//! control-bytes bucket, never the framed totals) while per-lane
+//! patience clocks turn a silent peer into a journaled `Crash`.
+//! Reactor writes never block the loop either: when a socket's send
+//! buffer fills mid-broadcast, the reactor drains incoming frames from
+//! every lane and resumes — a worker pushing a large report can never
+//! deadlock against a coordinator pushing a large broadcast.
+//!
+//! Lossy broadcasts additionally *stream*: the encoded payload goes
+//! out as its own `Bcast` frame whose chunks hit the lanes as each
+//! encode shard finishes (overlapping encode with socket time), and
+//! the `Run` that references it carries only a [`Broadcast::Pending`]
+//! marker the worker resolves against its stashed frame. On-wire
+//! bytes are pinned identical to the one-shot frame.
+//!
 //! # Liveness
 //!
-//! Each worker runs a heartbeat thread writing `Heartbeat` frames on a
-//! fixed cadence (writes share a mutex with report frames, held across
-//! the whole `write_all`, so frames never interleave). The coordinator
-//! reads with a timeout a few heartbeats long: a dead or wedged worker
-//! surfaces as a lane error within seconds, which the drive loop turns
-//! into a journaled `Crash` with survivors continuing — never a hang.
-//! Workers read commands without a timeout: a dead coordinator closes
-//! the socket, which ends the session cleanly.
+//! Each worker runs a heartbeat thread writing a precomputed 36-byte
+//! `Heartbeat` frame on a fixed cadence (writes share a mutex with
+//! report frames, held across the whole write, so frames never
+//! interleave). A worker silent for [`HEARTBEAT_PATIENCE`] periods is
+//! dead to the reactor; survivors continue — never a hang. Workers
+//! read commands without a timeout: a dead coordinator closes the
+//! socket, which ends the session cleanly.
 
-use std::io::Write;
+use std::collections::VecDeque;
+use std::io::{self, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::frame::{read_frame, write_frame, FrameHeader, MsgKind};
-use super::msg::{self, Cmd, WorkerReport};
+use super::frame::{
+    header_bytes, parse_header, read_frame, read_frame_into, reclaim_wires, write_frame, BufPool,
+    FrameHeader, MsgKind, WireBuf, WireSlice, HEADER_LEN,
+};
+use super::msg::{self, Broadcast, Cmd, PayloadSpec, SyncPayload, WorkerReport};
 use super::{Lane, WorkerLink};
 
 /// Worker heartbeat cadence.
@@ -54,6 +80,11 @@ pub const BACKOFF_CAP: Duration = Duration::from_secs(2);
 pub const ENGINE_PJRT: u8 = 0;
 pub const ENGINE_TOY: u8 = 1;
 
+/// How long a lane may go silent before the reactor declares it dead.
+fn patience() -> Duration {
+    HEARTBEAT_PERIOD * HEARTBEAT_PATIENCE
+}
+
 /// Connect to `addr`, retrying with bounded exponential backoff: a
 /// worker launched alongside the coordinator routinely races its
 /// `--listen` bind, so refused connections retry (100ms, 200ms, ...,
@@ -70,7 +101,10 @@ pub fn connect_with_backoff(addr: &str, attempts: usize) -> Result<TcpStream> {
         }
         match TcpStream::connect(addr) {
             Ok(stream) => {
-                stream.set_nodelay(true).ok();
+                if let Err(e) = stream.set_nodelay(true) {
+                    // degraded latency, not a broken lane — run on
+                    log::warn!("transport: set_nodelay for {addr}: {e}");
+                }
                 return Ok(stream);
             }
             Err(e) => last_err = Some(e),
@@ -110,13 +144,89 @@ fn data_header(kind: MsgKind, info_fp: u64, up: u8, down: u8) -> FrameHeader {
     }
 }
 
+// ---- readiness waiting ------------------------------------------------
+
+/// One fd's poll request/result (mirrors `struct pollfd`).
+// `fd`/`events` are read by the kernel through the poll(2) pointer,
+// never by Rust code, which only inspects `revents`.
+#[allow(dead_code)]
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Direct poll(2) FFI — the build vendors no libc, and the reactor
+    //! needs exactly one syscall from it.
+    use super::PollFd;
+    use std::io;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: std::os::raw::c_ulong, timeout: i32) -> i32;
+    }
+
+    /// Wait for readiness on `fds` (revents filled in place) for up to
+    /// `timeout_ms`. Returns the ready count (0 = timed out).
+    pub fn wait(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as _, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    //! Portability stub: no poll(2), so every fd is reported ready
+    //! after a ~1ms nap and the nonblocking reads/writes themselves
+    //! govern progress. Correct, just busier than a real readiness
+    //! wait — acceptable for the platforms this fallback serves.
+    use super::PollFd;
+    use std::io;
+
+    pub fn wait(fds: &mut [PollFd], _timeout_ms: i32) -> io::Result<usize> {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        for f in fds.iter_mut() {
+            f.revents = f.events;
+        }
+        Ok(fds.len())
+    }
+}
+
+#[cfg(unix)]
+fn raw_fd(s: &TcpStream) -> i32 {
+    use std::os::fd::AsRawFd;
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn raw_fd(_s: &TcpStream) -> i32 {
+    0
+}
+
 // ---- coordinator side -------------------------------------------------
 
-/// Coordinator-side endpoint of one worker connection.
+/// Coordinator-side endpoint of one worker connection — the simple
+/// blocking form the generic [`Lane`]-driven path and the handshake
+/// produce. Production multi-worker runs fold these into a
+/// [`LaneReactor`] instead of reading each on its own thread.
 pub struct TcpLane {
     stream: TcpStream,
     header: FrameHeader,
     peer: String,
+    scratch: Vec<u8>,
 }
 
 impl Lane for TcpLane {
@@ -124,21 +234,27 @@ impl Lane for TcpLane {
         if matches!(cmd, Cmd::Spares(_)) {
             return Ok(()); // buffer recycling never crosses a socket
         }
-        let mut payload = Vec::new();
-        let kind = msg::cmd_payload(&cmd, &mut payload)?;
-        let mut h = self.header.clone();
+        let TcpLane {
+            stream,
+            header,
+            peer,
+            scratch,
+        } = self;
+        let (kind, cuts) = msg::cmd_wire(&cmd, scratch)?;
+        let mut h = header.clone();
         h.kind = kind;
         // stamp the schedule position for wire-level observability
         if let Cmd::Run {
-            payload: super::msg::PayloadSpec::Encoded(spec),
+            payload: PayloadSpec::Encoded(spec),
             ..
         } = &cmd
         {
             h.sync_index = spec.sync_index;
             h.frag = spec.frag.map(|f| f as u32);
         }
-        write_frame(&mut self.stream, &h, &payload)
-            .with_context(|| format!("tcp lane to {}", self.peer))
+        cuts.write(stream, &h, scratch)
+            .map(|_| ())
+            .with_context(|| format!("tcp lane to {peer}"))
     }
 
     fn recv(&mut self) -> Result<Result<WorkerReport>> {
@@ -169,6 +285,461 @@ impl Lane for TcpLane {
     }
 }
 
+/// One worker socket inside the reactor: its identity, liveness, an
+/// incremental read state (header, then payload straight into a pooled
+/// buffer), and an inbox of complete frames awaiting consumption.
+struct ReactorLane {
+    stream: TcpStream,
+    peer: String,
+    rids: Vec<usize>,
+    alive: bool,
+    last_heard: Instant,
+    hdr: [u8; HEADER_LEN],
+    hdr_have: usize,
+    /// Parsed header + payload buffer + bytes filled so far.
+    body: Option<(FrameHeader, WireBuf, usize)>,
+    inbox: VecDeque<(FrameHeader, WireBuf)>,
+}
+
+/// Mark a lane dead exactly once: log it, surface its replicas as
+/// newly lost. Idempotent — read errors discovered while draining can
+/// race a write failure on the same lane.
+fn kill(lane: &mut ReactorLane, lost: &mut Vec<usize>, why: &str) {
+    if !lane.alive {
+        return;
+    }
+    lane.alive = false;
+    log::warn!("transport: lane to {} died: {why}", lane.peer);
+    lost.extend(lane.rids.iter().copied());
+}
+
+/// The reactor's poll-loop state, split from [`LaneReactor`] so
+/// serialization scratch can be borrowed while lanes are driven.
+struct ReactorCore {
+    lanes: Vec<ReactorLane>,
+    pool: BufPool,
+    control_bytes: u64,
+    lost: Vec<usize>,
+}
+
+impl ReactorCore {
+    /// Drain whatever lane `idx`'s socket holds right now: complete
+    /// frames land in its inbox (heartbeats consumed on the spot and
+    /// counted as control bytes), a partial frame persists in the read
+    /// state for the next readiness. A read error kills the lane.
+    fn pump_read(&mut self, idx: usize) {
+        let ReactorCore {
+            lanes,
+            pool,
+            control_bytes,
+            lost,
+        } = self;
+        let lane = &mut lanes[idx];
+        if !lane.alive {
+            return;
+        }
+        if let Err(e) = pump_read_inner(lane, pool, control_bytes) {
+            kill(lane, lost, &format!("{e:#}"));
+        }
+    }
+
+    /// Block until a lane is readable (or `write_idx`'s socket is
+    /// writable), drain the readable ones, and enforce the heartbeat
+    /// patience clocks — a lane silent past its deadline dies here.
+    fn wait_io(&mut self, write_idx: Option<usize>) -> Result<()> {
+        let now = Instant::now();
+        let mut timeout = patience();
+        for lane in self.lanes.iter().filter(|l| l.alive) {
+            let left = patience().saturating_sub(now.duration_since(lane.last_heard));
+            timeout = timeout.min(left);
+        }
+        let mut fds: Vec<PollFd> = Vec::new();
+        let mut map: Vec<usize> = Vec::new();
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if !lane.alive {
+                continue;
+            }
+            let mut events = POLLIN;
+            if write_idx == Some(i) {
+                events |= POLLOUT;
+            }
+            fds.push(PollFd {
+                fd: raw_fd(&lane.stream),
+                events,
+                revents: 0,
+            });
+            map.push(i);
+        }
+        if fds.is_empty() {
+            return Ok(()); // everyone is dead; callers notice
+        }
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        sys::wait(&mut fds, ms.max(1)).context("transport: poll")?;
+        for (k, f) in fds.iter().enumerate() {
+            // anything but a pure write-readiness (data, EOF, error,
+            // hangup) is the read pump's to judge
+            if f.revents & !POLLOUT != 0 {
+                let idx = map[k];
+                self.pump_read(idx);
+            }
+        }
+        // pump first, *then* judge patience: heartbeats queued in the
+        // socket during a long reduce refresh last_heard before the check
+        let ReactorCore { lanes, lost, .. } = self;
+        let now = Instant::now();
+        for lane in lanes.iter_mut() {
+            if lane.alive && now.duration_since(lane.last_heard) > patience() {
+                kill(
+                    lane,
+                    lost,
+                    &format!("silent for {HEARTBEAT_PATIENCE} heartbeat periods"),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Write every byte of `parts` to lane `idx` without ever blocking
+    /// the reactor: when the socket's send buffer fills, incoming
+    /// frames are drained from *all* lanes and the write resumes — a
+    /// worker mid-report can never deadlock a coordinator
+    /// mid-broadcast. `Err` means the target lane is dead (the caller
+    /// kills it); deaths among the drained lanes are absorbed.
+    fn write_parts(&mut self, idx: usize, parts: &[&[u8]]) -> Result<()> {
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let mut written = 0usize;
+        while written < total {
+            if !self.lanes[idx].alive {
+                bail!("lane died while a write was in flight");
+            }
+            let mut skip = written;
+            let mut bufs: Vec<IoSlice> = Vec::with_capacity(parts.len());
+            for p in parts {
+                if skip >= p.len() {
+                    skip -= p.len();
+                    continue;
+                }
+                bufs.push(IoSlice::new(&p[skip..]));
+                skip = 0;
+            }
+            match self.lanes[idx].stream.write_vectored(&bufs) {
+                Ok(0) => bail!("socket accepted zero bytes"),
+                Ok(n) => written += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    self.wait_io(Some(idx))?;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("lane write"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Ship one pre-serialized frame (or frame piece) to every live
+    /// lane. A lane whose write fails dies — crash-membership
+    /// semantics, not a run failure.
+    fn fan_out(&mut self, parts: &[&[u8]]) {
+        for i in 0..self.lanes.len() {
+            if !self.lanes[i].alive {
+                continue;
+            }
+            if let Err(e) = self.write_parts(i, parts) {
+                let ReactorCore { lanes, lost, .. } = self;
+                kill(&mut lanes[i], lost, &format!("{e:#}"));
+            }
+        }
+    }
+}
+
+/// The lane-local half of the read pump (free function so the core's
+/// pool and counters can be borrowed alongside the lane).
+fn pump_read_inner(lane: &mut ReactorLane, pool: &mut BufPool, control: &mut u64) -> Result<()> {
+    loop {
+        if lane.body.is_none() {
+            while lane.hdr_have < HEADER_LEN {
+                match lane.stream.read(&mut lane.hdr[lane.hdr_have..]) {
+                    Ok(0) => {
+                        if lane.hdr_have == 0 {
+                            bail!("peer closed the connection");
+                        }
+                        bail!("peer closed mid-frame");
+                    }
+                    Ok(n) => lane.hdr_have += n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e).context("lane read"),
+                }
+            }
+            let (h, payload_len) = parse_header(&lane.hdr)?;
+            let mut buf = pool.take();
+            buf.resize_payload(payload_len);
+            lane.hdr_have = 0;
+            lane.body = Some((h, buf, 0));
+        }
+        {
+            let (_, buf, filled) = lane.body.as_mut().expect("installed above");
+            let need = buf.payload_len();
+            while *filled < need {
+                match lane.stream.read(&mut buf.payload_mut()[*filled..]) {
+                    Ok(0) => bail!("peer closed mid-frame"),
+                    Ok(n) => *filled += n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e).context("lane read"),
+                }
+            }
+        }
+        let (h, buf, _) = lane.body.take().expect("completed above");
+        lane.last_heard = Instant::now();
+        if h.kind == MsgKind::Heartbeat {
+            // liveness traffic: consumed here, never surfaced; counted
+            // into the control bucket (socket fact, not sync traffic)
+            *control += (HEADER_LEN + buf.payload_len()) as u64;
+            pool.put(buf);
+        } else {
+            lane.inbox.push_back((h, buf));
+        }
+    }
+}
+
+/// The multiplexed coordinator endpoint: every worker socket inside
+/// one nonblocking poll loop. See the module docs for the design; see
+/// `coordinator::pool::drive_reactor` for the drive loop that runs on
+/// top of it.
+pub struct LaneReactor {
+    core: ReactorCore,
+    /// Data-frame template (fingerprint + codec widths).
+    header: FrameHeader,
+    /// Command meta scratch, recycled across sends.
+    scratch: Vec<u8>,
+    /// Undelivered remainder of a streamed broadcast's declared
+    /// payload — chunks must account for exactly this many bytes.
+    bcast_left: u64,
+}
+
+impl LaneReactor {
+    /// Fold handshaken lanes (from [`accept_workers`]) into one
+    /// reactor, switching their sockets to nonblocking mode.
+    pub fn new(lanes: Vec<(TcpLane, Vec<usize>)>) -> Result<LaneReactor> {
+        let cap = lanes.len() * 2 + 4;
+        let mut header: Option<FrameHeader> = None;
+        let mut rl = Vec::with_capacity(lanes.len());
+        for (lane, rids) in lanes {
+            lane.stream
+                .set_nonblocking(true)
+                .with_context(|| format!("transport: nonblocking mode for {}", lane.peer))?;
+            header.get_or_insert(lane.header.clone());
+            rl.push(ReactorLane {
+                stream: lane.stream,
+                peer: lane.peer,
+                rids,
+                alive: true,
+                last_heard: Instant::now(),
+                hdr: [0u8; HEADER_LEN],
+                hdr_have: 0,
+                body: None,
+                inbox: VecDeque::new(),
+            });
+        }
+        Ok(LaneReactor {
+            core: ReactorCore {
+                lanes: rl,
+                pool: BufPool::with_cap(cap),
+                control_bytes: 0,
+                lost: Vec::new(),
+            },
+            header: header.unwrap_or_else(|| FrameHeader::bare(MsgKind::Run)),
+            scratch: Vec::new(),
+            bcast_left: 0,
+        })
+    }
+
+    /// Replica ownership per lane, in lane order (fixed at handshake;
+    /// includes dead lanes — they still cover their universe slots).
+    pub fn lane_rids(&self) -> Vec<Vec<usize>> {
+        self.core.lanes.iter().map(|l| l.rids.clone()).collect()
+    }
+
+    /// Serialize `cmd` once and fan it out to every live lane. Lane
+    /// write failures are lane deaths, not errors; `Err` means the
+    /// command itself cannot travel (`Spares`).
+    pub fn send_cmd(&mut self, cmd: &Cmd) -> Result<()> {
+        let (kind, cuts) = msg::cmd_wire(cmd, &mut self.scratch)?;
+        let mut h = self.header.clone();
+        h.kind = kind;
+        if let Cmd::Run {
+            payload: PayloadSpec::Encoded(spec),
+            ..
+        } = cmd
+        {
+            h.sync_index = spec.sync_index;
+            h.frag = spec.frag.map(|f| f as u32);
+        }
+        let hdr = header_bytes(&h, cuts.payload_len(&self.scratch))?;
+        let body = cuts.parts(&self.scratch);
+        let mut parts: Vec<&[u8]> = Vec::with_capacity(body.len() + 1);
+        parts.push(&hdr);
+        parts.extend(body);
+        self.core.fan_out(&parts);
+        Ok(())
+    }
+
+    /// Block until every live lane has produced its segment report (or
+    /// died trying). Heartbeats are consumed along the way; a worker's
+    /// `Error` frame fails the run (a broken engine is never churn); a
+    /// garbled or unexpected frame kills its lane. Reports parse
+    /// zero-copy out of their single frame buffer — payloadless frames
+    /// recycle immediately, payload-bearing ones return through
+    /// [`LaneReactor::recycle`] after the reduce.
+    pub fn collect_reports(&mut self) -> Result<Vec<WorkerReport>> {
+        let core = &mut self.core;
+        let n = core.lanes.len();
+        let mut reported = vec![false; n];
+        let mut out = Vec::new();
+        loop {
+            for i in 0..n {
+                // frames received before a death are still valid —
+                // drain inboxes regardless of the alive flag
+                while !reported[i] {
+                    let Some((h, buf)) = core.lanes[i].inbox.pop_front() else {
+                        break;
+                    };
+                    match h.kind {
+                        MsgKind::Report => {
+                            let frame = Arc::new(buf);
+                            match msg::report_from_wire(&frame) {
+                                Ok(rep) => {
+                                    out.push(rep);
+                                    reported[i] = true;
+                                }
+                                Err(e) => {
+                                    let ReactorCore { lanes, lost, .. } = core;
+                                    kill(&mut lanes[i], lost, &format!("garbled report: {e:#}"));
+                                }
+                            }
+                            // a report whose payloads are all literal/
+                            // skipped leaves the frame unshared —
+                            // recycle it on the spot
+                            if let Ok(b) = Arc::try_unwrap(frame) {
+                                core.pool.put(b);
+                            }
+                        }
+                        MsgKind::Error => {
+                            return Err(anyhow!(
+                                "worker at {}: {}",
+                                core.lanes[i].peer,
+                                String::from_utf8_lossy(buf.payload())
+                            ));
+                        }
+                        other => {
+                            let ReactorCore { lanes, lost, .. } = core;
+                            kill(
+                                &mut lanes[i],
+                                lost,
+                                &format!("unexpected {other:?} frame while awaiting a report"),
+                            );
+                        }
+                    }
+                }
+            }
+            let done = (0..n)
+                .all(|i| reported[i] || (!core.lanes[i].alive && core.lanes[i].inbox.is_empty()));
+            if done {
+                return Ok(out);
+            }
+            core.wait_io(None)?;
+        }
+    }
+
+    /// Every replica owned by a lane that has died so far (cumulative
+    /// — a dead lane's replicas stay dark for the rest of the run).
+    pub fn dead_rids(&self) -> Vec<usize> {
+        self.core
+            .lanes
+            .iter()
+            .filter(|l| !l.alive)
+            .flat_map(|l| l.rids.iter().copied())
+            .collect()
+    }
+
+    /// Replicas newly lost since the last call — the drive loop turns
+    /// these into journaled `Crash` membership.
+    pub fn take_lost(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.core.lost)
+    }
+
+    /// Return spent frame buffers (reclaimed after a reduce) to the
+    /// receive pool.
+    pub fn recycle(&mut self, bufs: Vec<WireBuf>) {
+        for b in bufs {
+            self.core.pool.put(b);
+        }
+    }
+
+    /// Open a streamed broadcast: stamp one `Bcast` header declaring
+    /// the full payload length onto every live lane. Chunks follow via
+    /// [`LaneReactor::bcast_chunk`] and must total exactly
+    /// `payload_len` — the header is the frame boundary, so an
+    /// undershoot would desync every lane.
+    pub fn bcast_begin(
+        &mut self,
+        frag: Option<usize>,
+        sync_index: u64,
+        payload_len: u64,
+    ) -> Result<()> {
+        if self.bcast_left != 0 {
+            bail!(
+                "transport: streamed broadcast opened with {} bytes of the previous \
+                 one undelivered",
+                self.bcast_left
+            );
+        }
+        let mut h = self.header.clone();
+        h.kind = MsgKind::Bcast;
+        h.sync_index = sync_index;
+        h.frag = frag.map(|f| f as u32);
+        let hdr = header_bytes(&h, payload_len as usize)?;
+        self.bcast_left = payload_len;
+        self.core.fan_out(&[&hdr]);
+        Ok(())
+    }
+
+    /// Ship one encode shard of the open streamed broadcast to every
+    /// live lane (overlapping the encoder with the sockets).
+    pub fn bcast_chunk(&mut self, chunk: &[u8]) -> Result<()> {
+        let n = chunk.len() as u64;
+        if n > self.bcast_left {
+            bail!(
+                "transport: broadcast chunk of {n} bytes overruns the declared payload \
+                 ({} bytes remain)",
+                self.bcast_left
+            );
+        }
+        self.bcast_left -= n;
+        self.core.fan_out(&[chunk]);
+        Ok(())
+    }
+
+    /// Ship the final broadcast as `Finish` to every surviving lane.
+    /// Errors are swallowed — a lane dead at shutdown already crashed
+    /// out, and the workers' own adopt verdicts travel via exit codes.
+    pub fn send_finish(&mut self, broadcast: &Broadcast) {
+        let cmd = Cmd::Finish {
+            broadcast: broadcast.clone(),
+        };
+        if let Err(e) = self.send_cmd(&cmd) {
+            log::warn!("transport: final broadcast not shipped: {e:#}");
+        }
+    }
+
+    /// Drain the control-plane byte count (heartbeat frames consumed
+    /// so far) — folded into `WireStats`' control bucket, never the
+    /// framed totals, so `final:` lines stay transport-invariant.
+    pub fn take_control_bytes(&mut self) -> u64 {
+        std::mem::take(&mut self.core.control_bytes)
+    }
+}
+
 fn reject(stream: &mut TcpStream, reason: &str) {
     let _ = write_frame(
         stream,
@@ -181,7 +752,8 @@ fn reject(stream: &mut TcpStream, reason: &str) {
 /// validating every claim; returns one lane per worker paired with the
 /// replica ids it owns. Any mismatch rejects the peer AND fails the
 /// coordinator — a run with a divergent or missing worker must never
-/// limp onward silently.
+/// limp onward silently. Fold the result into a [`LaneReactor`] to
+/// drive them all from one thread.
 pub fn accept_workers(
     listener: &TcpListener,
     expect: usize,
@@ -193,7 +765,9 @@ pub fn accept_workers(
     while lanes.len() < expect {
         let (mut stream, peer_addr) = listener.accept().context("transport: accept")?;
         let peer = peer_addr.to_string();
-        stream.set_nodelay(true).ok();
+        if let Err(e) = stream.set_nodelay(true) {
+            log::warn!("transport: set_nodelay for {peer}: {e}");
+        }
         stream
             .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
             .context("transport: set handshake timeout")?;
@@ -244,8 +818,12 @@ pub fn accept_workers(
         }
         let mut welcome = Vec::new();
         msg::welcome_payload(info.engine, &info.live, &info.config_json, &mut welcome)?;
-        let mut wh = data_header(MsgKind::Welcome, info.fingerprint, info.up_bits, info.down_bits);
-        wh.kind = MsgKind::Welcome;
+        let wh = data_header(
+            MsgKind::Welcome,
+            info.fingerprint,
+            info.up_bits,
+            info.down_bits,
+        );
         write_frame(&mut stream, &wh, &welcome)
             .with_context(|| format!("transport: welcoming {peer}"))?;
         stream
@@ -254,8 +832,14 @@ pub fn accept_workers(
         lanes.push((
             TcpLane {
                 stream,
-                header: data_header(MsgKind::Run, info.fingerprint, info.up_bits, info.down_bits),
+                header: data_header(
+                    MsgKind::Run,
+                    info.fingerprint,
+                    info.up_bits,
+                    info.down_bits,
+                ),
                 peer,
+                scratch: Vec::new(),
             },
             claims,
         ));
@@ -273,11 +857,29 @@ pub fn accept_workers(
 
 /// Worker-side endpoint of the coordinator connection. Owns the
 /// heartbeat thread; dropping the link stops it within one period.
+///
+/// Receive-side buffers recycle through a local pool (a fully consumed
+/// command's frame buffer returns on the next `recv_cmd`), and the
+/// wire buffers behind a shipped report come back as a locally
+/// synthesized [`Cmd::Spares`] — the socket twin of the coordinator's
+/// buffer recycling, without ever shipping empty buffers.
 pub struct TcpWorkerLink {
     reader: TcpStream,
     writer: Arc<Mutex<TcpStream>>,
     header: FrameHeader,
     stop: Arc<AtomicBool>,
+    pool: BufPool,
+    /// Frame buffers still viewed by an outstanding command's payload
+    /// slices; swept back into the pool once unshared.
+    inflight: Vec<Arc<WireBuf>>,
+    /// A received `Bcast` frame awaiting the `Pending` command that
+    /// references it.
+    stash: Option<(FrameHeader, WireBuf)>,
+    /// Encode buffers reclaimed from the last report, returned to the
+    /// session as a synthesized `Cmd::Spares`.
+    spares: Vec<WireBuf>,
+    /// Report meta scratch, recycled across sends.
+    scratch: Vec<u8>,
 }
 
 /// Connect-side handshake: claim `claims`, offer `fingerprint` and
@@ -334,22 +936,34 @@ impl TcpWorkerLink {
         stream
             .set_read_timeout(None)
             .context("transport: clear worker read timeout")?;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown peer>".to_string());
         let writer = Arc::new(Mutex::new(
-            stream.try_clone().context("transport: clone stream for writes")?,
+            stream
+                .try_clone()
+                .context("transport: clone stream for writes")?,
         ));
         let stop = Arc::new(AtomicBool::new(false));
         let hb_writer = Arc::clone(&writer);
         let hb_stop = Arc::clone(&stop);
-        let hb_header = data_header(
-            MsgKind::Heartbeat,
-            info.fingerprint,
-            info.up_bits,
-            info.down_bits,
-        );
+        // the heartbeat frame never varies — build its 36 bytes once
+        // instead of cloning and re-stamping a header every period
+        let hb_frame = header_bytes(
+            &data_header(
+                MsgKind::Heartbeat,
+                info.fingerprint,
+                info.up_bits,
+                info.down_bits,
+            ),
+            0,
+        )?;
         // detached on purpose: it holds only the shared writer and
         // exits within one period of `stop` (or on the first failed
         // write once the socket closes)
         std::thread::spawn(move || {
+            let mut flush_logged = false;
             while !hb_stop.load(Ordering::Relaxed) {
                 std::thread::sleep(HEARTBEAT_PERIOD);
                 if hb_stop.load(Ordering::Relaxed) {
@@ -359,12 +973,17 @@ impl TcpWorkerLink {
                     Ok(w) => w,
                     Err(_) => break,
                 };
-                let mut hh = hb_header.clone();
-                hh.kind = MsgKind::Heartbeat;
-                if write_frame(&mut *w, &hh, &[]).is_err() {
+                if w.write_all(&hb_frame).is_err() {
                     break;
                 }
-                let _ = w.flush();
+                if let Err(e) = w.flush() {
+                    // a flush hiccup is not yet a dead socket — beat
+                    // on, but say so once instead of dropping it silently
+                    if !flush_logged {
+                        log::warn!("transport: heartbeat flush to {peer}: {e}");
+                        flush_logged = true;
+                    }
+                }
             }
         });
         Ok(TcpWorkerLink {
@@ -377,6 +996,61 @@ impl TcpWorkerLink {
                 info.down_bits,
             ),
             stop,
+            pool: BufPool::with_cap(8),
+            inflight: Vec::new(),
+            stash: None,
+            spares: Vec::new(),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Swap a `Pending` broadcast marker for the stashed `Bcast` frame
+    /// it references. `None` = protocol violation (no stash, or the
+    /// stash is for a different fragment) — the session ends; the
+    /// coordinator side judges the silence.
+    fn take_stashed(&mut self, frag: Option<usize>) -> Option<Broadcast> {
+        let Some((bh, buf)) = self.stash.take() else {
+            log::warn!("transport: pending broadcast but no Bcast frame was stashed");
+            return None;
+        };
+        let want = frag.map(|f| f as u32);
+        if bh.frag != want {
+            log::warn!(
+                "transport: pending broadcast resolves fragment {want:?} but the stash \
+                 holds {:?}",
+                bh.frag
+            );
+            return None;
+        }
+        let frame = Arc::new(buf);
+        let bytes = WireSlice::whole(Arc::clone(&frame));
+        self.inflight.push(frame);
+        Some(Broadcast::Encoded { frag, bytes })
+    }
+
+    /// Resolve any `Pending` broadcast in `cmd` against the stash;
+    /// pass everything else through untouched.
+    fn resolve(&mut self, cmd: Cmd) -> Option<Cmd> {
+        Some(match cmd {
+            Cmd::Run {
+                from,
+                to,
+                broadcast: Broadcast::Pending { frag },
+                payload,
+                churn,
+            } => Cmd::Run {
+                from,
+                to,
+                broadcast: self.take_stashed(frag)?,
+                payload,
+                churn,
+            },
+            Cmd::Finish {
+                broadcast: Broadcast::Pending { frag },
+            } => Cmd::Finish {
+                broadcast: self.take_stashed(frag)?,
+            },
+            other => other,
         })
     }
 }
@@ -389,38 +1063,90 @@ impl Drop for TcpWorkerLink {
 
 impl WorkerLink for TcpWorkerLink {
     fn recv_cmd(&mut self) -> Option<Cmd> {
-        // any failure — EOF, reset, garbage — ends the session; the
-        // coordinator side is where failures are judged and journaled
-        let (h, payload) = read_frame(&mut self.reader).ok()?;
-        msg::cmd_from_frame(h.kind, &payload).ok()
+        // encode buffers reclaimed from the last report go back to the
+        // worker's comm pool as a synthesized command — before any
+        // socket read, so the session absorbs them between segments
+        if !self.spares.is_empty() {
+            return Some(Cmd::Spares(std::mem::take(&mut self.spares)));
+        }
+        // frame buffers from fully consumed commands return to the pool
+        let mut still_shared = Vec::new();
+        for arc in self.inflight.drain(..) {
+            match Arc::try_unwrap(arc) {
+                Ok(buf) => self.pool.put(buf),
+                Err(arc) => still_shared.push(arc),
+            }
+        }
+        self.inflight = still_shared;
+        loop {
+            // any failure — EOF, reset, garbage — ends the session; the
+            // coordinator side is where failures are judged and journaled
+            let mut buf = self.pool.take();
+            let h = read_frame_into(&mut self.reader, &mut buf).ok()?;
+            match h.kind {
+                MsgKind::Bcast => {
+                    // a streamed broadcast ahead of the command that
+                    // references it: stash until that command arrives
+                    if self.stash.replace((h, buf)).is_some() {
+                        log::warn!("transport: Bcast frame replaced an unresolved stash");
+                    }
+                }
+                MsgKind::Run | MsgKind::Finish => {
+                    let frame = Arc::new(buf);
+                    let cmd = msg::cmd_from_wire(h.kind, &frame).ok()?;
+                    self.inflight.push(frame);
+                    return self.resolve(cmd);
+                }
+                other => {
+                    log::warn!("transport: unexpected {other:?} frame while awaiting a command");
+                    return None;
+                }
+            }
+        }
     }
 
     fn send_report(&mut self, report: Result<WorkerReport>) -> Result<()> {
-        let mut payload = Vec::new();
-        let kind = match &report {
-            Ok(rep) => {
-                msg::report_payload(rep, &mut payload)?;
-                MsgKind::Report
-            }
+        let rep = match report {
+            Ok(rep) => rep,
             Err(e) => {
-                payload.extend_from_slice(format!("{e:#}").as_bytes());
-                MsgKind::Error
+                let mut h = self.header.clone();
+                h.kind = MsgKind::Error;
+                let mut w = self
+                    .writer
+                    .lock()
+                    .map_err(|_| anyhow!("transport: writer mutex poisoned"))?;
+                return write_frame(&mut *w, &h, format!("{e:#}").as_bytes());
             }
         };
-        let mut h = self.header.clone();
-        h.kind = kind;
-        let mut w = self
-            .writer
-            .lock()
-            .map_err(|_| anyhow!("transport: writer mutex poisoned"))?;
-        write_frame(&mut *w, &h, &payload)
+        {
+            let cuts = msg::report_wire(&rep, &mut self.scratch)?;
+            let mut w = self
+                .writer
+                .lock()
+                .map_err(|_| anyhow!("transport: writer mutex poisoned"))?;
+            cuts.write(&mut *w, &self.header, &self.scratch)?;
+        }
+        // the encoded payloads just shipped are spent: reclaim their
+        // wire buffers locally and hand them back to the session as
+        // Spares on the next recv
+        let slices: Vec<WireSlice> = rep
+            .reps
+            .into_iter()
+            .filter_map(|(_, _, p)| match p {
+                SyncPayload::Encoded(ws) => Some(ws),
+                _ => None,
+            })
+            .collect();
+        self.spares.extend(reclaim_wires(slices));
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::transport::msg::{Broadcast, PayloadSpec, SegmentChurn, SyncPayload};
+    use crate::transport::frame::write_all_vectored;
+    use crate::transport::msg::SegmentChurn;
 
     fn session(universe: usize) -> SessionInfo {
         SessionInfo {
@@ -430,6 +1156,16 @@ mod tests {
             engine: ENGINE_TOY,
             live: vec![true; universe],
             config_json: "{\"seed\":17}".to_string(),
+        }
+    }
+
+    fn run_cmd(from: usize, to: usize) -> Cmd {
+        Cmd::Run {
+            from,
+            to,
+            broadcast: Broadcast::empty(),
+            payload: PayloadSpec::None,
+            churn: SegmentChurn::default(),
         }
     }
 
@@ -467,28 +1203,33 @@ mod tests {
             link.send_report(Ok(WorkerReport {
                 reps: vec![
                     (0, vec![1.5, 2.5, 3.5], SyncPayload::Skipped),
-                    (1, vec![4.5, 5.5, 6.5], SyncPayload::Encoded(vec![7, 7])),
+                    (
+                        1,
+                        vec![4.5, 5.5, 6.5],
+                        SyncPayload::Encoded(WireSlice::copied_from(&[7, 7])),
+                    ),
                 ],
             }))
             .unwrap();
+            // the shipped encode buffer comes straight back as a
+            // locally synthesized Spares — no socket read involved
+            let Some(Cmd::Spares(bufs)) = link.recv_cmd() else {
+                panic!("expected the reclaimed report buffer as Spares");
+            };
+            assert_eq!(bufs.len(), 1);
             assert!(link.recv_cmd().is_none(), "coordinator closed: clean end");
         });
         let mut lanes = accept_workers(&listener, 1, &info).unwrap();
         assert_eq!(lanes.len(), 1);
         assert_eq!(lanes[0].1, vec![0, 1]);
         let lane = &mut lanes[0].0;
-        lane.send(Cmd::Spares(vec![vec![1u8; 8]])).unwrap(); // dropped, not sent
-        lane.send(Cmd::Run {
-            from: 0,
-            to: 3,
-            broadcast: Broadcast::empty(),
-            payload: PayloadSpec::None,
-            churn: SegmentChurn::default(),
-        })
-        .unwrap();
+        lane.send(Cmd::Spares(vec![WireBuf::new()])).unwrap(); // dropped, not sent
+        lane.send(run_cmd(0, 3)).unwrap();
         let report = lane.recv().unwrap().unwrap();
         assert_eq!(report.reps[0].1, vec![1.5, 2.5, 3.5]);
-        assert!(matches!(report.reps[1].2, SyncPayload::Encoded(ref b) if b == &vec![7, 7]));
+        assert!(
+            matches!(report.reps[1].2, SyncPayload::Encoded(ref b) if b.as_slice() == [7, 7])
+        );
         drop(lanes);
         worker.join().unwrap();
     }
@@ -502,8 +1243,8 @@ mod tests {
             worker_handshake(&mut stream, &[0], 0x1234, 0, 0)
                 .expect_err("mismatched fingerprint must be rejected")
         });
-        let err = accept_workers(&listener, 1, &session(1))
-            .expect_err("coordinator fails loud too");
+        let err =
+            accept_workers(&listener, 1, &session(1)).expect_err("coordinator fails loud too");
         let msg = format!("{err:#}");
         assert!(msg.contains("fingerprint mismatch"), "{msg}");
         assert!(msg.contains("0x0000000000001234"), "{msg}");
@@ -548,5 +1289,235 @@ mod tests {
         worker.join().unwrap();
         let err = lanes[0].0.recv().expect_err("closed socket = dead lane");
         assert!(!format!("{err:#}").is_empty());
+    }
+
+    // ---- lane reactor -------------------------------------------------
+
+    #[test]
+    fn reactor_runs_a_segment_over_two_lanes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let info = session(2);
+        let workers: Vec<_> = (0..2usize)
+            .map(|rid| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+                    let got = worker_handshake(&mut stream, &[rid], 0, 0, 0).unwrap();
+                    let mut link = TcpWorkerLink::new(stream, &got).unwrap();
+                    let Some(Cmd::Run { from, to, .. }) = link.recv_cmd() else {
+                        panic!("expected Run");
+                    };
+                    assert_eq!((from, to), (0, 2));
+                    link.send_report(Ok(WorkerReport {
+                        reps: vec![(
+                            rid,
+                            vec![rid as f64 + 0.5],
+                            SyncPayload::Encoded(WireSlice::copied_from(&[rid as u8; 3])),
+                        )],
+                    }))
+                    .unwrap();
+                    let Some(Cmd::Spares(bufs)) = link.recv_cmd() else {
+                        panic!("expected local Spares");
+                    };
+                    assert_eq!(bufs.len(), 1);
+                    let Some(Cmd::Finish { .. }) = link.recv_cmd() else {
+                        panic!("expected Finish");
+                    };
+                })
+            })
+            .collect();
+        let lanes = accept_workers(&listener, 2, &info).unwrap();
+        let mut reactor = LaneReactor::new(lanes).unwrap();
+        let rids: Vec<usize> = reactor.lane_rids().into_iter().flatten().collect();
+        assert_eq!(rids.len(), 2);
+        reactor.send_cmd(&run_cmd(0, 2)).unwrap();
+        let reports = reactor.collect_reports().unwrap();
+        assert_eq!(reports.len(), 2);
+        let mut seen: Vec<usize> = reports
+            .iter()
+            .flat_map(|r| r.reps.iter().map(|(rid, ..)| *rid))
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1]);
+        for r in &reports {
+            let (rid, losses, p) = &r.reps[0];
+            assert_eq!(losses, &vec![*rid as f64 + 0.5]);
+            let SyncPayload::Encoded(ws) = p else {
+                panic!("expected an encoded payload");
+            };
+            assert_eq!(ws.as_slice(), &[*rid as u8; 3]);
+        }
+        assert!(reactor.dead_rids().is_empty());
+        assert!(reactor.take_lost().is_empty());
+        reactor.send_finish(&Broadcast::empty());
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn streamed_broadcast_resolves_against_the_stash() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let info = session(1);
+        let worker = std::thread::spawn(move || {
+            let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+            let got = worker_handshake(&mut stream, &[0], 0, 0, 0).unwrap();
+            let mut link = TcpWorkerLink::new(stream, &got).unwrap();
+            // the Pending marker must come back resolved, carrying the
+            // chunks exactly as the coordinator flushed them
+            let Some(Cmd::Run {
+                broadcast: Broadcast::Encoded { frag, bytes },
+                ..
+            }) = link.recv_cmd()
+            else {
+                panic!("expected Run with a resolved broadcast");
+            };
+            assert_eq!(frag, Some(1));
+            assert_eq!(bytes.as_slice(), &[1, 2, 3, 4, 5, 6]);
+            drop(bytes);
+            link.send_report(Ok(WorkerReport {
+                reps: vec![(0, vec![1.0], SyncPayload::Skipped)],
+            }))
+            .unwrap();
+            let Some(Cmd::Finish {
+                broadcast: Broadcast::Encoded { frag, bytes },
+            }) = link.recv_cmd()
+            else {
+                panic!("expected Finish with a resolved broadcast");
+            };
+            assert_eq!(frag, None);
+            assert_eq!(bytes.as_slice(), &[9, 9, 9, 9]);
+        });
+        let lanes = accept_workers(&listener, 1, &info).unwrap();
+        let mut reactor = LaneReactor::new(lanes).unwrap();
+        reactor.bcast_begin(Some(1), 7, 6).unwrap();
+        reactor.bcast_chunk(&[1, 2, 3]).unwrap();
+        reactor.bcast_chunk(&[4, 5, 6]).unwrap();
+        let err = reactor.bcast_chunk(&[0]).expect_err("overrun must fail");
+        assert!(format!("{err:#}").contains("overruns"), "{err:#}");
+        reactor
+            .send_cmd(&Cmd::Run {
+                from: 0,
+                to: 1,
+                broadcast: Broadcast::Pending { frag: Some(1) },
+                payload: PayloadSpec::None,
+                churn: SegmentChurn::default(),
+            })
+            .unwrap();
+        assert_eq!(reactor.collect_reports().unwrap().len(), 1);
+        reactor.bcast_begin(None, 8, 4).unwrap();
+        reactor.bcast_chunk(&[9, 9, 9, 9]).unwrap();
+        reactor.send_finish(&Broadcast::Pending { frag: None });
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn a_vanished_worker_becomes_lost_rids_not_a_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let info = session(2);
+        let a1 = addr.clone();
+        let steady = std::thread::spawn(move || {
+            let mut stream = connect_with_backoff(&a1, CONNECT_ATTEMPTS).unwrap();
+            let got = worker_handshake(&mut stream, &[0], 0, 0, 0).unwrap();
+            let mut link = TcpWorkerLink::new(stream, &got).unwrap();
+            let Some(Cmd::Run { .. }) = link.recv_cmd() else {
+                panic!("expected Run");
+            };
+            link.send_report(Ok(WorkerReport {
+                reps: vec![(0, vec![2.0], SyncPayload::Skipped)],
+            }))
+            .unwrap();
+            let Some(Cmd::Finish { .. }) = link.recv_cmd() else {
+                panic!("expected Finish");
+            };
+        });
+        let vanisher = std::thread::spawn(move || {
+            // claim second, so the claim order is deterministic
+            std::thread::sleep(Duration::from_millis(100));
+            let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+            let got = worker_handshake(&mut stream, &[1], 0, 0, 0).unwrap();
+            let link = TcpWorkerLink::new(stream, &got).unwrap();
+            drop(link); // die right after the handshake
+        });
+        let lanes = accept_workers(&listener, 2, &info).unwrap();
+        vanisher.join().unwrap();
+        let mut reactor = LaneReactor::new(lanes).unwrap();
+        reactor.send_cmd(&run_cmd(0, 1)).unwrap();
+        let reports = reactor.collect_reports().unwrap();
+        assert_eq!(reports.len(), 1, "only the steady worker reports");
+        assert_eq!(reports[0].reps[0].0, 0);
+        assert_eq!(reactor.dead_rids(), vec![1]);
+        assert_eq!(reactor.take_lost(), vec![1]);
+        assert!(reactor.take_lost().is_empty(), "lost drains once");
+        reactor.send_finish(&Broadcast::empty());
+        steady.join().unwrap();
+    }
+
+    #[test]
+    fn heartbeats_are_consumed_and_counted_as_control_bytes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let info = session(1);
+        let worker = std::thread::spawn(move || {
+            // a hand-driven worker (no background heartbeat thread), so
+            // the control-byte count below is exact
+            let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+            worker_handshake(&mut stream, &[0], 0, 0, 0).unwrap();
+            for _ in 0..3 {
+                write_frame(&mut stream, &FrameHeader::bare(MsgKind::Heartbeat), &[]).unwrap();
+            }
+            let report = WorkerReport {
+                reps: vec![(0, vec![4.25], SyncPayload::Skipped)],
+            };
+            let mut scratch = Vec::new();
+            let cuts = msg::report_wire(&report, &mut scratch).unwrap();
+            let hdr = header_bytes(
+                &FrameHeader::bare(MsgKind::Report),
+                cuts.payload_len(&scratch),
+            )
+            .unwrap();
+            let mut parts: Vec<&[u8]> = vec![&hdr];
+            parts.extend(cuts.parts(&scratch));
+            write_all_vectored(&mut stream, &parts).unwrap();
+        });
+        let lanes = accept_workers(&listener, 1, &info).unwrap();
+        let mut reactor = LaneReactor::new(lanes).unwrap();
+        let reports = reactor.collect_reports().unwrap();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].reps[0].1, vec![4.25]);
+        assert_eq!(
+            reactor.take_control_bytes(),
+            3 * HEADER_LEN as u64,
+            "three heartbeat frames, header-only each"
+        );
+        assert_eq!(reactor.take_control_bytes(), 0, "control drains once");
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn a_worker_error_frame_fails_the_collect() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let info = session(1);
+        let worker = std::thread::spawn(move || {
+            let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+            let got = worker_handshake(&mut stream, &[0], 0, 0, 0).unwrap();
+            let mut link = TcpWorkerLink::new(stream, &got).unwrap();
+            let Some(Cmd::Run { .. }) = link.recv_cmd() else {
+                panic!("expected Run");
+            };
+            link.send_report(Err(anyhow!("engine exploded"))).unwrap();
+        });
+        let lanes = accept_workers(&listener, 1, &info).unwrap();
+        let mut reactor = LaneReactor::new(lanes).unwrap();
+        reactor.send_cmd(&run_cmd(0, 1)).unwrap();
+        let err = reactor
+            .collect_reports()
+            .expect_err("a worker-reported engine error fails the run");
+        assert!(format!("{err:#}").contains("engine exploded"), "{err:#}");
+        worker.join().unwrap();
     }
 }

@@ -32,6 +32,7 @@ use diloco::comm::{
     codec_for, Channel, Direction, DownWire, OuterBits, ReplicaComm, WorkerComm,
 };
 use diloco::coordinator::{drive, DrivePlan, InnerEngine, OuterSync, ReplicaState};
+use diloco::transport::frame::{reclaim_wires, WireSlice};
 use diloco::data::synthetic::{CorpusSpec, TokenStream};
 use diloco::runtime::{FlatLayout, HostTensor};
 use diloco::util::prop;
@@ -161,7 +162,7 @@ fn prop_fp32_encoded_sync_matches_legacy_path() {
                         rep_lits.iter().map(|v| &v[..]).collect();
                     legacy.sync(&parts, *frag).map_err(|e| e.to_string())?;
                 }
-                let payloads: Vec<Vec<u8>> = rep_lits
+                let payloads: Vec<WireSlice> = rep_lits
                     .iter()
                     .enumerate()
                     .map(|(r, lits)| {
@@ -169,7 +170,7 @@ fn prop_fp32_encoded_sync_matches_legacy_path() {
                             .map_err(|e| e.to_string())
                     })
                     .collect::<Result<_, String>>()?;
-                let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+                let frames: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
                 coded
                     .sync_encoded(&frames, *frag)
                     .map_err(|e| e.to_string())?;
@@ -293,12 +294,13 @@ fn prop_down_wire_broadcast_roundtrip_bounded_per_width() {
                 let bytes = dw
                     .encode_broadcast(&global_flat, None, 0)
                     .map_err(|e| e.to_string())?;
-                if bytes.len() != chan.payload_bytes(None) {
+                if bytes.payload_len() != chan.payload_bytes(None) {
                     return Err(format!("{bits:?}: wrong broadcast size"));
                 }
                 // worker-side decode lands exactly on the view
                 let mut dq = vec![0.0f32; layout.total()];
-                chan.decode(&bytes, None, &mut dq).map_err(|e| e.to_string())?;
+                chan.decode(bytes.payload(), None, &mut dq)
+                    .map_err(|e| e.to_string())?;
                 for i in 0..layout.total() {
                     let worker = init_flat[i] + dq[i];
                     if worker.to_bits() != dw.view()[i].to_bits() {
@@ -482,7 +484,7 @@ fn frozen_replicas_leave_global_fixed_under_lossy_broadcast() {
     let (ra, rb) = (to_lits(&layout, &theta_a), to_lits(&layout, &theta_b));
     sync.sync(&[&ra[..], &rb[..]], None).unwrap();
     let bytes = sync.take_broadcast_bytes().unwrap();
-    let mut adopt = link.adopt_encoded(&mut wc, None, &bytes).unwrap();
+    let mut adopt = link.adopt_encoded(&mut wc, None, bytes.as_slice()).unwrap();
     let lag = |sync: &OuterSync| -> f32 {
         let dw = sync.down().unwrap();
         sync.global()
@@ -505,7 +507,7 @@ fn frozen_replicas_leave_global_fixed_under_lossy_broadcast() {
         let g1: Vec<u32> = sync.global().data().iter().map(|x| x.to_bits()).collect();
         assert_eq!(g0, g1, "round {round}: frozen replicas moved the global");
         let bytes = sync.take_broadcast_bytes().unwrap();
-        adopt = link.adopt_encoded(&mut wc, None, &bytes).unwrap();
+        adopt = link.adopt_encoded(&mut wc, None, bytes.as_slice()).unwrap();
     }
     // ...while the broadcast EF stream alone keeps closing the lag
     assert!(
@@ -577,7 +579,7 @@ fn int4_outer_sync_with_error_feedback_is_unbiased_over_syncs() {
     let rounds = 40u64;
     let mut avg = vec![0.0f64; layout.total()];
     for round in 0..rounds {
-        let payloads: Vec<Vec<u8>> = rep_lits
+        let payloads: Vec<WireSlice> = rep_lits
             .iter()
             .enumerate()
             .map(|(r, lits)| {
@@ -585,7 +587,7 @@ fn int4_outer_sync_with_error_feedback_is_unbiased_over_syncs() {
                     .unwrap()
             })
             .collect();
-        let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+        let frames: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
         sync.sync_encoded(&frames, None).unwrap();
         for (a, &g) in avg.iter_mut().zip(sync.global().data()) {
             *a += g as f64 / rounds as f64;
@@ -1165,7 +1167,7 @@ fn sync_encoded_and_broadcast_invariant_to_sync_thread_count() {
             for round in 0..4u64 {
                 let rep_lits: Vec<Vec<Arc<xla::Literal>>> =
                     thetas.iter().map(|th| to_lits(&layout, th)).collect();
-                let payloads: Vec<Vec<u8>> = rep_lits
+                let payloads: Vec<WireSlice> = rep_lits
                     .iter()
                     .enumerate()
                     .map(|(r, lits)| {
@@ -1173,11 +1175,11 @@ fn sync_encoded_and_broadcast_invariant_to_sync_thread_count() {
                             .unwrap()
                     })
                     .collect();
-                let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+                let frames: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
                 sync.sync_encoded(&frames, None).unwrap();
                 if let Some(bytes) = sync.take_broadcast_bytes() {
-                    link.adopt_encoded(&mut wc, None, &bytes).unwrap();
-                    wires.push(bytes.to_vec());
+                    link.adopt_encoded(&mut wc, None, bytes.as_slice()).unwrap();
+                    wires.push(bytes.as_slice().to_vec());
                 } else {
                     // identity down-wire: adopt the exact literals
                     let adopt: Vec<(usize, Arc<xla::Literal>)> = sync
@@ -1189,7 +1191,7 @@ fn sync_encoded_and_broadcast_invariant_to_sync_thread_count() {
                         .collect();
                     link.adopt_literals(&mut wc, &adopt).unwrap();
                 }
-                for p in payloads {
+                for p in reclaim_wires(payloads) {
                     wc.recycle(p);
                 }
             }

@@ -229,7 +229,7 @@ fn barrier_oracle(up: OuterBits, down: OuterBits, m: usize) -> RunTrace {
             None
         };
         if wire_up {
-            let payloads: Vec<Vec<u8>> = {
+            let payloads: Vec<diloco::transport::frame::WireSlice> = {
                 let wc = &mut wc;
                 replicas
                     .iter()
@@ -240,7 +240,7 @@ fn barrier_oracle(up: OuterBits, down: OuterBits, m: usize) -> RunTrace {
                     })
                     .collect()
             };
-            let frames: Vec<&[u8]> = payloads.iter().map(|p| &p[..]).collect();
+            let frames: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
             sync.sync_encoded(&frames, frag).unwrap();
         } else {
             let parts: Vec<&[Arc<xla::Literal>]> =
@@ -251,7 +251,7 @@ fn barrier_oracle(up: OuterBits, down: OuterBits, m: usize) -> RunTrace {
         // broadcast, adopted on the spot (nothing runs in between)
         let adopt: Vec<(usize, Arc<xla::Literal>)> = if wire_down {
             let bytes = sync.take_broadcast_bytes().expect("lossy down payload");
-            link.adopt_encoded(&mut wc, frag, &bytes).unwrap()
+            link.adopt_encoded(&mut wc, frag, bytes.as_slice()).unwrap()
         } else {
             let leaves: Vec<usize> = sync.synced_leaves(frag).collect();
             let lits = sync.global_literals().unwrap();

@@ -17,15 +17,15 @@ use std::thread;
 
 use diloco::comm::{CommLink, OuterBits, ReplicaComm, WorkerComm};
 use diloco::coordinator::{
-    drive_ctl, drive_lanes, worker_session, DriveCtl, DrivePlan, EventKind, InnerEngine,
+    drive_ctl, drive_reactor, worker_session, DriveCtl, DrivePlan, EventKind, InnerEngine,
     OuterSync, OwnedReplica,
 };
 use diloco::runtime::HostTensor;
 use diloco::train::toy::{toy_init, toy_layout, toy_replicas, toy_replicas_for, ToyEngine};
 use diloco::transport::msg::Cmd;
 use diloco::transport::tcp::{
-    accept_workers, connect_with_backoff, worker_handshake, SessionInfo, TcpWorkerLink,
-    CONNECT_ATTEMPTS, ENGINE_TOY,
+    accept_workers, connect_with_backoff, worker_handshake, LaneReactor, SessionInfo,
+    TcpWorkerLink, CONNECT_ATTEMPTS, ENGINE_TOY,
 };
 use diloco::transport::WorkerLink;
 
@@ -180,12 +180,13 @@ fn run_tcp(up: OuterBits, down: OuterBits, tau: usize) -> RunResult {
         spawn_worker(addr, vec![2, 3], up, down),
     ];
     let lanes = accept_workers(&listener, workers.len(), &info).unwrap();
+    let mut reactor = LaneReactor::new(lanes).unwrap();
 
     let l = toy_layout();
     let engine = ToyEngine::new(&l);
     let mut sync = outer_sync(up, down);
     let mut ctl = DriveCtl::fresh(M);
-    let out = drive_lanes(&engine, lanes, Some(&mut sync), &plan(2, tau), &mut ctl)
+    let out = drive_reactor(&engine, &mut reactor, Some(&mut sync), &plan(2, tau), &mut ctl)
         .expect("tcp drive");
     let final_eval = engine.eval(sync.global_literals().unwrap()).unwrap();
 
@@ -321,12 +322,13 @@ fn dead_tcp_worker_becomes_a_journaled_crash_and_survivors_finish() {
         })
     };
     let lanes = accept_workers(&listener, 2, &info).unwrap();
+    let mut reactor = LaneReactor::new(lanes).unwrap();
 
     let l = toy_layout();
     let engine = ToyEngine::new(&l);
     let mut sync = outer_sync(OuterBits::Fp32, OuterBits::Fp32);
     let mut ctl = DriveCtl::fresh(M);
-    let out = drive_lanes(&engine, lanes, Some(&mut sync), &plan(2, 0), &mut ctl)
+    let out = drive_reactor(&engine, &mut reactor, Some(&mut sync), &plan(2, 0), &mut ctl)
         .expect("survivors must finish the schedule");
     assert_eq!(out.step_losses.len(), 22, "full schedule ran");
 

@@ -1,0 +1,150 @@
+//! The zero-copy acceptance audit: once warmed up, a socket sync round
+//! trip performs **zero wire-buffer allocations and zero payload
+//! staging copies on both legs**. Every frame buffer must come from a
+//! recycle pool and every payload must serialize straight into (and
+//! parse straight out of) its framed buffer.
+//!
+//! The audit counters ([`frame::metrics`]) are process globals, so this
+//! test lives in its own integration-test binary — nothing else
+//! allocates wire buffers while the measured window is open.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+
+use diloco::transport::frame::{metrics, reclaim_wires, WireBuf, WireSlice};
+use diloco::transport::msg::{
+    Broadcast, Cmd, PayloadSpec, SegmentChurn, SyncPayload, WorkerReport,
+};
+use diloco::transport::tcp::{
+    accept_workers, connect_with_backoff, worker_handshake, LaneReactor, SessionInfo,
+    TcpWorkerLink, CONNECT_ATTEMPTS, ENGINE_TOY,
+};
+use diloco::transport::WorkerLink;
+
+const WARMUP: usize = 4;
+const MEASURED: usize = 8;
+const TOTAL: usize = WARMUP + MEASURED;
+/// Per-round broadcast payload (streamed in two chunks) and report
+/// payload sizes — big enough that a stray staging copy would be a
+/// real memcpy, small enough to keep the test instant.
+const BCAST: [u8; 256] = [0xB7; 256];
+const REPORT_LEN: usize = 192;
+
+#[test]
+fn steady_state_socket_sync_allocates_and_copies_nothing() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let info = SessionInfo {
+        fingerprint: 0xA11_0C,
+        up_bits: 4,
+        down_bits: 4,
+        engine: ENGINE_TOY,
+        live: vec![true],
+        config_json: String::from("{}"),
+    };
+
+    let worker = thread::spawn(move || {
+        let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+        let got = worker_handshake(&mut stream, &[0], 0, 0, 0).unwrap();
+        let mut link = TcpWorkerLink::new(stream, &got).unwrap();
+        // encode buffers reclaimed from shipped reports, reused forever
+        let mut bank: Vec<WireBuf> = Vec::new();
+        for round in 0..TOTAL {
+            // absorb synthesized Spares, then take the round's Run
+            // (its streamed Bcast resolves transparently underneath)
+            let cmd = loop {
+                match link.recv_cmd().expect("coordinator is alive") {
+                    Cmd::Spares(bufs) => bank.extend(bufs),
+                    other => break other,
+                }
+            };
+            let Cmd::Run {
+                from,
+                broadcast: Broadcast::Encoded { bytes, .. },
+                ..
+            } = cmd
+            else {
+                panic!("round {round}: expected Run with a streamed broadcast");
+            };
+            assert_eq!(from, round);
+            assert_eq!(bytes.as_slice(), &BCAST, "round {round}: broadcast bytes");
+            drop(bytes); // release the frame so the sweep can reclaim it
+            // encode the uplink into a recycled buffer (a fresh alloc
+            // only while the bank is still priming)
+            let mut buf = bank.pop().unwrap_or_default();
+            buf.reset();
+            buf.extend_payload(&[round as u8; REPORT_LEN]);
+            link.send_report(Ok(WorkerReport {
+                reps: vec![(
+                    0,
+                    vec![round as f64],
+                    SyncPayload::Encoded(WireSlice::whole(Arc::new(buf))),
+                )],
+            }))
+            .unwrap();
+        }
+        // drain the last round's Spares, then the Finish
+        loop {
+            match link.recv_cmd().expect("awaiting Finish") {
+                Cmd::Spares(_) => continue,
+                Cmd::Finish { .. } => break,
+                Cmd::Run { .. } => panic!("expected Finish, got another Run"),
+            }
+        }
+    });
+
+    let lanes = accept_workers(&listener, 1, &info).unwrap();
+    let mut reactor = LaneReactor::new(lanes).unwrap();
+    // headroom so a heartbeat landing mid-round never finds the pool
+    // dry (its buffers are taken and returned inside the read pump)
+    reactor.recycle((0..4).map(|_| WireBuf::new()).collect());
+
+    let mut measured: Option<(u64, u64)> = None;
+    for round in 0..TOTAL {
+        if round == WARMUP {
+            measured = Some(metrics::snapshot());
+        }
+        // downlink: streamed broadcast + the Run that references it
+        reactor.bcast_begin(None, round as u64, BCAST.len() as u64).unwrap();
+        reactor.bcast_chunk(&BCAST[..128]).unwrap();
+        reactor.bcast_chunk(&BCAST[128..]).unwrap();
+        reactor
+            .send_cmd(&Cmd::Run {
+                from: round,
+                to: round + 1,
+                broadcast: Broadcast::Pending { frag: None },
+                payload: PayloadSpec::None,
+                churn: SegmentChurn::default(),
+            })
+            .unwrap();
+        // uplink: collect, check, reclaim the frame into the pool
+        let reports = reactor.collect_reports().unwrap();
+        assert_eq!(reports.len(), 1, "round {round}");
+        let mut spent: Vec<WireSlice> = Vec::new();
+        for rep in reports {
+            for (rid, losses, p) in rep.reps {
+                assert_eq!(rid, 0);
+                assert_eq!(losses, vec![round as f64]);
+                let SyncPayload::Encoded(ws) = p else {
+                    panic!("round {round}: expected an encoded payload");
+                };
+                assert_eq!(ws.as_slice(), &[round as u8; REPORT_LEN]);
+                spent.push(ws);
+            }
+        }
+        reactor.recycle(reclaim_wires(spent));
+    }
+
+    let (alloc0, copy0) = measured.expect("warmup completed");
+    let (alloc1, copy1) = metrics::snapshot();
+    assert_eq!(
+        (alloc1 - alloc0, copy1 - copy0),
+        (0, 0),
+        "steady-state rounds {WARMUP}..{TOTAL} must allocate no wire buffers and \
+         stage no payload copies on either leg"
+    );
+
+    reactor.send_finish(&Broadcast::empty());
+    worker.join().unwrap();
+}

@@ -173,6 +173,15 @@ impl Literal {
             .ok_or_else(|| Error(format!("to_vec: literal is {}", self.buf.dtype_name())))
     }
 
+    /// Borrow the elements without copying — the zero-copy wire
+    /// serializer reads bit patterns straight from here instead of
+    /// staging through `to_vec`. (Real bindings expose the backing
+    /// buffer via `untyped_data`; same two-line shim as `to_slice`.)
+    pub fn as_slice<T: NativeType>(&self) -> Result<&[T]> {
+        T::slice_from(&self.buf)
+            .ok_or_else(|| Error(format!("as_slice: literal is {}", self.buf.dtype_name())))
+    }
+
     /// Copy the elements into a caller-provided slice — the
     /// allocation-free read-back the flat parameter bus uses on the
     /// sync hot path. (Real bindings expose the same read via
