@@ -545,6 +545,287 @@ fn bench_loopback(b: &mut Bencher, layout: &Arc<FlatLayout>) {
     }
 }
 
+/// The arrival-pipelined up-leg against its one-shot twin, M=4 over
+/// int4/int4 on real sockets: both rows drive the identical sync —
+/// four worker links, the same encoded contribution bytes, the same
+/// fused reduce + Nesterov step on the coordinator — but the streamed
+/// row ships block-aligned `ContribChunk` frames and reduces behind
+/// arrival. The delta between the rows is the wire-wait the pipeline
+/// reclaims. A warmup round asserts `fired_early > 0` — some shard
+/// reduced before the last contribution byte landed — so the streamed
+/// row measures a real pipeline, not a renamed barrier.
+fn bench_loopback_streamed(b: &mut Bencher, layout: &Arc<FlatLayout>) {
+    use diloco::transport::frame::{reclaim_wires, WireBuf, WireSlice};
+    use diloco::transport::msg::{
+        Broadcast, Cmd, EncodeSpec, PayloadSpec, SegmentChurn, SyncPayload, WorkerReport,
+    };
+    use diloco::transport::tcp::{
+        accept_workers, connect_with_backoff, worker_handshake, LaneReactor, SessionInfo,
+        TcpWorkerLink, CONNECT_ATTEMPTS, ENGINE_TOY,
+    };
+    use diloco::transport::WorkerLink;
+    use std::net::TcpListener;
+
+    const M: usize = 4;
+    let bits = OuterBits::Int4;
+    let n = layout.total();
+    let n_leaves = layout.n_leaves();
+    let pristine = randn_params(layout, 7);
+    let host: Vec<HostTensor> = pristine.to_host();
+    let init_lits: Vec<Arc<xla::Literal>> = (0..n_leaves)
+        .map(|l| Arc::new(pristine.leaf_literal(l).unwrap()))
+        .collect();
+    let mut sync = OuterSync::new(Arc::clone(layout), &host, init_lits.clone(), 0.8, 0.9, 1)
+        .expect("streamed bench sync setup")
+        .with_codec(codec_for(bits), 7)
+        .with_down_codec(codec_for(bits))
+        .with_sync_threads(M);
+    let link = sync.link();
+    let payload_len = link.payload_bytes(None);
+    // real int4 contribution bytes per replica, encoded once up front
+    let payloads: Vec<Vec<u8>> = (0..M)
+        .map(|r| {
+            let p = randn_params(layout, 300 + r as u64);
+            let state: Vec<Arc<xla::Literal>> = (0..n_leaves)
+                .map(|l| Arc::new(p.leaf_literal(l).unwrap()))
+                .collect();
+            let mut wc = WorkerComm::default();
+            let mut rc = ReplicaComm::default();
+            link.init_snapshot(&mut wc, &init_lits).unwrap();
+            link.init_replica(&mut rc);
+            link.encode_replica(r, &state, &mut wc, &mut rc, None, 0)
+                .unwrap()
+                .as_slice()
+                .to_vec()
+        })
+        .collect();
+    // ~8 block-aligned cuts per contribution — the wire grid the
+    // arrival reduce reassembles on
+    let cuts: Vec<usize> = {
+        let codec = codec_for(bits);
+        let mut grid = Vec::new();
+        let mut off = 0usize;
+        for r in link.up().ranges(None) {
+            let mut e = BLOCK;
+            while e < r.len() {
+                grid.push(off + codec.wire_bytes(e));
+                e += BLOCK;
+            }
+            off += codec.wire_bytes(r.len());
+            grid.push(off);
+        }
+        grid.pop();
+        let stride = (grid.len() / 7).max(1);
+        grid.into_iter().step_by(stride).collect()
+    };
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("streamed bench bind");
+    let addr = listener.local_addr().expect("streamed bench addr").to_string();
+    let info = SessionInfo {
+        fingerprint: 0xBE7D,
+        up_bits: bits.bits() as u8,
+        down_bits: bits.bits() as u8,
+        engine: ENGINE_TOY,
+        live: vec![true; M],
+        config_json: String::from("{}"),
+    };
+    let handles: Vec<_> = (0..M)
+        .map(|rid| {
+            let addr = addr.clone();
+            let payload = payloads[rid].clone();
+            let chunks: Vec<(usize, Vec<u8>)> = {
+                let mut bounds = vec![0usize];
+                bounds.extend(cuts.iter().copied());
+                bounds.push(payload.len());
+                bounds
+                    .windows(2)
+                    .filter(|w| w[0] < w[1])
+                    .map(|w| (w[0], payload[w[0]..w[1]].to_vec()))
+                    .collect()
+            };
+            std::thread::spawn(move || {
+                let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS)
+                    .expect("streamed bench connect");
+                let got = worker_handshake(&mut stream, &[rid], 0, 0, 0)
+                    .expect("streamed bench handshake");
+                let mut link = TcpWorkerLink::new(stream, &got).expect("streamed bench link");
+                let mut bank: Vec<WireBuf> = Vec::new();
+                loop {
+                    match link.recv_cmd() {
+                        Some(Cmd::Spares(bufs)) => bank.extend(bufs),
+                        Some(Cmd::Run { broadcast, payload: spec, .. }) => {
+                            drop(broadcast);
+                            let PayloadSpec::Encoded(spec) = spec else {
+                                panic!("streamed bench expects an encoded payload spec");
+                            };
+                            if spec.stream {
+                                for (off, bytes) in &chunks {
+                                    link.send_contrib_chunk(
+                                        rid,
+                                        spec.sync_index,
+                                        spec.frag,
+                                        *off,
+                                        bytes,
+                                    )
+                                    .expect("streamed bench chunk");
+                                }
+                                link.send_report(Ok(WorkerReport {
+                                    reps: vec![(rid, vec![0.0], SyncPayload::Streamed)],
+                                }))
+                                .expect("streamed bench report");
+                            } else {
+                                let mut buf = bank.pop().unwrap_or_default();
+                                buf.reset();
+                                buf.extend_payload(&payload);
+                                link.send_report(Ok(WorkerReport {
+                                    reps: vec![(
+                                        rid,
+                                        vec![0.0],
+                                        SyncPayload::Encoded(WireSlice::whole(Arc::new(buf))),
+                                    )],
+                                }))
+                                .expect("streamed bench report");
+                            }
+                        }
+                        Some(Cmd::Finish { .. }) | None => break,
+                    }
+                }
+            })
+        })
+        .collect();
+    let lanes = accept_workers(&listener, M, &info).expect("streamed bench accept");
+    let mut reactor = LaneReactor::new(lanes).expect("streamed bench reactor");
+
+    // any pending broadcast from the previous round ships first, so
+    // every timed iteration is a full down + up + reduce + step round
+    fn ship_pending(sync: &mut OuterSync, reactor: &mut LaneReactor, round: u64) -> Broadcast {
+        match sync.take_broadcast_bytes() {
+            Some(ws) => {
+                reactor
+                    .bcast_begin(None, round, ws.len() as u64)
+                    .expect("streamed bench bcast");
+                reactor.bcast_chunk(ws.as_slice()).expect("streamed bench bcast chunk");
+                for p in reclaim_wires(vec![ws]) {
+                    sync.recycle_wire(p);
+                }
+                Broadcast::Pending { frag: None }
+            }
+            None => Broadcast::empty(),
+        }
+    }
+
+    fn one_shot_round(sync: &mut OuterSync, reactor: &mut LaneReactor, round: u64) -> usize {
+        let broadcast = ship_pending(sync, reactor, round);
+        reactor
+            .send_cmd(&Cmd::Run {
+                from: round as usize,
+                to: round as usize + 1,
+                broadcast,
+                payload: PayloadSpec::Encoded(EncodeSpec {
+                    frag: None,
+                    sync_index: round,
+                    stream: false,
+                }),
+                churn: SegmentChurn::default(),
+            })
+            .expect("streamed bench run");
+        let reports = reactor.collect_reports().expect("streamed bench collect");
+        let mut slots: Vec<Option<WireSlice>> = vec![None; M];
+        for rep in reports {
+            for (rid, _, p) in rep.reps {
+                if let SyncPayload::Encoded(ws) = p {
+                    slots[rid] = Some(ws);
+                }
+            }
+        }
+        let spent: Vec<WireSlice> = slots
+            .into_iter()
+            .map(|s| s.expect("streamed bench payload"))
+            .collect();
+        {
+            let frames: Vec<&[u8]> = spent.iter().map(|s| s.as_slice()).collect();
+            sync.sync_encoded(&frames, None).expect("streamed bench one-shot sync");
+        }
+        let got = spent.len();
+        reactor.recycle(reclaim_wires(spent));
+        got
+    }
+
+    fn streamed_round(
+        sync: &mut OuterSync,
+        reactor: &mut LaneReactor,
+        round: u64,
+        rids: &[usize],
+    ) -> (usize, usize) {
+        let broadcast = ship_pending(sync, reactor, round);
+        let mut ar = sync.arrival_begin(rids, None).expect("streamed bench arrival");
+        reactor
+            .send_cmd(&Cmd::Run {
+                from: round as usize,
+                to: round as usize + 1,
+                broadcast,
+                payload: PayloadSpec::Encoded(EncodeSpec {
+                    frag: None,
+                    sync_index: round,
+                    stream: true,
+                }),
+                churn: SegmentChurn::default(),
+            })
+            .expect("streamed bench run");
+        let reports = reactor
+            .collect_reports_streamed(round, None, &mut |rid, off, ws| {
+                sync.arrival_chunk(&mut ar, rid, off, ws)
+            })
+            .expect("streamed bench collect");
+        for rep in &reports {
+            for (_, _, p) in &rep.reps {
+                assert!(
+                    matches!(p, SyncPayload::Streamed),
+                    "streamed bench expects streamed payloads"
+                );
+            }
+        }
+        let early = ar.fired_early();
+        let spent = sync.sync_arrival(ar, rids, None).expect("streamed bench arrival sync");
+        let got = spent.len();
+        reactor.recycle(reclaim_wires(spent));
+        (got, early)
+    }
+
+    let rids: Vec<usize> = (0..M).collect();
+    let mut round = 0u64;
+    // warmup, and the acceptance proof: the reduce starts before the
+    // last contribution byte arrives
+    let (_, early) = streamed_round(&mut sync, &mut reactor, round, &rids);
+    assert!(early > 0, "streamed loopback sync never reduced behind arrival");
+    round += 1;
+    let moved = ((M + 1) * payload_len) as u64;
+    b.run_throughput(
+        &format!("transport/loopback sync latency {} one-shot ({M} workers)", bits.label()),
+        moved,
+        n as u64,
+        || {
+            let got = one_shot_round(&mut sync, &mut reactor, round);
+            round += 1;
+            got
+        },
+    );
+    b.run_throughput(
+        &format!("transport/loopback sync latency {} streamed ({M} workers)", bits.label()),
+        moved,
+        n as u64,
+        || {
+            let (got, _) = streamed_round(&mut sync, &mut reactor, round, &rids);
+            round += 1;
+            got
+        },
+    );
+    reactor.send_finish(&Broadcast::empty());
+    for h in handles {
+        h.join().expect("streamed bench worker");
+    }
+}
+
 /// PJRT execution cases (need `make artifacts`).
 fn bench_pjrt(b: &mut Bencher, repo: &RepoConfig) -> anyhow::Result<()> {
     let rt = Runtime::cpu()?;
@@ -984,6 +1265,8 @@ fn main() -> anyhow::Result<()> {
         bench_journal(&mut b, &layout);
         // socket sync latency over 127.0.0.1 (reactor + worker link)
         bench_loopback(&mut b, &layout);
+        // arrival-pipelined up-leg vs its one-shot twin (M=4, int4)
+        bench_loopback_streamed(&mut b, &layout);
     }
 
     // data pipeline throughput

@@ -26,6 +26,7 @@ USAGE:
                  [--outer-bits 32|16|8|4]       # up-wire width: outer gradients (32 = exact fp32)
                  [--outer-bits-down 32|16|8|4]  # down-wire width: global broadcast (32 = literal handoff)
                  [--churn SPEC]  # deterministic fault plan, e.g. \"crash@2:r1,join@3:r4\" or \"rate=0.1\"
+                 [--verbose]  # per-sync stage latency lines on stderr (enc/wire/reduce/step/bcast)
   diloco checkpoint --after-sync K [--out runs/ckpt.json] [train flags...]
                                     # run until outer sync K completes, snapshot, stop
   diloco resume  --from runs/ckpt.json   # finish the run; bit-identical to uninterrupted
@@ -134,6 +135,7 @@ fn run_config_from_args(args: &Args) -> Result<RunConfig> {
         cfg.churn = c;
     }
     cfg.downstream = args.flag("downstream");
+    cfg.verbose = args.flag("verbose");
     Ok(cfg)
 }
 

@@ -131,7 +131,8 @@ fn toy_outer_sync(layout: &Arc<FlatLayout>, cfg: &RunConfig, fragments: usize) -
     )?
     .with_sync_threads(cfg.sync_threads.max(1))
     .with_codec(codec_for(cfg.outer_bits), cfg.seed)
-    .with_down_codec(codec_for(cfg.outer_bits_down)))
+    .with_down_codec(codec_for(cfg.outer_bits_down))
+    .with_verbose(cfg.verbose))
 }
 
 /// The one line CI diffs between the `--expect 0` oracle and the real

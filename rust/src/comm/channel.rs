@@ -325,6 +325,57 @@ impl Channel {
         })
     }
 
+    /// [`Channel::encode_ef_into`] cut into up to `chunks` block-aligned
+    /// chunks, each handed to `flush` as `(wire-byte offset, bytes)` the
+    /// moment it is encoded — **sequentially, on the caller's thread**.
+    /// This is the worker-side up-leg streamer: a pool worker's cores
+    /// are already saturated by its siblings, so unlike
+    /// [`Channel::encode_ef_chunked`] it spawns nothing; the win is
+    /// overlapping the socket with the *remaining* chunks' encode.
+    /// Chunks are flushed in payload order with contiguous offsets
+    /// (chunk k+1 starts where k ended, the first at 0), and their
+    /// concatenation is byte-identical to the one-shot payload at any
+    /// chunk count — the cuts ride the same block-aligned shard
+    /// partition the thread-count-invariance tests pin.
+    ///
+    /// On `Err` (a failed flush is a dead transport) the EF arenas are
+    /// partially advanced and must be treated as poisoned — callers
+    /// abandon the run, never retry the sync.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_ef_streamed(
+        &self,
+        staging: &mut [f32],
+        residual: &mut [f32],
+        frag: Option<usize>,
+        sync_index: u64,
+        stream: u64,
+        chunks: usize,
+        out: &mut WireBuf,
+        flush: &mut dyn FnMut(usize, &[u8]) -> Result<()>,
+    ) -> Result<()> {
+        let ranges = self.ranges(frag);
+        out.reset();
+        out.resize_payload(self.payload_bytes(frag));
+        let items = shard_items(
+            self,
+            &ranges,
+            chunks,
+            out.payload_mut(),
+            staging,
+            residual,
+        );
+        let mut off = 0usize;
+        for (pieces, wires, stages, resids) in items {
+            let views =
+                self.encode_shard(&ranges, sync_index, stream, &pieces, wires, stages, resids)?;
+            for v in views {
+                flush(off, v)?;
+                off += v.len();
+            }
+        }
+        Ok(())
+    }
+
     /// One shard's error-feedback encode — the single implementation
     /// both the fork-join and the streaming paths run, so their bytes
     /// cannot drift. Returns the shard's wire views downgraded to
@@ -813,6 +864,60 @@ mod tests {
                             "{bits:?} t={threads} residual[{i}]"
                         );
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_encode_flushes_the_exact_one_shot_bytes() {
+        // multi-block leaves so the shard cutter actually cuts, with an
+        // odd tail so int4's padded final block is exercised
+        let layout = Arc::new(FlatLayout::new(vec![vec![700], vec![300, 2], vec![513]]));
+        let total = layout.total();
+        let delta: Vec<f32> = (0..total).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let resid0: Vec<f32> = (0..total).map(|i| (i as f32 * 0.001) - 0.9).collect();
+        for bits in OuterBits::ALL {
+            let c = Channel::new(layout.clone(), codec_for(bits), 2, 11, Direction::Up);
+            let mut base_wire = WireBuf::new();
+            let mut base_stage = delta.clone();
+            let mut base_resid = resid0.clone();
+            c.encode_ef_into(&mut base_stage, &mut base_resid, Some(1), 4, 2, 1, &mut base_wire)
+                .unwrap();
+            for chunks in [1, 2, 5, 16] {
+                let mut wire = WireBuf::new();
+                let mut stage = delta.clone();
+                let mut resid = resid0.clone();
+                let mut streamed = Vec::new();
+                let mut offs = Vec::new();
+                c.encode_ef_streamed(
+                    &mut stage,
+                    &mut resid,
+                    Some(1),
+                    4,
+                    2,
+                    chunks,
+                    &mut wire,
+                    &mut |off, bytes| {
+                        offs.push((off, bytes.len()));
+                        streamed.extend_from_slice(bytes);
+                        Ok(())
+                    },
+                )
+                .unwrap();
+                // offsets are contiguous from 0 — the receive-side
+                // watermark discipline depends on this
+                let mut expect = 0usize;
+                for &(off, len) in &offs {
+                    assert_eq!(off, expect, "{bits:?} chunks={chunks}");
+                    expect = off + len;
+                }
+                assert_eq!(expect, base_wire.payload_len());
+                assert_eq!(streamed, base_wire.payload(), "{bits:?} chunks={chunks}");
+                assert_eq!(wire.payload(), base_wire.payload());
+                for i in 0..total {
+                    assert_eq!(stage[i].to_bits(), base_stage[i].to_bits());
+                    assert_eq!(resid[i].to_bits(), base_resid[i].to_bits());
                 }
             }
         }

@@ -415,7 +415,94 @@ impl CommLink {
         )?;
         Ok(WireSlice::whole(Arc::new(out)))
     }
+
+    /// How many chunks a streamed up-leg encode of `frag` cuts:
+    /// one per [`STREAM_CHUNK_BYTES`] of payload, clamped to
+    /// `1..=32`. Chunk count never changes the payload bytes (pinned
+    /// by the shard-count-invariance tests), so this is purely a
+    /// latency/overhead trade — small payloads go out whole.
+    pub fn stream_chunks(&self, frag: Option<usize>) -> usize {
+        self.payload_bytes(frag).div_ceil(STREAM_CHUNK_BYTES).clamp(1, 32)
+    }
+
+    /// [`CommLink::encode_replica`] with streaming flushes for lossy
+    /// up-wires: the contribution is encoded in `chunks` block-aligned
+    /// chunks and each is handed to `flush` as `(wire-byte offset,
+    /// bytes)` the moment it is ready — contiguous offsets from 0, in
+    /// payload order, concatenating to exactly the one-shot payload
+    /// ([`Channel::encode_ef_streamed`]). Nothing is returned: the
+    /// bytes went out through `flush`, the encode buffer is recycled
+    /// into the worker's spare pool, and the report carries
+    /// `SyncPayload::Streamed` in place of the payload.
+    ///
+    /// Identity up-wires never stream (their raw-literal path has no
+    /// encode to overlap) — calling this on one is a driver bug and
+    /// fails loud. On `Err` from `flush` the replica's EF residual is
+    /// poisoned; the run must be abandoned, never the sync retried.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_replica_streamed(
+        &self,
+        rep: usize,
+        state: &[Arc<xla::Literal>],
+        wc: &mut WorkerComm,
+        rc: &mut ReplicaComm,
+        frag: Option<usize>,
+        sync_index: u64,
+        chunks: usize,
+        flush: &mut dyn FnMut(usize, &[u8]) -> Result<()>,
+    ) -> Result<()> {
+        let layout = self.up.layout();
+        let total = layout.total();
+        if self.up.is_identity() {
+            bail!("comm encode: identity up-wire never streams (replica {rep})");
+        }
+        if state.len() < layout.n_leaves() {
+            bail!(
+                "comm encode: replica {rep} has {} state leaves, layout wants {}",
+                state.len(),
+                layout.n_leaves()
+            );
+        }
+        if wc.scratch.len() != total {
+            wc.scratch = vec![0.0; total];
+        }
+        for leaf in layout.leaves(self.up.fragments(), frag) {
+            let r = layout.range(leaf);
+            state[leaf]
+                .to_slice::<f32>(&mut wc.scratch[r])
+                .map_err(|e| anyhow::anyhow!("comm encode: pulling leaf {leaf}: {e}"))?;
+        }
+        if wc.snap.len() != total {
+            bail!("comm encode: lossy up-wire without init_snapshot (replica {rep})");
+        }
+        if rc.residual.len() != total {
+            bail!("comm encode: replica {rep} residual not initialized");
+        }
+        for r in self.up.ranges(frag) {
+            for i in r {
+                wc.staging[i] = wc.snap[i] - wc.scratch[i];
+            }
+        }
+        let mut out = wc.take_buf();
+        let result = self.up.encode_ef_streamed(
+            &mut wc.staging,
+            &mut rc.residual,
+            frag,
+            sync_index,
+            rep as u64,
+            chunks,
+            &mut out,
+            flush,
+        );
+        wc.recycle(out);
+        result
+    }
 }
+
+/// Target payload bytes per streamed up-leg chunk (~64 KiB): big
+/// enough that per-chunk frame + syscall overhead is noise, small
+/// enough that encode and socket genuinely overlap on real payloads.
+pub const STREAM_CHUNK_BYTES: usize = 64 << 10;
 
 #[cfg(test)]
 mod tests {
@@ -570,6 +657,47 @@ mod tests {
         let mut wc2 = WorkerComm::default();
         lk2.init_snapshot(&mut wc2, &lits(&l, |_| 0.0)).unwrap();
         assert_eq!(wc2.arena_bytes(), 2 * total * 4);
+    }
+
+    #[test]
+    fn streamed_replica_encode_matches_one_shot() {
+        let l = layout();
+        let lk = link(OuterBits::Int4, OuterBits::Fp32);
+        let state = lits(&l, |i| (i as f32 * 0.3).sin());
+        let mk = || {
+            let mut wc = WorkerComm::default();
+            let mut rc = ReplicaComm::default();
+            lk.init_snapshot(&mut wc, &lits(&l, |_| 0.0)).unwrap();
+            lk.init_replica(&mut rc);
+            (wc, rc)
+        };
+        let (mut wc0, mut rc0) = mk();
+        let one_shot = lk
+            .encode_replica(1, &state, &mut wc0, &mut rc0, None, 5)
+            .unwrap();
+        for chunks in [1, 3] {
+            let (mut wc, mut rc) = mk();
+            let mut streamed = Vec::new();
+            lk.encode_replica_streamed(1, &state, &mut wc, &mut rc, None, 5, chunks, &mut |off, b| {
+                assert_eq!(off, streamed.len(), "chunks={chunks}");
+                streamed.extend_from_slice(b);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(streamed, one_shot.as_slice(), "chunks={chunks}");
+            assert_eq!(rc.residual(), rc0.residual());
+            // the encode buffer came back to the spare pool
+            assert_eq!(wc.spares.len(), 1);
+        }
+        // identity up-wires must refuse to stream
+        let idlk = link(OuterBits::Fp32, OuterBits::Fp32);
+        let mut wc = WorkerComm::default();
+        let mut rc = ReplicaComm::default();
+        assert!(idlk
+            .encode_replica_streamed(0, &state, &mut wc, &mut rc, None, 0, 1, &mut |_, _| Ok(()))
+            .is_err());
+        // chunk-count heuristic: tiny payloads go out whole
+        assert_eq!(lk.stream_chunks(None), 1);
     }
 
     #[test]

@@ -173,6 +173,13 @@ pub struct RunConfig {
     /// training results, so a non-empty spec IS part of the sweep-store
     /// run id (`_ch{spec}`). Inert for Data-Parallel.
     pub churn: String,
+    /// Print a per-sync stage-latency breakdown (`sync:` lines on
+    /// stderr: encode / wire-wait / decode+reduce / outer-step /
+    /// broadcast). Pure observability — deliberately excluded from
+    /// `to_json` and therefore from the handshake fingerprint, so a
+    /// verbose coordinator still accepts quiet workers and resumed
+    /// checkpoints are unaffected.
+    pub verbose: bool,
 }
 
 impl Default for RunConfig {
@@ -199,6 +206,7 @@ impl Default for RunConfig {
             outer_bits: OuterBits::Fp32,
             outer_bits_down: OuterBits::Fp32,
             churn: String::new(),
+            verbose: false,
         }
     }
 }
@@ -273,6 +281,8 @@ impl RunConfig {
                 .and_then(|v| v.as_str())
                 .unwrap_or_default()
                 .to_string(),
+            // observability knob, never serialized: quiet on resume
+            verbose: false,
         })
     }
 
@@ -336,6 +346,18 @@ pub struct RunMetrics {
     /// cost the run (crashes + leaves over m × n_syncs) — the x-axis
     /// of `diloco report --exp churn`.
     pub dropout_rate: f64,
+    /// Mean per-sync stage latencies in milliseconds, from the outer
+    /// bus's stage log (0.0 when the run had no outer syncs or no
+    /// codec). `sync_wire_wait_ms` is the collect wall time *minus*
+    /// any decode→reduce work that ran inside the collect — under the
+    /// arrival-pipelined up-leg that subtraction is exactly the
+    /// overlap won, so streamed runs show it shrinking while
+    /// `sync_reduce_ms` holds steady.
+    pub sync_encode_ms: f64,
+    pub sync_wire_wait_ms: f64,
+    pub sync_reduce_ms: f64,
+    pub sync_step_ms: f64,
+    pub sync_bcast_ms: f64,
 }
 
 impl RunMetrics {
@@ -385,6 +407,11 @@ impl RunMetrics {
             ("wire_framed_bytes", Json::int(self.wire_framed_bytes)),
             ("churn", Json::str(&self.churn)),
             ("dropout_rate", Json::num(self.dropout_rate)),
+            ("sync_encode_ms", Json::num(self.sync_encode_ms)),
+            ("sync_wire_wait_ms", Json::num(self.sync_wire_wait_ms)),
+            ("sync_reduce_ms", Json::num(self.sync_reduce_ms)),
+            ("sync_step_ms", Json::num(self.sync_step_ms)),
+            ("sync_bcast_ms", Json::num(self.sync_bcast_ms)),
         ])
     }
 
@@ -470,6 +497,15 @@ impl RunMetrics {
                 .unwrap_or_default()
                 .to_string(),
             dropout_rate: j.get("dropout_rate").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            // absent in pre-pipelined-sync records: no stage log then
+            sync_encode_ms: j.get("sync_encode_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            sync_wire_wait_ms: j
+                .get("sync_wire_wait_ms")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            sync_reduce_ms: j.get("sync_reduce_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            sync_step_ms: j.get("sync_step_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            sync_bcast_ms: j.get("sync_bcast_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
         })
     }
 }
@@ -863,7 +899,8 @@ fn prepare(mr: &ModelRuntime, policy: &OptimizerPolicy, cfg: &RunConfig) -> Resu
                 cfg.workers.max(1)
             } else {
                 cfg.sync_threads
-            }),
+            })
+            .with_verbose(cfg.verbose),
         )
     } else {
         None
@@ -1131,6 +1168,22 @@ fn finish(
         ),
         None => (0, 0, 0),
     };
+    let stage_ms = match &sync {
+        Some(bus) if !bus.stage_log().is_empty() => {
+            let log = bus.stage_log();
+            let mean = |f: fn(&crate::coordinator::sync::SyncStages) -> f64| {
+                1e3 * log.iter().map(f).sum::<f64>() / log.len() as f64
+            };
+            [
+                mean(|s| s.encode_s),
+                mean(|s| s.wire_wait_s),
+                mean(|s| s.reduce_s),
+                mean(|s| s.step_s),
+                mean(|s| s.bcast_s),
+            ]
+        }
+        _ => [0.0; 5],
+    };
 
     Ok(RunMetrics {
         model: cfg.model.clone(),
@@ -1161,5 +1214,10 @@ fn finish(
         wire_framed_bytes,
         churn: pre.churn_spec.clone(),
         dropout_rate: pre.dropout_rate,
+        sync_encode_ms: stage_ms[0],
+        sync_wire_wait_ms: stage_ms[1],
+        sync_reduce_ms: stage_ms[2],
+        sync_step_ms: stage_ms[3],
+        sync_bcast_ms: stage_ms[4],
     })
 }

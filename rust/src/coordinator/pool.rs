@@ -108,6 +108,7 @@
 //! worker count for any τ.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -115,9 +116,9 @@ use crate::comm::{CommLink, ReplicaComm, WorkerComm};
 use crate::coordinator::fsm::{CoordinatorFsm, Phase};
 use crate::coordinator::journal::{EventKind, Journal};
 use crate::coordinator::membership::{FaultEvent, FaultKind};
-use crate::coordinator::sync::OuterSync;
+use crate::coordinator::sync::{ArrivalReduce, OuterSync};
 use crate::data::synthetic::TokenStream;
-use crate::transport::frame::{reclaim_wires, WireBuf};
+use crate::transport::frame::{reclaim_wires, WireBuf, WireSlice};
 use crate::transport::msg::{
     Adopt, Broadcast, Cmd, EncodeSpec, PayloadSpec, SegmentChurn, SegmentData, SyncPayload,
     WorkerReport,
@@ -511,6 +512,7 @@ pub fn drive_ctl<E: InnerEngine>(
                 rcs: &mut rcs,
                 live: init_live,
                 staged: None,
+                encode_s: 0.0,
             };
             coordinate(engine, &mut exec, sync, plan, m, ctl)?
         };
@@ -679,6 +681,41 @@ trait SegmentExec {
     /// per-replica per-step losses + boundary sync payloads.
     fn collect(&mut self, from: usize, to: usize) -> Result<SegmentData>;
 
+    /// Whether this executor's transport streams up-leg contributions:
+    /// workers ship `ContribChunk` frames ahead of their reports and
+    /// the coordinator collects send boundaries through
+    /// [`SegmentExec::collect_streamed`], feeding an arrival-pipelined
+    /// reduce. Default: no — contributions ride whole in the reports.
+    fn stream_up(&self) -> bool {
+        false
+    }
+
+    /// [`SegmentExec::collect`], feeding every streamed contribution
+    /// chunk into `sink` as `(rid, wire-byte offset, bytes)` the
+    /// moment it arrives — before the reports complete, which is the
+    /// whole point: the reduce runs behind arrival instead of after
+    /// the last byte. `sync_index`/`frag` pin which sync the chunks
+    /// must belong to (a stale or future chunk is a protocol error).
+    fn collect_streamed(
+        &mut self,
+        _from: usize,
+        _to: usize,
+        _sync_index: u64,
+        _frag: Option<usize>,
+        _sink: &mut dyn FnMut(usize, usize, WireSlice) -> Result<()>,
+    ) -> Result<SegmentData> {
+        bail!("drive: this executor does not stream contributions")
+    }
+
+    /// Up-leg encode seconds observed since the last call (inline
+    /// oracle only — it encodes on the coordinator's thread; pooled
+    /// workers encode concurrently, where the clock is invisible and
+    /// the time folds into the wire wait). Purely a latency-breakdown
+    /// channel; the default reports nothing.
+    fn take_encode_time(&mut self) -> f64 {
+        0.0
+    }
+
     /// Return spent wire buffers from a completed reduce to the
     /// workers' encode pools. Purely an allocation-reuse channel —
     /// buffers carry no data (every byte is rewritten on reuse), so
@@ -736,6 +773,11 @@ struct InFlight {
     /// Replicas live at send time (the reduce averages over exactly
     /// these — mean over survivors when membership churned).
     contributors: Vec<usize>,
+    /// Streamed sends carry their arrival-pipelined reduce state: the
+    /// contributions were decoded and reduced as their chunks arrived
+    /// (during the send boundary's collect), so the merge only runs
+    /// the outer step + broadcast. `None` = one-shot payloads.
+    arrival: Option<ArrivalReduce>,
 }
 
 /// End of the segment starting after `t0`: the next outer-sync send
@@ -794,6 +836,7 @@ fn reduce_and_broadcast<X: SegmentExec>(
         frag,
         payloads,
         contributors,
+        arrival,
         ..
     } = infl;
     if contributors.is_empty() {
@@ -801,7 +844,33 @@ fn reduce_and_broadcast<X: SegmentExec>(
     }
     let mut spent: Vec<WireBuf> = Vec::new();
     let mut streamed = false;
-    if wire_codec {
+    if let Some(ar) = arrival {
+        // Arrival-pipelined merge: the fused decode→reduce already ran
+        // behind the chunks' arrival (shard by shard, replica-index
+        // accumulation order — the one-shot path's exact arithmetic),
+        // so the merge verifies completeness and runs only the outer
+        // step + broadcast. Spent chunk views reclaim like payloads.
+        if !wire_codec {
+            bail!("drive: arrival-pipelined merge under an identity up-wire");
+        }
+        let slices = if wire_down && exec.stream_down() {
+            let payload_len = bus
+                .down_payload_bytes(frag)
+                .ok_or_else(|| anyhow!("drive: lossy down-wire without a payload size"))?;
+            let sync_index = bus.wire_stats().syncs();
+            exec.bcast_begin(frag, sync_index, payload_len)?;
+            let slices =
+                bus.sync_arrival(ar, &contributors, Some(&mut |chunk| exec.bcast_chunk(chunk)))?;
+            streamed = true;
+            slices
+        } else {
+            bus.sync_arrival(ar, &contributors, None)?
+        };
+        spent = reclaim_wires(slices);
+        if let Some(buf) = spent.pop() {
+            bus.recycle_wire(buf);
+        }
+    } else if wire_codec {
         {
             let frames: Vec<&[u8]> = contributors
                 .iter()
@@ -879,6 +948,29 @@ fn reduce_and_broadcast<X: SegmentExec>(
     Ok((broadcast, spent))
 }
 
+/// Feed any one-shot `Encoded` payloads from live contributors into a
+/// send boundary's arrival reduce — a worker that can't stream on a
+/// streaming transport reported its whole contribution at once, which
+/// is just a single chunk at offset 0 (bit-identical by construction:
+/// the streamed chunks concatenate to exactly the one-shot payload).
+fn arrival_absorb(
+    bus: &mut OuterSync,
+    ar: &mut ArrivalReduce,
+    payloads: &mut [SyncPayload],
+) -> Result<()> {
+    for rid in ar.contributors().to_vec() {
+        if matches!(payloads[rid], SyncPayload::Encoded(_)) {
+            let SyncPayload::Encoded(bytes) =
+                std::mem::replace(&mut payloads[rid], SyncPayload::Streamed)
+            else {
+                unreachable!("matched above")
+            };
+            bus.arrival_chunk(ar, rid, 0, bytes)?;
+        }
+    }
+    Ok(())
+}
+
 fn coordinate<E: InnerEngine, X: SegmentExec>(
     engine: &E,
     exec: &mut X,
@@ -902,6 +994,11 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
     // Workers keep a shared snapshot only when a wire is lossy; with
     // identity wires the coordinator must build joiners' views itself.
     let have_link = sync.as_deref().is_some_and(|s| s.link().is_active());
+    // Streamed up-leg: transport can ship contribution chunks ahead of
+    // the reports AND the up-wire is lossy (identity sends are literal
+    // handoffs with no bytes to stream). When set, send boundaries
+    // collect through the arrival-pipelined reduce.
+    let stream_up = wire_codec && exec.stream_up();
     let tau = if diloco { plan.overlap_tau } else { 0 };
     // Absolute outer-sync indexing: a resumed run continues the
     // counter where the checkpoint left it (the restored WireStats
@@ -1046,6 +1143,12 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
         // below, so the flush payloads see the merged params.
         let defer_final = send_due && t1 == plan.total_steps && merge_due;
         let frag = if send_due { due_fragment(t1, plan) } else { None };
+        // The sync index a send at this boundary belongs to — stamped
+        // into the workers' encode spec and into the arrival reduce, so
+        // both ends of the stream agree on which sync the chunks feed.
+        // (merge_due never coincides with send_due short of the drain,
+        // so outer_syncs cannot move between here and the collect.)
+        let send_sync_index = start_syncs + out.outer_syncs as u64;
         // Merge-only boundaries (and the drain's main segment) ask the
         // workers for nothing — the coordinator would only discard it.
         let payload_spec = if !diloco {
@@ -1054,7 +1157,8 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             if wire_codec {
                 PayloadSpec::Encoded(EncodeSpec {
                     frag,
-                    sync_index: start_syncs + out.outer_syncs as u64,
+                    sync_index: send_sync_index,
+                    stream: stream_up,
                 })
             } else {
                 PayloadSpec::Params
@@ -1101,13 +1205,56 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             );
         }
 
-        let (losses, payloads) = exec.collect(t0, t1)?;
+        // Send boundaries on a streaming transport collect through the
+        // arrival-pipelined reduce: every contribution chunk feeds the
+        // fused decode→reduce the moment it lands, so reduce work runs
+        // *behind arrival* instead of after the last report — and the
+        // merge τ steps later only runs the outer step + broadcast.
+        let stream_this = stream_up && send_due && !defer_final;
+        let reduce_before = sync.as_deref().map_or(0.0, |b| b.reduce_time_so_far());
+        let collect_t0 = Instant::now();
+        let mut arrival: Option<ArrivalReduce> = None;
+        let (losses, mut payloads) = if stream_this {
+            let live_rids: Vec<usize> = seg_live
+                .iter()
+                .enumerate()
+                .filter_map(|(r, &l)| l.then_some(r))
+                .collect();
+            let bus = sync.as_deref_mut().expect("streamed send implies an outer sync");
+            let mut ar = bus.arrival_begin(&live_rids, frag)?;
+            let data = exec.collect_streamed(t0, t1, send_sync_index, frag, &mut |rid, off, ws| {
+                bus.arrival_chunk(&mut ar, rid, off, ws)
+            })?;
+            arrival = Some(ar);
+            data
+        } else {
+            exec.collect(t0, t1)?
+        };
+        // Sync-stage latency breakdown: the collect's wall time minus
+        // any reduce work that ran inside it is the wire wait (what the
+        // coordinator truly spent blocked on workers + socket).
+        if let Some(bus) = sync.as_deref_mut() {
+            let in_collect = bus.reduce_time_so_far() - reduce_before;
+            bus.note_wire_wait((collect_t0.elapsed().as_secs_f64() - in_collect).max(0.0));
+            let enc = exec.take_encode_time();
+            if enc > 0.0 {
+                bus.note_encode_time(enc);
+            }
+        }
         // Transport-level lane deaths (a remote worker hung up or
         // timed out) surface here as crashes: the lane's replicas took
         // no (complete) part in this segment, so they are dead for the
         // whole of it — the PR 6 crash rule — and drop from this
         // reduce onward. Survivors complete the run.
-        for r in exec.take_lost() {
+        let lost = exec.take_lost();
+        if !lost.is_empty() {
+            if let (Some(ar), Some(bus)) = (arrival.as_mut(), sync.as_deref_mut()) {
+                // the dead replicas' chunks leave the arrival reduce;
+                // survivor shards re-fire from their buffered bytes
+                bus.arrival_drop(ar, &lost)?;
+            }
+        }
+        for r in lost {
             if ctl.live[r] {
                 ctl.live[r] = false;
                 seg_live[r] = false;
@@ -1177,6 +1324,13 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             }
         }
 
+        // A worker that can't stream on a streaming transport reports
+        // a one-shot payload; its whole contribution feeds the arrival
+        // reduce as a single chunk so every merge runs one code path.
+        if let (Some(ar), Some(bus)) = (arrival.as_mut(), sync.as_deref_mut()) {
+            arrival_absorb(bus, ar, &mut payloads)?;
+        }
+
         if send_due && !defer_final {
             // Capture the boundary payloads; they merge τ steps later
             // — immediately when τ=0 (the barrier), or at the clamped
@@ -1206,6 +1360,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
                 merge_at,
                 payloads,
                 contributors,
+                arrival: arrival.take(),
             });
             if merge_at == t1 {
                 let infl = in_flight.take().expect("stashed above");
@@ -1246,18 +1401,46 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
             // a zero-step trailing segment whose boundary payloads are
             // the final full flush — nothing in flight survives the
             // end of training.
+            let flush_sync_index = start_syncs + out.outer_syncs as u64;
             let flush_spec = if wire_codec {
                 PayloadSpec::Encoded(EncodeSpec {
                     frag: None,
-                    sync_index: start_syncs + out.outer_syncs as u64,
+                    sync_index: flush_sync_index,
+                    stream: stream_up,
                 })
             } else {
                 PayloadSpec::Params
             };
             exec.dispatch(t1, t1, &pending, &flush_spec, &SegmentChurn::default())?;
             pending = Broadcast::empty();
-            let (_, flush) = exec.collect(t1, t1)?;
-            for r in exec.take_lost() {
+            // The flush streams like any other send — its chunks feed
+            // an arrival reduce that merges immediately below.
+            let mut flush_arrival: Option<ArrivalReduce> = None;
+            let (_, mut flush) = if stream_up {
+                let live_rids: Vec<usize> = ctl
+                    .live
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(r, &l)| l.then_some(r))
+                    .collect();
+                let bus = sync.as_deref_mut().expect("flush implies sync");
+                let mut ar = bus.arrival_begin(&live_rids, None)?;
+                let data =
+                    exec.collect_streamed(t1, t1, flush_sync_index, None, &mut |rid, off, ws| {
+                        bus.arrival_chunk(&mut ar, rid, off, ws)
+                    })?;
+                flush_arrival = Some(ar);
+                data
+            } else {
+                exec.collect(t1, t1)?
+            };
+            let lost = exec.take_lost();
+            if !lost.is_empty() {
+                if let (Some(ar), Some(bus)) = (flush_arrival.as_mut(), sync.as_deref_mut()) {
+                    bus.arrival_drop(ar, &lost)?;
+                }
+            }
+            for r in lost {
                 if ctl.live[r] {
                     ctl.live[r] = false;
                     ctl.journal.append(
@@ -1268,6 +1451,9 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
                         "transport lane died; dropped from the final flush",
                     );
                 }
+            }
+            if let (Some(ar), Some(bus)) = (flush_arrival.as_mut(), sync.as_deref_mut()) {
+                arrival_absorb(bus, ar, &mut flush)?;
             }
             let contributors: Vec<usize> = ctl
                 .live
@@ -1292,6 +1478,7 @@ fn coordinate<E: InnerEngine, X: SegmentExec>(
                     merge_at: t1,
                     payloads: flush,
                     contributors,
+                    arrival: flush_arrival,
                 },
                 wire_codec,
                 wire_down,
@@ -1393,6 +1580,9 @@ struct InlineExec<'a, E: InnerEngine> {
     /// sequential oracle has no concurrency to overlap with, so the
     /// segment runs eagerly at dispatch).
     staged: Option<SegmentData>,
+    /// Up-leg encode seconds since the driver last drained them (the
+    /// oracle encodes on this thread, so the clock is visible here).
+    encode_s: f64,
 }
 
 impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
@@ -1451,7 +1641,9 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
                 })?;
                 let wc = &mut *self.wc;
                 let live = &self.live;
-                self.replicas
+                let t0 = Instant::now();
+                let payloads = self
+                    .replicas
                     .iter()
                     .zip(self.rcs.iter_mut())
                     .enumerate()
@@ -1468,7 +1660,9 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
                             spec.sync_index,
                         )?))
                     })
-                    .collect::<Result<_>>()?
+                    .collect::<Result<_>>()?;
+                self.encode_s += t0.elapsed().as_secs_f64();
+                payloads
             }
             PayloadSpec::Params => self
                 .replicas
@@ -1492,6 +1686,10 @@ impl<E: InnerEngine> SegmentExec for InlineExec<'_, E> {
         self.staged
             .take()
             .ok_or_else(|| anyhow!("drive: collect without a dispatched segment"))
+    }
+
+    fn take_encode_time(&mut self) -> f64 {
+        std::mem::take(&mut self.encode_s)
     }
 
     fn recycle_wires(&mut self, bufs: Vec<WireBuf>) {
@@ -1619,6 +1817,42 @@ pub fn worker_session<E: InnerEngine>(
                             }
                         }
                         let payload = match (&want, &link) {
+                            (PayloadSpec::Encoded(spec), Some(l))
+                                if spec.stream
+                                    && lk.stream_contrib()
+                                    && !l.up().is_identity() =>
+                            {
+                                // Streamed up-leg: each block-aligned
+                                // chunk ships the moment it encodes;
+                                // chunks then the report ride one FIFO
+                                // lane, so the report closing the
+                                // stream proves every chunk arrived.
+                                let chunks = l.stream_chunks(spec.frag);
+                                match l.encode_replica_streamed(
+                                    o.rid,
+                                    &o.rep.state,
+                                    &mut wc,
+                                    &mut o.rc,
+                                    spec.frag,
+                                    spec.sync_index,
+                                    chunks,
+                                    &mut |off, b| {
+                                        lk.send_contrib_chunk(
+                                            o.rid,
+                                            spec.sync_index,
+                                            spec.frag,
+                                            off,
+                                            b,
+                                        )
+                                    },
+                                ) {
+                                    Ok(()) => SyncPayload::Streamed,
+                                    Err(e) => {
+                                        err = Some(e);
+                                        break 'replicas;
+                                    }
+                                }
+                            }
                             (PayloadSpec::Encoded(spec), Some(l)) => {
                                 match l.encode_replica(
                                     o.rid,
@@ -1777,34 +2011,73 @@ impl<L: Lane> SegmentExec for LaneExec<L> {
     fn collect(&mut self, from: usize, to: usize) -> Result<SegmentData> {
         let mut losses: Vec<Vec<f64>> = vec![Vec::new(); self.m];
         let mut payloads: Vec<Option<SyncPayload>> = (0..self.m).map(|_| None).collect();
-        for (w, slot) in self.slots.iter_mut().enumerate() {
-            if !slot.alive {
-                // a dead lane's replicas are segment-dead: empty
-                // losses and no payload, exactly how a frozen replica
-                // reports — the coordinator flips their membership via
-                // take_lost before validating
-                for &r in &slot.rids {
-                    payloads[r] = Some(SyncPayload::Skipped);
-                }
-                continue;
+        for slot in self.slots.iter().filter(|s| !s.alive) {
+            // a dead lane's replicas are segment-dead: empty losses
+            // and no payload, exactly how a frozen replica reports —
+            // the coordinator flips their membership via take_lost
+            // before validating
+            for &r in &slot.rids {
+                payloads[r] = Some(SyncPayload::Skipped);
             }
-            match slot.lane.recv() {
-                // a worker-reported engine error fails the run on
-                // every transport — a broken engine is never churn
-                Ok(report) => {
-                    for (rid, l, p) in report?.reps {
-                        losses[rid] = l;
-                        payloads[rid] = Some(p);
+        }
+        // Service lanes by readiness when the transport can poll: a
+        // stalled worker 0 no longer blocks consuming (and decoding)
+        // reports that already arrived from workers 1..N. Consumption
+        // order cannot move any bit — reports land in rid-indexed
+        // slots and the reduce order is fixed downstream.
+        let mut pending: Vec<usize> = (0..self.slots.len())
+            .filter(|&w| self.slots[w].alive)
+            .collect();
+        let poll = !pending.is_empty()
+            && pending.iter().all(|&w| self.slots[w].lane.can_poll());
+        while !pending.is_empty() {
+            let mut progressed = false;
+            let mut died: Result<()> = Ok(());
+            pending.retain(|&w| {
+                if died.is_err() {
+                    return true;
+                }
+                let slot = &mut self.slots[w];
+                let got = if poll {
+                    match slot.lane.try_recv() {
+                        Ok(None) => return true, // nothing yet
+                        Ok(Some(rep)) => Ok(rep),
+                        Err(e) => Err(e),
+                    }
+                } else {
+                    slot.lane.recv()
+                };
+                progressed = true;
+                match got {
+                    // a worker-reported engine error fails the run on
+                    // every transport — a broken engine is never churn
+                    Ok(report) => match report {
+                        Ok(report) => {
+                            for (rid, l, p) in report.reps {
+                                losses[rid] = l;
+                                payloads[rid] = Some(p);
+                            }
+                        }
+                        Err(e) => died = Err(e),
+                    },
+                    Err(_) if !self.fail_on_death => {
+                        Self::lane_died(slot, &mut self.lost);
+                        for &r in &slot.rids {
+                            losses[r] = Vec::new();
+                            payloads[r] = Some(SyncPayload::Skipped);
+                        }
+                    }
+                    Err(_) => {
+                        died = Err(anyhow!("worker {w} died during segment ({from}, {to}]"))
                     }
                 }
-                Err(_) if !self.fail_on_death => {
-                    Self::lane_died(slot, &mut self.lost);
-                    for &r in &slot.rids {
-                        losses[r] = Vec::new();
-                        payloads[r] = Some(SyncPayload::Skipped);
-                    }
-                }
-                Err(_) => bail!("worker {w} died during segment ({from}, {to}]"),
+                false
+            });
+            died?;
+            if poll && !progressed && !pending.is_empty() {
+                // nothing ready on any lane: workers are mid-segment —
+                // yield the core to them rather than burn it spinning
+                std::thread::sleep(std::time::Duration::from_micros(100));
             }
         }
         // step-count validation lives in coordinate(), which knows the
@@ -1960,6 +2233,35 @@ impl ReactorExec<'_> {
     fn finish(&mut self, broadcast: &Broadcast) {
         self.reactor.send_finish(broadcast);
     }
+
+    /// Re-index collected reports by replica id and backfill dead
+    /// lanes' replicas as segment-dead (shared by the one-shot and
+    /// streamed collects — the reduction order downstream is fixed
+    /// either way).
+    fn finish_collect(&mut self, reports: Vec<WorkerReport>) -> Result<SegmentData> {
+        let mut losses: Vec<Vec<f64>> = vec![Vec::new(); self.m];
+        let mut payloads: Vec<Option<SyncPayload>> = (0..self.m).map(|_| None).collect();
+        for report in reports {
+            for (rid, l, p) in report.reps {
+                if rid >= self.m {
+                    bail!("drive: worker reported unknown replica {rid}");
+                }
+                losses[rid] = l;
+                payloads[rid] = Some(p);
+            }
+        }
+        // replicas on dead lanes (now or earlier) report nothing:
+        // segment-dead, exactly how a frozen replica looks — the
+        // coordinator flips their membership via take_lost
+        for r in self.reactor.dead_rids() {
+            payloads[r].get_or_insert(SyncPayload::Skipped);
+        }
+        let mut out = Vec::with_capacity(self.m);
+        for (r, p) in payloads.into_iter().enumerate() {
+            out.push(p.ok_or_else(|| anyhow!("replica {r}: missing segment payload"))?);
+        }
+        Ok((losses, out))
+    }
 }
 
 impl SegmentExec for ReactorExec<'_> {
@@ -1982,28 +2284,26 @@ impl SegmentExec for ReactorExec<'_> {
     }
 
     fn collect(&mut self, _from: usize, _to: usize) -> Result<SegmentData> {
-        let mut losses: Vec<Vec<f64>> = vec![Vec::new(); self.m];
-        let mut payloads: Vec<Option<SyncPayload>> = (0..self.m).map(|_| None).collect();
-        for report in self.reactor.collect_reports()? {
-            for (rid, l, p) in report.reps {
-                if rid >= self.m {
-                    bail!("drive: worker reported unknown replica {rid}");
-                }
-                losses[rid] = l;
-                payloads[rid] = Some(p);
-            }
-        }
-        // replicas on dead lanes (now or earlier) report nothing:
-        // segment-dead, exactly how a frozen replica looks — the
-        // coordinator flips their membership via take_lost
-        for r in self.reactor.dead_rids() {
-            payloads[r].get_or_insert(SyncPayload::Skipped);
-        }
-        let mut out = Vec::with_capacity(self.m);
-        for (r, p) in payloads.into_iter().enumerate() {
-            out.push(p.ok_or_else(|| anyhow!("replica {r}: missing segment payload"))?);
-        }
-        Ok((losses, out))
+        let reports = self.reactor.collect_reports()?;
+        self.finish_collect(reports)
+    }
+
+    fn stream_up(&self) -> bool {
+        true
+    }
+
+    fn collect_streamed(
+        &mut self,
+        _from: usize,
+        _to: usize,
+        sync_index: u64,
+        frag: Option<usize>,
+        sink: &mut dyn FnMut(usize, usize, WireSlice) -> Result<()>,
+    ) -> Result<SegmentData> {
+        let reports = self
+            .reactor
+            .collect_reports_streamed(sync_index, frag, sink)?;
+        self.finish_collect(reports)
     }
 
     fn recycle_wires(&mut self, bufs: Vec<WireBuf>) {
@@ -2149,6 +2449,87 @@ mod tests {
         assert_eq!(due_fragment(20, &p), None, "final boundary is a full flush");
         p.fragments = 1;
         assert_eq!(due_fragment(5, &p), None, "vanilla DiLoCo always full");
+    }
+
+    /// A scripted lane for the readiness-collection tests: `try_recv`
+    /// stalls for `stall` polls before yielding the report, and every
+    /// consumed report appends its lane id to the shared order log.
+    struct ScriptedLane {
+        id: usize,
+        stall: usize,
+        report: Option<WorkerReport>,
+        order: Arc<std::sync::Mutex<Vec<usize>>>,
+        pollable: bool,
+    }
+
+    impl ScriptedLane {
+        fn try_take(&mut self) -> Result<Option<Result<WorkerReport>>> {
+            if self.stall > 0 {
+                self.stall -= 1;
+                return Ok(None);
+            }
+            match self.report.take() {
+                Some(r) => {
+                    self.order.lock().unwrap().push(self.id);
+                    Ok(Some(Ok(r)))
+                }
+                None => Ok(None),
+            }
+        }
+    }
+
+    impl Lane for ScriptedLane {
+        fn send(&mut self, _cmd: Cmd) -> Result<()> {
+            Ok(())
+        }
+        fn recv(&mut self) -> Result<Result<WorkerReport>> {
+            loop {
+                if let Some(r) = self.try_take()? {
+                    return Ok(r);
+                }
+            }
+        }
+        fn try_recv(&mut self) -> Result<Option<Result<WorkerReport>>> {
+            self.try_take()
+        }
+        fn can_poll(&self) -> bool {
+            self.pollable
+        }
+    }
+
+    #[test]
+    fn readiness_collect_bypasses_a_stalled_lane() {
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let rep = |rid: usize| WorkerReport {
+            reps: vec![(rid, Vec::new(), SyncPayload::Skipped)],
+        };
+        let mk = |id: usize, stall: usize| ScriptedLane {
+            id,
+            stall,
+            report: Some(rep(id)),
+            order: Arc::clone(&order),
+            pollable: true,
+        };
+        // lane 0 sits on its report for many polls; lane 1 is ready —
+        // its report must be consumed without waiting on lane 0
+        let mut exec =
+            LaneExec::new(vec![(mk(0, 64), vec![0]), (mk(1, 0), vec![1])], 2, true);
+        let (losses, payloads) = exec.collect(0, 0).unwrap();
+        assert_eq!((losses.len(), payloads.len()), (2, 2));
+        assert_eq!(
+            order.lock().unwrap().clone(),
+            vec![1, 0],
+            "the arrived report is consumed before the stalled lane yields"
+        );
+
+        // a lane that can't poll drops the whole collect to the
+        // blocking path — consumption follows slot order again
+        order.lock().unwrap().clear();
+        let mut slow = mk(0, 64);
+        slow.pollable = false;
+        let mut exec = LaneExec::new(vec![(slow, vec![0]), (mk(1, 0), vec![1])], 2, true);
+        exec.collect(0, 0).unwrap();
+        assert_eq!(order.lock().unwrap().clone(), vec![0, 1]);
     }
 
     struct NoopEngine;

@@ -46,6 +46,7 @@
 
 use std::ops::Range;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -53,7 +54,7 @@ use crate::comm::codec::{codec_for, Codec, OuterBits, BLOCK};
 use crate::comm::{Channel, CommLink, Direction, DownWire, SyncWireRecord, WireStats};
 use crate::runtime::{FlatLayout, FlatParams, HostTensor};
 use crate::transport::frame::{WireBuf, WireSlice};
-use crate::util::par;
+use crate::util::par::{self, Piece};
 
 use super::outer_opt::{acc_add, acc_finish, acc_scale, OuterOpt};
 
@@ -72,6 +73,100 @@ pub struct SyncState {
     pub down_view: Option<Vec<f32>>,
     pub down_residual: Option<Vec<f32>>,
     pub wire_records: Vec<SyncWireRecord>,
+}
+
+/// One sync event's stage latency breakdown, in seconds. `encode_s`
+/// and `wire_wait_s` are driver-observed (the engine cannot see the
+/// workers' clocks): on remote transports the up-leg encode happens on
+/// the far side and is attributed to the wire wait. `reduce_s` sums
+/// every fused decode→reduce shard — for an arrival-pipelined sync
+/// that work runs *inside* the collect, which is exactly the overlap
+/// the `wire_wait_s` subtraction makes visible.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SyncStages {
+    pub encode_s: f64,
+    pub wire_wait_s: f64,
+    pub reduce_s: f64,
+    pub step_s: f64,
+    pub bcast_s: f64,
+}
+
+/// The arrival half of one in-flight sync: per-contributor chunk
+/// cursors over the streamed up-leg, plus the block-range readiness
+/// tracker that lets [`OuterSync::arrival_chunk`] fire each fused
+/// decode→reduce shard the moment **all live contributors'** bytes for
+/// it are in — while later chunks are still on the wire. Built by
+/// [`OuterSync::arrival_begin`] at dispatch, fed by the transport as
+/// `ContribChunk` frames land, resolved by [`OuterSync::sync_arrival`]
+/// at merge time.
+///
+/// Bit-identity discipline: the shard partition is the exact
+/// `shard_ranges(ranges, sync_threads, BLOCK)` cut the one-shot
+/// [`OuterSync::sync_encoded`] uses, shards fire strictly in payload
+/// order, and within a shard every piece accumulates its contributors
+/// in replica-index order — so the fp summation order, and therefore
+/// the bits, are unchanged from the one-shot path no matter how the
+/// chunks interleave on the wire (pinned by `tests/streamed_sync.rs`).
+pub struct ArrivalReduce {
+    frag: Option<usize>,
+    /// The due element ranges (coordinator geometry — same layout and
+    /// fragment math as the workers').
+    ranges: Vec<Range<usize>>,
+    /// Cumulative wire-byte offset of each source range.
+    range_off: Vec<usize>,
+    /// Exact per-contributor payload size.
+    expected: usize,
+    /// The reduce shard partition (identical to the one-shot cut).
+    shards: Vec<Vec<Piece>>,
+    /// Wire-byte end of each shard (max over its pieces) — the
+    /// watermark every contributor must reach before it fires.
+    wire_end: Vec<usize>,
+    /// Live contributor replica ids, strictly ascending — the fp
+    /// accumulation order.
+    ranks: Vec<usize>,
+    /// Per contributor (parallel to `ranks`): received chunks as
+    /// `(wire offset, zero-copy frame view)`, contiguous from 0.
+    chunks: Vec<Vec<(usize, WireSlice)>>,
+    /// Per contributor: total contiguous bytes received.
+    watermark: Vec<usize>,
+    /// Next shard to fire (shards fire strictly in order).
+    next: usize,
+    /// Shards whose reduce fired before every contributor's full
+    /// payload had arrived — the pipeline-overlap evidence.
+    fired_early: usize,
+}
+
+impl ArrivalReduce {
+    pub fn frag(&self) -> Option<usize> {
+        self.frag
+    }
+
+    /// Live contributor replica ids (ascending).
+    pub fn contributors(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// Exact per-contributor payload size in bytes.
+    pub fn payload_bytes(&self) -> usize {
+        self.expected
+    }
+
+    /// Whether every live contributor's full payload has arrived.
+    pub fn complete(&self) -> bool {
+        self.watermark.iter().all(|&w| w == self.expected)
+    }
+
+    /// Reduce shards fired so far / total.
+    pub fn fired(&self) -> (usize, usize) {
+        (self.next, self.shards.len())
+    }
+
+    /// Shards whose reduce fired while at least one contributor's
+    /// payload was still incomplete — proof the reduce overlapped
+    /// arrival rather than waiting for the last byte.
+    pub fn fired_early(&self) -> usize {
+        self.fired_early
+    }
 }
 
 pub struct OuterSync {
@@ -121,6 +216,14 @@ pub struct OuterSync {
     /// via [`OuterSync::recycle_wire`]), so steady-state syncs
     /// allocate nothing for the down-wire payload.
     wire_pool: Vec<WireBuf>,
+    /// Print a `sync:` stage-breakdown stderr line per sync event
+    /// (`--verbose`).
+    verbose: bool,
+    /// Per-sync stage latency records (one per completed sync event).
+    stages: Vec<SyncStages>,
+    /// Stage accumulator for the sync currently in flight; finalized
+    /// and pushed by `publish_and_record`.
+    cur: SyncStages,
 }
 
 impl OuterSync {
@@ -169,7 +272,44 @@ impl OuterSync {
             wire: WireStats::default(),
             sync_threads: 1,
             wire_pool: Vec::new(),
+            verbose: false,
+            stages: Vec::new(),
+            cur: SyncStages::default(),
         })
+    }
+
+    /// Emit a `sync:` stderr line with the stage latency breakdown
+    /// after every sync event (`--verbose`).
+    pub fn with_verbose(mut self, v: bool) -> OuterSync {
+        self.verbose = v;
+        self
+    }
+
+    /// Per-sync stage latency records so far (one per sync event, in
+    /// sync order) — the aggregate means land in `RunMetrics`.
+    pub fn stage_log(&self) -> &[SyncStages] {
+        &self.stages
+    }
+
+    /// Credit driver-observed up-leg encode time to the in-flight
+    /// sync's stage record (inline transports only — remote workers'
+    /// encode clocks are invisible and fold into the wire wait).
+    pub fn note_encode_time(&mut self, s: f64) {
+        self.cur.encode_s += s;
+    }
+
+    /// Credit driver-observed wire wait (collect wall time minus any
+    /// reduce work that ran inside the collect) to the in-flight
+    /// sync's stage record.
+    pub fn note_wire_wait(&mut self, s: f64) {
+        self.cur.wire_wait_s += s;
+    }
+
+    /// Reduce seconds accumulated by the in-flight sync so far — the
+    /// driver samples this around a collect to subtract in-collect
+    /// reduce time out of the wire wait.
+    pub fn reduce_time_so_far(&self) -> f64 {
+        self.cur.reduce_s
     }
 
     /// Shard the coordinator-side sync kernels over up to `n` scoped
@@ -542,6 +682,7 @@ impl OuterSync {
             None => &self.full,
         };
         let sync_index = self.wire.syncs();
+        let t_bcast = Instant::now();
         let bytes_down = match &mut self.down {
             Some(dw) => {
                 // the view advances with every encode, so a dropped
@@ -599,6 +740,7 @@ impl OuterSync {
                 .map(|r| self.down_codec.wire_bytes(r.len()) as u64)
                 .sum(),
         };
+        self.cur.bcast_s += t_bcast.elapsed().as_secs_f64();
         let elems: u64 = ranges.iter().map(|r| r.len() as u64).sum();
         self.wire.record(
             frag,
@@ -606,6 +748,22 @@ impl OuterSync {
             bytes_per_replica.unwrap_or(elems * 4),
             bytes_down,
         );
+        // finalize this sync's stage record (encode / wire-wait were
+        // credited by the driver as the collect ran)
+        let st = std::mem::take(&mut self.cur);
+        if self.verbose {
+            let frag_s = frag.map_or_else(|| "-".to_string(), |f| f.to_string());
+            eprintln!(
+                "sync: idx={sync_index} frag={frag_s} enc={:.2}ms wire={:.2}ms \
+                 reduce={:.2}ms step={:.2}ms bcast={:.2}ms",
+                st.encode_s * 1e3,
+                st.wire_wait_s * 1e3,
+                st.reduce_s * 1e3,
+                st.step_s * 1e3,
+                st.bcast_s * 1e3,
+            );
+        }
+        self.stages.push(st);
         Ok(())
     }
 
@@ -705,6 +863,7 @@ impl OuterSync {
             None => self.global.data(),
         };
         let codec = Arc::clone(&self.codec);
+        let t0 = Instant::now();
         let accs = par::split_pieces(self.acc.data_mut(), &shards);
         let items: Vec<_> = shards.iter().zip(accs).collect();
         par::map_shards(items, |_, (pieces, accs)| -> Result<()> {
@@ -726,10 +885,253 @@ impl OuterSync {
         })
         .into_iter()
         .collect::<Result<()>>()?;
+        self.cur.reduce_s += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
         self.opt.step_pieces(&mut self.global, &self.acc, &shards);
+        self.cur.step_s += t0.elapsed().as_secs_f64();
 
         // 3. publish + wire accounting (exact encoded bytes up).
         self.publish_and_record(frag, payloads.len(), Some(expected as u64), sink)
+    }
+
+    /// Open the arrival half of a streamed sync: fix the contributor
+    /// set (the replicas live at dispatch, strictly ascending — the fp
+    /// accumulation order) and precompute the reduce shard partition
+    /// and its per-shard wire watermarks. The transport then feeds
+    /// [`OuterSync::arrival_chunk`] as `ContribChunk` frames land.
+    pub fn arrival_begin(
+        &self,
+        contributors: &[usize],
+        frag: Option<usize>,
+    ) -> Result<ArrivalReduce> {
+        if contributors.is_empty() {
+            bail!("outer sync: arrival with zero contributors");
+        }
+        if !contributors.windows(2).all(|w| w[0] < w[1]) {
+            bail!("outer sync: arrival contributors must be strictly ascending replica ids");
+        }
+        if let Some(f) = frag {
+            if f >= self.fragments {
+                bail!("fragment {f} out of range (P={})", self.fragments);
+            }
+        }
+        let ranges: Vec<Range<usize>> = match frag {
+            Some(f) => self.frag_ranges[f].clone(),
+            None => self.full.clone(),
+        };
+        let mut range_off = Vec::with_capacity(ranges.len());
+        let mut off = 0usize;
+        for r in &ranges {
+            range_off.push(off);
+            off += self.codec.wire_bytes(r.len());
+        }
+        let expected = off;
+        let shards = par::shard_ranges(&ranges, self.sync_threads, BLOCK);
+        let wire_end = shards
+            .iter()
+            .map(|pieces| {
+                pieces
+                    .iter()
+                    .map(|p| {
+                        let src = &ranges[p.src];
+                        range_off[p.src]
+                            + self.codec.wire_bytes(p.range.start - src.start)
+                            + self.codec.wire_bytes(p.len())
+                    })
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let n = contributors.len();
+        Ok(ArrivalReduce {
+            frag,
+            ranges,
+            range_off,
+            expected,
+            shards,
+            wire_end,
+            ranks: contributors.to_vec(),
+            chunks: (0..n).map(|_| Vec::new()).collect(),
+            watermark: vec![0; n],
+            next: 0,
+            fired_early: 0,
+        })
+    }
+
+    /// Ingest one streamed contribution chunk and fire every reduce
+    /// shard that just became ready. Chunks must arrive per replica
+    /// contiguously in payload order (`offset` == that replica's
+    /// watermark) — out-of-order, duplicate, or overrunning chunks
+    /// fail loud, since a silent drop here would corrupt the reduce.
+    /// The chunk is parked as a zero-copy frame view; bytes are only
+    /// read when a shard containing them fires.
+    pub fn arrival_chunk(
+        &mut self,
+        ar: &mut ArrivalReduce,
+        rid: usize,
+        offset: usize,
+        chunk: WireSlice,
+    ) -> Result<()> {
+        let Ok(idx) = ar.ranks.binary_search(&rid) else {
+            bail!(
+                "outer sync: contribution chunk from replica {rid}, which is not a \
+                 live contributor of this sync"
+            );
+        };
+        if chunk.is_empty() {
+            bail!("outer sync: empty contribution chunk from replica {rid}");
+        }
+        if offset != ar.watermark[idx] {
+            bail!(
+                "outer sync: replica {rid} chunk at wire offset {offset}, expected \
+                 {} — chunks must arrive contiguously in payload order",
+                ar.watermark[idx]
+            );
+        }
+        let end = offset + chunk.len();
+        if end > ar.expected {
+            bail!(
+                "outer sync: replica {rid} contribution overruns its payload \
+                 ({end} of {} bytes)",
+                ar.expected
+            );
+        }
+        ar.watermark[idx] = end;
+        ar.chunks[idx].push((offset, chunk));
+        self.arrival_fire(ar)
+    }
+
+    /// Drop contributors whose lanes died mid-stream (the existing
+    /// crash-membership path decided they will never complete) and
+    /// re-fire every shard over the survivors' buffered bytes. The
+    /// refire is cheap and rare: each shard zeroes its delta pieces
+    /// before accumulating, so firing twice is idempotent up to the
+    /// contributor set, and the survivors' bits land exactly as if
+    /// the dead replicas had never been in the set.
+    pub fn arrival_drop(&mut self, ar: &mut ArrivalReduce, dead: &[usize]) -> Result<()> {
+        let mut changed = false;
+        for &rid in dead {
+            if let Ok(idx) = ar.ranks.binary_search(&rid) {
+                ar.ranks.remove(idx);
+                ar.chunks.remove(idx);
+                ar.watermark.remove(idx);
+                changed = true;
+            }
+        }
+        if !changed {
+            return Ok(());
+        }
+        ar.next = 0;
+        self.arrival_fire(ar)
+    }
+
+    /// Fire every reduce shard whose bytes are in from all live
+    /// contributors. The per-piece arithmetic is exactly
+    /// `sync_encoded`'s fused decode→reduce — same shard partition,
+    /// same zero-fill, same replica-index accumulation order, same
+    /// finish — just cut per chunk overlap at block-aligned seams
+    /// (where `decode_add` splits bit-exactly, because codec blocks
+    /// are self-contained).
+    fn arrival_fire(&mut self, ar: &mut ArrivalReduce) -> Result<()> {
+        if ar.ranks.is_empty() || ar.next >= ar.shards.len() {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let m = ar.ranks.len() as f32;
+        let identity = self.codec.is_identity();
+        let wb_block = self.codec.wire_bytes(BLOCK);
+        let reference: &[f32] = match &self.down {
+            Some(dw) => dw.view(),
+            None => self.global.data(),
+        };
+        let acc = self.acc.data_mut();
+        while ar.next < ar.shards.len() {
+            let end = ar.wire_end[ar.next];
+            if !ar.watermark.iter().all(|&w| w >= end) {
+                break;
+            }
+            if ar.watermark.iter().any(|&w| w < ar.expected) {
+                ar.fired_early += 1;
+            }
+            for p in &ar.shards[ar.next] {
+                let src = &ar.ranges[p.src];
+                let woff = ar.range_off[p.src] + self.codec.wire_bytes(p.range.start - src.start);
+                let wlen = self.codec.wire_bytes(p.len());
+                let dst = &mut acc[p.range.clone()];
+                dst.fill(0.0);
+                for chunks in &ar.chunks {
+                    for (coff, cs) in chunks {
+                        let a = woff.max(*coff);
+                        let b = (woff + wlen).min(coff + cs.len());
+                        if a >= b {
+                            continue;
+                        }
+                        // chunk and piece cuts sit on the same BLOCK
+                        // grid relative to the source range start, so
+                        // the overlap maps to whole codec blocks
+                        let e0 = ((a - woff) / wb_block) * BLOCK;
+                        let e1 = if b == woff + wlen {
+                            p.len()
+                        } else {
+                            ((b - woff) / wb_block) * BLOCK
+                        };
+                        self.codec
+                            .decode_add(&cs.as_slice()[a - coff..b - coff], &mut dst[e0..e1])?;
+                    }
+                }
+                if identity {
+                    acc_finish(dst, &reference[p.range.clone()], m);
+                } else {
+                    acc_scale(dst, m);
+                }
+            }
+            ar.next += 1;
+        }
+        self.cur.reduce_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Resolve a streamed sync at merge time: verify the arrival state
+    /// is complete and matches the merge's contributor set, fire any
+    /// straggler shards, then run the exact one-shot tail — Nesterov
+    /// step over the same shard partition, publish, wire accounting,
+    /// optional streamed broadcast. Returns the spent chunk views for
+    /// the driver to reclaim into the transport's buffer pool.
+    pub fn sync_arrival(
+        &mut self,
+        mut ar: ArrivalReduce,
+        contributors: &[usize],
+        sink: Option<&mut dyn FnMut(&[u8]) -> Result<()>>,
+    ) -> Result<Vec<WireSlice>> {
+        if ar.ranks.is_empty() {
+            bail!("outer sync with zero replicas");
+        }
+        if ar.ranks != contributors {
+            bail!(
+                "outer sync: arrival contributors {:?} do not match the merge set {:?}",
+                ar.ranks,
+                contributors
+            );
+        }
+        for (i, &w) in ar.watermark.iter().enumerate() {
+            if w != ar.expected {
+                bail!(
+                    "outer sync: replica {} contribution truncated at {w} of {} bytes",
+                    ar.ranks[i],
+                    ar.expected
+                );
+            }
+        }
+        self.arrival_fire(&mut ar)?;
+        let (fired, total) = ar.fired();
+        if fired != total {
+            bail!("outer sync: {} of {total} reduce shards never became ready", total - fired);
+        }
+        let t0 = Instant::now();
+        self.opt.step_pieces(&mut self.global, &self.acc, &ar.shards);
+        self.cur.step_s += t0.elapsed().as_secs_f64();
+        self.publish_and_record(ar.frag, ar.ranks.len(), Some(ar.expected as u64), sink)?;
+        Ok(ar.chunks.into_iter().flatten().map(|(_, ws)| ws).collect())
     }
 }
 
@@ -1011,6 +1413,178 @@ mod tests {
         assert!(ident
             .sync_encoded_streamed(&[p.as_slice()], None, &mut |_| Ok(()))
             .is_err());
+    }
+
+    fn host_fn(layout: &FlatLayout, f: impl Fn(usize) -> f32) -> Vec<HostTensor> {
+        (0..layout.n_leaves())
+            .map(|l| {
+                let r = layout.range(l);
+                HostTensor::from_vec(layout.shape(l), r.map(&f).collect())
+            })
+            .collect()
+    }
+
+    /// Encode replica `r`'s contribution both ways (one-shot and
+    /// streamed chunks) from identical fresh comm state.
+    fn encode_both(
+        link: &crate::comm::CommLink,
+        init: &[Arc<xla::Literal>],
+        state: &[Arc<xla::Literal>],
+        r: usize,
+        frag: Option<usize>,
+        chunks: usize,
+    ) -> (Vec<u8>, Vec<(usize, Vec<u8>)>) {
+        use crate::comm::{ReplicaComm, WorkerComm};
+        let mut wc = WorkerComm::default();
+        let mut rc = ReplicaComm::default();
+        link.init_snapshot(&mut wc, init).unwrap();
+        link.init_replica(&mut rc);
+        let one = link
+            .encode_replica(r, state, &mut wc, &mut rc, frag, 0)
+            .unwrap()
+            .as_slice()
+            .to_vec();
+        let mut wc = WorkerComm::default();
+        let mut rc = ReplicaComm::default();
+        link.init_snapshot(&mut wc, init).unwrap();
+        link.init_replica(&mut rc);
+        let mut parts = Vec::new();
+        link.encode_replica_streamed(r, state, &mut wc, &mut rc, frag, 0, chunks, &mut |off, b| {
+            parts.push((off, b.to_vec()));
+            Ok(())
+        })
+        .unwrap();
+        (one, parts)
+    }
+
+    #[test]
+    fn arrival_pipelined_sync_matches_one_shot() {
+        use crate::comm::{codec_for, OuterBits};
+        // multi-block leaves with an odd tail so chunk cuts are real
+        let l = Arc::new(FlatLayout::new(vec![vec![700], vec![300, 2], vec![513]]));
+        let init = host_fn(&l, |i| (i as f32 * 0.01).cos());
+        let init_lits = lits_of(&init);
+        let build = || {
+            OuterSync::new(Arc::clone(&l), &init, init_lits.clone(), 0.8, 0.9, 2)
+                .unwrap()
+                .with_codec(codec_for(OuterBits::Int4), 7)
+                .with_down_codec(codec_for(OuterBits::Int4))
+                .with_sync_threads(3)
+        };
+        let mut oracle = build();
+        let mut arrival = build();
+        let states: Vec<_> = (0..3)
+            .map(|r| lits_of(&host_fn(&l, |i| ((i + 31 * r) as f32 * 0.03).sin())))
+            .collect();
+        let frag = Some(1);
+        let link = oracle.link();
+        let mut one_shots = Vec::new();
+        let mut streamed = Vec::new();
+        for (r, st) in states.iter().enumerate() {
+            let (one, parts) = encode_both(&link, &init_lits, st, r, frag, 4);
+            let cat: Vec<u8> = parts.iter().flat_map(|(_, b)| b.clone()).collect();
+            assert_eq!(cat, one, "replica {r}: chunks must concatenate to the one-shot");
+            one_shots.push(one);
+            streamed.push(parts);
+        }
+        let frames: Vec<&[u8]> = one_shots.iter().map(|p| p.as_slice()).collect();
+        oracle.sync_encoded(&frames, frag).unwrap();
+        let want_bcast = oracle.take_broadcast_bytes().unwrap();
+
+        // feed chunks round-robin across replicas — shards must fire
+        // as ranges complete, before the last replica's tail arrives
+        let mut ar = arrival.arrival_begin(&[0, 1, 2], frag).unwrap();
+        let max_chunks = streamed.iter().map(|p| p.len()).max().unwrap();
+        assert!(max_chunks > 1, "test needs real chunking");
+        for j in 0..max_chunks {
+            for (r, parts) in streamed.iter().enumerate() {
+                if let Some((off, b)) = parts.get(j) {
+                    arrival
+                        .arrival_chunk(&mut ar, r, *off, WireSlice::copied_from(b))
+                        .unwrap();
+                }
+            }
+        }
+        assert!(ar.complete());
+        let (fired, total) = ar.fired();
+        assert_eq!(fired, total, "all shards fire once the bytes are in");
+        assert!(ar.fired_early() > 0, "reduce must start before the last chunk");
+        let spent = arrival.sync_arrival(ar, &[0, 1, 2], None).unwrap();
+        assert!(!spent.is_empty());
+        let got_bcast = arrival.take_broadcast_bytes().unwrap();
+        assert_eq!(got_bcast.as_slice(), want_bcast.as_slice());
+        let a: Vec<u32> = oracle.global().data().iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = arrival.global().data().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "arrival-pipelined sync must be bit-identical");
+        assert_eq!(oracle.wire_stats().total(), arrival.wire_stats().total());
+        // stage log recorded reduce time on both engines
+        assert_eq!(arrival.stage_log().len(), 1);
+    }
+
+    #[test]
+    fn arrival_rejects_bad_chunks_and_resolves_drops() {
+        use crate::comm::{codec_for, OuterBits};
+        let l = Arc::new(FlatLayout::new(vec![vec![700], vec![300, 2], vec![513]]));
+        let init = host_fn(&l, |i| (i as f32 * 0.01).cos());
+        let init_lits = lits_of(&init);
+        let build = || {
+            OuterSync::new(Arc::clone(&l), &init, init_lits.clone(), 0.8, 0.9, 1)
+                .unwrap()
+                .with_codec(codec_for(OuterBits::Int8), 11)
+                .with_down_codec(codec_for(OuterBits::Int8))
+                .with_sync_threads(2)
+        };
+        let mut oracle = build();
+        let mut arrival = build();
+        let states: Vec<_> = (0..3)
+            .map(|r| lits_of(&host_fn(&l, |i| ((i + 7 * r) as f32 * 0.05).sin())))
+            .collect();
+        let link = oracle.link();
+        let mut one_shots = Vec::new();
+        let mut streamed = Vec::new();
+        for (r, st) in states.iter().enumerate() {
+            let (one, parts) = encode_both(&link, &init_lits, st, r, None, 3);
+            one_shots.push(one);
+            streamed.push(parts);
+        }
+        // the oracle merges only the survivors
+        let frames: Vec<&[u8]> = one_shots[..2].iter().map(|p| p.as_slice()).collect();
+        oracle.sync_encoded(&frames, None).unwrap();
+        let _ = oracle.take_broadcast_bytes().unwrap();
+
+        let mut ar = arrival.arrival_begin(&[0, 1, 2], None).unwrap();
+        // unknown replica fails loud
+        assert!(arrival
+            .arrival_chunk(&mut ar, 9, 0, WireSlice::copied_from(&streamed[0][0].1))
+            .is_err());
+        // out-of-order (non-watermark) offset fails loud
+        let (off1, b1) = &streamed[0][1];
+        assert!(arrival
+            .arrival_chunk(&mut ar, 0, *off1, WireSlice::copied_from(b1))
+            .is_err());
+        // feed survivors fully, replica 2 only partially
+        for r in 0..2 {
+            for (off, b) in &streamed[r] {
+                arrival
+                    .arrival_chunk(&mut ar, r, *off, WireSlice::copied_from(b))
+                    .unwrap();
+            }
+        }
+        let (off, b) = &streamed[2][0];
+        arrival
+            .arrival_chunk(&mut ar, 2, *off, WireSlice::copied_from(b))
+            .unwrap();
+        // merging with a truncated live contributor fails loud
+        assert!(!ar.complete());
+        // replica 2's lane died: drop it and re-fire over survivors
+        arrival.arrival_drop(&mut ar, &[2]).unwrap();
+        assert_eq!(ar.contributors(), &[0, 1]);
+        assert!(ar.complete());
+        arrival.sync_arrival(ar, &[0, 1], None).unwrap();
+        let _ = arrival.take_broadcast_bytes().unwrap();
+        let a: Vec<u32> = oracle.global().data().iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = arrival.global().data().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "post-drop refire must match the survivor-only one-shot");
     }
 
     #[test]

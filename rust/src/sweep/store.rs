@@ -281,6 +281,11 @@ mod tests {
             wire_framed_bytes: 0,
             churn: String::new(),
             dropout_rate: 0.0,
+            sync_encode_ms: 0.0,
+            sync_wire_wait_ms: 0.0,
+            sync_reduce_ms: 0.0,
+            sync_step_ms: 0.0,
+            sync_bcast_ms: 0.0,
         }
     }
 

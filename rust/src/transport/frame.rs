@@ -56,7 +56,9 @@ use anyhow::{bail, Context, Result};
 pub const MAGIC: [u8; 4] = *b"DLCW";
 /// Protocol version; bump on any incompatible frame or message change.
 /// v2: streamed-broadcast `Bcast` frames + the `Pending` broadcast tag.
-pub const PROTO_VERSION: u16 = 2;
+/// v3: streamed up-leg `ContribChunk` frames + the `Streamed` sync
+/// payload tag.
+pub const PROTO_VERSION: u16 = 3;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 36;
 /// Per-frame framing overhead (the header *is* the length prefix —
@@ -97,6 +99,14 @@ pub enum MsgKind {
     /// carries the sync index and fragment; the payload is the encoded
     /// broadcast bytes, flushed in encode-shard order.
     Bcast,
+    /// One streamed shard of a replica's up-leg contribution, shipped
+    /// worker→coordinator ahead of the `Report` that resolves it
+    /// (`SyncPayload::Streamed`). The header carries the sync index
+    /// and fragment; the payload is an 8-byte meta prefix
+    /// (`u32` replica id, `u32` wire-byte offset — the shard's range
+    /// is `offset..offset+len`) followed by the shard's encoded bytes,
+    /// flushed in encode-shard (wire-offset) order per replica.
+    ContribChunk,
 }
 
 impl MsgKind {
@@ -111,6 +121,7 @@ impl MsgKind {
             MsgKind::Error => 7,
             MsgKind::Heartbeat => 8,
             MsgKind::Bcast => 9,
+            MsgKind::ContribChunk => 10,
         }
     }
 
@@ -125,6 +136,7 @@ impl MsgKind {
             7 => MsgKind::Error,
             8 => MsgKind::Heartbeat,
             9 => MsgKind::Bcast,
+            10 => MsgKind::ContribChunk,
             other => bail!("frame: unknown message kind {other}"),
         })
     }
@@ -640,11 +652,11 @@ mod tests {
         let mut buf = Vec::new();
         encode_frame(&sample_header(), b"xyz", &mut buf).unwrap();
         // the exact wire layout, byte for byte — if this changes,
-        // PROTO_VERSION must bump (v2 = streamed broadcasts)
+        // PROTO_VERSION must bump (v3 = streamed up-leg contributions)
         #[rustfmt::skip]
         let want: [u8; HEADER_LEN] = [
             b'D', b'L', b'C', b'W',             // magic
-            2, 0,                               // version 2 LE
+            3, 0,                               // version 3 LE
             4,                                  // kind = Run
             4, 8,                               // up / down bits
             0, 0, 0,                            // reserved
@@ -846,6 +858,7 @@ mod tests {
             MsgKind::Error,
             MsgKind::Heartbeat,
             MsgKind::Bcast,
+            MsgKind::ContribChunk,
         ] {
             assert_eq!(MsgKind::parse(k.code()).unwrap(), k);
         }

@@ -8,7 +8,7 @@
 //! `Spares` recycling works here and only here — across a socket the
 //! buffers would cost more to ship than to reallocate.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
 use anyhow::{anyhow, Result};
 
@@ -55,6 +55,20 @@ impl Lane for InProcLane {
             .recv()
             .map_err(|_| anyhow!("in-proc lane: worker died without reporting"))
     }
+
+    fn try_recv(&mut self) -> Result<Option<Result<WorkerReport>>> {
+        match self.rx.try_recv() {
+            Ok(rep) => Ok(Some(rep)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                Err(anyhow!("in-proc lane: worker died without reporting"))
+            }
+        }
+    }
+
+    fn can_poll(&self) -> bool {
+        true
+    }
 }
 
 impl WorkerLink for InProcWorkerLink {
@@ -95,6 +109,21 @@ mod tests {
         .unwrap();
         let report = lane.recv().unwrap().unwrap();
         assert_eq!(report.reps[0].1, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn try_recv_polls_without_blocking() {
+        let (mut lane, mut link) = pair();
+        assert!(lane.can_poll());
+        assert!(lane.try_recv().unwrap().is_none(), "nothing sent yet");
+        link.send_report(Ok(WorkerReport {
+            reps: vec![(1, vec![3.0], SyncPayload::Skipped)],
+        }))
+        .unwrap();
+        let rep = lane.try_recv().unwrap().expect("report is ready").unwrap();
+        assert_eq!(rep.reps[0].0, 1);
+        drop(link);
+        assert!(lane.try_recv().is_err(), "hangup surfaces as a lane error");
     }
 
     #[test]

@@ -56,6 +56,20 @@ pub trait Lane: Send {
     /// read-timeout). Outer `Err` = the lane died; inner `Err` = the
     /// worker reported an engine failure.
     fn recv(&mut self) -> Result<Result<WorkerReport>>;
+
+    /// Non-blocking poll for a report: `Ok(Some(..))` = one is ready,
+    /// `Ok(None)` = nothing yet, `Err` = the lane died. Lanes that
+    /// can't poll keep the default and their callers fall back to
+    /// blocking [`Lane::recv`] in slot order.
+    fn try_recv(&mut self) -> Result<Option<Result<WorkerReport>>> {
+        Ok(None)
+    }
+
+    /// Whether [`Lane::try_recv`] actually polls (readiness-driven
+    /// collection is only worth the spin when it can observe arrivals).
+    fn can_poll(&self) -> bool {
+        false
+    }
 }
 
 /// Worker-side endpoint of the coordinator connection.
@@ -69,4 +83,28 @@ pub trait WorkerLink {
     /// Ship a segment report (or the worker's own error). An error
     /// means the coordinator is gone.
     fn send_report(&mut self, report: Result<WorkerReport>) -> Result<()>;
+
+    /// Whether this link ships streamed up-leg contributions
+    /// ([`msg::MsgKind::ContribChunk`] frames ahead of the report).
+    /// Links that don't stream keep the default and the session sends
+    /// one-shot `SyncPayload::Encoded` reports instead.
+    fn stream_contrib(&self) -> bool {
+        false
+    }
+
+    /// Ship one encoded chunk of replica `rid`'s contribution to sync
+    /// `sync_index` over `frag`, starting at wire-byte `offset` of the
+    /// replica's payload. Chunks for one replica must be flushed in
+    /// contiguous payload order; the report that follows (tagged
+    /// `SyncPayload::Streamed`) closes the stream.
+    fn send_contrib_chunk(
+        &mut self,
+        _rid: usize,
+        _sync_index: u64,
+        _frag: Option<usize>,
+        _offset: usize,
+        _chunk: &[u8],
+    ) -> Result<()> {
+        anyhow::bail!("this transport does not stream contributions")
+    }
 }

@@ -82,6 +82,13 @@ pub struct EncodeSpec {
     pub frag: Option<usize>,
     /// 0-based outer-sync index (stochastic-rounding seed component).
     pub sync_index: u64,
+    /// Coordinator opt-in for the streamed up-leg: when set, links
+    /// that can stream ship the contribution as `ContribChunk` frames
+    /// ahead of a `SyncPayload::Streamed` report; the collector feeds
+    /// them into an arrival-pipelined reduce. Never set unless the
+    /// collector accepts chunks — a chunk at a one-shot collector is
+    /// a protocol error.
+    pub stream: bool,
 }
 
 /// What a segment's boundary asks of the workers. Merge-only
@@ -111,6 +118,15 @@ pub enum SyncPayload {
     /// The boundary asked for nothing ([`PayloadSpec::None`]) —
     /// consuming this anywhere is a coordinator bug and fails loud.
     Skipped,
+    /// DiLoCo lossy up-wire, streamed ahead of this report: the
+    /// contribution already went out as `ContribChunk` frames (flushed
+    /// shard by shard, overlapping encode with the socket) and the
+    /// coordinator's arrival tracker has the bytes; this marker just
+    /// closes the stream. Lanes are FIFO, so a report carrying this
+    /// tag proves every chunk before it has arrived. Never crosses the
+    /// in-process lane — streaming is a socket optimization, and the
+    /// oracle path must stay byte-for-byte the pre-streaming pipeline.
+    Streamed,
 }
 
 /// Per-segment result: `losses[r]` / `payloads[r]` for replica r.
@@ -281,6 +297,7 @@ impl<'m> Emit<'m, '_> {
                 self.u8(2);
                 self.opt_frag(spec.frag)?;
                 self.u64(spec.sync_index);
+                self.u8(spec.stream as u8);
             }
         }
         Ok(())
@@ -314,6 +331,10 @@ impl<'m> Emit<'m, '_> {
             }
             SyncPayload::Skipped => {
                 self.u8(2);
+                Ok(())
+            }
+            SyncPayload::Streamed => {
+                self.u8(3);
                 Ok(())
             }
         }
@@ -570,6 +591,11 @@ fn read_payload_spec(rd: &mut Rd) -> Result<PayloadSpec> {
         2 => PayloadSpec::Encoded(EncodeSpec {
             frag: rd.opt_frag()?,
             sync_index: rd.u64()?,
+            stream: match rd.u8()? {
+                0 => false,
+                1 => true,
+                t => bail!("msg: bad stream flag {t}"),
+            },
         }),
         t => bail!("msg: unknown payload-spec tag {t}"),
     })
@@ -605,6 +631,7 @@ fn read_sync_payload(rd: &mut Rd, src: &Arc<WireBuf>) -> Result<SyncPayload> {
         }
         1 => SyncPayload::Encoded(rd.blob(src)?),
         2 => SyncPayload::Skipped,
+        3 => SyncPayload::Streamed,
         t => bail!("msg: unknown sync-payload tag {t}"),
     })
 }
@@ -655,6 +682,39 @@ pub fn report_from_wire(buf: &Arc<WireBuf>) -> Result<WorkerReport> {
     }
     rd.done()?;
     Ok(WorkerReport { reps })
+}
+
+/// Byte length of the meta prefix a `ContribChunk` payload carries
+/// ahead of the chunk bytes: `u32` replica id + `u32` wire-byte offset.
+pub const CONTRIB_META_LEN: usize = 8;
+
+/// Build the `ContribChunk` meta prefix. The chunk's wire range is
+/// `offset..offset + chunk_len`; both ride little-endian as `u32` (a
+/// contribution is bounded by `MAX_PAYLOAD` long before `u32`).
+pub fn contrib_chunk_meta(rid: usize, offset: usize) -> Result<[u8; CONTRIB_META_LEN]> {
+    let rid = u32::try_from(rid).map_err(|_| anyhow!("msg: replica id {rid} exceeds u32"))?;
+    let off = u32::try_from(offset).map_err(|_| anyhow!("msg: chunk offset {offset} exceeds u32"))?;
+    let mut meta = [0u8; CONTRIB_META_LEN];
+    meta[..4].copy_from_slice(&rid.to_le_bytes());
+    meta[4..].copy_from_slice(&off.to_le_bytes());
+    Ok(meta)
+}
+
+/// Parse a `ContribChunk` frame buffer: `(replica id, wire-byte
+/// offset, chunk bytes)` — the chunk comes back as a zero-copy view of
+/// the frame buffer, ready to park in the arrival tracker unmoved.
+pub fn contrib_chunk_from_wire(buf: &Arc<WireBuf>) -> Result<(usize, usize, WireSlice)> {
+    let payload = buf.payload();
+    if payload.len() < CONTRIB_META_LEN {
+        bail!(
+            "msg: contrib chunk payload of {} bytes is shorter than its meta prefix",
+            payload.len()
+        );
+    }
+    let rid = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    let off = u32::from_le_bytes([payload[4], payload[5], payload[6], payload[7]]) as usize;
+    let chunk = WireSlice::part(Arc::clone(buf), CONTRIB_META_LEN..payload.len());
+    Ok((rid, off, chunk))
 }
 
 /// Compat/test parser over a bare byte slice (copies it into a fresh
@@ -819,6 +879,7 @@ pub(crate) mod retired {
                 out.push(2);
                 put_opt_frag(out, spec.frag)?;
                 put_u64(out, spec.sync_index);
+                out.push(spec.stream as u8);
             }
         }
         Ok(())
@@ -850,6 +911,7 @@ pub(crate) mod retired {
                 put_bytes(out, bytes.as_slice())?;
             }
             SyncPayload::Skipped => out.push(2),
+            SyncPayload::Streamed => out.push(3),
         }
         Ok(())
     }
@@ -927,6 +989,7 @@ mod tests {
             payload: PayloadSpec::Encoded(EncodeSpec {
                 frag: Some(1),
                 sync_index: 42,
+                stream: true,
             }),
             churn: SegmentChurn {
                 deaths: vec![1],
@@ -967,6 +1030,7 @@ mod tests {
             panic!("wrong payload spec");
         };
         assert_eq!((spec.frag, spec.sync_index), (Some(1), 42));
+        assert!(spec.stream, "stream opt-in survives the wire");
         assert_eq!((churn.deaths, churn.joins), (vec![1], vec![3]));
         assert_eq!(churn.join_view.len(), 1);
     }
@@ -1029,11 +1093,12 @@ mod tests {
                 ),
                 (2, Vec::new(), SyncPayload::Skipped),
                 (4, vec![0.0], SyncPayload::Params(vec![lit(&[2], &[1.0, 2.0])])),
+                (6, vec![-1.5], SyncPayload::Streamed),
             ],
         };
         let buf = report_bytes(&report);
         let back = report_from_payload(&buf).unwrap();
-        assert_eq!(back.reps.len(), 3);
+        assert_eq!(back.reps.len(), 4);
         assert_eq!(back.reps[0].0, 0);
         assert_eq!(
             back.reps[0].1.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
@@ -1048,6 +1113,23 @@ mod tests {
             panic!("wrong payload kind");
         };
         assert_eq!(lits[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert!(matches!(back.reps[3].2, SyncPayload::Streamed));
+    }
+
+    #[test]
+    fn contrib_chunk_meta_roundtrips_as_frame_view() {
+        let chunk: Vec<u8> = (0..37u8).collect();
+        let mut payload = contrib_chunk_meta(3, 0x0102_0304).unwrap().to_vec();
+        payload.extend_from_slice(&chunk);
+        let frame = Arc::new(WireBuf::from_payload(&payload));
+        let (rid, off, ws) = contrib_chunk_from_wire(&frame).unwrap();
+        assert_eq!((rid, off), (3, 0x0102_0304));
+        assert_eq!(ws.as_slice(), &chunk[..]);
+        // zero-copy: the chunk must view the frame buffer itself
+        assert!(Arc::ptr_eq(ws.buf(), &frame));
+        // meta prefix shorter than 8 bytes fails loud
+        let short = Arc::new(WireBuf::from_payload(&[1, 2, 3]));
+        assert!(contrib_chunk_from_wire(&short).is_err());
     }
 
     #[test]
@@ -1158,6 +1240,7 @@ mod tests {
                 payload: PayloadSpec::Encoded(EncodeSpec {
                     frag: Some(0),
                     sync_index: u64::MAX,
+                    stream: false,
                 }),
                 churn: SegmentChurn::default(),
             },
@@ -1226,6 +1309,7 @@ mod tests {
                         SyncPayload::Encoded(WireSlice::copied_from(&[0xFF; 7])),
                     ),
                     (5, Vec::new(), SyncPayload::Skipped),
+                    (7, vec![0.25], SyncPayload::Streamed),
                     (
                         9,
                         vec![2.5],

@@ -58,8 +58,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::frame::{
-    header_bytes, parse_header, read_frame, read_frame_into, reclaim_wires, write_frame, BufPool,
-    FrameHeader, MsgKind, WireBuf, WireSlice, HEADER_LEN,
+    header_bytes, parse_header, read_frame, read_frame_into, reclaim_wires, write_all_vectored,
+    write_frame, BufPool, FrameHeader, MsgKind, WireBuf, WireSlice, HEADER_LEN,
 };
 use super::msg::{self, Broadcast, Cmd, PayloadSpec, SyncPayload, WorkerReport};
 use super::{Lane, WorkerLink};
@@ -592,6 +592,36 @@ impl LaneReactor {
     /// recycle immediately, payload-bearing ones return through
     /// [`LaneReactor::recycle`] after the reduce.
     pub fn collect_reports(&mut self) -> Result<Vec<WorkerReport>> {
+        self.collect_inner(None)
+    }
+
+    /// [`LaneReactor::collect_reports`] with an up-leg chunk sink:
+    /// `ContribChunk` frames for sync `sync_index` over `frag` hand
+    /// `(rid, offset, bytes)` to `sink` the moment they arrive — lanes
+    /// are serviced by readiness, so a stalled lane never delays
+    /// another lane's chunks (no head-of-line blocking). A chunk for a
+    /// replica its lane doesn't own, or for the wrong schedule slot,
+    /// fails the run loudly — that's a protocol violation, not churn.
+    /// Chunk frame buffers stay zero-copy: the sink's `WireSlice`
+    /// views them, and the slices spent by the reduce return through
+    /// [`LaneReactor::recycle`].
+    pub fn collect_reports_streamed(
+        &mut self,
+        sync_index: u64,
+        frag: Option<usize>,
+        sink: &mut dyn FnMut(usize, usize, WireSlice) -> Result<()>,
+    ) -> Result<Vec<WorkerReport>> {
+        self.collect_inner(Some((sync_index, frag, sink)))
+    }
+
+    fn collect_inner(
+        &mut self,
+        mut chunk_sink: Option<(
+            u64,
+            Option<usize>,
+            &mut dyn FnMut(usize, usize, WireSlice) -> Result<()>,
+        )>,
+    ) -> Result<Vec<WorkerReport>> {
         let core = &mut self.core;
         let n = core.lanes.len();
         let mut reported = vec![false; n];
@@ -620,6 +650,53 @@ impl LaneReactor {
                             // a report whose payloads are all literal/
                             // skipped leaves the frame unshared —
                             // recycle it on the spot
+                            if let Ok(b) = Arc::try_unwrap(frame) {
+                                core.pool.put(b);
+                            }
+                        }
+                        MsgKind::ContribChunk => {
+                            let Some((want_sync, want_frag, sink)) = chunk_sink.as_mut() else {
+                                let ReactorCore { lanes, lost, .. } = core;
+                                kill(
+                                    &mut lanes[i],
+                                    lost,
+                                    "streamed a ContribChunk into a one-shot collect",
+                                );
+                                continue;
+                            };
+                            if h.sync_index != *want_sync
+                                || h.frag != want_frag.map(|f| f as u32)
+                            {
+                                bail!(
+                                    "transport: lane {} streamed a chunk for sync {} frag \
+                                     {:?} while collecting sync {} frag {:?}",
+                                    core.lanes[i].peer,
+                                    h.sync_index,
+                                    h.frag,
+                                    want_sync,
+                                    want_frag
+                                );
+                            }
+                            let frame = Arc::new(buf);
+                            match msg::contrib_chunk_from_wire(&frame) {
+                                Ok((rid, offset, slice)) => {
+                                    if !core.lanes[i].rids.contains(&rid) {
+                                        bail!(
+                                            "transport: lane {} (replicas {:?}) streamed a \
+                                             chunk claiming replica {rid}",
+                                            core.lanes[i].peer,
+                                            core.lanes[i].rids
+                                        );
+                                    }
+                                    sink(rid, offset, slice)?;
+                                }
+                                Err(e) => {
+                                    let ReactorCore { lanes, lost, .. } = core;
+                                    kill(&mut lanes[i], lost, &format!("garbled chunk: {e:#}"));
+                                }
+                            }
+                            // a rejected/garbled chunk leaves the frame
+                            // unshared — recycle it on the spot
                             if let Ok(b) = Arc::try_unwrap(frame) {
                                 core.pool.put(b);
                             }
@@ -1140,6 +1217,37 @@ impl WorkerLink for TcpWorkerLink {
         self.spares.extend(reclaim_wires(slices));
         Ok(())
     }
+
+    fn stream_contrib(&self) -> bool {
+        true
+    }
+
+    /// One vectored write under the writer mutex: frame header + the
+    /// 8-byte chunk meta + the borrowed chunk bytes, so the encoder's
+    /// wire view ships without ever being copied into a frame buffer.
+    /// Holding the mutex across the whole write keeps chunk, report,
+    /// and heartbeat frames from interleaving — lanes stay FIFO, which
+    /// is what lets the closing report prove every chunk arrived.
+    fn send_contrib_chunk(
+        &mut self,
+        rid: usize,
+        sync_index: u64,
+        frag: Option<usize>,
+        offset: usize,
+        chunk: &[u8],
+    ) -> Result<()> {
+        let mut h = self.header.clone();
+        h.kind = MsgKind::ContribChunk;
+        h.sync_index = sync_index;
+        h.frag = frag.map(|f| f as u32);
+        let meta = msg::contrib_chunk_meta(rid, offset)?;
+        let hdr = header_bytes(&h, msg::CONTRIB_META_LEN + chunk.len())?;
+        let mut w = self
+            .writer
+            .lock()
+            .map_err(|_| anyhow!("transport: writer mutex poisoned"))?;
+        write_all_vectored(&mut *w, &[&hdr[..], &meta[..], chunk])
+    }
 }
 
 #[cfg(test)]
@@ -1495,6 +1603,119 @@ mod tests {
         );
         assert_eq!(reactor.take_control_bytes(), 0, "control drains once");
         worker.join().unwrap();
+    }
+
+    #[test]
+    fn streamed_contribs_bypass_a_stalled_lane() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let info = session(2);
+        let payload = |rid: usize| vec![rid as u8 + 0xA0; 700];
+        let workers: Vec<_> = (0..2usize)
+            .map(|rid| {
+                let addr = addr.clone();
+                let bytes = payload(rid);
+                std::thread::spawn(move || {
+                    let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+                    let got = worker_handshake(&mut stream, &[rid], 0, 0, 0).unwrap();
+                    let mut link = TcpWorkerLink::new(stream, &got).unwrap();
+                    let Some(Cmd::Run { .. }) = link.recv_cmd() else {
+                        panic!("expected Run");
+                    };
+                    // lane 0 stalls before its first chunk; lane 1's
+                    // chunks must reach the sink regardless
+                    if rid == 0 {
+                        std::thread::sleep(Duration::from_millis(300));
+                    }
+                    let cuts = [0, 250, 700];
+                    for w in cuts.windows(2) {
+                        link.send_contrib_chunk(rid, 4, None, w[0], &bytes[w[0]..w[1]])
+                            .unwrap();
+                    }
+                    link.send_report(Ok(WorkerReport {
+                        reps: vec![(rid, vec![rid as f64], SyncPayload::Streamed)],
+                    }))
+                    .unwrap();
+                    let Some(Cmd::Finish { .. }) = link.recv_cmd() else {
+                        panic!("expected Finish");
+                    };
+                })
+            })
+            .collect();
+        let lanes = accept_workers(&listener, 2, &info).unwrap();
+        let mut reactor = LaneReactor::new(lanes).unwrap();
+        reactor.send_cmd(&run_cmd(0, 2)).unwrap();
+        let mut got: Vec<(usize, usize, Vec<u8>)> = Vec::new();
+        let reports = reactor
+            .collect_reports_streamed(4, None, &mut |rid, off, ws| {
+                got.push((rid, off, ws.as_slice().to_vec()));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert!(matches!(r.reps[0].2, SyncPayload::Streamed));
+        }
+        // readiness servicing: every chunk of the prompt lane landed
+        // before the stalled lane produced its first one
+        let first_stalled = got.iter().position(|(rid, ..)| *rid == 0).unwrap();
+        assert_eq!(
+            got[..first_stalled].iter().filter(|(rid, ..)| *rid == 1).count(),
+            2,
+            "lane 1's chunks must not wait behind stalled lane 0: {:?}",
+            got.iter().map(|(r, o, b)| (*r, *o, b.len())).collect::<Vec<_>>()
+        );
+        for rid in 0..2 {
+            let mut cat = Vec::new();
+            for (_, off, b) in got.iter().filter(|(r, ..)| *r == rid) {
+                assert_eq!(*off, cat.len(), "chunks arrive in payload order");
+                cat.extend_from_slice(b);
+            }
+            assert_eq!(cat, payload(rid));
+        }
+        reactor.send_finish(&Broadcast::empty());
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn a_chunk_claiming_a_foreign_replica_fails_the_run() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let info = session(2);
+        let a1 = addr.clone();
+        let rogue = std::thread::spawn(move || {
+            let mut stream = connect_with_backoff(&a1, CONNECT_ATTEMPTS).unwrap();
+            let got = worker_handshake(&mut stream, &[0], 0, 0, 0).unwrap();
+            let mut link = TcpWorkerLink::new(stream, &got).unwrap();
+            let Some(Cmd::Run { .. }) = link.recv_cmd() else {
+                panic!("expected Run");
+            };
+            // claims replica 1, which the other lane owns
+            link.send_contrib_chunk(1, 0, None, 0, &[7; 16]).unwrap();
+            assert!(link.recv_cmd().is_none(), "coordinator bailed");
+        });
+        let bystander = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(100));
+            let mut stream = connect_with_backoff(&addr, CONNECT_ATTEMPTS).unwrap();
+            let got = worker_handshake(&mut stream, &[1], 0, 0, 0).unwrap();
+            let mut link = TcpWorkerLink::new(stream, &got).unwrap();
+            let Some(Cmd::Run { .. }) = link.recv_cmd() else {
+                panic!("expected Run");
+            };
+            assert!(link.recv_cmd().is_none(), "coordinator bailed");
+        });
+        let lanes = accept_workers(&listener, 2, &info).unwrap();
+        let mut reactor = LaneReactor::new(lanes).unwrap();
+        reactor.send_cmd(&run_cmd(0, 1)).unwrap();
+        let err = reactor
+            .collect_reports_streamed(0, None, &mut |_, _, _| Ok(()))
+            .expect_err("a lane streaming another lane's replica is a protocol violation");
+        assert!(format!("{err:#}").contains("claiming replica 1"), "{err:#}");
+        drop(reactor);
+        rogue.join().unwrap();
+        bystander.join().unwrap();
     }
 
     #[test]

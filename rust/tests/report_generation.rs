@@ -48,6 +48,11 @@ fn fake_metrics(model: &str, algo: &str, n: usize, loss: f64, batch: usize, lr: 
         wire_framed_bytes: if h > 0 { (100 / h) as u64 * (n as u64 * 8 + 72) } else { 0 },
         churn: String::new(),
         dropout_rate: 0.0,
+        sync_encode_ms: 0.0,
+        sync_wire_wait_ms: 0.0,
+        sync_reduce_ms: 0.0,
+        sync_step_ms: 0.0,
+        sync_bcast_ms: 0.0,
     }
 }
 

@@ -1,0 +1,357 @@
+//! Chunk-reassembly property test: every legal interleaving of
+//! streamed up-leg chunks must resolve byte- and bit-identical to the
+//! one-shot `sync_encoded` oracle fed the exact same payload bytes.
+//!
+//! "Legal" cuts sit on the BLOCK grid relative to each due range's
+//! wire start — the grid `CommLink::encode_replica_streamed` flushes
+//! on and the `ContribChunk` reassembly's overlap decode assumes.
+//! Within that grid the test draws random cut sets and random
+//! cross-replica arrival orders from a seeded LCG, so chunk counts,
+//! chunk sizes, and interleavings all vary per trial; the resulting
+//! global parameter bits, broadcast payload bytes, and wire accounting
+//! must never move. Runs the full codec matrix (fp32 and quantized,
+//! both wires), fragment schedules with odd int4 tail ranges, and a
+//! randomized mid-stream drop (the churn path's `arrival_drop`).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use diloco::comm::codec::BLOCK;
+use diloco::comm::{codec_for, OuterBits, ReplicaComm, WorkerComm};
+use diloco::coordinator::OuterSync;
+use diloco::runtime::{FlatLayout, HostTensor};
+use diloco::transport::frame::WireSlice;
+
+const M: usize = 3;
+const SEED: u64 = 23;
+const FRAGMENTS: usize = 2;
+
+/// Deterministic LCG (no rand crate offline); high bits only.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 11
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n.max(1) as u64) as usize
+    }
+}
+
+/// Multi-block leaves with odd tails: cuts land mid-leaf, at leaf
+/// seams, and against partial trailing codec blocks.
+fn layout() -> Arc<FlatLayout> {
+    Arc::new(FlatLayout::new(vec![
+        vec![700],
+        vec![300, 2],
+        vec![513],
+        vec![9],
+    ]))
+}
+
+fn host_fn(layout: &FlatLayout, f: impl Fn(usize) -> f32) -> Vec<HostTensor> {
+    (0..layout.n_leaves())
+        .map(|l| {
+            let r = layout.range(l);
+            HostTensor::from_vec(layout.shape(l), r.map(&f).collect())
+        })
+        .collect()
+}
+
+fn lits_of(tensors: &[HostTensor]) -> Vec<Arc<xla::Literal>> {
+    tensors
+        .iter()
+        .map(|t| Arc::new(t.to_literal().unwrap()))
+        .collect()
+}
+
+fn build(
+    l: &Arc<FlatLayout>,
+    init: &[HostTensor],
+    init_lits: &[Arc<xla::Literal>],
+    up: OuterBits,
+    down: OuterBits,
+) -> OuterSync {
+    OuterSync::new(Arc::clone(l), init, init_lits.to_vec(), 0.8, 0.9, FRAGMENTS)
+        .unwrap()
+        .with_codec(codec_for(up), SEED)
+        .with_down_codec(codec_for(down))
+        .with_sync_threads(3)
+}
+
+/// One replica's one-shot payload from fresh comm state — the byte
+/// ground truth both the oracle merge and every chunked feed share.
+fn encode_payload(
+    sync: &OuterSync,
+    init_lits: &[Arc<xla::Literal>],
+    state: &[Arc<xla::Literal>],
+    r: usize,
+    frag: Option<usize>,
+    sync_index: u64,
+) -> Vec<u8> {
+    let link = sync.link();
+    let mut wc = WorkerComm::default();
+    let mut rc = ReplicaComm::default();
+    link.init_snapshot(&mut wc, init_lits).unwrap();
+    link.init_replica(&mut rc);
+    link.encode_replica(r, state, &mut wc, &mut rc, frag, sync_index)
+        .unwrap()
+        .as_slice()
+        .to_vec()
+}
+
+/// Every wire offset a chunk may legally end at (exclusive of the
+/// payload end): block seams within each due range, plus range seams.
+fn legal_cuts(sync: &OuterSync, up: OuterBits, frag: Option<usize>) -> Vec<usize> {
+    let link = sync.link();
+    let codec = codec_for(up);
+    let mut cuts = Vec::new();
+    let mut off = 0usize;
+    for r in link.up().ranges(frag) {
+        let mut b = BLOCK;
+        while b < r.len() {
+            cuts.push(off + codec.wire_bytes(b));
+            b += BLOCK;
+        }
+        off += codec.wire_bytes(r.len());
+        cuts.push(off);
+    }
+    cuts.pop(); // the payload end closes the last chunk, it is not a cut
+    cuts
+}
+
+/// Cut `payload` at a random subset of the legal grid.
+fn random_chunks(rng: &mut Lcg, payload: &[u8], grid: &[usize]) -> VecDeque<(usize, Vec<u8>)> {
+    let mut bounds = vec![0usize];
+    match rng.below(4) {
+        // one-shot: the whole payload as a single chunk (the
+        // `arrival_absorb` shape for non-streaming workers)
+        0 => {}
+        // finest legal chunking: every grid point
+        1 => bounds.extend_from_slice(grid),
+        // random subset
+        _ => bounds.extend(grid.iter().copied().filter(|_| rng.below(3) == 0)),
+    }
+    bounds.push(payload.len());
+    bounds
+        .windows(2)
+        .filter(|w| w[0] < w[1])
+        .map(|w| (w[0], payload[w[0]..w[1]].to_vec()))
+        .collect()
+}
+
+struct SyncResult {
+    global_bits: Vec<u32>,
+    bcast: Option<Vec<u8>>,
+    wire_total: u64,
+}
+
+#[test]
+fn adversarial_interleavings_match_the_one_shot_oracle() {
+    let l = layout();
+    let init = host_fn(&l, |i| (i as f32 * 0.01).cos());
+    let init_lits = lits_of(&init);
+    let pairs = [
+        (OuterBits::Int4, OuterBits::Int4),
+        (OuterBits::Int8, OuterBits::Fp32),
+        (OuterBits::Fp32, OuterBits::Int4),
+        (OuterBits::Fp32, OuterBits::Fp32),
+    ];
+    let mut rng = Lcg(0x5eed_cafe);
+    let mut fired_early_total = 0usize;
+    for (up, down) in pairs {
+        let mut oracle = build(&l, &init, &init_lits, up, down);
+        let mut arrival = build(&l, &init, &init_lits, up, down);
+        let mut round = 0u64;
+        for frag in [None, Some(0), Some(1)] {
+            let grid = legal_cuts(&oracle, up, frag);
+            assert!(
+                grid.len() > 2,
+                "{up:?} frag {frag:?}: the layout must yield real cut choices"
+            );
+            for _ in 0..3 {
+                round += 1;
+                let states: Vec<_> = (0..M)
+                    .map(|r| {
+                        let phase = round as f32;
+                        lits_of(&host_fn(&l, |i| {
+                            ((i + 31 * r) as f32 * 0.03 + phase).sin()
+                        }))
+                    })
+                    .collect();
+                let payloads: Vec<Vec<u8>> = states
+                    .iter()
+                    .enumerate()
+                    .map(|(r, st)| encode_payload(&oracle, &init_lits, st, r, frag, round))
+                    .collect();
+
+                // the oracle merges the exact same bytes in one shot
+                let frames: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                oracle.sync_encoded(&frames, frag).unwrap();
+                let want = SyncResult {
+                    global_bits: oracle.global().data().iter().map(|x| x.to_bits()).collect(),
+                    bcast: oracle.take_broadcast_bytes().map(|b| b.as_slice().to_vec()),
+                    wire_total: oracle.wire_stats().total(),
+                };
+
+                // adversarial feed: random cuts, random arrival order
+                let rids: Vec<usize> = (0..M).collect();
+                let mut ar = arrival.arrival_begin(&rids, frag).unwrap();
+                let mut queues: Vec<VecDeque<(usize, Vec<u8>)>> = payloads
+                    .iter()
+                    .map(|p| random_chunks(&mut rng, p, &grid))
+                    .collect();
+                while queues.iter().any(|q| !q.is_empty()) {
+                    let ready: Vec<usize> =
+                        (0..M).filter(|&r| !queues[r].is_empty()).collect();
+                    let pick = ready[rng.below(ready.len())];
+                    let (off, bytes) = queues[pick].pop_front().unwrap();
+                    arrival
+                        .arrival_chunk(&mut ar, pick, off, WireSlice::copied_from(&bytes))
+                        .unwrap();
+                }
+                assert!(ar.complete(), "{up:?}/{down:?} frag {frag:?}: all bytes fed");
+                let (fired, total) = ar.fired();
+                assert_eq!(fired, total, "every reduce shard fired");
+                fired_early_total += ar.fired_early();
+                let spent = arrival.sync_arrival(ar, &rids, None).unwrap();
+                assert!(!spent.is_empty(), "chunk views come back for reclaim");
+
+                let got_bits: Vec<u32> =
+                    arrival.global().data().iter().map(|x| x.to_bits()).collect();
+                let tag = format!("{up:?}/{down:?} frag {frag:?} round {round}");
+                assert_eq!(got_bits, want.global_bits, "{tag}: global bits");
+                let got_bcast = arrival.take_broadcast_bytes().map(|b| b.as_slice().to_vec());
+                assert_eq!(got_bcast, want.bcast, "{tag}: broadcast payload bytes");
+                assert_eq!(
+                    arrival.wire_stats().total(),
+                    want.wire_total,
+                    "{tag}: wire accounting"
+                );
+            }
+        }
+    }
+    assert!(
+        fired_early_total > 0,
+        "across all trials some shard must reduce before the last byte lands — \
+         otherwise the pipeline never overlapped anything"
+    );
+}
+
+#[test]
+fn randomized_mid_stream_drop_matches_the_survivor_oracle() {
+    let l = layout();
+    let init = host_fn(&l, |i| (i as f32 * 0.02).sin());
+    let init_lits = lits_of(&init);
+    let mut rng = Lcg(0xd0_0d1e);
+    for trial in 0..4u64 {
+        let mut oracle = build(&l, &init, &init_lits, OuterBits::Int4, OuterBits::Int4);
+        let mut arrival = build(&l, &init, &init_lits, OuterBits::Int4, OuterBits::Int4);
+        let states: Vec<_> = (0..M)
+            .map(|r| {
+                lits_of(&host_fn(&l, |i| {
+                    ((i + 13 * r) as f32 * 0.04 + trial as f32).cos()
+                }))
+            })
+            .collect();
+        let payloads: Vec<Vec<u8>> = states
+            .iter()
+            .enumerate()
+            .map(|(r, st)| encode_payload(&oracle, &init_lits, st, r, None, trial))
+            .collect();
+        let casualty = rng.below(M);
+        let survivors: Vec<usize> = (0..M).filter(|&r| r != casualty).collect();
+
+        // the oracle merges only the survivors' bytes
+        let frames: Vec<&[u8]> = survivors.iter().map(|&r| payloads[r].as_slice()).collect();
+        oracle.sync_encoded(&frames, None).unwrap();
+        let _ = oracle.take_broadcast_bytes().unwrap();
+
+        // the arrival starts with everyone, loses the casualty at a
+        // random point in its stream, and refires over the survivors
+        let rids: Vec<usize> = (0..M).collect();
+        let grid = legal_cuts(&arrival, OuterBits::Int4, None);
+        let mut ar = arrival.arrival_begin(&rids, None).unwrap();
+        let mut queues: Vec<VecDeque<(usize, Vec<u8>)>> = payloads
+            .iter()
+            .map(|p| random_chunks(&mut rng, p, &grid))
+            .collect();
+        // how many of the casualty's chunks land before its lane dies
+        let mut casualty_left = rng.below(queues[casualty].len() + 1);
+        while queues.iter().enumerate().any(|(r, q)| {
+            !q.is_empty() && (r != casualty || casualty_left > 0)
+        }) {
+            let ready: Vec<usize> = (0..M)
+                .filter(|&r| !queues[r].is_empty() && (r != casualty || casualty_left > 0))
+                .collect();
+            let pick = ready[rng.below(ready.len())];
+            if pick == casualty {
+                casualty_left -= 1;
+            }
+            let (off, bytes) = queues[pick].pop_front().unwrap();
+            arrival
+                .arrival_chunk(&mut ar, pick, off, WireSlice::copied_from(&bytes))
+                .unwrap();
+        }
+        arrival.arrival_drop(&mut ar, &[casualty]).unwrap();
+        assert_eq!(ar.contributors(), &survivors[..]);
+        assert!(ar.complete(), "survivors' bytes are all in");
+        arrival.sync_arrival(ar, &survivors, None).unwrap();
+        let _ = arrival.take_broadcast_bytes().unwrap();
+
+        let a: Vec<u32> = oracle.global().data().iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = arrival.global().data().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(
+            a, b,
+            "trial {trial}: post-drop refire must equal the survivor-only one-shot"
+        );
+    }
+}
+
+#[test]
+fn malformed_chunk_streams_fail_loud() {
+    let l = layout();
+    let init = host_fn(&l, |i| (i as f32 * 0.015).sin());
+    let init_lits = lits_of(&init);
+    let mut arrival = build(&l, &init, &init_lits, OuterBits::Int8, OuterBits::Fp32);
+    let payload = {
+        let state = lits_of(&host_fn(&l, |i| (i as f32 * 0.07).cos()));
+        encode_payload(&arrival, &init_lits, &state, 0, None, 0)
+    };
+    let rids: Vec<usize> = (0..M).collect();
+    let mut ar = arrival.arrival_begin(&rids, None).unwrap();
+
+    // a replica outside the contributor set
+    assert!(arrival
+        .arrival_chunk(&mut ar, 7, 0, WireSlice::copied_from(&payload[..16]))
+        .is_err());
+    // empty chunks carry no watermark progress and are a protocol bug
+    assert!(arrival
+        .arrival_chunk(&mut ar, 0, 0, WireSlice::copied_from(&[]))
+        .is_err());
+    // a gap: first chunk must start at offset 0
+    assert!(arrival
+        .arrival_chunk(&mut ar, 0, 8, WireSlice::copied_from(&payload[8..24]))
+        .is_err());
+    // overrun past the expected payload size
+    let mut fat = payload.clone();
+    fat.extend_from_slice(&[0u8; 32]);
+    assert!(arrival
+        .arrival_chunk(&mut ar, 0, 0, WireSlice::copied_from(&fat))
+        .is_err());
+    // a duplicate of an already-accepted prefix is a stale retransmit
+    arrival
+        .arrival_chunk(&mut ar, 0, 0, WireSlice::copied_from(&payload))
+        .unwrap();
+    assert!(arrival
+        .arrival_chunk(&mut ar, 0, 0, WireSlice::copied_from(&payload))
+        .is_err());
+    // merging with truncated live contributors fails loud
+    assert!(!ar.complete());
+    assert!(arrival.sync_arrival(ar, &rids, None).is_err());
+}
